@@ -1,0 +1,64 @@
+//! Quickstart: load the AOT artifacts, run a few TINA ops through the
+//! coordinator, and cross-check against the pure-rust baselines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use tina::baselines::naive;
+use tina::coordinator::{Coordinator, CoordinatorConfig, ImplPref, OpKind, OpRequest};
+use tina::tensor::Tensor;
+
+fn main() -> Result<()> {
+    // 1. bring up the coordinator over the artifact directory
+    let coord = Coordinator::from_dir("artifacts", CoordinatorConfig::default())?;
+    println!("artifacts loaded: {}", coord.router().registry().len());
+
+    // 2. elementwise multiply via the TINA depthwise-conv artifact (§3.1)
+    let a = Tensor::randn(&[64, 64], 1);
+    let b = Tensor::randn(&[64, 64], 2);
+    let resp = coord.execute(
+        OpRequest::new(OpKind::EwMult, vec![a.clone(), b.clone()]).with_impl(ImplPref::Tina),
+    )?;
+    let want = naive::ewmult(&a, &b)?;
+    println!(
+        "ewmult     served_by={:<24} allclose={}",
+        resp.served_by,
+        resp.outputs[0].allclose(&want, 1e-4, 1e-4)
+    );
+
+    // 3. FIR filter via the standard-conv artifact (§4.3)
+    let x = Tensor::randn(&[1, 4096], 3);
+    let resp = coord.execute(
+        OpRequest::new(OpKind::Fir, vec![x.clone()]).with_impl(ImplPref::Tina),
+    )?;
+    let taps = tina::dsp::fir_lowpass(64, 0.25)?;
+    let want = naive::fir(&x, &taps)?;
+    println!(
+        "fir        served_by={:<24} allclose={}",
+        resp.served_by,
+        resp.outputs[0].allclose(&want, 1e-3, 1e-4)
+    );
+
+    // 4. DFT via the pointwise-conv artifact (§4.1): real signal in,
+    //    (re, im) out
+    let sig = Tensor::randn(&[4, 256], 4);
+    let resp = coord.execute(OpRequest::new(OpKind::Dft, vec![sig.clone()]))?;
+    let want = naive::dft(&tina::tensor::ComplexTensor::from_real(sig))?;
+    println!(
+        "dft        served_by={:<24} re allclose={} im allclose={}",
+        resp.served_by,
+        resp.outputs[0].allclose(&want.re, 1e-2, 1e-2),
+        resp.outputs[1].allclose(&want.im, 1e-2, 1e-2)
+    );
+
+    // 5. a request with no matching artifact falls back to the pure-rust
+    //    interpreter transparently
+    let odd = Tensor::randn(&[1, 999], 5);
+    let resp = coord.execute(OpRequest::new(OpKind::Fir, vec![odd]))?;
+    println!("fir(L=999) served_by={:<24} (interpreter fallback)", resp.served_by);
+
+    println!("\nmetrics:\n{}", coord.metrics().report());
+    Ok(())
+}

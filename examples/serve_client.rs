@@ -1,0 +1,112 @@
+//! Client/server demo: starts the TCP JSON-line server in-process, then
+//! talks to it as a client — the wire protocol a non-rust frontend
+//! (python, telescope control system, ...) would use.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_client
+//! ```
+
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use tina::coordinator::{server, Coordinator, CoordinatorConfig};
+use tina::util::json::{self, Json};
+
+const ADDR: &str = "127.0.0.1:7071";
+
+fn main() -> Result<()> {
+    // ---- server ----------------------------------------------------------
+    let coord = Arc::new(Coordinator::from_dir(
+        "artifacts",
+        CoordinatorConfig::default(),
+    )?);
+    let stop = Arc::new(AtomicBool::new(false));
+    let server_thread = {
+        let coord = Arc::clone(&coord);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || server::serve(coord, ADDR, stop))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    // ---- client ----------------------------------------------------------
+    let mut stream = TcpStream::connect(ADDR)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut call = |line: String| -> Result<Json> {
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp)?;
+        Ok(json::parse(&resp).map_err(|e| anyhow::anyhow!("{e}"))?)
+    };
+
+    // list artifacts
+    let resp = call(r#"{"id": 1, "cmd": "artifacts"}"#.to_string())?;
+    let n = resp.get("artifacts").and_then(Json::as_arr).map(|a| a.len());
+    println!("server exposes {n:?} artifacts");
+
+    // run a summation
+    let data: Vec<String> = (1..=1024).map(|i| i.to_string()).collect();
+    let resp = call(format!(
+        r#"{{"id": 2, "op": "summation", "inputs": [{{"shape": [1024], "data": [{}]}}]}}"#,
+        data.join(",")
+    ))?;
+    let sum = resp.get("outputs").and_then(Json::as_arr).and_then(|o| {
+        o[0].get("data")
+            .and_then(Json::as_arr)
+            .and_then(|d| d[0].as_f64())
+    });
+    println!(
+        "summation(1..=1024) = {:?} (served_by {:?}, {}us)",
+        sum,
+        resp.get("served_by").and_then(Json::as_str),
+        resp.get("latency_us").and_then(Json::as_f64).unwrap_or(0.0)
+    );
+    assert_eq!(sum, Some(524800.0));
+
+    // run a DFT and verify Parseval on the client side
+    let sig: Vec<f32> = (0..64)
+        .map(|i| (2.0 * std::f64::consts::PI * 5.0 * i as f64 / 64.0).cos() as f32)
+        .collect();
+    let sig_json: Vec<String> = sig.iter().map(|v| format!("{v}")).collect();
+    let resp = call(format!(
+        r#"{{"id": 3, "op": "dft", "inputs": [{{"shape": [1, 64], "data": [{}]}}]}}"#,
+        sig_json.join(",")
+    ))?;
+    let get = |k: usize| -> Vec<f64> {
+        resp.get("outputs").unwrap().as_arr().unwrap()[k]
+            .get("data")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect()
+    };
+    let (re, im) = (get(0), get(1));
+    let spec_energy: f64 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum();
+    let sig_energy: f64 = sig.iter().map(|&v| (v * v) as f64).sum();
+    println!(
+        "dft Parseval: spectrum {spec_energy:.1} vs 64 x signal {:.1}",
+        64.0 * sig_energy
+    );
+    assert!((spec_energy - 64.0 * sig_energy).abs() / spec_energy < 1e-3);
+
+    // stats
+    let resp = call(r#"{"id": 4, "cmd": "stats"}"#.to_string())?;
+    println!(
+        "server stats:\n{}",
+        resp.get("report").and_then(Json::as_str).unwrap_or("")
+    );
+
+    // close BOTH socket handles (the closure holds the reader clone) so the
+    // server's connection thread sees EOF before we join it
+    drop(call);
+    drop(reader);
+    drop(stream);
+    stop.store(true, Ordering::Release);
+    server_thread.join().unwrap()?;
+    println!("done");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT compile path: lower every registry variant to HLO *text* and write
+`artifacts/manifest.json`.
+
+HLO text — NOT `lowered.compile()` or a serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the rust side's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly.
+
+Run via `make artifacts` (i.e. `cd python && python -m compile.aot
+--out-dir ../artifacts`).  Python never runs again after this: the rust
+coordinator is self-contained once the artifact directory exists.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+from . import model
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassignment-safe)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default HLO printer ELIDES big constants
+    # ("constant({...})"), which the rust-side text parser would silently
+    # read back as zeros — the baked DFM / FIR-tap weights must survive.
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return _force_row_major_entry(text)
+
+
+def _force_row_major_entry(hlo: str) -> str:
+    """Rewrite the entry_computation_layout to default (row-major) layouts.
+
+    Functions ending in a transpose lower with column-major output layouts
+    (e.g. ``f32[4,64]{0,1}``); the rust side's ``Literal::to_vec`` assumes
+    row-major, and xla_extension 0.5.1 aborts with a foreign exception on
+    some non-default entry layouts.  Forcing the *entry* layout is always
+    legal — the compiler inserts the transposes it needs.
+    """
+    lines = hlo.split("\n", 1)
+    head = re.sub(
+        r"\[([0-9,]*)\]\{([0-9,]+)\}",
+        lambda m: "[{}]{{{}}}".format(
+            m.group(1),
+            ",".join(str(i) for i in reversed(range(m.group(1).count(",") + 1))),
+        ),
+        lines[0],
+    )
+    return head + ("\n" + lines[1] if len(lines) > 1 else "")
+
+
+def _spec_json(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def lower_variant(variant, out_dir: Path) -> dict:
+    """Lower one variant, write its HLO text, return its manifest entry."""
+    t0 = time.perf_counter()
+    lowered = jax.jit(variant.fn).lower(*variant.input_specs)
+    text = to_hlo_text(lowered)
+    path = out_dir / variant.filename
+    path.write_text(text)
+    outputs = variant.output_specs()
+    dt = time.perf_counter() - t0
+    entry = {
+        "name": variant.name,
+        "op": variant.op,
+        "impl": variant.impl,
+        "dtype": variant.dtype,
+        "params": variant.params,
+        "inputs": [_spec_json(s) for s in variant.input_specs],
+        "outputs": [_spec_json(s) for s in outputs],
+        "file": variant.filename,
+        "hlo_bytes": len(text),
+    }
+    print(f"  {variant.name:42s} {len(text) / 1024:9.1f} KiB  {dt:6.2f}s")
+    return entry
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--filter", default=None, help="regex over variant names")
+    ap.add_argument("--list", action="store_true", help="list variants and exit")
+    args = ap.parse_args(argv)
+
+    variants = model.build_variants()
+    if args.filter:
+        rx = re.compile(args.filter)
+        variants = [v for v in variants if rx.search(v.name)]
+    if args.list:
+        for v in variants:
+            print(v.name)
+        return 0
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    print(f"lowering {len(variants)} variants -> {out_dir}")
+    t0 = time.perf_counter()
+    entries = [lower_variant(v, out_dir) for v in variants]
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "jax_version": jax.__version__,
+        "entries": entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(entries)} artifacts + manifest.json "
+          f"in {time.perf_counter() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,100 @@
+"""The "JAX" comparator of the paper's evaluation: every TINA op written the
+direct way in jnp, with no NN-layer reformulation.
+
+These lower through the *same* AOT path and execute on the *same* PJRT
+runtime as the TINA variants, so benchmark deltas isolate the mapping, not
+the plumbing — mirroring how the paper ran JAX-on-GPU against TINA-on-GPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import coeffs
+
+
+def ewmult(a, b):
+    return a * b
+
+
+def ewadd(a, b):
+    return a + b
+
+
+def matmul(x, y):
+    return jnp.dot(x, y)
+
+
+def summation(x):
+    return jnp.sum(x).reshape(1)
+
+
+def dft(x_re, x_im=None):
+    """Direct jnp FFT.  Returns (re, im) to match the TINA artifact ABI."""
+    if x_im is None:
+        z = jnp.fft.fft(x_re, axis=-1)
+    else:
+        z = jnp.fft.fft(x_re + 1j * x_im, axis=-1)
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+def idft(x_re, x_im):
+    z = jnp.fft.ifft(x_re + 1j * x_im, axis=-1)
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+def fir(x, taps):
+    """Valid-mode FIR via jnp.convolve, vmapped over the batch."""
+    import jax
+
+    return jax.vmap(lambda row: jnp.convolve(row, taps, mode="valid"))(x)
+
+
+def unfold(x, window: int):
+    """Direct unfolding: stacked shifted slices (the loop the paper says
+    frameworks handle poorly)."""
+    b, l = x.shape
+    wout = l - window + 1
+    cols = [x[:, j : j + wout] for j in range(window)]
+    return jnp.stack(cols, axis=-1)  # (B, Wout, J)
+
+
+def stft(x, nfft: int, hop: int):
+    """Direct STFT: strided frame slices, window multiply, jnp FFT."""
+    b, l = x.shape
+    frames = (l - nfft) // hop + 1
+    win = jnp.asarray(coeffs.hamming(nfft), jnp.float32)
+    stacked = jnp.stack(
+        [x[:, i * hop : i * hop + nfft] * win for i in range(frames)], axis=1
+    )  # (B, F, nfft)
+    z = jnp.fft.fft(stacked, axis=-1)
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+def pfb_fir(x, branches: int, taps_per_branch: int, prototype=None):
+    """Direct polyphase FIR bank: reshape + per-branch valid convolve."""
+    import jax
+
+    p, m = branches, taps_per_branch
+    if prototype is None:
+        prototype = coeffs.pfb_prototype(p, m)
+    bank = coeffs.polyphase_decompose(np.asarray(prototype), p)  # (P, M)
+    b, l = x.shape
+    nspec = l // p
+    xp = jnp.transpose(x.reshape(b, nspec, p), (0, 2, 1))  # (B, P, Nspec)
+
+    def one(row, taps):  # row (Nspec,), taps (M,)
+        return jnp.convolve(row, taps, mode="valid")
+
+    # vmap over branches then batch
+    per_batch = jax.vmap(one, in_axes=(0, 0))  # (P, Nspec) x (P, M)
+    out = jax.vmap(lambda rows: per_batch(rows, jnp.asarray(bank)))(xp)
+    return out  # (B, P, Nspec - M + 1)
+
+
+def pfb(x, branches: int, taps_per_branch: int, prototype=None):
+    """Direct full PFB: FIR bank + jnp FFT across branches."""
+    y = pfb_fir(x, branches, taps_per_branch, prototype=prototype)
+    z = jnp.fft.fft(jnp.transpose(y, (0, 2, 1)), axis=-1)  # (B, Ns, P)
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)

@@ -1,0 +1,87 @@
+"""Filter-coefficient design shared between the python compile path and the
+rust runtime (rust/src/dsp/firdesign.rs implements the same closed forms).
+
+Everything is computed in float64 and cast to float32 at the end so both
+languages agree to ~1 ULP; all cross-language tests compare with float
+tolerances anyway.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def hamming(n: int) -> np.ndarray:
+    """Hamming window, periodic-symmetric form w[i] = 0.54 - 0.46 cos(2 pi i / (n-1))."""
+    if n == 1:
+        return np.ones(1)
+    i = np.arange(n, dtype=np.float64)
+    return 0.54 - 0.46 * np.cos(2.0 * np.pi * i / (n - 1))
+
+
+def hann(n: int) -> np.ndarray:
+    if n == 1:
+        return np.ones(1)
+    i = np.arange(n, dtype=np.float64)
+    return 0.5 - 0.5 * np.cos(2.0 * np.pi * i / (n - 1))
+
+
+def sinc(x: np.ndarray) -> np.ndarray:
+    """Normalized sinc: sin(pi x) / (pi x)."""
+    return np.sinc(x)
+
+
+def fir_lowpass(num_taps: int, cutoff: float) -> np.ndarray:
+    """Hamming-windowed-sinc lowpass FIR, unit DC gain, float32.
+
+    cutoff is the normalized frequency in (0, 0.5] (1.0 = sample rate).
+    """
+    if not 0.0 < cutoff <= 0.5:
+        raise ValueError(f"cutoff {cutoff} outside (0, 0.5]")
+    center = (num_taps - 1) / 2.0
+    n = np.arange(num_taps, dtype=np.float64)
+    h = 2.0 * cutoff * sinc(2.0 * cutoff * (n - center))
+    h *= hamming(num_taps)
+    h /= h.sum()
+    return h.astype(np.float32)
+
+
+def pfb_prototype(branches: int, taps_per_branch: int) -> np.ndarray:
+    """Prototype lowpass for a P-branch polyphase filter bank.
+
+    Standard design (Price 2021 "pfb_introduction"): windowed sinc with
+    cutoff at the channel width 1/P, length P*M, unit DC gain.
+    Returns float32 of shape (P * M,).
+    """
+    length = branches * taps_per_branch
+    center = (length - 1) / 2.0
+    n = np.arange(length, dtype=np.float64)
+    h = sinc((n - center) / branches)
+    h *= hamming(length)
+    h /= h.sum()
+    return h.astype(np.float32)
+
+
+def polyphase_decompose(h: np.ndarray, branches: int) -> np.ndarray:
+    """Split prototype h (P*M,) into the branch bank h_p(m) = h[m*P + p].
+
+    Returns (P, M) float32.
+    """
+    if h.shape[0] % branches != 0:
+        raise ValueError("prototype length not divisible by branch count")
+    m = h.shape[0] // branches
+    return h.reshape(m, branches).T.astype(np.float32).copy()
+
+
+def dft_matrix(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """DFM F[l, k] = exp(-2 pi i l k / n) as (re, im) float32 matrices."""
+    lk = np.outer(np.arange(n, dtype=np.float64), np.arange(n, dtype=np.float64))
+    ang = -2.0 * np.pi * lk / n
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+def idft_matrix(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """IDFM IF[k, j] = exp(+2 pi i k j / n) / n as (re, im) float32 matrices."""
+    kj = np.outer(np.arange(n, dtype=np.float64), np.arange(n, dtype=np.float64))
+    ang = 2.0 * np.pi * kj / n
+    return (np.cos(ang) / n).astype(np.float32), (np.sin(ang) / n).astype(np.float32)

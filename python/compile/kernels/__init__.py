@@ -1,0 +1,23 @@
+"""L1: the four TINA building blocks (paper §2) as Pallas kernels.
+
+Every kernel is validated against the pure-jnp oracles in :mod:`ref` by the
+pytest suite, and lowered with ``interpret=True`` so the resulting HLO runs
+on the CPU PJRT backend used by the rust runtime.
+"""
+
+from .depthwise_conv import depthwise_conv, depthwise_conv_chunked
+from .fully_connected import fully_connected
+from .pointwise_conv import pointwise_conv
+from .standard_conv import standard_conv, standard_conv_chunked
+from . import common, ref
+
+__all__ = [
+    "depthwise_conv",
+    "depthwise_conv_chunked",
+    "fully_connected",
+    "pointwise_conv",
+    "standard_conv",
+    "standard_conv_chunked",
+    "common",
+    "ref",
+]

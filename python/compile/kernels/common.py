@@ -1,0 +1,79 @@
+"""Shared helpers for the TINA Pallas building-block kernels.
+
+All kernels in this package are written for the TPU execution model —
+blocks tiled for VMEM residency, matmul tiles shaped for the MXU — but are
+lowered with ``interpret=True`` so the emitted HLO is plain XLA ops that the
+CPU PJRT plugin (and the rust runtime on top of it) can execute.  See
+DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# MXU systolic array edge / VPU lane count on current TPUs.  Matmul block
+# sizes are chosen as multiples of these so the same BlockSpecs would feed
+# full tiles on real hardware.
+MXU_EDGE = 128
+VPU_LANES = 128
+VPU_SUBLANES = 8
+
+# Soft VMEM budget per kernel invocation (bytes).  Real cores have ~16 MiB;
+# we keep the working set well under half of it to leave room for
+# double-buffered prefetch of the next block.
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, m: int) -> int:
+    return ceil_div(x, m) * m
+
+
+def pad_axis(x, axis: int, target: int, value=0.0):
+    """Zero-pad ``x`` along ``axis`` up to length ``target`` (no-op if equal)."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    if cur > target:
+        raise ValueError(f"pad_axis: axis {axis} already {cur} > {target}")
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - cur)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def pick_block(dim: int, preferred: int, multiple: int = 1) -> int:
+    """Choose a block size for a dimension of extent ``dim``.
+
+    Returns ``preferred`` when the dimension is large enough, otherwise the
+    dimension itself rounded up to ``multiple`` (the wrapper pads the array
+    to that size).  The returned block always divides the padded extent.
+    """
+    if dim >= preferred:
+        return preferred
+    return round_up(max(dim, 1), multiple)
+
+
+def compute_dtype(dtype) -> jnp.dtype:
+    """Map a requested storage dtype to the kernel compute dtype."""
+    d = jnp.dtype(dtype)
+    if d == jnp.dtype(jnp.bfloat16):
+        return jnp.dtype(jnp.bfloat16)
+    return jnp.dtype(jnp.float32)
+
+
+def vmem_bytes(*block_shapes_dtypes) -> int:
+    """Estimate the VMEM working set of a kernel invocation.
+
+    Each argument is ``(shape_tuple, dtype)``.  Used by tests and by the
+    §Perf estimate table generator.
+    """
+    total = 0
+    for shape, dtype in block_shapes_dtypes:
+        n = 1
+        for s in shape:
+            n *= int(s)
+        total += n * jnp.dtype(dtype).itemsize
+    return total

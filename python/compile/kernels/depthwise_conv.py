@@ -1,0 +1,101 @@
+"""TINA building block: depthwise 1-D convolution (Eq. 2) as a Pallas kernel.
+
+O[t, c, w] = b[c] + sum_m I[t, c, w + m] * K[c, m]
+
+Carries TINA's elementwise multiply (§3.1, M=1), elementwise add (§3.3,
+ones-kernel + bias-as-operand) and the PFB's polyphase FIR bank (§5.2,
+channels = branches, M = taps-per-branch).
+
+TPU mapping: purely elementwise-and-shift work, so it targets the VPU, not
+the MXU.  Channels are blocked along the sublane axis; each grid step holds
+a (bc, W) slab of the input in VMEM and performs the M tap-shifts as
+unrolled vector FMAs over lane-contiguous slices.  The tap loop is a python
+loop — taps are static — so there is no grid-axis revisiting at all; one
+pass over HBM per slab.  Large W is chunked by the caller (see
+``depthwise_conv_chunked``) to bound the slab footprint.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _dw_kernel(x_ref, k_ref, b_ref, o_ref, *, m: int, wout: int):
+    x = x_ref[0]  # (bc, W)
+    k = k_ref[...]  # (bc, m)
+    acc = jnp.zeros((x.shape[0], wout), dtype=jnp.float32)
+    for i in range(m):  # static tap loop -> unrolled shift-FMA
+        acc = acc + x[:, i : i + wout].astype(jnp.float32) * k[:, i : i + 1].astype(
+            jnp.float32
+        )
+    o_ref[0] = acc.astype(o_ref.dtype) + b_ref[...][:, None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+def depthwise_conv(x, k, b, *, bc=256, interpret=True):
+    """Depthwise valid 1-D convolution (correlation form) with bias.
+
+    x: (T, C, W), k: (C, M), b: (C,) -> (T, C, W - M + 1)
+    """
+    t, c, w = x.shape
+    ck, m = k.shape
+    assert c == ck, f"channel mismatch: {c} vs {ck}"
+    assert b.shape == (c,)
+    assert w >= m, f"window {m} longer than input {w}"
+    wout = w - m + 1
+
+    bc = common.pick_block(c, bc)
+    cp = common.round_up(c, bc)
+    x = common.pad_axis(x, 1, cp)
+    k = common.pad_axis(k, 0, cp)
+    b = common.pad_axis(b, 0, cp)
+
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, m=m, wout=wout),
+        grid=(t, cp // bc),
+        in_specs=[
+            pl.BlockSpec((1, bc, w), lambda ti, ci: (ti, ci, 0)),
+            pl.BlockSpec((bc, m), lambda ti, ci: (ci, 0)),
+            pl.BlockSpec((bc,), lambda ti, ci: (ci,)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, wout), lambda ti, ci: (ti, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, cp, wout), x.dtype),
+        interpret=interpret,
+    )(x, k, b)
+    return out[:, :c, :]
+
+
+def depthwise_conv_chunked(x, k, b, *, bc=256, chunk_w=8192, interpret=True):
+    """Depthwise conv with the W axis split into overlapping VMEM-sized chunks.
+
+    Expresses the HBM->VMEM streaming schedule at the graph level: each chunk
+    of ``chunk_w`` output samples re-reads the M-1 sample halo, exactly the
+    overlap a TPU pipeline would prefetch.  Numerics are identical to
+    ``depthwise_conv``.
+    """
+    t, c, w = x.shape
+    _, m = k.shape
+    wout = w - m + 1
+    if wout <= chunk_w:
+        return depthwise_conv(x, k, b, bc=bc, interpret=interpret)
+    pieces = []
+    for start in range(0, wout, chunk_w):
+        stop = min(start + chunk_w, wout)
+        xs = x[:, :, start : stop + m - 1]
+        pieces.append(depthwise_conv(xs, k, b, bc=bc, interpret=interpret))
+    return jnp.concatenate(pieces, axis=2)
+
+
+def vmem_estimate(bc=32, w=8192, m=8, dtype=jnp.float32) -> int:
+    """Defaults model the PFB bank config (bc = P = 32 channels, one
+    chunk_w slab); the elementwise carriers use (bc=4096, w=1) which is
+    far smaller."""
+    return common.vmem_bytes(
+        ((1, bc, w), dtype), ((bc, m), dtype), ((1, bc, w - m + 1), dtype), ((bc,), dtype)
+    )

@@ -1,0 +1,85 @@
+"""TINA building block: pointwise (1x1) convolution (Eq. 3) as a Pallas kernel.
+
+O[t, co, s] = b[co] + sum_ci I[t, ci, s] * K[ci, co]
+
+This is the channel-mixing matmul that carries TINA's matrix-matrix multiply
+(§3.2) and DFT/IDFT (§4.1/§4.2).  TPU mapping: for each (t, spatial-tile,
+cout-tile) the kernel stages a (bk, bs) input slab and a (bk, bn) kernel tile
+in VMEM and contracts over channels on the MXU; the reduction axis is the
+innermost grid axis so the (bn, bs) output tile is revisited and accumulated
+in place.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _pw_kernel(x_ref, k_ref, b_ref, o_ref, *, nk: int):
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # x block: (1, bk, bs); k block: (bk, bn) -> contribution (1, bn, bs)
+    x = x_ref[0]  # (bk, bs)
+    kk = k_ref[...]  # (bk, bn)
+    o_ref[0] += jnp.dot(
+        kk.T, x, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(k_step == nk - 1)
+    def _bias():
+        o_ref[0] += b_ref[...][:, None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bn", "bk", "interpret"))
+def pointwise_conv(x, k, b, *, bs=128, bn=128, bk=128, interpret=True):
+    """Pointwise convolution O = K^T applied across channels, plus bias.
+
+    x: (T, Cin, S), k: (Cin, Cout), b: (Cout,) -> (T, Cout, S)
+    """
+    t, cin, s = x.shape
+    cin_k, cout = k.shape
+    assert cin == cin_k, f"channel mismatch: {cin} vs {cin_k}"
+    assert b.shape == (cout,)
+
+    bs = common.pick_block(s, bs)
+    bn = common.pick_block(cout, bn)
+    bk = common.pick_block(cin, bk)
+
+    sp = common.round_up(s, bs)
+    np_ = common.round_up(cout, bn)
+    kp = common.round_up(cin, bk)
+
+    x = common.pad_axis(common.pad_axis(x, 1, kp), 2, sp)
+    k = common.pad_axis(common.pad_axis(k, 0, kp), 1, np_)
+    b = common.pad_axis(b, 0, np_)
+
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_pw_kernel, nk=nk),
+        grid=(t, sp // bs, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bk, bs), lambda ti, si, ni, ki: (ti, ki, si)),
+            pl.BlockSpec((bk, bn), lambda ti, si, ni, ki: (ki, ni)),
+            pl.BlockSpec((bn,), lambda ti, si, ni, ki: (ni,)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, bs), lambda ti, si, ni, ki: (ti, ni, si)),
+        out_shape=jax.ShapeDtypeStruct((t, np_, sp), x.dtype),
+        interpret=interpret,
+    )(x, k, b)
+    return out[:, :cout, :s]
+
+
+def vmem_estimate(bs=128, bn=128, bk=128, dtype=jnp.float32) -> int:
+    return common.vmem_bytes(
+        ((1, bk, bs), dtype), ((bk, bn), dtype), ((1, bn, bs), dtype), ((bn,), dtype)
+    )

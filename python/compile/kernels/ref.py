@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the four TINA building blocks.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float tolerance (pytest enforces this, with
+hypothesis sweeping shapes and dtypes).  They intentionally use the most
+direct jnp formulation of Eqs. (1)-(4) of the paper, with no tiling.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fully_connected(x, k, b):
+    """Eq. (4): O(c_out) = b(c_out) + sum_cin I(c_in) K(c_in, c_out).
+
+    x: (B, Cin), k: (Cin, Cout), b: (Cout,) -> (B, Cout)
+    """
+    return jnp.dot(x, k, preferred_element_type=jnp.float32).astype(x.dtype) + b
+
+
+def pointwise_conv(x, k, b):
+    """Eq. (3): 1x1 convolution mixing channels.
+
+    x: (T, Cin, S), k: (Cin, Cout), b: (Cout,) -> (T, Cout, S)
+    """
+    # O[t, co, s] = b[co] + sum_ci x[t, ci, s] * k[ci, co]
+    out = jnp.einsum("tcs,cn->tns", x, k, preferred_element_type=jnp.float32)
+    return out.astype(x.dtype) + b[None, :, None].astype(x.dtype)
+
+
+def depthwise_conv(x, k, b):
+    """Eq. (2): per-channel 1-D valid convolution (correlation form).
+
+    x: (T, C, W), k: (C, M), b: (C,) -> (T, C, W - M + 1)
+    O[t, c, w] = b[c] + sum_m x[t, c, w + m] * k[c, m]
+    """
+    t, c, w = x.shape
+    _, m = k.shape
+    wout = w - m + 1
+    acc = jnp.zeros((t, c, wout), dtype=jnp.float32)
+    for i in range(m):
+        acc = acc + x[:, :, i : i + wout].astype(jnp.float32) * k[:, i][
+            None, :, None
+        ].astype(jnp.float32)
+    return acc.astype(x.dtype) + b[None, :, None].astype(x.dtype)
+
+
+def standard_conv(x, k, b):
+    """Eq. (1): 1-D valid convolution with channels (correlation form).
+
+    x: (T, Cin, W), k: (Cout, Cin, N), b: (Cout,) -> (T, Cout, W - N + 1)
+    O[t, co, w] = b[co] + sum_ci sum_n x[t, ci, w + n] * k[co, ci, n]
+    """
+    t, cin, w = x.shape
+    cout, _, n = k.shape
+    wout = w - n + 1
+    acc = jnp.zeros((t, cout, wout), dtype=jnp.float32)
+    for i in range(n):
+        # (T, Cin, Wout) x (Cout, Cin) -> (T, Cout, Wout)
+        acc = acc + jnp.einsum(
+            "tcw,oc->tow",
+            x[:, :, i : i + wout],
+            k[:, :, i],
+            preferred_element_type=jnp.float32,
+        )
+    return acc.astype(x.dtype) + b[None, :, None].astype(x.dtype)

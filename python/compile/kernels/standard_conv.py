@@ -1,0 +1,99 @@
+"""TINA building block: standard 1-D convolution (Eq. 1) as a Pallas kernel.
+
+O[t, co, w] = b[co] + sum_ci sum_n I[t, ci, w + n] * K[co, ci, n]
+
+Carries TINA's FIR filter (§4.3, Cin = Cout = 1) and the unfolding algorithm
+(§4.4, Cin = 1, K = identity, Cout = window).
+
+TPU mapping: the tap loop is static and unrolled; each tap contributes a
+(bco, Cin) x (Cin, W') MXU contraction over a VMEM-resident input slab, so
+the "data independent loop iterations" the paper exploits on CUDA become
+shift-indexed systolic matmuls here.  Cout is blocked on the grid; the full
+input slab (all Cin, a W-chunk) is staged once per grid step and reused by
+every tap — one HBM pass per slab instead of one per tap.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _sc_kernel(x_ref, k_ref, b_ref, o_ref, *, n: int, wout: int):
+    x = x_ref[0]  # (Cin, W)
+    k = k_ref[...]  # (bco, Cin, n)
+    bco = k.shape[0]
+    acc = jnp.zeros((bco, wout), dtype=jnp.float32)
+    for i in range(n):  # static tap loop -> unrolled shifted matmuls
+        acc = acc + jnp.dot(
+            k[:, :, i], x[:, i : i + wout], preferred_element_type=jnp.float32
+        )
+    o_ref[0] = acc.astype(o_ref.dtype) + b_ref[...][:, None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bco", "interpret"))
+def standard_conv(x, k, b, *, bco=128, interpret=True):
+    """Standard valid 1-D convolution (correlation form) with bias.
+
+    x: (T, Cin, W), k: (Cout, Cin, N), b: (Cout,) -> (T, Cout, W - N + 1)
+    """
+    t, cin, w = x.shape
+    cout, cin_k, n = k.shape
+    assert cin == cin_k, f"channel mismatch: {cin} vs {cin_k}"
+    assert b.shape == (cout,)
+    assert w >= n, f"window {n} longer than input {w}"
+    wout = w - n + 1
+
+    bco = common.pick_block(cout, bco)
+    cop = common.round_up(cout, bco)
+    k = common.pad_axis(k, 0, cop)
+    b = common.pad_axis(b, 0, cop)
+
+    out = pl.pallas_call(
+        functools.partial(_sc_kernel, n=n, wout=wout),
+        grid=(t, cop // bco),
+        in_specs=[
+            pl.BlockSpec((1, cin, w), lambda ti, ci: (ti, 0, 0)),
+            pl.BlockSpec((bco, cin, n), lambda ti, ci: (ci, 0, 0)),
+            pl.BlockSpec((bco,), lambda ti, ci: (ci,)),
+        ],
+        out_specs=pl.BlockSpec((1, bco, wout), lambda ti, ci: (ti, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, cop, wout), x.dtype),
+        interpret=interpret,
+    )(x, k, b)
+    return out[:, :cout, :]
+
+
+def standard_conv_chunked(x, k, b, *, bco=128, chunk_w=8192, interpret=True):
+    """Standard conv with the W axis split into overlapping VMEM-sized chunks.
+
+    Same graph-level HBM->VMEM streaming schedule as
+    ``depthwise_conv_chunked``; each chunk re-reads an (N-1)-sample halo.
+    """
+    t, cin, w = x.shape
+    cout, _, n = k.shape
+    wout = w - n + 1
+    if wout <= chunk_w:
+        return standard_conv(x, k, b, bco=bco, interpret=interpret)
+    pieces = []
+    for start in range(0, wout, chunk_w):
+        stop = min(start + chunk_w, wout)
+        xs = x[:, :, start : stop + n - 1]
+        pieces.append(standard_conv(xs, k, b, bco=bco, interpret=interpret))
+    return jnp.concatenate(pieces, axis=2)
+
+
+def vmem_estimate(bco=32, cin=1, w=8192, n=64, dtype=jnp.float32) -> int:
+    """Defaults model the unfold carrier (Cout = J = 32 over one chunk_w
+    slab); the FIR carrier (Cout = 1) is far smaller."""
+    return common.vmem_bytes(
+        ((1, cin, w), dtype),
+        ((bco, cin, n), dtype),
+        ((1, bco, w - n + 1), dtype),
+        ((bco,), dtype),
+    )

@@ -1,0 +1,309 @@
+"""L2 variant registry: every (op, impl, dtype, size) point of the paper's
+evaluation, as a jax callable plus example input specs.
+
+This is the single source of truth for what `aot.py` lowers and what the
+rust runtime finds in `artifacts/manifest.json`.  Figure-to-variant mapping
+lives in DESIGN.md §5; sizes follow the paper's sweeps scaled to this
+testbed (see EXPERIMENTS.md).
+
+Conventions baked into every artifact ABI:
+  * interface dtype is always float32 (bf16 variants cast internally);
+  * complex values are (re, im) float32 pairs;
+  * layer weights — FIR taps, PFB prototype, DFM — are compile-time
+    constants (they are the NN weights in the TINA view); signals are the
+    runtime inputs;
+  * every callable returns a tuple (lowered with return_tuple=True).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import baselines, coeffs, tina_ops
+
+# ---------------------------------------------------------------------------
+# sweep parameters (the paper's x-axes, scaled to this testbed)
+# ---------------------------------------------------------------------------
+
+EWMULT_SIZES = (32, 64, 128, 256)       # Fig 1a (N x N matrices)
+MATMUL_SIZES = (32, 64, 128, 256)       # Fig 1b
+EWADD_SIZES = (32, 64, 128, 256)        # Fig 1c
+SUMMATION_SIZES = (1024, 4096, 16384, 65536)  # Fig 1d
+DFT_SIZES = (64, 128, 256, 512)         # Fig 2a/2b (signal length)
+DFT_BATCH = 4
+FIR_SIZES = (1024, 4096, 16384, 65536)  # Fig 2c
+FIR_TAPS = 64
+FIR_CUTOFF = 0.25
+UNFOLD_SIZES = (1024, 4096, 16384, 65536)  # Fig 2d
+UNFOLD_WINDOW = 32
+PFB_BRANCHES = 32                        # Fig 3
+PFB_TAPS = 8
+PFB_SIZES = (4096, 16384, 65536)
+PFB_BATCHES = (1, 8)                     # 8 feeds the coordinator's batcher
+STFT_NFFT = 256                          # extension op (paper future work)
+STFT_HOP = 128
+STFT_SIZES = (4096, 16384)
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One lowerable artifact: a concrete jax callable and its ABI."""
+
+    name: str
+    op: str
+    impl: str  # "tina" | "jaxref"
+    dtype: str  # "f32" | "bf16" (internal compute; interface is f32)
+    params: dict
+    fn: Callable
+    input_specs: Sequence[jax.ShapeDtypeStruct]
+
+    @property
+    def filename(self) -> str:
+        return f"{self.name}.hlo.txt"
+
+    def output_specs(self):
+        return jax.eval_shape(self.fn, *self.input_specs)
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _tuple_wrap(fn):
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# variant builders, one per op
+# ---------------------------------------------------------------------------
+
+
+def _arith_variants() -> list:
+    out = []
+    for op, sizes, tina_fn, jax_fn in (
+        ("ewmult", EWMULT_SIZES, tina_ops.ewmult, baselines.ewmult),
+        ("ewadd", EWADD_SIZES, tina_ops.ewadd, baselines.ewadd),
+        ("matmul", MATMUL_SIZES, tina_ops.matmul, baselines.matmul),
+    ):
+        for n in sizes:
+            specs = [_spec(n, n), _spec(n, n)]
+            out.append(
+                Variant(
+                    name=f"{op}_tina_f32_N{n}",
+                    op=op, impl="tina", dtype="f32", params={"n": n},
+                    fn=_tuple_wrap(lambda a, b, f=tina_fn: f(a, b)),
+                    input_specs=specs,
+                )
+            )
+            out.append(
+                Variant(
+                    name=f"{op}_jaxref_f32_N{n}",
+                    op=op, impl="jaxref", dtype="f32", params={"n": n},
+                    fn=_tuple_wrap(lambda a, b, f=jax_fn: f(a, b)),
+                    input_specs=specs,
+                )
+            )
+    for l in SUMMATION_SIZES:
+        specs = [_spec(l)]
+        out.append(
+            Variant(
+                name=f"summation_tina_f32_L{l}",
+                op="summation", impl="tina", dtype="f32", params={"l": l},
+                fn=_tuple_wrap(tina_ops.summation),
+                input_specs=specs,
+            )
+        )
+        out.append(
+            Variant(
+                name=f"summation_jaxref_f32_L{l}",
+                op="summation", impl="jaxref", dtype="f32", params={"l": l},
+                fn=_tuple_wrap(baselines.summation),
+                input_specs=specs,
+            )
+        )
+    return out
+
+
+def _fourier_variants() -> list:
+    out = []
+    for n in DFT_SIZES:
+        b = DFT_BATCH
+        # DFT of a real signal: one f32 input, (re, im) outputs.
+        out.append(
+            Variant(
+                name=f"dft_tina_f32_B{b}_N{n}",
+                op="dft", impl="tina", dtype="f32", params={"n": n, "batch": b},
+                fn=_tuple_wrap(lambda x: tina_ops.dft(x)),
+                input_specs=[_spec(b, n)],
+            )
+        )
+        out.append(
+            Variant(
+                name=f"dft_jaxref_f32_B{b}_N{n}",
+                op="dft", impl="jaxref", dtype="f32", params={"n": n, "batch": b},
+                fn=_tuple_wrap(lambda x: baselines.dft(x)),
+                input_specs=[_spec(b, n)],
+            )
+        )
+        # IDFT of a complex spectrum: (re, im) in and out.
+        out.append(
+            Variant(
+                name=f"idft_tina_f32_B{b}_N{n}",
+                op="idft", impl="tina", dtype="f32", params={"n": n, "batch": b},
+                fn=_tuple_wrap(tina_ops.idft),
+                input_specs=[_spec(b, n), _spec(b, n)],
+            )
+        )
+        out.append(
+            Variant(
+                name=f"idft_jaxref_f32_B{b}_N{n}",
+                op="idft", impl="jaxref", dtype="f32", params={"n": n, "batch": b},
+                fn=_tuple_wrap(baselines.idft),
+                input_specs=[_spec(b, n), _spec(b, n)],
+            )
+        )
+    return out
+
+
+def _fir_unfold_variants() -> list:
+    out = []
+    taps = coeffs.fir_lowpass(FIR_TAPS, FIR_CUTOFF)
+    for l in FIR_SIZES:
+        params = {"l": l, "taps": FIR_TAPS, "cutoff": FIR_CUTOFF, "batch": 1}
+        out.append(
+            Variant(
+                name=f"fir_tina_f32_B1_L{l}",
+                op="fir", impl="tina", dtype="f32", params=params,
+                fn=_tuple_wrap(lambda x, t=taps: tina_ops.fir(x, t)),
+                input_specs=[_spec(1, l)],
+            )
+        )
+        out.append(
+            Variant(
+                name=f"fir_jaxref_f32_B1_L{l}",
+                op="fir", impl="jaxref", dtype="f32", params=params,
+                fn=_tuple_wrap(lambda x, t=jnp.asarray(taps): baselines.fir(x, t)),
+                input_specs=[_spec(1, l)],
+            )
+        )
+    # batched FIR for the coordinator's dynamic batcher
+    l = 4096
+    out.append(
+        Variant(
+            name=f"fir_tina_f32_B8_L{l}",
+            op="fir", impl="tina", dtype="f32",
+            params={"l": l, "taps": FIR_TAPS, "cutoff": FIR_CUTOFF, "batch": 8},
+            fn=_tuple_wrap(lambda x, t=taps: tina_ops.fir(x, t)),
+            input_specs=[_spec(8, l)],
+        )
+    )
+    for l in UNFOLD_SIZES:
+        params = {"l": l, "window": UNFOLD_WINDOW, "batch": 1}
+        out.append(
+            Variant(
+                name=f"unfold_tina_f32_B1_L{l}",
+                op="unfold", impl="tina", dtype="f32", params=params,
+                fn=_tuple_wrap(lambda x: tina_ops.unfold(x, UNFOLD_WINDOW)),
+                input_specs=[_spec(1, l)],
+            )
+        )
+        out.append(
+            Variant(
+                name=f"unfold_jaxref_f32_B1_L{l}",
+                op="unfold", impl="jaxref", dtype="f32", params=params,
+                fn=_tuple_wrap(lambda x: baselines.unfold(x, UNFOLD_WINDOW)),
+                input_specs=[_spec(1, l)],
+            )
+        )
+    return out
+
+
+def _pfb_variants() -> list:
+    out = []
+    p, m = PFB_BRANCHES, PFB_TAPS
+    for l in PFB_SIZES:
+        for batch in PFB_BATCHES:
+            if batch != 1 and l != 16384:
+                continue  # batched artifacts only at the serving size
+            params = {"l": l, "branches": p, "taps_per_branch": m, "batch": batch}
+            for op, tina_fn, jax_fn in (
+                ("pfb_fir", tina_ops.pfb_fir, baselines.pfb_fir),
+                ("pfb", tina_ops.pfb, baselines.pfb),
+            ):
+                out.append(
+                    Variant(
+                        name=f"{op}_tina_f32_B{batch}_L{l}",
+                        op=op, impl="tina", dtype="f32", params=params,
+                        fn=_tuple_wrap(lambda x, f=tina_fn: f(x, p, m, dtype="f32")),
+                        input_specs=[_spec(batch, l)],
+                    )
+                )
+                out.append(
+                    Variant(
+                        name=f"{op}_tina_bf16_B{batch}_L{l}",
+                        op=op, impl="tina", dtype="bf16", params=params,
+                        fn=_tuple_wrap(lambda x, f=tina_fn: f(x, p, m, dtype="bf16")),
+                        input_specs=[_spec(batch, l)],
+                    )
+                )
+                out.append(
+                    Variant(
+                        name=f"{op}_jaxref_f32_B{batch}_L{l}",
+                        op=op, impl="jaxref", dtype="f32", params=params,
+                        fn=_tuple_wrap(lambda x, f=jax_fn: f(x, p, m)),
+                        input_specs=[_spec(batch, l)],
+                    )
+                )
+    return out
+
+
+def _stft_variants() -> list:
+    out = []
+    for l in STFT_SIZES:
+        params = {"l": l, "nfft": STFT_NFFT, "hop": STFT_HOP, "batch": 1}
+        out.append(
+            Variant(
+                name=f"stft_tina_f32_B1_L{l}",
+                op="stft", impl="tina", dtype="f32", params=params,
+                fn=_tuple_wrap(lambda x: tina_ops.stft(x, STFT_NFFT, STFT_HOP)),
+                input_specs=[_spec(1, l)],
+            )
+        )
+        out.append(
+            Variant(
+                name=f"stft_jaxref_f32_B1_L{l}",
+                op="stft", impl="jaxref", dtype="f32", params=params,
+                fn=_tuple_wrap(lambda x: baselines.stft(x, STFT_NFFT, STFT_HOP)),
+                input_specs=[_spec(1, l)],
+            )
+        )
+    return out
+
+
+def build_variants() -> list:
+    """All lowerable variants, in manifest order."""
+    variants = (
+        _arith_variants()
+        + _fourier_variants()
+        + _fir_unfold_variants()
+        + _pfb_variants()
+        + _stft_variants()
+    )
+    names = [v.name for v in variants]
+    assert len(names) == len(set(names)), "duplicate variant names"
+    return variants
+
+
+def get_variant(name: str):
+    for v in build_variants():
+        if v.name == name:
+            return v
+    raise KeyError(name)

@@ -1,0 +1,302 @@
+"""L2: the paper's §3/§4 function -> NN-layer mappings.
+
+Every public function here implements one row of Table 1 by composing the
+four L1 Pallas building blocks — never by calling a direct jnp equivalent
+(those live in :mod:`baselines` as the "JAX" comparator).  The mapping
+mirrors the paper exactly:
+
+=====================  ======================  =============
+Function               Building block          Paper section
+=====================  ======================  =============
+ewmult                 depthwise conv (M=1)    §3.1
+matmul                 pointwise conv          §3.2
+ewadd                  depthwise conv          §3.3
+summation              fully connected         §3.4
+dft / idft             pointwise conv (DFM)    §4.1 / §4.2
+fir                    standard conv           §4.3
+unfold                 standard conv (I)       §4.4
+pfb_fir / pfb          depthwise bank (+DFT)   §5.2
+=====================  ======================  =============
+
+All functions take/return float32 at the interface; ``dtype="bf16"``
+switches the internal compute to bfloat16 (the "TINA 16 bit" variant of the
+paper, re-targeted from fp16 tensor cores to the MXU-native narrow type).
+
+Complex values are carried as (re, im) float32 pairs throughout — see
+DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import coeffs
+from . import kernels as K
+
+_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def _cast_in(dtype: str, *xs):
+    d = _DTYPES[dtype]
+    out = tuple(jnp.asarray(x).astype(d) for x in xs)
+    return out if len(out) > 1 else out[0]
+
+
+def _cast_out(*xs):
+    out = tuple(x.astype(jnp.float32) for x in xs)
+    return out if len(out) > 1 else out[0]
+
+
+# ---------------------------------------------------------------------------
+# §3 arithmetic functions
+# ---------------------------------------------------------------------------
+
+
+def ewmult(a, b, *, dtype: str = "f32", bc: int = 4096):
+    """§3.1 elementwise matrix multiply via depthwise conv.
+
+    Both H x W operands are flattened along the channel axis (C = H*W,
+    spatial extent 1x1); operand ``b`` becomes the per-channel kernel with
+    window M = 1 and zero bias — Eq. (6).
+    """
+    a, b = _cast_in(dtype, a, b)
+    h, w = a.shape
+    c = h * w
+    x = a.reshape(1, c, 1)  # (T=1, C, W=1)
+    k = b.reshape(c, 1)  # (C, M=1)
+    bias = jnp.zeros((c,), a.dtype)
+    out = K.depthwise_conv(x, k, bias, bc=bc)
+    return _cast_out(out.reshape(h, w))
+
+
+def ewadd(a, b, *, dtype: str = "f32", bc: int = 4096):
+    """§3.3 elementwise matrix add: ones-kernel depthwise conv with operand
+    ``b`` injected through the bias port — Eq. (10)."""
+    a, b = _cast_in(dtype, a, b)
+    h, w = a.shape
+    c = h * w
+    x = a.reshape(1, c, 1)
+    k = jnp.ones((c, 1), a.dtype)
+    bias = b.reshape(c)
+    out = K.depthwise_conv(x, k, bias, bc=bc)
+    return _cast_out(out.reshape(h, w))
+
+
+def matmul(x, y, *, dtype: str = "f32"):
+    """§3.2 matrix-matrix multiply via pointwise conv.
+
+    Each row of X (M, L) is a 1x1 "pixel" with channels = L (the
+    contraction axis); Y (L, N) is the 1x1 kernel mixing L input channels
+    into N output channels — Eq. (9).  Rows ride the batch dimension so the
+    output (M, N, 1) is already row-major (no trailing transpose, which the
+    PJRT entry ABI would otherwise lower to a column-major output buffer).
+    """
+    x, y = _cast_in(dtype, x, y)
+    m, l = x.shape
+    l2, n = y.shape
+    assert l == l2
+    i = x.T.reshape(1, l, m)  # (T=1, Cin=L, S=M)
+    bias = jnp.zeros((n,), x.dtype)
+    out = K.pointwise_conv(i, y, bias)  # (1, N, M)
+    return _cast_out(out[0].T)  # (M, N)
+
+
+def summation(x, *, dtype: str = "f32", bk: int = 4096):
+    """§3.4 summation via a fully connected layer with a ones kernel,
+    one output channel and zero bias — Eq. (11).  Returns shape (1,)."""
+    x = _cast_in(dtype, x)
+    (l,) = x.shape
+    k = jnp.ones((l, 1), x.dtype)
+    bias = jnp.zeros((1,), x.dtype)
+    out = K.fully_connected(x.reshape(1, l), k, bias, bk=bk)
+    return _cast_out(out.reshape(1))
+
+
+# ---------------------------------------------------------------------------
+# §4 signal processing functions
+# ---------------------------------------------------------------------------
+
+
+def _real_pointwise(x, k):
+    """(B, L) x (L, N) through one pointwise convolution, batch on S.
+
+    Batch rows ride the conv's spatial axis (channels = contraction axis),
+    so one grid step feeds the MXU a full (bk, B) slab instead of B
+    single-row steps — 40x faster under interpret-mode lowering
+    (EXPERIMENTS.md §Perf L2).  The trailing transpose is safe because
+    aot.py forces row-major entry layouts and prints full constants.
+    """
+    b, l = x.shape
+    bias = jnp.zeros((k.shape[1],), x.dtype)
+    out = K.pointwise_conv(x.T.reshape(1, l, b), k, bias)  # (1, N, B)
+    return out[0].T  # (B, N)
+
+
+def _complex_pointwise(re, im, k_re, k_im, dtype: str):
+    """(re + j im) @ (k_re + j k_im) through four pointwise convolutions.
+
+    Inputs re/im: (B, L); kernels: (L, N).  Returns (B, N) re/im.
+    """
+    rr = _real_pointwise(re, k_re)
+    ri = _real_pointwise(re, k_im)
+    ir = _real_pointwise(im, k_re)
+    ii = _real_pointwise(im, k_im)
+    return rr - ii, ri + ir
+
+
+def dft(x_re, x_im=None, *, dtype: str = "f32"):
+    """§4.1 DFT: pointwise conv whose kernel is the Discrete Fourier Matrix.
+
+    x_re/x_im: (B, N) -> (re, im) each (B, N).  A None imaginary part means
+    a real input signal (the common case in the paper's benchmarks) and
+    skips the imaginary-branch convolutions entirely.
+    """
+    n = x_re.shape[1]
+    f_re, f_im = coeffs.dft_matrix(n)
+    if x_im is None:
+        x_re, f_re, f_im = _cast_in(dtype, x_re, f_re, f_im)
+        out_re = _real_pointwise(x_re, f_re)
+        out_im = _real_pointwise(x_re, f_im)
+        return _cast_out(out_re, out_im)
+    x_re, x_im, f_re, f_im = _cast_in(dtype, x_re, x_im, f_re, f_im)
+    out_re, out_im = _complex_pointwise(x_re, x_im, f_re, f_im, dtype)
+    return _cast_out(out_re, out_im)
+
+
+def idft(x_re, x_im, *, dtype: str = "f32"):
+    """§4.2 IDFT: pointwise conv with the inverse DFM as kernel."""
+    n = x_re.shape[1]
+    f_re, f_im = coeffs.idft_matrix(n)
+    x_re, x_im, f_re, f_im = _cast_in(dtype, x_re, x_im, f_re, f_im)
+    out_re, out_im = _complex_pointwise(x_re, x_im, f_re, f_im, dtype)
+    return _cast_out(out_re, out_im)
+
+
+def fir(x, taps, *, dtype: str = "f32", chunk_w: int = 8192):
+    """§4.3 FIR filter via standard conv (Cin = Cout = 1).
+
+    x: (B, L), taps a(k): (M,) -> (B, L - M + 1), valid convolution
+    y(i) = sum_k a(k) x(i - k).  Eq. (16) is a correlation, so the kernel
+    holds the taps reversed; numerics match np.convolve(x, a, 'valid').
+    """
+    x, taps = _cast_in(dtype, x, taps)
+    b, l = x.shape
+    (m,) = taps.shape
+    k = taps[::-1].reshape(1, 1, m)  # (Cout=1, Cin=1, N=M)
+    bias = jnp.zeros((1,), x.dtype)
+    out = K.standard_conv_chunked(x.reshape(b, 1, l), k, bias, chunk_w=chunk_w)
+    return _cast_out(out.reshape(b, l - m + 1))
+
+
+def unfold(x, window: int, *, dtype: str = "f32", chunk_w: int = 8192):
+    """§4.4 unfolding via standard conv with an identity kernel.
+
+    x: (B, L) -> (B, L - J + 1, J) with Y[i, j] = X[i + j] — Eq. (19).
+    """
+    x = _cast_in(dtype, x)
+    b, l = x.shape
+    j = window
+    k = jnp.eye(j, dtype=x.dtype).reshape(j, 1, j)  # (Cout=J, Cin=1, N=J)
+    bias = jnp.zeros((j,), x.dtype)
+    out = K.standard_conv_chunked(x.reshape(b, 1, l), k, bias, chunk_w=chunk_w)
+    return _cast_out(jnp.transpose(out, (0, 2, 1)))  # (B, Wout, J)
+
+
+def stft(x, nfft: int, hop: int, *, dtype: str = "f32", chunk_w: int = 8192):
+    """Short-time Fourier transform — an *extension op* in the spirit of the
+    paper's future work ("mapping more non-NN operations into TINA layers"),
+    built entirely from Table-1 building blocks:
+
+      1. framing   = unfolding via standard conv with an identity kernel
+                     (§4.4), strided by `hop` (the stride parameter of §2.1);
+      2. windowing = elementwise multiply with a Hamming window via
+                     depthwise conv (§3.1);
+      3. DFT       = pointwise conv with the DFM kernel (§4.1).
+
+    x: (B, L) -> (re, im) each (B, F, nfft) with F = (L - nfft)//hop + 1.
+    """
+    x = _cast_in(dtype, x)
+    b, l = x.shape
+    frames = (l - nfft) // hop + 1
+    assert frames >= 1, f"signal {l} shorter than one {nfft} frame"
+
+    # 1. framing: unfold (stride 1) then stride the frame axis by `hop`
+    k = jnp.eye(nfft, dtype=x.dtype).reshape(nfft, 1, nfft)
+    bias0 = jnp.zeros((nfft,), x.dtype)
+    unfolded = K.standard_conv_chunked(
+        x.reshape(b, 1, l), k, bias0, chunk_w=chunk_w
+    )  # (B, nfft, L - nfft + 1)
+    framed = unfolded[:, :, ::hop][:, :, :frames]  # (B, nfft, F)
+    framed = jnp.transpose(framed, (0, 2, 1)).reshape(b * frames, nfft)
+
+    # 2. windowing: depthwise conv with channels = sample-in-frame (M = 1),
+    #    frames on T — the per-channel kernel *is* the window, broadcast
+    #    across frames exactly like §3.1's elementwise multiply
+    win = _cast_in(dtype, coeffs.hamming(nfft).astype(np.float32))
+    xw = K.depthwise_conv(
+        framed.reshape(b * frames, nfft, 1),
+        win.reshape(nfft, 1),
+        jnp.zeros((nfft,), x.dtype),
+        bc=min(nfft, 4096),
+    ).reshape(b * frames, nfft)
+
+    # 3. DFT across the frame samples: pointwise conv with the DFM
+    f_re, f_im = _cast_in(dtype, *coeffs.dft_matrix(nfft))
+    out_re = _real_pointwise(xw, f_re).reshape(b, frames, nfft)
+    out_im = _real_pointwise(xw, f_im).reshape(b, frames, nfft)
+    return _cast_out(out_re, out_im)
+
+
+# ---------------------------------------------------------------------------
+# §5.2 polyphase filter bank use case
+# ---------------------------------------------------------------------------
+
+
+def pfb_fir(x, branches: int, taps_per_branch: int, *, dtype: str = "f32",
+            prototype=None):
+    """§5.2 Eq. (20): the polyphase FIR bank (the paper's "subfiltered
+    signals", Fig. 3 left column) via one depthwise convolution.
+
+    x: (B, L) with L divisible by P.  The signal is decomposed into P
+    branches x_p(n') = x(n' P + p), which become the channels of a
+    depthwise conv whose per-channel kernels are the (time-reversed)
+    polyphase taps h_p.  Returns (B, P, L/P - M + 1).
+    """
+    p, m = branches, taps_per_branch
+    if prototype is None:
+        prototype = coeffs.pfb_prototype(p, m)
+    bank = coeffs.polyphase_decompose(np.asarray(prototype), p)  # (P, M)
+    x, bank = _cast_in(dtype, x, bank)
+    b, l = x.shape
+    assert l % p == 0, f"signal length {l} not divisible by branches {p}"
+    nspec = l // p
+    # polyphase decomposition: (B, Nspec, P) -> channels-first (B, P, Nspec)
+    xp = jnp.transpose(x.reshape(b, nspec, p), (0, 2, 1))
+    k = bank[:, ::-1]  # correlation kernel = reversed taps
+    bias = jnp.zeros((p,), x.dtype)
+    out = K.depthwise_conv_chunked(xp, k, bias)
+    return _cast_out(out)  # (B, P, Nspec - M + 1)
+
+
+def pfb(x, branches: int, taps_per_branch: int, *, dtype: str = "f32",
+        prototype=None):
+    """§5.2 full PFB (Fig. 3 right column): polyphase FIR bank followed by a
+    DFT across branches, both as TINA layers (depthwise conv -> pointwise
+    conv with the DFM kernel).
+
+    x: (B, L) -> (re, im) each (B, L/P - M + 1, P): per-spectrum channel
+    outputs.
+    """
+    p = branches
+    y = pfb_fir(x, branches, taps_per_branch, dtype=dtype, prototype=prototype)
+    y = _cast_in(dtype, y)
+    b, _, ns = y.shape
+    f_re, f_im = _cast_in(dtype, *coeffs.dft_matrix(p))
+    bias = jnp.zeros((p,), y.dtype)
+    # DFT across the branch (channel) axis: spectra[b, k, n'] = sum_p y[b,p,n'] F[p,k]
+    out_re = K.pointwise_conv(y, f_re, bias)  # (B, P, Ns)
+    out_im = K.pointwise_conv(y, f_im, bias)
+    out_re = jnp.transpose(out_re, (0, 2, 1))  # (B, Ns, P)
+    out_im = jnp.transpose(out_im, (0, 2, 1))
+    return _cast_out(out_re, out_im)

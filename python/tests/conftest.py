@@ -1,0 +1,20 @@
+"""Shared pytest fixtures and hypothesis settings for the compile path."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Kernel sweeps run interpret-mode Pallas; keep example counts modest so the
+# suite stays fast, but always exercise shrinking on failure.
+settings.register_profile(
+    "tina",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.load_profile("tina")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(421)

@@ -1,0 +1,257 @@
+"""L1 correctness: every Pallas building-block kernel vs its pure-jnp
+oracle, with hypothesis sweeping shapes and dtypes.
+
+This is the CORE correctness signal of the compile path: if these pass,
+the HLO the artifacts are lowered from computes Eqs. (1)-(4) exactly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def _randn(rng, *shape):
+    return rng.standard_normal(shape).astype(F32)
+
+
+def assert_matches_ref(got, want, dtype=jnp.float32):
+    got = np.asarray(got, dtype=np.float32)
+    want = np.asarray(want, dtype=np.float32)
+    if dtype == jnp.bfloat16:
+        np.testing.assert_allclose(got, want, rtol=0.06, atol=0.06)
+    else:
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fully connected
+# ---------------------------------------------------------------------------
+
+
+class TestFullyConnected:
+    @given(
+        b=st.integers(1, 9),
+        cin=st.integers(1, 200),
+        cout=st.integers(1, 150),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_matches_ref(self, b, cin, cout, seed):
+        rng = np.random.default_rng(seed)
+        x, k, bias = _randn(rng, b, cin), _randn(rng, cin, cout), _randn(rng, cout)
+        got = K.fully_connected(jnp.array(x), jnp.array(k), jnp.array(bias))
+        assert_matches_ref(got, ref.fully_connected(x, k, bias))
+
+    def test_block_boundary_shapes(self, rng):
+        # exactly at, below and above the default block sizes
+        for b, cin, cout in [(8, 512, 128), (9, 513, 129), (1, 1, 1), (7, 511, 127)]:
+            x, k, bias = _randn(rng, b, cin), _randn(rng, cin, cout), _randn(rng, cout)
+            got = K.fully_connected(jnp.array(x), jnp.array(k), jnp.array(bias))
+            assert_matches_ref(got, ref.fully_connected(x, k, bias))
+
+    def test_bf16_within_tolerance(self, rng):
+        x, k, bias = _randn(rng, 4, 64), _randn(rng, 64, 32), _randn(rng, 32)
+        got = K.fully_connected(
+            jnp.array(x, jnp.bfloat16),
+            jnp.array(k, jnp.bfloat16),
+            jnp.array(bias, jnp.bfloat16),
+        )
+        assert got.dtype == jnp.bfloat16
+        assert_matches_ref(got, ref.fully_connected(x, k, bias), jnp.bfloat16)
+
+    def test_ones_kernel_is_summation(self, rng):
+        # paper §3.4: FC with ones kernel and Cout=1 sums the input
+        x = _randn(rng, 1, 1000)
+        got = K.fully_connected(
+            jnp.array(x), jnp.ones((1000, 1), F32), jnp.zeros((1,), F32)
+        )
+        np.testing.assert_allclose(np.asarray(got)[0, 0], x.sum(), rtol=1e-3)
+
+    def test_contraction_mismatch_raises(self, rng):
+        with pytest.raises(AssertionError):
+            K.fully_connected(
+                jnp.zeros((2, 3)), jnp.zeros((4, 5)), jnp.zeros((5,))
+            )
+
+
+# ---------------------------------------------------------------------------
+# pointwise convolution
+# ---------------------------------------------------------------------------
+
+
+class TestPointwiseConv:
+    @given(
+        t=st.integers(1, 3),
+        cin=st.integers(1, 150),
+        cout=st.integers(1, 150),
+        s=st.integers(1, 160),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_matches_ref(self, t, cin, cout, s, seed):
+        rng = np.random.default_rng(seed)
+        x, k, b = _randn(rng, t, cin, s), _randn(rng, cin, cout), _randn(rng, cout)
+        got = K.pointwise_conv(jnp.array(x), jnp.array(k), jnp.array(b))
+        assert_matches_ref(got, ref.pointwise_conv(x, k, b))
+
+    def test_matmul_carrier(self, rng):
+        # §3.2: pointwise conv with channels=L computes X @ Y
+        m, l, n = 17, 33, 9
+        x, y = _randn(rng, m, l), _randn(rng, l, n)
+        i = jnp.array(x.T.reshape(1, l, m))
+        out = K.pointwise_conv(i, jnp.array(y), jnp.zeros((n,), F32))
+        got = np.asarray(out)[0].T
+        np.testing.assert_allclose(got, x @ y, rtol=1e-4, atol=1e-4)
+
+    def test_identity_kernel_preserves(self, rng):
+        x = _randn(rng, 2, 8, 5)
+        got = K.pointwise_conv(jnp.array(x), jnp.eye(8, dtype=F32), jnp.zeros(8, F32))
+        np.testing.assert_allclose(np.asarray(got), x, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# depthwise convolution
+# ---------------------------------------------------------------------------
+
+
+class TestDepthwiseConv:
+    @given(
+        t=st.integers(1, 3),
+        c=st.integers(1, 300),
+        w_extra=st.integers(0, 120),
+        m=st.integers(1, 12),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_matches_ref(self, t, c, w_extra, m, seed):
+        rng = np.random.default_rng(seed)
+        w = m + w_extra
+        x, k, b = _randn(rng, t, c, w), _randn(rng, c, m), _randn(rng, c)
+        got = K.depthwise_conv(jnp.array(x), jnp.array(k), jnp.array(b))
+        assert_matches_ref(got, ref.depthwise_conv(x, k, b))
+
+    def test_elementwise_carrier(self, rng):
+        # §3.1: depthwise with 1x1 spatial and C=H*W multiplies elementwise
+        a, bmat = _randn(rng, 6, 7), _randn(rng, 6, 7)
+        out = K.depthwise_conv(
+            jnp.array(a.reshape(1, 42, 1)),
+            jnp.array(bmat.reshape(42, 1)),
+            jnp.zeros(42, F32),
+        )
+        np.testing.assert_allclose(
+            np.asarray(out).reshape(6, 7), a * bmat, rtol=1e-5, atol=1e-6
+        )
+
+    def test_bias_carrier_is_addition(self, rng):
+        # §3.3: ones kernel + bias=B adds elementwise
+        a, bmat = _randn(rng, 4, 5), _randn(rng, 4, 5)
+        out = K.depthwise_conv(
+            jnp.array(a.reshape(1, 20, 1)),
+            jnp.ones((20, 1), F32),
+            jnp.array(bmat.reshape(20)),
+        )
+        np.testing.assert_allclose(
+            np.asarray(out).reshape(4, 5), a + bmat, rtol=1e-5, atol=1e-6
+        )
+
+    @given(chunk=st.sampled_from([64, 257, 1000]), seed=st.integers(0, 2**31))
+    def test_chunked_equals_unchunked(self, chunk, seed):
+        rng = np.random.default_rng(seed)
+        x, k, b = _randn(rng, 1, 5, 2111), _randn(rng, 5, 7), _randn(rng, 5)
+        want = K.depthwise_conv(jnp.array(x), jnp.array(k), jnp.array(b))
+        got = K.depthwise_conv_chunked(
+            jnp.array(x), jnp.array(k), jnp.array(b), chunk_w=chunk
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_window_longer_than_input_raises(self):
+        with pytest.raises(AssertionError):
+            K.depthwise_conv(jnp.zeros((1, 2, 3)), jnp.zeros((2, 5)), jnp.zeros(2))
+
+
+# ---------------------------------------------------------------------------
+# standard convolution
+# ---------------------------------------------------------------------------
+
+
+class TestStandardConv:
+    @given(
+        t=st.integers(1, 2),
+        cin=st.integers(1, 6),
+        cout=st.integers(1, 40),
+        w_extra=st.integers(0, 100),
+        n=st.integers(1, 16),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_matches_ref(self, t, cin, cout, w_extra, n, seed):
+        rng = np.random.default_rng(seed)
+        w = n + w_extra
+        x = _randn(rng, t, cin, w)
+        k = _randn(rng, cout, cin, n)
+        b = _randn(rng, cout)
+        got = K.standard_conv(jnp.array(x), jnp.array(k), jnp.array(b))
+        assert_matches_ref(got, ref.standard_conv(x, k, b))
+
+    def test_fir_carrier(self, rng):
+        # §4.3: Cin=Cout=1, reversed taps = np.convolve(x, taps, 'valid')
+        x = _randn(rng, 1, 1, 300)
+        taps = _randn(rng, 24)
+        k = jnp.array(taps[::-1].reshape(1, 1, 24).copy())
+        out = K.standard_conv(jnp.array(x), k, jnp.zeros(1, F32))
+        want = np.convolve(x[0, 0], taps, "valid")
+        np.testing.assert_allclose(np.asarray(out)[0, 0], want, rtol=1e-4, atol=1e-4)
+
+    def test_unfold_carrier(self, rng):
+        # §4.4: identity kernel reproduces shifted copies
+        j = 5
+        x = _randn(rng, 1, 1, 40)
+        k = jnp.array(np.eye(j, dtype=F32).reshape(j, 1, j))
+        out = np.asarray(K.standard_conv(jnp.array(x), k, jnp.zeros(j, F32)))
+        for co in range(j):
+            np.testing.assert_array_equal(out[0, co], x[0, 0, co : co + 40 - j + 1])
+
+    @given(chunk=st.sampled_from([100, 513]), seed=st.integers(0, 2**31))
+    def test_chunked_equals_unchunked(self, chunk, seed):
+        rng = np.random.default_rng(seed)
+        x = _randn(rng, 1, 1, 1777)
+        k = _randn(rng, 8, 1, 9)
+        b = _randn(rng, 8)
+        want = K.standard_conv(jnp.array(x), jnp.array(k), jnp.array(b))
+        got = K.standard_conv_chunked(
+            jnp.array(x), jnp.array(k), jnp.array(b), chunk_w=chunk
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# VMEM estimates (the §Perf L1 profile inputs)
+# ---------------------------------------------------------------------------
+
+
+class TestVmemEstimates:
+    def test_default_blocks_fit_budget(self):
+        # note: the package __init__ re-exports kernel *functions* under the
+        # module names, so fetch the modules via importlib
+        import importlib
+
+        common = importlib.import_module("compile.kernels.common")
+        dw = importlib.import_module("compile.kernels.depthwise_conv")
+        fc = importlib.import_module("compile.kernels.fully_connected")
+        pw = importlib.import_module("compile.kernels.pointwise_conv")
+        sc = importlib.import_module("compile.kernels.standard_conv")
+
+        assert fc.vmem_estimate() <= common.VMEM_BUDGET
+        assert pw.vmem_estimate() <= common.VMEM_BUDGET
+        assert dw.vmem_estimate() <= common.VMEM_BUDGET
+        assert sc.vmem_estimate() <= common.VMEM_BUDGET
+
+    def test_estimate_scales_with_blocks(self):
+        import importlib
+
+        fc = importlib.import_module("compile.kernels.fully_connected")
+        assert fc.vmem_estimate(bm=16) > fc.vmem_estimate(bm=8)

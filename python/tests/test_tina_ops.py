@@ -1,0 +1,292 @@
+"""L2 correctness: every TINA op mapping vs numpy oracles, and agreement
+between the TINA mapping and the direct-jnp (jaxref) comparator.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import baselines as B
+from compile import coeffs
+from compile import tina_ops as T
+
+F32 = np.float32
+
+
+def _randn(rng, *shape):
+    return rng.standard_normal(shape).astype(F32)
+
+
+class TestArithmetic:
+    @given(h=st.integers(1, 40), w=st.integers(1, 40), seed=st.integers(0, 2**31))
+    def test_ewmult(self, h, w, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _randn(rng, h, w), _randn(rng, h, w)
+        np.testing.assert_allclose(T.ewmult(a, b), a * b, rtol=1e-5, atol=1e-5)
+
+    @given(h=st.integers(1, 40), w=st.integers(1, 40), seed=st.integers(0, 2**31))
+    def test_ewadd(self, h, w, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _randn(rng, h, w), _randn(rng, h, w)
+        np.testing.assert_allclose(T.ewadd(a, b), a + b, rtol=1e-5, atol=1e-5)
+
+    @given(
+        m=st.integers(1, 32),
+        l=st.integers(1, 48),
+        n=st.integers(1, 32),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matmul(self, m, l, n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = _randn(rng, m, l), _randn(rng, l, n)
+        np.testing.assert_allclose(T.matmul(x, y), x @ y, rtol=2e-4, atol=2e-4)
+
+    @given(l=st.integers(1, 5000), seed=st.integers(0, 2**31))
+    def test_summation(self, l, seed):
+        rng = np.random.default_rng(seed)
+        x = _randn(rng, l)
+        got = np.asarray(T.summation(x))
+        np.testing.assert_allclose(got, [x.sum()], rtol=1e-3, atol=1e-3)
+
+
+class TestFourier:
+    @given(
+        n=st.sampled_from([4, 16, 33, 64, 100]),
+        b=st.integers(1, 4),
+        seed=st.integers(0, 2**31),
+    )
+    def test_dft_real_input(self, n, b, seed):
+        rng = np.random.default_rng(seed)
+        x = _randn(rng, b, n)
+        re, im = T.dft(x)
+        z = np.fft.fft(x, axis=-1)
+        np.testing.assert_allclose(re, z.real, rtol=1e-3, atol=1e-3 * n)
+        np.testing.assert_allclose(im, z.imag, rtol=1e-3, atol=1e-3 * n)
+
+    @given(n=st.sampled_from([8, 32, 57]), seed=st.integers(0, 2**31))
+    def test_idft_inverts(self, n, seed):
+        rng = np.random.default_rng(seed)
+        x = _randn(rng, 2, n)
+        re, im = T.dft(x)
+        back_re, back_im = T.idft(re, im)
+        np.testing.assert_allclose(back_re, x, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(back_im, np.zeros_like(x), atol=1e-3)
+
+    def test_tina_matches_jaxref(self):
+        rng = np.random.default_rng(0)
+        x = _randn(rng, 4, 64)
+        tre, tim = T.dft(x)
+        jre, jim = B.dft(jnp.array(x))
+        np.testing.assert_allclose(tre, jre, rtol=1e-3, atol=1e-2)
+        np.testing.assert_allclose(tim, jim, rtol=1e-3, atol=1e-2)
+
+    def test_parseval(self):
+        # energy preserved: sum |X|^2 = N sum |x|^2
+        rng = np.random.default_rng(1)
+        x = _randn(rng, 1, 128)
+        re, im = T.dft(x)
+        lhs = np.sum(np.asarray(re) ** 2 + np.asarray(im) ** 2)
+        rhs = 128 * np.sum(x**2)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+class TestFirUnfold:
+    @given(
+        l=st.integers(70, 3000),
+        m=st.sampled_from([4, 16, 64]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_fir_matches_convolve(self, l, m, seed):
+        rng = np.random.default_rng(seed)
+        x = _randn(rng, 2, l)
+        taps = coeffs.fir_lowpass(m, 0.2)
+        got = T.fir(x, taps)
+        want = np.stack([np.convolve(r, taps, "valid") for r in x])
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_fir_lowpass_attenuates(self):
+        # a high-frequency tone should come out much smaller than a low one
+        n = 4096
+        t = np.arange(n)
+        lo = np.cos(2 * np.pi * 0.01 * t).astype(F32)[None, :]
+        hi = np.cos(2 * np.pi * 0.45 * t).astype(F32)[None, :]
+        taps = coeffs.fir_lowpass(64, 0.1)
+        out_lo = np.asarray(T.fir(lo, taps))
+        out_hi = np.asarray(T.fir(hi, taps))
+        assert np.abs(out_lo).mean() > 50 * np.abs(out_hi).mean()
+
+    @given(
+        l=st.integers(40, 2000),
+        j=st.sampled_from([2, 8, 32]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_unfold(self, l, j, seed):
+        rng = np.random.default_rng(seed)
+        x = _randn(rng, 1, l)
+        got = np.asarray(T.unfold(x, j))
+        assert got.shape == (1, l - j + 1, j)
+        want = np.stack([x[0, i : i + j] for i in range(l - j + 1)])
+        np.testing.assert_array_equal(got[0], want)
+
+    def test_unfold_paper_example(self):
+        # §4.4: X=[1,2,3,4], J=2 -> [[1,2],[2,3],[3,4]]
+        x = np.array([[1, 2, 3, 4]], dtype=F32)
+        got = np.asarray(T.unfold(x, 2))
+        np.testing.assert_array_equal(got[0], [[1, 2], [2, 3], [3, 4]])
+
+
+class TestPfb:
+    def _reference_fir(self, x, p, m):
+        proto = coeffs.pfb_prototype(p, m)
+        bank = coeffs.polyphase_decompose(proto, p)
+        b, l = x.shape
+        nspec = l // p
+        xp = x.reshape(b, nspec, p).transpose(0, 2, 1)
+        return np.stack(
+            [
+                np.stack([np.convolve(xp[bi, pi], bank[pi], "valid") for pi in range(p)])
+                for bi in range(b)
+            ]
+        )
+
+    @given(
+        p=st.sampled_from([4, 8, 32]),
+        m=st.sampled_from([2, 4, 8]),
+        nspec=st.integers(10, 64),
+        seed=st.integers(0, 2**31),
+    )
+    def test_pfb_fir(self, p, m, nspec, seed):
+        rng = np.random.default_rng(seed)
+        x = _randn(rng, 1, p * nspec)
+        got = T.pfb_fir(x, p, m)
+        want = self._reference_fir(x, p, m)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_pfb_full(self):
+        rng = np.random.default_rng(3)
+        p, m = 8, 4
+        x = _randn(rng, 2, p * 40)
+        re, im = T.pfb(x, p, m)
+        y = self._reference_fir(x, p, m)
+        z = np.fft.fft(y.transpose(0, 2, 1), axis=-1)
+        np.testing.assert_allclose(re, z.real, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(im, z.imag, rtol=1e-3, atol=1e-4)
+
+    def test_pfb_tina_matches_jaxref(self):
+        rng = np.random.default_rng(4)
+        p, m = 32, 8
+        x = _randn(rng, 1, p * 64)
+        tre, tim = T.pfb(x, p, m)
+        jre, jim = B.pfb(jnp.array(x), p, m)
+        np.testing.assert_allclose(tre, jre, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(tim, jim, rtol=1e-3, atol=1e-4)
+
+    def test_bf16_close_to_f32(self):
+        rng = np.random.default_rng(5)
+        p, m = 32, 8
+        x = _randn(rng, 1, p * 64)
+        f32 = np.asarray(T.pfb_fir(x, p, m, dtype="f32"))
+        b16 = np.asarray(T.pfb_fir(x, p, m, dtype="bf16"))
+        # bf16 has ~2^-8 relative precision; allow generous headroom
+        np.testing.assert_allclose(b16, f32, rtol=0.12, atol=0.02)
+
+    def test_tone_channelization(self):
+        # a tone at channel k's center frequency concentrates power there
+        p, m = 8, 4
+        l = p * 128
+        t = np.arange(l)
+        x = np.cos(2 * np.pi * 3.0 * t / p).astype(F32)[None, :]
+        re, im = T.pfb(x, p, m)
+        power = np.asarray(re) ** 2 + np.asarray(im) ** 2
+        mean_power = power.mean(axis=1)[0]  # (P,)
+        peak = int(np.argmax(mean_power))
+        assert peak in (3, p - 3), f"peak channel {peak}: {mean_power}"
+
+    def test_indivisible_length_rejected(self):
+        with pytest.raises(AssertionError):
+            T.pfb_fir(np.zeros((1, 65), F32), 8, 4)
+
+
+class TestCoeffs:
+    def test_fir_lowpass_dc_gain(self):
+        h = coeffs.fir_lowpass(64, 0.25)
+        np.testing.assert_allclose(h.sum(), 1.0, rtol=1e-6)
+
+    def test_prototype_symmetry(self):
+        h = coeffs.pfb_prototype(16, 8)
+        np.testing.assert_allclose(h, h[::-1], atol=1e-7)
+
+    def test_polyphase_layout(self):
+        h = np.arange(8, dtype=F32)
+        bank = coeffs.polyphase_decompose(h, 4)
+        np.testing.assert_array_equal(bank, [[0, 4], [1, 5], [2, 6], [3, 7]])
+
+    def test_dft_matrix_unitary_up_to_n(self):
+        fr, fi = coeffs.dft_matrix(16)
+        f = fr + 1j * fi
+        np.testing.assert_allclose(f @ f.conj().T, 16 * np.eye(16), atol=1e-3)
+
+    def test_idft_is_inverse(self):
+        fr, fi = coeffs.dft_matrix(8)
+        ir, ii = coeffs.idft_matrix(8)
+        f = fr + 1j * fi
+        inv = ir + 1j * ii
+        np.testing.assert_allclose(f @ inv, np.eye(8), atol=1e-6)
+
+    def test_cutoff_validation(self):
+        with pytest.raises(ValueError):
+            coeffs.fir_lowpass(8, 0.7)
+
+
+class TestStft:
+    """Extension op (paper future work): STFT from three building blocks."""
+
+    def _reference(self, x, nfft, hop):
+        win = coeffs.hamming(nfft)
+        b, l = x.shape
+        frames = (l - nfft) // hop + 1
+        return np.stack(
+            [
+                np.fft.fft(
+                    np.stack([x[bi, i * hop : i * hop + nfft] * win for i in range(frames)]),
+                    axis=-1,
+                )
+                for bi in range(b)
+            ]
+        )
+
+    @given(
+        l=st.integers(300, 3000),
+        nfft=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_reference(self, l, nfft, seed):
+        rng = np.random.default_rng(seed)
+        hop = nfft // 2
+        x = _randn(rng, 1, l)
+        re, im = T.stft(x, nfft, hop)
+        want = self._reference(x, nfft, hop)
+        assert re.shape == want.shape
+        np.testing.assert_allclose(re, want.real, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(im, want.imag, rtol=1e-3, atol=1e-3)
+
+    def test_tina_matches_jaxref(self):
+        rng = np.random.default_rng(6)
+        x = _randn(rng, 2, 2048)
+        tre, tim = T.stft(x, 256, 128)
+        jre, jim = B.stft(jnp.array(x), 256, 128)
+        np.testing.assert_allclose(tre, jre, rtol=1e-3, atol=1e-2)
+        np.testing.assert_allclose(tim, jim, rtol=1e-3, atol=1e-2)
+
+    def test_chirp_ridge_moves(self):
+        # a linear chirp's peak bin should increase over frames
+        l, nfft, hop = 8192, 128, 64
+        t = np.arange(l, dtype=np.float64)
+        f0, f1 = 0.02, 0.35
+        phase = 2 * np.pi * (f0 * t + (f1 - f0) * t**2 / (2 * l))
+        x = np.cos(phase).astype(F32)[None, :]
+        re, im = T.stft(x, nfft, hop)
+        power = np.asarray(re) ** 2 + np.asarray(im) ** 2
+        peaks = power[0, :, : nfft // 2].argmax(axis=-1)
+        assert peaks[-1] > peaks[0] + 10, f"ridge did not move: {peaks[0]} -> {peaks[-1]}"

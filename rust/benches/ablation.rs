@@ -1,0 +1,250 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!  1. dynamic batching on/off — throughput of B=1 FIR requests;
+//!  2. fused PFB artifact vs two-stage pipeline (pfb_fir -> dft) — the L2
+//!     fusion benefit;
+//!  3. executable cache — first-execution (compile) vs steady-state cost;
+//!  4. PJRT artifact vs pure-rust interpreter per op — what the compiled
+//!     graph buys over naive layer-by-layer evaluation.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{fmt, FigureBench};
+use std::sync::Arc;
+use tina::benchkit::{black_box, Table};
+use tina::coordinator::{
+    Coordinator, CoordinatorConfig, ImplPref, OpKind, OpRequest, Pipeline,
+};
+use tina::runtime::Engine;
+use tina::tensor::Tensor;
+
+fn main() {
+    batching_ablation();
+    fusion_ablation();
+    compile_cache_ablation();
+    interp_vs_pjrt();
+    measurement_protocol_ablation();
+}
+
+/// 5. paper protocol (device-resident inputs) vs full host round-trip —
+/// quantifies what the literal upload/fetch adds per request size.
+fn measurement_protocol_ablation() {
+    let fb = FigureBench::new();
+    if fb.engine.is_none() {
+        return;
+    }
+    let mut t = Table::new(
+        "ablation 5: device-resident (paper protocol) vs host round-trip",
+        &["artifact", "device-resident", "host round-trip", "upload+fetch overhead"],
+    );
+    for (name, shape) in [
+        ("fir_tina_f32_B1_L1024", vec![1usize, 1024]),
+        ("fir_tina_f32_B1_L65536", vec![1, 65536]),
+        ("pfb_tina_f32_B1_L16384", vec![1, 16384]),
+        ("matmul_tina_f32_N256", vec![256, 256]),
+    ] {
+        let inputs: Vec<Tensor> = if name.starts_with("matmul") {
+            vec![Tensor::randn(&shape, 1), Tensor::randn(&shape, 2)]
+        } else {
+            vec![Tensor::randn(&shape, 1)]
+        };
+        let (Some(dev), Some(host)) = (
+            fb.bench_artifact(name, &inputs),
+            fb.bench_artifact_host(name, &inputs),
+        ) else {
+            continue;
+        };
+        t.row(vec![
+            name.into(),
+            fmt(dev.median_ns),
+            fmt(host.median_ns),
+            format!("{:.0}%", 100.0 * (host.median_ns - dev.median_ns) / dev.median_ns.max(1.0)),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+/// 1. batching on/off throughput.
+fn batching_ablation() {
+    let mut t = Table::new(
+        "ablation 1: dynamic batching (200 x B=1 FIR L=4096 requests)",
+        &["batching", "total", "req/s", "batches", "padded rows"],
+    );
+    for batching in [true, false] {
+        let Ok(coord) = Coordinator::from_dir(
+            "artifacts",
+            CoordinatorConfig {
+                batching,
+                ..Default::default()
+            },
+        ) else {
+            eprintln!("no artifacts; skipping batching ablation");
+            return;
+        };
+        let coord = Arc::new(coord);
+        let _ = coord.warmup(Some("fir"));
+        let n = 200;
+        let t0 = std::time::Instant::now();
+        let slots: Vec<_> = (0..n)
+            .map(|i| {
+                let x = Tensor::randn(&[1, 4096], i as u64);
+                coord.submit(OpRequest::new(OpKind::Fir, vec![x]).with_impl(ImplPref::Tina))
+            })
+            .collect();
+        for s in slots {
+            s.wait().expect("request");
+        }
+        let dt = t0.elapsed();
+        let m = coord.metrics();
+        t.row(vec![
+            if batching { "on" } else { "off" }.into(),
+            format!("{dt:?}"),
+            format!("{:.0}", n as f64 / dt.as_secs_f64()),
+            m.batches_executed
+                .load(std::sync::atomic::Ordering::Relaxed)
+                .to_string(),
+            m.padded_rows
+                .load(std::sync::atomic::Ordering::Relaxed)
+                .to_string(),
+        ]);
+        coord.shutdown();
+    }
+    println!("{}", t.render());
+}
+
+/// 2. fused pfb artifact vs two-stage pipeline.
+fn fusion_ablation() {
+    let Ok(coord) = Coordinator::from_dir("artifacts", CoordinatorConfig::default()) else {
+        return;
+    };
+    let cfg = tina::benchkit::BenchConfig::from_env();
+    let x = Tensor::randn(&[1, 16384], 31);
+    let mut t = Table::new(
+        "ablation 2: fused PFB graph vs two-stage chain (L=16384)",
+        &["variant", "median", "note"],
+    );
+
+    let fused_req =
+        OpRequest::new(OpKind::Pfb, vec![x.clone()]).with_impl(ImplPref::Tina);
+    coord.execute(fused_req.clone()).expect("warm fused");
+    let fused = tina::benchkit::run(&cfg, || {
+        black_box(coord.execute(fused_req.clone()).unwrap());
+    })
+    .summary();
+    t.row(vec![
+        "fused artifact".into(),
+        fmt(fused.median_ns),
+        "single lowered graph (FIR bank + DFT)".into(),
+    ]);
+
+    let chain = Pipeline::pfb_two_stage();
+    chain.run(&coord, vec![x.clone()]).expect("warm chain");
+    let chained = tina::benchkit::run(&cfg, || {
+        black_box(chain.run(&coord, vec![x.clone()]).unwrap());
+    })
+    .summary();
+    t.row(vec![
+        "two-stage chain".into(),
+        fmt(chained.median_ns),
+        "pfb_fir artifact + dft stage, host round-trip".into(),
+    ]);
+    t.row(vec![
+        "fusion benefit".into(),
+        format!("{:.2}x", chained.median_ns / fused.median_ns.max(1.0)),
+        "chained / fused".into(),
+    ]);
+    println!("{}", t.render());
+    coord.shutdown();
+}
+
+/// 3. compile-vs-cached execution cost.
+fn compile_cache_ablation() {
+    let Ok(engine) = Engine::from_dir("artifacts") else {
+        return;
+    };
+    let mut t = Table::new(
+        "ablation 3: executable cache (pfb_tina_f32_B1_L16384)",
+        &["phase", "time"],
+    );
+    let name = "pfb_tina_f32_B1_L16384";
+    if engine.registry().get(name).is_none() {
+        return;
+    }
+    let x = Tensor::randn(&[1, 16384], 41);
+    let t0 = std::time::Instant::now();
+    engine.execute(name, std::slice::from_ref(&x)).unwrap();
+    t.row(vec!["first (compile + run)".into(), format!("{:?}", t0.elapsed())]);
+    let t1 = std::time::Instant::now();
+    engine.execute(name, std::slice::from_ref(&x)).unwrap();
+    t.row(vec!["second (cached)".into(), format!("{:?}", t1.elapsed())]);
+    let stats = engine.stats();
+    t.row(vec![
+        "engine stats".into(),
+        format!(
+            "compiles={} executes={} compile={} execute={}",
+            stats.compiles,
+            stats.executions,
+            fmt(stats.compile_ns as f64),
+            fmt(stats.execute_ns as f64)
+        ),
+    ]);
+    println!("{}", t.render());
+}
+
+/// 4. interpreter vs PJRT per op.
+fn interp_vs_pjrt() {
+    let fb = FigureBench::new();
+    let Some(engine) = fb.engine.as_ref() else {
+        return;
+    };
+    let router = tina::coordinator::Router::new(engine.registry().clone(), Default::default());
+    let mut t = Table::new(
+        "ablation 4: pure-rust interpreter vs compiled PJRT artifact",
+        &["op", "interp median", "pjrt median", "pjrt speedup"],
+    );
+    let cases: Vec<(OpKind, Vec<Tensor>, String)> = vec![
+        (
+            OpKind::Fir,
+            vec![Tensor::randn(&[1, 16384], 1)],
+            "fir_tina_f32_B1_L16384".into(),
+        ),
+        (
+            OpKind::Unfold,
+            vec![Tensor::randn(&[1, 16384], 2)],
+            "unfold_tina_f32_B1_L16384".into(),
+        ),
+        (
+            OpKind::Pfb,
+            vec![Tensor::randn(&[1, 16384], 3)],
+            "pfb_tina_f32_B1_L16384".into(),
+        ),
+        (
+            OpKind::MatMul,
+            vec![Tensor::randn(&[256, 256], 4), Tensor::randn(&[256, 256], 5)],
+            "matmul_tina_f32_N256".into(),
+        ),
+    ];
+    for (op, inputs, artifact) in cases {
+        let req = OpRequest::new(op, inputs.clone()).with_impl(ImplPref::Interp);
+        let Ok(tina::coordinator::Target::Interp { key }) = router.route(&req) else {
+            continue;
+        };
+        let Ok(it) = router.interpreter(&key, &req) else {
+            continue;
+        };
+        let iv = fb.bench_fn(|| {
+            black_box(it.run(&inputs).unwrap());
+        });
+        let Some(pv) = fb.bench_artifact(&artifact, &inputs) else {
+            continue;
+        };
+        t.row(vec![
+            op.as_str().into(),
+            fmt(iv.median_ns),
+            fmt(pv.median_ns),
+            format!("{:.1}x", pv.speedup_vs(&iv)),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,134 @@
+//! Shared helpers for the figure-reproduction benches.
+//!
+//! Every bench binary prints the same table format the paper's figures
+//! plot: one row per (implementation, input size) with median runtime and
+//! the speedup over the naive CPU baseline (the paper's NumPy
+//! denominator).  CSV copies land in `target/bench_results/` so
+//! EXPERIMENTS.md numbers can be regenerated mechanically.
+
+use std::path::PathBuf;
+use tina::benchkit::{BenchConfig, Stats, Summary, Table};
+use tina::runtime::Engine;
+
+pub struct FigureBench {
+    pub engine: Option<Engine>,
+    pub cfg: BenchConfig,
+}
+
+impl FigureBench {
+    /// Load the PJRT engine if artifacts exist (benches degrade gracefully
+    /// to baseline-only rows without them).
+    pub fn new() -> FigureBench {
+        let engine = Engine::from_dir("artifacts")
+            .map_err(|e| eprintln!("note: no artifacts ({e}); PJRT rows skipped"))
+            .ok();
+        FigureBench {
+            engine,
+            cfg: BenchConfig::from_env(),
+        }
+    }
+
+    /// Measure one artifact execution under the paper's protocol: the
+    /// executable is pre-compiled and the inputs are pre-uploaded to device
+    /// buffers ("the measurement starts once the input data has been copied
+    /// to the GPU memory", §5); the timed region is compute + result fetch.
+    pub fn bench_artifact(
+        &self,
+        name: &str,
+        inputs: &[tina::tensor::Tensor],
+    ) -> Option<Summary> {
+        let engine = self.engine.as_ref()?;
+        engine.registry().get(name)?;
+        if let Err(e) = engine.prepare(name) {
+            eprintln!("prepare {name}: {e}");
+            return None;
+        }
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| engine.upload(t).expect("upload"))
+            .collect();
+        let stats: Stats = tina::benchkit::run(&self.cfg, || {
+            tina::benchkit::black_box(
+                engine.execute_buffers(name, &buffers).expect("execute"),
+            );
+        });
+        Some(stats.summary())
+    }
+
+    /// Measure the full host round-trip (literal upload + execute + fetch):
+    /// what a serving request actually pays.  Used by the ablation bench.
+    pub fn bench_artifact_host(
+        &self,
+        name: &str,
+        inputs: &[tina::tensor::Tensor],
+    ) -> Option<Summary> {
+        let engine = self.engine.as_ref()?;
+        engine.registry().get(name)?;
+        engine.prepare(name).ok()?;
+        let stats: Stats = tina::benchkit::run(&self.cfg, || {
+            tina::benchkit::black_box(engine.execute(name, inputs).expect("execute"));
+        });
+        Some(stats.summary())
+    }
+
+    pub fn bench_fn(&self, mut f: impl FnMut()) -> Summary {
+        tina::benchkit::run(&self.cfg, &mut f).summary()
+    }
+}
+
+/// One figure panel: rows of (impl, size) -> summary, rendered vs naive.
+pub struct Panel {
+    pub title: String,
+    /// (impl name, size label, summary, naive summary at that size)
+    rows: Vec<(String, String, Summary, Summary)>,
+}
+
+impl Panel {
+    pub fn new(title: &str) -> Panel {
+        Panel {
+            title: title.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, impl_name: &str, size: &str, s: Summary, naive: Summary) {
+        self.rows.push((impl_name.into(), size.into(), s, naive));
+    }
+
+    pub fn render_and_save(&self, csv_name: &str) {
+        let mut t = Table::new(
+            &self.title,
+            &["impl", "size", "median", "mean", "p95", "speedup-vs-naive"],
+        );
+        for (imp, size, s, naive) in &self.rows {
+            t.row(vec![
+                imp.clone(),
+                size.clone(),
+                fmt(s.median_ns),
+                fmt(s.mean_ns),
+                fmt(s.p95_ns),
+                format!("{:.2}x", s.speedup_vs(naive)),
+            ]);
+        }
+        println!("{}", t.render());
+        let dir = PathBuf::from("target/bench_results");
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::write(dir.join(csv_name), t.to_csv());
+    }
+}
+
+pub fn fmt(ns: f64) -> String {
+    tina::util::histogram::fmt_ns(ns.max(0.0) as u64)
+}
+
+/// Parse sizes override: TINA_BENCH_SIZES="32,64" limits sweeps (CI knob).
+pub fn filter_sizes(default: &[usize]) -> Vec<usize> {
+    match std::env::var("TINA_BENCH_SIZES") {
+        Ok(s) => s
+            .split(',')
+            .filter_map(|x| x.trim().parse().ok())
+            .filter(|x| default.contains(x))
+            .collect(),
+        Err(_) => default.to_vec(),
+    }
+}

@@ -1,0 +1,152 @@
+//! Fig. 1 reproduction: runtime of the arithmetic functions vs input size.
+//!
+//! Panels: (a) elementwise multiply, (b) matrix-matrix multiply,
+//! (c) elementwise add, (d) summation.  Implementations:
+//!   naive      — NumPy-on-CPU analog (the paper's baseline)
+//!   optimized  — CuPy analog (per-op optimized native, no fusion)
+//!   interp     — pure-rust TINA layer interpreter
+//!   tina       — TINA NN-layer artifact on PJRT (the paper's TINA-32)
+//!   jaxref     — direct-jnp artifact on PJRT (the paper's JAX)
+//!
+//! Expected shape (paper §5.1): TINA competitive-to-fastest on the
+//! multiply-based panels; optimized/CuPy wins the trivial add panel;
+//! everything is close on summation.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{filter_sizes, FigureBench, Panel};
+use tina::baselines::{naive, optimized};
+use tina::benchkit::black_box;
+use tina::coordinator::{OpKind, OpRequest, Router, RouterConfig, Target};
+use tina::tensor::Tensor;
+
+fn main() {
+    let fb = FigureBench::new();
+    let router = fb
+        .engine
+        .as_ref()
+        .map(|e| Router::new(e.registry().clone(), RouterConfig::default()));
+
+    elementwise(&fb, router.as_ref(), "ewmult", "fig1a_ewmult.csv");
+    matmul_panel(&fb, router.as_ref());
+    elementwise(&fb, router.as_ref(), "ewadd", "fig1c_ewadd.csv");
+    summation_panel(&fb, router.as_ref());
+}
+
+fn interp_of(router: Option<&Router>, op: OpKind, inputs: &[Tensor]) -> Option<std::sync::Arc<tina::tina::Interpreter>> {
+    let router = router?;
+    let req = OpRequest::new(op, inputs.to_vec()).with_impl(tina::coordinator::ImplPref::Interp);
+    match router.route(&req).ok()? {
+        Target::Interp { key } => router.interpreter(&key, &req).ok(),
+        _ => None,
+    }
+}
+
+fn elementwise(fb: &FigureBench, router: Option<&Router>, op_name: &str, csv: &str) {
+    let op = OpKind::parse(op_name).unwrap();
+    let mut panel = Panel::new(&format!(
+        "Fig 1{}: {} runtime vs N (N x N matrices)",
+        if op_name == "ewmult" { 'a' } else { 'c' },
+        op_name
+    ));
+    for n in filter_sizes(&[32, 64, 128, 256]) {
+        let a = Tensor::randn(&[n, n], 1);
+        let b = Tensor::randn(&[n, n], 2);
+        let size = format!("{n}x{n}");
+
+        let nv = fb.bench_fn(|| {
+            black_box(match op {
+                OpKind::EwMult => naive::ewmult(&a, &b).unwrap(),
+                _ => naive::ewadd(&a, &b).unwrap(),
+            });
+        });
+        panel.add("naive", &size, nv, nv);
+
+        let ov = fb.bench_fn(|| {
+            black_box(match op {
+                OpKind::EwMult => optimized::ewmult(&a, &b).unwrap(),
+                _ => optimized::ewadd(&a, &b).unwrap(),
+            });
+        });
+        panel.add("optimized", &size, ov, nv);
+
+        if let Some(it) = interp_of(router, op, &[a.clone(), b.clone()]) {
+            let iv = fb.bench_fn(|| {
+                black_box(it.run(&[a.clone(), b.clone()]).unwrap());
+            });
+            panel.add("interp", &size, iv, nv);
+        }
+
+        for impl_ in ["tina", "jaxref"] {
+            let name = format!("{op_name}_{impl_}_f32_N{n}");
+            if let Some(s) = fb.bench_artifact(&name, &[a.clone(), b.clone()]) {
+                panel.add(impl_, &size, s, nv);
+            }
+        }
+    }
+    panel.render_and_save(csv);
+}
+
+fn matmul_panel(fb: &FigureBench, router: Option<&Router>) {
+    let mut panel = Panel::new("Fig 1b: matmul runtime vs N (N x N matrices)");
+    for n in filter_sizes(&[32, 64, 128, 256]) {
+        let a = Tensor::randn(&[n, n], 3);
+        let b = Tensor::randn(&[n, n], 4);
+        let size = format!("{n}x{n}");
+
+        let nv = fb.bench_fn(|| {
+            black_box(naive::matmul(&a, &b).unwrap());
+        });
+        panel.add("naive", &size, nv, nv);
+        let ov = fb.bench_fn(|| {
+            black_box(optimized::matmul(&a, &b).unwrap());
+        });
+        panel.add("optimized", &size, ov, nv);
+
+        if let Some(it) = interp_of(router, OpKind::MatMul, &[a.clone(), b.clone()]) {
+            let iv = fb.bench_fn(|| {
+                black_box(it.run(&[a.clone(), b.clone()]).unwrap());
+            });
+            panel.add("interp", &size, iv, nv);
+        }
+        for impl_ in ["tina", "jaxref"] {
+            let name = format!("matmul_{impl_}_f32_N{n}");
+            if let Some(s) = fb.bench_artifact(&name, &[a.clone(), b.clone()]) {
+                panel.add(impl_, &size, s, nv);
+            }
+        }
+    }
+    panel.render_and_save("fig1b_matmul.csv");
+}
+
+fn summation_panel(fb: &FigureBench, router: Option<&Router>) {
+    let mut panel = Panel::new("Fig 1d: summation runtime vs L (vector length)");
+    for l in filter_sizes(&[1024, 4096, 16384, 65536]) {
+        let x = Tensor::randn(&[l], 5);
+        let size = format!("L={l}");
+
+        let nv = fb.bench_fn(|| {
+            black_box(naive::summation(&x));
+        });
+        panel.add("naive", &size, nv, nv);
+        let ov = fb.bench_fn(|| {
+            black_box(optimized::summation(&x));
+        });
+        panel.add("optimized", &size, ov, nv);
+
+        if let Some(it) = interp_of(router, OpKind::Summation, &[x.clone()]) {
+            let iv = fb.bench_fn(|| {
+                black_box(it.run(std::slice::from_ref(&x)).unwrap());
+            });
+            panel.add("interp", &size, iv, nv);
+        }
+        for impl_ in ["tina", "jaxref"] {
+            let name = format!("summation_{impl_}_f32_L{l}");
+            if let Some(s) = fb.bench_artifact(&name, std::slice::from_ref(&x)) {
+                panel.add(impl_, &size, s, nv);
+            }
+        }
+    }
+    panel.render_and_save("fig1d_summation.csv");
+}

@@ -1,0 +1,160 @@
+//! Fig. 2 reproduction: runtime of the signal-processing functions vs
+//! input size.
+//!
+//! Panels: (a) DFT, (b) IDFT, (c) FIR filter, (d) unfolding.
+//!
+//! Expected shape (paper §5.1): the direct-jnp path (jaxref, which lowers
+//! to the native FFT op) leads on DFT/IDFT with TINA second; on the
+//! loop-heavy FIR and unfolding panels the compiled TINA graphs win by
+//! orders of magnitude over the naive loop baseline.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{filter_sizes, FigureBench, Panel};
+use tina::baselines::{naive, optimized};
+use tina::benchkit::black_box;
+use tina::coordinator::{ImplPref, OpKind, OpRequest, Router, RouterConfig, Target};
+use tina::tensor::{ComplexTensor, Tensor};
+
+fn main() {
+    let fb = FigureBench::new();
+    let router = fb
+        .engine
+        .as_ref()
+        .map(|e| Router::new(e.registry().clone(), RouterConfig::default()));
+    dft_panel(&fb, router.as_ref(), false);
+    dft_panel(&fb, router.as_ref(), true);
+    fir_panel(&fb, router.as_ref());
+    unfold_panel(&fb, router.as_ref());
+}
+
+fn interp_of(
+    router: Option<&Router>,
+    op: OpKind,
+    inputs: &[Tensor],
+) -> Option<std::sync::Arc<tina::tina::Interpreter>> {
+    let router = router?;
+    let req = OpRequest::new(op, inputs.to_vec()).with_impl(ImplPref::Interp);
+    match router.route(&req).ok()? {
+        Target::Interp { key } => router.interpreter(&key, &req).ok(),
+        _ => None,
+    }
+}
+
+fn dft_panel(fb: &FigureBench, router: Option<&Router>, inverse: bool) {
+    let (label, csv, opname) = if inverse {
+        ("Fig 2b: IDFT runtime vs N (batch of 4)", "fig2b_idft.csv", "idft")
+    } else {
+        ("Fig 2a: DFT runtime vs N (batch of 4)", "fig2a_dft.csv", "dft")
+    };
+    let mut panel = Panel::new(label);
+    for n in filter_sizes(&[64, 128, 256, 512]) {
+        let b = 4;
+        let re = Tensor::randn(&[b, n], 11);
+        let im = Tensor::randn(&[b, n], 12);
+        let size = format!("N={n}");
+        let z = ComplexTensor::new(re.clone(), im.clone()).unwrap();
+        let zr = ComplexTensor::from_real(re.clone());
+
+        let nv = fb.bench_fn(|| {
+            black_box(if inverse {
+                naive::idft(&z).unwrap()
+            } else {
+                naive::dft(&zr).unwrap()
+            });
+        });
+        panel.add("naive", &size, nv, nv);
+        let ov = fb.bench_fn(|| {
+            black_box(if inverse {
+                optimized::idft(&z).unwrap()
+            } else {
+                optimized::dft(&zr).unwrap()
+            });
+        });
+        panel.add("optimized(FFT)", &size, ov, nv);
+
+        let inputs: Vec<Tensor> = if inverse {
+            vec![re.clone(), im.clone()]
+        } else {
+            vec![re.clone()]
+        };
+        let op = if inverse { OpKind::Idft } else { OpKind::Dft };
+        if let Some(it) = interp_of(router, op, &inputs) {
+            let iv = fb.bench_fn(|| {
+                black_box(it.run(&inputs).unwrap());
+            });
+            panel.add("interp", &size, iv, nv);
+        }
+        for impl_ in ["tina", "jaxref"] {
+            let name = format!("{opname}_{impl_}_f32_B{b}_N{n}");
+            if let Some(s) = fb.bench_artifact(&name, &inputs) {
+                panel.add(impl_, &size, s, nv);
+            }
+        }
+    }
+    panel.render_and_save(csv);
+}
+
+fn fir_panel(fb: &FigureBench, router: Option<&Router>) {
+    let mut panel = Panel::new("Fig 2c: FIR (64 taps) runtime vs L");
+    let taps = tina::dsp::fir_lowpass(64, 0.25).unwrap();
+    for l in filter_sizes(&[1024, 4096, 16384, 65536]) {
+        let x = Tensor::randn(&[1, l], 13);
+        let size = format!("L={l}");
+
+        let nv = fb.bench_fn(|| {
+            black_box(naive::fir(&x, &taps).unwrap());
+        });
+        panel.add("naive", &size, nv, nv);
+        let ov = fb.bench_fn(|| {
+            black_box(optimized::fir(&x, &taps).unwrap());
+        });
+        panel.add("optimized", &size, ov, nv);
+
+        if let Some(it) = interp_of(router, OpKind::Fir, std::slice::from_ref(&x)) {
+            let iv = fb.bench_fn(|| {
+                black_box(it.run(std::slice::from_ref(&x)).unwrap());
+            });
+            panel.add("interp", &size, iv, nv);
+        }
+        for impl_ in ["tina", "jaxref"] {
+            let name = format!("fir_{impl_}_f32_B1_L{l}");
+            if let Some(s) = fb.bench_artifact(&name, std::slice::from_ref(&x)) {
+                panel.add(impl_, &size, s, nv);
+            }
+        }
+    }
+    panel.render_and_save("fig2c_fir.csv");
+}
+
+fn unfold_panel(fb: &FigureBench, router: Option<&Router>) {
+    let mut panel = Panel::new("Fig 2d: unfolding (J=32) runtime vs L");
+    for l in filter_sizes(&[1024, 4096, 16384, 65536]) {
+        let x = Tensor::randn(&[1, l], 14);
+        let size = format!("L={l}");
+
+        let nv = fb.bench_fn(|| {
+            black_box(naive::unfold(&x, 32).unwrap());
+        });
+        panel.add("naive", &size, nv, nv);
+        let ov = fb.bench_fn(|| {
+            black_box(optimized::unfold(&x, 32).unwrap());
+        });
+        panel.add("optimized", &size, ov, nv);
+
+        if let Some(it) = interp_of(router, OpKind::Unfold, std::slice::from_ref(&x)) {
+            let iv = fb.bench_fn(|| {
+                black_box(it.run(std::slice::from_ref(&x)).unwrap());
+            });
+            panel.add("interp", &size, iv, nv);
+        }
+        for impl_ in ["tina", "jaxref"] {
+            let name = format!("unfold_{impl_}_f32_B1_L{l}");
+            if let Some(s) = fb.bench_artifact(&name, std::slice::from_ref(&x)) {
+                panel.add(impl_, &size, s, nv);
+            }
+        }
+    }
+    panel.render_and_save("fig2d_unfold.csv");
+}

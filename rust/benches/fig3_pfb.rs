@@ -1,0 +1,66 @@
+//! Fig. 3 reproduction: PFB speedups over the naive CPU baseline.
+//!
+//! Left column  — subfiltered signals only (the polyphase FIR bank);
+//! Right column — full PFB (FIR bank + Fourier transform).
+//!
+//! Implementations per the paper: CuPy-analog (optimized), TINA 32-bit,
+//! TINA 16-bit (bf16 compute), JAX-direct — all as speedup over naive.
+//! The paper's headline: TINA-32 25-80x, TINA-16 20-30x, JAX 6-8x on a
+//! T4; the *ordering and growth with L* is the reproduction target here,
+//! not the absolute GPU factors (DESIGN.md §3).
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{filter_sizes, FigureBench, Panel};
+use tina::baselines::{naive, optimized};
+use tina::benchkit::black_box;
+use tina::dsp::PfbConfig;
+use tina::tensor::Tensor;
+
+const P: usize = 32;
+const M: usize = 8;
+
+fn main() {
+    let fb = FigureBench::new();
+    let cfg = PfbConfig::new(P, M);
+    column(&fb, cfg, "pfb_fir", "Fig 3 left: PFB FIR bank (subfiltered) speedups", "fig3_left_pfb_fir.csv");
+    column(&fb, cfg, "pfb", "Fig 3 right: full PFB (FIR + DFT) speedups", "fig3_right_pfb.csv");
+}
+
+fn column(fb: &FigureBench, cfg: PfbConfig, op: &str, title: &str, csv: &str) {
+    let mut panel = Panel::new(title);
+    for l in filter_sizes(&[4096, 16384, 65536]) {
+        let x = Tensor::randn(&[1, l], 21);
+        let size = format!("L={l}");
+
+        let nv = fb.bench_fn(|| {
+            black_box(if op == "pfb" {
+                let _ = naive::pfb(&x, cfg).unwrap();
+            } else {
+                let _ = naive::pfb_fir(&x, cfg).unwrap();
+            });
+        });
+        panel.add("naive", &size, nv, nv);
+
+        let ov = fb.bench_fn(|| {
+            black_box(if op == "pfb" {
+                let _ = optimized::pfb(&x, cfg).unwrap();
+            } else {
+                let _ = optimized::pfb_fir(&x, cfg).unwrap();
+            });
+        });
+        panel.add("optimized (CuPy analog)", &size, ov, nv);
+
+        for (label, artifact) in [
+            ("TINA 32-bit", format!("{op}_tina_f32_B1_L{l}")),
+            ("TINA 16-bit", format!("{op}_tina_bf16_B1_L{l}")),
+            ("JAX direct", format!("{op}_jaxref_f32_B1_L{l}")),
+        ] {
+            if let Some(s) = fb.bench_artifact(&artifact, std::slice::from_ref(&x)) {
+                panel.add(label, &size, s, nv);
+            }
+        }
+    }
+    panel.render_and_save(csv);
+}

@@ -1,0 +1,14 @@
+//! CPU comparator implementations for the paper's evaluation (DESIGN.md §3):
+//!
+//! * [`naive`] — the **NumPy-on-CPU analog**: clear, single-threaded,
+//!   per-op scalar code.  This is the denominator of every Fig. 3 speedup.
+//! * [`optimized`] — the **CuPy analog**: per-op vendor-quality native code
+//!   (blocked matmul, multithreading, radix-2 FFT) but *no* cross-op graph
+//!   fusion, which is exactly what distinguishes CuPy from the compiled
+//!   TINA/JAX graphs in the paper.
+//!
+//! Both expose the same op surface as the TINA artifacts so the bench
+//! harness can sweep implementations uniformly.
+
+pub mod naive;
+pub mod optimized;

@@ -1,0 +1,221 @@
+//! The NumPy-on-CPU analog: straightforward single-threaded
+//! implementations of every benchmarked op.  Clarity over speed — this is
+//! the paper's baseline denominator, not a contender.
+
+use crate::dsp::{self, PfbConfig};
+use crate::tensor::{ComplexTensor, Tensor};
+use anyhow::{bail, Result};
+
+/// Elementwise multiply (Fig. 1a).
+pub fn ewmult(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    crate::tensor::mul(a, b)
+}
+
+/// Elementwise add (Fig. 1c).
+pub fn ewadd(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    crate::tensor::add(a, b)
+}
+
+/// Matrix-matrix multiply (Fig. 1b): triple loop.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    crate::tensor::matmul(a, b)
+}
+
+/// Summation (Fig. 1d): sequential accumulation.
+pub fn summation(x: &Tensor) -> f32 {
+    // deliberately the simplest possible loop (numpy's np.sum is smarter,
+    // but this is the "naive CPU" yardstick; accuracy checked to tolerance)
+    let mut acc = 0.0f64;
+    for &v in x.data() {
+        acc += v as f64;
+    }
+    acc as f32
+}
+
+/// DFT of (B, N) real or complex data (Fig. 2a): direct O(N^2).
+pub fn dft(x: &ComplexTensor) -> Result<ComplexTensor> {
+    dsp::dft_direct(x)
+}
+
+/// IDFT via the inverse DFM (Fig. 2b): direct O(N^2).
+pub fn idft(z: &ComplexTensor) -> Result<ComplexTensor> {
+    if z.re.rank() != 2 {
+        bail!("idft expects (B, N)");
+    }
+    let n = z.shape()[1];
+    let (ifr, ifi) = dsp::idft_matrix(n);
+    z.matmul(&ComplexTensor::new(ifr, ifi)?)
+}
+
+/// FIR filter, valid mode (Fig. 2c): y(i) = sum_k a(k) x(i + M - 1 - k).
+pub fn fir(x: &Tensor, taps: &[f32]) -> Result<Tensor> {
+    if x.rank() != 2 {
+        bail!("fir expects (B, L), got {:?}", x.shape());
+    }
+    let (b, l) = (x.shape()[0], x.shape()[1]);
+    let m = taps.len();
+    if l < m {
+        bail!("signal shorter than filter");
+    }
+    let wout = l - m + 1;
+    let mut out = Tensor::zeros(&[b, wout]);
+    for bi in 0..b {
+        let row = &x.data()[bi * l..(bi + 1) * l];
+        let orow = &mut out.data_mut()[bi * wout..(bi + 1) * wout];
+        for (i, o) in orow.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (k, &a) in taps.iter().enumerate() {
+                acc += a * row[i + m - 1 - k];
+            }
+            *o = acc;
+        }
+    }
+    Ok(out)
+}
+
+/// Unfolding (Fig. 2d): Y[i, j] = X[i + j], per batch row.
+pub fn unfold(x: &Tensor, window: usize) -> Result<Tensor> {
+    if x.rank() != 2 {
+        bail!("unfold expects (B, L), got {:?}", x.shape());
+    }
+    let (b, l) = (x.shape()[0], x.shape()[1]);
+    if l < window {
+        bail!("window longer than signal");
+    }
+    let wout = l - window + 1;
+    let mut out = Tensor::zeros(&[b, wout, window]);
+    for bi in 0..b {
+        let row = &x.data()[bi * l..(bi + 1) * l];
+        let obase = bi * wout * window;
+        for i in 0..wout {
+            for j in 0..window {
+                out.data_mut()[obase + i * window + j] = row[i + j];
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// STFT (extension op): frame, window, direct DFT per frame.
+pub fn stft(x: &Tensor, nfft: usize, hop: usize) -> Result<(Tensor, Tensor)> {
+    if x.rank() != 2 {
+        bail!("stft expects (B, L), got {:?}", x.shape());
+    }
+    let (b, l) = (x.shape()[0], x.shape()[1]);
+    if l < nfft {
+        bail!("signal shorter than one frame");
+    }
+    let frames = (l - nfft) / hop + 1;
+    let win = dsp::hamming(nfft);
+    let mut rows = Tensor::zeros(&[b * frames, nfft]);
+    for bi in 0..b {
+        for f in 0..frames {
+            for i in 0..nfft {
+                rows.data_mut()[(bi * frames + f) * nfft + i] =
+                    x.data()[bi * l + f * hop + i] * win[i] as f32;
+            }
+        }
+    }
+    let z = dsp::dft_direct(&ComplexTensor::from_real(rows))?;
+    Ok((
+        z.re.reshape(&[b, frames, nfft])?,
+        z.im.reshape(&[b, frames, nfft])?,
+    ))
+}
+
+/// PFB FIR bank (Fig. 3 left): defers to the dsp reference (which is the
+/// clear scalar implementation already).
+pub fn pfb_fir(x: &Tensor, cfg: PfbConfig) -> Result<Tensor> {
+    dsp::pfb::pfb_fir_reference(x, cfg)
+}
+
+/// Full PFB (Fig. 3 right): FIR bank + direct DFT across branches.
+pub fn pfb(x: &Tensor, cfg: PfbConfig) -> Result<ComplexTensor> {
+    dsp::pfb_reference(x, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stft_single_tone_concentrates_in_bin() {
+        // tone at bin 8 of a 64-point frame
+        let n = 64;
+        let l = 640;
+        let data: Vec<f32> = (0..l)
+            .map(|i| (2.0 * std::f64::consts::PI * 8.0 * i as f64 / n as f64).cos() as f32)
+            .collect();
+        let x = Tensor::new(&[1, l], data).unwrap();
+        let (re, im) = stft(&x, n, n / 2).unwrap();
+        let frames = re.shape()[1];
+        for f in 0..frames {
+            let power: Vec<f32> = (0..n)
+                .map(|k| re.at(&[0, f, k]).powi(2) + im.at(&[0, f, k]).powi(2))
+                .collect();
+            let peak = (0..n).max_by(|&a, &b| power[a].total_cmp(&power[b])).unwrap();
+            assert!(peak == 8 || peak == n - 8, "frame {f} peak {peak}");
+        }
+    }
+
+    #[test]
+    fn stft_frame_count() {
+        let x = Tensor::zeros(&[1, 1000]);
+        let (re, _) = stft(&x, 256, 128).unwrap();
+        assert_eq!(re.shape(), &[1, (1000 - 256) / 128 + 1, 256]);
+        assert!(stft(&Tensor::zeros(&[1, 100]), 256, 128).is_err());
+    }
+
+    #[test]
+    fn fir_impulse_recovers_taps_reversed() {
+        // x = unit impulse at position M-1 -> y(0) = a(0) ... actually
+        // y(i) = sum_k a(k) x(i+M-1-k); impulse at M-1 gives y(i) = a(i).
+        let m = 5;
+        let mut x = Tensor::zeros(&[1, 16]);
+        x.set(&[0, m - 1], 1.0);
+        let taps: Vec<f32> = (1..=m).map(|i| i as f32).collect();
+        let y = fir(&x, &taps).unwrap();
+        for (i, &t) in taps.iter().enumerate() {
+            assert_eq!(y.at(&[0, i]), t, "tap {i}");
+        }
+    }
+
+    #[test]
+    fn fir_matches_moving_average() {
+        let x = Tensor::new(&[1, 6], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let y = fir(&x, &[0.5, 0.5]).unwrap();
+        assert_eq!(y.data(), &[1.5, 2.5, 3.5, 4.5, 5.5]);
+    }
+
+    #[test]
+    fn unfold_example_from_paper() {
+        // paper §4.4: X=[1,2,3,4], J=2 -> Y=[[1,2],[2,3],[3,4]]
+        let x = Tensor::new(&[1, 4], vec![1., 2., 3., 4.]).unwrap();
+        let y = unfold(&x, 2).unwrap();
+        assert_eq!(y.shape(), &[1, 3, 2]);
+        assert_eq!(y.data(), &[1., 2., 2., 3., 3., 4.]);
+    }
+
+    #[test]
+    fn summation_matches_pairwise() {
+        let x = Tensor::randn(&[10_000], 3);
+        let naive = summation(&x);
+        let pairwise = crate::tensor::sum(&x);
+        assert!((naive - pairwise).abs() < 1e-2, "{naive} vs {pairwise}");
+    }
+
+    #[test]
+    fn idft_inverts_dft() {
+        let x = ComplexTensor::from_real(Tensor::randn(&[2, 16], 4));
+        let z = dft(&x).unwrap();
+        let back = idft(&z).unwrap();
+        assert!(back.allclose(&x, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn shape_errors() {
+        assert!(fir(&Tensor::zeros(&[4]), &[1.0]).is_err());
+        assert!(fir(&Tensor::zeros(&[1, 2]), &[1.0, 1.0, 1.0]).is_err());
+        assert!(unfold(&Tensor::zeros(&[1, 3]), 5).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock over warmup + N timed iterations, reports
+//! mean/median/p95/stddev, and renders the paper-style tables the
+//! `rust/benches/*` binaries print.  The measurement protocol mirrors the
+//! paper's: average over repeated runs, input data already resident
+//! (uploads excluded from the timed region when the runner says so).
+
+mod stats;
+mod table;
+
+pub use stats::{Stats, Summary};
+pub use table::{csv_escape, fmt_ns, Table};
+
+use std::time::{Duration, Instant};
+
+/// Measurement configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Hard cap on total measurement time per case.
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            iters: 30,
+            max_total: Duration::from_secs(10),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Paper protocol: 100 timed iterations (use `quick` for CI).
+    pub fn paper() -> Self {
+        Self {
+            warmup_iters: 5,
+            iters: 100,
+            max_total: Duration::from_secs(30),
+        }
+    }
+
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            iters: 5,
+            max_total: Duration::from_secs(2),
+        }
+    }
+
+    /// Honour TINA_BENCH_PROFILE=quick|default|paper (CI knob).
+    pub fn from_env() -> Self {
+        match std::env::var("TINA_BENCH_PROFILE").as_deref() {
+            Ok("quick") => Self::quick(),
+            Ok("paper") => Self::paper(),
+            _ => Self::default(),
+        }
+    }
+}
+
+/// Time `f` under `cfg`, returning per-iteration statistics.
+///
+/// `f` is called once per iteration; it should perform exactly one unit of
+/// the benchmarked work and must not be optimized away (return something
+/// and let the caller black-box it, or mutate state).
+pub fn run(cfg: &BenchConfig, mut f: impl FnMut()) -> Stats {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    let start = Instant::now();
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if start.elapsed() > cfg.max_total && samples.len() >= 3 {
+            break;
+        }
+    }
+    Stats::from_durations(&samples)
+}
+
+/// Prevent the optimizer from discarding a computed value.
+/// (std::hint::black_box is stable since 1.66.)
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_requested_iters() {
+        let cfg = BenchConfig {
+            warmup_iters: 2,
+            iters: 10,
+            max_total: Duration::from_secs(5),
+        };
+        let mut calls = 0usize;
+        let stats = run(&cfg, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 12); // warmup + timed
+        assert_eq!(stats.n, 10);
+    }
+
+    #[test]
+    fn run_respects_time_cap() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            iters: 1_000_000,
+            max_total: Duration::from_millis(50),
+        };
+        let stats = run(&cfg, || std::thread::sleep(Duration::from_millis(5)));
+        assert!(stats.n >= 3 && stats.n < 1000, "n={}", stats.n);
+    }
+
+    #[test]
+    fn timing_is_plausible() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            iters: 5,
+            max_total: Duration::from_secs(5),
+        };
+        let stats = run(&cfg, || std::thread::sleep(Duration::from_millis(10)));
+        assert!(stats.mean_ns() >= 9.0e6, "mean {}", stats.mean_ns());
+    }
+}

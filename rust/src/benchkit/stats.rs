@@ -1,0 +1,159 @@
+//! Sample statistics for benchmark timings.
+
+use std::time::Duration;
+
+/// Statistics over one benchmark case's per-iteration durations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    sorted_ns: Vec<u64>,
+    sum_ns: u128,
+}
+
+impl Stats {
+    pub fn from_durations(samples: &[Duration]) -> Stats {
+        let mut sorted_ns: Vec<u64> = samples
+            .iter()
+            .map(|d| d.as_nanos().min(u64::MAX as u128) as u64)
+            .collect();
+        sorted_ns.sort_unstable();
+        let sum_ns = sorted_ns.iter().map(|&x| x as u128).sum();
+        Stats {
+            n: sorted_ns.len(),
+            sorted_ns,
+            sum_ns,
+        }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.n as f64
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        self.quantile_ns(0.5)
+    }
+
+    /// Linear-interpolated quantile, q in [0, 1].
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let pos = q.clamp(0.0, 1.0) * (self.n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.sorted_ns[lo] as f64 * (1.0 - frac) + self.sorted_ns[hi] as f64 * frac
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.sorted_ns.first().map(|&x| x as f64).unwrap_or(0.0)
+    }
+
+    pub fn max_ns(&self) -> f64 {
+        self.sorted_ns.last().map(|&x| x as f64).unwrap_or(0.0)
+    }
+
+    pub fn stddev_ns(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let mean = self.mean_ns();
+        let var: f64 = self
+            .sorted_ns
+            .iter()
+            .map(|&x| (x as f64 - mean).powi(2))
+            .sum::<f64>()
+            / (self.n - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary {
+            n: self.n,
+            mean_ns: self.mean_ns(),
+            median_ns: self.median_ns(),
+            p95_ns: self.quantile_ns(0.95),
+            stddev_ns: self.stddev_ns(),
+            min_ns: self.min_ns(),
+            max_ns: self.max_ns(),
+        }
+    }
+}
+
+/// Flattened summary row (what tables and EXPERIMENTS.md record).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Summary {
+    /// Speedup of `baseline` over `self` (how many times faster self is).
+    pub fn speedup_vs(&self, baseline: &Summary) -> f64 {
+        if self.median_ns == 0.0 {
+            return f64::INFINITY;
+        }
+        baseline.median_ns / self.median_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_of(ns: &[u64]) -> Stats {
+        Stats::from_durations(&ns.iter().map(|&x| Duration::from_nanos(x)).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn mean_median_of_known_set() {
+        let s = stats_of(&[10, 20, 30, 40, 50]);
+        assert_eq!(s.mean_ns(), 30.0);
+        assert_eq!(s.median_ns(), 30.0);
+        assert_eq!(s.min_ns(), 10.0);
+        assert_eq!(s.max_ns(), 50.0);
+    }
+
+    #[test]
+    fn median_interpolates_even_n() {
+        let s = stats_of(&[10, 20, 30, 40]);
+        assert_eq!(s.median_ns(), 25.0);
+    }
+
+    #[test]
+    fn quantile_bounds() {
+        let s = stats_of(&[5, 1, 9, 3, 7]); // unsorted input
+        assert_eq!(s.quantile_ns(0.0), 1.0);
+        assert_eq!(s.quantile_ns(1.0), 9.0);
+    }
+
+    #[test]
+    fn stddev_of_constant_is_zero() {
+        let s = stats_of(&[42, 42, 42]);
+        assert_eq!(s.stddev_ns(), 0.0);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let fast = stats_of(&[100, 100, 100]).summary();
+        let slow = stats_of(&[400, 400, 400]).summary();
+        assert_eq!(fast.speedup_vs(&slow), 4.0);
+        assert_eq!(slow.speedup_vs(&fast), 0.25);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = stats_of(&[]);
+        assert_eq!(s.mean_ns(), 0.0);
+        assert_eq!(s.median_ns(), 0.0);
+        assert_eq!(s.stddev_ns(), 0.0);
+    }
+}

@@ -1,0 +1,321 @@
+//! Dynamic batcher: coalesces same-signature single-signal requests into
+//! one padded batch execution (the TINA analog of vLLM-style request
+//! batching — HLO artifacts have a fixed leading batch dimension, so the
+//! batcher fills as many rows as arrive within the window and zero-pads
+//! the rest).
+
+use crate::tensor::Tensor;
+use crate::util::threadpool::OneShot;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Key grouping poolable requests: same artifact -> same ABI.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub artifact: String,
+    /// Rows the artifact expects (its leading batch dim).
+    pub batch: usize,
+}
+
+/// One queued request row.
+pub struct Pending {
+    /// The (1, L) signal row.
+    pub input: Tensor,
+    /// Completion slot: receives this row's outputs.
+    pub reply: OneShot<Result<Vec<Tensor>>>,
+    pub enqueued: Instant,
+}
+
+/// A formed batch ready for execution.
+pub struct FormedBatch {
+    pub key: BatchKey,
+    /// Stacked (batch, L) input, zero-padded to the artifact batch.
+    pub input: Tensor,
+    /// How many leading rows are real requests.
+    pub rows: Vec<Pending>,
+}
+
+/// Batching configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Max time a request may wait for co-riders before the batch flushes.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+struct Shared {
+    queues: Mutex<HashMap<BatchKey, Vec<Pending>>>,
+    ready: Condvar,
+}
+
+/// The batcher: producers enqueue rows; a drain loop (run by the service)
+/// pops full or expired batches.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    config: BatcherConfig,
+}
+
+impl Batcher {
+    pub fn new(config: BatcherConfig) -> Batcher {
+        Batcher {
+            shared: Arc::new(Shared {
+                queues: Mutex::new(HashMap::new()),
+                ready: Condvar::new(),
+            }),
+            config,
+        }
+    }
+
+    pub fn config(&self) -> BatcherConfig {
+        self.config
+    }
+
+    /// Enqueue one row; returns immediately.  The reply slot completes when
+    /// the batch it rides executes.
+    pub fn enqueue(&self, key: BatchKey, input: Tensor, reply: OneShot<Result<Vec<Tensor>>>) {
+        let mut q = self.shared.queues.lock().unwrap();
+        q.entry(key).or_default().push(Pending {
+            input,
+            reply,
+            enqueued: Instant::now(),
+        });
+        drop(q);
+        self.shared.ready.notify_one();
+    }
+
+    /// Block until a batch is full or the oldest row exceeds `max_wait`;
+    /// returns None if `deadline` passes with nothing to do.
+    pub fn next_batch(&self, idle_timeout: Duration) -> Option<FormedBatch> {
+        let deadline = Instant::now() + idle_timeout;
+        let mut q = self.shared.queues.lock().unwrap();
+        loop {
+            // full batch available?
+            let full = q
+                .iter()
+                .find(|(k, v)| v.len() >= k.batch)
+                .map(|(k, _)| k.clone());
+            if let Some(key) = full {
+                let rows = q.get_mut(&key).unwrap();
+                let take: Vec<Pending> = rows.drain(..key.batch).collect();
+                if rows.is_empty() {
+                    q.remove(&key);
+                }
+                return Some(Self::form(key, take));
+            }
+            // expired batch?
+            let now = Instant::now();
+            let expired = q
+                .iter()
+                .filter(|(_, v)| !v.is_empty())
+                .find(|(_, v)| now.duration_since(v[0].enqueued) >= self.config.max_wait)
+                .map(|(k, _)| k.clone());
+            if let Some(key) = expired {
+                let rows = q.remove(&key).unwrap();
+                return Some(Self::form(key, rows));
+            }
+            // otherwise wait for the earliest wakeup: either a new enqueue
+            // or the oldest entry's expiry
+            let oldest_expiry = q
+                .values()
+                .filter_map(|v| v.first())
+                .map(|p| p.enqueued + self.config.max_wait)
+                .min();
+            let wake = match oldest_expiry {
+                Some(e) => e.min(deadline),
+                None => deadline,
+            };
+            let now = Instant::now();
+            if wake <= now {
+                if q.values().all(|v| v.is_empty()) && now >= deadline {
+                    return None;
+                }
+                continue;
+            }
+            let (guard, timeout) = self
+                .shared
+                .ready
+                .wait_timeout(q, wake - now)
+                .unwrap();
+            q = guard;
+            if timeout.timed_out() && q.values().all(|v| v.is_empty()) && Instant::now() >= deadline
+            {
+                return None;
+            }
+        }
+    }
+
+    /// Rows currently queued across all keys (for tests/metrics).
+    pub fn queued(&self) -> usize {
+        self.shared.queues.lock().unwrap().values().map(Vec::len).sum()
+    }
+
+    fn form(key: BatchKey, rows: Vec<Pending>) -> FormedBatch {
+        debug_assert!(!rows.is_empty() && rows.len() <= key.batch);
+        let l = rows[0].input.len();
+        let mut data = vec![0.0f32; key.batch * l];
+        for (i, p) in rows.iter().enumerate() {
+            data[i * l..(i + 1) * l].copy_from_slice(p.input.data());
+        }
+        FormedBatch {
+            input: Tensor::new(&[key.batch, l], data).expect("batch stack"),
+            key,
+            rows,
+        }
+    }
+}
+
+/// Split a batched multi-output execution result back into per-row replies.
+///
+/// Each output tensor has leading dim = key.batch; row i of every output
+/// goes to rows[i].  Padding rows are discarded.
+pub fn scatter_results(batch: FormedBatch, result: Result<Vec<Tensor>>) {
+    match result {
+        Ok(outputs) => {
+            for (i, row) in batch.rows.into_iter().enumerate() {
+                let per_row: Result<Vec<Tensor>> = outputs
+                    .iter()
+                    .map(|o| o.slice_axis(0, i, i + 1))
+                    .collect();
+                row.reply.set(per_row);
+            }
+        }
+        Err(e) => {
+            let msg = format!("batched execution failed: {e}");
+            for row in batch.rows {
+                row.reply.set(Err(anyhow::anyhow!(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(b: usize) -> BatchKey {
+        BatchKey {
+            artifact: "fir_tina_f32_B8_L16".into(),
+            batch: b,
+        }
+    }
+
+    fn slot() -> OneShot<Result<Vec<Tensor>>> {
+        OneShot::new()
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_secs(10),
+        });
+        for i in 0..4 {
+            b.enqueue(key(4), Tensor::filled(&[1, 16], i as f32), slot());
+        }
+        let batch = b.next_batch(Duration::from_millis(50)).expect("batch");
+        assert_eq!(batch.rows.len(), 4);
+        assert_eq!(batch.input.shape(), &[4, 16]);
+        // rows stacked in arrival order
+        assert_eq!(batch.input.at(&[2, 0]), 2.0);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn partial_batch_flushes_after_max_wait_with_padding() {
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_millis(5),
+        });
+        b.enqueue(key(4), Tensor::filled(&[1, 16], 7.0), slot());
+        let t0 = Instant::now();
+        let batch = b.next_batch(Duration::from_secs(1)).expect("batch");
+        assert!(t0.elapsed() >= Duration::from_millis(4), "flushed too early");
+        assert_eq!(batch.rows.len(), 1);
+        assert_eq!(batch.input.shape(), &[4, 16]); // padded
+        assert_eq!(batch.input.at(&[0, 0]), 7.0);
+        assert_eq!(batch.input.at(&[3, 0]), 0.0); // zero padding
+    }
+
+    #[test]
+    fn idle_timeout_returns_none() {
+        let b = Batcher::new(BatcherConfig::default());
+        let t0 = Instant::now();
+        assert!(b.next_batch(Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn distinct_keys_do_not_mix() {
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_millis(1),
+        });
+        b.enqueue(key(2), Tensor::filled(&[1, 16], 1.0), slot());
+        let mut other = key(2);
+        other.artifact = "other".into();
+        b.enqueue(other, Tensor::filled(&[1, 16], 2.0), slot());
+        let b1 = b.next_batch(Duration::from_millis(100)).unwrap();
+        let b2 = b.next_batch(Duration::from_millis(100)).unwrap();
+        assert_eq!(b1.rows.len(), 1);
+        assert_eq!(b2.rows.len(), 1);
+        assert_ne!(b1.key.artifact, b2.key.artifact);
+    }
+
+    #[test]
+    fn scatter_splits_rows_and_discards_padding() {
+        let replies: Vec<_> = (0..2).map(|_| slot()).collect();
+        let rows: Vec<Pending> = replies
+            .iter()
+            .map(|r| Pending {
+                input: Tensor::zeros(&[1, 4]),
+                reply: r.clone(),
+                enqueued: Instant::now(),
+            })
+            .collect();
+        let batch = FormedBatch {
+            key: key(4),
+            input: Tensor::zeros(&[4, 4]),
+            rows,
+        };
+        // one output of shape (4, 3): row i filled with i
+        let out = Tensor::new(
+            &[4, 3],
+            (0..4).flat_map(|i| [i as f32; 3]).collect::<Vec<_>>(),
+        )
+        .unwrap();
+        scatter_results(batch, Ok(vec![out]));
+        for (i, r) in replies.iter().enumerate() {
+            let got = r.try_take().unwrap().unwrap();
+            assert_eq!(got[0].shape(), &[1, 3]);
+            assert_eq!(got[0].data(), &[i as f32; 3]);
+        }
+    }
+
+    #[test]
+    fn scatter_propagates_errors_to_all_rows() {
+        let replies: Vec<_> = (0..3).map(|_| slot()).collect();
+        let rows: Vec<Pending> = replies
+            .iter()
+            .map(|r| Pending {
+                input: Tensor::zeros(&[1, 4]),
+                reply: r.clone(),
+                enqueued: Instant::now(),
+            })
+            .collect();
+        let batch = FormedBatch {
+            key: key(4),
+            input: Tensor::zeros(&[4, 4]),
+            rows,
+        };
+        scatter_results(batch, Err(anyhow::anyhow!("boom")));
+        for r in &replies {
+            assert!(r.try_take().unwrap().is_err());
+        }
+    }
+}

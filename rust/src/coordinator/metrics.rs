@@ -1,0 +1,113 @@
+//! Serving metrics: per-op counters and latency histograms.
+
+use crate::util::histogram::Histogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared, thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub batches_executed: AtomicU64,
+    pub padded_rows: AtomicU64,
+    pub interp_fallbacks: AtomicU64,
+    latency: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, op: &str, latency: Duration, ok: bool) {
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut map = self.latency.lock().unwrap();
+        map.entry(op.to_string())
+            .or_default()
+            .record_duration(latency);
+    }
+
+    pub fn record_batch(&self, coalesced: usize, padding: usize) {
+        self.batches_executed.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(coalesced as u64, Ordering::Relaxed);
+        self.padded_rows.fetch_add(padding as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_interp_fallback(&self) {
+        self.interp_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Latency histogram snapshot for one op.
+    pub fn latency_of(&self, op: &str) -> Option<Histogram> {
+        self.latency.lock().unwrap().get(op).cloned()
+    }
+
+    /// Multi-line human-readable report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests={} completed={} failed={} batched={} batches={} padded_rows={} interp_fallbacks={}\n",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batched_requests.load(Ordering::Relaxed),
+            self.batches_executed.load(Ordering::Relaxed),
+            self.padded_rows.load(Ordering::Relaxed),
+            self.interp_fallbacks.load(Ordering::Relaxed),
+        ));
+        for (op, h) in self.latency.lock().unwrap().iter() {
+            out.push_str(&format!("  {op}: {}\n", h.summary()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_completion("fir", Duration::from_micros(100), true);
+        m.record_completion("fir", Duration::from_micros(300), false);
+        m.record_batch(5, 3);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.batched_requests.load(Ordering::Relaxed), 5);
+        assert_eq!(m.padded_rows.load(Ordering::Relaxed), 3);
+        let h = m.latency_of("fir").unwrap();
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn report_contains_ops() {
+        let m = Metrics::new();
+        m.record_completion("pfb", Duration::from_millis(2), true);
+        let r = m.report();
+        assert!(r.contains("pfb:"));
+        assert!(r.contains("completed=1"));
+    }
+
+    #[test]
+    fn latency_of_unknown_is_none() {
+        assert!(Metrics::new().latency_of("nope").is_none());
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 coordinator: the serving layer wrapped around the TINA artifacts.
+//!
+//! The paper's contribution is the function->NN-layer mapping (L1/L2);
+//! per the architecture rules the rust layer turns it into a deployable
+//! runtime: request routing across compiled artifacts, dynamic batching
+//! along the artifacts' leading batch dimension, a worker pool with
+//! bounded-queue backpressure, composite pipelines (the PFB use case),
+//! metrics, and a TCP JSON-line server.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod service;
+
+pub use batcher::{BatchKey, Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use pipeline::{Pipeline, Stage};
+pub use request::{ImplPref, OpKind, OpRequest, OpResponse, Precision};
+pub use router::{Router, RouterConfig, Target};
+pub use service::{Coordinator, CoordinatorConfig};

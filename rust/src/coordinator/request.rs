@@ -1,0 +1,241 @@
+//! Request/response types of the TINA serving surface.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// The signal-processing operations TINA serves (paper Table 1 + §5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    EwMult,
+    EwAdd,
+    MatMul,
+    Summation,
+    Dft,
+    Idft,
+    Fir,
+    Unfold,
+    PfbFir,
+    Pfb,
+    /// Extension op (paper future work): short-time Fourier transform.
+    Stft,
+}
+
+impl OpKind {
+    /// Manifest `op` string.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OpKind::EwMult => "ewmult",
+            OpKind::EwAdd => "ewadd",
+            OpKind::MatMul => "matmul",
+            OpKind::Summation => "summation",
+            OpKind::Dft => "dft",
+            OpKind::Idft => "idft",
+            OpKind::Fir => "fir",
+            OpKind::Unfold => "unfold",
+            OpKind::PfbFir => "pfb_fir",
+            OpKind::Pfb => "pfb",
+            OpKind::Stft => "stft",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<OpKind> {
+        Ok(match s {
+            "ewmult" => OpKind::EwMult,
+            "ewadd" => OpKind::EwAdd,
+            "matmul" => OpKind::MatMul,
+            "summation" => OpKind::Summation,
+            "dft" => OpKind::Dft,
+            "idft" => OpKind::Idft,
+            "fir" => OpKind::Fir,
+            "unfold" => OpKind::Unfold,
+            "pfb_fir" => OpKind::PfbFir,
+            "pfb" => OpKind::Pfb,
+            "stft" => OpKind::Stft,
+            _ => bail!("unknown op '{s}'"),
+        })
+    }
+
+    /// All ops, for sweeps.
+    pub fn all() -> &'static [OpKind] {
+        &[
+            OpKind::EwMult,
+            OpKind::EwAdd,
+            OpKind::MatMul,
+            OpKind::Summation,
+            OpKind::Dft,
+            OpKind::Idft,
+            OpKind::Fir,
+            OpKind::Unfold,
+            OpKind::PfbFir,
+            OpKind::Pfb,
+            OpKind::Stft,
+        ]
+    }
+
+    /// Ops whose requests carry a (B, L) signal and can be coalesced along
+    /// the batch axis by the dynamic batcher.
+    pub fn batchable(&self) -> bool {
+        matches!(self, OpKind::Fir | OpKind::PfbFir | OpKind::Pfb | OpKind::Stft)
+    }
+
+    pub fn expected_inputs(&self) -> usize {
+        match self {
+            OpKind::EwMult | OpKind::EwAdd | OpKind::MatMul | OpKind::Idft => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// Which implementation the client wants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ImplPref {
+    /// TINA NN-layer artifact, fall back to the rust interpreter.
+    #[default]
+    Auto,
+    /// TINA NN-layer artifact only (error if absent).
+    Tina,
+    /// Direct-jnp comparator artifact.
+    JaxRef,
+    /// Pure-rust TINA interpreter (no PJRT).
+    Interp,
+}
+
+impl ImplPref {
+    pub fn parse(s: &str) -> Result<ImplPref> {
+        Ok(match s {
+            "auto" => ImplPref::Auto,
+            "tina" => ImplPref::Tina,
+            "jaxref" => ImplPref::JaxRef,
+            "interp" => ImplPref::Interp,
+            _ => bail!("unknown impl '{s}'"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ImplPref::Auto => "auto",
+            ImplPref::Tina => "tina",
+            ImplPref::JaxRef => "jaxref",
+            ImplPref::Interp => "interp",
+        }
+    }
+}
+
+/// Compute precision of the TINA variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    Bf16,
+}
+
+impl Precision {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "f32" => Precision::F32,
+            "bf16" => Precision::Bf16,
+            _ => bail!("unknown dtype '{s}'"),
+        })
+    }
+}
+
+/// One serving request.
+#[derive(Debug, Clone)]
+pub struct OpRequest {
+    pub op: OpKind,
+    pub impl_pref: ImplPref,
+    pub precision: Precision,
+    pub inputs: Vec<Tensor>,
+}
+
+impl OpRequest {
+    pub fn new(op: OpKind, inputs: Vec<Tensor>) -> OpRequest {
+        OpRequest {
+            op,
+            impl_pref: ImplPref::Auto,
+            precision: Precision::F32,
+            inputs,
+        }
+    }
+
+    pub fn with_impl(mut self, p: ImplPref) -> Self {
+        self.impl_pref = p;
+        self
+    }
+
+    pub fn with_precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
+    /// Basic arity/rank validation before routing.
+    pub fn validate(&self) -> Result<()> {
+        if self.inputs.len() != self.op.expected_inputs() {
+            bail!(
+                "op {} wants {} inputs, got {}",
+                self.op.as_str(),
+                self.op.expected_inputs(),
+                self.inputs.len()
+            );
+        }
+        for (i, t) in self.inputs.iter().enumerate() {
+            if t.is_empty() {
+                bail!("input {i} is empty");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Response: output tensors plus how the request was served.
+#[derive(Debug, Clone)]
+pub struct OpResponse {
+    pub outputs: Vec<Tensor>,
+    /// Artifact name, or "interp:<op>" for the fallback path.
+    pub served_by: String,
+    /// Whether the request rode a coalesced batch.
+    pub batched: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_roundtrip() {
+        for op in OpKind::all() {
+            assert_eq!(OpKind::parse(op.as_str()).unwrap(), *op);
+        }
+        assert!(OpKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn batchable_set() {
+        assert!(OpKind::Fir.batchable());
+        assert!(OpKind::Pfb.batchable());
+        assert!(!OpKind::MatMul.batchable());
+    }
+
+    #[test]
+    fn request_validation() {
+        let ok = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 64])]);
+        assert!(ok.validate().is_ok());
+        let bad = OpRequest::new(OpKind::MatMul, vec![Tensor::zeros(&[2, 2])]);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn pref_parsing() {
+        assert_eq!(ImplPref::parse("tina").unwrap(), ImplPref::Tina);
+        assert_eq!(Precision::parse("bf16").unwrap(), Precision::Bf16);
+        assert!(ImplPref::parse("x").is_err());
+        assert!(Precision::parse("f64").is_err());
+    }
+}

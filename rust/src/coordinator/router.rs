@@ -1,0 +1,481 @@
+//! Request router: resolves an [`OpRequest`] to an execution target —
+//! a compiled PJRT artifact when one matches the request signature, or a
+//! pure-rust interpreter plan as fallback.
+
+use super::request::{ImplPref, OpKind, OpRequest, Precision};
+use crate::dsp::PfbConfig;
+use crate::runtime::Registry;
+use crate::tina::{lower, Interpreter};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Fixed op parameters that are baked into artifacts as NN weights; the
+/// interpreter fallback regenerates the same values (DESIGN.md §6).
+/// Mirrors python/compile/model.py.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub fir_taps: usize,
+    pub fir_cutoff: f64,
+    pub unfold_window: usize,
+    pub pfb: PfbConfig,
+    pub stft_nfft: usize,
+    pub stft_hop: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            fir_taps: 64,
+            fir_cutoff: 0.25,
+            unfold_window: 32,
+            pfb: PfbConfig::new(32, 8),
+            stft_nfft: 256,
+            stft_hop: 128,
+        }
+    }
+}
+
+/// Where a request should execute.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Target {
+    /// Artifact name; `pad_batch` is the artifact's batch dimension when
+    /// the request's own batch is smaller (the batcher's padding room).
+    Artifact { name: String, pad_batch: usize },
+    /// Interpreter plan key (op + shape signature).
+    Interp { key: PlanKey },
+}
+
+/// Cache key for interpreter plans.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub op: OpKind,
+    pub dims: Vec<usize>,
+}
+
+/// The router: artifact lookup + interpreter plan cache.
+pub struct Router {
+    registry: Registry,
+    config: RouterConfig,
+    plans: Mutex<HashMap<PlanKey, std::sync::Arc<Interpreter>>>,
+}
+
+impl Router {
+    pub fn new(registry: Registry, config: RouterConfig) -> Router {
+        Router {
+            registry,
+            config,
+            plans: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn config(&self) -> &RouterConfig {
+        &self.config
+    }
+
+    /// Resolve a request to a target (no batching preference).
+    ///
+    /// Matching rule: an artifact fits when op, impl, dtype match and every
+    /// input shape equals the request's — except that batchable ops may run
+    /// on an artifact with a *larger* leading batch (the batcher pads).
+    /// Preference order for `Auto`: exact-batch tina artifact, padded-batch
+    /// tina artifact, interpreter.
+    pub fn route(&self, req: &OpRequest) -> Result<Target> {
+        self.route_with_batching(req, false)
+    }
+
+    /// Resolve a request; with `prefer_batched` set, batchable B=1 requests
+    /// are steered to a multi-row artifact so the dynamic batcher can
+    /// coalesce co-arriving requests (the serving configuration).
+    pub fn route_with_batching(&self, req: &OpRequest, prefer_batched: bool) -> Result<Target> {
+        req.validate()?;
+        match req.impl_pref {
+            ImplPref::Interp => Ok(Target::Interp {
+                key: self.plan_key(req)?,
+            }),
+            ImplPref::Tina => self
+                .find_artifact(req, "tina", prefer_batched)
+                .ok_or_else(|| anyhow!(self.no_artifact_msg(req, "tina"))),
+            ImplPref::JaxRef => self
+                .find_artifact(req, "jaxref", prefer_batched)
+                .ok_or_else(|| anyhow!(self.no_artifact_msg(req, "jaxref"))),
+            ImplPref::Auto => {
+                if let Some(t) = self.find_artifact(req, "tina", prefer_batched) {
+                    Ok(t)
+                } else {
+                    Ok(Target::Interp {
+                        key: self.plan_key(req)?,
+                    })
+                }
+            }
+        }
+    }
+
+    fn no_artifact_msg(&self, req: &OpRequest, impl_: &str) -> String {
+        format!(
+            "no {impl_} artifact for op {} dtype {} with input shapes {:?}",
+            req.op.as_str(),
+            req.precision.as_str(),
+            req.inputs.iter().map(|t| t.shape().to_vec()).collect::<Vec<_>>()
+        )
+    }
+
+    fn find_artifact(&self, req: &OpRequest, impl_: &str, prefer_batched: bool) -> Option<Target> {
+        let dtype = match req.precision {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        };
+        let candidates = self.registry.find(req.op.as_str(), impl_, dtype);
+        // serving mode: steer batchable single-row requests to a multi-row
+        // artifact (the batcher pads/coalesces)
+        if prefer_batched && req.op.batchable() && req.inputs.len() == 1 {
+            let t = &req.inputs[0];
+            if t.rank() == 2 && t.shape()[0] == 1 {
+                let l = t.shape()[1];
+                let mut best: Option<(&str, usize)> = None;
+                for meta in &candidates {
+                    if meta.inputs.len() != 1 || meta.inputs[0].shape.len() != 2 {
+                        continue;
+                    }
+                    let (ab, al) = (meta.inputs[0].shape[0], meta.inputs[0].shape[1]);
+                    if al == l && ab > 1 && best.map(|(_, bb)| ab < bb).unwrap_or(true) {
+                        best = Some((meta.name.as_str(), ab));
+                    }
+                }
+                if let Some((name, ab)) = best {
+                    return Some(Target::Artifact {
+                        name: name.to_string(),
+                        pad_batch: ab,
+                    });
+                }
+            }
+        }
+        // exact shape match first
+        for meta in &candidates {
+            if meta.inputs.len() == req.inputs.len()
+                && meta
+                    .inputs
+                    .iter()
+                    .zip(&req.inputs)
+                    .all(|(spec, t)| spec.shape == t.shape())
+            {
+                return Some(Target::Artifact {
+                    name: meta.name.clone(),
+                    pad_batch: meta.batch(),
+                });
+            }
+        }
+        // padded-batch match for batchable single-input ops
+        if req.op.batchable() && req.inputs.len() == 1 {
+            let t = &req.inputs[0];
+            if t.rank() == 2 {
+                let (b, l) = (t.shape()[0], t.shape()[1]);
+                let mut best: Option<(&str, usize)> = None;
+                for meta in &candidates {
+                    if meta.inputs.len() != 1 || meta.inputs[0].shape.len() != 2 {
+                        continue;
+                    }
+                    let (ab, al) = (meta.inputs[0].shape[0], meta.inputs[0].shape[1]);
+                    if al == l && ab >= b {
+                        // smallest sufficient batch wins
+                        if best.map(|(_, bb)| ab < bb).unwrap_or(true) {
+                            best = Some((meta.name.as_str(), ab));
+                        }
+                    }
+                }
+                if let Some((name, ab)) = best {
+                    return Some(Target::Artifact {
+                        name: name.to_string(),
+                        pad_batch: ab,
+                    });
+                }
+            }
+        }
+        None
+    }
+
+    /// Shape signature for the interpreter plan cache.
+    fn plan_key(&self, req: &OpRequest) -> Result<PlanKey> {
+        let dims: Vec<usize> = req
+            .inputs
+            .iter()
+            .flat_map(|t| {
+                std::iter::once(t.rank()).chain(t.shape().iter().copied())
+            })
+            .collect();
+        Ok(PlanKey { op: req.op, dims })
+    }
+
+    /// Get or build the interpreter for a plan key, using the request's
+    /// input shapes (mirrors python/compile/tina_ops.py lowering).
+    pub fn interpreter(
+        &self,
+        key: &PlanKey,
+        req: &OpRequest,
+    ) -> Result<std::sync::Arc<Interpreter>> {
+        if let Some(it) = self.plans.lock().unwrap().get(key) {
+            return Ok(std::sync::Arc::clone(it));
+        }
+        let graph = self.build_graph(req)?;
+        let it = std::sync::Arc::new(Interpreter::new(graph)?);
+        self.plans
+            .lock()
+            .unwrap()
+            .insert(key.clone(), std::sync::Arc::clone(&it));
+        Ok(it)
+    }
+
+    fn build_graph(&self, req: &OpRequest) -> Result<crate::tina::Graph> {
+        let shape = |i: usize| req.inputs[i].shape().to_vec();
+        let rank2 = |i: usize| -> Result<(usize, usize)> {
+            let s = shape(i);
+            if s.len() != 2 {
+                bail!(
+                    "op {} input {i} must be rank 2, got {:?}",
+                    req.op.as_str(),
+                    s
+                );
+            }
+            Ok((s[0], s[1]))
+        };
+        Ok(match req.op {
+            OpKind::EwMult => {
+                let (h, w) = rank2(0)?;
+                lower::ewmult(h, w)
+            }
+            OpKind::EwAdd => {
+                let (h, w) = rank2(0)?;
+                lower::ewadd(h, w)
+            }
+            OpKind::MatMul => {
+                let (m, l) = rank2(0)?;
+                let (l2, n) = rank2(1)?;
+                if l != l2 {
+                    bail!("matmul contraction mismatch {l} vs {l2}");
+                }
+                lower::matmul(m, l, n)
+            }
+            OpKind::Summation => {
+                let s = shape(0);
+                if s.len() != 1 {
+                    bail!("summation input must be rank 1, got {:?}", s);
+                }
+                lower::summation(s[0])
+            }
+            OpKind::Dft => {
+                let (b, n) = rank2(0)?;
+                lower::dft(b, n)
+            }
+            OpKind::Idft => {
+                let (b, n) = rank2(0)?;
+                let (b2, n2) = rank2(1)?;
+                if (b, n) != (b2, n2) {
+                    bail!("idft re/im shape mismatch");
+                }
+                lower::idft(b, n)
+            }
+            OpKind::Fir => {
+                let (b, l) = rank2(0)?;
+                let taps =
+                    crate::dsp::fir_lowpass(self.config.fir_taps, self.config.fir_cutoff)?;
+                lower::fir(b, l, &taps)?
+            }
+            OpKind::Unfold => {
+                let (b, l) = rank2(0)?;
+                lower::unfold(b, l, self.config.unfold_window)?
+            }
+            OpKind::PfbFir => {
+                let (b, l) = rank2(0)?;
+                lower::pfb_fir(b, l, self.config.pfb)?
+            }
+            OpKind::Pfb => {
+                let (b, l) = rank2(0)?;
+                lower::pfb(b, l, self.config.pfb)?
+            }
+            OpKind::Stft => {
+                let (b, l) = rank2(0)?;
+                lower::stft(b, l, self.config.stft_nfft, self.config.stft_hop)?
+            }
+        })
+    }
+
+    /// Number of cached interpreter plans.
+    pub fn cached_plans(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use std::path::PathBuf;
+
+    const MANIFEST: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "fir_tina_f32_B1_L1024", "op": "fir", "impl": "tina",
+         "dtype": "f32", "params": {"l": 1024, "taps": 64, "batch": 1},
+         "inputs": [{"shape": [1, 1024], "dtype": "float32"}],
+         "outputs": [{"shape": [1, 961], "dtype": "float32"}],
+         "file": "a.hlo.txt"},
+        {"name": "fir_tina_f32_B8_L1024", "op": "fir", "impl": "tina",
+         "dtype": "f32", "params": {"l": 1024, "taps": 64, "batch": 8},
+         "inputs": [{"shape": [8, 1024], "dtype": "float32"}],
+         "outputs": [{"shape": [8, 961], "dtype": "float32"}],
+         "file": "b.hlo.txt"},
+        {"name": "fir_jaxref_f32_B1_L1024", "op": "fir", "impl": "jaxref",
+         "dtype": "f32", "params": {"l": 1024, "taps": 64, "batch": 1},
+         "inputs": [{"shape": [1, 1024], "dtype": "float32"}],
+         "outputs": [{"shape": [1, 961], "dtype": "float32"}],
+         "file": "c.hlo.txt"}
+      ]
+    }"#;
+
+    fn router() -> Router {
+        let reg =
+            Registry::from_manifest_text(PathBuf::from("/nonexistent"), MANIFEST).unwrap();
+        Router::new(reg, RouterConfig::default())
+    }
+
+    #[test]
+    fn exact_match_preferred() {
+        let r = router();
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 1024])]);
+        match r.route(&req).unwrap() {
+            Target::Artifact { name, pad_batch } => {
+                assert_eq!(name, "fir_tina_f32_B1_L1024");
+                assert_eq!(pad_batch, 1);
+            }
+            t => panic!("unexpected target {t:?}"),
+        }
+    }
+
+    #[test]
+    fn padded_batch_match() {
+        let r = router();
+        // batch 3 has no exact artifact; should pick the B8 one
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[3, 1024])]);
+        match r.route(&req).unwrap() {
+            Target::Artifact { name, pad_batch } => {
+                assert_eq!(name, "fir_tina_f32_B8_L1024");
+                assert_eq!(pad_batch, 8);
+            }
+            t => panic!("unexpected target {t:?}"),
+        }
+    }
+
+    #[test]
+    fn auto_falls_back_to_interp() {
+        let r = router();
+        // length 999 has no artifact
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 999])]);
+        match r.route(&req).unwrap() {
+            Target::Interp { key } => assert_eq!(key.op, OpKind::Fir),
+            t => panic!("unexpected target {t:?}"),
+        }
+    }
+
+    #[test]
+    fn strict_tina_errors_when_missing() {
+        let r = router();
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 999])])
+            .with_impl(ImplPref::Tina);
+        assert!(r.route(&req).is_err());
+    }
+
+    #[test]
+    fn jaxref_routed_when_asked() {
+        let r = router();
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 1024])])
+            .with_impl(ImplPref::JaxRef);
+        match r.route(&req).unwrap() {
+            Target::Artifact { name, .. } => assert_eq!(name, "fir_jaxref_f32_B1_L1024"),
+            t => panic!("unexpected target {t:?}"),
+        }
+    }
+
+    #[test]
+    fn interpreter_plans_cached() {
+        let r = router();
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 999])])
+            .with_impl(ImplPref::Interp);
+        let Target::Interp { key } = r.route(&req).unwrap() else {
+            panic!()
+        };
+        assert_eq!(r.cached_plans(), 0);
+        let _ = r.interpreter(&key, &req).unwrap();
+        assert_eq!(r.cached_plans(), 1);
+        let _ = r.interpreter(&key, &req).unwrap();
+        assert_eq!(r.cached_plans(), 1);
+    }
+}
+
+#[cfg(test)]
+mod batching_route_tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use std::path::PathBuf;
+
+    const MANIFEST: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "fir_tina_f32_B1_L1024", "op": "fir", "impl": "tina",
+         "dtype": "f32", "params": {"batch": 1},
+         "inputs": [{"shape": [1, 1024], "dtype": "float32"}],
+         "outputs": [{"shape": [1, 961], "dtype": "float32"}],
+         "file": "a.hlo.txt"},
+        {"name": "fir_tina_f32_B8_L1024", "op": "fir", "impl": "tina",
+         "dtype": "f32", "params": {"batch": 8},
+         "inputs": [{"shape": [8, 1024], "dtype": "float32"}],
+         "outputs": [{"shape": [8, 961], "dtype": "float32"}],
+         "file": "b.hlo.txt"}
+      ]
+    }"#;
+
+    fn router() -> Router {
+        let reg =
+            Registry::from_manifest_text(PathBuf::from("/nonexistent"), MANIFEST).unwrap();
+        Router::new(reg, RouterConfig::default())
+    }
+
+    #[test]
+    fn serving_mode_prefers_multi_row_artifact() {
+        let r = router();
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 1024])]);
+        match r.route_with_batching(&req, true).unwrap() {
+            Target::Artifact { name, pad_batch } => {
+                assert_eq!(name, "fir_tina_f32_B8_L1024");
+                assert_eq!(pad_batch, 8);
+            }
+            t => panic!("unexpected {t:?}"),
+        }
+        // without the preference, the exact B=1 artifact wins
+        match r.route(&req).unwrap() {
+            Target::Artifact { name, pad_batch } => {
+                assert_eq!(name, "fir_tina_f32_B1_L1024");
+                assert_eq!(pad_batch, 1);
+            }
+            t => panic!("unexpected {t:?}"),
+        }
+    }
+
+    #[test]
+    fn non_batchable_ops_unaffected() {
+        let r = router();
+        // matmul is not batchable; with no artifact it goes to interp even
+        // in serving mode
+        let req = OpRequest::new(
+            OpKind::MatMul,
+            vec![Tensor::zeros(&[4, 4]), Tensor::zeros(&[4, 4])],
+        );
+        assert!(matches!(
+            r.route_with_batching(&req, true).unwrap(),
+            Target::Interp { .. }
+        ));
+    }
+}

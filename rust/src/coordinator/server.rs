@@ -1,0 +1,326 @@
+//! TCP serving front-end: newline-delimited JSON requests over a socket.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! -> {"id": 1, "op": "fir", "impl": "auto", "dtype": "f32",
+//!     "inputs": [{"shape": [1, 1024], "data": [ ... ]}]}
+//! <- {"id": 1, "ok": true, "served_by": "fir_tina_f32_B1_L1024",
+//!     "batched": false, "latency_us": 812,
+//!     "outputs": [{"shape": [1, 961], "data": [ ... ]}]}
+//!
+//! -> {"id": 2, "cmd": "stats"}
+//! <- {"id": 2, "ok": true, "report": "..."}
+//! ```
+//!
+//! One thread per connection; the coordinator handles concurrency and
+//! backpressure internally.
+
+use super::request::{ImplPref, OpKind, OpRequest, Precision};
+use super::service::Coordinator;
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Serve until `stop` flips true (tests) or forever (CLI).
+pub fn serve(coord: Arc<Coordinator>, addr: &str, stop: Arc<AtomicBool>) -> Result<()> {
+    serve_listener(coord, TcpListener::bind(addr)?, stop)
+}
+
+/// Serve on a pre-bound listener (lets tests bind port 0).
+pub fn serve_listener(
+    coord: Arc<Coordinator>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    eprintln!("tina: serving on {}", listener.local_addr()?);
+    let mut conns = Vec::new();
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                stream.set_nonblocking(false)?;
+                let coord = Arc::clone(&coord);
+                conns.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_connection(coord, stream) {
+                        eprintln!("tina: connection {peer}: {e}");
+                    }
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn handle_connection(coord: Arc<Coordinator>, stream: TcpStream) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = handle_line(&coord, &line);
+        writer.write_all(response.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Process one protocol line (exposed for tests).
+pub fn handle_line(coord: &Coordinator, line: &str) -> Json {
+    let doc = match json::parse(line) {
+        Ok(d) => d,
+        Err(e) => return error_response(Json::Null, &format!("bad json: {e}")),
+    };
+    let id = doc.get("id").cloned().unwrap_or(Json::Null);
+    match handle_doc(coord, &doc) {
+        Ok(mut obj) => {
+            if let Json::Obj(m) = &mut obj {
+                m.insert("id".into(), id);
+                m.insert("ok".into(), Json::Bool(true));
+            }
+            obj
+        }
+        Err(e) => error_response(id, &e.to_string()),
+    }
+}
+
+fn error_response(id: Json, msg: &str) -> Json {
+    Json::obj(vec![
+        ("id", id),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+    ])
+}
+
+fn handle_doc(coord: &Coordinator, doc: &Json) -> Result<Json> {
+    if let Some(cmd) = doc.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "stats" => Ok(Json::obj(vec![(
+                "report",
+                Json::str(coord.metrics().report()),
+            )])),
+            "ops" => Ok(Json::obj(vec![(
+                "ops",
+                Json::Arr(
+                    OpKind::all()
+                        .iter()
+                        .map(|o| Json::str(o.as_str()))
+                        .collect(),
+                ),
+            )])),
+            "artifacts" => Ok(Json::obj(vec![(
+                "artifacts",
+                Json::Arr(
+                    coord
+                        .router()
+                        .registry()
+                        .entries()
+                        .iter()
+                        .map(|e| Json::str(e.name.clone()))
+                        .collect(),
+                ),
+            )])),
+            _ => Err(anyhow!("unknown cmd '{cmd}'")),
+        };
+    }
+
+    let op = OpKind::parse(
+        doc.get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing 'op'"))?,
+    )?;
+    let impl_pref = match doc.get("impl").and_then(Json::as_str) {
+        Some(s) => ImplPref::parse(s)?,
+        None => ImplPref::Auto,
+    };
+    let precision = match doc.get("dtype").and_then(Json::as_str) {
+        Some(s) => Precision::parse(s)?,
+        None => Precision::F32,
+    };
+    let inputs = doc
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing 'inputs'"))?
+        .iter()
+        .map(tensor_from_json)
+        .collect::<Result<Vec<_>>>()?;
+
+    let t0 = std::time::Instant::now();
+    let resp = coord.execute(OpRequest {
+        op,
+        impl_pref,
+        precision,
+        inputs,
+    })?;
+    let latency_us = t0.elapsed().as_micros() as f64;
+
+    Ok(Json::obj(vec![
+        ("served_by", Json::str(resp.served_by)),
+        ("batched", Json::Bool(resp.batched)),
+        ("latency_us", Json::num(latency_us)),
+        (
+            "outputs",
+            Json::Arr(resp.outputs.iter().map(tensor_to_json).collect()),
+        ),
+    ]))
+}
+
+/// {"shape": [..], "data": [..]} -> Tensor.
+pub fn tensor_from_json(j: &Json) -> Result<Tensor> {
+    let shape: Vec<usize> = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tensor missing 'shape'"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<_>>()?;
+    let data: Vec<f32> = j
+        .get("data")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tensor missing 'data'"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|x| x as f32)
+                .ok_or_else(|| anyhow!("bad element"))
+        })
+        .collect::<Result<_>>()?;
+    Tensor::new(&shape, data)
+}
+
+/// Tensor -> {"shape": [..], "data": [..]}.
+pub fn tensor_to_json(t: &Tensor) -> Json {
+    Json::obj(vec![
+        (
+            "shape",
+            Json::Arr(t.shape().iter().map(|&d| Json::num(d as f64)).collect()),
+        ),
+        (
+            "data",
+            Json::Arr(t.data().iter().map(|&v| Json::num(v as f64)).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::CoordinatorConfig;
+    use crate::runtime::Registry;
+    use std::path::PathBuf;
+
+    fn coordinator() -> Coordinator {
+        let registry = Registry::from_manifest_text(
+            PathBuf::from("/nonexistent"),
+            r#"{"version": 1, "entries": []}"#,
+        )
+        .unwrap();
+        Coordinator::new(
+            registry,
+            CoordinatorConfig {
+                batching: false,
+                workers: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tensor_json_roundtrip() {
+        let t = Tensor::randn(&[2, 3], 5);
+        let j = tensor_to_json(&t);
+        let back = tensor_from_json(&j).unwrap();
+        assert!(t.allclose(&back, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn op_request_over_protocol() {
+        let c = coordinator();
+        let line = r#"{"id": 7, "op": "summation",
+                       "inputs": [{"shape": [4], "data": [1, 2, 3, 4]}]}"#;
+        let resp = handle_line(&c, line);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("id").and_then(Json::as_f64), Some(7.0));
+        let outs = resp.get("outputs").unwrap().as_arr().unwrap();
+        let t = tensor_from_json(&outs[0]).unwrap();
+        assert_eq!(t.data(), &[10.0]);
+    }
+
+    #[test]
+    fn stats_command() {
+        let c = coordinator();
+        let resp = handle_line(&c, r#"{"id": 1, "cmd": "stats"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert!(resp.get("report").is_some());
+    }
+
+    #[test]
+    fn malformed_json_is_error_response() {
+        let c = coordinator();
+        let resp = handle_line(&c, "{nope");
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp.get("error").is_some());
+    }
+
+    #[test]
+    fn unknown_op_is_error_response() {
+        let c = coordinator();
+        let resp = handle_line(
+            &c,
+            r#"{"id": 2, "op": "zap", "inputs": []}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let c = Arc::new(coordinator());
+        let stop = Arc::new(AtomicBool::new(false));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = {
+            let c = Arc::clone(&c);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || serve_listener(c, listener, stop))
+        };
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+            .unwrap();
+        stream
+            .write_all(
+                br#"{"id": 1, "op": "ewadd", "inputs": [{"shape": [1, 2], "data": [1, 2]}, {"shape": [1, 2], "data": [10, 20]}]}"#,
+            )
+            .unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(&line).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let outs = resp.get("outputs").unwrap().as_arr().unwrap();
+        let t = tensor_from_json(&outs[0]).unwrap();
+        assert_eq!(t.data(), &[11.0, 22.0]);
+        // close BOTH handles (reader holds a clone) so the server's
+        // connection thread sees EOF and join() can complete
+        drop(reader);
+        drop(stream);
+        stop.store(true, Ordering::Release);
+        server.join().unwrap().unwrap();
+    }
+}

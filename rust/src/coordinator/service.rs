@@ -1,0 +1,331 @@
+//! The coordinator service: ties router, batcher, worker pool, engine
+//! handle and metrics into the serving object examples/benches/server use.
+//!
+//! Request path (all rust, no python):
+//!
+//! ```text
+//!  submit(OpRequest)
+//!    └─ route ──────────── artifact, batchable,  B==1 ─▶ batcher ─▶ engine
+//!        ├──────────────── artifact, exact shape ──────▶ worker  ─▶ engine
+//!        └──────────────── no artifact (Auto/Interp) ──▶ worker  ─▶ interpreter
+//! ```
+
+use super::batcher::{scatter_results, BatchKey, Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{OpRequest, OpResponse};
+use super::router::{Router, RouterConfig, Target};
+use crate::runtime::{EngineHandle, Registry};
+use crate::tensor::Tensor;
+use crate::util::threadpool::{OneShot, ThreadPool};
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub router: RouterConfig,
+    pub batcher: BatcherConfig,
+    /// Worker threads handling non-batched requests.
+    pub workers: usize,
+    /// Bound on the worker queue (backpressure).
+    pub queue_capacity: usize,
+    /// Enable the dynamic batcher (ablation knob).
+    pub batching: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            router: RouterConfig::default(),
+            batcher: BatcherConfig::default(),
+            workers: crate::util::threadpool::default_threads(),
+            queue_capacity: 256,
+            batching: true,
+        }
+    }
+}
+
+/// The serving coordinator.  Cheap to share via Arc; all methods take &self.
+pub struct Coordinator {
+    router: Arc<Router>,
+    engine: EngineHandle,
+    pool: ThreadPool,
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+    config: CoordinatorConfig,
+    stop: Arc<AtomicBool>,
+    drain_thread: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Coordinator {
+    /// Build from an artifact directory.
+    pub fn from_dir(dir: impl AsRef<std::path::Path>, config: CoordinatorConfig) -> Result<Self> {
+        let registry = Registry::load(dir)?;
+        Self::new(registry, config)
+    }
+
+    pub fn new(registry: Registry, config: CoordinatorConfig) -> Result<Self> {
+        let engine = EngineHandle::spawn(registry.clone())?;
+        let router = Arc::new(Router::new(registry, config.router.clone()));
+        let batcher = Arc::new(Batcher::new(config.batcher));
+        let metrics = Arc::new(Metrics::new());
+        let pool = ThreadPool::new(config.workers, config.queue_capacity);
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let coord = Coordinator {
+            router,
+            engine,
+            pool,
+            batcher,
+            metrics,
+            config,
+            stop,
+            drain_thread: std::sync::Mutex::new(None),
+        };
+        if coord.config.batching {
+            coord.start_drain_loop();
+        }
+        Ok(coord)
+    }
+
+    fn start_drain_loop(&self) {
+        let batcher = Arc::clone(&self.batcher);
+        let engine = self.engine.clone();
+        let metrics = Arc::clone(&self.metrics);
+        let stop = Arc::clone(&self.stop);
+        let handle = std::thread::Builder::new()
+            .name("tina-batch-drain".into())
+            .spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    if let Some(batch) = batcher.next_batch(Duration::from_millis(20)) {
+                        let padding = batch.key.batch - batch.rows.len();
+                        metrics.record_batch(batch.rows.len(), padding);
+                        let result =
+                            engine.execute(&batch.key.artifact, vec![batch.input.clone()]);
+                        scatter_results(batch, result);
+                    }
+                }
+            })
+            .expect("spawn drain loop");
+        *self.drain_thread.lock().unwrap() = Some(handle);
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn engine(&self) -> &EngineHandle {
+        &self.engine
+    }
+
+    /// Warm the executable cache for every artifact of an op (or all).
+    pub fn warmup(&self, op_filter: Option<&str>) -> Result<usize> {
+        let mut n = 0;
+        for meta in self.router.registry().entries() {
+            if let Some(f) = op_filter {
+                if meta.op != f {
+                    continue;
+                }
+            }
+            self.engine.prepare(&meta.name)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Submit asynchronously; the returned slot completes with the response.
+    pub fn submit(&self, req: OpRequest) -> OneShot<Result<OpResponse>> {
+        let slot: OneShot<Result<OpResponse>> = OneShot::new();
+        self.metrics.record_request();
+        let t0 = Instant::now();
+
+        let target = match self.router.route_with_batching(&req, self.config.batching) {
+            Ok(t) => t,
+            Err(e) => {
+                self.metrics
+                    .record_completion(req.op.as_str(), t0.elapsed(), false);
+                slot.set(Err(e));
+                return slot;
+            }
+        };
+
+        match target {
+            Target::Artifact { name, pad_batch } => {
+                let batchable = self.config.batching
+                    && req.op.batchable()
+                    && req.inputs.len() == 1
+                    && req.inputs[0].rank() == 2
+                    && req.inputs[0].shape()[0] == 1
+                    && pad_batch > 1;
+                if batchable {
+                    // ride the dynamic batcher
+                    let key = BatchKey {
+                        artifact: name.clone(),
+                        batch: pad_batch,
+                    };
+                    let inner: OneShot<Result<Vec<Tensor>>> = OneShot::new();
+                    self.batcher
+                        .enqueue(key, req.inputs[0].clone(), inner.clone());
+                    let metrics = Arc::clone(&self.metrics);
+                    let op = req.op.as_str();
+                    let out_slot = slot.clone();
+                    self.pool.submit(move || {
+                        let result = inner.wait().map(|outputs| OpResponse {
+                            outputs,
+                            served_by: name,
+                            batched: true,
+                        });
+                        metrics.record_completion(op, t0.elapsed(), result.is_ok());
+                        out_slot.set(result);
+                    });
+                } else {
+                    let engine = self.engine.clone();
+                    let metrics = Arc::clone(&self.metrics);
+                    let op = req.op.as_str();
+                    let out_slot = slot.clone();
+                    let inputs = req.inputs;
+                    self.pool.submit(move || {
+                        let result = engine.execute(&name, inputs).map(|outputs| OpResponse {
+                            outputs,
+                            served_by: name,
+                            batched: false,
+                        });
+                        metrics.record_completion(op, t0.elapsed(), result.is_ok());
+                        out_slot.set(result);
+                    });
+                }
+            }
+            Target::Interp { key } => {
+                self.metrics.record_interp_fallback();
+                let interp = match self.router.interpreter(&key, &req) {
+                    Ok(i) => i,
+                    Err(e) => {
+                        self.metrics
+                            .record_completion(req.op.as_str(), t0.elapsed(), false);
+                        slot.set(Err(e));
+                        return slot;
+                    }
+                };
+                let metrics = Arc::clone(&self.metrics);
+                let op = req.op.as_str();
+                let out_slot = slot.clone();
+                let inputs = req.inputs;
+                self.pool.submit(move || {
+                    let result = interp.run(&inputs).map(|outputs| OpResponse {
+                        outputs,
+                        served_by: format!("interp:{op}"),
+                        batched: false,
+                    });
+                    metrics.record_completion(op, t0.elapsed(), result.is_ok());
+                    out_slot.set(result);
+                });
+            }
+        }
+        slot
+    }
+
+    /// Submit and wait.
+    pub fn execute(&self, req: OpRequest) -> Result<OpResponse> {
+        self.submit(req).wait()
+    }
+
+    /// Stop the batch drain loop (called on drop too).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.drain_thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Errors surfaced when building a coordinator without artifacts: kept as a
+/// helper so binaries print a actionable message.
+pub fn missing_artifacts_hint(dir: &std::path::Path) -> String {
+    format!(
+        "artifact directory '{}' not found or missing manifest.json — run `make artifacts` first",
+        dir.display()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{ImplPref, OpKind};
+    use std::path::PathBuf;
+
+    /// Registry with no artifacts: everything routes to the interpreter.
+    fn empty_coordinator(batching: bool) -> Coordinator {
+        let registry = Registry::from_manifest_text(
+            PathBuf::from("/nonexistent"),
+            r#"{"version": 1, "entries": []}"#,
+        )
+        .unwrap();
+        Coordinator::new(
+            registry,
+            CoordinatorConfig {
+                batching,
+                workers: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn interp_fallback_serves_requests() {
+        let c = empty_coordinator(false);
+        let a = Tensor::randn(&[4, 4], 1);
+        let b = Tensor::randn(&[4, 4], 2);
+        let resp = c
+            .execute(OpRequest::new(OpKind::EwMult, vec![a.clone(), b.clone()]))
+            .unwrap();
+        assert_eq!(resp.served_by, "interp:ewmult");
+        let want = crate::baselines::naive::ewmult(&a, &b).unwrap();
+        assert!(resp.outputs[0].allclose(&want, 1e-6, 1e-6));
+        assert_eq!(c.metrics().interp_fallbacks.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn strict_tina_fails_without_artifacts() {
+        let c = empty_coordinator(false);
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 128])])
+            .with_impl(ImplPref::Tina);
+        assert!(c.execute(req).is_err());
+        assert_eq!(c.metrics().failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_submissions_complete() {
+        let c = Arc::new(empty_coordinator(false));
+        let slots: Vec<_> = (0..16)
+            .map(|i| {
+                let x = Tensor::randn(&[8, 8], i);
+                let y = Tensor::randn(&[8, 8], 100 + i);
+                c.submit(OpRequest::new(OpKind::EwAdd, vec![x, y]))
+            })
+            .collect();
+        for s in slots {
+            assert!(s.wait().is_ok());
+        }
+        assert_eq!(c.metrics().completed.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn shutdown_idempotent() {
+        let c = empty_coordinator(true);
+        c.shutdown();
+        c.shutdown();
+    }
+}

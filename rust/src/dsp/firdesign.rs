@@ -1,0 +1,141 @@
+//! FIR filter design — closed forms identical to python/compile/coeffs.py
+//! so the runtime regenerates exactly the weights baked into the AOT
+//! artifacts (f64 math, f32 cast at the end; cross-language tests compare
+//! with float tolerance).
+
+use super::window::hamming;
+use anyhow::{bail, Result};
+
+/// Normalized sinc: sin(pi x) / (pi x).
+pub fn sinc(x: f64) -> f64 {
+    if x == 0.0 {
+        1.0
+    } else {
+        let px = std::f64::consts::PI * x;
+        px.sin() / px
+    }
+}
+
+/// Hamming-windowed-sinc lowpass FIR with unit DC gain.
+///
+/// `cutoff` is the normalized frequency in (0, 0.5] (1.0 = sample rate).
+pub fn fir_lowpass(num_taps: usize, cutoff: f64) -> Result<Vec<f32>> {
+    if !(0.0 < cutoff && cutoff <= 0.5) {
+        bail!("cutoff {cutoff} outside (0, 0.5]");
+    }
+    if num_taps == 0 {
+        bail!("num_taps must be positive");
+    }
+    let center = (num_taps - 1) as f64 / 2.0;
+    let w = hamming(num_taps);
+    let mut h: Vec<f64> = (0..num_taps)
+        .map(|n| 2.0 * cutoff * sinc(2.0 * cutoff * (n as f64 - center)) * w[n])
+        .collect();
+    let s: f64 = h.iter().sum();
+    for v in &mut h {
+        *v /= s;
+    }
+    Ok(h.into_iter().map(|v| v as f32).collect())
+}
+
+/// Prototype lowpass for a P-branch polyphase filter bank (cutoff at the
+/// channel width 1/P, length P*M, unit DC gain) — Price 2021 design.
+pub fn pfb_prototype(branches: usize, taps_per_branch: usize) -> Result<Vec<f32>> {
+    if branches == 0 || taps_per_branch == 0 {
+        bail!("branches and taps_per_branch must be positive");
+    }
+    let length = branches * taps_per_branch;
+    let center = (length - 1) as f64 / 2.0;
+    let w = hamming(length);
+    let mut h: Vec<f64> = (0..length)
+        .map(|n| sinc((n as f64 - center) / branches as f64) * w[n])
+        .collect();
+    let s: f64 = h.iter().sum();
+    for v in &mut h {
+        *v /= s;
+    }
+    Ok(h.into_iter().map(|v| v as f32).collect())
+}
+
+/// Split a prototype h (P*M) into the branch bank h_p(m) = h[m*P + p].
+/// Returns row-major (P, M).
+pub fn polyphase_decompose(h: &[f32], branches: usize) -> Result<Vec<f32>> {
+    if h.len() % branches != 0 {
+        bail!(
+            "prototype length {} not divisible by branch count {}",
+            h.len(),
+            branches
+        );
+    }
+    let m = h.len() / branches;
+    let mut out = vec![0.0f32; h.len()];
+    for p in 0..branches {
+        for t in 0..m {
+            out[p * m + t] = h[t * branches + p];
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowpass_unit_dc_gain() {
+        let h = fir_lowpass(64, 0.25).unwrap();
+        let s: f64 = h.iter().map(|&x| x as f64).sum();
+        assert!((s - 1.0).abs() < 1e-6, "DC gain {s}");
+    }
+
+    #[test]
+    fn lowpass_symmetric() {
+        let h = fir_lowpass(33, 0.1).unwrap();
+        for i in 0..h.len() {
+            assert!((h[i] - h[h.len() - 1 - i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn lowpass_attenuates_high_freq() {
+        // frequency response at DC vs Nyquist
+        let h = fir_lowpass(64, 0.1).unwrap();
+        let resp = |f: f64| -> f64 {
+            let (mut re, mut im) = (0.0, 0.0);
+            for (n, &v) in h.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * f * n as f64;
+                re += v as f64 * ang.cos();
+                im += v as f64 * ang.sin();
+            }
+            (re * re + im * im).sqrt()
+        };
+        assert!((resp(0.0) - 1.0).abs() < 1e-6);
+        assert!(resp(0.45) < 1e-3, "stopband leak {}", resp(0.45));
+    }
+
+    #[test]
+    fn invalid_args_rejected() {
+        assert!(fir_lowpass(0, 0.2).is_err());
+        assert!(fir_lowpass(8, 0.0).is_err());
+        assert!(fir_lowpass(8, 0.6).is_err());
+        assert!(pfb_prototype(0, 4).is_err());
+    }
+
+    #[test]
+    fn polyphase_decompose_layout() {
+        // h = [0..8), P=4, M=2: h_p(m) = h[m*4+p]
+        let h: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let bank = polyphase_decompose(&h, 4).unwrap();
+        // branch p=0: [0, 4]; p=1: [1, 5]; ...
+        assert_eq!(bank, vec![0., 4., 1., 5., 2., 6., 3., 7.]);
+        assert!(polyphase_decompose(&h, 3).is_err());
+    }
+
+    #[test]
+    fn prototype_sums_to_one() {
+        let h = pfb_prototype(32, 8).unwrap();
+        assert_eq!(h.len(), 256);
+        let s: f64 = h.iter().map(|&x| x as f64).sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+}

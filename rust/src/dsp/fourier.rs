@@ -1,0 +1,218 @@
+//! Fourier substrate: DFT matrices (the TINA kernels), a direct O(n^2) DFT
+//! (the NumPy-naive analog) and an iterative radix-2 FFT (the CuPy/
+//! optimized analog).
+
+use crate::tensor::{ComplexTensor, Tensor};
+use anyhow::{bail, Result};
+use std::f64::consts::PI;
+
+/// DFM F[l, k] = exp(-2 pi i l k / n) as (re, im) f32 matrices — the
+/// pointwise-conv kernel of paper §4.1.
+pub fn dft_matrix(n: usize) -> (Tensor, Tensor) {
+    let mut re = vec![0.0f32; n * n];
+    let mut im = vec![0.0f32; n * n];
+    for l in 0..n {
+        for k in 0..n {
+            let ang = -2.0 * PI * (l as f64) * (k as f64) / n as f64;
+            re[l * n + k] = ang.cos() as f32;
+            im[l * n + k] = ang.sin() as f32;
+        }
+    }
+    (
+        Tensor::new(&[n, n], re).unwrap(),
+        Tensor::new(&[n, n], im).unwrap(),
+    )
+}
+
+/// IDFM IF[k, j] = exp(+2 pi i k j / n) / n — paper §4.2.
+pub fn idft_matrix(n: usize) -> (Tensor, Tensor) {
+    let mut re = vec![0.0f32; n * n];
+    let mut im = vec![0.0f32; n * n];
+    for k in 0..n {
+        for j in 0..n {
+            let ang = 2.0 * PI * (k as f64) * (j as f64) / n as f64;
+            re[k * n + j] = (ang.cos() / n as f64) as f32;
+            im[k * n + j] = (ang.sin() / n as f64) as f32;
+        }
+    }
+    (
+        Tensor::new(&[n, n], re).unwrap(),
+        Tensor::new(&[n, n], im).unwrap(),
+    )
+}
+
+/// Direct O(n^2) DFT of each row of a (B, N) complex tensor, accumulating
+/// in f64 — the numerically-trustworthy oracle.
+pub fn dft_direct(x: &ComplexTensor) -> Result<ComplexTensor> {
+    if x.re.rank() != 2 {
+        bail!("dft_direct expects (B, N), got {:?}", x.re.shape());
+    }
+    let (b, n) = (x.shape()[0], x.shape()[1]);
+    let mut out_re = vec![0.0f32; b * n];
+    let mut out_im = vec![0.0f32; b * n];
+    for bi in 0..b {
+        let row_re = &x.re.data()[bi * n..(bi + 1) * n];
+        let row_im = &x.im.data()[bi * n..(bi + 1) * n];
+        for k in 0..n {
+            let (mut sr, mut si) = (0.0f64, 0.0f64);
+            for l in 0..n {
+                let ang = -2.0 * PI * (l as f64) * (k as f64) / n as f64;
+                let (c, s) = (ang.cos(), ang.sin());
+                let (xr, xi) = (row_re[l] as f64, row_im[l] as f64);
+                sr += xr * c - xi * s;
+                si += xr * s + xi * c;
+            }
+            out_re[bi * n + k] = sr as f32;
+            out_im[bi * n + k] = si as f32;
+        }
+    }
+    ComplexTensor::new(
+        Tensor::new(&[b, n], out_re)?,
+        Tensor::new(&[b, n], out_im)?,
+    )
+}
+
+/// Iterative radix-2 Cooley-Tukey FFT over each row of a (B, N) complex
+/// tensor.  N must be a power of two.  This is the "vendor library" path
+/// of the optimized CPU baseline.
+pub fn fft_radix2(x: &ComplexTensor) -> Result<ComplexTensor> {
+    if x.re.rank() != 2 {
+        bail!("fft_radix2 expects (B, N), got {:?}", x.re.shape());
+    }
+    let (b, n) = (x.shape()[0], x.shape()[1]);
+    if !n.is_power_of_two() {
+        bail!("fft_radix2 needs power-of-two length, got {n}");
+    }
+    let mut re = x.re.data().to_vec();
+    let mut im = x.im.data().to_vec();
+
+    // Precompute twiddles for the largest stage once per call.
+    let mut tw_re = vec![0.0f32; n / 2];
+    let mut tw_im = vec![0.0f32; n / 2];
+    for i in 0..n / 2 {
+        let ang = -2.0 * PI * i as f64 / n as f64;
+        tw_re[i] = ang.cos() as f32;
+        tw_im[i] = ang.sin() as f32;
+    }
+
+    let levels = n.trailing_zeros();
+    for bi in 0..b {
+        let re = &mut re[bi * n..(bi + 1) * n];
+        let im = &mut im[bi * n..(bi + 1) * n];
+        // bit-reversal permutation
+        for i in 0..n {
+            let j = (i.reverse_bits() >> (usize::BITS - levels)) & (n - 1);
+            if j > i {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        // butterflies
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            let stride = n / len; // twiddle step into the n/2 table
+            let mut start = 0;
+            while start < n {
+                for k in 0..half {
+                    let (wr, wi) = (tw_re[k * stride], tw_im[k * stride]);
+                    let (i0, i1) = (start + k, start + k + half);
+                    let (ar, ai) = (re[i0], im[i0]);
+                    let (br, bi_) = (re[i1], im[i1]);
+                    let tr = br * wr - bi_ * wi;
+                    let ti = br * wi + bi_ * wr;
+                    re[i0] = ar + tr;
+                    im[i0] = ai + ti;
+                    re[i1] = ar - tr;
+                    im[i1] = ai - ti;
+                }
+                start += len;
+            }
+            len <<= 1;
+        }
+    }
+    ComplexTensor::new(Tensor::new(&[b, n], re)?, Tensor::new(&[b, n], im)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randc(b: usize, n: usize, seed: u64) -> ComplexTensor {
+        ComplexTensor::new(Tensor::randn(&[b, n], seed), Tensor::randn(&[b, n], seed + 1))
+            .unwrap()
+    }
+
+    #[test]
+    fn dft_matrix_first_row_is_ones() {
+        let (re, im) = dft_matrix(8);
+        for k in 0..8 {
+            assert!((re.at(&[0, k]) - 1.0).abs() < 1e-6);
+            assert!(im.at(&[0, k]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dft_of_impulse_is_flat() {
+        let mut x = ComplexTensor::from_real(Tensor::zeros(&[1, 16]));
+        x.re.set(&[0, 0], 1.0);
+        let z = dft_direct(&x).unwrap();
+        for k in 0..16 {
+            assert!((z.re.at(&[0, k]) - 1.0).abs() < 1e-5);
+            assert!(z.im.at(&[0, k]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dft_of_single_tone_peaks_at_bin() {
+        let n = 32;
+        let data: Vec<f32> = (0..n)
+            .map(|i| (2.0 * PI * 5.0 * i as f64 / n as f64).cos() as f32)
+            .collect();
+        let x = ComplexTensor::from_real(Tensor::new(&[1, n], data).unwrap());
+        let z = dft_direct(&x).unwrap();
+        let p = z.power();
+        let peak = (0..n).max_by(|&a, &b| p.at(&[0, a]).total_cmp(&p.at(&[0, b]))).unwrap();
+        assert!(peak == 5 || peak == n - 5, "peak at {peak}");
+    }
+
+    #[test]
+    fn fft_matches_direct_dft() {
+        for n in [2usize, 4, 8, 64, 256] {
+            let x = randc(2, n, 33);
+            let want = dft_direct(&x).unwrap();
+            let got = fft_radix2(&x).unwrap();
+            assert!(
+                got.allclose(&want, 1e-3, 1e-3),
+                "n={n} max diff re {}",
+                got.re.max_abs_diff(&want.re).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn fft_rejects_non_power_of_two() {
+        let x = randc(1, 12, 1);
+        assert!(fft_radix2(&x).is_err());
+    }
+
+    #[test]
+    fn idft_inverts_dft() {
+        let n = 16;
+        let x = randc(1, n, 7);
+        let z = dft_direct(&x).unwrap();
+        let (ifr, ifi) = idft_matrix(n);
+        let back = z.matmul(&ComplexTensor::new(ifr, ifi).unwrap()).unwrap();
+        assert!(back.allclose(&x, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn dft_matrix_matches_direct() {
+        let n = 8;
+        let x = randc(1, n, 21);
+        let (fr, fi) = dft_matrix(n);
+        let via_mat = x.matmul(&ComplexTensor::new(fr, fi).unwrap()).unwrap();
+        let direct = dft_direct(&x).unwrap();
+        assert!(via_mat.allclose(&direct, 1e-4, 1e-4));
+    }
+}

@@ -1,0 +1,16 @@
+//! DSP reference substrate: window functions, FIR design, Fourier
+//! transforms and polyphase filter-bank coefficients.
+//!
+//! `firdesign` mirrors `python/compile/coeffs.py` closed-form for closed-
+//! form (both compute in f64, cast to f32 at the end) so the rust runtime
+//! can regenerate the exact weights that were baked into the AOT artifacts.
+
+pub mod firdesign;
+pub mod fourier;
+pub mod pfb;
+pub mod window;
+
+pub use firdesign::{fir_lowpass, pfb_prototype, polyphase_decompose};
+pub use fourier::{dft_direct, dft_matrix, fft_radix2, idft_matrix};
+pub use pfb::{pfb_reference, PfbConfig};
+pub use window::{hamming, hann};

@@ -1,0 +1,60 @@
+//! Window functions (f64 internally, matching python/compile/coeffs.py).
+
+use std::f64::consts::PI;
+
+/// Hamming window: w[i] = 0.54 - 0.46 cos(2 pi i / (n-1)).
+pub fn hamming(n: usize) -> Vec<f64> {
+    if n == 1 {
+        return vec![1.0];
+    }
+    (0..n)
+        .map(|i| 0.54 - 0.46 * (2.0 * PI * i as f64 / (n - 1) as f64).cos())
+        .collect()
+}
+
+/// Hann window: w[i] = 0.5 - 0.5 cos(2 pi i / (n-1)).
+pub fn hann(n: usize) -> Vec<f64> {
+    if n == 1 {
+        return vec![1.0];
+    }
+    (0..n)
+        .map(|i| 0.5 - 0.5 * (2.0 * PI * i as f64 / (n - 1) as f64).cos())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hamming_endpoints_and_peak() {
+        let w = hamming(11);
+        assert!((w[0] - 0.08).abs() < 1e-12);
+        assert!((w[10] - 0.08).abs() < 1e-12);
+        assert!((w[5] - 1.0).abs() < 1e-12); // midpoint of odd-length window
+    }
+
+    #[test]
+    fn hann_endpoints_zero() {
+        let w = hann(9);
+        assert!(w[0].abs() < 1e-12);
+        assert!(w[8].abs() < 1e-12);
+        assert!((w[4] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetry() {
+        for n in [4usize, 5, 16, 33] {
+            let w = hamming(n);
+            for i in 0..n {
+                assert!((w[i] - w[n - 1 - i]).abs() < 1e-12, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn length_one() {
+        assert_eq!(hamming(1), vec![1.0]);
+        assert_eq!(hann(1), vec![1.0]);
+    }
+}

@@ -1,0 +1,32 @@
+//! # TINA-rs
+//!
+//! Reproduction of *"TINA: Acceleration of Non-NN Signal Processing
+//! Algorithms Using NN Accelerators"* (Boerkamp, van der Vlugt, Al-Ars,
+//! 2024) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** — the paper's four building blocks (standard / depthwise /
+//!   pointwise convolution, fully connected) as Pallas kernels, compiled
+//!   ahead of time (`python/compile`, `make artifacts`).
+//! * **L2** — the §3/§4 function→layer mappings lowered to HLO text.
+//! * **L3** — this crate: a self-contained runtime that loads the AOT
+//!   artifacts via PJRT and serves signal-processing requests, plus every
+//!   substrate the evaluation needs (baselines, DSP reference code, a
+//!   pure-rust TINA interpreter, benchmarking and property-testing kits).
+//!
+//! Python never runs on the request path; after `make artifacts` the
+//! `tina` binary only needs the `artifacts/` directory.
+//!
+//! See `DESIGN.md` for the full system inventory and per-experiment index.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod coordinator;
+pub mod dsp;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod tina;
+pub mod util;
+
+/// Crate-wide result alias (anyhow is the only non-xla dependency).
+pub type Result<T> = anyhow::Result<T>;

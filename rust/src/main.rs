@@ -1,0 +1,242 @@
+//! `tina` — leader binary for the TINA serving runtime.
+//!
+//! Subcommands:
+//!   info                         platform + artifact inventory
+//!   validate [--op <op>]         cross-check artifacts vs the interpreter
+//!   run <artifact> [--seed N]    execute one artifact on random input
+//!   serve [--addr HOST:PORT]     TCP JSON-line server
+//!   bench-smoke                  tiny end-to-end sanity benchmark
+//!
+//! Global options: --artifacts <dir> (default: ./artifacts)
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use tina::coordinator::{Coordinator, CoordinatorConfig, ImplPref, OpKind, OpRequest};
+use tina::runtime::{Engine, Registry};
+use tina::tensor::Tensor;
+use tina::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("tina: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("info") => info(args),
+        Some("validate") => validate(args),
+        Some("run") => run(args),
+        Some("serve") => serve(args),
+        Some("bench-smoke") => bench_smoke(args),
+        Some(other) => bail!("unknown subcommand '{other}' (try: info, validate, run, serve, bench-smoke)"),
+        None => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn usage() -> &'static str {
+    "tina — TINA serving runtime (rust + JAX + Pallas reproduction)\n\
+     \n\
+     usage: tina <subcommand> [options]\n\
+     \n\
+     subcommands:\n\
+       info          platform + artifact inventory\n\
+       validate      cross-check artifacts against the rust interpreter\n\
+       run <name>    execute one artifact on seeded random input\n\
+       serve         TCP JSON-line server (--addr 127.0.0.1:7070)\n\
+       bench-smoke   tiny end-to-end sanity benchmark\n\
+     \n\
+     options:\n\
+       --artifacts <dir>   artifact directory (default ./artifacts)\n\
+       --addr <host:port>  serve address\n\
+       --op <op>           restrict validate to one op\n\
+       --seed <n>          input seed for run\n\
+       --no-batching       disable the dynamic batcher"
+}
+
+fn artifact_dir(args: &Args) -> String {
+    args.opt_or("artifacts", "artifacts").to_string()
+}
+
+fn info(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args);
+    let registry = Registry::load(&dir)
+        .with_context(|| tina::coordinator::service::missing_artifacts_hint(dir.as_ref()))?;
+    registry.check_files()?;
+    let engine = Engine::new(registry.clone())?;
+    println!("platform:  {}", engine.platform());
+    println!("artifacts: {} ({})", registry.len(), dir);
+    let mut by_op: std::collections::BTreeMap<&str, usize> = Default::default();
+    for e in registry.entries() {
+        *by_op.entry(e.op.as_str()).or_default() += 1;
+    }
+    for (op, n) in by_op {
+        println!("  {op:<10} {n} variants");
+    }
+    Ok(())
+}
+
+/// Cross-check every (or one op's) tina artifact against the interpreter.
+fn validate(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args);
+    let op_filter = args.opt("op");
+    let engine = Engine::from_dir(&dir)
+        .with_context(|| tina::coordinator::service::missing_artifacts_hint(dir.as_ref()))?;
+    let registry = engine.registry().clone();
+    let router = tina::coordinator::Router::new(registry.clone(), Default::default());
+
+    let mut checked = 0;
+    let mut skipped = 0;
+    for meta in registry.entries() {
+        if meta.impl_ != "tina" || meta.dtype != "f32" {
+            skipped += 1;
+            continue;
+        }
+        if let Some(f) = op_filter {
+            if meta.op != f {
+                continue;
+            }
+        }
+        let op = OpKind::parse(&meta.op)?;
+        let inputs: Vec<Tensor> = meta
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| Tensor::randn(&spec.shape, 42 + i as u64))
+            .collect();
+        let got = engine.execute(&meta.name, &inputs)?;
+        let req = OpRequest::new(op, inputs.clone()).with_impl(ImplPref::Interp);
+        let target = router.route(&req)?;
+        let tina::coordinator::Target::Interp { key } = target else {
+            bail!("interp route expected");
+        };
+        let want = router.interpreter(&key, &req)?.run(&inputs)?;
+        if got.len() != want.len() {
+            bail!("{}: output arity {} vs {}", meta.name, got.len(), want.len());
+        }
+        for (g, w) in got.iter().zip(&want) {
+            let ok = g.allclose(w, 2e-3, 2e-3);
+            if !ok {
+                bail!(
+                    "{}: PJRT vs interpreter mismatch (max abs diff {})",
+                    meta.name,
+                    g.max_abs_diff(w).unwrap_or(f32::NAN)
+                );
+            }
+        }
+        println!("ok  {}", meta.name);
+        checked += 1;
+    }
+    println!("validated {checked} artifacts ({skipped} non-tina/f32 skipped)");
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args);
+    let name = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: tina run <artifact-name>"))?;
+    let seed = args.opt_usize("seed", 42)? as u64;
+    let engine = Engine::from_dir(&dir)?;
+    let meta = engine
+        .registry()
+        .get(name)
+        .ok_or_else(|| anyhow!("unknown artifact '{name}' (see `tina info`)"))?
+        .clone();
+    let inputs: Vec<Tensor> = meta
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| Tensor::randn(&spec.shape, seed + i as u64))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let outputs = engine.execute(name, &inputs)?;
+    let dt = t0.elapsed();
+    println!("artifact: {name}");
+    println!("first-run (incl. compile): {dt:?}");
+    let t1 = std::time::Instant::now();
+    let _ = engine.execute(name, &inputs)?;
+    println!("second-run (cached exe):   {:?}", t1.elapsed());
+    for (i, o) in outputs.iter().enumerate() {
+        let preview: Vec<f32> = o.data().iter().take(4).copied().collect();
+        println!("output[{i}]: shape {:?}, head {:?}", o.shape(), preview);
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args);
+    let addr = args.opt_or("addr", "127.0.0.1:7070").to_string();
+    let config = CoordinatorConfig {
+        batching: !args.flag("no-batching"),
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::from_dir(&dir, config)
+            .with_context(|| tina::coordinator::service::missing_artifacts_hint(dir.as_ref()))?,
+    );
+    let warmed = coord.warmup(None)?;
+    eprintln!("tina: warmed {warmed} executables");
+    let stop = Arc::new(AtomicBool::new(false));
+    tina::coordinator::server::serve(coord, &addr, stop)
+}
+
+/// Tiny smoke benchmark: one op through every path (artifact if present,
+/// interpreter, naive, optimized).
+fn bench_smoke(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args);
+    let cfg = tina::benchkit::BenchConfig::quick();
+    let x = Tensor::randn(&[1, 4096], 7);
+    let taps = tina::dsp::fir_lowpass(64, 0.25)?;
+
+    let mut table = tina::benchkit::Table::new(
+        "bench-smoke: fir L=4096 (median)",
+        &["impl", "median", "speedup vs naive"],
+    );
+    let naive = tina::benchkit::run(&cfg, || {
+        tina::benchkit::black_box(tina::baselines::naive::fir(&x, &taps).unwrap());
+    })
+    .summary();
+    let opt = tina::benchkit::run(&cfg, || {
+        tina::benchkit::black_box(tina::baselines::optimized::fir(&x, &taps).unwrap());
+    })
+    .summary();
+    table.row(vec![
+        "naive".into(),
+        tina::util::histogram::fmt_ns(naive.median_ns as u64),
+        "1.0x".into(),
+    ]);
+    table.row(vec![
+        "optimized".into(),
+        tina::util::histogram::fmt_ns(opt.median_ns as u64),
+        format!("{:.1}x", opt.speedup_vs(&naive)),
+    ]);
+
+    if let Ok(engine) = Engine::from_dir(&dir) {
+        if engine.registry().get("fir_tina_f32_B1_L4096").is_some() {
+            engine.prepare("fir_tina_f32_B1_L4096")?;
+            let stats = tina::benchkit::run(&cfg, || {
+                tina::benchkit::black_box(
+                    engine
+                        .execute("fir_tina_f32_B1_L4096", std::slice::from_ref(&x))
+                        .unwrap(),
+                );
+            })
+            .summary();
+            table.row(vec![
+                "tina (PJRT)".into(),
+                tina::util::histogram::fmt_ns(stats.median_ns as u64),
+                format!("{:.1}x", stats.speedup_vs(&naive)),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,269 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python -m compile.aot`) and resolves variant names to HLO files and
+//! ABI metadata.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("float32")
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One manifest entry: a compiled (op, impl, dtype, size) variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub op: String,
+    /// "tina" or "jaxref".
+    pub impl_: String,
+    /// Internal compute dtype: "f32" or "bf16" (interface is always f32).
+    pub dtype: String,
+    /// Op-specific parameters (sizes, taps, branches, batch, ...).
+    pub params: BTreeMap<String, f64>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// HLO filename relative to the artifact directory.
+    pub file: String,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let s = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("entry missing '{key}'"))
+        };
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry missing '{key}'"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let mut params = BTreeMap::new();
+        if let Some(obj) = j.get("params").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                if let Some(x) = v.as_f64() {
+                    params.insert(k.clone(), x);
+                }
+            }
+        }
+        Ok(ArtifactMeta {
+            name: s("name")?,
+            op: s("op")?,
+            impl_: s("impl")?,
+            dtype: s("dtype")?,
+            params,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            file: s("file")?,
+        })
+    }
+
+    /// Batch dimension of the first input (1 when the op has no batch).
+    pub fn batch(&self) -> usize {
+        self.params.get("batch").map(|&b| b as usize).unwrap_or(1)
+    }
+
+    pub fn param(&self, key: &str) -> Option<f64> {
+        self.params.get(key).copied()
+    }
+}
+
+/// The artifact registry: all manifest entries plus the directory they
+/// live in.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    dir: PathBuf,
+    entries: Vec<ArtifactMeta>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        Self::from_manifest_text(dir, &text)
+    }
+
+    /// Parse a manifest from text (exposed for tests).
+    pub fn from_manifest_text(dir: PathBuf, text: &str) -> Result<Registry> {
+        let doc = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut by_name = BTreeMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            if by_name.insert(e.name.clone(), i).is_some() {
+                bail!("duplicate artifact name '{}'", e.name);
+            }
+        }
+        Ok(Registry {
+            dir,
+            entries,
+            by_name,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[ArtifactMeta] {
+        &self.entries
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// All artifacts for a given (op, impl, dtype), sorted by name —
+    /// what the router sweeps when matching a request.
+    pub fn find(&self, op: &str, impl_: &str, dtype: &str) -> Vec<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && e.impl_ == impl_ && e.dtype == dtype)
+            .collect()
+    }
+
+    /// Verify every referenced HLO file exists on disk.
+    pub fn check_files(&self) -> Result<()> {
+        for e in &self.entries {
+            let p = self.hlo_path(e);
+            if !p.is_file() {
+                bail!("artifact file missing: {}", p.display());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "version": 1,
+      "jax_version": "0.8.2",
+      "entries": [
+        {"name": "fir_tina_f32_B1_L1024", "op": "fir", "impl": "tina",
+         "dtype": "f32", "params": {"l": 1024, "taps": 64, "batch": 1},
+         "inputs": [{"shape": [1, 1024], "dtype": "float32"}],
+         "outputs": [{"shape": [1, 961], "dtype": "float32"}],
+         "file": "fir_tina_f32_B1_L1024.hlo.txt"},
+        {"name": "dft_jaxref_f32_B4_N64", "op": "dft", "impl": "jaxref",
+         "dtype": "f32", "params": {"n": 64, "batch": 4},
+         "inputs": [{"shape": [4, 64], "dtype": "float32"}],
+         "outputs": [{"shape": [4, 64], "dtype": "float32"},
+                     {"shape": [4, 64], "dtype": "float32"}],
+         "file": "dft_jaxref_f32_B4_N64.hlo.txt"}
+      ]
+    }"#;
+
+    fn registry() -> Registry {
+        Registry::from_manifest_text(PathBuf::from("/nonexistent"), MANIFEST).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let r = registry();
+        assert_eq!(r.len(), 2);
+        let fir = r.get("fir_tina_f32_B1_L1024").unwrap();
+        assert_eq!(fir.op, "fir");
+        assert_eq!(fir.impl_, "tina");
+        assert_eq!(fir.batch(), 1);
+        assert_eq!(fir.param("taps"), Some(64.0));
+        assert_eq!(fir.inputs[0].shape, vec![1, 1024]);
+        assert_eq!(fir.outputs[0].elements(), 961);
+    }
+
+    #[test]
+    fn multi_output_entry() {
+        let r = registry();
+        let dft = r.get("dft_jaxref_f32_B4_N64").unwrap();
+        assert_eq!(dft.outputs.len(), 2);
+    }
+
+    #[test]
+    fn find_filters() {
+        let r = registry();
+        assert_eq!(r.find("fir", "tina", "f32").len(), 1);
+        assert_eq!(r.find("fir", "jaxref", "f32").len(), 0);
+        assert_eq!(r.find("dft", "jaxref", "f32").len(), 1);
+    }
+
+    #[test]
+    fn missing_files_detected() {
+        let r = registry();
+        assert!(r.check_files().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version_and_duplicates() {
+        let bad = MANIFEST.replace("\"version\": 1", "\"version\": 9");
+        assert!(Registry::from_manifest_text(PathBuf::new(), &bad).is_err());
+        let dup = MANIFEST.replace("dft_jaxref_f32_B4_N64", "fir_tina_f32_B1_L1024");
+        assert!(Registry::from_manifest_text(PathBuf::new(), &dup).is_err());
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(registry().get("nope").is_none());
+    }
+}

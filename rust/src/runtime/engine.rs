@@ -1,0 +1,255 @@
+//! Single-threaded PJRT engine: compile HLO text once, execute many times.
+//!
+//! Not Send (the `xla` crate's client is `Rc`-based); multi-threaded
+//! callers go through [`super::handle::EngineHandle`].
+
+use super::artifact::{ArtifactMeta, Registry};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Execution statistics (reset-able; used by the §Perf pass).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_ns: u64,
+    pub execute_ns: u64,
+}
+
+/// PJRT CPU engine with a per-artifact executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: Registry,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact registry.
+    pub fn new(registry: Registry) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            registry,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    /// Convenience: load the registry from a directory and build an engine.
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Engine::new(Registry::load(dir)?)
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.borrow()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = EngineStats::default();
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn prepare(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let meta = self
+            .registry
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.registry.hlo_path(meta);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let exe = Rc::new(exe);
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.compiles += 1;
+            stats.compile_ns += t0.elapsed().as_nanos() as u64;
+        }
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact on host tensors, with ABI checking against the
+    /// manifest.  Returns the output tensors in manifest order.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self
+            .registry
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        self.check_inputs(meta, inputs)?;
+        let exe = self.prepare(name)?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_>>()?;
+
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact '{name}'"))?;
+        let tuple = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("artifact '{name}' returned no buffers"))?
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.executions += 1;
+            stats.execute_ns += t0.elapsed().as_nanos() as u64;
+        }
+
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                meta.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, spec)| literal_to_tensor(&lit, &spec.shape))
+            .collect()
+    }
+
+    fn check_inputs(&self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact '{}' wants {} inputs, got {}",
+                meta.name,
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "artifact '{}' input {i}: shape {:?} != expected {:?}",
+                    meta.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Upload a host tensor to a device buffer (outside the hot path).
+    ///
+    /// The paper's measurement protocol starts timing *after* input data is
+    /// resident on the accelerator; `upload` + [`Engine::execute_buffers`]
+    /// reproduce that split (see EXPERIMENTS.md §Perf L3).
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+            .map_err(|e| anyhow!("upload {:?}: {e:?}", t.shape()))
+    }
+
+    /// Execute on pre-uploaded device buffers; only the computation and the
+    /// device->host result fetch are in this call.
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        inputs: &[xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        let meta = self
+            .registry
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let exe = self.prepare(name)?;
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing artifact '{name}' (buffers)"))?;
+        let tuple = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("artifact '{name}' returned no buffers"))?
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.executions += 1;
+            stats.execute_ns += t0.elapsed().as_nanos() as u64;
+        }
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                meta.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, spec)| literal_to_tensor(&lit, &spec.shape))
+            .collect()
+    }
+
+    /// Number of executables resident in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Drop all cached executables (frees PJRT memory).
+    pub fn clear_cache(&self) {
+        self.cache.borrow_mut().clear();
+    }
+}
+
+/// Host tensor -> XLA literal (f32, row-major).
+///
+/// Uses the single-copy constructor (`create_from_shape_and_untyped_data`)
+/// rather than `vec1` + `reshape`, which copies the buffer twice — measured
+/// at ~15% of small-artifact execution time (EXPERIMENTS.md §Perf L3).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, t.shape(), bytes)
+        .map_err(|e| anyhow!("literal create for {:?}: {e:?}", t.shape()))
+}
+
+/// XLA literal -> host tensor, validated against the expected shape.
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    let want: usize = shape.iter().product();
+    if data.len() != want {
+        bail!(
+            "literal has {} elements, expected {} for shape {:?}",
+            data.len(),
+            want,
+            shape
+        );
+    }
+    Tensor::new(shape, data)
+}

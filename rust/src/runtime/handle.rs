@@ -1,0 +1,150 @@
+//! Send + Clone handle to an [`Engine`] running on its own thread.
+//!
+//! The `xla` crate's PJRT client is `Rc`-based, so the engine itself cannot
+//! cross threads.  `EngineHandle` owns a dedicated engine thread and
+//! forwards execution requests over an mpsc channel, returning results
+//! through one-shot slots.  This is the execution backend the coordinator
+//! workers share.
+
+use super::artifact::Registry;
+use super::engine::{Engine, EngineStats};
+use crate::tensor::Tensor;
+use crate::util::threadpool::OneShot;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+enum Request {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: OneShot<Result<Vec<Tensor>>>,
+    },
+    Prepare {
+        name: String,
+        reply: OneShot<Result<()>>,
+    },
+    Stats {
+        reply: OneShot<EngineStats>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, Send handle to a dedicated engine thread.
+pub struct EngineHandle {
+    tx: Sender<Request>,
+    // joined on explicit shutdown; detached otherwise
+    _thread: std::sync::Arc<EngineThread>,
+}
+
+impl Clone for EngineHandle {
+    fn clone(&self) -> Self {
+        EngineHandle {
+            tx: self.tx.clone(),
+            _thread: std::sync::Arc::clone(&self._thread),
+        }
+    }
+}
+
+struct EngineThread {
+    tx: Sender<Request>,
+    join: std::sync::Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Drop for EngineThread {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.join.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Spawn an engine thread over a registry.
+    pub fn spawn(registry: Registry) -> Result<EngineHandle> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("tina-engine".into())
+            .spawn(move || {
+                let engine = match Engine::new(registry) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for req in rx {
+                    match req {
+                        Request::Execute {
+                            name,
+                            inputs,
+                            reply,
+                        } => {
+                            reply.set(engine.execute(&name, &inputs));
+                        }
+                        Request::Prepare { name, reply } => {
+                            reply.set(engine.prepare(&name).map(|_| ()));
+                        }
+                        Request::Stats { reply } => reply.set(engine.stats()),
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(EngineHandle {
+            tx: tx.clone(),
+            _thread: std::sync::Arc::new(EngineThread {
+                tx,
+                join: std::sync::Mutex::new(Some(join)),
+            }),
+        })
+    }
+
+    /// Spawn from an artifact directory.
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<EngineHandle> {
+        Self::spawn(Registry::load(dir)?)
+    }
+
+    /// Execute an artifact (blocking until the engine thread replies).
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let reply = OneShot::new();
+        self.tx
+            .send(Request::Execute {
+                name: name.to_string(),
+                inputs,
+                reply: reply.clone(),
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply.wait()
+    }
+
+    /// Warm the executable cache for an artifact.
+    pub fn prepare(&self, name: &str) -> Result<()> {
+        let reply = OneShot::new();
+        self.tx
+            .send(Request::Prepare {
+                name: name.to_string(),
+                reply: reply.clone(),
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply.wait()
+    }
+
+    /// Engine-side statistics snapshot.
+    pub fn stats(&self) -> Result<EngineStats> {
+        let reply = OneShot::new();
+        self.tx
+            .send(Request::Stats {
+                reply: reply.clone(),
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        Ok(reply.wait())
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `make artifacts` and executes them on the CPU PJRT client.
+//!
+//! * [`artifact`] — manifest.json parsing and the artifact registry;
+//! * [`engine`] — single-threaded engine: HLO text -> compile -> execute,
+//!   with an executable cache (PJRT handles are `Rc`-based and not Send);
+//! * [`handle`] — a Send + Clone handle that owns an engine on a dedicated
+//!   thread and serializes execution requests through a channel; this is
+//!   what the multi-threaded coordinator talks to.
+
+pub mod artifact;
+pub mod engine;
+pub mod handle;
+
+pub use artifact::{ArtifactMeta, Registry, TensorSpec};
+pub use engine::Engine;
+pub use handle::EngineHandle;

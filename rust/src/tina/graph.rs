@@ -1,0 +1,355 @@
+//! Dataflow IR for TINA plans: a topologically-ordered list of nodes over
+//! the four building-block layers plus the data-movement glue (§3's
+//! reshapes) and the complex-arithmetic combiners the Fourier mappings
+//! need.
+//!
+//! Kernels and biases are ordinary values — constants when the weight is
+//! baked (FIR taps, DFM) and graph inputs when it is a runtime operand
+//! (e.g. the second matrix of an elementwise multiply), matching how the
+//! jax side closes over constants.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Index of a value produced by an input or node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ValueId(pub usize);
+
+/// Node operation.  Layer nodes take inputs [x, kernel, bias].
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeOp {
+    /// Eq. (1): inputs [x (T,Cin,W), k (Cout,Cin,N), b (Cout)].
+    StandardConv1d,
+    /// Eq. (2): inputs [x (T,C,W), k (C,M), b (C)].
+    DepthwiseConv1d,
+    /// Eq. (3): inputs [x (T,Cin,S), k (Cin,Cout), b (Cout)].
+    PointwiseConv,
+    /// Eq. (4): inputs [x (B,Cin), k (Cin,Cout), b (Cout)].
+    FullyConnected,
+    /// Materialized weight/bias.
+    Constant(Tensor),
+    /// Shape glue.
+    Reshape(Vec<usize>),
+    Transpose2,
+    Permute3([usize; 3]),
+    /// Keep `count` elements at multiples of `stride` along `axis`
+    /// (the stride parameter of paper §2.1, used by the STFT extension op).
+    StridedSlice {
+        axis: usize,
+        stride: usize,
+        count: usize,
+    },
+    /// Elementwise combiners for (re, im) complex plumbing.
+    Add,
+    Sub,
+}
+
+impl NodeOp {
+    /// True if this is one of the four TINA building blocks.
+    pub fn is_layer(&self) -> bool {
+        matches!(
+            self,
+            NodeOp::StandardConv1d
+                | NodeOp::DepthwiseConv1d
+                | NodeOp::PointwiseConv
+                | NodeOp::FullyConnected
+        )
+    }
+
+    /// Human name used in plan dumps and tests.
+    pub fn name(&self) -> &'static str {
+        match self {
+            NodeOp::StandardConv1d => "standard_conv1d",
+            NodeOp::DepthwiseConv1d => "depthwise_conv1d",
+            NodeOp::PointwiseConv => "pointwise_conv",
+            NodeOp::FullyConnected => "fully_connected",
+            NodeOp::Constant(_) => "constant",
+            NodeOp::Reshape(_) => "reshape",
+            NodeOp::Transpose2 => "transpose2",
+            NodeOp::Permute3(_) => "permute3",
+            NodeOp::StridedSlice { .. } => "strided_slice",
+            NodeOp::Add => "add",
+            NodeOp::Sub => "sub",
+        }
+    }
+}
+
+/// A graph node: op + input value ids.  Produces exactly one value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub op: NodeOp,
+    pub inputs: Vec<ValueId>,
+}
+
+/// A TINA plan: inputs, nodes in topological order, outputs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Graph {
+    /// (value id, shape) of each external input, in call order.
+    pub inputs: Vec<(ValueId, Vec<usize>)>,
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<ValueId>,
+    next_id: usize,
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    /// Declare an external input with a static shape.
+    pub fn input(&mut self, shape: &[usize]) -> ValueId {
+        let id = ValueId(self.next_id);
+        self.next_id += 1;
+        self.inputs.push((id, shape.to_vec()));
+        id
+    }
+
+    /// Append a node; inputs must already exist (enforces topo order).
+    pub fn push(&mut self, op: NodeOp, inputs: &[ValueId]) -> ValueId {
+        for i in inputs {
+            assert!(i.0 < self.next_id, "node input {i:?} not yet defined");
+        }
+        let id = ValueId(self.next_id);
+        self.next_id += 1;
+        self.nodes.push(Node {
+            op,
+            inputs: inputs.to_vec(),
+        });
+        id
+    }
+
+    pub fn constant(&mut self, t: Tensor) -> ValueId {
+        self.push(NodeOp::Constant(t), &[])
+    }
+
+    pub fn set_outputs(&mut self, outs: &[ValueId]) {
+        self.outputs = outs.to_vec();
+    }
+
+    /// Total number of values (inputs + node outputs).
+    pub fn value_count(&self) -> usize {
+        self.next_id
+    }
+
+    /// Map a ValueId to the producing node index, if it is a node output.
+    pub fn producer(&self, v: ValueId) -> Option<usize> {
+        let n_inputs = self.inputs.len();
+        if v.0 < n_inputs {
+            None
+        } else {
+            Some(v.0 - n_inputs)
+        }
+    }
+
+    /// Names of the building-block layers in execution order (the paper's
+    /// Table 1 "building blocks" column — asserted by mapping tests).
+    pub fn layer_names(&self) -> Vec<&'static str> {
+        self.nodes
+            .iter()
+            .filter(|n| n.op.is_layer())
+            .map(|n| n.op.name())
+            .collect()
+    }
+
+    /// Static shape inference over the whole graph.  Returns one shape per
+    /// value id; errors on any inconsistency.
+    pub fn infer_shapes(&self) -> Result<Vec<Vec<usize>>> {
+        let mut shapes: Vec<Option<Vec<usize>>> = vec![None; self.value_count()];
+        for (id, shape) in &self.inputs {
+            shapes[id.0] = Some(shape.clone());
+        }
+        let n_inputs = self.inputs.len();
+        for (i, node) in self.nodes.iter().enumerate() {
+            let out_id = n_inputs + i;
+            let get = |v: ValueId| -> Result<&Vec<usize>> {
+                shapes[v.0]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("value {v:?} used before defined"))
+            };
+            let out_shape: Vec<usize> = match &node.op {
+                NodeOp::Constant(t) => t.shape().to_vec(),
+                NodeOp::Reshape(target) => {
+                    let src = get(node.inputs[0])?;
+                    let n: usize = src.iter().product();
+                    let m: usize = target.iter().product();
+                    if n != m {
+                        bail!("reshape {:?} -> {:?} changes element count", src, target);
+                    }
+                    target.clone()
+                }
+                NodeOp::Transpose2 => {
+                    let s = get(node.inputs[0])?;
+                    if s.len() != 2 {
+                        bail!("transpose2 on rank {} value", s.len());
+                    }
+                    vec![s[1], s[0]]
+                }
+                NodeOp::Permute3(p) => {
+                    let s = get(node.inputs[0])?;
+                    if s.len() != 3 {
+                        bail!("permute3 on rank {} value", s.len());
+                    }
+                    vec![s[p[0]], s[p[1]], s[p[2]]]
+                }
+                NodeOp::StridedSlice { axis, stride, count } => {
+                    let s = get(node.inputs[0])?;
+                    if *axis >= s.len() {
+                        bail!("strided_slice axis {axis} out of range for {s:?}");
+                    }
+                    if *stride == 0 || *count == 0 || (*count - 1) * *stride >= s[*axis] {
+                        bail!(
+                            "strided_slice (stride {stride}, count {count}) out of range for {s:?}"
+                        );
+                    }
+                    let mut out = s.clone();
+                    out[*axis] = *count;
+                    out
+                }
+                NodeOp::Add | NodeOp::Sub => {
+                    let a = get(node.inputs[0])?;
+                    let b = get(node.inputs[1])?;
+                    if a != b {
+                        bail!("elementwise combiner shape mismatch {:?} vs {:?}", a, b);
+                    }
+                    a.clone()
+                }
+                NodeOp::DepthwiseConv1d => {
+                    let x = get(node.inputs[0])?.clone();
+                    let k = get(node.inputs[1])?.clone();
+                    let b = get(node.inputs[2])?.clone();
+                    if x.len() != 3 || k.len() != 2 || b.len() != 1 {
+                        bail!("depthwise rank error: x{x:?} k{k:?} b{b:?}");
+                    }
+                    if x[1] != k[0] || b[0] != x[1] {
+                        bail!("depthwise channel mismatch: x{x:?} k{k:?} b{b:?}");
+                    }
+                    if x[2] < k[1] {
+                        bail!("depthwise window too long: x{x:?} k{k:?}");
+                    }
+                    vec![x[0], x[1], x[2] - k[1] + 1]
+                }
+                NodeOp::StandardConv1d => {
+                    let x = get(node.inputs[0])?.clone();
+                    let k = get(node.inputs[1])?.clone();
+                    let b = get(node.inputs[2])?.clone();
+                    if x.len() != 3 || k.len() != 3 || b.len() != 1 {
+                        bail!("standard conv rank error: x{x:?} k{k:?} b{b:?}");
+                    }
+                    if x[1] != k[1] || b[0] != k[0] {
+                        bail!("standard conv shape mismatch: x{x:?} k{k:?} b{b:?}");
+                    }
+                    if x[2] < k[2] {
+                        bail!("standard conv window too long: x{x:?} k{k:?}");
+                    }
+                    vec![x[0], k[0], x[2] - k[2] + 1]
+                }
+                NodeOp::PointwiseConv => {
+                    let x = get(node.inputs[0])?.clone();
+                    let k = get(node.inputs[1])?.clone();
+                    let b = get(node.inputs[2])?.clone();
+                    if x.len() != 3 || k.len() != 2 || b.len() != 1 {
+                        bail!("pointwise rank error: x{x:?} k{k:?} b{b:?}");
+                    }
+                    if x[1] != k[0] || b[0] != k[1] {
+                        bail!("pointwise shape mismatch: x{x:?} k{k:?} b{b:?}");
+                    }
+                    vec![x[0], k[1], x[2]]
+                }
+                NodeOp::FullyConnected => {
+                    let x = get(node.inputs[0])?.clone();
+                    let k = get(node.inputs[1])?.clone();
+                    let b = get(node.inputs[2])?.clone();
+                    if x.len() != 2 || k.len() != 2 || b.len() != 1 {
+                        bail!("fc rank error: x{x:?} k{k:?} b{b:?}");
+                    }
+                    if x[1] != k[0] || b[0] != k[1] {
+                        bail!("fc shape mismatch: x{x:?} k{k:?} b{b:?}");
+                    }
+                    vec![x[0], k[1]]
+                }
+            };
+            shapes[out_id] = Some(out_shape);
+        }
+        for out in &self.outputs {
+            if shapes[out.0].is_none() {
+                bail!("graph output {out:?} has no producer");
+            }
+        }
+        Ok(shapes.into_iter().map(|s| s.unwrap_or_default()).collect())
+    }
+
+    /// Validate structure: inputs used consistently, outputs defined, all
+    /// shapes inferable.
+    pub fn validate(&self) -> Result<()> {
+        if self.outputs.is_empty() {
+            bail!("graph has no outputs");
+        }
+        self.infer_shapes().map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_graph() -> Graph {
+        // (2, 8) input -> reshape (1, 2, 8) -> depthwise M=3 -> (1, 2, 6)
+        let mut g = Graph::new();
+        let x = g.input(&[2, 8]);
+        let r = g.push(NodeOp::Reshape(vec![1, 2, 8]), &[x]);
+        let k = g.constant(Tensor::ones(&[2, 3]));
+        let b = g.constant(Tensor::zeros(&[2]));
+        let o = g.push(NodeOp::DepthwiseConv1d, &[r, k, b]);
+        g.set_outputs(&[o]);
+        g
+    }
+
+    #[test]
+    fn shape_inference_chain() {
+        let g = chain_graph();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.outputs[0].0], vec![1, 2, 6]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn layer_names_reported() {
+        let g = chain_graph();
+        assert_eq!(g.layer_names(), vec!["depthwise_conv1d"]);
+    }
+
+    #[test]
+    fn reshape_count_checked() {
+        let mut g = Graph::new();
+        let x = g.input(&[4]);
+        g.push(NodeOp::Reshape(vec![5]), &[x]);
+        g.set_outputs(&[ValueId(1)]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn channel_mismatch_detected() {
+        let mut g = Graph::new();
+        let x = g.input(&[1, 3, 8]);
+        let k = g.constant(Tensor::ones(&[2, 3])); // wrong channel count
+        let b = g.constant(Tensor::zeros(&[3]));
+        let o = g.push(NodeOp::DepthwiseConv1d, &[x, k, b]);
+        g.set_outputs(&[o]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn no_outputs_invalid() {
+        let mut g = Graph::new();
+        g.input(&[1]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet defined")]
+    fn forward_reference_panics() {
+        let mut g = Graph::new();
+        let _ = g.input(&[1]);
+        g.push(NodeOp::Add, &[ValueId(5), ValueId(6)]);
+    }
+}

@@ -1,0 +1,222 @@
+//! Pure-rust executor for TINA graphs: the portable fallback path and the
+//! cross-check oracle for the PJRT artifacts.
+
+use super::graph::{Graph, NodeOp, ValueId};
+use super::layers;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+
+/// Executes TINA graphs on host tensors.
+///
+/// Stateless aside from holding the graph; `run` may be called from many
+/// threads on the same interpreter ( &self ).
+#[derive(Debug, Clone)]
+pub struct Interpreter {
+    graph: Graph,
+}
+
+impl Interpreter {
+    /// Validate the graph once and wrap it.
+    pub fn new(graph: Graph) -> Result<Interpreter> {
+        graph.validate().context("invalid TINA graph")?;
+        Ok(Interpreter { graph })
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Execute with the given inputs; returns the graph outputs in order.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let g = &self.graph;
+        if inputs.len() != g.inputs.len() {
+            bail!(
+                "expected {} inputs, got {}",
+                g.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut values: Vec<Option<Tensor>> = vec![None; g.value_count()];
+        for ((id, shape), t) in g.inputs.iter().zip(inputs) {
+            if t.shape() != shape.as_slice() {
+                bail!(
+                    "input {id:?} shape {:?} != declared {:?}",
+                    t.shape(),
+                    shape
+                );
+            }
+            values[id.0] = Some(t.clone());
+        }
+        let n_inputs = g.inputs.len();
+        for (i, node) in g.nodes.iter().enumerate() {
+            let out_id = n_inputs + i;
+            let get = |v: ValueId| -> Result<&Tensor> {
+                values[v.0]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("value {v:?} not computed"))
+            };
+            let out = match &node.op {
+                NodeOp::Constant(t) => t.clone(),
+                NodeOp::Reshape(shape) => get(node.inputs[0])?.reshape(shape)?,
+                NodeOp::Transpose2 => get(node.inputs[0])?.transpose2()?,
+                NodeOp::Permute3(p) => get(node.inputs[0])?.permute3(*p)?,
+                NodeOp::StridedSlice { axis, stride, count } => {
+                    get(node.inputs[0])?.stride_axis(*axis, *stride, *count)?
+                }
+                NodeOp::Add => crate::tensor::add(get(node.inputs[0])?, get(node.inputs[1])?)?,
+                NodeOp::Sub => crate::tensor::sub(get(node.inputs[0])?, get(node.inputs[1])?)?,
+                NodeOp::DepthwiseConv1d => layers::depthwise_conv(
+                    get(node.inputs[0])?,
+                    get(node.inputs[1])?,
+                    get(node.inputs[2])?,
+                )?,
+                NodeOp::StandardConv1d => layers::standard_conv(
+                    get(node.inputs[0])?,
+                    get(node.inputs[1])?,
+                    get(node.inputs[2])?,
+                )?,
+                NodeOp::PointwiseConv => layers::pointwise_conv(
+                    get(node.inputs[0])?,
+                    get(node.inputs[1])?,
+                    get(node.inputs[2])?,
+                )?,
+                NodeOp::FullyConnected => layers::fully_connected(
+                    get(node.inputs[0])?,
+                    get(node.inputs[1])?,
+                    get(node.inputs[2])?,
+                )?,
+            };
+            values[out_id] = Some(out);
+        }
+        g.outputs
+            .iter()
+            .map(|o| {
+                values[o.0]
+                    .clone()
+                    .ok_or_else(|| anyhow::anyhow!("output {o:?} not computed"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::naive;
+    use crate::dsp;
+    use crate::tensor::ComplexTensor;
+    use crate::tina::lower;
+
+    fn interp(g: Graph) -> Interpreter {
+        Interpreter::new(g).unwrap()
+    }
+
+    #[test]
+    fn ewmult_matches_naive() {
+        let a = Tensor::randn(&[5, 7], 1);
+        let b = Tensor::randn(&[5, 7], 2);
+        let out = interp(lower::ewmult(5, 7)).run(&[a.clone(), b.clone()]).unwrap();
+        assert!(out[0].allclose(&naive::ewmult(&a, &b).unwrap(), 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn ewadd_matches_naive() {
+        let a = Tensor::randn(&[3, 9], 3);
+        let b = Tensor::randn(&[3, 9], 4);
+        let out = interp(lower::ewadd(3, 9)).run(&[a.clone(), b.clone()]).unwrap();
+        assert!(out[0].allclose(&naive::ewadd(&a, &b).unwrap(), 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Tensor::randn(&[6, 10], 5);
+        let b = Tensor::randn(&[10, 4], 6);
+        let out = interp(lower::matmul(6, 10, 4)).run(&[a.clone(), b.clone()]).unwrap();
+        assert!(out[0].allclose(&naive::matmul(&a, &b).unwrap(), 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn summation_matches_sum() {
+        let x = Tensor::randn(&[1000], 7);
+        let out = interp(lower::summation(1000)).run(&[x.clone()]).unwrap();
+        let want = crate::tensor::sum(&x);
+        assert!((out[0].data()[0] - want).abs() < 1e-2 * want.abs().max(1.0));
+    }
+
+    #[test]
+    fn dft_matches_direct() {
+        let x = Tensor::randn(&[2, 16], 8);
+        let out = interp(lower::dft(2, 16)).run(&[x.clone()]).unwrap();
+        let want = naive::dft(&ComplexTensor::from_real(x)).unwrap();
+        assert!(out[0].allclose(&want.re, 1e-4, 1e-4), "re mismatch");
+        assert!(out[1].allclose(&want.im, 1e-4, 1e-4), "im mismatch");
+    }
+
+    #[test]
+    fn idft_inverts_dft() {
+        let x = Tensor::randn(&[1, 8], 9);
+        let spec = interp(lower::dft(1, 8)).run(&[x.clone()]).unwrap();
+        let back = interp(lower::idft(1, 8))
+            .run(&[spec[0].clone(), spec[1].clone()])
+            .unwrap();
+        assert!(back[0].allclose(&x, 1e-4, 1e-4));
+        assert!(back[1].allclose(&Tensor::zeros(&[1, 8]), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn fir_matches_naive() {
+        let taps = dsp::fir_lowpass(16, 0.2).unwrap();
+        let x = Tensor::randn(&[2, 200], 10);
+        let out = interp(lower::fir(2, 200, &taps).unwrap()).run(&[x.clone()]).unwrap();
+        assert!(out[0].allclose(&naive::fir(&x, &taps).unwrap(), 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn unfold_matches_naive() {
+        let x = Tensor::randn(&[1, 50], 11);
+        let out = interp(lower::unfold(1, 50, 8).unwrap()).run(&[x.clone()]).unwrap();
+        assert!(out[0].allclose(&naive::unfold(&x, 8).unwrap(), 0.0, 0.0));
+    }
+
+    #[test]
+    fn pfb_matches_reference() {
+        let cfg = dsp::PfbConfig::new(8, 4);
+        let x = Tensor::randn(&[2, 8 * 32], 12);
+        let out = interp(lower::pfb_fir(2, 8 * 32, cfg).unwrap())
+            .run(&[x.clone()])
+            .unwrap();
+        let want = naive::pfb_fir(&x, cfg).unwrap();
+        assert!(out[0].allclose(&want, 1e-4, 1e-5));
+
+        let out = interp(lower::pfb(2, 8 * 32, cfg).unwrap()).run(&[x.clone()]).unwrap();
+        let want = naive::pfb(&x, cfg).unwrap();
+        assert!(out[0].allclose(&want.re, 1e-3, 1e-4));
+        assert!(out[1].allclose(&want.im, 1e-3, 1e-4));
+    }
+
+    #[test]
+    fn stft_matches_naive() {
+        let x = Tensor::randn(&[2, 600], 13);
+        let (nfft, hop) = (64, 32);
+        let out = interp(lower::stft(2, 600, nfft, hop).unwrap())
+            .run(&[x.clone()])
+            .unwrap();
+        let (want_re, want_im) = naive::stft(&x, nfft, hop).unwrap();
+        assert!(out[0].allclose(&want_re, 1e-3, 1e-3), "re");
+        assert!(out[1].allclose(&want_im, 1e-3, 1e-3), "im");
+    }
+
+    #[test]
+    fn wrong_input_arity_rejected() {
+        let it = interp(lower::ewmult(2, 2));
+        assert!(it.run(&[Tensor::zeros(&[2, 2])]).is_err());
+    }
+
+    #[test]
+    fn wrong_input_shape_rejected() {
+        let it = interp(lower::ewmult(2, 2));
+        assert!(it
+            .run(&[Tensor::zeros(&[2, 3]), Tensor::zeros(&[2, 2])])
+            .is_err());
+    }
+}

@@ -1,0 +1,366 @@
+//! Table 1 in rust: lower each signal-processing function to a TINA graph
+//! over the four building blocks — the same mappings as
+//! `python/compile/tina_ops.py`, §3/§4 of the paper.
+
+use super::graph::{Graph, NodeOp, ValueId};
+use crate::dsp;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// §3.1: elementwise (H, W) multiply via depthwise conv with C = H*W.
+pub fn ewmult(h: usize, w: usize) -> Graph {
+    let mut g = Graph::new();
+    let c = h * w;
+    let a = g.input(&[h, w]);
+    let b = g.input(&[h, w]);
+    let x = g.push(NodeOp::Reshape(vec![1, c, 1]), &[a]);
+    let k = g.push(NodeOp::Reshape(vec![c, 1]), &[b]);
+    let bias = g.constant(Tensor::zeros(&[c]));
+    let o = g.push(NodeOp::DepthwiseConv1d, &[x, k, bias]);
+    let o = g.push(NodeOp::Reshape(vec![h, w]), &[o]);
+    g.set_outputs(&[o]);
+    g
+}
+
+/// §3.3: elementwise add — ones kernel, second operand through the bias.
+pub fn ewadd(h: usize, w: usize) -> Graph {
+    let mut g = Graph::new();
+    let c = h * w;
+    let a = g.input(&[h, w]);
+    let b = g.input(&[h, w]);
+    let x = g.push(NodeOp::Reshape(vec![1, c, 1]), &[a]);
+    let k = g.constant(Tensor::ones(&[c, 1]));
+    let bias = g.push(NodeOp::Reshape(vec![c]), &[b]);
+    let o = g.push(NodeOp::DepthwiseConv1d, &[x, k, bias]);
+    let o = g.push(NodeOp::Reshape(vec![h, w]), &[o]);
+    g.set_outputs(&[o]);
+    g
+}
+
+/// §3.2: (M, L) x (L, N) matmul via pointwise conv (channels = L).
+pub fn matmul(m: usize, l: usize, n: usize) -> Graph {
+    let mut g = Graph::new();
+    let x = g.input(&[m, l]);
+    let y = g.input(&[l, n]);
+    // rows ride the batch (T) dimension: (M, L, 1) channels-as-contraction
+    let xi = g.push(NodeOp::Reshape(vec![m, l, 1]), &[x]);
+    let bias = g.constant(Tensor::zeros(&[n]));
+    let o = g.push(NodeOp::PointwiseConv, &[xi, y, bias]); // (M, N, 1)
+    let o = g.push(NodeOp::Reshape(vec![m, n]), &[o]);
+    g.set_outputs(&[o]);
+    g
+}
+
+/// §3.4: summation of a length-L vector via a ones-kernel FC layer.
+pub fn summation(l: usize) -> Graph {
+    let mut g = Graph::new();
+    let x = g.input(&[l]);
+    let xi = g.push(NodeOp::Reshape(vec![1, l]), &[x]);
+    let k = g.constant(Tensor::ones(&[l, 1]));
+    let bias = g.constant(Tensor::zeros(&[1]));
+    let o = g.push(NodeOp::FullyConnected, &[xi, k, bias]);
+    let o = g.push(NodeOp::Reshape(vec![1]), &[o]);
+    g.set_outputs(&[o]);
+    g
+}
+
+/// Shared: (B, L) x real (L, N) kernel via one pointwise conv, batch on T.
+fn real_pointwise(g: &mut Graph, x: ValueId, b_: usize, l: usize, k: ValueId, n: usize, bias: ValueId) -> ValueId {
+    let xi = g.push(NodeOp::Reshape(vec![b_, l, 1]), &[x]);
+    let o = g.push(NodeOp::PointwiseConv, &[xi, k, bias]); // (B, N, 1)
+    g.push(NodeOp::Reshape(vec![b_, n]), &[o])
+}
+
+/// Shared: (B, L) x complex (L, N) kernel via four pointwise convs.
+/// Returns (re, im) value ids.
+fn complex_pointwise(
+    g: &mut Graph,
+    x_re: ValueId,
+    x_im: ValueId,
+    b_: usize,
+    l: usize,
+    k_re: Tensor,
+    k_im: Tensor,
+) -> (ValueId, ValueId) {
+    let n = k_re.shape()[1];
+    let bias = g.constant(Tensor::zeros(&[n]));
+    let kre = g.constant(k_re);
+    let kim = g.constant(k_im);
+
+    let rr = real_pointwise(g, x_re, b_, l, kre, n, bias);
+    let ri = real_pointwise(g, x_re, b_, l, kim, n, bias);
+    let ir = real_pointwise(g, x_im, b_, l, kre, n, bias);
+    let ii = real_pointwise(g, x_im, b_, l, kim, n, bias);
+
+    let out_re = g.push(NodeOp::Sub, &[rr, ii]); // (B, N)
+    let out_im = g.push(NodeOp::Add, &[ri, ir]);
+    (out_re, out_im)
+}
+
+/// §4.1: DFT of a real (B, N) signal — pointwise conv with the DFM.
+/// The imaginary input branch is skipped entirely (real signal), matching
+/// python/compile/tina_ops.py.
+pub fn dft(b: usize, n: usize) -> Graph {
+    let mut g = Graph::new();
+    let x = g.input(&[b, n]);
+    let (f_re, f_im) = dsp::dft_matrix(n);
+    let bias = g.constant(Tensor::zeros(&[n]));
+    let kre = g.constant(f_re);
+    let kim = g.constant(f_im);
+    let o_re = real_pointwise(&mut g, x, b, n, kre, n, bias);
+    let o_im = real_pointwise(&mut g, x, b, n, kim, n, bias);
+    g.set_outputs(&[o_re, o_im]);
+    g
+}
+
+/// §4.2: IDFT of a complex (B, N) spectrum — pointwise conv with the IDFM.
+pub fn idft(b: usize, n: usize) -> Graph {
+    let mut g = Graph::new();
+    let x_re = g.input(&[b, n]);
+    let x_im = g.input(&[b, n]);
+    let (if_re, if_im) = dsp::idft_matrix(n);
+    let (o_re, o_im) = complex_pointwise(&mut g, x_re, x_im, b, n, if_re, if_im);
+    g.set_outputs(&[o_re, o_im]);
+    g
+}
+
+/// §4.3: FIR filter via standard conv, kernel = reversed taps.
+pub fn fir(b: usize, l: usize, taps: &[f32]) -> Result<Graph> {
+    let m = taps.len();
+    let mut g = Graph::new();
+    let x = g.input(&[b, l]);
+    let xi = g.push(NodeOp::Reshape(vec![b, 1, l]), &[x]);
+    let rev: Vec<f32> = taps.iter().rev().copied().collect();
+    let k = g.constant(Tensor::new(&[1, 1, m], rev)?);
+    let bias = g.constant(Tensor::zeros(&[1]));
+    let o = g.push(NodeOp::StandardConv1d, &[xi, k, bias]);
+    let o = g.push(NodeOp::Reshape(vec![b, l - m + 1]), &[o]);
+    g.set_outputs(&[o]);
+    Ok(g)
+}
+
+/// §4.4: unfolding via standard conv with an identity kernel.
+pub fn unfold(b: usize, l: usize, window: usize) -> Result<Graph> {
+    let j = window;
+    let mut g = Graph::new();
+    let x = g.input(&[b, l]);
+    let xi = g.push(NodeOp::Reshape(vec![b, 1, l]), &[x]);
+    let eye = Tensor::eye(j).reshape(&[j, 1, j])?;
+    let k = g.constant(eye);
+    let bias = g.constant(Tensor::zeros(&[j]));
+    let o = g.push(NodeOp::StandardConv1d, &[xi, k, bias]); // (B, J, Wout)
+    let o = g.push(NodeOp::Permute3([0, 2, 1]), &[o]); // (B, Wout, J)
+    g.set_outputs(&[o]);
+    Ok(g)
+}
+
+/// Extension op (paper future work): short-time Fourier transform from
+/// three Table-1 building blocks — framing via strided standard conv
+/// (identity kernel, §4.4 + §2.1's stride), Hamming windowing via
+/// depthwise conv (§3.1), DFT via pointwise conv (§4.1).
+///
+/// x: (B, L) -> (re, im) each (B, F, nfft), F = (L - nfft)/hop + 1.
+/// Mirrors python/compile/tina_ops.py::stft.
+pub fn stft(b: usize, l: usize, nfft: usize, hop: usize) -> Result<Graph> {
+    if l < nfft {
+        anyhow::bail!("signal {l} shorter than one {nfft}-sample frame");
+    }
+    let frames = (l - nfft) / hop + 1;
+    let mut g = Graph::new();
+    let x = g.input(&[b, l]);
+
+    // 1. framing: unfold then stride the frame axis
+    let xi = g.push(NodeOp::Reshape(vec![b, 1, l]), &[x]);
+    let eye = Tensor::eye(nfft).reshape(&[nfft, 1, nfft])?;
+    let k = g.constant(eye);
+    let bias0 = g.constant(Tensor::zeros(&[nfft]));
+    let unfolded = g.push(NodeOp::StandardConv1d, &[xi, k, bias0]); // (B, nfft, L-nfft+1)
+    let framed = g.push(
+        NodeOp::StridedSlice {
+            axis: 2,
+            stride: hop,
+            count: frames,
+        },
+        &[unfolded],
+    ); // (B, nfft, F)
+    let framed = g.push(NodeOp::Permute3([0, 2, 1]), &[framed]); // (B, F, nfft)
+    let rows = g.push(NodeOp::Reshape(vec![b * frames, nfft, 1]), &[framed]);
+
+    // 2. windowing: depthwise conv, channels = sample-in-frame, M = 1
+    let win: Vec<f32> = crate::dsp::hamming(nfft).iter().map(|&v| v as f32).collect();
+    let kwin = g.constant(Tensor::new(&[nfft, 1], win)?);
+    let bias_w = g.constant(Tensor::zeros(&[nfft]));
+    let xw = g.push(NodeOp::DepthwiseConv1d, &[rows, kwin, bias_w]); // (B*F, nfft, 1)
+    let xw = g.push(NodeOp::Reshape(vec![b * frames, nfft]), &[xw]);
+
+    // 3. DFT across frame samples
+    let (f_re, f_im) = dsp::dft_matrix(nfft);
+    let bias_d = g.constant(Tensor::zeros(&[nfft]));
+    let kre = g.constant(f_re);
+    let kim = g.constant(f_im);
+    let o_re = real_pointwise(&mut g, xw, b * frames, nfft, kre, nfft, bias_d);
+    let o_im = real_pointwise(&mut g, xw, b * frames, nfft, kim, nfft, bias_d);
+    let o_re = g.push(NodeOp::Reshape(vec![b, frames, nfft]), &[o_re]);
+    let o_im = g.push(NodeOp::Reshape(vec![b, frames, nfft]), &[o_im]);
+    g.set_outputs(&[o_re, o_im]);
+    Ok(g)
+}
+
+/// §5.2 Eq. 20: the polyphase FIR bank as one depthwise conv.
+/// Appends to an existing graph and returns the (B, P, Ns') value.
+fn pfb_fir_nodes(
+    g: &mut Graph,
+    x: ValueId,
+    b: usize,
+    l: usize,
+    cfg: dsp::PfbConfig,
+) -> Result<ValueId> {
+    let (p, m) = (cfg.branches, cfg.taps_per_branch);
+    let nspec = l / p;
+    cfg.output_spectra(l)?; // validates divisibility and length
+    let xp = g.push(NodeOp::Reshape(vec![b, nspec, p]), &[x]);
+    let xp = g.push(NodeOp::Permute3([0, 2, 1]), &[xp]); // (B, P, Nspec)
+    // correlation kernel = per-branch reversed taps
+    let bank = cfg.bank()?; // (P, M) row-major
+    let mut rev = vec![0.0f32; p * m];
+    for pi in 0..p {
+        for t in 0..m {
+            rev[pi * m + t] = bank[pi * m + (m - 1 - t)];
+        }
+    }
+    let k = g.constant(Tensor::new(&[p, m], rev)?);
+    let bias = g.constant(Tensor::zeros(&[p]));
+    Ok(g.push(NodeOp::DepthwiseConv1d, &[xp, k, bias]))
+}
+
+/// Fig. 3 left: subfiltered signals only.
+pub fn pfb_fir(b: usize, l: usize, cfg: dsp::PfbConfig) -> Result<Graph> {
+    let mut g = Graph::new();
+    let x = g.input(&[b, l]);
+    let o = pfb_fir_nodes(&mut g, x, b, l, cfg)?;
+    g.set_outputs(&[o]);
+    Ok(g)
+}
+
+/// Fig. 3 right: full PFB — FIR bank + DFT across branches
+/// (depthwise conv -> pointwise conv with the DFM kernel).
+pub fn pfb(b: usize, l: usize, cfg: dsp::PfbConfig) -> Result<Graph> {
+    let p = cfg.branches;
+    let ns = cfg.output_spectra(l)?;
+    let mut g = Graph::new();
+    let x = g.input(&[b, l]);
+    let y = pfb_fir_nodes(&mut g, x, b, l, cfg)?; // (B, P, Ns)
+    let (f_re, f_im) = dsp::dft_matrix(p);
+    let bias = g.constant(Tensor::zeros(&[p]));
+    let kre = g.constant(f_re);
+    let kim = g.constant(f_im);
+    let o_re = g.push(NodeOp::PointwiseConv, &[y, kre, bias]); // (B, P, Ns)
+    let o_im = g.push(NodeOp::PointwiseConv, &[y, kim, bias]);
+    let o_re = g.push(NodeOp::Permute3([0, 2, 1]), &[o_re]); // (B, Ns, P)
+    let o_im = g.push(NodeOp::Permute3([0, 2, 1]), &[o_im]);
+    g.set_outputs(&[o_re, o_im]);
+    let _ = ns;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_building_blocks() {
+        // The paper's Table 1, asserted structurally.
+        assert_eq!(ewmult(4, 4).layer_names(), vec!["depthwise_conv1d"]);
+        assert_eq!(ewadd(4, 4).layer_names(), vec!["depthwise_conv1d"]);
+        assert_eq!(matmul(4, 5, 6).layer_names(), vec!["pointwise_conv"]);
+        assert_eq!(summation(16).layer_names(), vec!["fully_connected"]);
+        assert_eq!(
+            dft(2, 8).layer_names(),
+            vec!["pointwise_conv"; 2],
+            "DFT of a real signal = pointwise conv (re + im kernels)"
+        );
+        assert_eq!(
+            idft(2, 8).layer_names(),
+            vec!["pointwise_conv"; 4],
+            "IDFT of a complex spectrum = 4 pointwise convs"
+        );
+        assert_eq!(
+            fir(1, 64, &[1.0; 8]).unwrap().layer_names(),
+            vec!["standard_conv1d"]
+        );
+        assert_eq!(
+            unfold(1, 64, 8).unwrap().layer_names(),
+            vec!["standard_conv1d"]
+        );
+        let cfg = dsp::PfbConfig::new(8, 4);
+        assert_eq!(
+            pfb_fir(1, 64, cfg).unwrap().layer_names(),
+            vec!["depthwise_conv1d"]
+        );
+        assert_eq!(
+            pfb(1, 64, cfg).unwrap().layer_names(),
+            vec!["depthwise_conv1d", "pointwise_conv", "pointwise_conv"]
+        );
+    }
+
+    #[test]
+    fn all_lowerings_validate() {
+        ewmult(3, 7).validate().unwrap();
+        ewadd(5, 2).validate().unwrap();
+        matmul(3, 4, 5).validate().unwrap();
+        summation(100).validate().unwrap();
+        dft(2, 16).validate().unwrap();
+        idft(2, 16).validate().unwrap();
+        fir(2, 128, &[0.5; 16]).unwrap().validate().unwrap();
+        unfold(2, 128, 8).unwrap().validate().unwrap();
+        let cfg = dsp::PfbConfig::new(8, 4);
+        pfb_fir(2, 8 * 32, cfg).unwrap().validate().unwrap();
+        pfb(2, 8 * 32, cfg).unwrap().validate().unwrap();
+    }
+
+    #[test]
+    fn output_shapes() {
+        let shapes = matmul(3, 4, 5).infer_shapes().unwrap();
+        let g = matmul(3, 4, 5);
+        assert_eq!(shapes[g.outputs[0].0], vec![3, 5]);
+
+        let g = unfold(2, 100, 8).unwrap();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.outputs[0].0], vec![2, 93, 8]);
+
+        let cfg = dsp::PfbConfig::new(8, 4);
+        let g = pfb(1, 8 * 32, cfg).unwrap();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.outputs[0].0], vec![1, 29, 8]);
+        assert_eq!(shapes[g.outputs[1].0], vec![1, 29, 8]);
+    }
+
+    #[test]
+    fn stft_uses_three_building_blocks() {
+        let g = stft(1, 1024, 256, 128).unwrap();
+        assert_eq!(
+            g.layer_names(),
+            vec![
+                "standard_conv1d", // framing (unfold)
+                "depthwise_conv1d", // windowing
+                "pointwise_conv",  // DFT re
+                "pointwise_conv",  // DFT im
+            ]
+        );
+        g.validate().unwrap();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.outputs[0].0], vec![1, 7, 256]);
+    }
+
+    #[test]
+    fn stft_rejects_short_signal() {
+        assert!(stft(1, 100, 256, 128).is_err());
+    }
+
+    #[test]
+    fn pfb_rejects_bad_lengths() {
+        let cfg = dsp::PfbConfig::new(8, 4);
+        assert!(pfb_fir(1, 65, cfg).is_err()); // not divisible by P
+        assert!(pfb_fir(1, 16, cfg).is_err()); // too short
+    }
+}

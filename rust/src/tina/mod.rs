@@ -1,0 +1,21 @@
+//! The TINA graph: the paper's function -> NN-layer mappings as a small
+//! dataflow IR over the four building blocks, plus a pure-rust interpreter.
+//!
+//! This mirrors `python/compile/tina_ops.py` node for node.  It serves
+//! three roles:
+//!
+//! 1. **Specification** — `lower::*` encodes Table 1 in rust, so tests can
+//!    assert the mapping structure (which building block carries which
+//!    function) independently of jax;
+//! 2. **Cross-check** — the interpreter executes the same plans the PJRT
+//!    artifacts were lowered from; integration tests compare both outputs;
+//! 3. **Fallback** — the coordinator's router executes plans on the
+//!    interpreter when no artifact matches a request.
+
+pub mod graph;
+pub mod interp;
+pub mod layers;
+pub mod lower;
+
+pub use graph::{Graph, Node, NodeOp, ValueId};
+pub use interp::Interpreter;

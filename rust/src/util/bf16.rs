@@ -1,0 +1,83 @@
+//! Minimal bfloat16 support (the `half` crate is unavailable offline).
+//!
+//! bf16 is f32 with the bottom 16 mantissa bits dropped; conversion is a
+//! shift plus round-to-nearest-even, matching what the MXU (and the XLA
+//! `bf16` type the TINA-16 artifacts compute in) does.
+
+/// Convert f32 -> bf16 bit pattern with round-to-nearest-even.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // quiet NaN, preserve sign
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round to nearest even: add 0x7FFF + lsb of the kept part
+    let lsb = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF + lsb)) >> 16) as u16
+}
+
+/// Convert bf16 bit pattern -> f32 (exact).
+pub fn bf16_bits_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// Round-trip an f32 through bf16 precision (what a bf16 compute graph
+/// does to its inputs).  Useful for tolerance modelling in tests.
+pub fn quantize_bf16(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+/// Quantize a whole slice in place.
+pub fn quantize_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = quantize_bf16(*x);
+    }
+}
+
+/// Max relative error introduced by one bf16 rounding (2^-8).
+pub const BF16_EPS: f32 = 1.0 / 256.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 256.0, -65280.0] {
+            assert_eq!(quantize_bf16(x), x, "{x} should be bf16-exact");
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest() {
+        // bf16 has a 7-bit mantissa: the ulp at 1.0 is 2^-7.  1.0 + 2^-8 is
+        // exactly halfway; nearest-even rounds down to 1.0.
+        let x = 1.0f32 + f32::powi(2.0, -8);
+        assert_eq!(quantize_bf16(x), 1.0);
+        // slightly above halfway rounds up to 1 + 2^-7
+        let y = 1.0f32 + f32::powi(2.0, -8) + f32::powi(2.0, -11);
+        assert_eq!(quantize_bf16(y), 1.0 + f32::powi(2.0, -7));
+        // and halfway at an odd mantissa rounds up (to even)
+        let z = 1.0f32 + f32::powi(2.0, -7) + f32::powi(2.0, -8);
+        assert_eq!(quantize_bf16(z), 1.0 + 2.0 * f32::powi(2.0, -7));
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut g = crate::util::prng::Xoshiro256::new(5);
+        for _ in 0..10_000 {
+            let x = g.uniform(-1e6, 1e6);
+            let q = quantize_bf16(x);
+            if x != 0.0 {
+                assert!(((q - x) / x).abs() <= BF16_EPS, "x={x} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_preserved() {
+        assert!(quantize_bf16(f32::NAN).is_nan());
+        assert_eq!(quantize_bf16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(quantize_bf16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+}

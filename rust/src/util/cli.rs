@@ -1,0 +1,124 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Model: `tina <subcommand> [--flag] [--key value] [positional...]`.
+//! Long options only; `--key=value` and `--key value` both accepted.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["run", "fir_tina_f32_B1_L4096", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["fir_tina_f32_B1_L4096", "extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse(&["serve", "--port", "7070", "--artifacts=../artifacts"]);
+        assert_eq!(a.opt("port"), Some("7070"));
+        assert_eq!(a.opt("artifacts"), Some("../artifacts"));
+        assert_eq!(a.opt_usize("port", 0).unwrap(), 7070);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse(&["bench", "--verbose", "--iters", "10", "--json"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("json"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.opt_usize("iters", 1).unwrap(), 10);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_value() {
+        let a = parse(&["x", "--dry-run"]);
+        assert!(a.flag("dry-run"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["x", "--iters", "ten"]);
+        assert!(a.opt_usize("iters", 1).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite).
+//!
+//! Buckets are base-2 with 8 linear sub-buckets each, giving <= ~9% relative
+//! quantile error over a 1ns..1000s range — plenty for serving metrics.
+
+const SUB_BUCKETS: usize = 8;
+const BUCKETS: usize = 64;
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: u128,
+    max_ns: u64,
+    min_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; BUCKETS * SUB_BUCKETS],
+            total: 0,
+            sum_ns: 0,
+            max_ns: 0,
+            min_ns: u64::MAX,
+        }
+    }
+
+    fn index(value: u64) -> usize {
+        if value < SUB_BUCKETS as u64 {
+            return value as usize;
+        }
+        let msb = 63 - value.leading_zeros() as usize;
+        let shift = msb - 3; // SUB_BUCKETS = 2^3
+        let sub = ((value >> shift) & 0b111) as usize;
+        let bucket = shift + 1;
+        (bucket * SUB_BUCKETS + sub).min(BUCKETS * SUB_BUCKETS - 1)
+    }
+
+    /// Representative (lower-bound) value for a slot index.
+    fn slot_value(idx: usize) -> u64 {
+        let bucket = idx / SUB_BUCKETS;
+        let sub = idx % SUB_BUCKETS;
+        if bucket == 0 {
+            return sub as u64;
+        }
+        let _shift = bucket - 1; // inverse of index()
+        ((SUB_BUCKETS + sub) as u64) << (bucket - 1)
+    }
+
+    pub fn record(&mut self, value_ns: u64) {
+        self.counts[Self::index(value_ns)] += 1;
+        self.total += 1;
+        self.sum_ns += value_ns as u128;
+        self.max_ns = self.max_ns.max(value_ns);
+        self.min_ns = self.min_ns.min(value_ns);
+    }
+
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.total as f64
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.max_ns
+        }
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min_ns
+        }
+    }
+
+    /// Quantile in [0, 1] -> approximate value (lower bound of the slot).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::slot_value(i);
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+    }
+
+    /// Render a one-line summary, durations in human units.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.total,
+            fmt_ns(self.mean_ns() as u64),
+            fmt_ns(self.p50()),
+            fmt_ns(self.p95()),
+            fmt_ns(self.p99()),
+            fmt_ns(self.max_ns()),
+        )
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_monotonic_in_value() {
+        let mut last = 0;
+        for v in 0..100_000u64 {
+            let idx = Histogram::index(v);
+            assert!(idx >= last, "index must be monotonic at {v}");
+            last = idx;
+        }
+    }
+
+    #[test]
+    fn slot_value_is_lower_bound() {
+        for v in [0u64, 1, 7, 8, 9, 100, 1000, 123_456, 88_888_888] {
+            let idx = Histogram::index(v);
+            let lo = Histogram::slot_value(idx);
+            assert!(lo <= v, "slot lower bound {lo} > value {v}");
+            // relative error of the bound is < 1/8 + epsilon
+            if v > 8 {
+                assert!((v - lo) as f64 / v as f64 <= 0.125 + 1e-9, "v={v} lo={lo}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_of_uniform_ramp() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v * 1000); // 1us..10ms ramp
+        }
+        let p50 = h.p50() as f64;
+        assert!((p50 - 5_000_000.0).abs() / 5_000_000.0 < 0.15, "p50={p50}");
+        let p99 = h.p99() as f64;
+        assert!((p99 - 9_900_000.0).abs() / 9_900_000.0 < 0.15, "p99={p99}");
+        assert_eq!(h.count(), 10_000);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for v in 0..1000u64 {
+            a.record(v * 7);
+            c.record(v * 7);
+        }
+        for v in 0..500u64 {
+            b.record(v * 131);
+            c.record(v * 131);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.p50(), c.p50());
+        assert_eq!(a.p99(), c.p99());
+        assert_eq!(a.max_ns(), c.max_ns());
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12), "12ns");
+        assert_eq!(fmt_ns(12_340), "12.34us");
+        assert_eq!(fmt_ns(12_340_000), "12.34ms");
+        assert_eq!(fmt_ns(1_500_000_000), "1.50s");
+    }
+}

@@ -1,0 +1,14 @@
+//! Infrastructure substrates implemented in-repo.
+//!
+//! The build environment is offline with only the `xla` crate's dependency
+//! closure cached, so the usual ecosystem crates (serde_json, clap, rand,
+//! half, tokio, criterion, proptest) are unavailable.  Each submodule here
+//! is a small, tested, from-scratch replacement for exactly the slice of
+//! functionality this project needs — see DESIGN.md §6.
+
+pub mod bf16;
+pub mod cli;
+pub mod histogram;
+pub mod json;
+pub mod prng;
+pub mod threadpool;

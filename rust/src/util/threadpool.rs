@@ -1,0 +1,291 @@
+//! Fixed-size worker pool with bounded queues (tokio/rayon are unavailable
+//! offline).  Powers the coordinator's scheduler and the optimized CPU
+//! baseline's data-parallel loops.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    job_ready: Condvar,
+    slot_free: Condvar,
+    capacity: usize,
+    shutdown: AtomicBool,
+}
+
+/// A fixed pool of worker threads consuming a bounded FIFO of jobs.
+///
+/// `submit` blocks when the queue is full — this is the backpressure
+/// mechanism the coordinator leans on (DESIGN.md §4).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, queue_capacity: usize) -> Self {
+        assert!(threads > 0, "need at least one worker");
+        assert!(queue_capacity > 0, "need a positive queue capacity");
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            job_ready: Condvar::new(),
+            slot_free: Condvar::new(),
+            capacity: queue_capacity,
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("tina-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job, blocking while the queue is at capacity.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while q.len() >= self.shared.capacity {
+            q = self.shared.slot_free.wait(q).unwrap();
+        }
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.job_ready.notify_one();
+    }
+
+    /// Try to enqueue without blocking; returns false if the queue is full.
+    pub fn try_submit<F: FnOnce() + Send + 'static>(&self, job: F) -> bool {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.len() >= self.shared.capacity {
+            return false;
+        }
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.job_ready.notify_one();
+        true
+    }
+
+}
+
+/// Data-parallel index loop over scoped threads (the rayon substitute used
+/// by the optimized CPU baseline).  Splits [0, n) into `threads` contiguous
+/// chunks; `f` must be safe to call concurrently on disjoint indices.
+///
+/// Scoped threads make this safe without 'static bounds; spawn overhead is
+/// tens of microseconds, so callers only parallelize work that is much
+/// larger than that (the baseline gates on a size threshold).
+pub fn parallel_for(threads: usize, n: usize, f: impl Fn(usize, usize) + Sync) {
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return;
+    }
+    if threads == 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let stop = ((t + 1) * chunk).min(n);
+            if start >= stop {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(start, stop));
+        }
+    });
+}
+
+/// Default worker count: physical parallelism minus one for the
+/// coordinator thread, at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    shared.slot_free.notify_one();
+                    break job;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.job_ready.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.job_ready.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A one-shot channel for returning results from submitted jobs.
+pub struct OneShot<T> {
+    inner: Arc<(Mutex<Option<T>>, Condvar)>,
+}
+
+impl<T> Clone for OneShot<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> Default for OneShot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> OneShot<T> {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new((Mutex::new(None), Condvar::new())),
+        }
+    }
+
+    pub fn set(&self, value: T) {
+        let (lock, cv) = &*self.inner;
+        *lock.lock().unwrap() = Some(value);
+        cv.notify_all();
+    }
+
+    pub fn wait(&self) -> T {
+        let (lock, cv) = &*self.inner;
+        let mut slot = lock.lock().unwrap();
+        loop {
+            if let Some(v) = slot.take() {
+                return v;
+            }
+            slot = cv.wait(slot).unwrap();
+        }
+    }
+
+    pub fn try_take(&self) -> Option<T> {
+        self.inner.0.lock().unwrap().take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, 16);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let results: Vec<OneShot<()>> = (0..100).map(|_| OneShot::new()).collect();
+        for r in &results {
+            let counter = Arc::clone(&counter);
+            let r = r.clone();
+            pool.submit(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+                r.set(());
+            });
+        }
+        for r in &results {
+            r.wait();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn backpressure_try_submit() {
+        let pool = ThreadPool::new(1, 1);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        // block the single worker
+        pool.submit(move || {
+            let (lock, cv) = &*g2;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        });
+        // fill the queue (eventually try_submit must fail)
+        let mut accepted = 0;
+        for _ in 0..64 {
+            if pool.try_submit(|| {}) {
+                accepted += 1;
+            }
+        }
+        assert!(accepted < 64, "queue should saturate");
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    #[test]
+    fn parallel_for_touches_every_index_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(4, 1000, |start, stop| {
+            for i in start..stop {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_handles_edge_counts() {
+        for n in [0usize, 1, 2, 3, 7] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            parallel_for(8, n, |start, stop| {
+                for i in start..stop {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn oneshot_roundtrip() {
+        let c = OneShot::new();
+        let c2 = c.clone();
+        std::thread::spawn(move || c2.set(123u32));
+        assert_eq!(c.wait(), 123);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2, 8);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must not hang; pending jobs drained by workers or dropped
+    }
+}

@@ -1,0 +1,207 @@
+//! End-to-end coordinator tests: full serving path over real artifacts —
+//! routing, dynamic batching, pipelines, concurrency, failure injection.
+//!
+//! Skips (with a note) when `make artifacts` has not run.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use tina::baselines::naive;
+use tina::coordinator::{
+    Coordinator, CoordinatorConfig, ImplPref, OpKind, OpRequest, Pipeline, Precision,
+};
+use tina::dsp::PfbConfig;
+use tina::tensor::Tensor;
+
+fn coordinator(batching: bool) -> Option<Coordinator> {
+    match Coordinator::from_dir(
+        "artifacts",
+        CoordinatorConfig {
+            batching,
+            workers: 4,
+            ..Default::default()
+        },
+    ) {
+        Ok(c) => Some(c),
+        Err(e) => {
+            eprintln!("skipping coordinator e2e (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn serves_every_op_of_table1() {
+    let Some(coord) = coordinator(false) else { return };
+    let cases: Vec<(OpKind, Vec<Tensor>)> = vec![
+        (OpKind::EwMult, vec![Tensor::randn(&[32, 32], 1), Tensor::randn(&[32, 32], 2)]),
+        (OpKind::EwAdd, vec![Tensor::randn(&[32, 32], 3), Tensor::randn(&[32, 32], 4)]),
+        (OpKind::MatMul, vec![Tensor::randn(&[32, 32], 5), Tensor::randn(&[32, 32], 6)]),
+        (OpKind::Summation, vec![Tensor::randn(&[1024], 7)]),
+        (OpKind::Dft, vec![Tensor::randn(&[4, 64], 8)]),
+        (OpKind::Idft, vec![Tensor::randn(&[4, 64], 9), Tensor::randn(&[4, 64], 10)]),
+        (OpKind::Fir, vec![Tensor::randn(&[1, 1024], 11)]),
+        (OpKind::Unfold, vec![Tensor::randn(&[1, 1024], 12)]),
+        (OpKind::PfbFir, vec![Tensor::randn(&[1, 4096], 13)]),
+        (OpKind::Pfb, vec![Tensor::randn(&[1, 4096], 14)]),
+    ];
+    for (op, inputs) in cases {
+        let resp = coord
+            .execute(OpRequest::new(op, inputs).with_impl(ImplPref::Tina))
+            .unwrap_or_else(|e| panic!("{}: {e}", op.as_str()));
+        assert!(!resp.outputs.is_empty(), "{}", op.as_str());
+        assert!(
+            resp.served_by.starts_with(op.as_str()),
+            "{} served by {}",
+            op.as_str(),
+            resp.served_by
+        );
+    }
+    assert_eq!(coord.metrics().failed.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn batcher_coalesces_concurrent_requests() {
+    let Some(coord) = coordinator(true) else { return };
+    let coord = Arc::new(coord);
+    coord.warmup(Some("fir")).unwrap();
+    let taps = tina::dsp::fir_lowpass(64, 0.25).unwrap();
+
+    let inputs: Vec<Tensor> = (0..24).map(|i| Tensor::randn(&[1, 4096], 50 + i)).collect();
+    let slots: Vec<_> = inputs
+        .iter()
+        .map(|x| {
+            coord.submit(OpRequest::new(OpKind::Fir, vec![x.clone()]).with_impl(ImplPref::Tina))
+        })
+        .collect();
+    let mut rode_batch = 0;
+    for (x, slot) in inputs.iter().zip(slots) {
+        let resp = slot.wait().unwrap();
+        if resp.batched {
+            rode_batch += 1;
+        }
+        // numerics must be unaffected by batching/padding
+        let want = naive::fir(x, &taps).unwrap();
+        assert!(resp.outputs[0].allclose(&want, 1e-3, 1e-4));
+    }
+    assert!(rode_batch > 0, "no request rode a batch");
+    let m = coord.metrics();
+    assert!(m.batches_executed.load(Ordering::Relaxed) > 0);
+    assert!(
+        m.batches_executed.load(Ordering::Relaxed) < 24,
+        "each request executed alone — batching ineffective"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn pfb_pipeline_matches_fused_artifact() {
+    let Some(coord) = coordinator(false) else { return };
+    let x = Tensor::randn(&[1, 16384], 60);
+    let fused = coord
+        .execute(OpRequest::new(OpKind::Pfb, vec![x.clone()]).with_impl(ImplPref::Tina))
+        .unwrap();
+    let chained = Pipeline::pfb_two_stage().run(&coord, vec![x.clone()]).unwrap();
+    // chain output: (rows, P) re/im; fused: (1, Ns, P) re/im
+    let cfg = PfbConfig::new(32, 8);
+    let ns = cfg.output_spectra(16384).unwrap();
+    let re = chained[0].reshape(&[1, ns, 32]).unwrap();
+    let im = chained[1].reshape(&[1, ns, 32]).unwrap();
+    assert!(re.allclose(&fused.outputs[0], 2e-3, 2e-3), "re");
+    assert!(im.allclose(&fused.outputs[1], 2e-3, 2e-3), "im");
+}
+
+#[test]
+fn precision_routing_selects_bf16_artifacts() {
+    let Some(coord) = coordinator(false) else { return };
+    let x = Tensor::randn(&[1, 4096], 61);
+    let resp = coord
+        .execute(
+            OpRequest::new(OpKind::Pfb, vec![x])
+                .with_impl(ImplPref::Tina)
+                .with_precision(Precision::Bf16),
+        )
+        .unwrap();
+    assert!(resp.served_by.contains("bf16"), "served by {}", resp.served_by);
+}
+
+#[test]
+fn concurrent_mixed_workload_completes() {
+    let Some(coord) = coordinator(true) else { return };
+    let coord = Arc::new(coord);
+    let mut slots = Vec::new();
+    for i in 0..60u64 {
+        let req = match i % 3 {
+            0 => OpRequest::new(OpKind::Fir, vec![Tensor::randn(&[1, 4096], i)]),
+            1 => OpRequest::new(
+                OpKind::MatMul,
+                vec![Tensor::randn(&[64, 64], i), Tensor::randn(&[64, 64], i + 1)],
+            ),
+            _ => OpRequest::new(OpKind::Summation, vec![Tensor::randn(&[4096], i)]),
+        };
+        slots.push(coord.submit(req));
+    }
+    for s in slots {
+        s.wait().unwrap();
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 60);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn failure_injection_bad_requests_fail_cleanly() {
+    let Some(coord) = coordinator(true) else { return };
+    // arity error
+    let r = coord.execute(OpRequest::new(OpKind::MatMul, vec![Tensor::zeros(&[2, 2])]));
+    assert!(r.is_err());
+    // contraction mismatch (caught at plan build)
+    let r = coord.execute(OpRequest::new(
+        OpKind::MatMul,
+        vec![Tensor::zeros(&[2, 3]), Tensor::zeros(&[4, 2])],
+    ));
+    assert!(r.is_err());
+    // PFB length not divisible by branches
+    let r = coord.execute(OpRequest::new(OpKind::Pfb, vec![Tensor::zeros(&[1, 1000])]));
+    assert!(r.is_err());
+    // strict-tina on an unknown size
+    let r = coord.execute(
+        OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 12345])]).with_impl(ImplPref::Tina),
+    );
+    assert!(r.is_err());
+    // the coordinator keeps serving afterwards
+    let ok = coord.execute(OpRequest::new(OpKind::Summation, vec![Tensor::randn(&[1024], 1)]));
+    assert!(ok.is_ok());
+    assert!(coord.metrics().failed.load(Ordering::Relaxed) >= 4);
+}
+
+#[test]
+fn stft_extension_op_serves_and_matches_naive() {
+    let Some(coord) = coordinator(false) else { return };
+    let x = Tensor::randn(&[1, 4096], 70);
+    // artifact path
+    let resp = coord
+        .execute(OpRequest::new(OpKind::Stft, vec![x.clone()]).with_impl(ImplPref::Tina))
+        .unwrap();
+    assert_eq!(resp.served_by, "stft_tina_f32_B1_L4096");
+    let (want_re, want_im) = naive::stft(&x, 256, 128).unwrap();
+    assert!(resp.outputs[0].allclose(&want_re, 2e-3, 2e-2), "re");
+    assert!(resp.outputs[1].allclose(&want_im, 2e-3, 2e-2), "im");
+    // interpreter fallback (size outside the sweep) must agree too
+    let y = Tensor::randn(&[1, 3000], 71);
+    let resp = coord
+        .execute(OpRequest::new(OpKind::Stft, vec![y.clone()]))
+        .unwrap();
+    assert_eq!(resp.served_by, "interp:stft");
+    let (want_re, _) = naive::stft(&y, 256, 128).unwrap();
+    assert!(resp.outputs[0].allclose(&want_re, 2e-3, 2e-2));
+}
+
+#[test]
+fn warmup_compiles_requested_ops() {
+    let Some(coord) = coordinator(false) else { return };
+    let n = coord.warmup(Some("summation")).unwrap();
+    assert_eq!(n, 8, "8 summation artifacts (4 sizes x 2 impls)");
+    let stats = coord.engine().stats().unwrap();
+    assert_eq!(stats.compiles as usize, n);
+}

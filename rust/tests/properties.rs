@@ -1,0 +1,377 @@
+//! Property-based tests over the coordinator and substrate invariants,
+//! using the in-repo prop-testing kit (`tina::testing::prop`).
+//!
+//! No artifacts needed — these exercise pure-rust components.
+
+use tina::baselines::{naive, optimized};
+use tina::coordinator::batcher::{scatter_results, BatchKey, Batcher, BatcherConfig, Pending};
+use tina::dsp::{self, PfbConfig};
+use tina::prop_assert;
+use tina::tensor::{ComplexTensor, Tensor};
+use tina::testing::prop::{run, Gen};
+use tina::tina::{lower, Interpreter};
+use tina::util::json::{self, Json};
+use tina::util::threadpool::OneShot;
+
+// ---------------------------------------------------------------------------
+// mapping invariants: interpreter == baselines for random shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ewmult_mapping_equals_direct() {
+    run("ewmult mapping == a*b", 60, |g: &mut Gen| {
+        let h = g.usize_in(1, 24);
+        let w = g.usize_in(1, 24);
+        let a = Tensor::randn(&[h, w], g.u64());
+        let b = Tensor::randn(&[h, w], g.u64());
+        let got = Interpreter::new(lower::ewmult(h, w))
+            .unwrap()
+            .run(&[a.clone(), b.clone()])
+            .map_err(|e| e.to_string())?;
+        let want = naive::ewmult(&a, &b).unwrap();
+        prop_assert!(got[0].allclose(&want, 1e-5, 1e-6), "h={h} w={w}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matmul_mapping_equals_direct() {
+    run("matmul mapping == X@Y", 40, |g: &mut Gen| {
+        let m = g.usize_in(1, 20);
+        let l = g.usize_in(1, 24);
+        let n = g.usize_in(1, 20);
+        let x = Tensor::randn(&[m, l], g.u64());
+        let y = Tensor::randn(&[l, n], g.u64());
+        let got = Interpreter::new(lower::matmul(m, l, n))
+            .unwrap()
+            .run(&[x.clone(), y.clone()])
+            .map_err(|e| e.to_string())?;
+        let want = naive::matmul(&x, &y).unwrap();
+        prop_assert!(got[0].allclose(&want, 1e-4, 1e-4), "m={m} l={l} n={n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fir_linearity() {
+    // FIR is linear: fir(a*x + y) == a*fir(x) + fir(y)
+    run("FIR linearity", 30, |g: &mut Gen| {
+        let l = g.usize_in(80, 600);
+        let taps = dsp::fir_lowpass(g.usize_in(2, 32), 0.2).unwrap();
+        let x = Tensor::randn(&[1, l], g.u64());
+        let y = Tensor::randn(&[1, l], g.u64());
+        let a = g.f32_in(-3.0, 3.0);
+        let lhs_in =
+            Tensor::new(&[1, l], x.data().iter().zip(y.data()).map(|(u, v)| a * u + v).collect())
+                .unwrap();
+        let lhs = naive::fir(&lhs_in, &taps).unwrap();
+        let fx = naive::fir(&x, &taps).unwrap();
+        let fy = naive::fir(&y, &taps).unwrap();
+        let rhs = Tensor::new(
+            &[1, lhs.len()],
+            fx.data().iter().zip(fy.data()).map(|(u, v)| a * u + v).collect(),
+        )
+        .unwrap()
+        .reshape(lhs.shape())
+        .unwrap();
+        prop_assert!(lhs.allclose(&rhs, 1e-3, 1e-3), "l={l} a={a}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_unfold_reconstructs_input() {
+    // every input sample appears at the expected unfold coordinates
+    run("unfold coordinates", 40, |g: &mut Gen| {
+        let j = g.usize_in(1, 16);
+        let l = j + g.usize_in(1, 200);
+        let x = Tensor::randn(&[1, l], g.u64());
+        let u = naive::unfold(&x, j).unwrap();
+        let wout = l - j + 1;
+        for _ in 0..20 {
+            let i = g.usize_in(0, wout - 1);
+            let jj = g.usize_in(0, j - 1);
+            prop_assert!(
+                u.at(&[0, i, jj]) == x.at(&[0, i + jj]),
+                "Y[{i},{jj}] != X[{}]",
+                i + jj
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dft_parseval_and_inverse() {
+    run("DFT Parseval + inverse", 25, |g: &mut Gen| {
+        let n = *g.choose(&[4usize, 8, 16, 32, 64]);
+        let x = ComplexTensor::from_real(Tensor::randn(&[1, n], g.u64()));
+        let z = dsp::dft_direct(&x).map_err(|e| e.to_string())?;
+        let ex: f64 = x.re.data().iter().map(|&v| (v * v) as f64).sum();
+        let ez: f64 = z
+            .re
+            .data()
+            .iter()
+            .zip(z.im.data())
+            .map(|(r, i)| (r * r + i * i) as f64)
+            .sum();
+        prop_assert!(
+            (ez - n as f64 * ex).abs() <= 1e-3 * ez.abs().max(1.0),
+            "Parseval n={n}: {ez} vs {}",
+            n as f64 * ex
+        );
+        let (ir, ii) = dsp::idft_matrix(n);
+        let back = z
+            .matmul(&ComplexTensor::new(ir, ii).unwrap())
+            .map_err(|e| e.to_string())?;
+        prop_assert!(back.allclose(&x, 1e-3, 1e-3), "inverse n={n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fft_equals_direct_dft() {
+    run("radix-2 FFT == direct DFT", 25, |g: &mut Gen| {
+        let n = *g.choose(&[2usize, 4, 8, 16, 32, 64, 128]);
+        let x = ComplexTensor::new(
+            Tensor::randn(&[2, n], g.u64()),
+            Tensor::randn(&[2, n], g.u64()),
+        )
+        .unwrap();
+        let got = dsp::fft_radix2(&x).map_err(|e| e.to_string())?;
+        let want = dsp::dft_direct(&x).map_err(|e| e.to_string())?;
+        prop_assert!(got.allclose(&want, 1e-3, 1e-3), "n={n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_optimized_baselines_match_naive() {
+    run("optimized == naive", 30, |g: &mut Gen| {
+        let b = g.usize_in(1, 3);
+        let l = g.usize_in(64, 800);
+        let x = Tensor::randn(&[b, l], g.u64());
+        let taps = dsp::fir_lowpass(g.usize_in(2, 48).min(l), 0.3).unwrap();
+        let f1 = naive::fir(&x, &taps).unwrap();
+        let f2 = optimized::fir(&x, &taps).unwrap();
+        prop_assert!(f1.allclose(&f2, 1e-4, 1e-5), "fir b={b} l={l}");
+        let w = g.usize_in(1, l.min(32));
+        let u1 = naive::unfold(&x, w).unwrap();
+        let u2 = optimized::unfold(&x, w).unwrap();
+        prop_assert!(u1 == u2, "unfold b={b} l={l} w={w}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pfb_implementations_agree() {
+    run("pfb: naive == optimized == interpreter", 15, |g: &mut Gen| {
+        let p = *g.choose(&[4usize, 8, 16]);
+        let m = g.usize_in(2, 6);
+        let nspec = m + g.usize_in(4, 40);
+        let l = p * nspec;
+        let cfg = PfbConfig::new(p, m);
+        let x = Tensor::randn(&[1, l], g.u64());
+        let a = naive::pfb_fir(&x, cfg).unwrap();
+        let b = optimized::pfb_fir(&x, cfg).unwrap();
+        prop_assert!(a.allclose(&b, 1e-4, 1e-5), "optimized p={p} m={m}");
+        let it = Interpreter::new(lower::pfb_fir(1, l, cfg).unwrap()).unwrap();
+        let c = it.run(&[x.clone()]).map_err(|e| e.to_string())?;
+        prop_assert!(a.allclose(&c[0], 1e-4, 1e-5), "interp p={p} m={m}");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_and_orders_rows() {
+    // whatever arrival pattern, every enqueued row appears exactly once,
+    // in arrival order, with zero padding beyond the real rows
+    run("batcher row conservation", 25, |g: &mut Gen| {
+        let batch = g.usize_in(2, 8);
+        let l = g.usize_in(4, 32);
+        let n_rows = g.usize_in(1, 3 * batch);
+        let batcher = Batcher::new(BatcherConfig {
+            max_wait: std::time::Duration::from_millis(1),
+        });
+        let key = BatchKey {
+            artifact: "test".into(),
+            batch,
+        };
+        for i in 0..n_rows {
+            let row = Tensor::filled(&[1, l], (i + 1) as f32);
+            batcher.enqueue(key.clone(), row, OneShot::new());
+        }
+        let mut seen = Vec::new();
+        while seen.len() < n_rows {
+            let Some(formed) = batcher.next_batch(std::time::Duration::from_millis(100)) else {
+                return Err(format!("batcher starved after {} rows", seen.len()));
+            };
+            prop_assert!(formed.rows.len() <= batch, "overfull batch");
+            prop_assert!(
+                formed.input.shape() == [batch, l],
+                "padded shape {:?}",
+                formed.input.shape()
+            );
+            for (r, p) in formed.rows.iter().enumerate() {
+                let v = formed.input.at(&[r, 0]);
+                prop_assert!(v == p.input.at(&[0, 0]), "row {r} scrambled");
+                seen.push(v);
+            }
+            // padding rows are zero
+            for r in formed.rows.len()..batch {
+                prop_assert!(formed.input.at(&[r, 0]) == 0.0, "padding not zero");
+            }
+        }
+        // arrival order preserved globally (FIFO per key)
+        let want: Vec<f32> = (1..=n_rows).map(|i| i as f32).collect();
+        prop_assert!(seen == want, "order {seen:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scatter_routes_rows_to_owners() {
+    run("scatter_results row routing", 25, |g: &mut Gen| {
+        let batch = g.usize_in(2, 8);
+        let rows_n = g.usize_in(1, batch);
+        let out_w = g.usize_in(1, 8);
+        let replies: Vec<OneShot<anyhow::Result<Vec<Tensor>>>> =
+            (0..rows_n).map(|_| OneShot::new()).collect();
+        let rows: Vec<Pending> = replies
+            .iter()
+            .map(|r| Pending {
+                input: Tensor::zeros(&[1, 4]),
+                reply: r.clone(),
+                enqueued: std::time::Instant::now(),
+            })
+            .collect();
+        let batch_t = tina::coordinator::batcher::FormedBatch {
+            key: BatchKey {
+                artifact: "t".into(),
+                batch,
+            },
+            input: Tensor::zeros(&[batch, 4]),
+            rows,
+        };
+        // output rows tagged by row index
+        let out = Tensor::new(
+            &[batch, out_w],
+            (0..batch).flat_map(|i| vec![i as f32; out_w]).collect::<Vec<_>>(),
+        )
+        .unwrap();
+        scatter_results(batch_t, Ok(vec![out]));
+        for (i, r) in replies.iter().enumerate() {
+            let got = r.try_take().ok_or("no reply")?.map_err(|e| e.to_string())?;
+            prop_assert!(
+                got[0].data().iter().all(|&v| v == i as f32),
+                "row {i} got wrong data"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_shape_inference_matches_execution() {
+    // for random op graphs, static shape inference == runtime shapes
+    run("shape inference == runtime", 30, |g: &mut Gen| {
+        let h = g.usize_in(1, 12);
+        let w = g.usize_in(1, 12);
+        let graph = if g.bool() {
+            lower::ewmult(h, w)
+        } else {
+            lower::ewadd(h, w)
+        };
+        let shapes = graph.infer_shapes().map_err(|e| e.to_string())?;
+        let it = Interpreter::new(graph.clone()).unwrap();
+        let out = it
+            .run(&[Tensor::randn(&[h, w], g.u64()), Tensor::randn(&[h, w], g.u64())])
+            .map_err(|e| e.to_string())?;
+        for (o, id) in out.iter().zip(&graph.outputs) {
+            prop_assert!(
+                o.shape() == shapes[id.0].as_slice(),
+                "static {:?} vs runtime {:?}",
+                shapes[id.0],
+                o.shape()
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// substrate invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f32_in(-1e6, 1e6) as f64 * 100.0).round() / 100.0),
+            3 => Json::Str(
+                (0..g.usize_in(0, 12))
+                    .map(|_| *g.choose(&['a', 'Z', '9', '"', '\\', '\n', 'µ', ' ']))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    run("json roundtrip", 200, |g: &mut Gen| {
+        let v = random_json(g, 3);
+        let text = v.to_string();
+        let back = json::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert!(back == v, "roundtrip failed for {text}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tensor_transpose_involution() {
+    run("transpose2 is an involution", 50, |g: &mut Gen| {
+        let r = g.usize_in(1, 20);
+        let c = g.usize_in(1, 20);
+        let t = Tensor::randn(&[r, c], g.u64());
+        let tt = t.transpose2().unwrap().transpose2().unwrap();
+        prop_assert!(t == tt, "{r}x{c}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_concat_slice_inverse() {
+    run("slice(concat) == parts", 50, |g: &mut Gen| {
+        let cols = g.usize_in(1, 8);
+        let r1 = g.usize_in(1, 10);
+        let r2 = g.usize_in(1, 10);
+        let a = Tensor::randn(&[r1, cols], g.u64());
+        let b = Tensor::randn(&[r2, cols], g.u64());
+        let c = Tensor::concat(&[&a, &b], 0).unwrap();
+        prop_assert!(c.slice_axis(0, 0, r1).unwrap() == a, "front");
+        prop_assert!(c.slice_axis(0, r1, r1 + r2).unwrap() == b, "back");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bf16_quantization_error_bounded() {
+    run("bf16 relative error <= 2^-8", 200, |g: &mut Gen| {
+        let x = g.f32_in(-1e20, 1e20);
+        let q = tina::util::bf16::quantize_bf16(x);
+        if x != 0.0 && x.is_finite() {
+            let rel = ((q - x) / x).abs();
+            prop_assert!(rel <= tina::util::bf16::BF16_EPS, "x={x} q={q} rel={rel}");
+        }
+        Ok(())
+    });
+}

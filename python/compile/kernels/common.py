@@ -9,7 +9,45 @@ DESIGN.md §Hardware-Adaptation.
 
 from __future__ import annotations
 
+import contextlib
+import threading
+
+import jax
 import jax.numpy as jnp
+
+# Guards the process-global jax_enable_x64 flag: reentrant so nested scopes
+# on one thread work, and held for the whole scope so overlapping scopes on
+# other threads cannot restore the flag mid-trace.
+_X64_LOCK = threading.RLock()
+_X64_DEPTH = 0
+
+
+@contextlib.contextmanager
+def x64_scope():
+    """Temporarily enable jax x64 for kernels that accumulate in float64.
+
+    The depthwise kernel sums taps in f64 so chunked and unchunked
+    schedules are bit-identical (an f32 x f32 product is exact in f64, so
+    the result is immune to shape-dependent FMA contraction); without the
+    flag jax silently narrows float64 to float32.  Scoped save/restore
+    rather than a global `jax.config.update` at import, so importing this
+    package does not change default dtypes for unrelated code; the lock +
+    depth counter serialize scopes so a concurrent caller cannot flip the
+    flag back mid-call.  (`jax.experimental.enable_x64` leaks the flag in
+    this jax version.)
+    """
+    global _X64_DEPTH
+    with _X64_LOCK:
+        old = jax.config.jax_enable_x64
+        if _X64_DEPTH == 0 and not old:
+            jax.config.update("jax_enable_x64", True)
+        _X64_DEPTH += 1
+        try:
+            yield
+        finally:
+            _X64_DEPTH -= 1
+            if _X64_DEPTH == 0 and not old:
+                jax.config.update("jax_enable_x64", False)
 
 # MXU systolic array edge / VPU lane count on current TPUs.  Matmul block
 # sizes are chosen as multiples of these so the same BlockSpecs would feed

@@ -29,20 +29,29 @@ from . import common
 def _dw_kernel(x_ref, k_ref, b_ref, o_ref, *, m: int, wout: int):
     x = x_ref[0]  # (bc, W)
     k = k_ref[...]  # (bc, m)
-    acc = jnp.zeros((x.shape[0], wout), dtype=jnp.float32)
+    # f64 accumulation: each f32 x f32 tap product is exact in f64, so the
+    # result is independent of the FMA/vectorization choices LLVM makes per
+    # input shape — chunked and unchunked schedules agree bit for bit
+    # (``depthwise_conv_chunked``'s contract; see kernels/common.py).
+    acc = jnp.zeros((x.shape[0], wout), dtype=jnp.float64)
     for i in range(m):  # static tap loop -> unrolled shift-FMA
-        acc = acc + x[:, i : i + wout].astype(jnp.float32) * k[:, i : i + 1].astype(
-            jnp.float32
+        acc = acc + x[:, i : i + wout].astype(jnp.float64) * k[:, i : i + 1].astype(
+            jnp.float64
         )
     o_ref[0] = acc.astype(o_ref.dtype) + b_ref[...][:, None].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
 def depthwise_conv(x, k, b, *, bc=256, interpret=True):
     """Depthwise valid 1-D convolution (correlation form) with bias.
 
     x: (T, C, W), k: (C, M), b: (C,) -> (T, C, W - M + 1)
     """
+    with common.x64_scope():
+        return _depthwise_conv_jit(x, k, b, bc=bc, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+def _depthwise_conv_jit(x, k, b, *, bc, interpret):
     t, c, w = x.shape
     ck, m = k.shape
     assert c == ck, f"channel mismatch: {c} vs {ck}"

@@ -1,0 +1,111 @@
+"""Minimal stand-in for the `hypothesis` API surface this suite uses.
+
+The offline test image has no `hypothesis` wheel and no package index to
+fetch one from.  Rather than skip the whole L1/L2 correctness suite,
+`conftest.py` installs this shim into `sys.modules` when the real package
+is absent: `@given` becomes a deterministic sweep of seeded random
+examples drawn from the tiny strategy objects below.
+
+Only the API the tests use is implemented: `given`, `settings`
+(`register_profile` / `load_profile` with `max_examples`), `HealthCheck`,
+`strategies.integers`, `strategies.sampled_from`.  With the real
+hypothesis installed the shim is never imported, so CI environments with
+an index get genuine shrinking back automatically.
+"""
+
+import functools
+import inspect
+import os
+import random
+import sys
+import types
+import zlib
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+
+
+class settings:  # noqa: N801 - mirrors hypothesis' public name
+    _profiles = {}
+    _current = {"max_examples": 25}
+
+    def __init__(self, **kwargs):
+        pass
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = {"max_examples": kwargs.get("max_examples", 25)}
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = dict(cls._profiles.get(name, cls._current))
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(seq):
+    items = list(seq)
+    return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def _max_examples():
+    env = os.environ.get("TINA_HYPOTHESIS_MAX_EXAMPLES")
+    if env is not None:
+        return max(1, int(env))
+    return settings._current.get("max_examples", 25)
+
+
+def given(**strategies_kw):
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # stable per-test seed (hash() is process-randomized; crc32 is not)
+            seed_base = zlib.crc32(fn.__qualname__.encode())
+            for case in range(_max_examples()):
+                rng = random.Random(seed_base + case)
+                drawn = {k: s.example_from(rng) for k, s in strategies_kw.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed at case {case} with {drawn}: {e}"
+                    ) from e
+
+        # pytest introspects the wrapper's signature to resolve fixtures;
+        # hide the strategy-provided parameters (and the functools
+        # `__wrapped__` pointer it would follow to the original).
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        remaining = [
+            p for name, p in sig.parameters.items() if name not in strategies_kw
+        ]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return decorator
+
+
+def install():
+    """Register the shim as `hypothesis` / `hypothesis.strategies`."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = HealthCheck
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.sampled_from = sampled_from
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

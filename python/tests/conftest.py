@@ -1,8 +1,23 @@
 """Shared pytest fixtures and hypothesis settings for the compile path."""
 
+import os
+import sys
+
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
+
+# make `compile` importable regardless of pytest's invocation directory
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    # offline image without hypothesis: install the in-repo shim so the
+    # property sweeps still run (deterministic seeded examples, no shrinking)
+    import _hypothesis_shim
+
+    _hypothesis_shim.install()
+    from hypothesis import HealthCheck, settings
 
 # Kernel sweeps run interpret-mode Pallas; keep example counts modest so the
 # suite stays fast, but always exercise shrinking on failure.

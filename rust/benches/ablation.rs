@@ -5,7 +5,15 @@
 //!     fusion benefit;
 //!  3. executable cache — first-execution (compile) vs steady-state cost;
 //!  4. PJRT artifact vs pure-rust interpreter per op — what the compiled
-//!     graph buys over naive layer-by-layer evaluation.
+//!     graph buys over naive layer-by-layer evaluation;
+//!  5. paper measurement protocol (device-resident inputs) vs full host
+//!     round-trip;
+//!  6. naive interpreter vs planned executor on the fallback path — what
+//!     plan caching + arena reuse + fusion + threading buy when no
+//!     artifact matches.
+//!
+//! Ablation 6 is the only one that needs no artifacts, so it runs first;
+//! the rest print in numeric order (or skip with a note).
 
 #[path = "bench_common.rs"]
 mod bench_common;
@@ -20,11 +28,85 @@ use tina::runtime::Engine;
 use tina::tensor::Tensor;
 
 fn main() {
+    interp_vs_planned();
     batching_ablation();
     fusion_ablation();
     compile_cache_ablation();
     interp_vs_pjrt();
     measurement_protocol_ablation();
+}
+
+/// 6. fallback execution engines: naive interpreter vs planned executor
+/// (arena + fusion + threaded rows) on the graphs the router lowers when
+/// no artifact matches.  Pure rust — needs no artifacts.
+fn interp_vs_planned() {
+    use tina::dsp::PfbConfig;
+    use tina::tina::{lower, ExecPlan, Interpreter};
+
+    let cfg = tina::benchkit::BenchConfig::from_env();
+    let mut t = Table::new(
+        "ablation 6: naive interpreter vs planned fallback executor",
+        &["graph", "interp median", "planned median", "planned speedup"],
+    );
+    let pfb_cfg = PfbConfig::new(32, 8);
+    let cases: Vec<(String, tina::tina::Graph, Vec<Tensor>)> = vec![
+        (
+            "pfb B=8 L=16384".into(),
+            lower::pfb(8, 16384, pfb_cfg).unwrap(),
+            vec![Tensor::randn(&[8, 16384], 1)],
+        ),
+        (
+            "pfb_fir B=8 L=16384".into(),
+            lower::pfb_fir(8, 16384, pfb_cfg).unwrap(),
+            vec![Tensor::randn(&[8, 16384], 2)],
+        ),
+        (
+            "stft B=8 L=4096".into(),
+            lower::stft(8, 4096, 256, 128).unwrap(),
+            vec![Tensor::randn(&[8, 4096], 3)],
+        ),
+        (
+            "fir B=8 L=16384".into(),
+            lower::fir(8, 16384, &tina::dsp::fir_lowpass(64, 0.25).unwrap()).unwrap(),
+            vec![Tensor::randn(&[8, 16384], 4)],
+        ),
+        (
+            "dft B=8 N=256".into(),
+            lower::dft(8, 256),
+            vec![Tensor::randn(&[8, 256], 5)],
+        ),
+    ];
+    let mut speedups: Vec<f64> = Vec::new();
+    for (label, graph, inputs) in cases {
+        let interp = Interpreter::new(graph.clone()).unwrap();
+        let plan = ExecPlan::compile(&graph).unwrap();
+        let iv = tina::benchkit::run(&cfg, || {
+            black_box(interp.run(&inputs).unwrap());
+        })
+        .summary();
+        // steady-state serving: plan compiled once, arena recycled
+        let mut arena = tina::tina::Arena::new();
+        let pv = tina::benchkit::run(&cfg, || {
+            black_box(plan.run_in(&mut arena, &inputs).unwrap());
+        })
+        .summary();
+        let speedup = pv.speedup_vs(&iv);
+        speedups.push(speedup.max(1e-9));
+        t.row(vec![
+            label,
+            fmt(iv.median_ns),
+            fmt(pv.median_ns),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    let geomean = (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64).exp();
+    t.row(vec![
+        "geomean".into(),
+        String::new(),
+        String::new(),
+        format!("{geomean:.2}x"),
+    ]);
+    println!("{}", t.render());
 }
 
 /// 5. paper protocol (device-resident inputs) vs full host round-trip —

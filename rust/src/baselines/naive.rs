@@ -118,8 +118,8 @@ pub fn stft(x: &Tensor, nfft: usize, hop: usize) -> Result<(Tensor, Tensor)> {
     }
     let z = dsp::dft_direct(&ComplexTensor::from_real(rows))?;
     Ok((
-        z.re.reshape(&[b, frames, nfft])?,
-        z.im.reshape(&[b, frames, nfft])?,
+        z.re.into_reshape(&[b, frames, nfft])?,
+        z.im.into_reshape(&[b, frames, nfft])?,
     ))
 }
 

@@ -8,7 +8,7 @@
 
 use crate::dsp::{self, PfbConfig};
 use crate::tensor::{ComplexTensor, Tensor};
-use crate::util::threadpool::{default_threads, parallel_for};
+use crate::util::threadpool::{default_threads, parallel_for, SendPtr};
 use anyhow::{bail, Result};
 
 /// Below this element count, run single-threaded.
@@ -260,25 +260,10 @@ pub fn pfb(x: &Tensor, cfg: PfbConfig) -> Result<ComplexTensor> {
     }
     let flat = ComplexTensor::from_real(Tensor::new(&[b * ns, p], rows)?);
     let z = dft(&flat)?;
-    Ok(ComplexTensor::new(
-        z.re.reshape(&[b, ns, p])?,
-        z.im.reshape(&[b, ns, p])?,
-    )?)
-}
-
-/// Send-able raw pointer wrapper for disjoint parallel writes.  The
-/// accessor takes `self` so closures capture the whole wrapper (edition
-/// 2021 disjoint capture would otherwise capture the bare `*mut f32`).
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-impl SendPtr {
-    /// Pointer offset; callers guarantee disjoint ranges across threads.
-    fn at(self, offset: usize) -> *mut f32 {
-        unsafe { self.0.add(offset) }
-    }
+    ComplexTensor::new(
+        z.re.into_reshape(&[b, ns, p])?,
+        z.im.into_reshape(&[b, ns, p])?,
+    )
 }
 
 #[cfg(test)]

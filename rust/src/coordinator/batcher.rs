@@ -81,9 +81,27 @@ impl Batcher {
 
     /// Enqueue one row; returns immediately.  The reply slot completes when
     /// the batch it rides executes.
+    ///
+    /// Rows sharing a [`BatchKey`] must agree on signal length — the formed
+    /// batch is one dense (batch, L) stack.  A mismatched row is rejected
+    /// here by completing its reply with an error, instead of poisoning the
+    /// drain loop with a panic when the batch is stacked.
     pub fn enqueue(&self, key: BatchKey, input: Tensor, reply: OneShot<Result<Vec<Tensor>>>) {
         let mut q = self.shared.queues.lock().unwrap();
-        q.entry(key).or_default().push(Pending {
+        let rows = q.entry(key).or_default();
+        if let Some(first) = rows.first() {
+            if first.input.len() != input.len() {
+                let msg = format!(
+                    "batch row length {} != queued rows' length {} for the same artifact",
+                    input.len(),
+                    first.input.len()
+                );
+                drop(q);
+                reply.set(Err(anyhow::anyhow!(msg)));
+                return;
+            }
+        }
+        rows.push(Pending {
             input,
             reply,
             enqueued: Instant::now(),
@@ -93,7 +111,14 @@ impl Batcher {
     }
 
     /// Block until a batch is full or the oldest row exceeds `max_wait`;
-    /// returns None if `deadline` passes with nothing to do.
+    /// returns None once `deadline` passes without producing a batch
+    /// (pending-but-unexpired rows stay queued for the next call).
+    ///
+    /// Invariant: every loop iteration either returns, or blocks on the
+    /// condvar until the earliest of (oldest-row expiry, deadline) — there
+    /// is no busy-spin path.  (The previous version spun hot for up to
+    /// `max_wait` when the idle deadline passed while unexpired rows were
+    /// queued.)
     pub fn next_batch(&self, idle_timeout: Duration) -> Option<FormedBatch> {
         let deadline = Instant::now() + idle_timeout;
         let mut q = self.shared.queues.lock().unwrap();
@@ -111,7 +136,9 @@ impl Batcher {
                 }
                 return Some(Self::form(key, take));
             }
-            // expired batch?
+            // expired batch?  (`now` is shared with the wake computation
+            // below so a due expiry is always taken on this iteration, not
+            // re-spun on)
             let now = Instant::now();
             let expired = q
                 .iter()
@@ -122,8 +149,11 @@ impl Batcher {
                 let rows = q.remove(&key).unwrap();
                 return Some(Self::form(key, rows));
             }
-            // otherwise wait for the earliest wakeup: either a new enqueue
-            // or the oldest entry's expiry
+            if now >= deadline {
+                return None;
+            }
+            // wait for the earliest wakeup: a new enqueue (condvar), the
+            // oldest entry's expiry, or the idle deadline
             let oldest_expiry = q
                 .values()
                 .filter_map(|v| v.first())
@@ -133,23 +163,16 @@ impl Batcher {
                 Some(e) => e.min(deadline),
                 None => deadline,
             };
-            let now = Instant::now();
             if wake <= now {
-                if q.values().all(|v| v.is_empty()) && now >= deadline {
-                    return None;
-                }
+                // an expiry became due in this very iteration; re-scan
                 continue;
             }
-            let (guard, timeout) = self
+            let (guard, _timeout) = self
                 .shared
                 .ready
                 .wait_timeout(q, wake - now)
                 .unwrap();
             q = guard;
-            if timeout.timed_out() && q.values().all(|v| v.is_empty()) && Instant::now() >= deadline
-            {
-                return None;
-            }
         }
     }
 
@@ -249,6 +272,41 @@ mod tests {
         let t0 = Instant::now();
         assert!(b.next_batch(Duration::from_millis(20)).is_none());
         assert!(t0.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn mismatched_row_length_rejected_at_enqueue() {
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_secs(10),
+        });
+        let ok = slot();
+        b.enqueue(key(4), Tensor::filled(&[1, 16], 1.0), ok.clone());
+        // same key, different signal length: must fail fast, not poison form()
+        let bad = slot();
+        b.enqueue(key(4), Tensor::filled(&[1, 32], 2.0), bad.clone());
+        let err = bad.try_take().expect("reply must complete immediately");
+        assert!(err.is_err(), "mismatched row must error");
+        assert_eq!(b.queued(), 1, "bad row must not be queued");
+        // the well-formed row still flushes normally
+        b.enqueue(key(4), Tensor::filled(&[1, 16], 3.0), slot());
+        assert_eq!(b.queued(), 2);
+        assert!(ok.try_take().is_none(), "good row unaffected");
+    }
+
+    #[test]
+    fn deadline_with_pending_unexpired_rows_returns_none_without_spinning() {
+        // rows pending but far from expiry: next_batch must give up at the
+        // idle deadline (previously this path busy-spun until expiry)
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_secs(60),
+        });
+        b.enqueue(key(4), Tensor::filled(&[1, 8], 1.0), slot());
+        let t0 = Instant::now();
+        assert!(b.next_batch(Duration::from_millis(30)).is_none());
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(29), "returned early: {dt:?}");
+        assert!(dt < Duration::from_secs(5), "blocked way past deadline: {dt:?}");
+        assert_eq!(b.queued(), 1, "row must stay queued for the next call");
     }
 
     #[test]

@@ -16,6 +16,10 @@ pub struct Metrics {
     pub batches_executed: AtomicU64,
     pub padded_rows: AtomicU64,
     pub interp_fallbacks: AtomicU64,
+    /// Fallback requests served by an already-compiled exec plan.
+    pub plan_cache_hits: AtomicU64,
+    /// Fallback requests that had to compile a new exec plan.
+    pub plan_cache_misses: AtomicU64,
     latency: Mutex<BTreeMap<String, Histogram>>,
 }
 
@@ -51,6 +55,15 @@ impl Metrics {
         self.interp_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record whether a fallback request found its exec plan in the cache.
+    pub fn record_plan_cache(&self, hit: bool) {
+        if hit {
+            self.plan_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.plan_cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Latency histogram snapshot for one op.
     pub fn latency_of(&self, op: &str) -> Option<Histogram> {
         self.latency.lock().unwrap().get(op).cloned()
@@ -60,7 +73,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests={} completed={} failed={} batched={} batches={} padded_rows={} interp_fallbacks={}\n",
+            "requests={} completed={} failed={} batched={} batches={} padded_rows={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={}\n",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -68,6 +81,8 @@ impl Metrics {
             self.batches_executed.load(Ordering::Relaxed),
             self.padded_rows.load(Ordering::Relaxed),
             self.interp_fallbacks.load(Ordering::Relaxed),
+            self.plan_cache_hits.load(Ordering::Relaxed),
+            self.plan_cache_misses.load(Ordering::Relaxed),
         ));
         for (op, h) in self.latency.lock().unwrap().iter() {
             out.push_str(&format!("  {op}: {}\n", h.summary()));
@@ -88,6 +103,11 @@ mod tests {
         m.record_completion("fir", Duration::from_micros(100), true);
         m.record_completion("fir", Duration::from_micros(300), false);
         m.record_batch(5, 3);
+        m.record_plan_cache(false);
+        m.record_plan_cache(true);
+        m.record_plan_cache(true);
+        assert_eq!(m.plan_cache_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(m.plan_cache_misses.load(Ordering::Relaxed), 1);
         assert_eq!(m.requests.load(Ordering::Relaxed), 2);
         assert_eq!(m.completed.load(Ordering::Relaxed), 1);
         assert_eq!(m.failed.load(Ordering::Relaxed), 1);

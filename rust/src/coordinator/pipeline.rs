@@ -70,7 +70,7 @@ impl Pipeline {
             {
                 let t = &current[0];
                 let (b, p, ns) = (t.shape()[0], t.shape()[1], t.shape()[2]);
-                let rows = t.permute3([0, 2, 1])?.reshape(&[b * ns, p])?;
+                let rows = t.permute3([0, 2, 1])?.into_reshape(&[b * ns, p])?;
                 current = vec![rows];
             }
             let req = OpRequest {

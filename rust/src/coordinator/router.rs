@@ -1,11 +1,17 @@
 //! Request router: resolves an [`OpRequest`] to an execution target —
 //! a compiled PJRT artifact when one matches the request signature, or a
-//! pure-rust interpreter plan as fallback.
+//! pure-rust fallback plan.
+//!
+//! Fallback execution is two-tiered: the serving path runs on the planned
+//! executor ([`Planned`], compiled once per (op, shape signature) and
+//! cached), while the naive [`Interpreter`] stays available as the
+//! cross-check oracle for tests and `tina validate`.  Both caches share
+//! the same [`PlanKey`] signature.
 
 use super::request::{ImplPref, OpKind, OpRequest, Precision};
 use crate::dsp::PfbConfig;
 use crate::runtime::Registry;
-use crate::tina::{lower, Interpreter};
+use crate::tina::{lower, Interpreter, Planned};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -53,11 +59,13 @@ pub struct PlanKey {
     pub dims: Vec<usize>,
 }
 
-/// The router: artifact lookup + interpreter plan cache.
+/// The router: artifact lookup + fallback plan caches (planned executor
+/// for serving, interpreter for the oracle path).
 pub struct Router {
     registry: Registry,
     config: RouterConfig,
     plans: Mutex<HashMap<PlanKey, std::sync::Arc<Interpreter>>>,
+    exec_plans: Mutex<HashMap<PlanKey, std::sync::Arc<Planned>>>,
 }
 
 impl Router {
@@ -66,6 +74,7 @@ impl Router {
             registry,
             config,
             plans: Mutex::new(HashMap::new()),
+            exec_plans: Mutex::new(HashMap::new()),
         }
     }
 
@@ -212,6 +221,9 @@ impl Router {
 
     /// Get or build the interpreter for a plan key, using the request's
     /// input shapes (mirrors python/compile/tina_ops.py lowering).
+    ///
+    /// This is the *oracle* path: naive node-at-a-time execution kept for
+    /// cross-checks.  Serving traffic goes through [`Router::planned`].
     pub fn interpreter(
         &self,
         key: &PlanKey,
@@ -227,6 +239,30 @@ impl Router {
             .unwrap()
             .insert(key.clone(), std::sync::Arc::clone(&it));
         Ok(it)
+    }
+
+    /// Get or compile the planned executor for a plan key.  Returns the
+    /// plan plus whether it was a cache hit (the coordinator feeds that
+    /// into its plan-cache metrics).
+    pub fn planned(
+        &self,
+        key: &PlanKey,
+        req: &OpRequest,
+    ) -> Result<(std::sync::Arc<Planned>, bool)> {
+        if let Some(p) = self.exec_plans.lock().unwrap().get(key) {
+            return Ok((std::sync::Arc::clone(p), true));
+        }
+        // Compile outside the lock: plan compilation does real work
+        // (constant baking, liveness analysis) and must not serialize
+        // unrelated requests.  A racing compile of the same key is
+        // harmless — last insert wins, both plans are identical.
+        let graph = self.build_graph(req)?;
+        let p = std::sync::Arc::new(Planned::new(&graph)?);
+        self.exec_plans
+            .lock()
+            .unwrap()
+            .insert(key.clone(), std::sync::Arc::clone(&p));
+        Ok((p, false))
     }
 
     fn build_graph(&self, req: &OpRequest) -> Result<crate::tina::Graph> {
@@ -303,9 +339,14 @@ impl Router {
         })
     }
 
-    /// Number of cached interpreter plans.
+    /// Number of cached interpreter (oracle) plans.
     pub fn cached_plans(&self) -> usize {
         self.plans.lock().unwrap().len()
+    }
+
+    /// Number of cached planned-executor plans.
+    pub fn cached_exec_plans(&self) -> usize {
+        self.exec_plans.lock().unwrap().len()
     }
 }
 
@@ -412,6 +453,43 @@ mod tests {
         assert_eq!(r.cached_plans(), 1);
         let _ = r.interpreter(&key, &req).unwrap();
         assert_eq!(r.cached_plans(), 1);
+    }
+
+    #[test]
+    fn exec_plans_cached_and_hit_reported() {
+        let r = router();
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 999])])
+            .with_impl(ImplPref::Interp);
+        let Target::Interp { key } = r.route(&req).unwrap() else {
+            panic!()
+        };
+        assert_eq!(r.cached_exec_plans(), 0);
+        let (_, hit) = r.planned(&key, &req).unwrap();
+        assert!(!hit, "first compile must be a miss");
+        assert_eq!(r.cached_exec_plans(), 1);
+        let (_, hit) = r.planned(&key, &req).unwrap();
+        assert!(hit, "second lookup must hit the cache");
+        assert_eq!(r.cached_exec_plans(), 1);
+        // the two caches are independent
+        assert_eq!(r.cached_plans(), 0);
+    }
+
+    #[test]
+    fn planned_matches_interpreter_through_router() {
+        let r = router();
+        let x = Tensor::randn(&[1, 999], 7);
+        let req = OpRequest::new(OpKind::Fir, vec![x.clone()]).with_impl(ImplPref::Interp);
+        let Target::Interp { key } = r.route(&req).unwrap() else {
+            panic!()
+        };
+        let it = r.interpreter(&key, &req).unwrap();
+        let (p, _) = r.planned(&key, &req).unwrap();
+        let want = it.run(std::slice::from_ref(&x)).unwrap();
+        let got = p.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert!(a.allclose(b, 1e-5, 1e-6));
+        }
     }
 }
 

@@ -202,9 +202,16 @@ impl Coordinator {
                 }
             }
             Target::Interp { key } => {
+                // Fallback path: compile (or fetch) the exec plan and run
+                // on the planned engine; the naive interpreter remains the
+                // test oracle only.  `served_by` keeps the "interp:" prefix
+                // as the stable fallback marker of the serving API.
                 self.metrics.record_interp_fallback();
-                let interp = match self.router.interpreter(&key, &req) {
-                    Ok(i) => i,
+                let planned = match self.router.planned(&key, &req) {
+                    Ok((p, hit)) => {
+                        self.metrics.record_plan_cache(hit);
+                        p
+                    }
                     Err(e) => {
                         self.metrics
                             .record_completion(req.op.as_str(), t0.elapsed(), false);
@@ -217,7 +224,7 @@ impl Coordinator {
                 let out_slot = slot.clone();
                 let inputs = req.inputs;
                 self.pool.submit(move || {
-                    let result = interp.run(&inputs).map(|outputs| OpResponse {
+                    let result = planned.run(&inputs).map(|outputs| OpResponse {
                         outputs,
                         served_by: format!("interp:{op}"),
                         batched: false,
@@ -295,6 +302,48 @@ mod tests {
         let want = crate::baselines::naive::ewmult(&a, &b).unwrap();
         assert!(resp.outputs[0].allclose(&want, 1e-6, 1e-6));
         assert_eq!(c.metrics().interp_fallbacks.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn repeat_fallback_requests_hit_plan_cache() {
+        let c = empty_coordinator(false);
+        for seed in 0..3u64 {
+            let x = Tensor::randn(&[1, 256], seed);
+            c.execute(OpRequest::new(OpKind::Fir, vec![x])).unwrap();
+        }
+        let m = c.metrics();
+        assert_eq!(m.plan_cache_misses.load(Ordering::Relaxed), 1, "one compile");
+        assert_eq!(m.plan_cache_hits.load(Ordering::Relaxed), 2, "repeats hit");
+        assert_eq!(c.router().cached_exec_plans(), 1);
+        // a different shape signature compiles its own plan
+        let y = Tensor::randn(&[1, 300], 9);
+        c.execute(OpRequest::new(OpKind::Fir, vec![y])).unwrap();
+        assert_eq!(m.plan_cache_misses.load(Ordering::Relaxed), 2);
+        assert_eq!(c.router().cached_exec_plans(), 2);
+    }
+
+    #[test]
+    fn planned_fallback_matches_oracle_interpreter() {
+        let c = empty_coordinator(false);
+        let x = Tensor::randn(&[2, 400], 5);
+        let resp = c
+            .execute(OpRequest::new(OpKind::Stft, vec![x.clone()]))
+            .unwrap();
+        assert_eq!(resp.served_by, "interp:stft");
+        // oracle: the naive interpreter over the router's own graph
+        let req = OpRequest::new(OpKind::Stft, vec![x.clone()]).with_impl(ImplPref::Interp);
+        let crate::coordinator::Target::Interp { key } = c.router().route(&req).unwrap() else {
+            panic!("expected interp target");
+        };
+        let want = c
+            .router()
+            .interpreter(&key, &req)
+            .unwrap()
+            .run(std::slice::from_ref(&x))
+            .unwrap();
+        for (a, b) in resp.outputs.iter().zip(&want) {
+            assert!(a.allclose(b, 1e-5, 1e-5), "planned engine diverged from oracle");
+        }
     }
 
     #[test]

@@ -134,8 +134,15 @@ impl Tensor {
 
     // -- shape manipulation --------------------------------------------------
 
-    /// Reshape without copying (element count must match).
+    /// Reshape into a new tensor (copies the buffer; element count must
+    /// match).  Use [`Tensor::into_reshape`] to move instead of copy.
     pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        self.clone().into_reshape(shape)
+    }
+
+    /// Reshape by moving the buffer — the zero-copy counterpart of
+    /// [`Tensor::reshape`] for owned tensors (element count must match).
+    pub fn into_reshape(self, shape: &[usize]) -> Result<Tensor> {
         let n: usize = shape.iter().product();
         if n != self.data.len() {
             bail!(
@@ -148,7 +155,7 @@ impl Tensor {
         }
         Ok(Tensor {
             shape: shape.to_vec(),
-            data: self.data.clone(),
+            data: self.data,
         })
     }
 
@@ -331,6 +338,16 @@ mod tests {
         assert_eq!(t.at(&[0, 2]), 2.0);
         assert_eq!(t.at(&[1, 0]), 3.0);
         assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn into_reshape_moves_without_copy() {
+        let t = Tensor::new(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let ptr = t.data().as_ptr();
+        let r = t.into_reshape(&[3, 2]).unwrap();
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data().as_ptr(), ptr, "buffer must move, not copy");
+        assert!(r.into_reshape(&[7]).is_err());
     }
 
     #[test]

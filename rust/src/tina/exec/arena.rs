@@ -1,0 +1,93 @@
+//! Slab arena backing the planned executor.
+//!
+//! A plan's liveness analysis maps every intermediate value to one of a
+//! small set of *slots*; two values share a slot exactly when their
+//! lifetimes are disjoint.  At run time the arena is just those slots as
+//! reusable `Vec<f32>` buffers: `prepare` grows them to the plan's
+//! high-water sizes once, and repeat executions (the serving steady state)
+//! touch the allocator not at all — the GPTPU/ONNX-to-hardware lesson of
+//! amortizing planning and buffer setup across invocations.
+
+/// Reusable buffer slab.  One arena serves one plan execution at a time;
+/// [`super::Planned`] keeps a pool of them for concurrent requests.
+#[derive(Debug, Default)]
+pub struct Arena {
+    slots: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// Ensure at least `sizes.len()` slots exist with `slots[i].len() >=
+    /// sizes[i]`.  Buffers are kept across calls — repeat executions of the
+    /// same plan never reallocate.
+    pub fn prepare(&mut self, sizes: &[usize]) {
+        if self.slots.len() < sizes.len() {
+            self.slots.resize_with(sizes.len(), Vec::new);
+        }
+        for (slot, &n) in self.slots.iter_mut().zip(sizes) {
+            if slot.len() < n {
+                slot.resize(n, 0.0);
+            }
+        }
+    }
+
+    /// Borrow a slot's buffer (contents beyond the live value are garbage).
+    pub fn slot(&self, i: usize) -> &[f32] {
+        &self.slots[i]
+    }
+
+    /// Detach a slot's buffer for writing (put it back with [`Arena::put`]).
+    pub fn take(&mut self, i: usize) -> Vec<f32> {
+        std::mem::take(&mut self.slots[i])
+    }
+
+    /// Re-attach a buffer taken with [`Arena::take`].
+    pub fn put(&mut self, i: usize, buf: Vec<f32>) {
+        self.slots[i] = buf;
+    }
+
+    /// Number of slots currently materialized.
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total bytes resident across all slots.
+    pub fn allocated_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.capacity() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_sizes_slots_and_keeps_capacity() {
+        let mut a = Arena::new();
+        a.prepare(&[4, 16]);
+        assert_eq!(a.slot_count(), 2);
+        assert_eq!(a.slot(0).len(), 4);
+        assert_eq!(a.slot(1).len(), 16);
+        let bytes = a.allocated_bytes();
+        // re-preparing with smaller sizes must not shrink or reallocate
+        a.prepare(&[2, 8]);
+        assert_eq!(a.slot(1).len(), 16);
+        assert_eq!(a.allocated_bytes(), bytes);
+        // growing one slot only grows that slot
+        a.prepare(&[4, 32]);
+        assert!(a.slot(1).len() >= 32);
+    }
+
+    #[test]
+    fn take_put_roundtrip_preserves_contents() {
+        let mut a = Arena::new();
+        a.prepare(&[3]);
+        let mut buf = a.take(0);
+        buf[..3].copy_from_slice(&[1.0, 2.0, 3.0]);
+        a.put(0, buf);
+        assert_eq!(&a.slot(0)[..3], &[1.0, 2.0, 3.0]);
+    }
+}

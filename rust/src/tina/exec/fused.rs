@@ -1,0 +1,349 @@
+//! Slice-level compute kernels for the planned executor.
+//!
+//! These are the same building-block semantics as [`crate::tina::layers`]
+//! (identical loop nesting and accumulation order, so results agree with
+//! the interpreter to rounding), restructured to
+//!
+//! * write into caller-provided arena buffers instead of allocating, and
+//! * fan independent output rows out across threads via
+//!   [`crate::util::threadpool::parallel_for`], gated on a work threshold
+//!   so small fallback requests don't pay thread-spawn overhead.
+//!
+//! The `fused_ew` kernel evaluates a whole `Add`/`Sub` chain
+//! (`±a ± b ± c ...`) in a single pass over memory — the planner collapses
+//! single-consumer elementwise chains into one of these.
+
+use crate::util::threadpool::{default_threads, parallel_for, SendPtr};
+
+/// Below this many scalar multiply-adds, run single-threaded (spawn
+/// overhead of scoped threads is tens of microseconds).
+const PAR_THRESHOLD: usize = 64 * 1024;
+
+fn threads_for(rows: usize, work: usize) -> usize {
+    if work < PAR_THRESHOLD {
+        1
+    } else {
+        default_threads().min(rows).max(1)
+    }
+}
+
+/// Eq. (2): depthwise valid 1-D convolution.
+/// x: (T, C, W), k: (C, M), b: (C,) -> out: (T, C, W - M + 1).
+pub fn depthwise_conv(
+    x: &[f32],
+    (t, c, w): (usize, usize, usize),
+    k: &[f32],
+    m: usize,
+    b: &[f32],
+    out: &mut [f32],
+) {
+    let wout = w - m + 1;
+    debug_assert_eq!(out.len(), t * c * wout);
+    let rows = t * c;
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for(threads_for(rows, rows * wout * m), rows, |r0, r1| {
+        let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(r0 * wout), (r1 - r0) * wout) };
+        for r in r0..r1 {
+            let ci = r % c;
+            let xrow = &x[r * w..r * w + w];
+            let krow = &k[ci * m..(ci + 1) * m];
+            let orow = &mut o[(r - r0) * wout..(r - r0 + 1) * wout];
+            orow.fill(0.0);
+            for (i, &kv) in krow.iter().enumerate() {
+                for (ov, &xv) in orow.iter_mut().zip(&xrow[i..i + wout]) {
+                    *ov += kv * xv;
+                }
+            }
+            let bias = b[ci];
+            for ov in orow.iter_mut() {
+                *ov += bias;
+            }
+        }
+    });
+}
+
+/// Eq. (1): standard valid 1-D convolution with channel mixing.
+/// x: (T, Cin, W), k: (Cout, Cin, N), b: (Cout,) -> out: (T, Cout, W - N + 1).
+pub fn standard_conv(
+    x: &[f32],
+    (t, cin, w): (usize, usize, usize),
+    k: &[f32],
+    (cout, n): (usize, usize),
+    b: &[f32],
+    out: &mut [f32],
+) {
+    let wout = w - n + 1;
+    debug_assert_eq!(out.len(), t * cout * wout);
+    let rows = t * cout;
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for(threads_for(rows, rows * wout * cin * n), rows, |r0, r1| {
+        let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(r0 * wout), (r1 - r0) * wout) };
+        for r in r0..r1 {
+            let (ti, co) = (r / cout, r % cout);
+            let orow = &mut o[(r - r0) * wout..(r - r0 + 1) * wout];
+            orow.fill(0.0);
+            for ci in 0..cin {
+                let xrow = &x[(ti * cin + ci) * w..(ti * cin + ci + 1) * w];
+                let krow = &k[(co * cin + ci) * n..(co * cin + ci + 1) * n];
+                for (i, &kv) in krow.iter().enumerate() {
+                    if kv == 0.0 {
+                        continue;
+                    }
+                    for (ov, &xv) in orow.iter_mut().zip(&xrow[i..i + wout]) {
+                        *ov += kv * xv;
+                    }
+                }
+            }
+            let bias = b[co];
+            for ov in orow.iter_mut() {
+                *ov += bias;
+            }
+        }
+    });
+}
+
+/// Eq. (3): pointwise (1x1) convolution mixing channels.
+/// x: (T, Cin, S), k: (Cin, Cout), b: (Cout,) -> out: (T, Cout, S).
+pub fn pointwise_conv(
+    x: &[f32],
+    (t, cin, s): (usize, usize, usize),
+    k: &[f32],
+    cout: usize,
+    b: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), t * cout * s);
+    let rows = t * cout;
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for(threads_for(rows, rows * s * cin), rows, |r0, r1| {
+        let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(r0 * s), (r1 - r0) * s) };
+        for r in r0..r1 {
+            let (ti, co) = (r / cout, r % cout);
+            let orow = &mut o[(r - r0) * s..(r - r0 + 1) * s];
+            orow.fill(0.0);
+            for ci in 0..cin {
+                let kv = k[ci * cout + co];
+                if kv == 0.0 {
+                    continue;
+                }
+                let xrow = &x[(ti * cin + ci) * s..(ti * cin + ci + 1) * s];
+                for (ov, &xv) in orow.iter_mut().zip(xrow) {
+                    *ov += kv * xv;
+                }
+            }
+            let bias = b[co];
+            for ov in orow.iter_mut() {
+                *ov += bias;
+            }
+        }
+    });
+}
+
+/// Eq. (4): fully connected layer.
+/// x: (B, Cin), k: (Cin, Cout), b: (Cout,) -> out: (B, Cout).
+pub fn fully_connected(
+    x: &[f32],
+    (bsz, cin): (usize, usize),
+    k: &[f32],
+    cout: usize,
+    b: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), bsz * cout);
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for(threads_for(bsz, bsz * cin * cout), bsz, |b0, b1| {
+        let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(b0 * cout), (b1 - b0) * cout) };
+        for bi in b0..b1 {
+            let orow = &mut o[(bi - b0) * cout..(bi - b0 + 1) * cout];
+            orow.fill(0.0);
+            for ci in 0..cin {
+                let aik = x[bi * cin + ci];
+                if aik == 0.0 {
+                    continue;
+                }
+                let krow = &k[ci * cout..(ci + 1) * cout];
+                for (ov, &kv) in orow.iter_mut().zip(krow) {
+                    *ov += aik * kv;
+                }
+            }
+            for (ov, &bv) in orow.iter_mut().zip(b) {
+                *ov += bv;
+            }
+        }
+    });
+}
+
+/// 2-D transpose: x (R, C) -> out (C, R).
+pub fn transpose2(x: &[f32], (r, c): (usize, usize), out: &mut [f32]) {
+    debug_assert_eq!(out.len(), r * c);
+    for i in 0..r {
+        for j in 0..c {
+            out[j * r + i] = x[i * c + j];
+        }
+    }
+}
+
+/// Rank-3 axis permutation (same index math as `Tensor::permute3`).
+pub fn permute3(x: &[f32], s: (usize, usize, usize), perm: [usize; 3], out: &mut [f32]) {
+    let s = [s.0, s.1, s.2];
+    let os = [s[perm[0]], s[perm[1]], s[perm[2]]];
+    debug_assert_eq!(out.len(), s[0] * s[1] * s[2]);
+    for i in 0..s[0] {
+        for j in 0..s[1] {
+            for k in 0..s[2] {
+                let idx = [i, j, k];
+                let o = [idx[perm[0]], idx[perm[1]], idx[perm[2]]];
+                out[(o[0] * os[1] + o[1]) * os[2] + o[2]] = x[(i * s[1] + j) * s[2] + k];
+            }
+        }
+    }
+}
+
+/// Strided slice along `axis`: keep indices 0, stride, ..., (count-1)*stride.
+pub fn strided_slice(
+    x: &[f32],
+    shape: &[usize],
+    axis: usize,
+    stride: usize,
+    count: usize,
+    out: &mut [f32],
+) {
+    let outer: usize = shape[..axis].iter().product();
+    let inner: usize = shape[axis + 1..].iter().product();
+    let extent = shape[axis];
+    debug_assert_eq!(out.len(), outer * count * inner);
+    for o in 0..outer {
+        for i in 0..count {
+            let src = (o * extent + i * stride) * inner;
+            let dst = (o * count + i) * inner;
+            out[dst..dst + inner].copy_from_slice(&x[src..src + inner]);
+        }
+    }
+}
+
+/// Fused elementwise chain: out[i] = sum_k signs[k] * terms[k][i], one pass
+/// over memory, accumulated left to right (matching the rounding order of
+/// the equivalent Add/Sub node chain).
+pub fn fused_ew(terms: &[(f32, &[f32])], out: &mut [f32]) {
+    assert!(!terms.is_empty(), "fused_ew needs at least one term");
+    let n = out.len();
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for(threads_for(n, n * terms.len()), n, |i0, i1| {
+        let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(i0), i1 - i0) };
+        let (s0, t0) = terms[0];
+        if s0 == 1.0 {
+            o.copy_from_slice(&t0[i0..i1]);
+        } else {
+            for (ov, &v) in o.iter_mut().zip(&t0[i0..i1]) {
+                *ov = s0 * v;
+            }
+        }
+        for &(s, t) in &terms[1..] {
+            if s == 1.0 {
+                for (ov, &v) in o.iter_mut().zip(&t[i0..i1]) {
+                    *ov += v;
+                }
+            } else {
+                for (ov, &v) in o.iter_mut().zip(&t[i0..i1]) {
+                    *ov += s * v;
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::tina::layers;
+
+    #[test]
+    fn depthwise_matches_layers() {
+        let x = Tensor::randn(&[3, 5, 20], 1);
+        let k = Tensor::randn(&[5, 4], 2);
+        let b = Tensor::randn(&[5], 3);
+        let want = layers::depthwise_conv(&x, &k, &b).unwrap();
+        let mut out = vec![0.0f32; want.len()];
+        depthwise_conv(x.data(), (3, 5, 20), k.data(), 4, b.data(), &mut out);
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn standard_matches_layers() {
+        let x = Tensor::randn(&[2, 3, 30], 4);
+        let k = Tensor::randn(&[6, 3, 5], 5);
+        let b = Tensor::randn(&[6], 6);
+        let want = layers::standard_conv(&x, &k, &b).unwrap();
+        let mut out = vec![0.0f32; want.len()];
+        standard_conv(x.data(), (2, 3, 30), k.data(), (6, 5), b.data(), &mut out);
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn pointwise_matches_layers() {
+        let x = Tensor::randn(&[2, 7, 9], 7);
+        let k = Tensor::randn(&[7, 4], 8);
+        let b = Tensor::randn(&[4], 9);
+        let want = layers::pointwise_conv(&x, &k, &b).unwrap();
+        let mut out = vec![0.0f32; want.len()];
+        pointwise_conv(x.data(), (2, 7, 9), k.data(), 4, b.data(), &mut out);
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn fully_connected_matches_layers() {
+        let x = Tensor::randn(&[5, 11], 10);
+        let k = Tensor::randn(&[11, 3], 11);
+        let b = Tensor::randn(&[3], 12);
+        let want = layers::fully_connected(&x, &k, &b).unwrap();
+        let mut out = vec![0.0f32; want.len()];
+        fully_connected(x.data(), (5, 11), k.data(), 3, b.data(), &mut out);
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn movement_kernels_match_tensor_ops() {
+        let x = Tensor::randn(&[4, 6], 13);
+        let mut out = vec![0.0f32; 24];
+        transpose2(x.data(), (4, 6), &mut out);
+        assert_eq!(out, x.transpose2().unwrap().data());
+
+        let y = Tensor::randn(&[2, 3, 4], 14);
+        let mut out = vec![0.0f32; 24];
+        permute3(y.data(), (2, 3, 4), [2, 0, 1], &mut out);
+        assert_eq!(out, y.permute3([2, 0, 1]).unwrap().data());
+
+        let z = Tensor::randn(&[2, 8, 3], 15);
+        let want = z.stride_axis(1, 3, 3).unwrap();
+        let mut out = vec![0.0f32; want.len()];
+        strided_slice(z.data(), &[2, 8, 3], 1, 3, 3, &mut out);
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn fused_chain_matches_sequential_adds() {
+        let a = Tensor::randn(&[100], 16);
+        let b = Tensor::randn(&[100], 17);
+        let c = Tensor::randn(&[100], 18);
+        let mut out = vec![0.0f32; 100];
+        fused_ew(&[(1.0, a.data()), (-1.0, b.data()), (1.0, c.data())], &mut out);
+        // identical rounding to (a - b) + c evaluated node by node
+        let ab = crate::tensor::sub(&a, &b).unwrap();
+        let want = crate::tensor::add(&ab, &c).unwrap();
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn parallel_path_consistent_with_serial() {
+        // large enough to cross PAR_THRESHOLD and engage the thread pool
+        let t = 32;
+        let x = Tensor::randn(&[t, 16, 260], 19);
+        let k = Tensor::randn(&[16, 5], 20);
+        let b = Tensor::randn(&[16], 21);
+        let want = layers::depthwise_conv(&x, &k, &b).unwrap();
+        let mut out = vec![0.0f32; want.len()];
+        depthwise_conv(x.data(), (t, 16, 260), k.data(), 5, b.data(), &mut out);
+        assert_eq!(out, want.data());
+    }
+}

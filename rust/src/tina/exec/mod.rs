@@ -1,0 +1,97 @@
+//! Planned fallback executor: compile a TINA [`Graph`](crate::tina::Graph)
+//! once into an [`ExecPlan`], then execute it many times against a
+//! recycled slab [`Arena`].
+//!
+//! This is the serving-path replacement for the node-at-a-time
+//! [`Interpreter`](crate::tina::Interpreter): the interpreter allocates a
+//! fresh tensor (and clones every constant) per node per request, while a
+//! plan bakes constants, turns `Reshape` into metadata-only views, fuses
+//! elementwise chains, recycles buffers via liveness analysis, and fans
+//! independent batch rows across the thread pool.  The interpreter remains
+//! the cross-check oracle: property tests assert plan output equality on
+//! every lowering (see `rust/tests/properties.rs`).
+//!
+//! Module layout:
+//! * [`plan`] — compilation (alias/fusion/liveness) and step execution;
+//! * [`arena`] — the reusable buffer slab;
+//! * [`fused`] — slice-level threaded kernels (same accumulation order as
+//!   [`crate::tina::layers`], so results agree to rounding).
+
+pub mod arena;
+pub mod fused;
+pub mod plan;
+
+pub use arena::Arena;
+pub use plan::ExecPlan;
+
+use crate::tensor::Tensor;
+use crate::tina::graph::Graph;
+use anyhow::Result;
+use std::sync::Mutex;
+
+/// Upper bound on pooled arenas per plan (beyond this, concurrent requests
+/// fall back to a throwaway arena rather than growing the pool forever).
+const ARENA_POOL_CAP: usize = 8;
+
+/// A shareable compiled plan plus a pool of recycled arenas — the object
+/// the router caches and the coordinator executes fallback requests on.
+#[derive(Debug)]
+pub struct Planned {
+    plan: ExecPlan,
+    arenas: Mutex<Vec<Arena>>,
+}
+
+impl Planned {
+    /// Compile a graph into a planned executor.
+    pub fn new(graph: &Graph) -> Result<Planned> {
+        Ok(Planned {
+            plan: ExecPlan::compile(graph)?,
+            arenas: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+
+    /// Execute, borrowing an arena from the pool (allocation-free in the
+    /// steady state) and returning it afterwards.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
+        let result = self.plan.run_in(&mut arena, inputs);
+        let mut pool = self.arenas.lock().unwrap();
+        if pool.len() < ARENA_POOL_CAP {
+            pool.push(arena);
+        }
+        result
+    }
+
+    /// Arenas currently parked in the pool (tests/metrics).
+    pub fn pooled_arenas(&self) -> usize {
+        self.arenas.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tina::lower;
+
+    #[test]
+    fn planned_pools_arenas_across_runs() {
+        let p = Planned::new(&lower::ewadd(8, 8)).unwrap();
+        assert_eq!(p.pooled_arenas(), 0);
+        let a = Tensor::randn(&[8, 8], 1);
+        let b = Tensor::randn(&[8, 8], 2);
+        p.run(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(p.pooled_arenas(), 1);
+        p.run(&[a, b]).unwrap();
+        assert_eq!(p.pooled_arenas(), 1, "arena must be reused, not re-added");
+    }
+
+    #[test]
+    fn planned_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Planned>();
+    }
+}

@@ -1,0 +1,948 @@
+//! Graph -> [`ExecPlan`] compilation and plan execution.
+//!
+//! `ExecPlan::compile` runs once per (op, shape signature) and does all the
+//! work the naive interpreter repeats on every request:
+//!
+//! * **constant baking** — `Constant` nodes are cloned into the plan once
+//!   (the interpreter clones every weight tensor on every run);
+//! * **alias analysis** — `Reshape` becomes a metadata-only view: the
+//!   value shares its producer's buffer with a different shape;
+//! * **elementwise fusion** — single-consumer `Add`/`Sub` chains collapse
+//!   into one [`fused::fused_ew`] pass, and `Add`/`Sub` of a layer output
+//!   with a per-channel-uniform constant folds into that layer's bias;
+//! * **liveness analysis** — every surviving value gets a slot in a slab
+//!   [`Arena`] via linear-scan allocation over the topological schedule;
+//!   a buffer is recycled the moment its last consumer has run;
+//! * **threaded execution** — the kernels in [`fused`] fan independent
+//!   output rows across the thread pool.
+//!
+//! Plans are immutable and shareable (`Send + Sync`); the arena is the
+//! only mutable run state, so one plan serves many concurrent requests
+//! (see [`super::Planned`]).
+
+use super::arena::Arena;
+use super::fused;
+use crate::tensor::Tensor;
+use crate::tina::graph::{Graph, NodeOp, ValueId};
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, HashSet};
+
+/// Where a value's bytes live at execution time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Loc {
+    /// Caller-provided input tensor (never copied).
+    External(usize),
+    /// Plan-owned constant (baked at compile time).
+    Const(usize),
+    /// Arena slot (recycled across values with disjoint lifetimes).
+    Slot(usize),
+}
+
+/// One resolved kernel argument.
+#[derive(Debug, Clone)]
+struct ArgRef {
+    loc: Loc,
+    shape: Vec<usize>,
+    /// Producing value id (diagnostics + liveness validation).
+    root: usize,
+}
+
+#[derive(Debug, Clone)]
+enum Kernel {
+    StandardConv1d,
+    DepthwiseConv1d,
+    PointwiseConv,
+    FullyConnected,
+    Transpose2,
+    Permute3([usize; 3]),
+    StridedSlice {
+        axis: usize,
+        stride: usize,
+        count: usize,
+    },
+    /// Collapsed Add/Sub chain; `signs[i]` applies to `args[i]`.
+    FusedEw { signs: Vec<f32> },
+}
+
+#[derive(Debug, Clone)]
+struct Step {
+    kernel: Kernel,
+    args: Vec<ArgRef>,
+    out_slot: usize,
+    out_shape: Vec<usize>,
+    /// Value id this step produces (liveness validation).
+    out_root: usize,
+}
+
+/// A compiled, immutable execution plan for one graph.
+#[derive(Debug)]
+pub struct ExecPlan {
+    input_shapes: Vec<Vec<usize>>,
+    constants: Vec<Tensor>,
+    steps: Vec<Step>,
+    slot_sizes: Vec<usize>,
+    outputs: Vec<ArgRef>,
+}
+
+/// Compile-time storage class of a value (pass-A bookkeeping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Storage {
+    External(usize),
+    Const(usize),
+    /// Produced by an emitted step; slot assigned in the liveness pass.
+    Owned,
+}
+
+#[derive(Debug, Clone)]
+struct ValInfo {
+    st: Storage,
+    root: usize,
+}
+
+#[derive(Debug, Clone)]
+struct ProtoArg {
+    shape: Vec<usize>,
+    st: Storage,
+    root: usize,
+}
+
+#[derive(Debug)]
+struct ProtoStep {
+    kernel: Kernel,
+    args: Vec<ProtoArg>,
+    out_vid: usize,
+}
+
+/// If `t` (shaped like a layer output, channel axis 1) is constant along
+/// every non-channel coordinate, return the per-channel values.
+fn per_channel_uniform(t: &Tensor, out_shape: &[usize]) -> Option<Vec<f32>> {
+    let (outer, c, inner) = match *out_shape {
+        [a, b, w] => (a, b, w),
+        [a, b] => (a, b, 1),
+        _ => return None,
+    };
+    if t.shape() != out_shape {
+        return None;
+    }
+    let d = t.data();
+    let vals: Vec<f32> = (0..c).map(|ch| d[ch * inner]).collect();
+    for o in 0..outer {
+        for (ch, &v) in vals.iter().enumerate() {
+            for i in 0..inner {
+                if d[(o * c + ch) * inner + i] != v {
+                    return None;
+                }
+            }
+        }
+    }
+    Some(vals)
+}
+
+/// Flatten an Add/Sub chain rooted at node `j` into signed terms, left to
+/// right.  Only first operands are ever marked inlined (see the fusion
+/// decision pass), so the flattened sequence reproduces the chain's f32
+/// rounding exactly.
+fn expand_terms(
+    g: &Graph,
+    inlined: &[bool],
+    n_inputs: usize,
+    j: usize,
+    sign: f32,
+    out: &mut Vec<(f32, usize)>,
+) {
+    let node = &g.nodes[j];
+    let (sa, sb) = match node.op {
+        NodeOp::Add => (sign, sign),
+        NodeOp::Sub => (sign, -sign),
+        _ => unreachable!("expand_terms on non-elementwise node"),
+    };
+    for (v, s) in [(node.inputs[0], sa), (node.inputs[1], sb)] {
+        match v.0.checked_sub(n_inputs) {
+            Some(cj) if inlined[cj] => expand_terms(g, inlined, n_inputs, cj, s, out),
+            _ => out.push((s, v.0)),
+        }
+    }
+}
+
+impl ExecPlan {
+    /// Compile a validated graph into an execution plan.
+    pub fn compile(g: &Graph) -> Result<ExecPlan> {
+        g.validate()?;
+        let n_inputs = g.inputs.len();
+        let n_values = g.value_count();
+        for (i, (id, _)) in g.inputs.iter().enumerate() {
+            if id.0 != i {
+                bail!("exec plans require graph inputs declared before any node");
+            }
+        }
+        let shapes = g.infer_shapes()?;
+        let n_nodes = g.nodes.len();
+        let node_of = |v: ValueId| v.0.checked_sub(n_inputs);
+
+        // ---- use counts + single-consumer map -----------------------------
+        let mut uses = vec![0usize; n_values];
+        let mut consumer: Vec<Option<usize>> = vec![None; n_values];
+        for (j, node) in g.nodes.iter().enumerate() {
+            for v in &node.inputs {
+                uses[v.0] += 1;
+                consumer[v.0] = Some(j);
+            }
+        }
+        for v in &g.outputs {
+            uses[v.0] += 1;
+        }
+
+        // ---- fusion decision 1: fold ew-with-constant into layer bias -----
+        // Add(layer, c) / Add(c, layer) / Sub(layer, c) where `layer` has a
+        // constant bias and no other consumer, and `c` is per-channel
+        // uniform: rewrite the layer's bias, alias the ew node to the layer.
+        let mut fold_alias: Vec<Option<ValueId>> = vec![None; n_nodes];
+        let mut fused_bias: HashMap<usize, Tensor> = HashMap::new();
+        for (j, node) in g.nodes.iter().enumerate() {
+            let base_sign = match node.op {
+                NodeOp::Add => 1.0f32,
+                NodeOp::Sub => -1.0,
+                _ => continue,
+            };
+            let (a, b) = (node.inputs[0], node.inputs[1]);
+            let mut candidates = vec![(a, b, base_sign)];
+            if matches!(node.op, NodeOp::Add) {
+                candidates.push((b, a, 1.0));
+            }
+            for (lv, cv, csign) in candidates {
+                let (Some(li), Some(ci)) = (node_of(lv), node_of(cv)) else {
+                    continue;
+                };
+                if !g.nodes[li].op.is_layer() || uses[lv.0] != 1 || fused_bias.contains_key(&li)
+                {
+                    continue;
+                }
+                let NodeOp::Constant(cd) = &g.nodes[ci].op else {
+                    continue;
+                };
+                let Some(bi) = node_of(g.nodes[li].inputs[2]) else {
+                    continue;
+                };
+                let NodeOp::Constant(bias_t) = &g.nodes[bi].op else {
+                    continue;
+                };
+                let Some(chan) = per_channel_uniform(cd, &shapes[lv.0]) else {
+                    continue;
+                };
+                let mut nb = bias_t.data().to_vec();
+                for (o, v) in nb.iter_mut().zip(&chan) {
+                    *o += csign * v;
+                }
+                fused_bias.insert(li, Tensor::new(bias_t.shape(), nb)?);
+                fold_alias[j] = Some(lv);
+                break;
+            }
+        }
+
+        // ---- fusion decision 2: collapse single-consumer Add/Sub chains ---
+        // Only a consumer's FIRST operand is inlined: left-to-right
+        // evaluation of the flattened terms then performs exactly the same
+        // f32 additions in the same order as the node-by-node chain, so the
+        // fused pass stays bit-identical to the interpreter oracle.
+        // (Inlining the second operand would turn x + (y + z) into
+        // (x + y) + z — a different rounding.)
+        let mut inlined = vec![false; n_nodes];
+        for (j, node) in g.nodes.iter().enumerate() {
+            if !matches!(node.op, NodeOp::Add | NodeOp::Sub) || fold_alias[j].is_some() {
+                continue;
+            }
+            let vid = n_inputs + j;
+            if uses[vid] != 1 {
+                continue;
+            }
+            let Some(cj) = consumer[vid] else { continue };
+            if matches!(g.nodes[cj].op, NodeOp::Add | NodeOp::Sub)
+                && fold_alias[cj].is_none()
+                && g.nodes[cj].inputs[0] == ValueId(vid)
+            {
+                inlined[j] = true;
+            }
+        }
+
+        // ---- pass A: resolve storage, emit proto steps --------------------
+        let mut info: Vec<Option<ValInfo>> = vec![None; n_values];
+        for (i, (id, _)) in g.inputs.iter().enumerate() {
+            info[id.0] = Some(ValInfo {
+                st: Storage::External(i),
+                root: id.0,
+            });
+        }
+        let mut constants: Vec<Tensor> = Vec::new();
+        let mut protos: Vec<ProtoStep> = Vec::new();
+        let arg_of = |vid: usize, info: &[Option<ValInfo>], shapes: &[Vec<usize>]| -> Result<ProtoArg> {
+            let vi = info[vid]
+                .as_ref()
+                .ok_or_else(|| anyhow!("value {vid} consumed before materialization"))?;
+            Ok(ProtoArg {
+                shape: shapes[vid].clone(),
+                st: vi.st,
+                root: vi.root,
+            })
+        };
+        for (j, node) in g.nodes.iter().enumerate() {
+            let vid = n_inputs + j;
+            match &node.op {
+                NodeOp::Constant(t) => {
+                    constants.push(t.clone());
+                    info[vid] = Some(ValInfo {
+                        st: Storage::Const(constants.len() - 1),
+                        root: vid,
+                    });
+                }
+                NodeOp::Reshape(_) => {
+                    // metadata-only view: same storage, new shape
+                    let src = info[node.inputs[0].0]
+                        .clone()
+                        .ok_or_else(|| anyhow!("reshape of unmaterialized value"))?;
+                    info[vid] = Some(src);
+                }
+                NodeOp::Add | NodeOp::Sub => {
+                    if let Some(lv) = fold_alias[j] {
+                        // folded into the producing layer's bias
+                        info[vid] = Some(info[lv.0].clone().expect("layer before fold"));
+                    } else if inlined[j] {
+                        // expanded inside the consuming chain; no value
+                    } else {
+                        let mut terms: Vec<(f32, usize)> = Vec::new();
+                        expand_terms(g, &inlined, n_inputs, j, 1.0, &mut terms);
+                        let signs: Vec<f32> = terms.iter().map(|t| t.0).collect();
+                        let args = terms
+                            .iter()
+                            .map(|&(_, v)| arg_of(v, &info, &shapes))
+                            .collect::<Result<Vec<_>>>()?;
+                        protos.push(ProtoStep {
+                            kernel: Kernel::FusedEw { signs },
+                            args,
+                            out_vid: vid,
+                        });
+                        info[vid] = Some(ValInfo {
+                            st: Storage::Owned,
+                            root: vid,
+                        });
+                    }
+                }
+                op => {
+                    let kernel = match op {
+                        NodeOp::StandardConv1d => Kernel::StandardConv1d,
+                        NodeOp::DepthwiseConv1d => Kernel::DepthwiseConv1d,
+                        NodeOp::PointwiseConv => Kernel::PointwiseConv,
+                        NodeOp::FullyConnected => Kernel::FullyConnected,
+                        NodeOp::Transpose2 => Kernel::Transpose2,
+                        NodeOp::Permute3(p) => Kernel::Permute3(*p),
+                        NodeOp::StridedSlice {
+                            axis,
+                            stride,
+                            count,
+                        } => Kernel::StridedSlice {
+                            axis: *axis,
+                            stride: *stride,
+                            count: *count,
+                        },
+                        _ => unreachable!("handled above"),
+                    };
+                    let mut args = node
+                        .inputs
+                        .iter()
+                        .map(|v| arg_of(v.0, &info, &shapes))
+                        .collect::<Result<Vec<_>>>()?;
+                    if let Some(nb) = fused_bias.get(&j) {
+                        constants.push(nb.clone());
+                        args[2] = ProtoArg {
+                            shape: nb.shape().to_vec(),
+                            st: Storage::Const(constants.len() - 1),
+                            root: usize::MAX,
+                        };
+                    }
+                    protos.push(ProtoStep {
+                        kernel,
+                        args,
+                        out_vid: vid,
+                    });
+                    info[vid] = Some(ValInfo {
+                        st: Storage::Owned,
+                        root: vid,
+                    });
+                }
+            }
+        }
+
+        // ---- read counts over owned storages ------------------------------
+        let mut reads: HashMap<usize, usize> = HashMap::new();
+        for p in &protos {
+            for a in &p.args {
+                if a.st == Storage::Owned {
+                    *reads.entry(a.root).or_default() += 1;
+                }
+            }
+        }
+        let mut pinned: HashSet<usize> = HashSet::new();
+        for out in &g.outputs {
+            let vi = info[out.0]
+                .as_ref()
+                .ok_or_else(|| anyhow!("graph output {out:?} never materialized"))?;
+            if vi.st == Storage::Owned {
+                pinned.insert(vi.root);
+            }
+        }
+
+        // ---- pass B: linear-scan slot assignment --------------------------
+        let mut slot_of: HashMap<usize, usize> = HashMap::new();
+        let mut free: Vec<usize> = Vec::new();
+        let mut slot_sizes: Vec<usize> = Vec::new();
+        let mut remaining = reads.clone();
+        let mut steps: Vec<Step> = Vec::with_capacity(protos.len());
+        for p in protos {
+            let out_len: usize = shapes[p.out_vid].iter().product();
+            let slot = free.pop().unwrap_or_else(|| {
+                slot_sizes.push(0);
+                slot_sizes.len() - 1
+            });
+            slot_sizes[slot] = slot_sizes[slot].max(out_len);
+            slot_of.insert(p.out_vid, slot);
+            let args: Vec<ArgRef> = p
+                .args
+                .iter()
+                .map(|a| ArgRef {
+                    loc: match a.st {
+                        Storage::External(i) => Loc::External(i),
+                        Storage::Const(k) => Loc::Const(k),
+                        Storage::Owned => Loc::Slot(slot_of[&a.root]),
+                    },
+                    shape: a.shape.clone(),
+                    root: a.root,
+                })
+                .collect();
+            // recycle inputs whose last consumer just ran
+            for a in &p.args {
+                if a.st == Storage::Owned {
+                    let r = remaining.get_mut(&a.root).expect("counted");
+                    *r -= 1;
+                    if *r == 0 && !pinned.contains(&a.root) {
+                        free.push(slot_of[&a.root]);
+                    }
+                }
+            }
+            // a value nobody reads (dead node) frees its slot immediately
+            if reads.get(&p.out_vid).copied().unwrap_or(0) == 0 && !pinned.contains(&p.out_vid)
+            {
+                free.push(slot);
+            }
+            steps.push(Step {
+                kernel: p.kernel,
+                args,
+                out_slot: slot,
+                out_shape: shapes[p.out_vid].clone(),
+                out_root: p.out_vid,
+            });
+        }
+
+        let mut outputs: Vec<ArgRef> = g
+            .outputs
+            .iter()
+            .map(|v| {
+                let vi = info[v.0].as_ref().expect("checked above");
+                ArgRef {
+                    loc: match vi.st {
+                        Storage::External(i) => Loc::External(i),
+                        Storage::Const(k) => Loc::Const(k),
+                        Storage::Owned => Loc::Slot(slot_of[&vi.root]),
+                    },
+                    shape: shapes[v.0].clone(),
+                    root: vi.root,
+                }
+            })
+            .collect();
+
+        // ---- drop constants nothing references --------------------------
+        // Fusion can orphan constants (a folded-away addend, a superseded
+        // bias); plans live in the router cache for the process lifetime,
+        // so compact them out instead of pinning dead tensors.
+        let mut used = vec![false; constants.len()];
+        for s in &steps {
+            for a in &s.args {
+                if let Loc::Const(k) = a.loc {
+                    used[k] = true;
+                }
+            }
+        }
+        for o in &outputs {
+            if let Loc::Const(k) = o.loc {
+                used[k] = true;
+            }
+        }
+        let mut remap = vec![usize::MAX; constants.len()];
+        let mut compact: Vec<Tensor> = Vec::new();
+        for (k, t) in constants.into_iter().enumerate() {
+            if used[k] {
+                remap[k] = compact.len();
+                compact.push(t);
+            }
+        }
+        let fix = |loc: &mut Loc| {
+            if let Loc::Const(k) = *loc {
+                *loc = Loc::Const(remap[k]);
+            }
+        };
+        for s in &mut steps {
+            for a in &mut s.args {
+                fix(&mut a.loc);
+            }
+        }
+        for o in &mut outputs {
+            fix(&mut o.loc);
+        }
+
+        let plan = ExecPlan {
+            input_shapes: g.inputs.iter().map(|(_, s)| s.clone()).collect(),
+            constants: compact,
+            steps,
+            slot_sizes,
+            outputs,
+        };
+        debug_assert!(plan.validate_liveness().is_ok());
+        Ok(plan)
+    }
+
+    /// Execute with a throwaway arena (tests / one-shot callers).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut arena = Arena::new();
+        self.run_in(&mut arena, inputs)
+    }
+
+    /// Execute reusing `arena`'s buffers (the serving hot path).
+    pub fn run_in(&self, arena: &mut Arena, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.input_shapes.len() {
+            bail!(
+                "expected {} inputs, got {}",
+                self.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, shape)) in inputs.iter().zip(&self.input_shapes).enumerate() {
+            if t.shape() != shape.as_slice() {
+                bail!(
+                    "input {i} shape {:?} != declared {:?}",
+                    t.shape(),
+                    shape
+                );
+            }
+        }
+        arena.prepare(&self.slot_sizes);
+
+        fn resolve<'a>(
+            a: &ArgRef,
+            inputs: &'a [Tensor],
+            constants: &'a [Tensor],
+            arena: &'a Arena,
+        ) -> &'a [f32] {
+            let n: usize = a.shape.iter().product();
+            match a.loc {
+                Loc::External(i) => &inputs[i].data()[..n],
+                Loc::Const(k) => &constants[k].data()[..n],
+                Loc::Slot(s) => &arena.slot(s)[..n],
+            }
+        }
+
+        for step in &self.steps {
+            let out_len: usize = step.out_shape.iter().product();
+            let mut out_buf = arena.take(step.out_slot);
+            debug_assert!(out_buf.len() >= out_len);
+            {
+                let out = &mut out_buf[..out_len];
+                let arg = |i: usize| resolve(&step.args[i], inputs, &self.constants, arena);
+                match &step.kernel {
+                    Kernel::DepthwiseConv1d => {
+                        let (xs, ks) = (&step.args[0].shape, &step.args[1].shape);
+                        fused::depthwise_conv(
+                            arg(0),
+                            (xs[0], xs[1], xs[2]),
+                            arg(1),
+                            ks[1],
+                            arg(2),
+                            out,
+                        );
+                    }
+                    Kernel::StandardConv1d => {
+                        let (xs, ks) = (&step.args[0].shape, &step.args[1].shape);
+                        fused::standard_conv(
+                            arg(0),
+                            (xs[0], xs[1], xs[2]),
+                            arg(1),
+                            (ks[0], ks[2]),
+                            arg(2),
+                            out,
+                        );
+                    }
+                    Kernel::PointwiseConv => {
+                        let (xs, ks) = (&step.args[0].shape, &step.args[1].shape);
+                        fused::pointwise_conv(
+                            arg(0),
+                            (xs[0], xs[1], xs[2]),
+                            arg(1),
+                            ks[1],
+                            arg(2),
+                            out,
+                        );
+                    }
+                    Kernel::FullyConnected => {
+                        let (xs, ks) = (&step.args[0].shape, &step.args[1].shape);
+                        fused::fully_connected(
+                            arg(0),
+                            (xs[0], xs[1]),
+                            arg(1),
+                            ks[1],
+                            arg(2),
+                            out,
+                        );
+                    }
+                    Kernel::Transpose2 => {
+                        let xs = &step.args[0].shape;
+                        fused::transpose2(arg(0), (xs[0], xs[1]), out);
+                    }
+                    Kernel::Permute3(p) => {
+                        let xs = &step.args[0].shape;
+                        fused::permute3(arg(0), (xs[0], xs[1], xs[2]), *p, out);
+                    }
+                    Kernel::StridedSlice {
+                        axis,
+                        stride,
+                        count,
+                    } => {
+                        fused::strided_slice(
+                            arg(0),
+                            &step.args[0].shape,
+                            *axis,
+                            *stride,
+                            *count,
+                            out,
+                        );
+                    }
+                    Kernel::FusedEw { signs } => {
+                        let terms: Vec<(f32, &[f32])> = signs
+                            .iter()
+                            .zip(&step.args)
+                            .map(|(&s, a)| (s, resolve(a, inputs, &self.constants, arena)))
+                            .collect();
+                        fused::fused_ew(&terms, out);
+                    }
+                }
+            }
+            arena.put(step.out_slot, out_buf);
+        }
+
+        self.outputs
+            .iter()
+            .map(|o| {
+                let data = resolve(o, inputs, &self.constants, arena).to_vec();
+                Tensor::new(&o.shape, data)
+            })
+            .collect()
+    }
+
+    /// Number of arena slots the plan needs (its peak live-buffer count).
+    pub fn slot_count(&self) -> usize {
+        self.slot_sizes.len()
+    }
+
+    /// Number of kernel steps after fusion/aliasing.
+    pub fn step_count(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Bytes of arena the plan's slots occupy at their high-water sizes.
+    pub fn arena_bytes(&self) -> usize {
+        self.slot_sizes.iter().map(|&n| n * 4).sum()
+    }
+
+    /// Constants baked into the plan (after dead-constant compaction).
+    pub fn constant_count(&self) -> usize {
+        self.constants.len()
+    }
+
+    /// Declared input shapes, in call order.
+    pub fn input_shapes(&self) -> &[Vec<usize>] {
+        &self.input_shapes
+    }
+
+    /// Symbolically execute the schedule and verify that no step reads a
+    /// slot after it has been recycled to another value, that no step's
+    /// output slot aliases one of its inputs, and that pinned outputs are
+    /// never overwritten.  Used by tests to prove the arena sound.
+    pub fn validate_liveness(&self) -> Result<()> {
+        let mut reads: HashMap<usize, usize> = HashMap::new();
+        for s in &self.steps {
+            for a in &s.args {
+                if matches!(a.loc, Loc::Slot(_)) {
+                    *reads.entry(a.root).or_default() += 1;
+                }
+            }
+        }
+        let mut pinned: HashSet<usize> = HashSet::new();
+        for o in &self.outputs {
+            if matches!(o.loc, Loc::Slot(_)) {
+                pinned.insert(o.root);
+            }
+        }
+        let mut owner: Vec<Option<usize>> = vec![None; self.slot_sizes.len()];
+        let mut remaining = reads.clone();
+        for (si, s) in self.steps.iter().enumerate() {
+            for a in &s.args {
+                if let Loc::Slot(slot) = a.loc {
+                    if owner[slot] != Some(a.root) {
+                        bail!(
+                            "step {si}: reads value {} from slot {slot} holding {:?} (read-after-recycle)",
+                            a.root,
+                            owner[slot]
+                        );
+                    }
+                    if slot == s.out_slot {
+                        bail!("step {si}: output slot {slot} aliases an input");
+                    }
+                }
+            }
+            if let Some(prev) = owner[s.out_slot] {
+                if remaining.get(&prev).copied().unwrap_or(0) > 0 {
+                    bail!(
+                        "step {si}: overwrites slot {} holding live value {prev}",
+                        s.out_slot
+                    );
+                }
+                if pinned.contains(&prev) {
+                    bail!("step {si}: overwrites pinned output value {prev}");
+                }
+            }
+            owner[s.out_slot] = Some(s.out_root);
+            for a in &s.args {
+                if matches!(a.loc, Loc::Slot(_)) {
+                    *remaining.get_mut(&a.root).expect("counted") -= 1;
+                }
+            }
+        }
+        for (oi, o) in self.outputs.iter().enumerate() {
+            if let Loc::Slot(slot) = o.loc {
+                if owner[slot] != Some(o.root) {
+                    bail!("output {oi}: slot {slot} recycled before return");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp;
+    use crate::tina::lower;
+    use crate::tina::Interpreter;
+
+    fn check_against_interpreter(g: Graph, inputs: &[Tensor]) {
+        let interp = Interpreter::new(g.clone()).unwrap();
+        let plan = ExecPlan::compile(&g).unwrap();
+        plan.validate_liveness().unwrap();
+        let want = interp.run(inputs).unwrap();
+        let got = plan.run(inputs).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.shape(), b.shape());
+            assert!(
+                a.allclose(b, 1e-5, 1e-6),
+                "planned executor diverged (max diff {})",
+                a.max_abs_diff(b).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn matches_interpreter_on_every_lowering() {
+        let cfg = dsp::PfbConfig::new(8, 4);
+        let taps = dsp::fir_lowpass(16, 0.2).unwrap();
+        check_against_interpreter(
+            lower::ewmult(5, 7),
+            &[Tensor::randn(&[5, 7], 1), Tensor::randn(&[5, 7], 2)],
+        );
+        check_against_interpreter(
+            lower::ewadd(3, 9),
+            &[Tensor::randn(&[3, 9], 3), Tensor::randn(&[3, 9], 4)],
+        );
+        check_against_interpreter(
+            lower::matmul(6, 10, 4),
+            &[Tensor::randn(&[6, 10], 5), Tensor::randn(&[10, 4], 6)],
+        );
+        check_against_interpreter(lower::summation(500), &[Tensor::randn(&[500], 7)]);
+        check_against_interpreter(lower::dft(2, 16), &[Tensor::randn(&[2, 16], 8)]);
+        check_against_interpreter(
+            lower::idft(2, 16),
+            &[Tensor::randn(&[2, 16], 9), Tensor::randn(&[2, 16], 10)],
+        );
+        check_against_interpreter(
+            lower::fir(2, 200, &taps).unwrap(),
+            &[Tensor::randn(&[2, 200], 11)],
+        );
+        check_against_interpreter(
+            lower::unfold(1, 50, 8).unwrap(),
+            &[Tensor::randn(&[1, 50], 12)],
+        );
+        check_against_interpreter(
+            lower::pfb_fir(2, 8 * 32, cfg).unwrap(),
+            &[Tensor::randn(&[2, 8 * 32], 13)],
+        );
+        check_against_interpreter(
+            lower::pfb(2, 8 * 32, cfg).unwrap(),
+            &[Tensor::randn(&[2, 8 * 32], 14)],
+        );
+        check_against_interpreter(
+            lower::stft(2, 600, 64, 32).unwrap(),
+            &[Tensor::randn(&[2, 600], 15)],
+        );
+    }
+
+    #[test]
+    fn arena_slots_are_recycled() {
+        // STFT has a long chain of intermediates; the linear-scan allocator
+        // must map them onto fewer slots than steps.
+        let g = lower::stft(1, 1024, 64, 32).unwrap();
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert!(
+            plan.slot_count() < plan.step_count(),
+            "no reuse: {} slots for {} steps",
+            plan.slot_count(),
+            plan.step_count()
+        );
+        plan.validate_liveness().unwrap();
+    }
+
+    #[test]
+    fn reshape_is_metadata_only() {
+        // ewmult lowers to reshape/reshape/depthwise/reshape: only the
+        // depthwise conv should materialize a buffer.
+        let g = lower::ewmult(4, 4);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.step_count(), 1, "reshapes must not become steps");
+        assert_eq!(plan.slot_count(), 1);
+    }
+
+    #[test]
+    fn ew_chain_collapses_to_single_fused_pass() {
+        // (a - b) + c with single consumers collapses into one FusedEw.
+        let mut g = Graph::new();
+        let a = g.input(&[4, 4]);
+        let b = g.input(&[4, 4]);
+        let c = g.input(&[4, 4]);
+        let s = g.push(NodeOp::Sub, &[a, b]);
+        let o = g.push(NodeOp::Add, &[s, c]);
+        g.set_outputs(&[o]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.step_count(), 1, "chain must fuse into one pass");
+        check_against_interpreter(
+            g,
+            &[
+                Tensor::randn(&[4, 4], 20),
+                Tensor::randn(&[4, 4], 21),
+                Tensor::randn(&[4, 4], 22),
+            ],
+        );
+    }
+
+    #[test]
+    fn constant_add_folds_into_layer_bias() {
+        // FC output + per-channel-uniform constant folds into the bias.
+        let mut g = Graph::new();
+        let x = g.input(&[3, 5]);
+        let k = g.constant(Tensor::randn(&[5, 4], 30));
+        let bias = g.constant(Tensor::randn(&[4], 31));
+        let fc = g.push(NodeOp::FullyConnected, &[x, k, bias]);
+        // constant with each channel column uniform across the batch
+        let chan = [0.5f32, -1.0, 2.0, 0.25];
+        let mut cdata = Vec::new();
+        for _ in 0..3 {
+            cdata.extend_from_slice(&chan);
+        }
+        let c = g.constant(Tensor::new(&[3, 4], cdata).unwrap());
+        let o = g.push(NodeOp::Add, &[fc, c]);
+        g.set_outputs(&[o]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.step_count(), 1, "add must fold into the FC bias");
+        // kernel + fused bias survive; the folded addend and the original
+        // bias are compacted out of the plan
+        assert_eq!(plan.constant_count(), 2, "dead constants must be dropped");
+        check_against_interpreter(g, &[Tensor::randn(&[3, 5], 32)]);
+    }
+
+    #[test]
+    fn non_uniform_constant_does_not_fold() {
+        let mut g = Graph::new();
+        let x = g.input(&[2, 3]);
+        let k = g.constant(Tensor::randn(&[3, 3], 33));
+        let bias = g.constant(Tensor::zeros(&[3]));
+        let fc = g.push(NodeOp::FullyConnected, &[x, k, bias]);
+        let c = g.constant(Tensor::randn(&[2, 3], 34)); // not per-channel uniform
+        let o = g.push(NodeOp::Add, &[fc, c]);
+        g.set_outputs(&[o]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.step_count(), 2, "must stay FC + FusedEw");
+        check_against_interpreter(g, &[Tensor::randn(&[2, 3], 35)]);
+    }
+
+    #[test]
+    fn shared_intermediate_is_not_inlined() {
+        // d = a + b used twice: must materialize once, not be re-expanded.
+        let mut g = Graph::new();
+        let a = g.input(&[2, 2]);
+        let b = g.input(&[2, 2]);
+        let d = g.push(NodeOp::Add, &[a, b]);
+        let e = g.push(NodeOp::Add, &[d, d]);
+        let f = g.push(NodeOp::Sub, &[e, d]);
+        g.set_outputs(&[f]);
+        check_against_interpreter(
+            g,
+            &[Tensor::randn(&[2, 2], 40), Tensor::randn(&[2, 2], 41)],
+        );
+    }
+
+    #[test]
+    fn graph_input_passthrough_output() {
+        // an output that is directly a graph input (External loc path)
+        let mut g = Graph::new();
+        let x = g.input(&[2, 3]);
+        let r = g.push(NodeOp::Reshape(vec![3, 2]), &[x]);
+        g.set_outputs(&[r, x]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.step_count(), 0);
+        let t = Tensor::randn(&[2, 3], 50);
+        let out = plan.run(&[t.clone()]).unwrap();
+        assert_eq!(out[0].shape(), &[3, 2]);
+        assert_eq!(out[0].data(), t.data());
+        assert_eq!(out[1], t);
+    }
+
+    #[test]
+    fn rejects_wrong_inputs_like_interpreter() {
+        let plan = ExecPlan::compile(&lower::ewmult(2, 2)).unwrap();
+        assert!(plan.run(&[Tensor::zeros(&[2, 2])]).is_err());
+        assert!(plan
+            .run(&[Tensor::zeros(&[2, 3]), Tensor::zeros(&[2, 2])])
+            .is_err());
+    }
+
+    #[test]
+    fn repeat_runs_reuse_arena_without_corruption() {
+        let g = lower::pfb(1, 8 * 32, dsp::PfbConfig::new(8, 4)).unwrap();
+        let interp = Interpreter::new(g.clone()).unwrap();
+        let plan = ExecPlan::compile(&g).unwrap();
+        let mut arena = Arena::new();
+        for seed in 0..4u64 {
+            let x = Tensor::randn(&[1, 8 * 32], 60 + seed);
+            let want = interp.run(std::slice::from_ref(&x)).unwrap();
+            let got = plan.run_in(&mut arena, std::slice::from_ref(&x)).unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert!(a.allclose(b, 1e-5, 1e-6), "seed {seed}");
+            }
+        }
+    }
+}

@@ -1,21 +1,54 @@
 //! The TINA graph: the paper's function -> NN-layer mappings as a small
-//! dataflow IR over the four building blocks, plus a pure-rust interpreter.
+//! dataflow IR over the four building blocks, plus two executors.
 //!
 //! This mirrors `python/compile/tina_ops.py` node for node.  It serves
-//! three roles:
+//! four roles:
 //!
 //! 1. **Specification** — `lower::*` encodes Table 1 in rust, so tests can
 //!    assert the mapping structure (which building block carries which
 //!    function) independently of jax;
 //! 2. **Cross-check** — the interpreter executes the same plans the PJRT
 //!    artifacts were lowered from; integration tests compare both outputs;
-//! 3. **Fallback** — the coordinator's router executes plans on the
-//!    interpreter when no artifact matches a request.
+//! 3. **Fallback serving** — the coordinator's router compiles graphs into
+//!    [`exec::ExecPlan`]s and executes them on the planned engine when no
+//!    artifact matches a request;
+//! 4. **Oracle contract** — the naive [`Interpreter`] stays the reference
+//!    the planned engine is validated against: `rust/tests/properties.rs`
+//!    asserts **bit-for-bit** plan-vs-interpreter equality on every
+//!    `lower::*` graph over randomized shapes (chain fusion only inlines
+//!    first operands, which preserves f32 rounding order exactly).  The
+//!    one deliberate exception is constant-into-bias folding, which
+//!    merges two adds into one and therefore agrees with the oracle to
+//!    rounding tolerance, not bitwise — covered by unit tests in
+//!    `exec::plan`.
+//!
+//! # Execution engines
+//!
+//! [`interp::Interpreter`] is a deliberately naive tree-walker: one fresh
+//! heap allocation per node per run, constants cloned every time.  Correct
+//! and obvious — the oracle.
+//!
+//! [`exec`] is the serving engine.  `ExecPlan::compile` runs once per
+//! (op, shape signature) and performs:
+//!
+//! * **constant baking** — weights cloned into the plan once;
+//! * **alias analysis** — `Reshape` becomes a metadata-only view;
+//! * **fusion** — single-consumer `Add`/`Sub` chains collapse into one
+//!   pass, and per-channel-uniform constant adds fold into layer biases;
+//! * **liveness analysis** — linear-scan slot assignment recycles each
+//!   buffer the moment its last consumer has run (slab [`exec::Arena`]);
+//! * **thread fan-out** — kernels split independent batch rows across
+//!   `util::threadpool::parallel_for`.
+//!
+//! The router caches compiled plans keyed by (op, shape signature) and the
+//! coordinator reports cache hits/misses in its metrics.
 
+pub mod exec;
 pub mod graph;
 pub mod interp;
 pub mod layers;
 pub mod lower;
 
+pub use exec::{Arena, ExecPlan, Planned};
 pub use graph::{Graph, Node, NodeOp, ValueId};
 pub use interp::Interpreter;

@@ -109,6 +109,23 @@ pub fn parallel_for(threads: usize, n: usize, f: impl Fn(usize, usize) + Sync) {
     });
 }
 
+/// Send-able raw pointer wrapper for disjoint parallel writes from
+/// [`parallel_for`] workers.  The accessor takes `self` so closures
+/// capture the whole wrapper (edition-2021 disjoint capture would
+/// otherwise capture the bare `*mut f32`).  Callers guarantee every
+/// thread writes a disjoint index range.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub(crate) *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// Pointer offset; callers guarantee disjoint ranges across threads.
+    pub(crate) fn at(self, offset: usize) -> *mut f32 {
+        unsafe { self.0.add(offset) }
+    }
+}
+
 /// Default worker count: physical parallelism minus one for the
 /// coordinator thread, at least 1.
 pub fn default_threads() -> usize {

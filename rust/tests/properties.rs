@@ -9,7 +9,7 @@ use tina::dsp::{self, PfbConfig};
 use tina::prop_assert;
 use tina::tensor::{ComplexTensor, Tensor};
 use tina::testing::prop::{run, Gen};
-use tina::tina::{lower, Interpreter};
+use tina::tina::{lower, ExecPlan, Graph, Interpreter, Planned};
 use tina::util::json::{self, Json};
 use tina::util::threadpool::OneShot;
 
@@ -178,6 +178,148 @@ fn prop_pfb_implementations_agree() {
         let it = Interpreter::new(lower::pfb_fir(1, l, cfg).unwrap()).unwrap();
         let c = it.run(&[x.clone()]).map_err(|e| e.to_string())?;
         prop_assert!(a.allclose(&c[0], 1e-4, 1e-5), "interp p={p} m={m}");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// planned executor invariants: the exec plan must match the interpreter
+// oracle on every lowering, and its arena schedule must be sound
+// ---------------------------------------------------------------------------
+
+/// Build a random graph + matching random inputs for one of the lowerings.
+fn random_lowering(g: &mut Gen) -> (Graph, Vec<Tensor>) {
+    let which = *g.choose(&[0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+    match which {
+        0 => {
+            let (h, w) = (g.usize_in(1, 16), g.usize_in(1, 16));
+            (
+                lower::ewmult(h, w),
+                vec![Tensor::randn(&[h, w], g.u64()), Tensor::randn(&[h, w], g.u64())],
+            )
+        }
+        1 => {
+            let (h, w) = (g.usize_in(1, 16), g.usize_in(1, 16));
+            (
+                lower::ewadd(h, w),
+                vec![Tensor::randn(&[h, w], g.u64()), Tensor::randn(&[h, w], g.u64())],
+            )
+        }
+        2 => {
+            let (m, l, n) = (g.usize_in(1, 12), g.usize_in(1, 16), g.usize_in(1, 12));
+            (
+                lower::matmul(m, l, n),
+                vec![Tensor::randn(&[m, l], g.u64()), Tensor::randn(&[l, n], g.u64())],
+            )
+        }
+        3 => {
+            let l = g.usize_in(1, 2000);
+            (lower::summation(l), vec![Tensor::randn(&[l], g.u64())])
+        }
+        4 => {
+            let (b, n) = (g.usize_in(1, 4), g.usize_in(2, 24));
+            (lower::dft(b, n), vec![Tensor::randn(&[b, n], g.u64())])
+        }
+        5 => {
+            let (b, n) = (g.usize_in(1, 4), g.usize_in(2, 24));
+            (
+                lower::idft(b, n),
+                vec![Tensor::randn(&[b, n], g.u64()), Tensor::randn(&[b, n], g.u64())],
+            )
+        }
+        6 => {
+            let taps = dsp::fir_lowpass(g.usize_in(2, 24), 0.2).unwrap();
+            let l = taps.len() + g.usize_in(1, 300);
+            let b = g.usize_in(1, 3);
+            (
+                lower::fir(b, l, &taps).unwrap(),
+                vec![Tensor::randn(&[b, l], g.u64())],
+            )
+        }
+        7 => {
+            let j = g.usize_in(1, 12);
+            let l = j + g.usize_in(1, 120);
+            let b = g.usize_in(1, 3);
+            (
+                lower::unfold(b, l, j).unwrap(),
+                vec![Tensor::randn(&[b, l], g.u64())],
+            )
+        }
+        8 | 9 => {
+            let p = *g.choose(&[4usize, 8]);
+            let m = g.usize_in(2, 5);
+            let l = p * (m + g.usize_in(2, 24));
+            let b = g.usize_in(1, 3);
+            let cfg = PfbConfig::new(p, m);
+            let graph = if which == 8 {
+                lower::pfb_fir(b, l, cfg).unwrap()
+            } else {
+                lower::pfb(b, l, cfg).unwrap()
+            };
+            (graph, vec![Tensor::randn(&[b, l], g.u64())])
+        }
+        _ => {
+            let nfft = *g.choose(&[16usize, 32]);
+            let hop = nfft / 2;
+            let l = nfft + hop * g.usize_in(0, 8);
+            let b = g.usize_in(1, 2);
+            (
+                lower::stft(b, l, nfft, hop).unwrap(),
+                vec![Tensor::randn(&[b, l], g.u64())],
+            )
+        }
+    }
+}
+
+#[test]
+fn prop_planned_executor_matches_interpreter_oracle() {
+    // The planned engine restructures execution (baked constants, aliased
+    // reshapes, fused elementwise chains, recycled buffers, threaded rows)
+    // but keeps every kernel's accumulation order identical to the
+    // interpreter's — so on the standard lowerings the outputs must be
+    // bit-for-bit equal, not merely close.
+    run("planned executor == interpreter (bitwise)", 40, |g: &mut Gen| {
+        let (graph, inputs) = random_lowering(g);
+        let interp = Interpreter::new(graph.clone()).unwrap();
+        let plan = ExecPlan::compile(&graph).map_err(|e| e.to_string())?;
+        plan.validate_liveness().map_err(|e| e.to_string())?;
+        let want = interp.run(&inputs).map_err(|e| e.to_string())?;
+        let got = plan.run(&inputs).map_err(|e| e.to_string())?;
+        prop_assert!(got.len() == want.len(), "output arity");
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            prop_assert!(a.shape() == b.shape(), "output {i} shape");
+            prop_assert!(
+                a == b,
+                "output {i} diverged, max abs diff {}",
+                a.max_abs_diff(b).unwrap_or(f32::NAN)
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planned_reuse_is_safe_across_repeat_runs() {
+    // One Planned instance (shared plan + arena pool) over many distinct
+    // inputs: recycled buffers must never leak one request's data into the
+    // next — every run re-checked against the oracle.
+    run("arena reuse is request-safe", 15, |g: &mut Gen| {
+        let (graph, _) = random_lowering(g);
+        let interp = Interpreter::new(graph.clone()).unwrap();
+        let planned = Planned::new(&graph).map_err(|e| e.to_string())?;
+        for _ in 0..3 {
+            let inputs: Vec<Tensor> = interp
+                .graph()
+                .inputs
+                .iter()
+                .map(|(_, shape)| Tensor::randn(shape, g.u64()))
+                .collect();
+            let want = interp.run(&inputs).map_err(|e| e.to_string())?;
+            let got = planned.run(&inputs).map_err(|e| e.to_string())?;
+            for (a, b) in got.iter().zip(&want) {
+                prop_assert!(a == b, "stale arena data leaked into a result");
+            }
+        }
         Ok(())
     });
 }

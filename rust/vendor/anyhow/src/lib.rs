@@ -1,0 +1,207 @@
+//! Offline stand-in for the `anyhow` crate, implementing exactly the API
+//! surface this repository uses: [`Error`], [`Result`], the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, and the [`Context`] extension trait.
+//!
+//! The build environment has no crates.io access, so the real crate cannot
+//! be fetched; this path dependency keeps the dependency surface identical
+//! for when the genuine crate becomes available (same names, same call
+//! sites, drop-in swap in Cargo.toml).
+//!
+//! Semantics mirror anyhow where they matter here:
+//!
+//! * `Display` prints the outermost message only;
+//! * alternate `Display` (`{:#}`) prints the whole context chain joined by
+//!   `": "` (what `tina`'s CLI error reporting relies on);
+//! * `Debug` prints the message plus a `Caused by:` list, so
+//!   `unwrap()`/`expect()` failures stay diagnosable;
+//! * any `std::error::Error + Send + Sync + 'static` converts via `From`
+//!   (which is what makes `?` work on io/json/etc. errors), and the
+//!   source chain is captured at conversion time.
+
+use std::fmt;
+
+/// A dynamic error with a chain of context messages.
+///
+/// `chain[0]` is the outermost (most recently attached) message; later
+/// entries are the causes, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Attach an outer context message (used by [`Context`]).
+    pub fn push_context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what lets the blanket `From` below coexist with the reflexive
+// `From<Error> for Error` (same trick as the real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` alias with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    /// Wrap the error with an outer message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily-built outer message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_outermost_only_alternate_chains() {
+        let e: Error = io_err().into();
+        let e = e.push_context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.root_cause(), "gone");
+        let n: Option<u32> = None;
+        assert!(n.with_context(|| "missing").is_err());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x = {x} too big");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x = 12 too big");
+        let msg = String::from("plain");
+        assert_eq!(format!("{}", anyhow!(msg)), "plain");
+    }
+}

@@ -9,11 +9,17 @@
 //!  5. paper measurement protocol (device-resident inputs) vs full host
 //!     round-trip;
 //!  6. naive interpreter vs planned executor on the fallback path — what
-//!     plan caching + arena reuse + fusion + threading buy when no
-//!     artifact matches.
+//!     plan caching + zero-copy strided views + weight pre-packing +
+//!     register tiling + arena reuse + threading buy when no artifact
+//!     matches.
 //!
 //! Ablation 6 is the only one that needs no artifacts, so it runs first;
 //! the rest print in numeric order (or skip with a note).
+//!
+//! Besides the human-readable tables, every ablation that ran contributes
+//! to `BENCH_exec.json` at the repo root — median ns/iter per case and a
+//! geomean per ablation — so CI and future PRs can track the perf
+//! trajectory mechanically.
 
 #[path = "bench_common.rs"]
 mod bench_common;
@@ -26,20 +32,49 @@ use tina::coordinator::{
 };
 use tina::runtime::Engine;
 use tina::tensor::Tensor;
+use tina::util::json::Json;
+
+/// Geometric mean of strictly-positive samples.
+fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|&x| x.max(1e-9).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
 
 fn main() {
-    interp_vs_planned();
-    batching_ablation();
-    fusion_ablation();
-    compile_cache_ablation();
-    interp_vs_pjrt();
-    measurement_protocol_ablation();
+    let mut report: Vec<(&str, Json)> = Vec::new();
+    report.push(("ablation6_interp_vs_planned", interp_vs_planned()));
+    if let Some(j) = batching_ablation() {
+        report.push(("ablation1_batching", j));
+    }
+    if let Some(j) = fusion_ablation() {
+        report.push(("ablation2_fusion", j));
+    }
+    if let Some(j) = compile_cache_ablation() {
+        report.push(("ablation3_compile_cache", j));
+    }
+    if let Some(j) = interp_vs_pjrt() {
+        report.push(("ablation4_interp_vs_pjrt", j));
+    }
+    if let Some(j) = measurement_protocol_ablation() {
+        report.push(("ablation5_protocol", j));
+    }
+    let out = Json::obj(report);
+    // benches run with the package manifest dir as cwd context; the repo
+    // root is one level up from rust/
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_exec.json");
+    match std::fs::write(path, format!("{out}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 /// 6. fallback execution engines: naive interpreter vs planned executor
-/// (arena + fusion + threaded rows) on the graphs the router lowers when
-/// no artifact matches.  Pure rust — needs no artifacts.
-fn interp_vs_planned() {
+/// (strided views + packed kernels + arena + fusion + threaded rows) on
+/// the graphs the router lowers when no artifact matches.  Pure rust —
+/// needs no artifacts.
+fn interp_vs_planned() -> Json {
     use tina::dsp::PfbConfig;
     use tina::tina::{lower, ExecPlan, Interpreter};
 
@@ -77,6 +112,8 @@ fn interp_vs_planned() {
         ),
     ];
     let mut speedups: Vec<f64> = Vec::new();
+    let mut planned_ns: Vec<f64> = Vec::new();
+    let mut case_json: Vec<(String, Json)> = Vec::new();
     for (label, graph, inputs) in cases {
         let interp = Interpreter::new(graph.clone()).unwrap();
         let plan = ExecPlan::compile(&graph).unwrap();
@@ -92,6 +129,15 @@ fn interp_vs_planned() {
         .summary();
         let speedup = pv.speedup_vs(&iv);
         speedups.push(speedup.max(1e-9));
+        planned_ns.push(pv.median_ns);
+        case_json.push((
+            label.clone(),
+            Json::obj(vec![
+                ("interp_ns", Json::num(iv.median_ns)),
+                ("planned_ns", Json::num(pv.median_ns)),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ));
         t.row(vec![
             label,
             fmt(iv.median_ns),
@@ -99,27 +145,34 @@ fn interp_vs_planned() {
             format!("{speedup:.2}x"),
         ]);
     }
-    let geomean = (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64).exp();
+    let g = geomean(&speedups);
     t.row(vec![
         "geomean".into(),
         String::new(),
         String::new(),
-        format!("{geomean:.2}x"),
+        format!("{g:.2}x"),
     ]);
     println!("{}", t.render());
+    Json::obj(vec![
+        ("geomean_speedup", Json::num(g)),
+        ("geomean_planned_ns", Json::num(geomean(&planned_ns))),
+        (
+            "cases",
+            Json::Obj(case_json.into_iter().collect()),
+        ),
+    ])
 }
 
 /// 5. paper protocol (device-resident inputs) vs full host round-trip —
 /// quantifies what the literal upload/fetch adds per request size.
-fn measurement_protocol_ablation() {
+fn measurement_protocol_ablation() -> Option<Json> {
     let fb = FigureBench::new();
-    if fb.engine.is_none() {
-        return;
-    }
+    fb.engine.as_ref()?;
     let mut t = Table::new(
         "ablation 5: device-resident (paper protocol) vs host round-trip",
         &["artifact", "device-resident", "host round-trip", "upload+fetch overhead"],
     );
+    let mut cases: Vec<(String, Json)> = Vec::new();
     for (name, shape) in [
         ("fir_tina_f32_B1_L1024", vec![1usize, 1024]),
         ("fir_tina_f32_B1_L65536", vec![1, 65536]),
@@ -137,6 +190,13 @@ fn measurement_protocol_ablation() {
         ) else {
             continue;
         };
+        cases.push((
+            name.to_string(),
+            Json::obj(vec![
+                ("device_ns", Json::num(dev.median_ns)),
+                ("host_ns", Json::num(host.median_ns)),
+            ]),
+        ));
         t.row(vec![
             name.into(),
             fmt(dev.median_ns),
@@ -145,14 +205,22 @@ fn measurement_protocol_ablation() {
         ]);
     }
     println!("{}", t.render());
+    if cases.is_empty() {
+        return None;
+    }
+    Some(Json::obj(vec![(
+        "cases",
+        Json::Obj(cases.into_iter().collect()),
+    )]))
 }
 
 /// 1. batching on/off throughput.
-fn batching_ablation() {
+fn batching_ablation() -> Option<Json> {
     let mut t = Table::new(
         "ablation 1: dynamic batching (200 x B=1 FIR L=4096 requests)",
         &["batching", "total", "req/s", "batches", "padded rows"],
     );
+    let mut rates: Vec<(&str, Json)> = Vec::new();
     for batching in [true, false] {
         let Ok(coord) = Coordinator::from_dir(
             "artifacts",
@@ -162,7 +230,7 @@ fn batching_ablation() {
             },
         ) else {
             eprintln!("no artifacts; skipping batching ablation");
-            return;
+            return None;
         };
         let coord = Arc::new(coord);
         let _ = coord.warmup(Some("fir"));
@@ -179,10 +247,15 @@ fn batching_ablation() {
         }
         let dt = t0.elapsed();
         let m = coord.metrics();
+        let rate = n as f64 / dt.as_secs_f64();
+        rates.push((
+            if batching { "batching_on_req_s" } else { "batching_off_req_s" },
+            Json::num(rate),
+        ));
         t.row(vec![
             if batching { "on" } else { "off" }.into(),
             format!("{dt:?}"),
-            format!("{:.0}", n as f64 / dt.as_secs_f64()),
+            format!("{rate:.0}"),
             m.batches_executed
                 .load(std::sync::atomic::Ordering::Relaxed)
                 .to_string(),
@@ -193,12 +266,13 @@ fn batching_ablation() {
         coord.shutdown();
     }
     println!("{}", t.render());
+    Some(Json::obj(rates))
 }
 
 /// 2. fused pfb artifact vs two-stage pipeline.
-fn fusion_ablation() {
+fn fusion_ablation() -> Option<Json> {
     let Ok(coord) = Coordinator::from_dir("artifacts", CoordinatorConfig::default()) else {
-        return;
+        return None;
     };
     let cfg = tina::benchkit::BenchConfig::from_env();
     let x = Tensor::randn(&[1, 16384], 31);
@@ -231,35 +305,41 @@ fn fusion_ablation() {
         fmt(chained.median_ns),
         "pfb_fir artifact + dft stage, host round-trip".into(),
     ]);
+    let benefit = chained.median_ns / fused.median_ns.max(1.0);
     t.row(vec![
         "fusion benefit".into(),
-        format!("{:.2}x", chained.median_ns / fused.median_ns.max(1.0)),
+        format!("{benefit:.2}x"),
         "chained / fused".into(),
     ]);
     println!("{}", t.render());
     coord.shutdown();
+    Some(Json::obj(vec![
+        ("fused_ns", Json::num(fused.median_ns)),
+        ("chained_ns", Json::num(chained.median_ns)),
+        ("fusion_benefit", Json::num(benefit)),
+    ]))
 }
 
 /// 3. compile-vs-cached execution cost.
-fn compile_cache_ablation() {
+fn compile_cache_ablation() -> Option<Json> {
     let Ok(engine) = Engine::from_dir("artifacts") else {
-        return;
+        return None;
     };
     let mut t = Table::new(
         "ablation 3: executable cache (pfb_tina_f32_B1_L16384)",
         &["phase", "time"],
     );
     let name = "pfb_tina_f32_B1_L16384";
-    if engine.registry().get(name).is_none() {
-        return;
-    }
+    engine.registry().get(name)?;
     let x = Tensor::randn(&[1, 16384], 41);
     let t0 = std::time::Instant::now();
     engine.execute(name, std::slice::from_ref(&x)).unwrap();
-    t.row(vec!["first (compile + run)".into(), format!("{:?}", t0.elapsed())]);
+    let first = t0.elapsed();
+    t.row(vec!["first (compile + run)".into(), format!("{first:?}")]);
     let t1 = std::time::Instant::now();
     engine.execute(name, std::slice::from_ref(&x)).unwrap();
-    t.row(vec!["second (cached)".into(), format!("{:?}", t1.elapsed())]);
+    let second = t1.elapsed();
+    t.row(vec!["second (cached)".into(), format!("{second:?}")]);
     let stats = engine.stats();
     t.row(vec![
         "engine stats".into(),
@@ -272,14 +352,16 @@ fn compile_cache_ablation() {
         ),
     ]);
     println!("{}", t.render());
+    Some(Json::obj(vec![
+        ("first_ns", Json::num(first.as_nanos() as f64)),
+        ("cached_ns", Json::num(second.as_nanos() as f64)),
+    ]))
 }
 
 /// 4. interpreter vs PJRT per op.
-fn interp_vs_pjrt() {
+fn interp_vs_pjrt() -> Option<Json> {
     let fb = FigureBench::new();
-    let Some(engine) = fb.engine.as_ref() else {
-        return;
-    };
+    let engine = fb.engine.as_ref()?;
     let router = tina::coordinator::Router::new(engine.registry().clone(), Default::default());
     let mut t = Table::new(
         "ablation 4: pure-rust interpreter vs compiled PJRT artifact",
@@ -307,6 +389,7 @@ fn interp_vs_pjrt() {
             "matmul_tina_f32_N256".into(),
         ),
     ];
+    let mut case_json: Vec<(String, Json)> = Vec::new();
     for (op, inputs, artifact) in cases {
         let req = OpRequest::new(op, inputs.clone()).with_impl(ImplPref::Interp);
         let Ok(tina::coordinator::Target::Interp { key }) = router.route(&req) else {
@@ -321,6 +404,13 @@ fn interp_vs_pjrt() {
         let Some(pv) = fb.bench_artifact(&artifact, &inputs) else {
             continue;
         };
+        case_json.push((
+            op.as_str().to_string(),
+            Json::obj(vec![
+                ("interp_ns", Json::num(iv.median_ns)),
+                ("pjrt_ns", Json::num(pv.median_ns)),
+            ]),
+        ));
         t.row(vec![
             op.as_str().into(),
             fmt(iv.median_ns),
@@ -329,4 +419,11 @@ fn interp_vs_pjrt() {
         ]);
     }
     println!("{}", t.render());
+    if case_json.is_empty() {
+        return None;
+    }
+    Some(Json::obj(vec![(
+        "cases",
+        Json::Obj(case_json.into_iter().collect()),
+    )]))
 }

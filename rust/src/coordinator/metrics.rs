@@ -20,6 +20,9 @@ pub struct Metrics {
     pub plan_cache_hits: AtomicU64,
     /// Fallback requests that had to compile a new exec plan.
     pub plan_cache_misses: AtomicU64,
+    /// Plans dropped from the router's LRU-bounded caches (shape-diverse
+    /// traffic overflowing `RouterConfig::plan_cache_cap`).
+    pub plan_cache_evictions: AtomicU64,
     latency: Mutex<BTreeMap<String, Histogram>>,
 }
 
@@ -64,6 +67,13 @@ impl Metrics {
         }
     }
 
+    /// Fold in plans evicted from the router's bounded caches.
+    pub fn record_plan_cache_evictions(&self, n: u64) {
+        if n > 0 {
+            self.plan_cache_evictions.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
     /// Latency histogram snapshot for one op.
     pub fn latency_of(&self, op: &str) -> Option<Histogram> {
         self.latency.lock().unwrap().get(op).cloned()
@@ -73,7 +83,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests={} completed={} failed={} batched={} batches={} padded_rows={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={}\n",
+            "requests={} completed={} failed={} batched={} batches={} padded_rows={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={}\n",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -83,6 +93,7 @@ impl Metrics {
             self.interp_fallbacks.load(Ordering::Relaxed),
             self.plan_cache_hits.load(Ordering::Relaxed),
             self.plan_cache_misses.load(Ordering::Relaxed),
+            self.plan_cache_evictions.load(Ordering::Relaxed),
         ));
         for (op, h) in self.latency.lock().unwrap().iter() {
             out.push_str(&format!("  {op}: {}\n", h.summary()));
@@ -106,8 +117,11 @@ mod tests {
         m.record_plan_cache(false);
         m.record_plan_cache(true);
         m.record_plan_cache(true);
+        m.record_plan_cache_evictions(0);
+        m.record_plan_cache_evictions(2);
         assert_eq!(m.plan_cache_hits.load(Ordering::Relaxed), 2);
         assert_eq!(m.plan_cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(m.plan_cache_evictions.load(Ordering::Relaxed), 2);
         assert_eq!(m.requests.load(Ordering::Relaxed), 2);
         assert_eq!(m.completed.load(Ordering::Relaxed), 1);
         assert_eq!(m.failed.load(Ordering::Relaxed), 1);

@@ -14,6 +14,7 @@ use crate::runtime::Registry;
 use crate::tina::{lower, Interpreter, Planned};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Fixed op parameters that are baked into artifacts as NN weights; the
@@ -27,6 +28,12 @@ pub struct RouterConfig {
     pub pfb: PfbConfig,
     pub stft_nfft: usize,
     pub stft_hop: usize,
+    /// Upper bound on cached fallback plans per cache (interpreter oracle
+    /// and planned executor each).  Shape-diverse traffic evicts the
+    /// least-recently-used plan instead of growing without limit; plans
+    /// hold baked constants (a DFT matrix is O(n^2) floats), so an
+    /// unbounded map is a slow memory leak under adversarial shapes.
+    pub plan_cache_cap: usize,
 }
 
 impl Default for RouterConfig {
@@ -38,7 +45,64 @@ impl Default for RouterConfig {
             pfb: PfbConfig::new(32, 8),
             stft_nfft: 256,
             stft_hop: 128,
+            plan_cache_cap: 64,
         }
+    }
+}
+
+/// Tiny LRU map for compiled plans: a `HashMap` plus monotone recency
+/// ticks.  Eviction scans for the minimum tick — O(cap) on insert, and cap
+/// is small (plans are heavyweight, the map never holds more than a few
+/// dozen entries), so no linked-list bookkeeping is warranted.
+struct LruMap<V> {
+    cap: usize,
+    tick: u64,
+    map: HashMap<PlanKey, (V, u64)>,
+}
+
+impl<V: Clone> LruMap<V> {
+    fn new(cap: usize) -> LruMap<V> {
+        LruMap {
+            cap: cap.max(1),
+            tick: 0,
+            map: HashMap::new(),
+        }
+    }
+
+    /// Fetch and refresh recency.
+    fn get(&mut self, k: &PlanKey) -> Option<V> {
+        self.tick += 1;
+        let t = self.tick;
+        self.map.get_mut(k).map(|e| {
+            e.1 = t;
+            e.0.clone()
+        })
+    }
+
+    /// Insert (refreshing recency); returns how many entries were evicted
+    /// (0 or 1 — never the entry just inserted, whose tick is newest).
+    fn insert(&mut self, k: PlanKey, v: V) -> u64 {
+        self.tick += 1;
+        self.map.insert(k, (v, self.tick));
+        if self.map.len() <= self.cap {
+            return 0;
+        }
+        let oldest = self
+            .map
+            .iter()
+            .min_by_key(|(_, (_, t))| *t)
+            .map(|(k, _)| k.clone());
+        match oldest {
+            Some(old) => {
+                self.map.remove(&old);
+                1
+            }
+            None => 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
     }
 }
 
@@ -59,22 +123,27 @@ pub struct PlanKey {
     pub dims: Vec<usize>,
 }
 
-/// The router: artifact lookup + fallback plan caches (planned executor
-/// for serving, interpreter for the oracle path).
+/// The router: artifact lookup + LRU-bounded fallback plan caches
+/// (planned executor for serving, interpreter for the oracle path).
 pub struct Router {
     registry: Registry,
     config: RouterConfig,
-    plans: Mutex<HashMap<PlanKey, std::sync::Arc<Interpreter>>>,
-    exec_plans: Mutex<HashMap<PlanKey, std::sync::Arc<Planned>>>,
+    plans: Mutex<LruMap<std::sync::Arc<Interpreter>>>,
+    exec_plans: Mutex<LruMap<std::sync::Arc<Planned>>>,
+    /// Plans dropped from either cache since the last drain (the
+    /// coordinator folds this into `Metrics::plan_cache_evictions`).
+    evictions: AtomicU64,
 }
 
 impl Router {
     pub fn new(registry: Registry, config: RouterConfig) -> Router {
+        let cap = config.plan_cache_cap;
         Router {
             registry,
             config,
-            plans: Mutex::new(HashMap::new()),
-            exec_plans: Mutex::new(HashMap::new()),
+            plans: Mutex::new(LruMap::new(cap)),
+            exec_plans: Mutex::new(LruMap::new(cap)),
+            evictions: AtomicU64::new(0),
         }
     }
 
@@ -230,14 +299,16 @@ impl Router {
         req: &OpRequest,
     ) -> Result<std::sync::Arc<Interpreter>> {
         if let Some(it) = self.plans.lock().unwrap().get(key) {
-            return Ok(std::sync::Arc::clone(it));
+            return Ok(it);
         }
         let graph = self.build_graph(req)?;
         let it = std::sync::Arc::new(Interpreter::new(graph)?);
-        self.plans
+        let evicted = self
+            .plans
             .lock()
             .unwrap()
             .insert(key.clone(), std::sync::Arc::clone(&it));
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
         Ok(it)
     }
 
@@ -250,7 +321,7 @@ impl Router {
         req: &OpRequest,
     ) -> Result<(std::sync::Arc<Planned>, bool)> {
         if let Some(p) = self.exec_plans.lock().unwrap().get(key) {
-            return Ok((std::sync::Arc::clone(p), true));
+            return Ok((p, true));
         }
         // Compile outside the lock: plan compilation does real work
         // (constant baking, liveness analysis) and must not serialize
@@ -258,11 +329,19 @@ impl Router {
         // harmless — last insert wins, both plans are identical.
         let graph = self.build_graph(req)?;
         let p = std::sync::Arc::new(Planned::new(&graph)?);
-        self.exec_plans
+        let evicted = self
+            .exec_plans
             .lock()
             .unwrap()
             .insert(key.clone(), std::sync::Arc::clone(&p));
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
         Ok((p, false))
+    }
+
+    /// Take (and reset) the eviction count accumulated since the last
+    /// drain; the coordinator mirrors it into its metrics.
+    pub fn take_plan_cache_evictions(&self) -> u64 {
+        self.evictions.swap(0, Ordering::Relaxed)
     }
 
     fn build_graph(&self, req: &OpRequest) -> Result<crate::tina::Graph> {
@@ -472,6 +551,74 @@ mod tests {
         assert_eq!(r.cached_exec_plans(), 1);
         // the two caches are independent
         assert_eq!(r.cached_plans(), 0);
+    }
+
+    #[test]
+    fn plan_caches_evict_lru_beyond_cap() {
+        let reg =
+            Registry::from_manifest_text(PathBuf::from("/nonexistent"), MANIFEST).unwrap();
+        let r = Router::new(
+            reg,
+            RouterConfig {
+                plan_cache_cap: 2,
+                ..RouterConfig::default()
+            },
+        );
+        // three distinct shape signatures: the first must fall out
+        let keys: Vec<PlanKey> = [100usize, 101, 102]
+            .iter()
+            .map(|&l| {
+                let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, l])])
+                    .with_impl(ImplPref::Interp);
+                let Target::Interp { key } = r.route(&req).unwrap() else {
+                    panic!()
+                };
+                let _ = r.planned(&key, &req).unwrap();
+                key
+            })
+            .collect();
+        assert_eq!(r.cached_exec_plans(), 2, "cap must hold");
+        assert_eq!(r.take_plan_cache_evictions(), 1, "one plan evicted");
+        assert_eq!(r.take_plan_cache_evictions(), 0, "drain resets");
+        // the evicted (oldest) key recompiles: a miss
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 100])])
+            .with_impl(ImplPref::Interp);
+        let (_, hit) = r.planned(&keys[0], &req).unwrap();
+        assert!(!hit, "evicted plan must recompile");
+    }
+
+    #[test]
+    fn lru_get_refreshes_recency() {
+        let reg =
+            Registry::from_manifest_text(PathBuf::from("/nonexistent"), MANIFEST).unwrap();
+        let r = Router::new(
+            reg,
+            RouterConfig {
+                plan_cache_cap: 2,
+                ..RouterConfig::default()
+            },
+        );
+        let key_of = |l: usize| {
+            let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, l])])
+                .with_impl(ImplPref::Interp);
+            let Target::Interp { key } = r.route(&req).unwrap() else {
+                panic!()
+            };
+            (key, req)
+        };
+        let (k100, r100) = key_of(100);
+        let (k101, r101) = key_of(101);
+        let (k102, r102) = key_of(102);
+        let _ = r.planned(&k100, &r100).unwrap();
+        let _ = r.planned(&k101, &r101).unwrap();
+        // touch 100 so 101 becomes the LRU entry, then overflow with 102
+        let (_, hit) = r.planned(&k100, &r100).unwrap();
+        assert!(hit);
+        let _ = r.planned(&k102, &r102).unwrap();
+        let (_, hit) = r.planned(&k100, &r100).unwrap();
+        assert!(hit, "recently-touched plan must survive eviction");
+        let (_, hit) = r.planned(&k101, &r101).unwrap();
+        assert!(!hit, "LRU plan must have been evicted");
     }
 
     #[test]

@@ -143,6 +143,11 @@ impl Coordinator {
     pub fn submit(&self, req: OpRequest) -> OneShot<Result<OpResponse>> {
         let slot: OneShot<Result<OpResponse>> = OneShot::new();
         self.metrics.record_request();
+        // surface plan-cache evictions from *any* router path (including
+        // direct oracle/interpreter use between requests), not just the
+        // fallback compile below
+        self.metrics
+            .record_plan_cache_evictions(self.router.take_plan_cache_evictions());
         let t0 = Instant::now();
 
         let target = match self.router.route_with_batching(&req, self.config.batching) {
@@ -210,6 +215,8 @@ impl Coordinator {
                 let planned = match self.router.planned(&key, &req) {
                     Ok((p, hit)) => {
                         self.metrics.record_plan_cache(hit);
+                        self.metrics
+                            .record_plan_cache_evictions(self.router.take_plan_cache_evictions());
                         p
                     }
                     Err(e) => {
@@ -344,6 +351,38 @@ mod tests {
         for (a, b) in resp.outputs.iter().zip(&want) {
             assert!(a.allclose(b, 1e-5, 1e-5), "planned engine diverged from oracle");
         }
+    }
+
+    #[test]
+    fn shape_diverse_traffic_is_bounded_by_the_plan_cache_cap() {
+        let registry = Registry::from_manifest_text(
+            PathBuf::from("/nonexistent"),
+            r#"{"version": 1, "entries": []}"#,
+        )
+        .unwrap();
+        let c = Coordinator::new(
+            registry,
+            CoordinatorConfig {
+                batching: false,
+                workers: 2,
+                router: crate::coordinator::RouterConfig {
+                    plan_cache_cap: 2,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for l in [128usize, 160, 192, 224] {
+            let x = Tensor::randn(&[1, l], l as u64);
+            c.execute(OpRequest::new(OpKind::Fir, vec![x])).unwrap();
+        }
+        assert_eq!(c.router().cached_exec_plans(), 2, "cap must bound the cache");
+        assert_eq!(
+            c.metrics().plan_cache_evictions.load(Ordering::Relaxed),
+            2,
+            "evictions must be surfaced in metrics"
+        );
     }
 
     #[test]

@@ -1,12 +1,16 @@
 //! Slab arena backing the planned executor.
 //!
-//! A plan's liveness analysis maps every intermediate value to one of a
+//! A plan's liveness analysis maps every *materialized* value to one of a
 //! small set of *slots*; two values share a slot exactly when their
-//! lifetimes are disjoint.  At run time the arena is just those slots as
-//! reusable `Vec<f32>` buffers: `prepare` grows them to the plan's
-//! high-water sizes once, and repeat executions (the serving steady state)
-//! touch the allocator not at all — the GPTPU/ONNX-to-hardware lesson of
-//! amortizing planning and buffer setup across invocations.
+//! lifetimes are disjoint.  Strided views (transposes, permutes, slices,
+//! reshapes) occupy no slot at all — they alias their backing value's
+//! slot, and the plan's liveness pass keeps that slot live until the last
+//! view consumer has run.  Slot sizes therefore derive from materialized
+//! extents only.  At run time the arena is just those slots as reusable
+//! `Vec<f32>` buffers: `prepare` grows them to the plan's high-water sizes
+//! once, and repeat executions (the serving steady state) touch the
+//! allocator not at all — the GPTPU/ONNX-to-hardware lesson of amortizing
+//! planning and buffer setup across invocations.
 
 /// Reusable buffer slab.  One arena serves one plan execution at a time;
 /// [`super::Planned`] keeps a pool of them for concurrent requests.

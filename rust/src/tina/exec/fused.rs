@@ -1,19 +1,47 @@
 //! Slice-level compute kernels for the planned executor.
 //!
 //! These are the same building-block semantics as [`crate::tina::layers`]
-//! (identical loop nesting and accumulation order, so results agree with
-//! the interpreter to rounding), restructured to
+//! (identical per-element accumulation order, so results agree with the
+//! interpreter bitwise), restructured to
 //!
-//! * write into caller-provided arena buffers instead of allocating, and
+//! * write into caller-provided arena buffers instead of allocating,
+//! * read their activation input through a **strided view** ([`X3`]/[`X2`])
+//!   so upstream `Transpose2`/`Permute3`/`StridedSlice`/`Reshape` nodes
+//!   never have to copy, and
 //! * fan independent output rows out across threads via
 //!   [`crate::util::threadpool::parallel_for`], gated on a work threshold
 //!   so small fallback requests don't pay thread-spawn overhead.
+//!
+//! # Tiling preserves rounding
+//!
+//! The packed [`fully_connected_packed`] / [`pointwise_conv_packed`]
+//! microkernels block over **output columns only** ([`NR`]-wide panels of
+//! pre-packed constant weights) and, for pointwise, over the spatial axis.
+//! Both axes are *independent* output coordinates: the reduction over
+//! `cin` still runs in ascending order for every output element, with the
+//! same `kv == 0.0` / `aik == 0.0` skips as [`crate::tina::layers`] and
+//! [`crate::tensor::matmul`].  Each output element therefore sees exactly
+//! the f32 operation sequence the interpreter oracle performs — tiling
+//! changes memory traffic, never rounding.  Keep that rule when touching
+//! these loops: never reassociate the `cin` reduction.
 //!
 //! The `fused_ew` kernel evaluates a whole `Add`/`Sub` chain
 //! (`±a ± b ± c ...`) in a single pass over memory — the planner collapses
 //! single-consumer elementwise chains into one of these.
 
 use crate::util::threadpool::{default_threads, parallel_for, SendPtr};
+
+/// Register-tile width over output columns for the packed microkernels.
+/// Eight f32 lanes = one AVX2 vector; the compiler autovectorizes the
+/// fixed-size inner loops.
+pub const NR: usize = 8;
+
+/// Spatial tile of the pointwise microkernel (NR x SR f32 accumulators
+/// live on the stack).
+const SR: usize = 16;
+
+/// Cache tile (elements per side) of the [`materialize`] gather kernel.
+const TILE: usize = 32;
 
 /// Below this many scalar multiply-adds, run single-threaded (spawn
 /// overhead of scoped threads is tens of microseconds).
@@ -27,10 +55,85 @@ fn threads_for(rows: usize, work: usize) -> usize {
     }
 }
 
+/// Borrowed rank-3 strided input: backing slice + element offset + per-axis
+/// element strides.  `at(i, j, k) = d[off + i*s[0] + j*s[1] + k*s[2]]`.
+#[derive(Clone, Copy)]
+pub struct X3<'a> {
+    pub d: &'a [f32],
+    pub off: usize,
+    pub s: [usize; 3],
+}
+
+impl<'a> X3<'a> {
+    /// Dense row-major view of `d` shaped `(t, c, w)`.
+    pub fn contiguous(d: &'a [f32], (_t, c, w): (usize, usize, usize)) -> X3<'a> {
+        X3 {
+            d,
+            off: 0,
+            s: [c * w, w, 1],
+        }
+    }
+
+    #[inline(always)]
+    fn base(&self, i: usize, j: usize) -> usize {
+        self.off + i * self.s[0] + j * self.s[1]
+    }
+
+    #[inline(always)]
+    fn is_dense(&self, c: usize, w: usize) -> bool {
+        self.s[2] == 1 && self.s[1] == w && self.s[0] == c * w
+    }
+}
+
+/// Borrowed rank-2 strided input.
+#[derive(Clone, Copy)]
+pub struct X2<'a> {
+    pub d: &'a [f32],
+    pub off: usize,
+    pub s: [usize; 2],
+}
+
+impl<'a> X2<'a> {
+    /// Dense row-major view of `d` with `cols` columns.
+    pub fn contiguous(d: &'a [f32], cols: usize) -> X2<'a> {
+        X2 {
+            d,
+            off: 0,
+            s: [cols, 1],
+        }
+    }
+
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f32 {
+        self.d[self.off + i * self.s[0] + j * self.s[1]]
+    }
+}
+
+/// Pack a row-major (Cin, Cout) weight matrix into [`NR`]-wide column
+/// panels: `panels[(jb*cin + ci)*NR + j] = k[ci*cout + jb*NR + j]`, zero
+/// padded past `cout`.  Panel `jb` streams contiguously while the
+/// microkernel walks `ci`, so constant weights are read cache-line-dense.
+pub fn pack_k(k: &[f32], cin: usize, cout: usize) -> Vec<f32> {
+    debug_assert_eq!(k.len(), cin * cout);
+    let nblk = cout.div_ceil(NR);
+    let mut p = vec![0.0f32; nblk * cin * NR];
+    for jb in 0..nblk {
+        for ci in 0..cin {
+            for j in 0..NR {
+                let co = jb * NR + j;
+                if co < cout {
+                    p[(jb * cin + ci) * NR + j] = k[ci * cout + co];
+                }
+            }
+        }
+    }
+    p
+}
+
 /// Eq. (2): depthwise valid 1-D convolution.
-/// x: (T, C, W), k: (C, M), b: (C,) -> out: (T, C, W - M + 1).
+/// x: (T, C, W) view, k: (C, M), b: (C,) -> out: (T, C, W - M + 1).
 pub fn depthwise_conv(
-    x: &[f32],
+    x: X3,
     (t, c, w): (usize, usize, usize),
     k: &[f32],
     m: usize,
@@ -40,18 +143,29 @@ pub fn depthwise_conv(
     let wout = w - m + 1;
     debug_assert_eq!(out.len(), t * c * wout);
     let rows = t * c;
+    let dense = x.is_dense(c, w);
     let ptr = SendPtr(out.as_mut_ptr());
     parallel_for(threads_for(rows, rows * wout * m), rows, |r0, r1| {
         let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(r0 * wout), (r1 - r0) * wout) };
         for r in r0..r1 {
-            let ci = r % c;
-            let xrow = &x[r * w..r * w + w];
+            let (ti, ci) = (r / c, r % c);
             let krow = &k[ci * m..(ci + 1) * m];
             let orow = &mut o[(r - r0) * wout..(r - r0 + 1) * wout];
             orow.fill(0.0);
-            for (i, &kv) in krow.iter().enumerate() {
-                for (ov, &xv) in orow.iter_mut().zip(&xrow[i..i + wout]) {
-                    *ov += kv * xv;
+            if dense {
+                let base = x.off + r * w;
+                let xrow = &x.d[base..base + w];
+                for (i, &kv) in krow.iter().enumerate() {
+                    for (ov, &xv) in orow.iter_mut().zip(&xrow[i..i + wout]) {
+                        *ov += kv * xv;
+                    }
+                }
+            } else {
+                let (base, s2) = (x.base(ti, ci), x.s[2]);
+                for (i, &kv) in krow.iter().enumerate() {
+                    for (j, ov) in orow.iter_mut().enumerate() {
+                        *ov += kv * x.d[base + (i + j) * s2];
+                    }
                 }
             }
             let bias = b[ci];
@@ -63,9 +177,9 @@ pub fn depthwise_conv(
 }
 
 /// Eq. (1): standard valid 1-D convolution with channel mixing.
-/// x: (T, Cin, W), k: (Cout, Cin, N), b: (Cout,) -> out: (T, Cout, W - N + 1).
+/// x: (T, Cin, W) view, k: (Cout, Cin, N), b: (Cout,) -> out: (T, Cout, W - N + 1).
 pub fn standard_conv(
-    x: &[f32],
+    x: X3,
     (t, cin, w): (usize, usize, usize),
     k: &[f32],
     (cout, n): (usize, usize),
@@ -75,6 +189,7 @@ pub fn standard_conv(
     let wout = w - n + 1;
     debug_assert_eq!(out.len(), t * cout * wout);
     let rows = t * cout;
+    let dense = x.is_dense(cin, w);
     let ptr = SendPtr(out.as_mut_ptr());
     parallel_for(threads_for(rows, rows * wout * cin * n), rows, |r0, r1| {
         let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(r0 * wout), (r1 - r0) * wout) };
@@ -83,14 +198,27 @@ pub fn standard_conv(
             let orow = &mut o[(r - r0) * wout..(r - r0 + 1) * wout];
             orow.fill(0.0);
             for ci in 0..cin {
-                let xrow = &x[(ti * cin + ci) * w..(ti * cin + ci + 1) * w];
                 let krow = &k[(co * cin + ci) * n..(co * cin + ci + 1) * n];
-                for (i, &kv) in krow.iter().enumerate() {
-                    if kv == 0.0 {
-                        continue;
+                if dense {
+                    let base = x.off + (ti * cin + ci) * w;
+                    let xrow = &x.d[base..base + w];
+                    for (i, &kv) in krow.iter().enumerate() {
+                        if kv == 0.0 {
+                            continue;
+                        }
+                        for (ov, &xv) in orow.iter_mut().zip(&xrow[i..i + wout]) {
+                            *ov += kv * xv;
+                        }
                     }
-                    for (ov, &xv) in orow.iter_mut().zip(&xrow[i..i + wout]) {
-                        *ov += kv * xv;
+                } else {
+                    let (base, s2) = (x.base(ti, ci), x.s[2]);
+                    for (i, &kv) in krow.iter().enumerate() {
+                        if kv == 0.0 {
+                            continue;
+                        }
+                        for (j, ov) in orow.iter_mut().enumerate() {
+                            *ov += kv * x.d[base + (i + j) * s2];
+                        }
                     }
                 }
             }
@@ -102,10 +230,10 @@ pub fn standard_conv(
     });
 }
 
-/// Eq. (3): pointwise (1x1) convolution mixing channels.
-/// x: (T, Cin, S), k: (Cin, Cout), b: (Cout,) -> out: (T, Cout, S).
+/// Eq. (3): pointwise (1x1) convolution mixing channels (runtime weights).
+/// x: (T, Cin, S) view, k: (Cin, Cout), b: (Cout,) -> out: (T, Cout, S).
 pub fn pointwise_conv(
-    x: &[f32],
+    x: X3,
     (t, cin, s): (usize, usize, usize),
     k: &[f32],
     cout: usize,
@@ -114,6 +242,7 @@ pub fn pointwise_conv(
 ) {
     debug_assert_eq!(out.len(), t * cout * s);
     let rows = t * cout;
+    let dense = x.is_dense(cin, s);
     let ptr = SendPtr(out.as_mut_ptr());
     parallel_for(threads_for(rows, rows * s * cin), rows, |r0, r1| {
         let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(r0 * s), (r1 - r0) * s) };
@@ -126,9 +255,17 @@ pub fn pointwise_conv(
                 if kv == 0.0 {
                     continue;
                 }
-                let xrow = &x[(ti * cin + ci) * s..(ti * cin + ci + 1) * s];
-                for (ov, &xv) in orow.iter_mut().zip(xrow) {
-                    *ov += kv * xv;
+                if dense {
+                    let base = x.off + (ti * cin + ci) * s;
+                    let xrow = &x.d[base..base + s];
+                    for (ov, &xv) in orow.iter_mut().zip(xrow) {
+                        *ov += kv * xv;
+                    }
+                } else {
+                    let (base, s2) = (x.base(ti, ci), x.s[2]);
+                    for (sv, ov) in orow.iter_mut().enumerate() {
+                        *ov += kv * x.d[base + sv * s2];
+                    }
                 }
             }
             let bias = b[co];
@@ -139,10 +276,76 @@ pub fn pointwise_conv(
     });
 }
 
-/// Eq. (4): fully connected layer.
-/// x: (B, Cin), k: (Cin, Cout), b: (Cout,) -> out: (B, Cout).
+/// Eq. (3) with plan-compile-time pre-packed constant weights: a
+/// register-tiled microkernel holding an NR x SR f32 accumulator block.
+/// Output columns are tiled NR wide and the spatial axis SR wide; the
+/// `cin` reduction per output element is untouched (see module docs).
+pub fn pointwise_conv_packed(
+    x: X3,
+    (t, cin, s): (usize, usize, usize),
+    panels: &[f32],
+    cout: usize,
+    b: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), t * cout * s);
+    let nblk = cout.div_ceil(NR);
+    debug_assert_eq!(panels.len(), nblk * cin * NR);
+    let units = t * nblk;
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for(threads_for(units, t * cout * s * cin), units, |u0, u1| {
+        for u in u0..u1 {
+            let (ti, jb) = (u / nblk, u % nblk);
+            let co0 = jb * NR;
+            let jn = NR.min(cout - co0);
+            let panel = &panels[jb * cin * NR..(jb + 1) * cin * NR];
+            let (s1, s2) = (x.s[1], x.s[2]);
+            let tbase = x.off + ti * x.s[0];
+            let mut sv = 0;
+            while sv < s {
+                let sl = SR.min(s - sv);
+                let mut acc = [0.0f32; NR * SR];
+                for ci in 0..cin {
+                    let krow = &panel[ci * NR..ci * NR + NR];
+                    let xbase = tbase + ci * s1 + sv * s2;
+                    for (j, &kv) in krow[..jn].iter().enumerate() {
+                        if kv == 0.0 {
+                            continue;
+                        }
+                        let accj = &mut acc[j * SR..j * SR + sl];
+                        if s2 == 1 {
+                            for (a, &xv) in accj.iter_mut().zip(&x.d[xbase..xbase + sl]) {
+                                *a += kv * xv;
+                            }
+                        } else {
+                            for (v, a) in accj.iter_mut().enumerate() {
+                                *a += kv * x.d[xbase + v * s2];
+                            }
+                        }
+                    }
+                }
+                for j in 0..jn {
+                    let bias = b[co0 + j];
+                    let o = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            ptr.at((ti * cout + co0 + j) * s + sv),
+                            sl,
+                        )
+                    };
+                    for (ov, &av) in o.iter_mut().zip(&acc[j * SR..j * SR + sl]) {
+                        *ov = av + bias;
+                    }
+                }
+                sv += sl;
+            }
+        }
+    });
+}
+
+/// Eq. (4): fully connected layer (runtime weights).
+/// x: (B, Cin) view, k: (Cin, Cout), b: (Cout,) -> out: (B, Cout).
 pub fn fully_connected(
-    x: &[f32],
+    x: X2,
     (bsz, cin): (usize, usize),
     k: &[f32],
     cout: usize,
@@ -157,7 +360,7 @@ pub fn fully_connected(
             let orow = &mut o[(bi - b0) * cout..(bi - b0 + 1) * cout];
             orow.fill(0.0);
             for ci in 0..cin {
-                let aik = x[bi * cin + ci];
+                let aik = x.at(bi, ci);
                 if aik == 0.0 {
                     continue;
                 }
@@ -173,51 +376,160 @@ pub fn fully_connected(
     });
 }
 
-/// 2-D transpose: x (R, C) -> out (C, R).
-pub fn transpose2(x: &[f32], (r, c): (usize, usize), out: &mut [f32]) {
-    debug_assert_eq!(out.len(), r * c);
-    for i in 0..r {
-        for j in 0..c {
-            out[j * r + i] = x[i * c + j];
+/// Eq. (4) with pre-packed constant weights: NR output columns accumulate
+/// in registers while one pass streams the packed panel over `cin`.
+pub fn fully_connected_packed(
+    x: X2,
+    (bsz, cin): (usize, usize),
+    panels: &[f32],
+    cout: usize,
+    b: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), bsz * cout);
+    let nblk = cout.div_ceil(NR);
+    debug_assert_eq!(panels.len(), nblk * cin * NR);
+    let units = bsz * nblk;
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for(threads_for(units, bsz * cin * cout), units, |u0, u1| {
+        for u in u0..u1 {
+            let (bi, jb) = (u / nblk, u % nblk);
+            let co0 = jb * NR;
+            let jn = NR.min(cout - co0);
+            let panel = &panels[jb * cin * NR..(jb + 1) * cin * NR];
+            let mut acc = [0.0f32; NR];
+            for ci in 0..cin {
+                let aik = x.at(bi, ci);
+                if aik == 0.0 {
+                    continue;
+                }
+                let krow = &panel[ci * NR..ci * NR + NR];
+                for (a, &kv) in acc.iter_mut().zip(krow) {
+                    *a += aik * kv;
+                }
+            }
+            let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(bi * cout + co0), jn) };
+            for (j, ov) in o.iter_mut().enumerate() {
+                *ov = acc[j] + b[co0 + j];
+            }
         }
-    }
+    });
 }
 
-/// Rank-3 axis permutation (same index math as `Tensor::permute3`).
-pub fn permute3(x: &[f32], s: (usize, usize, usize), perm: [usize; 3], out: &mut [f32]) {
-    let s = [s.0, s.1, s.2];
-    let os = [s[perm[0]], s[perm[1]], s[perm[2]]];
-    debug_assert_eq!(out.len(), s[0] * s[1] * s[2]);
-    for i in 0..s[0] {
-        for j in 0..s[1] {
-            for k in 0..s[2] {
-                let idx = [i, j, k];
-                let o = [idx[perm[0]], idx[perm[1]], idx[perm[2]]];
-                out[(o[0] * os[1] + o[1]) * os[2] + o[2]] = x[(i * s[1] + j) * s[2] + k];
+/// Gather an arbitrary strided view into a dense row-major buffer — the
+/// planner's explicit `Materialize` step, and the output-copy primitive
+/// for view-shaped plan outputs.
+pub fn materialize(d: &[f32], off: usize, shape: &[usize], strides: &[usize], out: &mut [f32]) {
+    debug_assert_eq!(shape.len(), strides.len());
+    let n: usize = shape.iter().product();
+    debug_assert_eq!(out.len(), n);
+    if n == 0 {
+        return;
+    }
+    match shape.len() {
+        0 => out[0] = d[off],
+        1 => {
+            if strides[0] == 1 {
+                out.copy_from_slice(&d[off..off + n]);
+            } else {
+                for (i, ov) in out.iter_mut().enumerate() {
+                    *ov = d[off + i * strides[0]];
+                }
+            }
+        }
+        2 => materialize2(d, off, (shape[0], shape[1]), (strides[0], strides[1]), out),
+        3 => {
+            // one parallel_for over (slab, row-tile) units: a single thread
+            // spawn covers the whole gather, slabs overlap in time
+            let (d0, r, c) = (shape[0], shape[1], shape[2]);
+            let (s0, s1, s2) = (strides[0], strides[1], strides[2]);
+            let slab = r * c;
+            let rblocks = r.div_ceil(TILE);
+            let units = d0 * rblocks;
+            let ptr = SendPtr(out.as_mut_ptr());
+            parallel_for(threads_for(units, n), units, |u0, u1| {
+                for u in u0..u1 {
+                    let (i, bi) = (u / rblocks, u % rblocks);
+                    materialize2_rows(
+                        d,
+                        off + i * s0,
+                        bi * TILE,
+                        (bi * TILE + TILE).min(r),
+                        c,
+                        (s1, s2),
+                        SendPtr(ptr.at(i * slab)),
+                    );
+                }
+            });
+        }
+        _ => {
+            let inner = n / shape[0];
+            for (i, orow) in out.chunks_mut(inner).enumerate() {
+                materialize(d, off + i * strides[0], &shape[1..], &strides[1..], orow);
             }
         }
     }
 }
 
-/// Strided slice along `axis`: keep indices 0, stride, ..., (count-1)*stride.
-pub fn strided_slice(
-    x: &[f32],
-    shape: &[usize],
-    axis: usize,
-    stride: usize,
-    count: usize,
+/// Rank-2 strided gather into a dense (r, c) buffer: TILE x TILE cache
+/// blocks (the classic blocked transpose, so a column-striding read never
+/// thrashes), row-tile blocks fanned across threads.
+fn materialize2(
+    d: &[f32],
+    off: usize,
+    (r, c): (usize, usize),
+    (s0, s1): (usize, usize),
     out: &mut [f32],
 ) {
-    let outer: usize = shape[..axis].iter().product();
-    let inner: usize = shape[axis + 1..].iter().product();
-    let extent = shape[axis];
-    debug_assert_eq!(out.len(), outer * count * inner);
-    for o in 0..outer {
-        for i in 0..count {
-            let src = (o * extent + i * stride) * inner;
-            let dst = (o * count + i) * inner;
-            out[dst..dst + inner].copy_from_slice(&x[src..src + inner]);
+    debug_assert_eq!(out.len(), r * c);
+    if s1 == 1 && (s0 == c || r == 1) {
+        out.copy_from_slice(&d[off..off + r * c]);
+        return;
+    }
+    let rblocks = r.div_ceil(TILE);
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for(threads_for(rblocks, r * c), rblocks, |b0, b1| {
+        for bi in b0..b1 {
+            materialize2_rows(
+                d,
+                off,
+                bi * TILE,
+                (bi * TILE + TILE).min(r),
+                c,
+                (s0, s1),
+                ptr,
+            );
         }
+    });
+}
+
+/// Serial body of one row-tile of a rank-2 gather: rows [i0, i1) of a
+/// (_, c) destination whose base pointer is `ptr`, walking TILE-wide
+/// column blocks.  Callers guarantee disjoint row ranges across threads.
+fn materialize2_rows(
+    d: &[f32],
+    off: usize,
+    i0: usize,
+    i1: usize,
+    c: usize,
+    (s0, s1): (usize, usize),
+    ptr: SendPtr,
+) {
+    let mut j0 = 0;
+    while j0 < c {
+        let j1 = (j0 + TILE).min(c);
+        for i in i0..i1 {
+            let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(i * c + j0), j1 - j0) };
+            let base = off + i * s0 + j0 * s1;
+            if s1 == 1 {
+                o.copy_from_slice(&d[base..base + (j1 - j0)]);
+            } else {
+                for (v, ov) in o.iter_mut().enumerate() {
+                    *ov = d[base + v * s1];
+                }
+            }
+        }
+        j0 = j1;
     }
 }
 
@@ -265,7 +577,34 @@ mod tests {
         let b = Tensor::randn(&[5], 3);
         let want = layers::depthwise_conv(&x, &k, &b).unwrap();
         let mut out = vec![0.0f32; want.len()];
-        depthwise_conv(x.data(), (3, 5, 20), k.data(), 4, b.data(), &mut out);
+        depthwise_conv(
+            X3::contiguous(x.data(), (3, 5, 20)),
+            (3, 5, 20),
+            k.data(),
+            4,
+            b.data(),
+            &mut out,
+        );
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn depthwise_strided_input_matches_dense() {
+        // feed (T, C, W) through a permuted view of a (T, W, C) buffer —
+        // the PFB pattern — and require bitwise-equal results
+        let (t, c, w) = (2, 6, 17);
+        let base = Tensor::randn(&[t, w, c], 31);
+        let x = base.permute3([0, 2, 1]).unwrap(); // (t, c, w) dense copy
+        let k = Tensor::randn(&[c, 4], 32);
+        let b = Tensor::randn(&[c], 33);
+        let want = layers::depthwise_conv(&x, &k, &b).unwrap();
+        let mut out = vec![0.0f32; want.len()];
+        let xv = X3 {
+            d: base.data(),
+            off: 0,
+            s: [w * c, 1, c], // strided (t, c, w) window on the (t, w, c) buffer
+        };
+        depthwise_conv(xv, (t, c, w), k.data(), 4, b.data(), &mut out);
         assert_eq!(out, want.data());
     }
 
@@ -276,7 +615,32 @@ mod tests {
         let b = Tensor::randn(&[6], 6);
         let want = layers::standard_conv(&x, &k, &b).unwrap();
         let mut out = vec![0.0f32; want.len()];
-        standard_conv(x.data(), (2, 3, 30), k.data(), (6, 5), b.data(), &mut out);
+        standard_conv(
+            X3::contiguous(x.data(), (2, 3, 30)),
+            (2, 3, 30),
+            k.data(),
+            (6, 5),
+            b.data(),
+            &mut out,
+        );
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn standard_strided_input_matches_dense() {
+        let (t, cin, w) = (2, 3, 21);
+        let base = Tensor::randn(&[t, w, cin], 41);
+        let x = base.permute3([0, 2, 1]).unwrap();
+        let k = Tensor::randn(&[4, cin, 5], 42);
+        let b = Tensor::randn(&[4], 43);
+        let want = layers::standard_conv(&x, &k, &b).unwrap();
+        let mut out = vec![0.0f32; want.len()];
+        let xv = X3 {
+            d: base.data(),
+            off: 0,
+            s: [w * cin, 1, cin],
+        };
+        standard_conv(xv, (t, cin, w), k.data(), (4, 5), b.data(), &mut out);
         assert_eq!(out, want.data());
     }
 
@@ -287,7 +651,60 @@ mod tests {
         let b = Tensor::randn(&[4], 9);
         let want = layers::pointwise_conv(&x, &k, &b).unwrap();
         let mut out = vec![0.0f32; want.len()];
-        pointwise_conv(x.data(), (2, 7, 9), k.data(), 4, b.data(), &mut out);
+        pointwise_conv(
+            X3::contiguous(x.data(), (2, 7, 9)),
+            (2, 7, 9),
+            k.data(),
+            4,
+            b.data(),
+            &mut out,
+        );
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn pointwise_packed_matches_unpacked_bitwise() {
+        // cout = 13 exercises the partial last panel; s = 37 the SR tail;
+        // zeros in k exercise the oracle's skip in the packed path too
+        let (t, cin, cout, s) = (3, 5, 13, 37);
+        let x = Tensor::randn(&[t, cin, s], 10);
+        let mut k = Tensor::randn(&[cin, cout], 11);
+        {
+            let kd = k.data_mut();
+            kd[0] = 0.0;
+            kd[cin * cout / 2] = 0.0;
+        }
+        let b = Tensor::randn(&[cout], 12);
+        let want = layers::pointwise_conv(&x, &k, &b).unwrap();
+        let packed = pack_k(k.data(), cin, cout);
+        let mut out = vec![0.0f32; want.len()];
+        pointwise_conv_packed(
+            X3::contiguous(x.data(), (t, cin, s)),
+            (t, cin, s),
+            &packed,
+            cout,
+            b.data(),
+            &mut out,
+        );
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn pointwise_packed_strided_input() {
+        let (t, cin, s) = (2, 4, 19);
+        let base = Tensor::randn(&[t, s, cin], 51);
+        let x = base.permute3([0, 2, 1]).unwrap();
+        let k = Tensor::randn(&[cin, 6], 52);
+        let b = Tensor::randn(&[6], 53);
+        let want = layers::pointwise_conv(&x, &k, &b).unwrap();
+        let packed = pack_k(k.data(), cin, 6);
+        let mut out = vec![0.0f32; want.len()];
+        let xv = X3 {
+            d: base.data(),
+            off: 0,
+            s: [s * cin, 1, cin],
+        };
+        pointwise_conv_packed(xv, (t, cin, s), &packed, 6, b.data(), &mut out);
         assert_eq!(out, want.data());
     }
 
@@ -298,27 +715,80 @@ mod tests {
         let b = Tensor::randn(&[3], 12);
         let want = layers::fully_connected(&x, &k, &b).unwrap();
         let mut out = vec![0.0f32; want.len()];
-        fully_connected(x.data(), (5, 11), k.data(), 3, b.data(), &mut out);
+        fully_connected(
+            X2::contiguous(x.data(), 11),
+            (5, 11),
+            k.data(),
+            3,
+            b.data(),
+            &mut out,
+        );
         assert_eq!(out, want.data());
     }
 
     #[test]
-    fn movement_kernels_match_tensor_ops() {
+    fn fully_connected_packed_matches_layers_bitwise() {
+        // cout = 11 exercises the padded last panel; a zero x element
+        // exercises the aik == 0 skip both paths share
+        let (bsz, cin, cout) = (4, 7, 11);
+        let mut x = Tensor::randn(&[bsz, cin], 13);
+        x.data_mut()[3] = 0.0;
+        let k = Tensor::randn(&[cin, cout], 14);
+        let b = Tensor::randn(&[cout], 15);
+        let want = layers::fully_connected(&x, &k, &b).unwrap();
+        let packed = pack_k(k.data(), cin, cout);
+        let mut out = vec![0.0f32; want.len()];
+        fully_connected_packed(
+            X2::contiguous(x.data(), cin),
+            (bsz, cin),
+            &packed,
+            cout,
+            b.data(),
+            &mut out,
+        );
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn materialize_matches_tensor_movement_ops() {
+        // transpose2 as a strided rank-2 gather
         let x = Tensor::randn(&[4, 6], 13);
         let mut out = vec![0.0f32; 24];
-        transpose2(x.data(), (4, 6), &mut out);
+        materialize(x.data(), 0, &[6, 4], &[1, 6], &mut out);
         assert_eq!(out, x.transpose2().unwrap().data());
 
+        // permute3 as a strided rank-3 gather
         let y = Tensor::randn(&[2, 3, 4], 14);
         let mut out = vec![0.0f32; 24];
-        permute3(y.data(), (2, 3, 4), [2, 0, 1], &mut out);
+        // perm [2,0,1]: out shape (4,2,3); out[i,j,k] = y[j,k,i]
+        materialize(y.data(), 0, &[4, 2, 3], &[1, 12, 4], &mut out);
         assert_eq!(out, y.permute3([2, 0, 1]).unwrap().data());
 
+        // strided slice along axis 1 of (2, 8, 3)
         let z = Tensor::randn(&[2, 8, 3], 15);
         let want = z.stride_axis(1, 3, 3).unwrap();
         let mut out = vec![0.0f32; want.len()];
-        strided_slice(z.data(), &[2, 8, 3], 1, 3, 3, &mut out);
+        materialize(z.data(), 0, &[2, 3, 3], &[24, 9, 1], &mut out);
         assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn materialize_tiled_path_covers_large_transposes() {
+        // bigger than one TILE in both axes, odd remainders on purpose
+        let (r, c) = (67, 41);
+        let x = Tensor::randn(&[c, r], 16);
+        let mut out = vec![0.0f32; r * c];
+        materialize(x.data(), 0, &[r, c], &[1, r], &mut out);
+        assert_eq!(out, x.transpose2().unwrap().data());
+    }
+
+    #[test]
+    fn materialize_respects_offset() {
+        // a view starting mid-buffer: row 1 of a (3, 5) matrix
+        let x = Tensor::randn(&[3, 5], 17);
+        let mut out = vec![0.0f32; 5];
+        materialize(x.data(), 5, &[5], &[1], &mut out);
+        assert_eq!(out, &x.data()[5..10]);
     }
 
     #[test]
@@ -343,7 +813,35 @@ mod tests {
         let b = Tensor::randn(&[16], 21);
         let want = layers::depthwise_conv(&x, &k, &b).unwrap();
         let mut out = vec![0.0f32; want.len()];
-        depthwise_conv(x.data(), (t, 16, 260), k.data(), 5, b.data(), &mut out);
+        depthwise_conv(
+            X3::contiguous(x.data(), (t, 16, 260)),
+            (t, 16, 260),
+            k.data(),
+            5,
+            b.data(),
+            &mut out,
+        );
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn packed_parallel_path_consistent_with_serial() {
+        // units * work above PAR_THRESHOLD: threads engage on the packed path
+        let (t, cin, cout, s) = (8, 32, 32, 505);
+        let x = Tensor::randn(&[t, cin, s], 22);
+        let k = Tensor::randn(&[cin, cout], 23);
+        let b = Tensor::randn(&[cout], 24);
+        let want = layers::pointwise_conv(&x, &k, &b).unwrap();
+        let packed = pack_k(k.data(), cin, cout);
+        let mut out = vec![0.0f32; want.len()];
+        pointwise_conv_packed(
+            X3::contiguous(x.data(), (t, cin, s)),
+            (t, cin, s),
+            &packed,
+            cout,
+            b.data(),
+            &mut out,
+        );
         assert_eq!(out, want.data());
     }
 }

@@ -5,17 +5,50 @@
 //! This is the serving-path replacement for the node-at-a-time
 //! [`Interpreter`](crate::tina::Interpreter): the interpreter allocates a
 //! fresh tensor (and clones every constant) per node per request, while a
-//! plan bakes constants, turns `Reshape` into metadata-only views, fuses
-//! elementwise chains, recycles buffers via liveness analysis, and fans
-//! independent batch rows across the thread pool.  The interpreter remains
-//! the cross-check oracle: property tests assert plan output equality on
-//! every lowering (see `rust/tests/properties.rs`).
+//! plan bakes (and pre-packs) constants, fuses elementwise chains,
+//! recycles buffers via liveness analysis, and fans independent output
+//! rows across the thread pool.
+//!
+//! # The view/materialize value model
+//!
+//! Every value in a plan is a strided *view* — `(backing location, offset,
+//! shape, strides)` — not necessarily a dense buffer.  All four
+//! data-movement ops (`Reshape`, `Transpose2`, `Permute3`, `StridedSlice`)
+//! compile to metadata-only stride rewrites, and the layer kernels read
+//! their activation input *through* the strides, so PFB's
+//! reshape→permute→depthwise window and STFT's slice→permute framing run
+//! with zero copies.  An explicit `Materialize` step (a tiled, threaded
+//! gather) is inserted only where density is unavoidable:
+//!
+//! * a `Reshape` that merges axes a strided view cannot merge (the one
+//!   shipped case: batched STFT's `(B, F, nfft) -> (B*F, nfft)` frame
+//!   regrouping at `B > 1`);
+//! * weight / bias / fused-elementwise operands (those kernels stream
+//!   dense memory).
+//!
+//! Plan outputs may themselves be views; the final gather copies them
+//! straight into the response tensor, so terminal transposes/permutes cost
+//! one copy total (the copy every execution must make anyway).  Liveness
+//! is computed over *backing roots*: a view keeps its backing slot live —
+//! and un-recycled — until the view's last consumer (or the output gather)
+//! has run; `ExecPlan::validate_liveness` re-proves that symbolically per
+//! plan.  Arena slot sizes derive from materialized extents only.
+//!
+//! # Oracle contract (tiling preserves rounding)
+//!
+//! The interpreter remains the cross-check oracle: property tests assert
+//! **bit-for-bit** plan/interpreter equality on every lowering (see
+//! `rust/tests/properties.rs`).  The register-tiled, weight-pre-packed
+//! microkernels keep that promise by blocking over *output* coordinates
+//! only — the reduction over input channels runs in the oracle's exact
+//! order for every output element (see [`fused`]'s module docs).
 //!
 //! Module layout:
-//! * [`plan`] — compilation (alias/fusion/liveness) and step execution;
+//! * [`plan`] — view propagation, fusion, liveness, weight packing, and
+//!   step execution;
 //! * [`arena`] — the reusable buffer slab;
-//! * [`fused`] — slice-level threaded kernels (same accumulation order as
-//!   [`crate::tina::layers`], so results agree to rounding).
+//! * [`fused`] — stride-aware threaded kernels and the packed microkernels
+//!   (same per-element accumulation order as [`crate::tina::layers`]).
 
 pub mod arena;
 pub mod fused;

@@ -4,15 +4,29 @@
 //! work the naive interpreter repeats on every request:
 //!
 //! * **constant baking** — `Constant` nodes are cloned into the plan once
-//!   (the interpreter clones every weight tensor on every run);
-//! * **alias analysis** — `Reshape` becomes a metadata-only view: the
-//!   value shares its producer's buffer with a different shape;
+//!   (the interpreter clones every weight tensor on every run), and
+//!   constant weight matrices of `FullyConnected`/`PointwiseConv` steps
+//!   are additionally pre-packed into [`fused::NR`]-wide column panels the
+//!   register-tiled microkernels stream;
+//! * **view propagation** — every value is a strided [`View`] over a
+//!   backing buffer.  `Reshape`, `Transpose2`, `Permute3` and
+//!   `StridedSlice` compile to metadata-only stride rewrites; the kernels
+//!   read activations through the strides, so permute→conv chains (PFB,
+//!   STFT framing) execute with **zero copies**.  An explicit
+//!   [`Kernel::Materialize`] step is inserted only when contiguity is
+//!   unavoidable: a `Reshape` whose strided source cannot be re-grouped
+//!   without copying, or a weight/bias/elementwise operand (those kernels
+//!   require dense layout);
 //! * **elementwise fusion** — single-consumer `Add`/`Sub` chains collapse
 //!   into one [`fused::fused_ew`] pass, and `Add`/`Sub` of a layer output
 //!   with a per-channel-uniform constant folds into that layer's bias;
-//! * **liveness analysis** — every surviving value gets a slot in a slab
-//!   [`Arena`] via linear-scan allocation over the topological schedule;
-//!   a buffer is recycled the moment its last consumer has run;
+//! * **liveness analysis** — every materialized value gets a slot in a
+//!   slab [`Arena`] via linear-scan allocation over the topological
+//!   schedule; slot sizes derive from *materialized* extents (views add
+//!   nothing), and because a view shares its backing value's root, the
+//!   backing slot is provably not recycled or overwritten before the
+//!   view's last consumer — [`ExecPlan::validate_liveness`] re-proves this
+//!   symbolically, including for view-shaped plan outputs;
 //! * **threaded execution** — the kernels in [`fused`] fan independent
 //!   output rows across the thread pool.
 //!
@@ -38,12 +52,149 @@ enum Loc {
     Slot(usize),
 }
 
-/// One resolved kernel argument.
+/// Row-major strides for a dense shape.
+fn row_major(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * shape[i + 1];
+    }
+    s
+}
+
+/// A strided window onto a backing buffer: `elem(idx) = backing[offset +
+/// dot(idx, strides)]`.  Movement ops rewrite only this metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct View {
+    offset: usize,
+    shape: Vec<usize>,
+    strides: Vec<usize>,
+}
+
+impl View {
+    fn contiguous(shape: &[usize]) -> View {
+        View {
+            offset: 0,
+            strides: row_major(shape),
+            shape: shape.to_vec(),
+        }
+    }
+
+    fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Dense row-major layout (strides of size-1 axes are irrelevant).
+    fn is_contiguous(&self) -> bool {
+        let mut expect = 1usize;
+        for (&d, &s) in self.shape.iter().zip(&self.strides).rev() {
+            if d != 1 && s != expect {
+                return false;
+            }
+            expect *= d;
+        }
+        true
+    }
+
+    /// One past the largest element index the view can touch, relative to
+    /// the backing buffer's start.
+    fn end(&self) -> usize {
+        self.offset
+            + 1
+            + self
+                .shape
+                .iter()
+                .zip(&self.strides)
+                .map(|(&d, &s)| (d - 1) * s)
+                .sum::<usize>()
+    }
+
+    fn transpose2(&self) -> View {
+        View {
+            offset: self.offset,
+            shape: vec![self.shape[1], self.shape[0]],
+            strides: vec![self.strides[1], self.strides[0]],
+        }
+    }
+
+    fn permute3(&self, p: [usize; 3]) -> View {
+        View {
+            offset: self.offset,
+            shape: p.iter().map(|&i| self.shape[i]).collect(),
+            strides: p.iter().map(|&i| self.strides[i]).collect(),
+        }
+    }
+
+    fn stride_axis(&self, axis: usize, step: usize, count: usize) -> View {
+        let mut v = self.clone();
+        v.shape[axis] = count;
+        v.strides[axis] *= step;
+        v
+    }
+
+    /// Try to express a reshape as a pure stride rewrite (the classic
+    /// no-copy reshape: axes may merge only where the view is dense across
+    /// the merged group).  Returns `None` when a copy is unavoidable.
+    fn reshape(&self, new_shape: &[usize]) -> Option<View> {
+        debug_assert_eq!(self.numel(), new_shape.iter().product::<usize>());
+        // size-1 axes carry no layout information: drop them first
+        let mut olddims: Vec<usize> = Vec::with_capacity(self.shape.len());
+        let mut oldstrides: Vec<usize> = Vec::with_capacity(self.shape.len());
+        for (&d, &s) in self.shape.iter().zip(&self.strides) {
+            if d != 1 {
+                olddims.push(d);
+                oldstrides.push(s);
+            }
+        }
+        let (oldnd, newnd) = (olddims.len(), new_shape.len());
+        let mut newstrides = vec![0usize; newnd];
+        let (mut oi, mut oj, mut ni, mut nj) = (0usize, 1usize, 0usize, 1usize);
+        while ni < newnd && oi < oldnd {
+            let mut np = new_shape[ni];
+            let mut op = olddims[oi];
+            while np != op {
+                if np < op {
+                    np *= new_shape[nj];
+                    nj += 1;
+                } else {
+                    op *= olddims[oj];
+                    oj += 1;
+                }
+            }
+            // merging [oi, oj) demands density across the group
+            for ok in oi..oj - 1 {
+                if oldstrides[ok] != olddims[ok + 1] * oldstrides[ok + 1] {
+                    return None;
+                }
+            }
+            newstrides[nj - 1] = oldstrides[oj - 1];
+            for nk in (ni + 1..nj).rev() {
+                newstrides[nk - 1] = newstrides[nk] * new_shape[nk];
+            }
+            ni = nj;
+            nj += 1;
+            oi = oj;
+            oj += 1;
+        }
+        // any remaining new axes are size 1; give them the innermost stride
+        let tail = if ni > 0 { newstrides[ni - 1] } else { 1 };
+        for nk in ni..newnd {
+            debug_assert_eq!(new_shape[nk], 1);
+            newstrides[nk] = tail;
+        }
+        Some(View {
+            offset: self.offset,
+            shape: new_shape.to_vec(),
+            strides: newstrides,
+        })
+    }
+}
+
+/// One resolved kernel argument: a strided view over a located backing.
 #[derive(Debug, Clone)]
 struct ArgRef {
     loc: Loc,
-    shape: Vec<usize>,
-    /// Producing value id (diagnostics + liveness validation).
+    view: View,
+    /// Value id of the backing buffer (diagnostics + liveness validation).
     root: usize,
 }
 
@@ -51,14 +202,17 @@ struct ArgRef {
 enum Kernel {
     StandardConv1d,
     DepthwiseConv1d,
-    PointwiseConv,
-    FullyConnected,
-    Transpose2,
-    Permute3([usize; 3]),
-    StridedSlice {
-        axis: usize,
-        stride: usize,
-        count: usize,
+    /// `packed` indexes [`ExecPlan::packed`] when the weight is a plan
+    /// constant pre-packed into NR panels.
+    PointwiseConv { packed: Option<usize> },
+    FullyConnected { packed: Option<usize> },
+    /// Copy a strided view into a dense buffer.  `origin` names the graph
+    /// op that made the copy unavoidable and `movement` records whether it
+    /// was one of the transpose/permute/slice ops (plan introspection —
+    /// those must normally stay metadata-only).
+    Materialize {
+        origin: &'static str,
+        movement: bool,
     },
     /// Collapsed Add/Sub chain; `signs[i]` applies to `args[i]`.
     FusedEw { signs: Vec<f32> },
@@ -79,6 +233,8 @@ struct Step {
 pub struct ExecPlan {
     input_shapes: Vec<Vec<usize>>,
     constants: Vec<Tensor>,
+    /// Pre-packed NR-panel copies of constant weight matrices.
+    packed: Vec<Vec<f32>>,
     steps: Vec<Step>,
     slot_sizes: Vec<usize>,
     outputs: Vec<ArgRef>,
@@ -93,24 +249,21 @@ enum Storage {
     Owned,
 }
 
+/// Compile-time resolution of a value: storage class + backing root +
+/// strided view.  Doubles as a proto-step argument.
 #[derive(Debug, Clone)]
 struct ValInfo {
     st: Storage,
     root: usize,
-}
-
-#[derive(Debug, Clone)]
-struct ProtoArg {
-    shape: Vec<usize>,
-    st: Storage,
-    root: usize,
+    view: View,
 }
 
 #[derive(Debug)]
 struct ProtoStep {
     kernel: Kernel,
-    args: Vec<ProtoArg>,
+    args: Vec<ValInfo>,
     out_vid: usize,
+    out_shape: Vec<usize>,
 }
 
 /// If `t` (shaped like a layer output, channel axis 1) is constant along
@@ -160,6 +313,70 @@ fn expand_terms(
         match v.0.checked_sub(n_inputs) {
             Some(cj) if inlined[cj] => expand_terms(g, inlined, n_inputs, cj, s, out),
             _ => out.push((s, v.0)),
+        }
+    }
+}
+
+/// Pass-A state: resolves every graph value to a (storage, view) pair and
+/// emits proto steps, inserting `Materialize` copies only on demand.
+struct PassA<'g> {
+    g: &'g Graph,
+    n_inputs: usize,
+    info: Vec<Option<ValInfo>>,
+    constants: Vec<Tensor>,
+    protos: Vec<ProtoStep>,
+    /// Contiguous copies already emitted for non-contiguous views, by the
+    /// viewed value's id — shared by every consumer that needs density.
+    materialized: HashMap<usize, ValInfo>,
+    /// Next synthetic value id (above every graph value id).
+    next_vid: usize,
+}
+
+impl PassA<'_> {
+    fn arg(&self, vid: usize) -> Result<ValInfo> {
+        self.info[vid]
+            .clone()
+            .ok_or_else(|| anyhow!("value {vid} consumed before materialization"))
+    }
+
+    /// Like [`PassA::arg`], but guarantees a dense layout: a
+    /// non-contiguous view is copied once into a synthetic owned value.
+    fn contig_arg(&mut self, vid: usize) -> Result<ValInfo> {
+        let a = self.arg(vid)?;
+        if a.view.is_contiguous() {
+            return Ok(a);
+        }
+        if let Some(m) = self.materialized.get(&vid) {
+            return Ok(m.clone());
+        }
+        let (origin, movement) = self.origin_of(vid);
+        let sv = self.next_vid;
+        self.next_vid += 1;
+        let shape = a.view.shape.clone();
+        self.protos.push(ProtoStep {
+            kernel: Kernel::Materialize { origin, movement },
+            args: vec![a],
+            out_vid: sv,
+            out_shape: shape.clone(),
+        });
+        let m = ValInfo {
+            st: Storage::Owned,
+            root: sv,
+            view: View::contiguous(&shape),
+        };
+        self.materialized.insert(vid, m.clone());
+        Ok(m)
+    }
+
+    /// Name + movement-class of the op that produced `vid`
+    /// (materialization attribution).
+    fn origin_of(&self, vid: usize) -> (&'static str, bool) {
+        match vid.checked_sub(self.n_inputs) {
+            Some(j) => {
+                let op = &self.g.nodes[j].op;
+                (op.name(), op.is_strided_movement())
+            }
+            None => ("input", false),
         }
     }
 }
@@ -264,65 +481,114 @@ impl ExecPlan {
             }
         }
 
-        // ---- pass A: resolve storage, emit proto steps --------------------
-        let mut info: Vec<Option<ValInfo>> = vec![None; n_values];
-        for (i, (id, _)) in g.inputs.iter().enumerate() {
-            info[id.0] = Some(ValInfo {
+        // ---- pass A: propagate views, resolve storage, emit proto steps ---
+        let mut pa = PassA {
+            g,
+            n_inputs,
+            info: vec![None; n_values],
+            constants: Vec::new(),
+            protos: Vec::new(),
+            materialized: HashMap::new(),
+            next_vid: n_values,
+        };
+        for (i, (id, shape)) in g.inputs.iter().enumerate() {
+            pa.info[id.0] = Some(ValInfo {
                 st: Storage::External(i),
                 root: id.0,
+                view: View::contiguous(shape),
             });
         }
-        let mut constants: Vec<Tensor> = Vec::new();
-        let mut protos: Vec<ProtoStep> = Vec::new();
-        let arg_of = |vid: usize, info: &[Option<ValInfo>], shapes: &[Vec<usize>]| -> Result<ProtoArg> {
-            let vi = info[vid]
-                .as_ref()
-                .ok_or_else(|| anyhow!("value {vid} consumed before materialization"))?;
-            Ok(ProtoArg {
-                shape: shapes[vid].clone(),
-                st: vi.st,
-                root: vi.root,
-            })
-        };
         for (j, node) in g.nodes.iter().enumerate() {
             let vid = n_inputs + j;
             match &node.op {
                 NodeOp::Constant(t) => {
-                    constants.push(t.clone());
-                    info[vid] = Some(ValInfo {
-                        st: Storage::Const(constants.len() - 1),
+                    pa.constants.push(t.clone());
+                    pa.info[vid] = Some(ValInfo {
+                        st: Storage::Const(pa.constants.len() - 1),
                         root: vid,
+                        view: View::contiguous(t.shape()),
                     });
                 }
-                NodeOp::Reshape(_) => {
-                    // metadata-only view: same storage, new shape
-                    let src = info[node.inputs[0].0]
+                NodeOp::Reshape(target) => {
+                    let src = pa.info[node.inputs[0].0]
                         .clone()
                         .ok_or_else(|| anyhow!("reshape of unmaterialized value"))?;
-                    info[vid] = Some(src);
+                    match src.view.reshape(target) {
+                        // metadata-only: same storage, re-grouped strides
+                        Some(v) => pa.info[vid] = Some(ValInfo { view: v, ..src }),
+                        None => {
+                            // the strided view cannot be re-grouped: copy
+                            // once, directly into the reshaped dense layout
+                            // (a gather is element-order preserving, so the
+                            // copy *is* the reshape)
+                            let a = pa.arg(node.inputs[0].0)?;
+                            pa.protos.push(ProtoStep {
+                                kernel: Kernel::Materialize {
+                                    origin: "reshape",
+                                    movement: false,
+                                },
+                                args: vec![a],
+                                out_vid: vid,
+                                out_shape: target.clone(),
+                            });
+                            pa.info[vid] = Some(ValInfo {
+                                st: Storage::Owned,
+                                root: vid,
+                                view: View::contiguous(target),
+                            });
+                        }
+                    }
+                }
+                NodeOp::Transpose2 => {
+                    let src = pa.info[node.inputs[0].0]
+                        .clone()
+                        .ok_or_else(|| anyhow!("transpose of unmaterialized value"))?;
+                    let view = src.view.transpose2();
+                    pa.info[vid] = Some(ValInfo { view, ..src });
+                }
+                NodeOp::Permute3(p) => {
+                    let src = pa.info[node.inputs[0].0]
+                        .clone()
+                        .ok_or_else(|| anyhow!("permute of unmaterialized value"))?;
+                    let view = src.view.permute3(*p);
+                    pa.info[vid] = Some(ValInfo { view, ..src });
+                }
+                NodeOp::StridedSlice {
+                    axis,
+                    stride,
+                    count,
+                } => {
+                    let src = pa.info[node.inputs[0].0]
+                        .clone()
+                        .ok_or_else(|| anyhow!("slice of unmaterialized value"))?;
+                    let view = src.view.stride_axis(*axis, *stride, *count);
+                    pa.info[vid] = Some(ValInfo { view, ..src });
                 }
                 NodeOp::Add | NodeOp::Sub => {
                     if let Some(lv) = fold_alias[j] {
                         // folded into the producing layer's bias
-                        info[vid] = Some(info[lv.0].clone().expect("layer before fold"));
+                        pa.info[vid] = Some(pa.info[lv.0].clone().expect("layer before fold"));
                     } else if inlined[j] {
                         // expanded inside the consuming chain; no value
                     } else {
                         let mut terms: Vec<(f32, usize)> = Vec::new();
                         expand_terms(g, &inlined, n_inputs, j, 1.0, &mut terms);
                         let signs: Vec<f32> = terms.iter().map(|t| t.0).collect();
+                        // the single-pass kernel streams its terms linearly
                         let args = terms
                             .iter()
-                            .map(|&(_, v)| arg_of(v, &info, &shapes))
+                            .map(|&(_, v)| pa.contig_arg(v))
                             .collect::<Result<Vec<_>>>()?;
-                        protos.push(ProtoStep {
+                        pa.protos.push(ProtoStep {
                             kernel: Kernel::FusedEw { signs },
                             args,
                             out_vid: vid,
+                            out_shape: shapes[vid].clone(),
                         });
-                        info[vid] = Some(ValInfo {
+                        pa.info[vid] = Some(ValInfo {
                             st: Storage::Owned,
                             root: vid,
+                            view: View::contiguous(&shapes[vid]),
                         });
                     }
                 }
@@ -330,46 +596,45 @@ impl ExecPlan {
                     let kernel = match op {
                         NodeOp::StandardConv1d => Kernel::StandardConv1d,
                         NodeOp::DepthwiseConv1d => Kernel::DepthwiseConv1d,
-                        NodeOp::PointwiseConv => Kernel::PointwiseConv,
-                        NodeOp::FullyConnected => Kernel::FullyConnected,
-                        NodeOp::Transpose2 => Kernel::Transpose2,
-                        NodeOp::Permute3(p) => Kernel::Permute3(*p),
-                        NodeOp::StridedSlice {
-                            axis,
-                            stride,
-                            count,
-                        } => Kernel::StridedSlice {
-                            axis: *axis,
-                            stride: *stride,
-                            count: *count,
-                        },
+                        NodeOp::PointwiseConv => Kernel::PointwiseConv { packed: None },
+                        NodeOp::FullyConnected => Kernel::FullyConnected { packed: None },
                         _ => unreachable!("handled above"),
                     };
-                    let mut args = node
-                        .inputs
-                        .iter()
-                        .map(|v| arg_of(v.0, &info, &shapes))
-                        .collect::<Result<Vec<_>>>()?;
-                    if let Some(nb) = fused_bias.get(&j) {
-                        constants.push(nb.clone());
-                        args[2] = ProtoArg {
-                            shape: nb.shape().to_vec(),
-                            st: Storage::Const(constants.len() - 1),
+                    // the activation may be an arbitrary strided view (the
+                    // kernels read through strides); weights and biases
+                    // must be dense
+                    let x = pa.arg(node.inputs[0].0)?;
+                    let k = pa.contig_arg(node.inputs[1].0)?;
+                    let b = if let Some(nb) = fused_bias.get(&j) {
+                        pa.constants.push(nb.clone());
+                        ValInfo {
+                            st: Storage::Const(pa.constants.len() - 1),
                             root: usize::MAX,
-                        };
-                    }
-                    protos.push(ProtoStep {
+                            view: View::contiguous(nb.shape()),
+                        }
+                    } else {
+                        pa.contig_arg(node.inputs[2].0)?
+                    };
+                    pa.protos.push(ProtoStep {
                         kernel,
-                        args,
+                        args: vec![x, k, b],
                         out_vid: vid,
+                        out_shape: shapes[vid].clone(),
                     });
-                    info[vid] = Some(ValInfo {
+                    pa.info[vid] = Some(ValInfo {
                         st: Storage::Owned,
                         root: vid,
+                        view: View::contiguous(&shapes[vid]),
                     });
                 }
             }
         }
+        let PassA {
+            info,
+            constants,
+            protos,
+            ..
+        } = pa;
 
         // ---- read counts over owned storages ------------------------------
         let mut reads: HashMap<usize, usize> = HashMap::new();
@@ -397,7 +662,7 @@ impl ExecPlan {
         let mut remaining = reads.clone();
         let mut steps: Vec<Step> = Vec::with_capacity(protos.len());
         for p in protos {
-            let out_len: usize = shapes[p.out_vid].iter().product();
+            let out_len: usize = p.out_shape.iter().product();
             let slot = free.pop().unwrap_or_else(|| {
                 slot_sizes.push(0);
                 slot_sizes.len() - 1
@@ -413,7 +678,7 @@ impl ExecPlan {
                         Storage::Const(k) => Loc::Const(k),
                         Storage::Owned => Loc::Slot(slot_of[&a.root]),
                     },
-                    shape: a.shape.clone(),
+                    view: a.view.clone(),
                     root: a.root,
                 })
                 .collect();
@@ -436,7 +701,7 @@ impl ExecPlan {
                 kernel: p.kernel,
                 args,
                 out_slot: slot,
-                out_shape: shapes[p.out_vid].clone(),
+                out_shape: p.out_shape,
                 out_root: p.out_vid,
             });
         }
@@ -452,7 +717,7 @@ impl ExecPlan {
                         Storage::Const(k) => Loc::Const(k),
                         Storage::Owned => Loc::Slot(slot_of[&vi.root]),
                     },
-                    shape: shapes[v.0].clone(),
+                    view: vi.view.clone(),
                     root: vi.root,
                 }
             })
@@ -497,9 +762,40 @@ impl ExecPlan {
             fix(&mut o.loc);
         }
 
+        // ---- pre-pack constant weight matrices into NR panels -----------
+        // FullyConnected/PointwiseConv steps whose kernel is a whole plan
+        // constant get a column-blocked copy the register-tiled microkernels
+        // stream; one panel set per constant, shared across steps.
+        let mut packed: Vec<Vec<f32>> = Vec::new();
+        // keyed by (constant, cin, cout): the same constant consumed under
+        // two different 2-D views (e.g. through a reshape) needs two
+        // differently-laid-out panel sets
+        let mut pack_of: HashMap<(usize, usize, usize), usize> = HashMap::new();
+        for s in &mut steps {
+            let slot = match &mut s.kernel {
+                Kernel::PointwiseConv { packed } | Kernel::FullyConnected { packed } => packed,
+                _ => continue,
+            };
+            let ka = &s.args[1];
+            let Loc::Const(kc) = ka.loc else { continue };
+            if !ka.view.is_contiguous()
+                || ka.view.offset != 0
+                || ka.view.numel() != compact[kc].len()
+            {
+                continue;
+            }
+            let (cin, cout) = (ka.view.shape[0], ka.view.shape[1]);
+            let idx = *pack_of.entry((kc, cin, cout)).or_insert_with(|| {
+                packed.push(fused::pack_k(compact[kc].data(), cin, cout));
+                packed.len() - 1
+            });
+            *slot = Some(idx);
+        }
+
         let plan = ExecPlan {
             input_shapes: g.inputs.iter().map(|(_, s)| s.clone()).collect(),
             constants: compact,
+            packed,
             steps,
             slot_sizes,
             outputs,
@@ -534,17 +830,46 @@ impl ExecPlan {
         }
         arena.prepare(&self.slot_sizes);
 
-        fn resolve<'a>(
+        // Backing slice a view indexes into (full extent; the kernels apply
+        // the view's offset and strides themselves).
+        fn backing<'a>(
             a: &ArgRef,
             inputs: &'a [Tensor],
             constants: &'a [Tensor],
             arena: &'a Arena,
         ) -> &'a [f32] {
-            let n: usize = a.shape.iter().product();
             match a.loc {
-                Loc::External(i) => &inputs[i].data()[..n],
-                Loc::Const(k) => &constants[k].data()[..n],
-                Loc::Slot(s) => &arena.slot(s)[..n],
+                Loc::External(i) => inputs[i].data(),
+                Loc::Const(k) => constants[k].data(),
+                Loc::Slot(s) => arena.slot(s),
+            }
+        }
+
+        // Dense args (weights, biases, elementwise terms) resolve straight
+        // to their element range.
+        fn contig<'a>(
+            a: &ArgRef,
+            inputs: &'a [Tensor],
+            constants: &'a [Tensor],
+            arena: &'a Arena,
+        ) -> &'a [f32] {
+            debug_assert!(a.view.is_contiguous());
+            let d = backing(a, inputs, constants, arena);
+            &d[a.view.offset..a.view.offset + a.view.numel()]
+        }
+
+        // Activation args travel as strided rank-3 windows.
+        fn x3<'a>(
+            a: &ArgRef,
+            inputs: &'a [Tensor],
+            constants: &'a [Tensor],
+            arena: &'a Arena,
+        ) -> fused::X3<'a> {
+            debug_assert_eq!(a.view.strides.len(), 3);
+            fused::X3 {
+                d: backing(a, inputs, constants, arena),
+                off: a.view.offset,
+                s: [a.view.strides[0], a.view.strides[1], a.view.strides[2]],
             }
         }
 
@@ -554,71 +879,91 @@ impl ExecPlan {
             debug_assert!(out_buf.len() >= out_len);
             {
                 let out = &mut out_buf[..out_len];
-                let arg = |i: usize| resolve(&step.args[i], inputs, &self.constants, arena);
                 match &step.kernel {
                     Kernel::DepthwiseConv1d => {
-                        let (xs, ks) = (&step.args[0].shape, &step.args[1].shape);
+                        let xs = &step.args[0].view.shape;
+                        let m = step.args[1].view.shape[1];
                         fused::depthwise_conv(
-                            arg(0),
+                            x3(&step.args[0], inputs, &self.constants, arena),
                             (xs[0], xs[1], xs[2]),
-                            arg(1),
-                            ks[1],
-                            arg(2),
+                            contig(&step.args[1], inputs, &self.constants, arena),
+                            m,
+                            contig(&step.args[2], inputs, &self.constants, arena),
                             out,
                         );
                     }
                     Kernel::StandardConv1d => {
-                        let (xs, ks) = (&step.args[0].shape, &step.args[1].shape);
+                        let xs = &step.args[0].view.shape;
+                        let ks = &step.args[1].view.shape;
                         fused::standard_conv(
-                            arg(0),
+                            x3(&step.args[0], inputs, &self.constants, arena),
                             (xs[0], xs[1], xs[2]),
-                            arg(1),
+                            contig(&step.args[1], inputs, &self.constants, arena),
                             (ks[0], ks[2]),
-                            arg(2),
+                            contig(&step.args[2], inputs, &self.constants, arena),
                             out,
                         );
                     }
-                    Kernel::PointwiseConv => {
-                        let (xs, ks) = (&step.args[0].shape, &step.args[1].shape);
-                        fused::pointwise_conv(
-                            arg(0),
-                            (xs[0], xs[1], xs[2]),
-                            arg(1),
-                            ks[1],
-                            arg(2),
-                            out,
-                        );
+                    Kernel::PointwiseConv { packed } => {
+                        let xs = &step.args[0].view.shape;
+                        let cout = step.args[1].view.shape[1];
+                        let x = x3(&step.args[0], inputs, &self.constants, arena);
+                        let b = contig(&step.args[2], inputs, &self.constants, arena);
+                        match packed {
+                            Some(pi) => fused::pointwise_conv_packed(
+                                x,
+                                (xs[0], xs[1], xs[2]),
+                                &self.packed[*pi],
+                                cout,
+                                b,
+                                out,
+                            ),
+                            None => fused::pointwise_conv(
+                                x,
+                                (xs[0], xs[1], xs[2]),
+                                contig(&step.args[1], inputs, &self.constants, arena),
+                                cout,
+                                b,
+                                out,
+                            ),
+                        }
                     }
-                    Kernel::FullyConnected => {
-                        let (xs, ks) = (&step.args[0].shape, &step.args[1].shape);
-                        fused::fully_connected(
-                            arg(0),
-                            (xs[0], xs[1]),
-                            arg(1),
-                            ks[1],
-                            arg(2),
-                            out,
-                        );
+                    Kernel::FullyConnected { packed } => {
+                        let a = &step.args[0];
+                        let xs = &a.view.shape;
+                        let cout = step.args[1].view.shape[1];
+                        let x = fused::X2 {
+                            d: backing(a, inputs, &self.constants, arena),
+                            off: a.view.offset,
+                            s: [a.view.strides[0], a.view.strides[1]],
+                        };
+                        let b = contig(&step.args[2], inputs, &self.constants, arena);
+                        match packed {
+                            Some(pi) => fused::fully_connected_packed(
+                                x,
+                                (xs[0], xs[1]),
+                                &self.packed[*pi],
+                                cout,
+                                b,
+                                out,
+                            ),
+                            None => fused::fully_connected(
+                                x,
+                                (xs[0], xs[1]),
+                                contig(&step.args[1], inputs, &self.constants, arena),
+                                cout,
+                                b,
+                                out,
+                            ),
+                        }
                     }
-                    Kernel::Transpose2 => {
-                        let xs = &step.args[0].shape;
-                        fused::transpose2(arg(0), (xs[0], xs[1]), out);
-                    }
-                    Kernel::Permute3(p) => {
-                        let xs = &step.args[0].shape;
-                        fused::permute3(arg(0), (xs[0], xs[1], xs[2]), *p, out);
-                    }
-                    Kernel::StridedSlice {
-                        axis,
-                        stride,
-                        count,
-                    } => {
-                        fused::strided_slice(
-                            arg(0),
-                            &step.args[0].shape,
-                            *axis,
-                            *stride,
-                            *count,
+                    Kernel::Materialize { .. } => {
+                        let a = &step.args[0];
+                        fused::materialize(
+                            backing(a, inputs, &self.constants, arena),
+                            a.view.offset,
+                            &a.view.shape,
+                            &a.view.strides,
                             out,
                         );
                     }
@@ -626,7 +971,7 @@ impl ExecPlan {
                         let terms: Vec<(f32, &[f32])> = signs
                             .iter()
                             .zip(&step.args)
-                            .map(|(&s, a)| (s, resolve(a, inputs, &self.constants, arena)))
+                            .map(|(&s, a)| (s, contig(a, inputs, &self.constants, arena)))
                             .collect();
                         fused::fused_ew(&terms, out);
                     }
@@ -638,8 +983,18 @@ impl ExecPlan {
         self.outputs
             .iter()
             .map(|o| {
-                let data = resolve(o, inputs, &self.constants, arena).to_vec();
-                Tensor::new(&o.shape, data)
+                let d = backing(o, inputs, &self.constants, arena);
+                let n = o.view.numel();
+                let data = if o.view.is_contiguous() {
+                    d[o.view.offset..o.view.offset + n].to_vec()
+                } else {
+                    // view-shaped output: gather once, straight into the
+                    // result tensor (what used to be a kernel step)
+                    let mut v = vec![0.0f32; n];
+                    fused::materialize(d, o.view.offset, &o.view.shape, &o.view.strides, &mut v);
+                    v
+                };
+                Tensor::new(&o.view.shape, data)
             })
             .collect()
     }
@@ -652,6 +1007,53 @@ impl ExecPlan {
     /// Number of kernel steps after fusion/aliasing.
     pub fn step_count(&self) -> usize {
         self.steps.len()
+    }
+
+    /// Number of explicit view-copy steps in the schedule.  Zero on every
+    /// shipped lowering except batched STFT (whose frame regrouping is not
+    /// expressible as strides; see the module docs).
+    pub fn materialize_count(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s.kernel, Kernel::Materialize { .. }))
+            .count()
+    }
+
+    /// Materialize steps forced by a `Transpose2`/`Permute3`/`StridedSlice`
+    /// view (classified via [`NodeOp::is_strided_movement`] at compile
+    /// time).  The acceptance contract keeps these at zero on the shipped
+    /// lowerings: pure data-movement ops must never copy.
+    pub fn movement_materialize_count(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s.kernel, Kernel::Materialize { movement: true, .. }))
+            .count()
+    }
+
+    /// Op names that forced each Materialize step, in schedule order —
+    /// the diagnostic companion to [`ExecPlan::materialize_count`].
+    pub fn materialize_origins(&self) -> Vec<&'static str> {
+        self.steps
+            .iter()
+            .filter_map(|s| match s.kernel {
+                Kernel::Materialize { origin, .. } => Some(origin),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Steps whose constant weights were pre-packed into NR panels.
+    pub fn packed_kernel_count(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| {
+                matches!(
+                    s.kernel,
+                    Kernel::PointwiseConv { packed: Some(_) }
+                        | Kernel::FullyConnected { packed: Some(_) }
+                )
+            })
+            .count()
     }
 
     /// Bytes of arena the plan's slots occupy at their high-water sizes.
@@ -669,10 +1071,13 @@ impl ExecPlan {
         &self.input_shapes
     }
 
-    /// Symbolically execute the schedule and verify that no step reads a
-    /// slot after it has been recycled to another value, that no step's
-    /// output slot aliases one of its inputs, and that pinned outputs are
-    /// never overwritten.  Used by tests to prove the arena sound.
+    /// Symbolically execute the schedule and verify the strided-aliasing
+    /// contract: no step reads a slot (through any view) after it has been
+    /// recycled to another value, every view stays inside its backing
+    /// value's materialized extent, no step's output slot aliases one of
+    /// its inputs, and pinned outputs (including view-shaped ones) are
+    /// never overwritten before the final gather.  Used by tests to prove
+    /// the arena sound.
     pub fn validate_liveness(&self) -> Result<()> {
         let mut reads: HashMap<usize, usize> = HashMap::new();
         for s in &self.steps {
@@ -688,11 +1093,34 @@ impl ExecPlan {
                 pinned.insert(o.root);
             }
         }
+        // materialized extent of each owned value
+        let mut extent: HashMap<usize, usize> = HashMap::new();
+        for s in &self.steps {
+            extent.insert(s.out_root, s.out_shape.iter().product());
+        }
+        let check_span = |who: &str, a: &ArgRef| -> Result<()> {
+            if !matches!(a.loc, Loc::Slot(_)) {
+                return Ok(());
+            }
+            let ext = extent
+                .get(&a.root)
+                .copied()
+                .ok_or_else(|| anyhow!("{who}: view of unknown value {}", a.root))?;
+            if a.view.end() > ext {
+                bail!(
+                    "{who}: view spans {} elements past value {}'s extent {ext}",
+                    a.view.end(),
+                    a.root
+                );
+            }
+            Ok(())
+        };
         let mut owner: Vec<Option<usize>> = vec![None; self.slot_sizes.len()];
         let mut remaining = reads.clone();
         for (si, s) in self.steps.iter().enumerate() {
             for a in &s.args {
                 if let Loc::Slot(slot) = a.loc {
+                    check_span(&format!("step {si}"), a)?;
                     if owner[slot] != Some(a.root) {
                         bail!(
                             "step {si}: reads value {} from slot {slot} holding {:?} (read-after-recycle)",
@@ -701,7 +1129,7 @@ impl ExecPlan {
                         );
                     }
                     if slot == s.out_slot {
-                        bail!("step {si}: output slot {slot} aliases an input");
+                        bail!("step {si}: output slot {slot} aliases an input view");
                     }
                 }
             }
@@ -725,6 +1153,7 @@ impl ExecPlan {
         }
         for (oi, o) in self.outputs.iter().enumerate() {
             if let Loc::Slot(slot) = o.loc {
+                check_span(&format!("output {oi}"), o)?;
                 if owner[slot] != Some(o.root) {
                     bail!("output {oi}: slot {slot} recycled before return");
                 }
@@ -825,6 +1254,165 @@ mod tests {
         let plan = ExecPlan::compile(&g).unwrap();
         assert_eq!(plan.step_count(), 1, "reshapes must not become steps");
         assert_eq!(plan.slot_count(), 1);
+    }
+
+    #[test]
+    fn movement_ops_are_metadata_only_on_lowerings() {
+        // The tentpole contract: transpose/permute/slice views compile to
+        // stride rewrites, so the PFB and STFT graphs run copy-free.
+        let cfg = dsp::PfbConfig::new(8, 4);
+        for (name, g, steps) in [
+            // reshape + permute + depthwise: one kernel step, no copies
+            ("pfb_fir", lower::pfb_fir(2, 8 * 32, cfg).unwrap(), 1),
+            // depthwise + 2 pointwise; both output permutes become views
+            ("pfb", lower::pfb(2, 8 * 32, cfg).unwrap(), 3),
+            // framing conv + windowing depthwise + 2 DFT pointwise; the
+            // strided-slice and both permutes are pure metadata at B=1
+            ("stft", lower::stft(1, 600, 64, 32).unwrap(), 4),
+            // standard conv; the trailing permute is a terminal view
+            ("unfold", lower::unfold(2, 100, 8).unwrap(), 1),
+        ] {
+            let plan = ExecPlan::compile(&g).unwrap();
+            assert_eq!(plan.materialize_count(), 0, "{name}: unexpected copy");
+            assert_eq!(plan.movement_materialize_count(), 0, "{name}");
+            assert_eq!(plan.step_count(), steps, "{name}: step count");
+            plan.validate_liveness().unwrap();
+        }
+    }
+
+    #[test]
+    fn batched_stft_materializes_only_at_the_reshape() {
+        // At B > 1 the (B, F, nfft) -> (B*F, nfft, 1) frame regrouping is
+        // not expressible as strides (the B and F axes are not dense with
+        // respect to each other), so exactly one reshape-attributed copy
+        // remains — and none attributed to the movement ops themselves.
+        let g = lower::stft(2, 600, 64, 32).unwrap();
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.materialize_count(), 1);
+        assert_eq!(plan.movement_materialize_count(), 0);
+        assert_eq!(plan.materialize_origins(), vec!["reshape"]);
+        check_against_interpreter(g, &[Tensor::randn(&[2, 600], 77)]);
+    }
+
+    #[test]
+    fn const_weights_are_packed_for_layer_kernels() {
+        // dft lowers to two pointwise convs with baked DFM constants: both
+        // must get pre-packed panels.  summation's ones-kernel FC too.
+        let plan = ExecPlan::compile(&lower::dft(2, 16)).unwrap();
+        assert_eq!(plan.packed_kernel_count(), 2);
+        let plan = ExecPlan::compile(&lower::summation(64)).unwrap();
+        assert_eq!(plan.packed_kernel_count(), 1);
+        // matmul's weight is a runtime input: nothing to pack
+        let plan = ExecPlan::compile(&lower::matmul(4, 5, 6)).unwrap();
+        assert_eq!(plan.packed_kernel_count(), 0);
+    }
+
+    #[test]
+    fn shared_constant_under_two_shapes_packs_separately() {
+        // one constant consumed as (6, 4) by FC1 and, through a reshape,
+        // as (4, 6) by FC2: each view needs its own panel layout
+        let mut g = Graph::new();
+        let x1 = g.input(&[2, 6]);
+        let x2 = g.input(&[3, 4]);
+        let k = g.constant(Tensor::randn(&[6, 4], 90));
+        let k2 = g.push(NodeOp::Reshape(vec![4, 6]), &[k]);
+        let b1 = g.constant(Tensor::randn(&[4], 91));
+        let b2 = g.constant(Tensor::randn(&[6], 92));
+        let o1 = g.push(NodeOp::FullyConnected, &[x1, k, b1]);
+        let o2 = g.push(NodeOp::FullyConnected, &[x2, k2, b2]);
+        g.set_outputs(&[o1, o2]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.packed_kernel_count(), 2);
+        let inputs = vec![Tensor::randn(&[2, 6], 93), Tensor::randn(&[3, 4], 94)];
+        let want = Interpreter::new(g).unwrap().run(&inputs).unwrap();
+        let got = plan.run(&inputs).unwrap();
+        assert_eq!(got[0], want[0]);
+        assert_eq!(got[1], want[1]);
+    }
+
+    #[test]
+    fn packed_fc_matches_interpreter_bitwise() {
+        // cout = 13 exercises the partial tail panel
+        let mut g = Graph::new();
+        let x = g.input(&[4, 9]);
+        let k = g.constant(Tensor::randn(&[9, 13], 60));
+        let b = g.constant(Tensor::randn(&[13], 61));
+        let o = g.push(NodeOp::FullyConnected, &[x, k, b]);
+        g.set_outputs(&[o]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.packed_kernel_count(), 1);
+        let inputs = vec![Tensor::randn(&[4, 9], 62)];
+        let want = Interpreter::new(g).unwrap().run(&inputs).unwrap();
+        let got = plan.run(&inputs).unwrap();
+        assert_eq!(got[0], want[0], "packed FC must stay bit-identical");
+    }
+
+    #[test]
+    fn terminal_views_gather_without_steps() {
+        // outputs that ARE views: no kernel runs at all for pure movement
+        let mut g = Graph::new();
+        let x = g.input(&[4, 6]);
+        let t = g.push(NodeOp::Transpose2, &[x]);
+        let s = g.push(
+            NodeOp::StridedSlice {
+                axis: 0,
+                stride: 2,
+                count: 2,
+            },
+            &[x],
+        );
+        g.set_outputs(&[t, s, x]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.step_count(), 0);
+        let inputs = vec![Tensor::randn(&[4, 6], 70)];
+        let want = Interpreter::new(g).unwrap().run(&inputs).unwrap();
+        let got = plan.run(&inputs).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn diamond_view_and_materializing_consumer() {
+        // one producer feeds both a terminal view and a consuming kernel:
+        // the backing slot must stay pinned for the final gather
+        let mut g = Graph::new();
+        let a = g.input(&[3, 3]);
+        let b = g.input(&[3, 3]);
+        let s = g.push(NodeOp::Add, &[a, b]);
+        let t = g.push(NodeOp::Transpose2, &[s]); // view of s
+        let u = g.push(NodeOp::Sub, &[s, a]); // reads s directly
+        g.set_outputs(&[t, u]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        plan.validate_liveness().unwrap();
+        let inputs = vec![Tensor::randn(&[3, 3], 71), Tensor::randn(&[3, 3], 72)];
+        let want = Interpreter::new(g).unwrap().run(&inputs).unwrap();
+        let got = plan.run(&inputs).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn transposed_const_weight_materializes_once() {
+        // weights must be dense: a transposed constant kernel forces one
+        // movement-attributed copy, shared even if consumed twice
+        let mut g = Graph::new();
+        let x = g.input(&[2, 3]);
+        let kt = g.constant(Tensor::randn(&[4, 3], 80));
+        let k = g.push(NodeOp::Transpose2, &[kt]); // (3, 4) strided view
+        let b = g.constant(Tensor::zeros(&[4]));
+        let o1 = g.push(NodeOp::FullyConnected, &[x, k, b]);
+        let o2 = g.push(NodeOp::FullyConnected, &[x, k, b]);
+        g.set_outputs(&[o1, o2]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.materialize_count(), 1, "copy shared across consumers");
+        assert_eq!(plan.movement_materialize_count(), 1);
+        assert_eq!(plan.materialize_origins(), vec!["transpose2"]);
+        check_against_interpreter(
+            g,
+            &[Tensor::randn(&[2, 3], 81)],
+        );
     }
 
     #[test]
@@ -944,5 +1532,42 @@ mod tests {
                 assert!(a.allclose(b, 1e-5, 1e-6), "seed {seed}");
             }
         }
+    }
+
+    #[test]
+    fn view_reshape_algebra() {
+        // contiguous reshape is free in both directions
+        let v = View::contiguous(&[4, 6]);
+        assert!(v.reshape(&[24]).is_some());
+        assert!(v.reshape(&[2, 12]).is_some());
+        // transposed views cannot merge across the transposed axes
+        let t = v.transpose2();
+        assert!(t.reshape(&[24]).is_none());
+        assert!(t.reshape(&[3, 8]).is_none());
+        // ...but size-1 insertion is always free (tail strides of size-1
+        // axes are meaningless; only the first two matter)
+        let t1 = t.reshape(&[6, 4, 1]).unwrap();
+        assert_eq!(&t1.strides[..2], &[1, 6]);
+        // strided slice blocks merging through the sliced axis
+        let s = View::contiguous(&[2, 8, 3]).stride_axis(1, 3, 3);
+        assert!(s.reshape(&[2, 9]).is_none());
+        assert!(s.reshape(&[2, 3, 3, 1]).is_some());
+        // the PFB window: split then permute stays affine
+        let p = View::contiguous(&[2, 64])
+            .reshape(&[2, 8, 8])
+            .unwrap()
+            .permute3([0, 2, 1]);
+        assert_eq!(p.strides, vec![64, 1, 8]);
+        assert!(!p.is_contiguous());
+        // the STFT B=1 framing chain stays affine end to end
+        let (l, nfft, hop) = (600usize, 64usize, 32usize);
+        let w = l - nfft + 1;
+        let frames = (l - nfft) / hop + 1;
+        let f = View::contiguous(&[1, nfft, w])
+            .stride_axis(2, hop, frames)
+            .permute3([0, 2, 1])
+            .reshape(&[frames, nfft, 1])
+            .unwrap();
+        assert_eq!(&f.strides[..2], &[hop, w]);
     }
 }

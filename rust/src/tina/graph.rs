@@ -56,6 +56,16 @@ impl NodeOp {
         )
     }
 
+    /// True for the pure data-movement ops the planned executor must compile
+    /// to stride rewrites, never copies (`Reshape` is movement too, but may
+    /// legitimately force a copy when a strided view cannot be re-grouped).
+    pub fn is_strided_movement(&self) -> bool {
+        matches!(
+            self,
+            NodeOp::Transpose2 | NodeOp::Permute3(_) | NodeOp::StridedSlice { .. }
+        )
+    }
+
     /// Human name used in plan dumps and tests.
     pub fn name(&self) -> &'static str {
         match self {

@@ -9,7 +9,7 @@ use tina::dsp::{self, PfbConfig};
 use tina::prop_assert;
 use tina::tensor::{ComplexTensor, Tensor};
 use tina::testing::prop::{run, Gen};
-use tina::tina::{lower, ExecPlan, Graph, Interpreter, Planned};
+use tina::tina::{lower, ExecPlan, Graph, Interpreter, NodeOp, Planned};
 use tina::util::json::{self, Json};
 use tina::util::threadpool::OneShot;
 
@@ -318,6 +318,84 @@ fn prop_planned_reuse_is_safe_across_repeat_runs() {
             let got = planned.run(&inputs).map_err(|e| e.to_string())?;
             for (a, b) in got.iter().zip(&want) {
                 prop_assert!(a == b, "stale arena data leaked into a result");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_terminal_views_match_interpreter_bitwise() {
+    // Graphs whose outputs ARE views (transpose / permute / slice as the
+    // terminal node): the planned engine keeps them metadata-only and
+    // gathers them at output time, so results must stay bit-identical and
+    // the plan must contain no Materialize step at all.
+    run("terminal view outputs == interpreter (bitwise)", 40, |g: &mut Gen| {
+        let h = g.usize_in(1, 10);
+        let w = g.usize_in(1, 10);
+        let co = g.usize_in(1, 12);
+        let mut gr = Graph::new();
+        let x = gr.input(&[h, w]);
+        let k = gr.constant(Tensor::randn(&[w, co], g.u64()));
+        let b = gr.constant(Tensor::randn(&[co], g.u64()));
+        let y = gr.push(NodeOp::FullyConnected, &[x, k, b]); // (h, co)
+        let out = match g.usize_in(0, 2) {
+            0 => gr.push(NodeOp::Transpose2, &[y]),
+            1 => {
+                let r = gr.push(NodeOp::Reshape(vec![h, co, 1]), &[y]);
+                gr.push(NodeOp::Permute3([1, 0, 2]), &[r])
+            }
+            _ => {
+                let stride = g.usize_in(1, co);
+                let count = (co - 1) / stride + 1;
+                gr.push(NodeOp::StridedSlice { axis: 1, stride, count }, &[y])
+            }
+        };
+        gr.set_outputs(&[out, y]);
+        let inputs = vec![Tensor::randn(&[h, w], g.u64())];
+        let interp = Interpreter::new(gr.clone()).unwrap();
+        let plan = ExecPlan::compile(&gr).map_err(|e| e.to_string())?;
+        plan.validate_liveness().map_err(|e| e.to_string())?;
+        prop_assert!(
+            plan.materialize_count() == 0,
+            "terminal views must stay metadata-only (h={h} w={w} co={co})"
+        );
+        let want = interp.run(&inputs).map_err(|e| e.to_string())?;
+        let got = plan.run(&inputs).map_err(|e| e.to_string())?;
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            prop_assert!(a.shape() == b.shape(), "output {i} shape");
+            prop_assert!(a == b, "output {i} diverged");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_diamond_views_share_backing_safely() {
+    // One producer feeds both a strided view (terminal output) and a
+    // materializing consumer: the liveness pass must keep the backing slot
+    // alive until the final output gather, across arena reuse.
+    run("diamond: view + materializing consumer", 25, |g: &mut Gen| {
+        let n = g.usize_in(1, 12);
+        let mut gr = Graph::new();
+        let a = gr.input(&[n, n]);
+        let b = gr.input(&[n, n]);
+        let s = gr.push(NodeOp::Add, &[a, b]);
+        let t = gr.push(NodeOp::Transpose2, &[s]); // strided view of s
+        let u = gr.push(NodeOp::Sub, &[s, a]); // reads s's buffer directly
+        gr.set_outputs(&[t, u]);
+        let interp = Interpreter::new(gr.clone()).unwrap();
+        let planned = Planned::new(&gr).map_err(|e| e.to_string())?;
+        planned.plan().validate_liveness().map_err(|e| e.to_string())?;
+        for _ in 0..3 {
+            let inputs = vec![
+                Tensor::randn(&[n, n], g.u64()),
+                Tensor::randn(&[n, n], g.u64()),
+            ];
+            let want = interp.run(&inputs).map_err(|e| e.to_string())?;
+            let got = planned.run(&inputs).map_err(|e| e.to_string())?;
+            for (a, b) in got.iter().zip(&want) {
+                prop_assert!(a == b, "view read a recycled backing slot (n={n})");
             }
         }
         Ok(())

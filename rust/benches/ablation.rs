@@ -11,10 +11,13 @@
 //!  6. naive interpreter vs planned executor on the fallback path — what
 //!     plan caching + zero-copy strided views + weight pre-packing +
 //!     register tiling + arena reuse + threading buy when no artifact
-//!     matches.
+//!     matches;
+//!  7. solo vs batched fallback serving — what the shape-bucketed batcher
+//!     (coalesced planned execution at bucket batch sizes) buys over
+//!     per-request execution, across arrival burst sizes.
 //!
-//! Ablation 6 is the only one that needs no artifacts, so it runs first;
-//! the rest print in numeric order (or skip with a note).
+//! Ablations 6 and 7 need no artifacts, so they run first; the rest print
+//! in numeric order (or skip with a note).
 //!
 //! Besides the human-readable tables, every ablation that ran contributes
 //! to `BENCH_exec.json` at the repo root — median ns/iter per case and a
@@ -45,6 +48,7 @@ fn geomean(xs: &[f64]) -> f64 {
 fn main() {
     let mut report: Vec<(&str, Json)> = Vec::new();
     report.push(("ablation6_interp_vs_planned", interp_vs_planned()));
+    report.push(("ablation7_batched_fallback", batched_fallback_ablation()));
     if let Some(j) = batching_ablation() {
         report.push(("ablation1_batching", j));
     }
@@ -161,6 +165,144 @@ fn interp_vs_planned() -> Json {
             Json::Obj(case_json.into_iter().collect()),
         ),
     ])
+}
+
+/// 7. solo vs batched fallback serving: B=1 FIR requests with no matching
+/// artifact, arriving in bursts, served either per request (batching off)
+/// or coalesced by the shape-bucketed batcher into one planned execution
+/// per bucket (batching on).  Pure rust — needs no artifacts.
+///
+/// Arrival pattern: `total` requests submitted open-loop in bursts of k
+/// (all bursts issued before any reply is awaited), so the batcher sees a
+/// sustained queue the way a loaded server would.  A final "mixed" case
+/// interleaves burst sizes 1/2/4/8.
+fn batched_fallback_ablation() -> Json {
+    use std::path::PathBuf;
+    use tina::runtime::Registry;
+
+    let l = 4096usize;
+    let total = 64usize;
+    let make = |batching: bool| {
+        let registry = Registry::from_manifest_text(
+            PathBuf::from("/nonexistent"),
+            r#"{"version": 1, "entries": []}"#,
+        )
+        .expect("empty manifest");
+        Arc::new(
+            Coordinator::new(
+                registry,
+                CoordinatorConfig {
+                    batching,
+                    ..Default::default()
+                },
+            )
+            .expect("coordinator"),
+        )
+    };
+    // pass count honors TINA_BENCH_PROFILE like the other ablations
+    // (quick=5 iters -> 5 passes; default/paper clamp at 9): the headline
+    // speedups are CI-gated, so one noisy pass must not decide them
+    let cfg = tina::benchkit::BenchConfig::from_env();
+    let passes = cfg.iters.clamp(3, 9);
+    // one pass: submit `total` requests in the burst pattern, wait for
+    // every reply, return req/s
+    let drive = |coord: &Arc<Coordinator>, bursts: &[usize]| -> f64 {
+        let mut slots = Vec::with_capacity(total);
+        let t0 = std::time::Instant::now();
+        let mut issued = 0usize;
+        'outer: loop {
+            for &k in bursts {
+                for _ in 0..k {
+                    if issued == total {
+                        break 'outer;
+                    }
+                    let x = Tensor::randn(&[1, l], issued as u64);
+                    slots.push(coord.submit(OpRequest::new(OpKind::Fir, vec![x])));
+                    issued += 1;
+                }
+            }
+        }
+        for s in slots {
+            s.wait().expect("fallback request");
+        }
+        total as f64 / t0.elapsed().as_secs_f64()
+    };
+    // median req/s over `passes` driven passes (after one warmup pass)
+    let measure = |coord: &Arc<Coordinator>, bursts: &[usize]| -> f64 {
+        let _ = drive(coord, bursts);
+        let mut rates: Vec<f64> = (0..passes).map(|_| drive(coord, bursts)).collect();
+        rates.sort_by(f64::total_cmp);
+        rates[rates.len() / 2]
+    };
+
+    let mut t = Table::new(
+        "ablation 7: solo vs shape-bucketed batched fallback (64 x B=1 FIR L=4096)",
+        &["arrival bursts", "solo req/s", "batched req/s", "batched/solo"],
+    );
+    let patterns: Vec<(String, Vec<usize>)> = vec![
+        ("burst1".into(), vec![1]),
+        ("burst2".into(), vec![2]),
+        ("burst4".into(), vec![4]),
+        ("burst8".into(), vec![8]),
+        ("mixed".into(), vec![1, 8, 4, 2]),
+    ];
+    let mut top: Vec<(&str, Json)> = Vec::new();
+    let mut cases: Vec<(String, Json)> = Vec::new();
+    let mut ratios: Vec<f64> = Vec::new();
+    let mut ratio_b4 = 0.0f64;
+    let mut ratio_b8 = 0.0f64;
+    for (label, bursts) in &patterns {
+        let solo_coord = make(false);
+        let batched_coord = make(true);
+        // warm both plan caches (bucket plans for every power-of-two size
+        // plus the solo B=1 plan) so compiles stay out of the timed pass
+        for b in [1usize, 2, 4, 8] {
+            let _ = batched_coord
+                .router()
+                .planned_for_shapes(OpKind::Fir, &[vec![b, l]]);
+        }
+        let solo = measure(&solo_coord, bursts);
+        let batched = measure(&batched_coord, bursts);
+        let ratio = batched / solo.max(1e-9);
+        ratios.push(ratio.max(1e-9));
+        if label.as_str() == "burst4" {
+            ratio_b4 = ratio;
+        }
+        if label.as_str() == "burst8" {
+            ratio_b8 = ratio;
+        }
+        let m = batched_coord.metrics();
+        cases.push((
+            label.clone(),
+            Json::obj(vec![
+                ("solo_req_s", Json::num(solo)),
+                ("batched_req_s", Json::num(batched)),
+                ("batched_vs_solo", Json::num(ratio)),
+                ("batch_fill_ratio", Json::num(m.batch_fill_ratio())),
+            ]),
+        ));
+        t.row(vec![
+            label.clone(),
+            format!("{solo:.0}"),
+            format!("{batched:.0}"),
+            format!("{ratio:.2}x"),
+        ]);
+        solo_coord.shutdown();
+        batched_coord.shutdown();
+    }
+    let g = geomean(&ratios);
+    t.row(vec![
+        "geomean".into(),
+        String::new(),
+        String::new(),
+        format!("{g:.2}x"),
+    ]);
+    println!("{}", t.render());
+    top.push(("geomean_batched_vs_solo_speedup", Json::num(g)));
+    top.push(("burst4_batched_vs_solo_speedup", Json::num(ratio_b4)));
+    top.push(("burst8_batched_vs_solo_speedup", Json::num(ratio_b8)));
+    top.push(("cases", Json::Obj(cases.into_iter().collect())));
+    Json::obj(top)
 }
 
 /// 5. paper protocol (device-resident inputs) vs full host round-trip —

@@ -1,0 +1,193 @@
+#!/usr/bin/env python3
+"""Perf-trajectory regression gate.
+
+Diffs a fresh ``BENCH_exec.json`` (written by ``cargo bench --bench
+ablation``) against the latest committed ``BENCH_pr<N>.json`` snapshot at
+the repo root and exits non-zero when any ablation's headline metric
+regressed by more than the threshold (default 25%).
+
+Comparison rules (per ablation object, top-level numeric fields only —
+the per-case breakdowns under ``"cases"`` are informational):
+
+* ``_speedup`` / ``_benefit`` fields -> higher is better, GATED: these
+  are same-machine ratios (e.g. interp-vs-planned, batched-vs-solo), so
+  they are robust to which runner the job landed on.
+* ``_ns`` (lower is better), ``_req_s`` (higher is better) and
+  ``fill_ratio`` (higher is better) -> WARN-only by default: absolute
+  nanoseconds and requests/second are not comparable across the
+  heterogeneous shared runners CI lands on, and fill ratio tracks
+  arrival-pattern luck.  ``--gate-absolute`` turns their regressions
+  into failures too (for pinned hardware).
+* anything else -> ignored
+
+Ablations present in only one of the two files are skipped with a note
+(artifact-dependent ablations only run when artifacts exist).  When
+auto-selecting the baseline, the highest-numbered *measured* snapshot
+wins; ``{"pending": true}`` placeholders are used only if nothing
+measured exists, and then pass with a warning (CI's snapshot-commit
+step replaces them).
+
+Usage:
+    bench_compare.py NEW_JSON [--baseline OLD_JSON] [--threshold 0.25]
+                     [--exclude BENCH_prN.json] [--gate-absolute]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+
+LOWER_BETTER_SUFFIXES = ("_ns",)
+HIGHER_BETTER_SUFFIXES = ("_req_s", "_speedup", "_benefit", "fill_ratio")
+# only same-machine ratio metrics hard-fail by default; absolute
+# per-runner numbers (_ns, _req_s) and workload-dependent fill_ratio
+# merely warn unless --gate-absolute
+GATED_SUFFIXES = ("_speedup", "_benefit")
+
+
+def latest_snapshot(root: pathlib.Path, exclude: str | None) -> pathlib.Path | None:
+    """The committed BENCH_pr<N>.json with the highest N, if any.
+
+    ``exclude`` names a snapshot to skip — CI passes the *current* PR's
+    own file so the gate always anchors to a snapshot that predates the
+    PR, instead of re-baselining against numbers the PR itself committed
+    (which would let sub-threshold regressions compound push over push).
+    """
+    candidates: list[tuple[int, pathlib.Path]] = []
+    for p in root.glob("BENCH_pr*.json"):
+        if exclude and p.name == exclude:
+            continue
+        m = re.fullmatch(r"BENCH_pr(\d+)\.json", p.name)
+        if m:
+            candidates.append((int(m.group(1)), p))
+    candidates.sort(reverse=True)
+
+    def is_pending(p: pathlib.Path) -> bool:
+        try:
+            return bool(json.loads(p.read_text()).get("pending"))
+        except (json.JSONDecodeError, OSError):
+            return False
+
+    # the highest-numbered measured snapshot beats any pending placeholder
+    # (a stale placeholder with a high N must not disarm the gate forever)
+    for _, p in candidates:
+        if not is_pending(p):
+            return p
+    return candidates[0][1] if candidates else None
+
+
+def direction(field: str) -> str | None:
+    if field.endswith(LOWER_BETTER_SUFFIXES):
+        return "lower"
+    if field.endswith(HIGHER_BETTER_SUFFIXES):
+        return "higher"
+    return None
+
+
+def compare(old: dict, new: dict, threshold: float, gate_absolute: bool) -> list[str]:
+    regressions: list[str] = []
+    for ablation, old_metrics in old.items():
+        if not isinstance(old_metrics, dict):
+            continue
+        new_metrics = new.get(ablation)
+        if not isinstance(new_metrics, dict):
+            print(f"note: ablation '{ablation}' absent from fresh run; skipping")
+            continue
+        for field, old_v in old_metrics.items():
+            d = direction(field)
+            if d is None or not isinstance(old_v, (int, float)):
+                continue
+            new_v = new_metrics.get(field)
+            if not isinstance(new_v, (int, float)):
+                print(f"note: {ablation}.{field} absent from fresh run; skipping")
+                continue
+            if old_v <= 0:
+                continue
+            gated = gate_absolute or field.endswith(GATED_SUFFIXES)
+            if d == "lower":
+                ratio = new_v / old_v
+                regressed = ratio > 1.0 + threshold
+                verdict = f"{old_v:.4g} -> {new_v:.4g} ns ({ratio:.2f}x)"
+            else:
+                ratio = old_v / new_v if new_v > 0 else float("inf")
+                regressed = ratio > 1.0 + threshold
+                verdict = f"{old_v:.4g} -> {new_v:.4g} ({ratio:.2f}x worse)"
+            if regressed and gated:
+                status = "REGRESSION"
+                regressions.append(f"{ablation}.{field}: {verdict}")
+            elif regressed:
+                status = "warn"
+            else:
+                status = "ok"
+            print(f"{status:>10}  {ablation}.{field}: {verdict}")
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new", type=pathlib.Path, help="fresh BENCH_exec.json")
+    ap.add_argument(
+        "--baseline",
+        type=pathlib.Path,
+        default=None,
+        help="snapshot to diff against (default: latest BENCH_pr<N>.json "
+        "next to the fresh file)",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="allowed fractional regression per metric (default 0.25)",
+    )
+    ap.add_argument(
+        "--exclude",
+        default=None,
+        help="snapshot filename to skip when auto-selecting the baseline "
+        "(CI passes the current PR's own BENCH_pr<N>.json so the gate "
+        "never baselines against numbers this PR committed)",
+    )
+    ap.add_argument(
+        "--gate-absolute",
+        action="store_true",
+        help="hard-fail on absolute _ns regressions too (only meaningful "
+        "on pinned hardware; shared CI runners should leave this off)",
+    )
+    args = ap.parse_args()
+
+    if not args.new.exists():
+        print(f"error: fresh benchmark file '{args.new}' not found", file=sys.stderr)
+        return 2
+    baseline = args.baseline or latest_snapshot(args.new.resolve().parent, args.exclude)
+    if baseline is None:
+        print("no committed BENCH_pr<N>.json snapshot yet; nothing to gate against")
+        return 0
+    print(f"baseline: {baseline}")
+
+    old = json.loads(baseline.read_text())
+    new = json.loads(args.new.read_text())
+    if old.get("pending"):
+        print(
+            "baseline snapshot is marked pending (no measured numbers "
+            "committed yet); passing — CI's snapshot step will replace it"
+        )
+        return 0
+
+    regressions = compare(old, new, args.threshold, args.gate_absolute)
+    if regressions:
+        print(
+            f"\nFAIL: {len(regressions)} metric(s) regressed more than "
+            f"{args.threshold:.0%}:",
+            file=sys.stderr,
+        )
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print(f"\nOK: no metric regressed more than {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

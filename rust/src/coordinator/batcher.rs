@@ -1,9 +1,32 @@
 //! Dynamic batcher: coalesces same-signature single-signal requests into
 //! one padded batch execution (the TINA analog of vLLM-style request
-//! batching — HLO artifacts have a fixed leading batch dimension, so the
-//! batcher fills as many rows as arrive within the window and zero-pads
-//! the rest).
+//! batching).
+//!
+//! Two kinds of traffic ride it, distinguished by [`BatchKey`]:
+//!
+//! * **Artifact batches** — HLO artifacts have a *fixed* leading batch
+//!   dimension, so the batcher fills as many rows as arrive within the
+//!   window and zero-pads the rest up to the artifact batch.
+//! * **Fallback batches (shape-bucketed)** — the planned executor can
+//!   compile a plan for *any* batch size, so fallback requests are grouped
+//!   per `(op, per-item signal length)` and a formed batch pads up to the
+//!   next power-of-two bucket `B ∈ {1, 2, 4, 8, ...}` (capped at
+//!   [`BatcherConfig::max_bucket`]).  Bucketing keeps the number of
+//!   compiled plans per (op, shape) bounded — the LeFlow-style fixed-shape
+//!   compilation constraint — while amortizing plan lookup and kernel
+//!   launch across co-arriving requests.
+//!
+//! Padding/masking rule: padding rows are zero-filled at batch formation
+//! and are *masked out* at scatter time — per-request outputs are gathered
+//! row by row from the plan's terminal views, and rows beyond the real
+//! request count are never gathered, so padding can never leak into a
+//! reply.  Requests with different per-item shapes land in different
+//! buckets by construction (the shape is part of the key), which replaces
+//! the old mixed-length rejection with bucket routing; the rejection path
+//! survives only for artifact keys, whose row length is fixed by the
+//! artifact ABI.
 
+use super::request::OpKind;
 use crate::tensor::Tensor;
 use crate::util::threadpool::OneShot;
 use anyhow::Result;
@@ -11,12 +34,49 @@ use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Key grouping poolable requests: same artifact -> same ABI.
+/// Key grouping poolable requests.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
-pub struct BatchKey {
-    pub artifact: String,
-    /// Rows the artifact expects (its leading batch dim).
-    pub batch: usize,
+pub enum BatchKey {
+    /// Fixed-shape PJRT artifact: same artifact -> same ABI; the formed
+    /// batch always pads to the artifact's leading batch dim.
+    Artifact {
+        name: String,
+        /// Rows the artifact expects (its leading batch dim).
+        batch: usize,
+    },
+    /// Shape-bucketed fallback traffic: compatible requests grouped per
+    /// (op, per-item signal length); the formed batch pads to the next
+    /// power-of-two bucket (capped at [`BatcherConfig::max_bucket`]).
+    Fallback { op: OpKind, len: usize },
+}
+
+impl BatchKey {
+    /// Row count at which a batch is full and flushes immediately.
+    fn capacity(&self, config: &BatcherConfig) -> usize {
+        match self {
+            BatchKey::Artifact { batch, .. } => *batch,
+            BatchKey::Fallback { .. } => config.max_bucket.max(1),
+        }
+    }
+
+    /// Leading dim of the formed batch holding `rows` real rows.
+    fn pad_rows(&self, rows: usize, config: &BatcherConfig) -> usize {
+        match self {
+            BatchKey::Artifact { batch, .. } => *batch,
+            BatchKey::Fallback { .. } => rows
+                .next_power_of_two()
+                .min(config.max_bucket.max(1))
+                .max(rows),
+        }
+    }
+
+    /// Expected per-row element count, when the key itself fixes it.
+    fn expected_len(&self) -> Option<usize> {
+        match self {
+            BatchKey::Artifact { .. } => None,
+            BatchKey::Fallback { len, .. } => Some(*len),
+        }
+    }
 }
 
 /// One queued request row.
@@ -31,7 +91,8 @@ pub struct Pending {
 /// A formed batch ready for execution.
 pub struct FormedBatch {
     pub key: BatchKey,
-    /// Stacked (batch, L) input, zero-padded to the artifact batch.
+    /// Stacked (batch, L) input, zero-padded to the artifact batch
+    /// (artifact keys) or to the next power-of-two bucket (fallback keys).
     pub input: Tensor,
     /// How many leading rows are real requests.
     pub rows: Vec<Pending>,
@@ -42,12 +103,19 @@ pub struct FormedBatch {
 pub struct BatcherConfig {
     /// Max time a request may wait for co-riders before the batch flushes.
     pub max_wait: Duration,
+    /// Largest fallback bucket: shape-bucketed batches flush as soon as
+    /// this many rows are queued, and never pad beyond it.  Buckets are
+    /// the powers of two up to this cap; [`Batcher::new`] rounds a
+    /// non-power-of-two value *down* so the compiled-plan fan-out stays
+    /// exactly {1, 2, 4, ...}.
+    pub max_bucket: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
         Self {
             max_wait: Duration::from_millis(2),
+            max_bucket: 8,
         }
     }
 }
@@ -65,7 +133,12 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    pub fn new(config: BatcherConfig) -> Batcher {
+    pub fn new(mut config: BatcherConfig) -> Batcher {
+        // normalize: buckets are powers of two, so a non-power-of-two cap
+        // rounds down (6 -> 4) instead of silently minting bucket sizes
+        // the plan-cache sizing advice doesn't account for
+        let mb = config.max_bucket.max(1);
+        config.max_bucket = 1usize << (usize::BITS - 1 - mb.leading_zeros());
         Batcher {
             shared: Arc::new(Shared {
                 queues: Mutex::new(HashMap::new()),
@@ -83,25 +156,31 @@ impl Batcher {
     /// the batch it rides executes.
     ///
     /// Rows sharing a [`BatchKey`] must agree on signal length — the formed
-    /// batch is one dense (batch, L) stack.  A mismatched row is rejected
-    /// here by completing its reply with an error, instead of poisoning the
-    /// drain loop with a panic when the batch is stacked.
+    /// batch is one dense (batch, L) stack.  Fallback keys carry the length
+    /// in the key, so differently-shaped requests route to different
+    /// buckets by construction; for artifact keys a mismatched row is
+    /// rejected here by completing its reply with an error, instead of
+    /// poisoning the drain loop with a panic when the batch is stacked.
     pub fn enqueue(&self, key: BatchKey, input: Tensor, reply: OneShot<Result<Vec<Tensor>>>) {
         let mut q = self.shared.queues.lock().unwrap();
-        let rows = q.entry(key).or_default();
-        if let Some(first) = rows.first() {
-            if first.input.len() != input.len() {
+        // validate BEFORE creating the queue entry: a rejected row must
+        // not leave an empty Vec behind in the map (next_batch's cleanup
+        // only fires on formed batches)
+        let expect = key
+            .expected_len()
+            .or_else(|| q.get(&key).and_then(|rows| rows.first()).map(|p| p.input.len()));
+        if let Some(expect) = expect {
+            if expect != input.len() {
                 let msg = format!(
-                    "batch row length {} != queued rows' length {} for the same artifact",
-                    input.len(),
-                    first.input.len()
+                    "batch row length {} != expected row length {expect} for key {key:?}",
+                    input.len()
                 );
                 drop(q);
                 reply.set(Err(anyhow::anyhow!(msg)));
                 return;
             }
         }
-        rows.push(Pending {
+        q.entry(key).or_default().push(Pending {
             input,
             reply,
             enqueued: Instant::now(),
@@ -126,15 +205,16 @@ impl Batcher {
             // full batch available?
             let full = q
                 .iter()
-                .find(|(k, v)| v.len() >= k.batch)
+                .find(|(k, v)| v.len() >= k.capacity(&self.config))
                 .map(|(k, _)| k.clone());
             if let Some(key) = full {
+                let cap = key.capacity(&self.config);
                 let rows = q.get_mut(&key).unwrap();
-                let take: Vec<Pending> = rows.drain(..key.batch).collect();
+                let take: Vec<Pending> = rows.drain(..cap).collect();
                 if rows.is_empty() {
                     q.remove(&key);
                 }
-                return Some(Self::form(key, take));
+                return Some(self.form(key, take));
             }
             // expired batch?  (`now` is shared with the wake computation
             // below so a due expiry is always taken on this iteration, not
@@ -147,7 +227,7 @@ impl Batcher {
                 .map(|(k, _)| k.clone());
             if let Some(key) = expired {
                 let rows = q.remove(&key).unwrap();
-                return Some(Self::form(key, rows));
+                return Some(self.form(key, rows));
             }
             if now >= deadline {
                 return None;
@@ -181,15 +261,16 @@ impl Batcher {
         self.shared.queues.lock().unwrap().values().map(Vec::len).sum()
     }
 
-    fn form(key: BatchKey, rows: Vec<Pending>) -> FormedBatch {
-        debug_assert!(!rows.is_empty() && rows.len() <= key.batch);
+    fn form(&self, key: BatchKey, rows: Vec<Pending>) -> FormedBatch {
+        let pad = key.pad_rows(rows.len(), &self.config);
+        debug_assert!(!rows.is_empty() && rows.len() <= pad);
         let l = rows[0].input.len();
-        let mut data = vec![0.0f32; key.batch * l];
+        let mut data = vec![0.0f32; pad * l];
         for (i, p) in rows.iter().enumerate() {
             data[i * l..(i + 1) * l].copy_from_slice(p.input.data());
         }
         FormedBatch {
-            input: Tensor::new(&[key.batch, l], data).expect("batch stack"),
+            input: Tensor::new(&[pad, l], data).expect("batch stack"),
             key,
             rows,
         }
@@ -198,8 +279,8 @@ impl Batcher {
 
 /// Split a batched multi-output execution result back into per-row replies.
 ///
-/// Each output tensor has leading dim = key.batch; row i of every output
-/// goes to rows[i].  Padding rows are discarded.
+/// Each output tensor has a leading batch dim; row i of every output goes
+/// to rows[i].  Padding rows are discarded (masked out) here.
 pub fn scatter_results(batch: FormedBatch, result: Result<Vec<Tensor>>) {
     match result {
         Ok(outputs) => {
@@ -220,14 +301,50 @@ pub fn scatter_results(batch: FormedBatch, result: Result<Vec<Tensor>>) {
     }
 }
 
+/// Complete a fallback batch whose outputs were already scattered per row
+/// by the planned executor ([`crate::tina::Planned::run_rows`]): entry i
+/// holds request i's outputs, padding rows were never gathered at all.
+pub fn scatter_row_results(batch: FormedBatch, result: Result<Vec<Vec<Tensor>>>) {
+    match result {
+        Ok(per_row) if per_row.len() == batch.rows.len() => {
+            for (row, outs) in batch.rows.into_iter().zip(per_row) {
+                row.reply.set(Ok(outs));
+            }
+        }
+        Ok(per_row) => {
+            let msg = format!(
+                "batched fallback returned {} row results for {} requests",
+                per_row.len(),
+                batch.rows.len()
+            );
+            for row in batch.rows {
+                row.reply.set(Err(anyhow::anyhow!(msg.clone())));
+            }
+        }
+        Err(e) => {
+            let msg = format!("batched fallback execution failed: {e}");
+            for row in batch.rows {
+                row.reply.set(Err(anyhow::anyhow!(msg.clone())));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn key(b: usize) -> BatchKey {
-        BatchKey {
-            artifact: "fir_tina_f32_B8_L16".into(),
+        BatchKey::Artifact {
+            name: "fir_tina_f32_B8_L16".into(),
             batch: b,
+        }
+    }
+
+    fn fkey(len: usize) -> BatchKey {
+        BatchKey::Fallback {
+            op: OpKind::Fir,
+            len,
         }
     }
 
@@ -239,6 +356,7 @@ mod tests {
     fn full_batch_flushes_immediately() {
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_secs(10),
+            ..Default::default()
         });
         for i in 0..4 {
             b.enqueue(key(4), Tensor::filled(&[1, 16], i as f32), slot());
@@ -255,6 +373,7 @@ mod tests {
     fn partial_batch_flushes_after_max_wait_with_padding() {
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_millis(5),
+            ..Default::default()
         });
         b.enqueue(key(4), Tensor::filled(&[1, 16], 7.0), slot());
         let t0 = Instant::now();
@@ -278,6 +397,7 @@ mod tests {
     fn mismatched_row_length_rejected_at_enqueue() {
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_secs(10),
+            ..Default::default()
         });
         let ok = slot();
         b.enqueue(key(4), Tensor::filled(&[1, 16], 1.0), ok.clone());
@@ -299,6 +419,7 @@ mod tests {
         // idle deadline (previously this path busy-spun until expiry)
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_secs(60),
+            ..Default::default()
         });
         b.enqueue(key(4), Tensor::filled(&[1, 8], 1.0), slot());
         let t0 = Instant::now();
@@ -313,16 +434,146 @@ mod tests {
     fn distinct_keys_do_not_mix() {
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_millis(1),
+            ..Default::default()
         });
         b.enqueue(key(2), Tensor::filled(&[1, 16], 1.0), slot());
-        let mut other = key(2);
-        other.artifact = "other".into();
+        let other = BatchKey::Artifact {
+            name: "other".into(),
+            batch: 2,
+        };
         b.enqueue(other, Tensor::filled(&[1, 16], 2.0), slot());
         let b1 = b.next_batch(Duration::from_millis(100)).unwrap();
         let b2 = b.next_batch(Duration::from_millis(100)).unwrap();
         assert_eq!(b1.rows.len(), 1);
         assert_eq!(b2.rows.len(), 1);
-        assert_ne!(b1.key.artifact, b2.key.artifact);
+        assert_ne!(b1.key, b2.key);
+    }
+
+    #[test]
+    fn fallback_full_bucket_flushes_immediately() {
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_secs(10),
+            max_bucket: 8,
+        });
+        for i in 0..8 {
+            b.enqueue(fkey(16), Tensor::filled(&[1, 16], i as f32), slot());
+        }
+        let batch = b.next_batch(Duration::from_millis(50)).expect("batch");
+        assert_eq!(batch.rows.len(), 8);
+        assert_eq!(batch.input.shape(), &[8, 16], "full bucket, no padding");
+        assert_eq!(batch.input.at(&[5, 0]), 5.0);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn fallback_bucket_rounds_up_to_next_power_of_two() {
+        // 3 rows expire -> bucket 4 with one zero padding row
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_millis(2),
+            max_bucket: 8,
+        });
+        for i in 0..3 {
+            b.enqueue(fkey(16), Tensor::filled(&[1, 16], (i + 1) as f32), slot());
+        }
+        let batch = b.next_batch(Duration::from_secs(1)).expect("batch");
+        assert_eq!(batch.rows.len(), 3);
+        assert_eq!(batch.input.shape(), &[4, 16], "3 rows pad to bucket 4");
+        assert_eq!(batch.input.at(&[2, 0]), 3.0);
+        assert_eq!(batch.input.at(&[3, 0]), 0.0, "padding row must be zero");
+    }
+
+    #[test]
+    fn fallback_bucket_boundary_sizes_pad_exactly() {
+        // bucket-boundary row counts (1, 2, 4) need no padding at all
+        for rows in [1usize, 2, 4] {
+            let b = Batcher::new(BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                max_bucket: 8,
+            });
+            for i in 0..rows {
+                b.enqueue(fkey(8), Tensor::filled(&[1, 8], (i + 1) as f32), slot());
+            }
+            let batch = b.next_batch(Duration::from_secs(1)).expect("batch");
+            assert_eq!(batch.rows.len(), rows);
+            assert_eq!(
+                batch.input.shape(),
+                &[rows, 8],
+                "boundary size {rows} must not pad"
+            );
+        }
+    }
+
+    #[test]
+    fn fallback_deadline_expiry_flushes_partial_bucket() {
+        // a lone row far below the bucket cap still flushes at max_wait:
+        // the degenerate B=1 case of the bucketed path
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_millis(5),
+            max_bucket: 8,
+        });
+        b.enqueue(fkey(16), Tensor::filled(&[1, 16], 9.0), slot());
+        let t0 = Instant::now();
+        let batch = b.next_batch(Duration::from_secs(1)).expect("batch");
+        assert!(t0.elapsed() >= Duration::from_millis(4), "flushed too early");
+        assert_eq!(batch.rows.len(), 1);
+        assert_eq!(batch.input.shape(), &[1, 16], "single row -> bucket 1");
+    }
+
+    #[test]
+    fn fallback_wrong_length_rejected_without_leaking_entry() {
+        // fallback keys carry the expected length, so even the FIRST row
+        // is validated — and the reject path must not leave an empty
+        // queue entry behind
+        let b = Batcher::new(BatcherConfig::default());
+        let bad = slot();
+        b.enqueue(fkey(16), Tensor::filled(&[1, 8], 1.0), bad.clone());
+        assert!(bad.try_take().expect("immediate reply").is_err());
+        assert_eq!(b.queued(), 0, "rejected row must not be queued");
+        assert!(
+            b.next_batch(Duration::from_millis(5)).is_none(),
+            "no phantom batch from a rejected row"
+        );
+    }
+
+    #[test]
+    fn non_power_of_two_max_bucket_rounds_down() {
+        // max_bucket 6 normalizes to 4: full flush at 4 rows, remainder
+        // pads to its own power-of-two bucket
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_millis(1),
+            max_bucket: 6,
+        });
+        assert_eq!(b.config().max_bucket, 4);
+        for i in 0..6 {
+            b.enqueue(fkey(8), Tensor::filled(&[1, 8], (i + 1) as f32), slot());
+        }
+        let first = b.next_batch(Duration::from_secs(1)).expect("full bucket");
+        assert_eq!(first.rows.len(), 4);
+        assert_eq!(first.input.shape(), &[4, 8]);
+        let rest = b.next_batch(Duration::from_secs(1)).expect("remainder");
+        assert_eq!(rest.rows.len(), 2);
+        assert_eq!(rest.input.shape(), &[2, 8]);
+    }
+
+    #[test]
+    fn mixed_length_fallback_routes_to_distinct_buckets() {
+        // what PR 1 rejected as an error for artifact keys is ordinary
+        // bucket routing for fallback keys: the shape is part of the key
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_millis(1),
+            max_bucket: 8,
+        });
+        let r16 = slot();
+        let r32 = slot();
+        b.enqueue(fkey(16), Tensor::filled(&[1, 16], 1.0), r16.clone());
+        b.enqueue(fkey(32), Tensor::filled(&[1, 32], 2.0), r32.clone());
+        assert!(r16.try_take().is_none(), "no rejection for mixed lengths");
+        assert!(r32.try_take().is_none(), "no rejection for mixed lengths");
+        let b1 = b.next_batch(Duration::from_millis(100)).expect("bucket 1");
+        let b2 = b.next_batch(Duration::from_millis(100)).expect("bucket 2");
+        let mut lens = [b1.input.shape()[1], b2.input.shape()[1]];
+        lens.sort_unstable();
+        assert_eq!(lens, [16, 32], "each length gets its own bucket");
     }
 
     #[test]
@@ -374,6 +625,63 @@ mod tests {
         scatter_results(batch, Err(anyhow::anyhow!("boom")));
         for r in &replies {
             assert!(r.try_take().unwrap().is_err());
+        }
+    }
+
+    #[test]
+    fn scatter_rows_delivers_per_request_outputs() {
+        let replies: Vec<_> = (0..2).map(|_| slot()).collect();
+        let rows: Vec<Pending> = replies
+            .iter()
+            .map(|r| Pending {
+                input: Tensor::zeros(&[1, 4]),
+                reply: r.clone(),
+                enqueued: Instant::now(),
+            })
+            .collect();
+        let batch = FormedBatch {
+            key: fkey(4),
+            input: Tensor::zeros(&[2, 4]),
+            rows,
+        };
+        let per_row = vec![
+            vec![Tensor::filled(&[1, 3], 0.0)],
+            vec![Tensor::filled(&[1, 3], 1.0)],
+        ];
+        scatter_row_results(batch, Ok(per_row));
+        for (i, r) in replies.iter().enumerate() {
+            let got = r.try_take().unwrap().unwrap();
+            assert_eq!(got[0].shape(), &[1, 3]);
+            assert_eq!(got[0].data(), &[i as f32; 3]);
+        }
+    }
+
+    #[test]
+    fn scatter_rows_errors_on_arity_mismatch_and_failure() {
+        for bad in [true, false] {
+            let replies: Vec<_> = (0..2).map(|_| slot()).collect();
+            let rows: Vec<Pending> = replies
+                .iter()
+                .map(|r| Pending {
+                    input: Tensor::zeros(&[1, 4]),
+                    reply: r.clone(),
+                    enqueued: Instant::now(),
+                })
+                .collect();
+            let batch = FormedBatch {
+                key: fkey(4),
+                input: Tensor::zeros(&[2, 4]),
+                rows,
+            };
+            if bad {
+                // one row result for two requests: everyone must error
+                scatter_row_results(batch, Ok(vec![vec![Tensor::zeros(&[1, 3])]]));
+            } else {
+                scatter_row_results(batch, Err(anyhow::anyhow!("boom")));
+            }
+            for r in &replies {
+                assert!(r.try_take().unwrap().is_err());
+            }
         }
     }
 }

@@ -1,4 +1,6 @@
-//! Serving metrics: per-op counters and latency histograms.
+//! Serving metrics: per-op counters, latency histograms, batch fill
+//! accounting (artifact and shape-bucketed fallback batches), and
+//! per-bucket plan-cache statistics.
 
 use crate::util::histogram::Histogram;
 use std::collections::BTreeMap;
@@ -12,17 +14,30 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
+    /// Requests coalesced into artifact batches.
     pub batched_requests: AtomicU64,
+    /// Artifact batches executed through the engine.
     pub batches_executed: AtomicU64,
+    /// Zero rows padded onto artifact batches.
     pub padded_rows: AtomicU64,
+    /// Fallback requests coalesced into shape-bucketed batches and served
+    /// by one planned execution at the bucket's batch size.
+    pub batched_fallback_requests: AtomicU64,
+    /// Shape-bucketed fallback batches executed on the planned engine.
+    pub fallback_batches_executed: AtomicU64,
+    /// Zero rows padded onto fallback buckets (masked out at scatter).
+    pub fallback_padded_rows: AtomicU64,
     pub interp_fallbacks: AtomicU64,
     /// Fallback requests served by an already-compiled exec plan.
     pub plan_cache_hits: AtomicU64,
     /// Fallback requests that had to compile a new exec plan.
     pub plan_cache_misses: AtomicU64,
     /// Plans dropped from the router's LRU-bounded caches (shape-diverse
-    /// traffic overflowing `RouterConfig::plan_cache_cap`).
+    /// traffic overflowing `RouterConfig::plan_cache_cap`; every
+    /// (op, shape, B) bucket entry counts individually).
     pub plan_cache_evictions: AtomicU64,
+    /// Plan-cache (hits, misses) per fallback bucket size B.
+    plan_cache_buckets: Mutex<BTreeMap<usize, (u64, u64)>>,
     latency: Mutex<BTreeMap<String, Histogram>>,
 }
 
@@ -54,6 +69,16 @@ impl Metrics {
         self.padded_rows.fetch_add(padding as u64, Ordering::Relaxed);
     }
 
+    /// Record one shape-bucketed fallback batch: `coalesced` real rows
+    /// plus `padding` zero rows up to the bucket size.
+    pub fn record_fallback_batch(&self, coalesced: usize, padding: usize) {
+        self.fallback_batches_executed.fetch_add(1, Ordering::Relaxed);
+        self.batched_fallback_requests
+            .fetch_add(coalesced as u64, Ordering::Relaxed);
+        self.fallback_padded_rows
+            .fetch_add(padding as u64, Ordering::Relaxed);
+    }
+
     pub fn record_interp_fallback(&self) {
         self.interp_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
@@ -67,11 +92,49 @@ impl Metrics {
         }
     }
 
+    /// Record a plan-cache lookup for a bucketed batch plan: folds into
+    /// the global hit/miss counters *and* the per-bucket breakdown.
+    pub fn record_plan_cache_bucketed(&self, bucket: usize, hit: bool) {
+        self.record_plan_cache(hit);
+        let mut map = self.plan_cache_buckets.lock().unwrap();
+        let e = map.entry(bucket).or_insert((0, 0));
+        if hit {
+            e.0 += 1;
+        } else {
+            e.1 += 1;
+        }
+    }
+
+    /// Per-bucket plan-cache stats as (bucket, hits, misses), ascending.
+    pub fn plan_cache_bucket_stats(&self) -> Vec<(usize, u64, u64)> {
+        self.plan_cache_buckets
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&b, &(h, m))| (b, h, m))
+            .collect()
+    }
+
     /// Fold in plans evicted from the router's bounded caches.
     pub fn record_plan_cache_evictions(&self, n: u64) {
         if n > 0 {
             self.plan_cache_evictions.fetch_add(n, Ordering::Relaxed);
         }
+    }
+
+    /// Fraction of executed batch rows (artifact + fallback buckets) that
+    /// were real requests rather than padding.  1.0 when no batch has run
+    /// yet (an empty history carries no padding waste).
+    pub fn batch_fill_ratio(&self) -> f64 {
+        let real = self.batched_requests.load(Ordering::Relaxed)
+            + self.batched_fallback_requests.load(Ordering::Relaxed);
+        let total = real
+            + self.padded_rows.load(Ordering::Relaxed)
+            + self.fallback_padded_rows.load(Ordering::Relaxed);
+        if total == 0 {
+            return 1.0;
+        }
+        real as f64 / total as f64
     }
 
     /// Latency histogram snapshot for one op.
@@ -83,18 +146,27 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests={} completed={} failed={} batched={} batches={} padded_rows={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={}\n",
+            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={}\n",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.batched_requests.load(Ordering::Relaxed),
             self.batches_executed.load(Ordering::Relaxed),
             self.padded_rows.load(Ordering::Relaxed),
+            self.batched_fallback_requests.load(Ordering::Relaxed),
+            self.fallback_batches_executed.load(Ordering::Relaxed),
+            self.fallback_padded_rows.load(Ordering::Relaxed),
+            self.batch_fill_ratio(),
             self.interp_fallbacks.load(Ordering::Relaxed),
             self.plan_cache_hits.load(Ordering::Relaxed),
             self.plan_cache_misses.load(Ordering::Relaxed),
             self.plan_cache_evictions.load(Ordering::Relaxed),
         ));
+        for (bucket, hits, misses) in self.plan_cache_bucket_stats() {
+            out.push_str(&format!(
+                "  plan_cache bucket B={bucket}: hits={hits} misses={misses}\n"
+            ));
+        }
         for (op, h) in self.latency.lock().unwrap().iter() {
             out.push_str(&format!("  {op}: {}\n", h.summary()));
         }
@@ -129,6 +201,38 @@ mod tests {
         assert_eq!(m.padded_rows.load(Ordering::Relaxed), 3);
         let h = m.latency_of("fir").unwrap();
         assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn fallback_batches_and_fill_ratio() {
+        let m = Metrics::new();
+        assert_eq!(m.batch_fill_ratio(), 1.0, "no batches -> no waste");
+        // one full artifact batch (4+0), one fallback bucket (3 real + 1 pad)
+        m.record_batch(4, 0);
+        m.record_fallback_batch(3, 1);
+        assert_eq!(m.batched_fallback_requests.load(Ordering::Relaxed), 3);
+        assert_eq!(m.fallback_batches_executed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.fallback_padded_rows.load(Ordering::Relaxed), 1);
+        let fill = m.batch_fill_ratio();
+        assert!((fill - 7.0 / 8.0).abs() < 1e-12, "fill={fill}");
+    }
+
+    #[test]
+    fn per_bucket_plan_cache_stats() {
+        let m = Metrics::new();
+        m.record_plan_cache_bucketed(4, false);
+        m.record_plan_cache_bucketed(4, true);
+        m.record_plan_cache_bucketed(8, true);
+        assert_eq!(
+            m.plan_cache_bucket_stats(),
+            vec![(4, 1, 1), (8, 1, 0)],
+            "per-bucket hit/miss breakdown"
+        );
+        // bucketed lookups also feed the global counters
+        assert_eq!(m.plan_cache_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(m.plan_cache_misses.load(Ordering::Relaxed), 1);
+        let r = m.report();
+        assert!(r.contains("bucket B=4"), "report lists bucket stats: {r}");
     }
 
     #[test]

@@ -2,10 +2,30 @@
 //!
 //! The paper's contribution is the function->NN-layer mapping (L1/L2);
 //! per the architecture rules the rust layer turns it into a deployable
-//! runtime: request routing across compiled artifacts, dynamic batching
-//! along the artifacts' leading batch dimension, a worker pool with
-//! bounded-queue backpressure, composite pipelines (the PFB use case),
-//! metrics, and a TCP JSON-line server.
+//! runtime: request routing across compiled artifacts, dynamic batching,
+//! a worker pool with bounded-queue backpressure, composite pipelines
+//! (the PFB use case), metrics, and a TCP JSON-line server.
+//!
+//! # Batching model
+//!
+//! Two kinds of traffic coalesce in the [`Batcher`]:
+//!
+//! * **Artifact batches** pad along a compiled artifact's *fixed* leading
+//!   batch dimension (the PJRT ABI is frozen at compile time).
+//! * **Fallback batches** are *shape-bucketed*: batchable single-row
+//!   requests group per `(op, signal length)`, and a formed batch pads up
+//!   to the next power-of-two bucket `B ∈ {1, 2, 4, 8, ...}` (capped at
+//!   [`BatcherConfig::max_bucket`]).  The planned executor compiles one
+//!   plan per (op, shape, B) — cached and LRU-bounded per entry by
+//!   [`RouterConfig::plan_cache_cap`] — runs the bucket in one execution,
+//!   and scatters per-request outputs row by row from its terminal views.
+//!   Padding rows are zero-filled on the way in and never gathered on the
+//!   way out, so they cannot leak into replies; a lone request is just
+//!   the degenerate B=1 bucket of the same path.
+//!
+//! [`Metrics`] surfaces the model: `batched_fallback_requests`,
+//! `fallback_batches_executed`, `fallback_padded_rows`,
+//! `batch_fill_ratio()`, and per-bucket plan-cache hit/miss stats.
 
 pub mod batcher;
 pub mod metrics;

@@ -57,30 +57,57 @@ impl Pipeline {
             .then(Stage::new(OpKind::Dft))
     }
 
-    /// Execute the pipeline through a coordinator.
+    /// Execute the pipeline through a coordinator: the degenerate
+    /// single-item case of [`Pipeline::run_many`].
     pub fn run(&self, coord: &Coordinator, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let mut out = self.run_many(coord, vec![inputs])?;
+        Ok(out.pop().expect("one item in, one item out"))
+    }
+
+    /// Execute the pipeline for many independent items concurrently.
+    ///
+    /// All stage-i requests are submitted before any is awaited, so
+    /// co-arriving same-shape stages coalesce in the coordinator's
+    /// batchers — fallback stages in the shape-bucketed batcher, artifact
+    /// stages in the artifact batcher.  Outputs come back in item order;
+    /// the first failing item aborts the pipeline with its error.
+    pub fn run_many(
+        &self,
+        coord: &Coordinator,
+        items: Vec<Vec<Tensor>>,
+    ) -> Result<Vec<Vec<Tensor>>> {
         if self.stages.is_empty() {
             bail!("empty pipeline");
         }
-        let mut current = inputs;
+        let mut current = items;
         for (i, stage) in self.stages.iter().enumerate() {
             // glue: pfb_fir produces (B, P, Ns); a following dft consumes
             // (rows, P) — flatten spectra-major
-            if i > 0 && stage.op == OpKind::Dft && current.len() == 1 && current[0].rank() == 3
-            {
-                let t = &current[0];
-                let (b, p, ns) = (t.shape()[0], t.shape()[1], t.shape()[2]);
-                let rows = t.permute3([0, 2, 1])?.into_reshape(&[b * ns, p])?;
-                current = vec![rows];
+            if i > 0 && stage.op == OpKind::Dft {
+                for item in current.iter_mut() {
+                    if item.len() == 1 && item[0].rank() == 3 {
+                        let t = &item[0];
+                        let (b, p, ns) = (t.shape()[0], t.shape()[1], t.shape()[2]);
+                        let rows = t.permute3([0, 2, 1])?.into_reshape(&[b * ns, p])?;
+                        *item = vec![rows];
+                    }
+                }
             }
-            let req = OpRequest {
-                op: stage.op,
-                impl_pref: stage.impl_pref,
-                precision: stage.precision,
-                inputs: current,
-            };
-            let resp = coord.execute(req)?;
-            current = resp.outputs;
+            let slots: Vec<_> = current
+                .drain(..)
+                .map(|inputs| {
+                    coord.submit(OpRequest {
+                        op: stage.op,
+                        impl_pref: stage.impl_pref,
+                        precision: stage.precision,
+                        inputs,
+                    })
+                })
+                .collect();
+            current = slots
+                .into_iter()
+                .map(|s| s.wait().map(|resp| resp.outputs))
+                .collect::<Result<Vec<_>>>()?;
         }
         Ok(current)
     }
@@ -89,6 +116,48 @@ impl Pipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::service::CoordinatorConfig;
+    use crate::runtime::Registry;
+    use crate::tensor::Tensor;
+
+    fn empty_coordinator(batching: bool) -> Coordinator {
+        let registry = Registry::from_manifest_text(
+            std::path::PathBuf::from("/nonexistent"),
+            r#"{"version": 1, "entries": []}"#,
+        )
+        .unwrap();
+        Coordinator::new(
+            registry,
+            CoordinatorConfig {
+                batching,
+                workers: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn run_many_matches_run_per_item() {
+        // concurrent multi-item execution (stages coalescing in the
+        // shape-bucketed batcher) must return exactly what per-item runs
+        // return — batching is a throughput choice, not a numeric one
+        let coord = empty_coordinator(true);
+        let p = Pipeline::pfb_two_stage();
+        let l = 32 * 40; // router default pfb: 32 branches, 8 taps
+        let items: Vec<Vec<Tensor>> = (0..3)
+            .map(|i| vec![Tensor::randn(&[1, l], i)])
+            .collect();
+        let many = p.run_many(&coord, items.clone()).unwrap();
+        assert_eq!(many.len(), items.len());
+        for (item, got) in items.into_iter().zip(many) {
+            let want = p.run(&coord, item).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a, b, "run_many diverged from per-item run");
+            }
+        }
+    }
 
     #[test]
     fn builder_chains_stages() {

@@ -33,6 +33,13 @@ pub struct RouterConfig {
     /// least-recently-used plan instead of growing without limit; plans
     /// hold baked constants (a DFT matrix is O(n^2) floats), so an
     /// unbounded map is a slow memory leak under adversarial shapes.
+    ///
+    /// The cap counts **per-bucket entries**: a shape-bucketed batch plan
+    /// occupies one entry per (op, per-item shape, bucket size B) — the
+    /// batch dim is part of [`PlanKey`] — and each such entry is evicted
+    /// (and counted) individually.  Size the cap for the number of
+    /// distinct (op, shape) signatures times the bucket fan-out
+    /// (|{1, 2, 4, 8}| by default).
     pub plan_cache_cap: usize,
 }
 
@@ -121,6 +128,19 @@ pub enum Target {
 pub struct PlanKey {
     pub op: OpKind,
     pub dims: Vec<usize>,
+}
+
+impl PlanKey {
+    /// Signature for (op, input shapes): rank-prefixed dims per input.
+    /// The leading batch dim participates, so every (op, shape, B) bucket
+    /// of the shape-bucketed fallback batcher is its own cache entry.
+    pub fn for_shapes(op: OpKind, shapes: &[Vec<usize>]) -> PlanKey {
+        let dims: Vec<usize> = shapes
+            .iter()
+            .flat_map(|s| std::iter::once(s.len()).chain(s.iter().copied()))
+            .collect();
+        PlanKey { op, dims }
+    }
 }
 
 /// The router: artifact lookup + LRU-bounded fallback plan caches
@@ -278,14 +298,11 @@ impl Router {
 
     /// Shape signature for the interpreter plan cache.
     fn plan_key(&self, req: &OpRequest) -> Result<PlanKey> {
-        let dims: Vec<usize> = req
-            .inputs
-            .iter()
-            .flat_map(|t| {
-                std::iter::once(t.rank()).chain(t.shape().iter().copied())
-            })
-            .collect();
-        Ok(PlanKey { op: req.op, dims })
+        Ok(PlanKey::for_shapes(req.op, &Self::shapes_of(req)))
+    }
+
+    fn shapes_of(req: &OpRequest) -> Vec<Vec<usize>> {
+        req.inputs.iter().map(|t| t.shape().to_vec()).collect()
     }
 
     /// Get or build the interpreter for a plan key, using the request's
@@ -320,6 +337,28 @@ impl Router {
         key: &PlanKey,
         req: &OpRequest,
     ) -> Result<(std::sync::Arc<Planned>, bool)> {
+        self.planned_impl(key, req.op, &Self::shapes_of(req))
+    }
+
+    /// Get or compile the planned executor for (op, input shapes) with no
+    /// request object — the entry point the shape-bucketed batch drain
+    /// uses to fetch a plan at the coalesced bucket batch size B.  A
+    /// single request is the degenerate B=1 case of the same lookup.
+    pub fn planned_for_shapes(
+        &self,
+        op: OpKind,
+        shapes: &[Vec<usize>],
+    ) -> Result<(std::sync::Arc<Planned>, bool)> {
+        let key = PlanKey::for_shapes(op, shapes);
+        self.planned_impl(&key, op, shapes)
+    }
+
+    fn planned_impl(
+        &self,
+        key: &PlanKey,
+        op: OpKind,
+        shapes: &[Vec<usize>],
+    ) -> Result<(std::sync::Arc<Planned>, bool)> {
         if let Some(p) = self.exec_plans.lock().unwrap().get(key) {
             return Ok((p, true));
         }
@@ -327,7 +366,7 @@ impl Router {
         // (constant baking, liveness analysis) and must not serialize
         // unrelated requests.  A racing compile of the same key is
         // harmless — last insert wins, both plans are identical.
-        let graph = self.build_graph(req)?;
+        let graph = self.build_graph_for(op, shapes)?;
         let p = std::sync::Arc::new(Planned::new(&graph)?);
         let evicted = self
             .exec_plans
@@ -345,19 +384,30 @@ impl Router {
     }
 
     fn build_graph(&self, req: &OpRequest) -> Result<crate::tina::Graph> {
-        let shape = |i: usize| req.inputs[i].shape().to_vec();
+        self.build_graph_for(req.op, &Self::shapes_of(req))
+    }
+
+    /// Lower (op, input shapes) to a TINA graph (mirrors
+    /// python/compile/tina_ops.py).  Shape-driven so both a request's own
+    /// shapes and a bucketed batch shape `(B, L)` compile the same way.
+    fn build_graph_for(&self, op: OpKind, shapes: &[Vec<usize>]) -> Result<crate::tina::Graph> {
+        if shapes.len() != op.expected_inputs() {
+            bail!(
+                "op {} wants {} inputs, got {}",
+                op.as_str(),
+                op.expected_inputs(),
+                shapes.len()
+            );
+        }
+        let shape = |i: usize| shapes[i].clone();
         let rank2 = |i: usize| -> Result<(usize, usize)> {
             let s = shape(i);
             if s.len() != 2 {
-                bail!(
-                    "op {} input {i} must be rank 2, got {:?}",
-                    req.op.as_str(),
-                    s
-                );
+                bail!("op {} input {i} must be rank 2, got {:?}", op.as_str(), s);
             }
             Ok((s[0], s[1]))
         };
-        Ok(match req.op {
+        Ok(match op {
             OpKind::EwMult => {
                 let (h, w) = rank2(0)?;
                 lower::ewmult(h, w)
@@ -585,6 +635,50 @@ mod tests {
             .with_impl(ImplPref::Interp);
         let (_, hit) = r.planned(&keys[0], &req).unwrap();
         assert!(!hit, "evicted plan must recompile");
+    }
+
+    #[test]
+    fn bucketed_plans_count_against_cap_per_entry() {
+        // every (op, shape, B) bucket is its own cache entry: three bucket
+        // sizes of the same (op, L) overflow a cap of 2 and evictions are
+        // counted per entry
+        let reg =
+            Registry::from_manifest_text(PathBuf::from("/nonexistent"), MANIFEST).unwrap();
+        let r = Router::new(
+            reg,
+            RouterConfig {
+                plan_cache_cap: 2,
+                ..RouterConfig::default()
+            },
+        );
+        for b in [1usize, 2, 4] {
+            let (_, hit) = r.planned_for_shapes(OpKind::Fir, &[vec![b, 128]]).unwrap();
+            assert!(!hit, "distinct bucket B={b} must compile its own plan");
+        }
+        assert_eq!(r.cached_exec_plans(), 2, "cap bounds bucketed entries");
+        assert_eq!(r.take_plan_cache_evictions(), 1, "one bucket entry evicted");
+        // the evicted bucket (B=1, the LRU entry) recompiles: a miss
+        let (_, hit) = r.planned_for_shapes(OpKind::Fir, &[vec![1, 128]]).unwrap();
+        assert!(!hit, "evicted bucket plan must recompile");
+        // a surviving bucket still hits
+        let (_, hit) = r.planned_for_shapes(OpKind::Fir, &[vec![4, 128]]).unwrap();
+        assert!(hit, "surviving bucket plan must hit");
+    }
+
+    #[test]
+    fn planned_for_shapes_shares_the_request_plan_cache() {
+        // the bucketed entry point and the request entry point agree on
+        // the key: a B=1 bucket lookup hits a plan compiled via a request
+        let r = router();
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 999])])
+            .with_impl(ImplPref::Interp);
+        let Target::Interp { key } = r.route(&req).unwrap() else {
+            panic!()
+        };
+        let (_, hit) = r.planned(&key, &req).unwrap();
+        assert!(!hit);
+        let (_, hit) = r.planned_for_shapes(OpKind::Fir, &[vec![1, 999]]).unwrap();
+        assert!(hit, "degenerate B=1 shape lookup must share the cache");
     }
 
     #[test]

@@ -5,12 +5,20 @@
 //!
 //! ```text
 //!  submit(OpRequest)
-//!    └─ route ──────────── artifact, batchable,  B==1 ─▶ batcher ─▶ engine
-//!        ├──────────────── artifact, exact shape ──────▶ worker  ─▶ engine
-//!        └──────────────── no artifact (Auto/Interp) ──▶ worker  ─▶ interpreter
+//!    └─ route ──── artifact, batchable,  B==1 ─▶ batcher ─▶ engine
+//!        ├──────── artifact, exact shape ──────▶ worker  ─▶ engine
+//!        ├──────── fallback, batchable, B==1 ──▶ batcher ─▶ planned engine
+//!        └──────── fallback, anything else ────▶ worker  ─▶ planned engine
 //! ```
+//!
+//! With batching enabled, *all* fallback traffic runs on the planned
+//! engine at a coalesced batch size: batchable single-row requests are
+//! shape-bucketed by the batcher (grouped per (op, L), padded to the next
+//! power-of-two bucket, executed once, scattered back per row), and every
+//! other fallback request is simply the degenerate case of the same path
+//! at its own batch size.
 
-use super::batcher::{scatter_results, BatchKey, Batcher, BatcherConfig};
+use super::batcher::{scatter_results, scatter_row_results, BatchKey, Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{OpRequest, OpResponse};
 use super::router::{Router, RouterConfig, Target};
@@ -93,18 +101,64 @@ impl Coordinator {
     fn start_drain_loop(&self) {
         let batcher = Arc::clone(&self.batcher);
         let engine = self.engine.clone();
+        let router = Arc::clone(&self.router);
         let metrics = Arc::clone(&self.metrics);
         let stop = Arc::clone(&self.stop);
         let handle = std::thread::Builder::new()
             .name("tina-batch-drain".into())
             .spawn(move || {
                 while !stop.load(Ordering::Acquire) {
-                    if let Some(batch) = batcher.next_batch(Duration::from_millis(20)) {
-                        let padding = batch.key.batch - batch.rows.len();
-                        metrics.record_batch(batch.rows.len(), padding);
-                        let result =
-                            engine.execute(&batch.key.artifact, vec![batch.input.clone()]);
-                        scatter_results(batch, result);
+                    let Some(batch) = batcher.next_batch(Duration::from_millis(20)) else {
+                        continue;
+                    };
+                    match batch.key.clone() {
+                        BatchKey::Artifact { name, batch: b } => {
+                            metrics.record_batch(batch.rows.len(), b - batch.rows.len());
+                            let result = engine.execute(&name, vec![batch.input.clone()]);
+                            scatter_results(batch, result);
+                        }
+                        BatchKey::Fallback { op, len } => {
+                            // Bucketed fallback: one planned execution at
+                            // the coalesced batch size, outputs scattered
+                            // per row (padding rows are never gathered).
+                            //
+                            // Execution — including a cold plan compile
+                            // on a cache miss — runs on a detached
+                            // per-batch thread: the drain loop keeps
+                            // draining (no head-of-line blocking of
+                            // co-queued artifact batches behind a compile
+                            // or a long bucket), and the worker pool is
+                            // not involved, so the reply-waiters parked
+                            // there cannot deadlock against this batch.
+                            // Within the batch the kernels fan rows
+                            // across scoped threads
+                            // (`util::threadpool::parallel_for`).
+                            let router = Arc::clone(&router);
+                            let metrics = Arc::clone(&metrics);
+                            // detached on purpose: replies flow through
+                            // the rows' OneShot slots, not a join
+                            let _ = std::thread::spawn(move || {
+                                let bucket = batch.input.shape()[0];
+                                let rows_n = batch.rows.len();
+                                let result = router
+                                    .planned_for_shapes(op, &[vec![bucket, len]])
+                                    .and_then(|(plan, hit)| {
+                                        metrics.record_plan_cache_bucketed(bucket, hit);
+                                        metrics.record_plan_cache_evictions(
+                                            router.take_plan_cache_evictions(),
+                                        );
+                                        plan.run_rows(std::slice::from_ref(&batch.input), rows_n)
+                                    });
+                                // only successfully executed buckets
+                                // count — a failed lookup/run must not
+                                // inflate the coalescing stats or the
+                                // fill ratio
+                                if result.is_ok() {
+                                    metrics.record_fallback_batch(rows_n, bucket - rows_n);
+                                }
+                                scatter_row_results(batch, result);
+                            });
+                        }
                     }
                 }
             })
@@ -170,8 +224,8 @@ impl Coordinator {
                     && pad_batch > 1;
                 if batchable {
                     // ride the dynamic batcher
-                    let key = BatchKey {
-                        artifact: name.clone(),
+                    let key = BatchKey::Artifact {
+                        name: name.clone(),
                         batch: pad_batch,
                     };
                     let inner: OneShot<Result<Vec<Tensor>>> = OneShot::new();
@@ -207,11 +261,42 @@ impl Coordinator {
                 }
             }
             Target::Interp { key } => {
-                // Fallback path: compile (or fetch) the exec plan and run
-                // on the planned engine; the naive interpreter remains the
-                // test oracle only.  `served_by` keeps the "interp:" prefix
-                // as the stable fallback marker of the serving API.
+                // Fallback path: runs on the planned engine; the naive
+                // interpreter remains the test oracle only.  `served_by`
+                // keeps the "interp:" prefix as the stable fallback marker
+                // of the serving API.
                 self.metrics.record_interp_fallback();
+                // Serving mode: batchable single-row requests ride the
+                // shape-bucketed batcher, coalescing with co-arriving
+                // same-(op, L) traffic into one planned execution at the
+                // bucket batch size.  Everything else below is the
+                // degenerate case of the same path at the request's own
+                // batch size.
+                let bucketable = self.config.batching
+                    && req.op.batchable()
+                    && req.inputs.len() == 1
+                    && req.inputs[0].rank() == 2
+                    && req.inputs[0].shape()[0] == 1;
+                if bucketable {
+                    let len = req.inputs[0].shape()[1];
+                    let bkey = BatchKey::Fallback { op: req.op, len };
+                    let inner: OneShot<Result<Vec<Tensor>>> = OneShot::new();
+                    let input = req.inputs.into_iter().next().expect("checked arity");
+                    self.batcher.enqueue(bkey, input, inner.clone());
+                    let metrics = Arc::clone(&self.metrics);
+                    let op = req.op.as_str();
+                    let out_slot = slot.clone();
+                    self.pool.submit(move || {
+                        let result = inner.wait().map(|outputs| OpResponse {
+                            outputs,
+                            served_by: format!("interp:{op}"),
+                            batched: true,
+                        });
+                        metrics.record_completion(op, t0.elapsed(), result.is_ok());
+                        out_slot.set(result);
+                    });
+                    return slot;
+                }
                 let planned = match self.router.planned(&key, &req) {
                     Ok((p, hit)) => {
                         self.metrics.record_plan_cache(hit);
@@ -382,6 +467,86 @@ mod tests {
             c.metrics().plan_cache_evictions.load(Ordering::Relaxed),
             2,
             "evictions must be surfaced in metrics"
+        );
+    }
+
+    #[test]
+    fn batched_fallback_matches_solo_bitwise() {
+        // batching on: batchable B=1 fallback requests ride the
+        // shape-bucketed batcher and must return exactly what the solo
+        // (batching off) path returns for the same inputs
+        let batched = empty_coordinator(true);
+        let solo = empty_coordinator(false);
+        let l = 300;
+        let xs: Vec<Tensor> = (0..5).map(|i| Tensor::randn(&[1, l], i)).collect();
+        let slots: Vec<_> = xs
+            .iter()
+            .map(|x| batched.submit(OpRequest::new(OpKind::Fir, vec![x.clone()])))
+            .collect();
+        for (x, s) in xs.iter().zip(slots) {
+            let resp = s.wait().unwrap();
+            assert_eq!(resp.served_by, "interp:fir");
+            assert!(resp.batched, "fallback request must ride the batcher");
+            let want = solo
+                .execute(OpRequest::new(OpKind::Fir, vec![x.clone()]))
+                .unwrap();
+            assert_eq!(resp.outputs.len(), want.outputs.len());
+            for (a, b) in resp.outputs.iter().zip(&want.outputs) {
+                assert_eq!(a, b, "bucketed row diverged from the solo run");
+            }
+        }
+        let m = batched.metrics();
+        assert_eq!(
+            m.batched_fallback_requests.load(Ordering::Relaxed),
+            5,
+            "every request must be counted as coalesced fallback traffic"
+        );
+        let batches = m.fallback_batches_executed.load(Ordering::Relaxed);
+        assert!(batches >= 1, "at least one bucket must have executed");
+        // per-bucket plan-cache stats cover exactly the executed buckets
+        let lookups: u64 = m
+            .plan_cache_bucket_stats()
+            .iter()
+            .map(|&(_, h, mi)| h + mi)
+            .sum();
+        assert_eq!(lookups, batches, "one bucketed plan lookup per batch");
+        let fill = m.batch_fill_ratio();
+        assert!(fill > 0.0 && fill <= 1.0, "fill ratio out of range: {fill}");
+    }
+
+    #[test]
+    fn mixed_length_fallback_requests_route_to_buckets() {
+        // PR 1 rejected mixed-length rows sharing a batch key; bucketing
+        // makes different lengths land in different buckets instead
+        let c = empty_coordinator(true);
+        let a = c.submit(OpRequest::new(
+            OpKind::Fir,
+            vec![Tensor::randn(&[1, 256], 1)],
+        ));
+        let b = c.submit(OpRequest::new(
+            OpKind::Fir,
+            vec![Tensor::randn(&[1, 320], 2)],
+        ));
+        let ra = a.wait().unwrap();
+        let rb = b.wait().unwrap();
+        assert_eq!(ra.outputs[0].shape(), &[1, 256 - 64 + 1]);
+        assert_eq!(rb.outputs[0].shape(), &[1, 320 - 64 + 1]);
+    }
+
+    #[test]
+    fn non_batchable_fallback_is_direct_even_with_batching() {
+        // dft is not batchable: with batching on it must take the direct
+        // (degenerate) planned path, not the batcher
+        let c = empty_coordinator(true);
+        let x = Tensor::randn(&[2, 64], 3);
+        let resp = c.execute(OpRequest::new(OpKind::Dft, vec![x])).unwrap();
+        assert_eq!(resp.served_by, "interp:dft");
+        assert!(!resp.batched);
+        assert_eq!(
+            c.metrics()
+                .batched_fallback_requests
+                .load(Ordering::Relaxed),
+            0
         );
     }
 

@@ -43,6 +43,20 @@
 //! only — the reduction over input channels runs in the oracle's exact
 //! order for every output element (see [`fused`]'s module docs).
 //!
+//! # Batched (bucketed) serving
+//!
+//! The coordinator's shape-bucketed batcher coalesces compatible fallback
+//! requests into one execution at a power-of-two batch size B.  A plan
+//! compiled at `(B, L)` serves such a batch through
+//! [`Planned::run_rows`]/[`ExecPlan::run_rows_in`]: the schedule runs
+//! once, then each real request's outputs are gathered row by row from
+//! the terminal output views (leading axis = batch).  Because every
+//! kernel reduces strictly within a row — blocking is over output
+//! coordinates only — row i of a B-batch run is bit-identical to a solo
+//! B=1 run of that row, and the bucket's zero-padding rows are never
+//! gathered, so padding cannot leak into any reply (property-tested in
+//! `rust/tests/properties.rs`).
+//!
 //! Module layout:
 //! * [`plan`] — view propagation, fusion, liveness, weight packing, and
 //!   step execution;
@@ -92,6 +106,20 @@ impl Planned {
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
         let result = self.plan.run_in(&mut arena, inputs);
+        let mut pool = self.arenas.lock().unwrap();
+        if pool.len() < ARENA_POOL_CAP {
+            pool.push(arena);
+        }
+        result
+    }
+
+    /// Batched serving entry: execute once at the plan's (bucketed) batch
+    /// size and scatter the first `rows` rows of every output into
+    /// per-request tensors (leading dim 1).  Padding rows beyond `rows`
+    /// are never gathered — see [`ExecPlan::run_rows_in`].
+    pub fn run_rows(&self, inputs: &[Tensor], rows: usize) -> Result<Vec<Vec<Tensor>>> {
+        let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
+        let result = self.plan.run_rows_in(&mut arena, inputs, rows);
         let mut pool = self.arenas.lock().unwrap();
         if pool.len() < ARENA_POOL_CAP {
             pool.push(arena);

@@ -198,6 +198,21 @@ struct ArgRef {
     root: usize,
 }
 
+/// Backing slice a view indexes into (full extent; the kernels apply the
+/// view's offset and strides themselves).
+fn backing<'a>(
+    a: &ArgRef,
+    inputs: &'a [Tensor],
+    constants: &'a [Tensor],
+    arena: &'a Arena,
+) -> &'a [f32] {
+    match a.loc {
+        Loc::External(i) => inputs[i].data(),
+        Loc::Const(k) => constants[k].data(),
+        Loc::Slot(s) => arena.slot(s),
+    }
+}
+
 #[derive(Debug, Clone)]
 enum Kernel {
     StandardConv1d,
@@ -812,6 +827,77 @@ impl ExecPlan {
 
     /// Execute reusing `arena`'s buffers (the serving hot path).
     pub fn run_in(&self, arena: &mut Arena, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.execute_steps(arena, inputs)?;
+        self.outputs
+            .iter()
+            .map(|o| {
+                let d = backing(o, inputs, &self.constants, arena);
+                let n = o.view.numel();
+                let data = if o.view.is_contiguous() {
+                    d[o.view.offset..o.view.offset + n].to_vec()
+                } else {
+                    // view-shaped output: gather once, straight into the
+                    // result tensor (what used to be a kernel step)
+                    let mut v = vec![0.0f32; n];
+                    fused::materialize(d, o.view.offset, &o.view.shape, &o.view.strides, &mut v);
+                    v
+                };
+                Tensor::new(&o.view.shape, data)
+            })
+            .collect()
+    }
+
+    /// Execute a batched plan once, then scatter the first `rows` rows of
+    /// every output into per-request tensors (each keeps a leading dim of
+    /// 1) — the serving path for shape-bucketed fallback batches.
+    ///
+    /// Rows are gathered straight from the terminal output views, so a
+    /// view-shaped output costs exactly the per-row copies the replies
+    /// need; rows beyond `rows` — the bucket's zero padding — are never
+    /// gathered at all, which is what masks padding out of the replies.
+    pub fn run_rows_in(
+        &self,
+        arena: &mut Arena,
+        inputs: &[Tensor],
+        rows: usize,
+    ) -> Result<Vec<Vec<Tensor>>> {
+        if rows == 0 {
+            bail!("run_rows_in needs at least one row");
+        }
+        for (oi, o) in self.outputs.iter().enumerate() {
+            if o.view.shape.is_empty() || o.view.shape[0] < rows {
+                bail!(
+                    "output {oi} shape {:?} cannot scatter {rows} rows",
+                    o.view.shape
+                );
+            }
+        }
+        self.execute_steps(arena, inputs)?;
+        (0..rows)
+            .map(|r| {
+                self.outputs
+                    .iter()
+                    .map(|o| {
+                        let d = backing(o, inputs, &self.constants, arena);
+                        let off = o.view.offset + r * o.view.strides[0];
+                        let rest_shape = &o.view.shape[1..];
+                        let rest_strides = &o.view.strides[1..];
+                        let n: usize = rest_shape.iter().product();
+                        let mut v = vec![0.0f32; n];
+                        fused::materialize(d, off, rest_shape, rest_strides, &mut v);
+                        let mut shape = Vec::with_capacity(o.view.shape.len());
+                        shape.push(1);
+                        shape.extend_from_slice(rest_shape);
+                        Tensor::new(&shape, v)
+                    })
+                    .collect::<Result<Vec<Tensor>>>()
+            })
+            .collect()
+    }
+
+    /// Validate inputs against the declared shapes and run the kernel
+    /// schedule; on return the arena holds every live output backing.
+    fn execute_steps(&self, arena: &mut Arena, inputs: &[Tensor]) -> Result<()> {
         if inputs.len() != self.input_shapes.len() {
             bail!(
                 "expected {} inputs, got {}",
@@ -829,21 +915,6 @@ impl ExecPlan {
             }
         }
         arena.prepare(&self.slot_sizes);
-
-        // Backing slice a view indexes into (full extent; the kernels apply
-        // the view's offset and strides themselves).
-        fn backing<'a>(
-            a: &ArgRef,
-            inputs: &'a [Tensor],
-            constants: &'a [Tensor],
-            arena: &'a Arena,
-        ) -> &'a [f32] {
-            match a.loc {
-                Loc::External(i) => inputs[i].data(),
-                Loc::Const(k) => constants[k].data(),
-                Loc::Slot(s) => arena.slot(s),
-            }
-        }
 
         // Dense args (weights, biases, elementwise terms) resolve straight
         // to their element range.
@@ -979,24 +1050,7 @@ impl ExecPlan {
             }
             arena.put(step.out_slot, out_buf);
         }
-
-        self.outputs
-            .iter()
-            .map(|o| {
-                let d = backing(o, inputs, &self.constants, arena);
-                let n = o.view.numel();
-                let data = if o.view.is_contiguous() {
-                    d[o.view.offset..o.view.offset + n].to_vec()
-                } else {
-                    // view-shaped output: gather once, straight into the
-                    // result tensor (what used to be a kernel step)
-                    let mut v = vec![0.0f32; n];
-                    fused::materialize(d, o.view.offset, &o.view.shape, &o.view.strides, &mut v);
-                    v
-                };
-                Tensor::new(&o.view.shape, data)
-            })
-            .collect()
+        Ok(())
     }
 
     /// Number of arena slots the plan needs (its peak live-buffer count).
@@ -1515,6 +1569,44 @@ mod tests {
         assert!(plan.run(&[Tensor::zeros(&[2, 2])]).is_err());
         assert!(plan
             .run(&[Tensor::zeros(&[2, 3]), Tensor::zeros(&[2, 2])])
+            .is_err());
+    }
+
+    #[test]
+    fn run_rows_scatters_real_rows_and_masks_padding() {
+        // a bucketed B=4 plan serving 3 real rows: each scattered row must
+        // be bit-identical to the solo B=1 interpreter run on that row,
+        // and the poisoned padding row must never surface anywhere
+        let taps = dsp::fir_lowpass(16, 0.2).unwrap();
+        let l = 200;
+        let (bucket, rows) = (4usize, 3usize);
+        let plan = ExecPlan::compile(&lower::fir(bucket, l, &taps).unwrap()).unwrap();
+        let per_row: Vec<Tensor> = (0..rows)
+            .map(|r| Tensor::randn(&[1, l], 100 + r as u64))
+            .collect();
+        let mut data = Vec::with_capacity(bucket * l);
+        for r in &per_row {
+            data.extend_from_slice(r.data());
+        }
+        data.resize(bucket * l, 1.0e30); // poison, not the batcher's zeros
+        let batched = Tensor::new(&[bucket, l], data).unwrap();
+        let mut arena = Arena::new();
+        let got = plan
+            .run_rows_in(&mut arena, std::slice::from_ref(&batched), rows)
+            .unwrap();
+        assert_eq!(got.len(), rows);
+        let solo = Interpreter::new(lower::fir(1, l, &taps).unwrap()).unwrap();
+        for (r, row_in) in per_row.iter().enumerate() {
+            let want = solo.run(std::slice::from_ref(row_in)).unwrap();
+            assert_eq!(got[r].len(), want.len());
+            for (a, b) in got[r].iter().zip(&want) {
+                assert_eq!(a.shape(), b.shape());
+                assert_eq!(a, b, "row {r}: bucketed run diverged or padding leaked");
+            }
+        }
+        // a row count beyond the output's batch dim is rejected
+        assert!(plan
+            .run_rows_in(&mut arena, std::slice::from_ref(&batched), bucket + 1)
             .is_err());
     }
 

@@ -5,11 +5,12 @@
 
 use tina::baselines::{naive, optimized};
 use tina::coordinator::batcher::{scatter_results, BatchKey, Batcher, BatcherConfig, Pending};
+use tina::coordinator::OpKind;
 use tina::dsp::{self, PfbConfig};
 use tina::prop_assert;
 use tina::tensor::{ComplexTensor, Tensor};
 use tina::testing::prop::{run, Gen};
-use tina::tina::{lower, ExecPlan, Graph, Interpreter, NodeOp, Planned};
+use tina::tina::{lower, Arena, ExecPlan, Graph, Interpreter, NodeOp, Planned};
 use tina::util::json::{self, Json};
 use tina::util::threadpool::OneShot;
 
@@ -402,9 +403,127 @@ fn prop_diamond_views_share_backing_safely() {
     });
 }
 
+#[test]
+fn prop_bucketed_batch_rows_match_solo_interpreter_bitwise() {
+    // The batched-fallback contract: a plan compiled at the bucket batch
+    // size B, fed k real rows plus poisoned padding (the batcher pads
+    // zeros; poison is a strictly harsher test of row isolation), must
+    // scatter per-row outputs that are bit-for-bit equal to solo B=1
+    // interpreter runs — and the padding must never surface.
+    run("bucketed batch row == solo interpreter (bitwise)", 20, |g: &mut Gen| {
+        let which = g.usize_in(0, 3);
+        let (l, build): (usize, Box<dyn Fn(usize) -> Graph>) = match which {
+            0 => {
+                let taps = dsp::fir_lowpass(g.usize_in(2, 24), 0.2).unwrap();
+                let l = taps.len() + g.usize_in(1, 200);
+                (l, Box::new(move |b| lower::fir(b, l, &taps).unwrap()))
+            }
+            1 | 2 => {
+                let p = *g.choose(&[4usize, 8]);
+                let m = g.usize_in(2, 5);
+                let l = p * (m + g.usize_in(2, 20));
+                let cfg = PfbConfig::new(p, m);
+                if which == 1 {
+                    (l, Box::new(move |b| lower::pfb_fir(b, l, cfg).unwrap()))
+                } else {
+                    (l, Box::new(move |b| lower::pfb(b, l, cfg).unwrap()))
+                }
+            }
+            _ => {
+                let nfft = *g.choose(&[16usize, 32]);
+                let hop = nfft / 2;
+                let l = nfft + hop * g.usize_in(0, 6);
+                (l, Box::new(move |b| lower::stft(b, l, nfft, hop).unwrap()))
+            }
+        };
+        let k = g.usize_in(1, 8); // real rows
+        let bucket = k.next_power_of_two();
+        let rows: Vec<Tensor> = (0..k).map(|_| Tensor::randn(&[1, l], g.u64())).collect();
+        let mut data = Vec::with_capacity(bucket * l);
+        for r in &rows {
+            data.extend_from_slice(r.data());
+        }
+        data.resize(bucket * l, 1.0e30); // poison padding rows
+        let batched = Tensor::new(&[bucket, l], data).unwrap();
+
+        let plan = ExecPlan::compile(&build(bucket)).map_err(|e| e.to_string())?;
+        plan.validate_liveness().map_err(|e| e.to_string())?;
+        let mut arena = Arena::new();
+        let got = plan
+            .run_rows_in(&mut arena, std::slice::from_ref(&batched), k)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(got.len() == k, "row arity");
+
+        let solo = Interpreter::new(build(1)).unwrap();
+        for (r, row_in) in rows.iter().enumerate() {
+            let want = solo
+                .run(std::slice::from_ref(row_in))
+                .map_err(|e| e.to_string())?;
+            prop_assert!(got[r].len() == want.len(), "row {r} output arity");
+            for (i, (a, b)) in got[r].iter().zip(&want).enumerate() {
+                prop_assert!(a.shape() == b.shape(), "row {r} output {i} shape");
+                prop_assert!(
+                    a == b,
+                    "row {r} output {i}: bucketed run diverged or padding leaked \
+                     (which={which} l={l} k={k} bucket={bucket})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------------
 // coordinator invariants
 // ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fallback_batcher_buckets_round_up_and_conserve_rows() {
+    // shape-bucketed keys: every enqueued row appears exactly once in
+    // arrival order, each formed batch pads to the next power-of-two
+    // bucket (capped at max_bucket), and padding rows are zero
+    run("fallback bucket routing", 25, |g: &mut Gen| {
+        let l = g.usize_in(4, 32);
+        let n_rows = g.usize_in(1, 20);
+        let max_bucket = *g.choose(&[2usize, 4, 8]);
+        let batcher = Batcher::new(BatcherConfig {
+            max_wait: std::time::Duration::from_millis(1),
+            max_bucket,
+        });
+        let key = BatchKey::Fallback {
+            op: OpKind::Fir,
+            len: l,
+        };
+        for i in 0..n_rows {
+            let row = Tensor::filled(&[1, l], (i + 1) as f32);
+            batcher.enqueue(key.clone(), row, OneShot::new());
+        }
+        let mut seen = Vec::new();
+        while seen.len() < n_rows {
+            let Some(formed) = batcher.next_batch(std::time::Duration::from_millis(100)) else {
+                return Err(format!("batcher starved after {} rows", seen.len()));
+            };
+            let b = formed.input.shape()[0];
+            prop_assert!(
+                b == formed.rows.len().next_power_of_two().min(max_bucket),
+                "bucket {b} for {} rows (max_bucket {max_bucket})",
+                formed.rows.len()
+            );
+            prop_assert!(formed.input.shape()[1] == l, "row length");
+            for (r, p) in formed.rows.iter().enumerate() {
+                let v = formed.input.at(&[r, 0]);
+                prop_assert!(v == p.input.at(&[0, 0]), "row {r} scrambled");
+                seen.push(v);
+            }
+            for r in formed.rows.len()..b {
+                prop_assert!(formed.input.at(&[r, 0]) == 0.0, "padding not zero");
+            }
+        }
+        let want: Vec<f32> = (1..=n_rows).map(|i| i as f32).collect();
+        prop_assert!(seen == want, "order {seen:?}");
+        Ok(())
+    });
+}
 
 #[test]
 fn prop_batcher_conserves_and_orders_rows() {
@@ -416,9 +535,10 @@ fn prop_batcher_conserves_and_orders_rows() {
         let n_rows = g.usize_in(1, 3 * batch);
         let batcher = Batcher::new(BatcherConfig {
             max_wait: std::time::Duration::from_millis(1),
+            ..Default::default()
         });
-        let key = BatchKey {
-            artifact: "test".into(),
+        let key = BatchKey::Artifact {
+            name: "test".into(),
             batch,
         };
         for i in 0..n_rows {
@@ -470,8 +590,8 @@ fn prop_scatter_routes_rows_to_owners() {
             })
             .collect();
         let batch_t = tina::coordinator::batcher::FormedBatch {
-            key: BatchKey {
-                artifact: "t".into(),
+            key: BatchKey::Artifact {
+                name: "t".into(),
                 batch,
             },
             input: Tensor::zeros(&[batch, 4]),

@@ -17,7 +17,9 @@ use std::time::{Duration, Instant};
 /// Measurement configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchConfig {
+    /// Untimed warmup iterations before measurement.
     pub warmup_iters: usize,
+    /// Timed iterations.
     pub iters: usize,
     /// Hard cap on total measurement time per case.
     pub max_total: Duration,
@@ -43,6 +45,7 @@ impl BenchConfig {
         }
     }
 
+    /// CI profile: few iterations, tight time cap.
     pub fn quick() -> Self {
         Self {
             warmup_iters: 1,

@@ -5,12 +5,14 @@ use std::time::Duration;
 /// Statistics over one benchmark case's per-iteration durations.
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// Number of samples.
     pub n: usize,
     sorted_ns: Vec<u64>,
     sum_ns: u128,
 }
 
 impl Stats {
+    /// Statistics over a set of per-iteration durations.
     pub fn from_durations(samples: &[Duration]) -> Stats {
         let mut sorted_ns: Vec<u64> = samples
             .iter()
@@ -25,6 +27,7 @@ impl Stats {
         }
     }
 
+    /// Mean duration in nanoseconds.
     pub fn mean_ns(&self) -> f64 {
         if self.n == 0 {
             return 0.0;
@@ -32,6 +35,7 @@ impl Stats {
         self.sum_ns as f64 / self.n as f64
     }
 
+    /// Median duration in nanoseconds.
     pub fn median_ns(&self) -> f64 {
         self.quantile_ns(0.5)
     }
@@ -48,14 +52,17 @@ impl Stats {
         self.sorted_ns[lo] as f64 * (1.0 - frac) + self.sorted_ns[hi] as f64 * frac
     }
 
+    /// Fastest iteration in nanoseconds.
     pub fn min_ns(&self) -> f64 {
         self.sorted_ns.first().map(|&x| x as f64).unwrap_or(0.0)
     }
 
+    /// Slowest iteration in nanoseconds.
     pub fn max_ns(&self) -> f64 {
         self.sorted_ns.last().map(|&x| x as f64).unwrap_or(0.0)
     }
 
+    /// Sample standard deviation in nanoseconds.
     pub fn stddev_ns(&self) -> f64 {
         if self.n < 2 {
             return 0.0;
@@ -70,6 +77,7 @@ impl Stats {
         var.sqrt()
     }
 
+    /// Flatten into a copyable summary row.
     pub fn summary(&self) -> Summary {
         Summary {
             n: self.n,
@@ -86,12 +94,19 @@ impl Stats {
 /// Flattened summary row (what tables and EXPERIMENTS.md record).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Number of samples.
     pub n: usize,
+    /// Mean in nanoseconds.
     pub mean_ns: f64,
+    /// Median in nanoseconds.
     pub median_ns: f64,
+    /// 95th percentile in nanoseconds.
     pub p95_ns: f64,
+    /// Sample standard deviation in nanoseconds.
     pub stddev_ns: f64,
+    /// Fastest iteration in nanoseconds.
     pub min_ns: f64,
+    /// Slowest iteration in nanoseconds.
     pub max_ns: f64,
 }
 

@@ -9,6 +9,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -17,6 +18,7 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(
             cells.len(),
@@ -26,6 +28,7 @@ impl Table {
         self.rows.push(cells);
     }
 
+    /// True when no rows were added.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }

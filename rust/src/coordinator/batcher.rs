@@ -1,6 +1,7 @@
 //! Dynamic batcher: coalesces same-signature single-signal requests into
 //! one padded batch execution (the TINA analog of vLLM-style request
-//! batching).
+//! batching), and carries each request's *completion context* with it so
+//! replies are finished directly from the batch execution thread.
 //!
 //! Two kinds of traffic ride it, distinguished by [`BatchKey`]:
 //!
@@ -16,17 +17,55 @@
 //!   compilation constraint — while amortizing plan lookup and kernel
 //!   launch across co-arriving requests.
 //!
+//! # Completion-driven replies (no parked workers)
+//!
+//! Each queued [`Pending`] row owns a [`Completion`]: the request's
+//! response slot plus the op label, `served_by` marker, and the submit
+//! timestamp `t0`.  When the batch executes, the per-batch execution
+//! thread assembles every row's [`OpResponse`] and completes its slot
+//! *directly* ([`scatter_results`] / [`scatter_row_results`]) — no
+//! thread-pool worker is parked on a relay `wait()` per request, so the
+//! number of in-flight batched requests is no longer capped by the pool
+//! size.  Admission is bounded instead by an [`InflightGate`]
+//! (backpressure at enqueue): every batched request holds an
+//! [`InflightPermit`] from submit until its reply completes.
+//!
+//! Latency accounting invariant: `t0` is captured at submit and travels
+//! through `Pending`, so the recorded latency covers the full
+//! queue-wait + execution + scatter span, exactly like the direct paths.
+//! A `Completion` dropped without being completed (a died batch thread)
+//! fails its request instead of leaving the caller blocked forever, and
+//! the coordinator's shutdown path fails still-queued rows explicitly
+//! via [`Batcher::fail_pending`].
+//!
+//! # Adaptive bucket sizing (clipper-style)
+//!
+//! Per fallback key the batcher keeps an EWMA of the observed arrival
+//! rate (updated from inter-arrival gaps at enqueue) and derives an
+//! *effective* bucket cap and flush deadline from it, with the static
+//! [`BatcherConfig`] values as ceilings:
+//!
+//! * effective bucket = largest power of two the EWMA predicts will fill
+//!   within `max_wait` (so sparse traffic stops paying for padding it
+//!   will never use);
+//! * effective wait = predicted fill time of that bucket, 2x slack,
+//!   capped at `max_wait` (so dense traffic is not held for a deadline
+//!   it beats anyway, and a predicted-lonely request flushes at once).
+//!
+//! Keys with no rate estimate yet (first arrival) see exactly the static
+//! configuration, so cold-start behavior is the pre-adaptive behavior.
+//!
 //! Padding/masking rule: padding rows are zero-filled at batch formation
 //! and are *masked out* at scatter time — per-request outputs are gathered
 //! row by row from the plan's terminal views, and rows beyond the real
 //! request count are never gathered, so padding can never leak into a
 //! reply.  Requests with different per-item shapes land in different
-//! buckets by construction (the shape is part of the key), which replaces
-//! the old mixed-length rejection with bucket routing; the rejection path
-//! survives only for artifact keys, whose row length is fixed by the
+//! buckets by construction (the shape is part of the key); the rejection
+//! path survives only for artifact keys, whose row length is fixed by the
 //! artifact ABI.
 
-use super::request::OpKind;
+use super::metrics::Metrics;
+use super::request::{OpKind, OpResponse};
 use crate::tensor::Tensor;
 use crate::util::threadpool::OneShot;
 use anyhow::Result;
@@ -34,12 +73,22 @@ use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+/// EWMA weight of the newest inter-arrival sample (0 < alpha <= 1).
+const EWMA_ALPHA: f64 = 0.2;
+/// Floor on an observed inter-arrival gap: two enqueues inside the same
+/// microsecond still yield a finite rate sample.
+const MIN_ARRIVAL_GAP: Duration = Duration::from_micros(1);
+/// Bound on tracked per-key rate estimates (shape-diverse traffic must
+/// not grow the map without limit; the stalest key is dropped).
+const RATE_KEYS_CAP: usize = 512;
+
 /// Key grouping poolable requests.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum BatchKey {
     /// Fixed-shape PJRT artifact: same artifact -> same ABI; the formed
     /// batch always pads to the artifact's leading batch dim.
     Artifact {
+        /// Artifact name (registry key).
         name: String,
         /// Rows the artifact expects (its leading batch dim).
         batch: usize,
@@ -47,18 +96,15 @@ pub enum BatchKey {
     /// Shape-bucketed fallback traffic: compatible requests grouped per
     /// (op, per-item signal length); the formed batch pads to the next
     /// power-of-two bucket (capped at [`BatcherConfig::max_bucket`]).
-    Fallback { op: OpKind, len: usize },
+    Fallback {
+        /// The op the bucketed requests share.
+        op: OpKind,
+        /// Per-item signal length L shared by every row in the bucket.
+        len: usize,
+    },
 }
 
 impl BatchKey {
-    /// Row count at which a batch is full and flushes immediately.
-    fn capacity(&self, config: &BatcherConfig) -> usize {
-        match self {
-            BatchKey::Artifact { batch, .. } => *batch,
-            BatchKey::Fallback { .. } => config.max_bucket.max(1),
-        }
-    }
-
     /// Leading dim of the formed batch holding `rows` real rows.
     fn pad_rows(&self, rows: usize, config: &BatcherConfig) -> usize {
         match self {
@@ -79,26 +125,203 @@ impl BatchKey {
     }
 }
 
+/// Bounded admission gate for batched requests: `acquire` blocks while
+/// the configured limit of in-flight batched requests is reached — the
+/// coordinator's backpressure-at-enqueue replacement for the implicit
+/// (and much lower) cap the old parked-worker relay imposed.
+///
+/// The [`Metrics::inflight_batched_requests`] gauge mirrors the count.
+pub struct InflightGate {
+    limit: usize,
+    count: Mutex<usize>,
+    freed: Condvar,
+    metrics: Arc<Metrics>,
+}
+
+impl InflightGate {
+    /// Build a gate admitting at most `limit` in-flight batched requests
+    /// (a zero limit is clamped to 1 — the gate must admit progress).
+    pub fn new(limit: usize, metrics: Arc<Metrics>) -> Arc<InflightGate> {
+        Arc::new(InflightGate {
+            limit: limit.max(1),
+            count: Mutex::new(0),
+            freed: Condvar::new(),
+            metrics,
+        })
+    }
+
+    /// Take one in-flight slot, blocking until one frees (backpressure).
+    pub fn acquire(self: &Arc<Self>) -> InflightPermit {
+        let mut n = self.count.lock().unwrap();
+        while *n >= self.limit {
+            n = self.freed.wait(n).unwrap();
+        }
+        *n += 1;
+        self.metrics.inc_inflight_batched();
+        InflightPermit {
+            gate: Arc::clone(self),
+        }
+    }
+
+    /// Batched requests currently holding a slot.
+    pub fn in_flight(&self) -> usize {
+        *self.count.lock().unwrap()
+    }
+}
+
+/// One admitted in-flight batched request; dropping it (on completion,
+/// on any path) frees the slot and wakes a blocked submitter.
+pub struct InflightPermit {
+    gate: Arc<InflightGate>,
+}
+
+impl Drop for InflightPermit {
+    fn drop(&mut self) {
+        let mut n = self.gate.count.lock().unwrap();
+        *n = n.saturating_sub(1);
+        self.gate.metrics.dec_inflight_batched();
+        drop(n);
+        // notify_all: several submitters may be blocked and another
+        // permit may race the count; waking everyone keeps the gate
+        // obviously live at the cost of a rare spurious re-check
+        self.gate.freed.notify_all();
+    }
+}
+
+/// A request's completion context: everything needed to finish its
+/// response from whichever thread produces the outputs.  This is the
+/// single [`OpResponse`] assembly point for the whole coordinator — the
+/// direct worker paths and the drain-side scatter both end here.
+pub struct Completion {
+    /// The caller's response slot (`None` once completed).
+    slot: Option<OneShot<Result<OpResponse>>>,
+    op: &'static str,
+    served_by: String,
+    t0: Instant,
+    /// In-flight admission slot for batched requests; released (dropped)
+    /// *before* the response slot is set so the gauge never overshoots
+    /// past a completed reply.
+    permit: Option<InflightPermit>,
+    metrics: Arc<Metrics>,
+}
+
+impl Completion {
+    /// Build a completion context.  `t0` is the submit timestamp the
+    /// latency histogram measures from; `permit` is `Some` exactly for
+    /// requests admitted through the [`InflightGate`] (batched paths).
+    pub fn new(
+        metrics: Arc<Metrics>,
+        slot: OneShot<Result<OpResponse>>,
+        op: &'static str,
+        served_by: String,
+        t0: Instant,
+        permit: Option<InflightPermit>,
+    ) -> Completion {
+        Completion {
+            slot: Some(slot),
+            op,
+            served_by,
+            t0,
+            permit,
+            metrics,
+        }
+    }
+
+    /// Complete from a direct (worker) execution path: the response is
+    /// never marked batched — batched responses only come from
+    /// [`Completion::complete_from_drain`], keeping the
+    /// drain-completions accounting honest.
+    pub fn complete(self, result: Result<Vec<Tensor>>) {
+        self.finish(result, false, false);
+    }
+
+    /// Complete from a drain-side per-batch execution thread; counted in
+    /// [`Metrics::drain_completions`].
+    pub fn complete_from_drain(self, result: Result<Vec<Tensor>>) {
+        self.finish(result, true, true);
+    }
+
+    /// Fail the request (routing/validation/enqueue errors).
+    pub fn fail(self, err: anyhow::Error) {
+        self.finish(Err(err), false, false);
+    }
+
+    fn finish(mut self, result: Result<Vec<Tensor>>, batched: bool, from_drain: bool) {
+        let served_by = std::mem::take(&mut self.served_by);
+        let result = result.map(|outputs| OpResponse {
+            outputs,
+            served_by,
+            batched,
+        });
+        // release the in-flight slot and record metrics before waking the
+        // waiter: a caller returning from wait() must observe a settled
+        // gauge and its own completion already counted
+        drop(self.permit.take());
+        self.metrics
+            .record_completion(self.op, self.t0.elapsed(), result.is_ok());
+        if from_drain {
+            self.metrics.record_drain_completion();
+        }
+        if let Some(slot) = self.slot.take() {
+            slot.set(result);
+        }
+    }
+}
+
+impl Drop for Completion {
+    fn drop(&mut self) {
+        // a completion dropped without completing (batch thread died,
+        // shutdown with rows queued) must fail its request, not strand
+        // the caller on wait() forever
+        if let Some(slot) = self.slot.take() {
+            drop(self.permit.take());
+            self.metrics
+                .record_completion(self.op, self.t0.elapsed(), false);
+            slot.set(Err(anyhow::anyhow!(
+                "request dropped before completion (batch execution died or shut down)"
+            )));
+        }
+    }
+}
+
 /// One queued request row.
 pub struct Pending {
     /// The (1, L) signal row.
     pub input: Tensor,
-    /// Completion slot: receives this row's outputs.
-    pub reply: OneShot<Result<Vec<Tensor>>>,
+    /// Completion context: finishes this request's response directly from
+    /// the batch execution thread.
+    pub completion: Completion,
+    /// When the row entered the queue (drives the flush deadline).
     pub enqueued: Instant,
+}
+
+/// The adaptive sizing decision a fallback batch was formed under
+/// (surfaced through the `adaptive_bucket_*` metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketDecision {
+    /// Effective bucket cap applied (<= the static `max_bucket` ceiling).
+    pub cap: usize,
+    /// Effective flush deadline applied (<= the static `max_wait`).
+    pub wait: Duration,
 }
 
 /// A formed batch ready for execution.
 pub struct FormedBatch {
+    /// The key whose queue produced this batch.
     pub key: BatchKey,
     /// Stacked (batch, L) input, zero-padded to the artifact batch
     /// (artifact keys) or to the next power-of-two bucket (fallback keys).
     pub input: Tensor,
     /// How many leading rows are real requests.
     pub rows: Vec<Pending>,
+    /// The adaptive sizing in force when the batch formed (fallback keys
+    /// only; artifact capacities are fixed by the ABI).
+    pub adaptive: Option<BucketDecision>,
 }
 
-/// Batching configuration.
+/// Batching configuration.  With adaptive sizing these are *ceilings*:
+/// per-key effective values derived from observed arrival rates never
+/// exceed them.
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
     /// Max time a request may wait for co-riders before the batch flushes.
@@ -120,8 +343,27 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Per-key arrival-rate estimate (rows/sec EWMA over inter-arrival gaps).
+#[derive(Debug, Clone, Copy)]
+struct RateEwma {
+    /// Smoothed rows/sec; 0.0 until a second arrival gives a first gap.
+    rate: f64,
+    /// Previous arrival (feeds the next gap sample).
+    last: Instant,
+}
+
+/// Queues + rate estimates, guarded by one mutex (the rates feed the
+/// flush policy, so they must be consistent with the queue scan).
+struct State {
+    queues: HashMap<BatchKey, Vec<Pending>>,
+    rates: HashMap<BatchKey, RateEwma>,
+    /// Set by [`Batcher::fail_pending`] (shutdown): later enqueues fail
+    /// fast instead of parking rows no drain loop will ever visit.
+    closed: bool,
+}
+
 struct Shared {
-    queues: Mutex<HashMap<BatchKey, Vec<Pending>>>,
+    state: Mutex<State>,
     ready: Condvar,
 }
 
@@ -132,112 +374,238 @@ pub struct Batcher {
     config: BatcherConfig,
 }
 
+/// Largest power of two `<= n` (n >= 1).
+fn floor_pow2(n: usize) -> usize {
+    1usize << (usize::BITS - 1 - n.max(1).leading_zeros())
+}
+
+/// Effective bucket cap for an arrival-rate estimate: the largest power
+/// of two the EWMA predicts will fill within the static `max_wait`,
+/// ceiling-clamped to `config.max_bucket`.  No estimate -> the ceiling
+/// (cold keys behave exactly as the static configuration).
+fn effective_bucket(config: &BatcherConfig, rate: f64) -> usize {
+    let ceiling = config.max_bucket.max(1);
+    if rate <= 0.0 {
+        return ceiling;
+    }
+    let expected = (1.0 + rate * config.max_wait.as_secs_f64()).clamp(1.0, ceiling as f64);
+    floor_pow2(expected as usize)
+}
+
+/// Effective flush deadline for an arrival-rate estimate: twice the
+/// predicted time to fill the effective bucket, capped at the static
+/// `max_wait`.  A key predicted to stay lonely (effective bucket 1)
+/// flushes immediately; a cold key waits the full static deadline.
+fn effective_wait(config: &BatcherConfig, rate: f64) -> Duration {
+    if rate <= 0.0 {
+        return config.max_wait;
+    }
+    let bucket = effective_bucket(config, rate);
+    if bucket <= 1 {
+        return Duration::ZERO;
+    }
+    let predicted = 2.0 * (bucket - 1) as f64 / rate;
+    config.max_wait.min(Duration::from_secs_f64(predicted))
+}
+
 impl Batcher {
+    /// Build a batcher; normalizes `max_bucket` down to a power of two.
     pub fn new(mut config: BatcherConfig) -> Batcher {
         // normalize: buckets are powers of two, so a non-power-of-two cap
         // rounds down (6 -> 4) instead of silently minting bucket sizes
         // the plan-cache sizing advice doesn't account for
-        let mb = config.max_bucket.max(1);
-        config.max_bucket = 1usize << (usize::BITS - 1 - mb.leading_zeros());
+        config.max_bucket = floor_pow2(config.max_bucket);
         Batcher {
             shared: Arc::new(Shared {
-                queues: Mutex::new(HashMap::new()),
+                state: Mutex::new(State {
+                    queues: HashMap::new(),
+                    rates: HashMap::new(),
+                    closed: false,
+                }),
                 ready: Condvar::new(),
             }),
             config,
         }
     }
 
+    /// The (normalized) static configuration ceilings.
     pub fn config(&self) -> BatcherConfig {
         self.config
     }
 
-    /// Enqueue one row; returns immediately.  The reply slot completes when
-    /// the batch it rides executes.
+    /// Enqueue one row; returns immediately.  The request's response slot
+    /// completes when the batch it rides executes (or fails fast here).
     ///
     /// Rows sharing a [`BatchKey`] must agree on signal length — the formed
     /// batch is one dense (batch, L) stack.  Fallback keys carry the length
     /// in the key, so differently-shaped requests route to different
     /// buckets by construction; for artifact keys a mismatched row is
-    /// rejected here by completing its reply with an error, instead of
-    /// poisoning the drain loop with a panic when the batch is stacked.
-    pub fn enqueue(&self, key: BatchKey, input: Tensor, reply: OneShot<Result<Vec<Tensor>>>) {
-        let mut q = self.shared.queues.lock().unwrap();
-        // validate BEFORE creating the queue entry: a rejected row must
-        // not leave an empty Vec behind in the map (next_batch's cleanup
-        // only fires on formed batches)
-        let expect = key
-            .expected_len()
-            .or_else(|| q.get(&key).and_then(|rows| rows.first()).map(|p| p.input.len()));
+    /// rejected here by failing its completion, instead of poisoning the
+    /// drain loop with a panic when the batch is stacked.
+    pub fn enqueue(&self, key: BatchKey, input: Tensor, completion: Completion) {
+        let mut st = self.shared.state.lock().unwrap();
+        // a closed batcher (shutdown ran) has no drain loop left: fail
+        // fast under the same lock `fail_pending` closed under, so a
+        // racing enqueue can never strand a row in a dead queue
+        if st.closed {
+            drop(st);
+            completion.fail(anyhow::anyhow!(
+                "batcher is shut down; request cannot be batched"
+            ));
+            return;
+        }
+        // validate BEFORE creating the queue entry or touching the rate
+        // estimate: a rejected row must not leave an empty Vec behind in
+        // the map, and must not skew the arrival-rate EWMA
+        let expect = key.expected_len().or_else(|| {
+            st.queues
+                .get(&key)
+                .and_then(|rows| rows.first())
+                .map(|p| p.input.len())
+        });
         if let Some(expect) = expect {
             if expect != input.len() {
                 let msg = format!(
                     "batch row length {} != expected row length {expect} for key {key:?}",
                     input.len()
                 );
-                drop(q);
-                reply.set(Err(anyhow::anyhow!(msg)));
+                drop(st);
+                completion.fail(anyhow::anyhow!(msg));
                 return;
             }
         }
-        q.entry(key).or_default().push(Pending {
+        let now = Instant::now();
+        Self::observe_arrival(&mut st.rates, &key, now);
+        st.queues.entry(key).or_default().push(Pending {
             input,
-            reply,
-            enqueued: Instant::now(),
+            completion,
+            enqueued: now,
         });
-        drop(q);
+        drop(st);
         self.shared.ready.notify_one();
     }
 
-    /// Block until a batch is full or the oldest row exceeds `max_wait`;
-    /// returns None once `deadline` passes without producing a batch
-    /// (pending-but-unexpired rows stay queued for the next call).
+    /// Fold one arrival into the key's rate EWMA (fallback keys only —
+    /// artifact capacities are fixed by the ABI, so there is nothing to
+    /// adapt).  The rates map is bounded: past [`RATE_KEYS_CAP`] the
+    /// stalest key (oldest last arrival) is dropped.
+    fn observe_arrival(rates: &mut HashMap<BatchKey, RateEwma>, key: &BatchKey, now: Instant) {
+        if !matches!(key, BatchKey::Fallback { .. }) {
+            return;
+        }
+        if let Some(e) = rates.get_mut(key) {
+            let gap = now.duration_since(e.last).max(MIN_ARRIVAL_GAP);
+            let inst = 1.0 / gap.as_secs_f64();
+            e.rate = if e.rate <= 0.0 {
+                inst
+            } else {
+                EWMA_ALPHA * inst + (1.0 - EWMA_ALPHA) * e.rate
+            };
+            e.last = now;
+            return;
+        }
+        if rates.len() >= RATE_KEYS_CAP {
+            if let Some(stalest) = rates
+                .iter()
+                .min_by_key(|(_, e)| e.last)
+                .map(|(k, _)| k.clone())
+            {
+                rates.remove(&stalest);
+            }
+        }
+        rates.insert(key.clone(), RateEwma { rate: 0.0, last: now });
+    }
+
+    /// The rate estimate for a key (0.0 when none) — policy inputs for
+    /// `next_batch`'s scan.
+    fn rate_of(rates: &HashMap<BatchKey, RateEwma>, key: &BatchKey) -> f64 {
+        rates.get(key).map(|e| e.rate).unwrap_or(0.0)
+    }
+
+    /// Row count at which a key's batch is full and flushes immediately.
+    fn capacity_of(&self, key: &BatchKey, rates: &HashMap<BatchKey, RateEwma>) -> usize {
+        match key {
+            BatchKey::Artifact { batch, .. } => *batch,
+            BatchKey::Fallback { .. } => effective_bucket(&self.config, Self::rate_of(rates, key)),
+        }
+    }
+
+    /// Flush deadline for a key's oldest row.
+    fn wait_of(&self, key: &BatchKey, rates: &HashMap<BatchKey, RateEwma>) -> Duration {
+        match key {
+            BatchKey::Artifact { .. } => self.config.max_wait,
+            BatchKey::Fallback { .. } => effective_wait(&self.config, Self::rate_of(rates, key)),
+        }
+    }
+
+    /// The adaptive decision to stamp on a formed fallback batch.
+    fn decision_of(
+        &self,
+        key: &BatchKey,
+        rates: &HashMap<BatchKey, RateEwma>,
+    ) -> Option<BucketDecision> {
+        match key {
+            BatchKey::Artifact { .. } => None,
+            BatchKey::Fallback { .. } => Some(BucketDecision {
+                cap: self.capacity_of(key, rates),
+                wait: self.wait_of(key, rates),
+            }),
+        }
+    }
+
+    /// Block until a batch is full or the oldest row exceeds its flush
+    /// deadline; returns None once `deadline` passes without producing a
+    /// batch (pending-but-unexpired rows stay queued for the next call).
     ///
     /// Invariant: every loop iteration either returns, or blocks on the
     /// condvar until the earliest of (oldest-row expiry, deadline) — there
-    /// is no busy-spin path.  (The previous version spun hot for up to
-    /// `max_wait` when the idle deadline passed while unexpired rows were
-    /// queued.)
+    /// is no busy-spin path.
     pub fn next_batch(&self, idle_timeout: Duration) -> Option<FormedBatch> {
         let deadline = Instant::now() + idle_timeout;
-        let mut q = self.shared.queues.lock().unwrap();
+        let mut st = self.shared.state.lock().unwrap();
         loop {
-            // full batch available?
-            let full = q
+            // full batch available?  (capacity is the per-key effective
+            // bucket for fallback keys, the ABI batch for artifact keys)
+            let full = st
+                .queues
                 .iter()
-                .find(|(k, v)| v.len() >= k.capacity(&self.config))
+                .find(|(k, v)| v.len() >= self.capacity_of(k, &st.rates))
                 .map(|(k, _)| k.clone());
             if let Some(key) = full {
-                let cap = key.capacity(&self.config);
-                let rows = q.get_mut(&key).unwrap();
+                let cap = self.capacity_of(&key, &st.rates);
+                let decision = self.decision_of(&key, &st.rates);
+                let rows = st.queues.get_mut(&key).unwrap();
                 let take: Vec<Pending> = rows.drain(..cap).collect();
                 if rows.is_empty() {
-                    q.remove(&key);
+                    st.queues.remove(&key);
                 }
-                return Some(self.form(key, take));
+                return Some(self.form(key, take, decision));
             }
             // expired batch?  (`now` is shared with the wake computation
             // below so a due expiry is always taken on this iteration, not
             // re-spun on)
             let now = Instant::now();
-            let expired = q
+            let expired = st
+                .queues
                 .iter()
                 .filter(|(_, v)| !v.is_empty())
-                .find(|(_, v)| now.duration_since(v[0].enqueued) >= self.config.max_wait)
+                .find(|(k, v)| now.duration_since(v[0].enqueued) >= self.wait_of(k, &st.rates))
                 .map(|(k, _)| k.clone());
             if let Some(key) = expired {
-                let rows = q.remove(&key).unwrap();
-                return Some(self.form(key, rows));
+                let decision = self.decision_of(&key, &st.rates);
+                let rows = st.queues.remove(&key).unwrap();
+                return Some(self.form(key, rows, decision));
             }
             if now >= deadline {
                 return None;
             }
             // wait for the earliest wakeup: a new enqueue (condvar), the
-            // oldest entry's expiry, or the idle deadline
-            let oldest_expiry = q
-                .values()
-                .filter_map(|v| v.first())
-                .map(|p| p.enqueued + self.config.max_wait)
+            // oldest entry's expiry under its key's effective deadline, or
+            // the idle deadline
+            let oldest_expiry = st
+                .queues
+                .iter()
+                .filter_map(|(k, v)| v.first().map(|p| p.enqueued + self.wait_of(k, &st.rates)))
                 .min();
             let wake = match oldest_expiry {
                 Some(e) => e.min(deadline),
@@ -247,21 +615,47 @@ impl Batcher {
                 // an expiry became due in this very iteration; re-scan
                 continue;
             }
-            let (guard, _timeout) = self
-                .shared
-                .ready
-                .wait_timeout(q, wake - now)
-                .unwrap();
-            q = guard;
+            let (guard, _timeout) = self.shared.ready.wait_timeout(st, wake - now).unwrap();
+            st = guard;
         }
+    }
+
+    /// Fail every queued row and close the batcher (shutdown path): each
+    /// pending request's completion settles with an error instead of
+    /// waiting for a drain loop that will never run again, and every
+    /// *later* enqueue fails fast too.  Returns how many rows were
+    /// failed.  Completions run outside the queue lock.
+    pub fn fail_pending(&self, reason: &str) -> usize {
+        let drained: Vec<Pending> = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+            st.queues.drain().flat_map(|(_, rows)| rows).collect()
+        };
+        let n = drained.len();
+        for row in drained {
+            row.completion.fail(anyhow::anyhow!(reason.to_string()));
+        }
+        n
     }
 
     /// Rows currently queued across all keys (for tests/metrics).
     pub fn queued(&self) -> usize {
-        self.shared.queues.lock().unwrap().values().map(Vec::len).sum()
+        self.shared
+            .state
+            .lock()
+            .unwrap()
+            .queues
+            .values()
+            .map(Vec::len)
+            .sum()
     }
 
-    fn form(&self, key: BatchKey, rows: Vec<Pending>) -> FormedBatch {
+    fn form(
+        &self,
+        key: BatchKey,
+        rows: Vec<Pending>,
+        adaptive: Option<BucketDecision>,
+    ) -> FormedBatch {
         let pad = key.pad_rows(rows.len(), &self.config);
         debug_assert!(!rows.is_empty() && rows.len() <= pad);
         let l = rows[0].input.len();
@@ -273,14 +667,14 @@ impl Batcher {
             input: Tensor::new(&[pad, l], data).expect("batch stack"),
             key,
             rows,
+            adaptive,
         }
     }
 }
 
-/// Split a batched multi-output execution result back into per-row replies.
-///
-/// Each output tensor has a leading batch dim; row i of every output goes
-/// to rows[i].  Padding rows are discarded (masked out) here.
+/// Complete a batched multi-output execution directly from the batch
+/// execution thread: row i of every output tensor becomes rows[i]'s
+/// response.  Padding rows are discarded (masked out) here.
 pub fn scatter_results(batch: FormedBatch, result: Result<Vec<Tensor>>) {
     match result {
         Ok(outputs) => {
@@ -289,13 +683,14 @@ pub fn scatter_results(batch: FormedBatch, result: Result<Vec<Tensor>>) {
                     .iter()
                     .map(|o| o.slice_axis(0, i, i + 1))
                     .collect();
-                row.reply.set(per_row);
+                row.completion.complete_from_drain(per_row);
             }
         }
         Err(e) => {
             let msg = format!("batched execution failed: {e}");
             for row in batch.rows {
-                row.reply.set(Err(anyhow::anyhow!(msg.clone())));
+                row.completion
+                    .complete_from_drain(Err(anyhow::anyhow!(msg.clone())));
             }
         }
     }
@@ -308,7 +703,7 @@ pub fn scatter_row_results(batch: FormedBatch, result: Result<Vec<Vec<Tensor>>>)
     match result {
         Ok(per_row) if per_row.len() == batch.rows.len() => {
             for (row, outs) in batch.rows.into_iter().zip(per_row) {
-                row.reply.set(Ok(outs));
+                row.completion.complete_from_drain(Ok(outs));
             }
         }
         Ok(per_row) => {
@@ -318,13 +713,15 @@ pub fn scatter_row_results(batch: FormedBatch, result: Result<Vec<Vec<Tensor>>>)
                 batch.rows.len()
             );
             for row in batch.rows {
-                row.reply.set(Err(anyhow::anyhow!(msg.clone())));
+                row.completion
+                    .complete_from_drain(Err(anyhow::anyhow!(msg.clone())));
             }
         }
         Err(e) => {
             let msg = format!("batched fallback execution failed: {e}");
             for row in batch.rows {
-                row.reply.set(Err(anyhow::anyhow!(msg.clone())));
+                row.completion
+                    .complete_from_drain(Err(anyhow::anyhow!(msg.clone())));
             }
         }
     }
@@ -333,6 +730,7 @@ pub fn scatter_row_results(batch: FormedBatch, result: Result<Vec<Vec<Tensor>>>)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::Ordering;
 
     fn key(b: usize) -> BatchKey {
         BatchKey::Artifact {
@@ -348,22 +746,38 @@ mod tests {
         }
     }
 
-    fn slot() -> OneShot<Result<Vec<Tensor>>> {
-        OneShot::new()
+    /// A response slot + completion pair for direct batcher tests.
+    fn completion(metrics: &Arc<Metrics>) -> (OneShot<Result<OpResponse>>, Completion) {
+        let slot: OneShot<Result<OpResponse>> = OneShot::new();
+        let c = Completion::new(
+            Arc::clone(metrics),
+            slot.clone(),
+            "fir",
+            "test".into(),
+            Instant::now(),
+            None,
+        );
+        (slot, c)
+    }
+
+    fn throwaway(metrics: &Arc<Metrics>) -> Completion {
+        completion(metrics).1
     }
 
     #[test]
     fn full_batch_flushes_immediately() {
+        let m = Arc::new(Metrics::new());
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_secs(10),
             ..Default::default()
         });
         for i in 0..4 {
-            b.enqueue(key(4), Tensor::filled(&[1, 16], i as f32), slot());
+            b.enqueue(key(4), Tensor::filled(&[1, 16], i as f32), throwaway(&m));
         }
         let batch = b.next_batch(Duration::from_millis(50)).expect("batch");
         assert_eq!(batch.rows.len(), 4);
         assert_eq!(batch.input.shape(), &[4, 16]);
+        assert!(batch.adaptive.is_none(), "artifact batches are not adaptive");
         // rows stacked in arrival order
         assert_eq!(batch.input.at(&[2, 0]), 2.0);
         assert_eq!(b.queued(), 0);
@@ -371,11 +785,12 @@ mod tests {
 
     #[test]
     fn partial_batch_flushes_after_max_wait_with_padding() {
+        let m = Arc::new(Metrics::new());
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_millis(5),
             ..Default::default()
         });
-        b.enqueue(key(4), Tensor::filled(&[1, 16], 7.0), slot());
+        b.enqueue(key(4), Tensor::filled(&[1, 16], 7.0), throwaway(&m));
         let t0 = Instant::now();
         let batch = b.next_batch(Duration::from_secs(1)).expect("batch");
         assert!(t0.elapsed() >= Duration::from_millis(4), "flushed too early");
@@ -395,20 +810,22 @@ mod tests {
 
     #[test]
     fn mismatched_row_length_rejected_at_enqueue() {
+        let m = Arc::new(Metrics::new());
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_secs(10),
             ..Default::default()
         });
-        let ok = slot();
-        b.enqueue(key(4), Tensor::filled(&[1, 16], 1.0), ok.clone());
+        let (ok, c) = completion(&m);
+        b.enqueue(key(4), Tensor::filled(&[1, 16], 1.0), c);
         // same key, different signal length: must fail fast, not poison form()
-        let bad = slot();
-        b.enqueue(key(4), Tensor::filled(&[1, 32], 2.0), bad.clone());
+        let (bad, c) = completion(&m);
+        b.enqueue(key(4), Tensor::filled(&[1, 32], 2.0), c);
         let err = bad.try_take().expect("reply must complete immediately");
         assert!(err.is_err(), "mismatched row must error");
         assert_eq!(b.queued(), 1, "bad row must not be queued");
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1, "rejection is a failed completion");
         // the well-formed row still flushes normally
-        b.enqueue(key(4), Tensor::filled(&[1, 16], 3.0), slot());
+        b.enqueue(key(4), Tensor::filled(&[1, 16], 3.0), throwaway(&m));
         assert_eq!(b.queued(), 2);
         assert!(ok.try_take().is_none(), "good row unaffected");
     }
@@ -417,11 +834,12 @@ mod tests {
     fn deadline_with_pending_unexpired_rows_returns_none_without_spinning() {
         // rows pending but far from expiry: next_batch must give up at the
         // idle deadline (previously this path busy-spun until expiry)
+        let m = Arc::new(Metrics::new());
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_secs(60),
             ..Default::default()
         });
-        b.enqueue(key(4), Tensor::filled(&[1, 8], 1.0), slot());
+        b.enqueue(key(4), Tensor::filled(&[1, 8], 1.0), throwaway(&m));
         let t0 = Instant::now();
         assert!(b.next_batch(Duration::from_millis(30)).is_none());
         let dt = t0.elapsed();
@@ -432,16 +850,17 @@ mod tests {
 
     #[test]
     fn distinct_keys_do_not_mix() {
+        let m = Arc::new(Metrics::new());
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_millis(1),
             ..Default::default()
         });
-        b.enqueue(key(2), Tensor::filled(&[1, 16], 1.0), slot());
+        b.enqueue(key(2), Tensor::filled(&[1, 16], 1.0), throwaway(&m));
         let other = BatchKey::Artifact {
             name: "other".into(),
             batch: 2,
         };
-        b.enqueue(other, Tensor::filled(&[1, 16], 2.0), slot());
+        b.enqueue(other, Tensor::filled(&[1, 16], 2.0), throwaway(&m));
         let b1 = b.next_batch(Duration::from_millis(100)).unwrap();
         let b2 = b.next_batch(Duration::from_millis(100)).unwrap();
         assert_eq!(b1.rows.len(), 1);
@@ -451,29 +870,33 @@ mod tests {
 
     #[test]
     fn fallback_full_bucket_flushes_immediately() {
+        let m = Arc::new(Metrics::new());
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_secs(10),
             max_bucket: 8,
         });
         for i in 0..8 {
-            b.enqueue(fkey(16), Tensor::filled(&[1, 16], i as f32), slot());
+            b.enqueue(fkey(16), Tensor::filled(&[1, 16], i as f32), throwaway(&m));
         }
         let batch = b.next_batch(Duration::from_millis(50)).expect("batch");
         assert_eq!(batch.rows.len(), 8);
         assert_eq!(batch.input.shape(), &[8, 16], "full bucket, no padding");
         assert_eq!(batch.input.at(&[5, 0]), 5.0);
+        let d = batch.adaptive.expect("fallback batches carry the decision");
+        assert_eq!(d.cap, 8, "tight-loop arrivals keep the static ceiling");
         assert_eq!(b.queued(), 0);
     }
 
     #[test]
     fn fallback_bucket_rounds_up_to_next_power_of_two() {
         // 3 rows expire -> bucket 4 with one zero padding row
+        let m = Arc::new(Metrics::new());
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_millis(2),
             max_bucket: 8,
         });
         for i in 0..3 {
-            b.enqueue(fkey(16), Tensor::filled(&[1, 16], (i + 1) as f32), slot());
+            b.enqueue(fkey(16), Tensor::filled(&[1, 16], (i + 1) as f32), throwaway(&m));
         }
         let batch = b.next_batch(Duration::from_secs(1)).expect("batch");
         assert_eq!(batch.rows.len(), 3);
@@ -485,13 +908,14 @@ mod tests {
     #[test]
     fn fallback_bucket_boundary_sizes_pad_exactly() {
         // bucket-boundary row counts (1, 2, 4) need no padding at all
+        let m = Arc::new(Metrics::new());
         for rows in [1usize, 2, 4] {
             let b = Batcher::new(BatcherConfig {
                 max_wait: Duration::from_millis(1),
                 max_bucket: 8,
             });
             for i in 0..rows {
-                b.enqueue(fkey(8), Tensor::filled(&[1, 8], (i + 1) as f32), slot());
+                b.enqueue(fkey(8), Tensor::filled(&[1, 8], (i + 1) as f32), throwaway(&m));
             }
             let batch = b.next_batch(Duration::from_secs(1)).expect("batch");
             assert_eq!(batch.rows.len(), rows);
@@ -506,12 +930,14 @@ mod tests {
     #[test]
     fn fallback_deadline_expiry_flushes_partial_bucket() {
         // a lone row far below the bucket cap still flushes at max_wait:
-        // the degenerate B=1 case of the bucketed path
+        // the degenerate B=1 case of the bucketed path (a cold key has no
+        // rate estimate, so the static deadline is in force)
+        let m = Arc::new(Metrics::new());
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_millis(5),
             max_bucket: 8,
         });
-        b.enqueue(fkey(16), Tensor::filled(&[1, 16], 9.0), slot());
+        b.enqueue(fkey(16), Tensor::filled(&[1, 16], 9.0), throwaway(&m));
         let t0 = Instant::now();
         let batch = b.next_batch(Duration::from_secs(1)).expect("batch");
         assert!(t0.elapsed() >= Duration::from_millis(4), "flushed too early");
@@ -524,9 +950,10 @@ mod tests {
         // fallback keys carry the expected length, so even the FIRST row
         // is validated — and the reject path must not leave an empty
         // queue entry behind
+        let m = Arc::new(Metrics::new());
         let b = Batcher::new(BatcherConfig::default());
-        let bad = slot();
-        b.enqueue(fkey(16), Tensor::filled(&[1, 8], 1.0), bad.clone());
+        let (bad, c) = completion(&m);
+        b.enqueue(fkey(16), Tensor::filled(&[1, 8], 1.0), c);
         assert!(bad.try_take().expect("immediate reply").is_err());
         assert_eq!(b.queued(), 0, "rejected row must not be queued");
         assert!(
@@ -539,13 +966,14 @@ mod tests {
     fn non_power_of_two_max_bucket_rounds_down() {
         // max_bucket 6 normalizes to 4: full flush at 4 rows, remainder
         // pads to its own power-of-two bucket
+        let m = Arc::new(Metrics::new());
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_millis(1),
             max_bucket: 6,
         });
         assert_eq!(b.config().max_bucket, 4);
         for i in 0..6 {
-            b.enqueue(fkey(8), Tensor::filled(&[1, 8], (i + 1) as f32), slot());
+            b.enqueue(fkey(8), Tensor::filled(&[1, 8], (i + 1) as f32), throwaway(&m));
         }
         let first = b.next_batch(Duration::from_secs(1)).expect("full bucket");
         assert_eq!(first.rows.len(), 4);
@@ -559,14 +987,15 @@ mod tests {
     fn mixed_length_fallback_routes_to_distinct_buckets() {
         // what PR 1 rejected as an error for artifact keys is ordinary
         // bucket routing for fallback keys: the shape is part of the key
+        let m = Arc::new(Metrics::new());
         let b = Batcher::new(BatcherConfig {
             max_wait: Duration::from_millis(1),
             max_bucket: 8,
         });
-        let r16 = slot();
-        let r32 = slot();
-        b.enqueue(fkey(16), Tensor::filled(&[1, 16], 1.0), r16.clone());
-        b.enqueue(fkey(32), Tensor::filled(&[1, 32], 2.0), r32.clone());
+        let (r16, c16) = completion(&m);
+        let (r32, c32) = completion(&m);
+        b.enqueue(fkey(16), Tensor::filled(&[1, 16], 1.0), c16);
+        b.enqueue(fkey(32), Tensor::filled(&[1, 32], 2.0), c32);
         assert!(r16.try_take().is_none(), "no rejection for mixed lengths");
         assert!(r32.try_take().is_none(), "no rejection for mixed lengths");
         let b1 = b.next_batch(Duration::from_millis(100)).expect("bucket 1");
@@ -577,20 +1006,134 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_policy_derives_cap_and_wait_from_rate() {
+        let cfg = BatcherConfig {
+            max_wait: Duration::from_millis(2),
+            max_bucket: 8,
+        };
+        // no estimate: static ceilings (cold-start == pre-adaptive behavior)
+        assert_eq!(effective_bucket(&cfg, 0.0), 8);
+        assert_eq!(effective_wait(&cfg, 0.0), cfg.max_wait);
+        // very fast traffic: ceiling cap, deadline shrinks to ~2x the
+        // predicted fill time of the full bucket
+        assert_eq!(effective_bucket(&cfg, 1_000_000.0), 8);
+        assert!(effective_wait(&cfg, 1_000_000.0) < Duration::from_micros(50));
+        // ~2500 rows/s with a 2ms window: ~6 expected rows -> bucket 4
+        assert_eq!(effective_bucket(&cfg, 2_500.0), 4);
+        // slow traffic: bucket 1, flush immediately
+        assert_eq!(effective_bucket(&cfg, 100.0), 1);
+        assert_eq!(effective_wait(&cfg, 100.0), Duration::ZERO);
+        // the wait never exceeds the static ceiling
+        assert!(effective_wait(&cfg, 2_500.0) <= cfg.max_wait);
+    }
+
+    #[test]
+    fn adaptive_shrinks_bucket_for_slow_arrivals() {
+        // two arrivals ~30ms apart -> rate ~33 rows/s; with a 1ms window
+        // the EWMA predicts a lonely key, so the effective bucket drops to
+        // 1 and both rows flush as immediate B=1 batches (no padding, no
+        // deadline tax) instead of waiting to pad toward 8
+        let m = Arc::new(Metrics::new());
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_millis(1),
+            max_bucket: 8,
+        });
+        b.enqueue(fkey(8), Tensor::filled(&[1, 8], 1.0), throwaway(&m));
+        std::thread::sleep(Duration::from_millis(30));
+        b.enqueue(fkey(8), Tensor::filled(&[1, 8], 2.0), throwaway(&m));
+        let first = b.next_batch(Duration::from_secs(1)).expect("first row");
+        assert_eq!(first.rows.len(), 1, "shrunk bucket takes one row");
+        assert_eq!(first.input.shape(), &[1, 8], "no padding at bucket 1");
+        let d = first.adaptive.expect("decision recorded");
+        assert_eq!(d.cap, 1, "slow key must shrink below the ceiling");
+        let second = b.next_batch(Duration::from_secs(1)).expect("second row");
+        assert_eq!(second.rows.len(), 1);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn inflight_gate_blocks_at_limit_and_releases_on_drop() {
+        let m = Arc::new(Metrics::new());
+        let gate = InflightGate::new(2, Arc::clone(&m));
+        let p1 = gate.acquire();
+        let p2 = gate.acquire();
+        assert_eq!(gate.in_flight(), 2);
+        assert_eq!(m.inflight_batched_requests.load(Ordering::Relaxed), 2);
+        // a third acquire must block until a permit drops
+        let gate2 = Arc::clone(&gate);
+        let acquired = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let flag = Arc::clone(&acquired);
+        let waiter = std::thread::spawn(move || {
+            let _p = gate2.acquire();
+            flag.store(true, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!acquired.load(Ordering::SeqCst), "gate must block at limit");
+        drop(p1);
+        waiter.join().unwrap();
+        assert!(acquired.load(Ordering::SeqCst), "drop must admit the waiter");
+        drop(p2);
+        assert_eq!(gate.in_flight(), 0);
+        assert_eq!(m.inflight_batched_requests.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fail_pending_settles_queued_rows() {
+        // the shutdown path: rows parked behind a long flush deadline are
+        // failed explicitly so their waiters unblock with an error
+        let m = Arc::new(Metrics::new());
+        let b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_secs(60),
+            ..Default::default()
+        });
+        let (s1, c1) = completion(&m);
+        let (s2, c2) = completion(&m);
+        b.enqueue(fkey(16), Tensor::filled(&[1, 16], 1.0), c1);
+        b.enqueue(fkey(32), Tensor::filled(&[1, 32], 2.0), c2);
+        assert_eq!(b.fail_pending("shutting down"), 2);
+        assert!(s1.try_take().expect("settled").is_err());
+        assert!(s2.try_take().expect("settled").is_err());
+        assert_eq!(b.queued(), 0);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 2);
+        // the batcher is closed now: a racing/late enqueue fails fast
+        // instead of stranding in a queue no drain loop will visit
+        let (s3, c3) = completion(&m);
+        b.enqueue(fkey(16), Tensor::filled(&[1, 16], 3.0), c3);
+        assert!(s3.try_take().expect("settled").is_err());
+        assert_eq!(b.queued(), 0, "closed batcher must not queue rows");
+    }
+
+    #[test]
+    fn dropped_completion_fails_its_request() {
+        // a completion dropped without completing (died batch thread,
+        // shutdown) must error the caller instead of stranding it
+        let m = Arc::new(Metrics::new());
+        let (slot, c) = completion(&m);
+        drop(c);
+        let got = slot.try_take().expect("drop must settle the slot");
+        assert!(got.is_err());
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
     fn scatter_splits_rows_and_discards_padding() {
-        let replies: Vec<_> = (0..2).map(|_| slot()).collect();
-        let rows: Vec<Pending> = replies
-            .iter()
-            .map(|r| Pending {
+        let m = Arc::new(Metrics::new());
+        let replies: Vec<_> = (0..2).map(|_| completion(&m)).collect();
+        let mut slots = Vec::new();
+        let mut rows = Vec::new();
+        for (slot, c) in replies {
+            slots.push(slot);
+            rows.push(Pending {
                 input: Tensor::zeros(&[1, 4]),
-                reply: r.clone(),
+                completion: c,
                 enqueued: Instant::now(),
-            })
-            .collect();
+            });
+        }
         let batch = FormedBatch {
             key: key(4),
             input: Tensor::zeros(&[4, 4]),
             rows,
+            adaptive: None,
         };
         // one output of shape (4, 3): row i filled with i
         let out = Tensor::new(
@@ -599,79 +1142,101 @@ mod tests {
         )
         .unwrap();
         scatter_results(batch, Ok(vec![out]));
-        for (i, r) in replies.iter().enumerate() {
+        for (i, r) in slots.iter().enumerate() {
             let got = r.try_take().unwrap().unwrap();
-            assert_eq!(got[0].shape(), &[1, 3]);
-            assert_eq!(got[0].data(), &[i as f32; 3]);
+            assert_eq!(got.outputs[0].shape(), &[1, 3]);
+            assert_eq!(got.outputs[0].data(), &[i as f32; 3]);
+            assert!(got.batched, "drain completions are batched responses");
         }
+        assert_eq!(m.drain_completions.load(Ordering::Relaxed), 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
     }
 
     #[test]
     fn scatter_propagates_errors_to_all_rows() {
-        let replies: Vec<_> = (0..3).map(|_| slot()).collect();
-        let rows: Vec<Pending> = replies
-            .iter()
-            .map(|r| Pending {
+        let m = Arc::new(Metrics::new());
+        let replies: Vec<_> = (0..3).map(|_| completion(&m)).collect();
+        let mut slots = Vec::new();
+        let mut rows = Vec::new();
+        for (slot, c) in replies {
+            slots.push(slot);
+            rows.push(Pending {
                 input: Tensor::zeros(&[1, 4]),
-                reply: r.clone(),
+                completion: c,
                 enqueued: Instant::now(),
-            })
-            .collect();
+            });
+        }
         let batch = FormedBatch {
             key: key(4),
             input: Tensor::zeros(&[4, 4]),
             rows,
+            adaptive: None,
         };
         scatter_results(batch, Err(anyhow::anyhow!("boom")));
-        for r in &replies {
+        for r in &slots {
             assert!(r.try_take().unwrap().is_err());
         }
+        assert_eq!(m.failed.load(Ordering::Relaxed), 3);
+        assert_eq!(
+            m.drain_completions.load(Ordering::Relaxed),
+            3,
+            "failed drain completions still count as drain-side"
+        );
     }
 
     #[test]
     fn scatter_rows_delivers_per_request_outputs() {
-        let replies: Vec<_> = (0..2).map(|_| slot()).collect();
-        let rows: Vec<Pending> = replies
-            .iter()
-            .map(|r| Pending {
+        let m = Arc::new(Metrics::new());
+        let replies: Vec<_> = (0..2).map(|_| completion(&m)).collect();
+        let mut slots = Vec::new();
+        let mut rows = Vec::new();
+        for (slot, c) in replies {
+            slots.push(slot);
+            rows.push(Pending {
                 input: Tensor::zeros(&[1, 4]),
-                reply: r.clone(),
+                completion: c,
                 enqueued: Instant::now(),
-            })
-            .collect();
+            });
+        }
         let batch = FormedBatch {
             key: fkey(4),
             input: Tensor::zeros(&[2, 4]),
             rows,
+            adaptive: None,
         };
         let per_row = vec![
             vec![Tensor::filled(&[1, 3], 0.0)],
             vec![Tensor::filled(&[1, 3], 1.0)],
         ];
         scatter_row_results(batch, Ok(per_row));
-        for (i, r) in replies.iter().enumerate() {
+        for (i, r) in slots.iter().enumerate() {
             let got = r.try_take().unwrap().unwrap();
-            assert_eq!(got[0].shape(), &[1, 3]);
-            assert_eq!(got[0].data(), &[i as f32; 3]);
+            assert_eq!(got.outputs[0].shape(), &[1, 3]);
+            assert_eq!(got.outputs[0].data(), &[i as f32; 3]);
         }
+        assert_eq!(m.drain_completions.load(Ordering::Relaxed), 2);
     }
 
     #[test]
     fn scatter_rows_errors_on_arity_mismatch_and_failure() {
         for bad in [true, false] {
-            let replies: Vec<_> = (0..2).map(|_| slot()).collect();
-            let rows: Vec<Pending> = replies
-                .iter()
-                .map(|r| Pending {
+            let m = Arc::new(Metrics::new());
+            let replies: Vec<_> = (0..2).map(|_| completion(&m)).collect();
+            let mut slots = Vec::new();
+            let mut rows = Vec::new();
+            for (slot, c) in replies {
+                slots.push(slot);
+                rows.push(Pending {
                     input: Tensor::zeros(&[1, 4]),
-                    reply: r.clone(),
+                    completion: c,
                     enqueued: Instant::now(),
-                })
-                .collect();
+                });
+            }
             let batch = FormedBatch {
                 key: fkey(4),
                 input: Tensor::zeros(&[2, 4]),
                 rows,
+                adaptive: None,
             };
             if bad {
                 // one row result for two requests: everyone must error
@@ -679,7 +1244,7 @@ mod tests {
             } else {
                 scatter_row_results(batch, Err(anyhow::anyhow!("boom")));
             }
-            for r in &replies {
+            for r in &slots {
                 assert!(r.try_take().unwrap().is_err());
             }
         }

@@ -1,6 +1,25 @@
 //! Serving metrics: per-op counters, latency histograms, batch fill
-//! accounting (artifact and shape-bucketed fallback batches), and
-//! per-bucket plan-cache statistics.
+//! accounting (artifact and shape-bucketed fallback batches), per-bucket
+//! plan-cache statistics, and the completion-driven serving gauges.
+//!
+//! Invariants the counters encode:
+//!
+//! * every submitted request ends in exactly one `record_completion`
+//!   (`completed + failed == settled requests`), with latency measured
+//!   from the submit timestamp `t0` — batched requests carry `t0`
+//!   through the batcher's `Pending`, so queue wait is included;
+//! * `drain_completions` counts responses finished directly by a batch
+//!   execution thread — successes *and* failures, since both settle from
+//!   the drain-side scatter.  `batched_fallback_requests` counts only
+//!   successfully executed buckets (so padding waste never includes
+//!   failed buckets), so with batching on, only bucketed fallback
+//!   traffic, and every bucket executing successfully,
+//!   `drain_completions == batched_fallback_requests` — the
+//!   "no parked-worker relays" proof the e2e tests assert (they assert
+//!   `failed == 0` first); a failed bucket makes `drain_completions`
+//!   strictly larger, never smaller;
+//! * `inflight_batched_requests` is a gauge mirroring the admission
+//!   gate: it returns to zero once all batched replies complete.
 
 use crate::util::histogram::Histogram;
 use std::collections::BTreeMap;
@@ -11,8 +30,11 @@ use std::time::Duration;
 /// Shared, thread-safe metrics sink.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests submitted (settled or not).
     pub requests: AtomicU64,
+    /// Requests completed successfully.
     pub completed: AtomicU64,
+    /// Requests that settled with an error.
     pub failed: AtomicU64,
     /// Requests coalesced into artifact batches.
     pub batched_requests: AtomicU64,
@@ -27,6 +49,24 @@ pub struct Metrics {
     pub fallback_batches_executed: AtomicU64,
     /// Zero rows padded onto fallback buckets (masked out at scatter).
     pub fallback_padded_rows: AtomicU64,
+    /// Gauge: batched requests currently holding an in-flight admission
+    /// slot (enqueue through reply completion).  Returns to zero when the
+    /// coordinator is idle.
+    pub inflight_batched_requests: AtomicU64,
+    /// Responses completed directly by a drain-side batch execution
+    /// thread (no worker relay).  With only bucketed fallback traffic
+    /// this equals `batched_fallback_requests`.
+    pub drain_completions: AtomicU64,
+    /// Gauge: the effective bucket cap the adaptive policy applied to the
+    /// most recently formed fallback batch.
+    pub adaptive_bucket_cap: AtomicU64,
+    /// Gauge: the effective flush deadline (microseconds) applied to the
+    /// most recently formed fallback batch.
+    pub adaptive_bucket_wait_us: AtomicU64,
+    /// Fallback batches formed under a cap *below* the static
+    /// `max_bucket` ceiling (the adaptive policy actually shrinking).
+    pub adaptive_bucket_shrinks: AtomicU64,
+    /// Requests served by the fallback (planned/interpreter) path.
     pub interp_fallbacks: AtomicU64,
     /// Fallback requests served by an already-compiled exec plan.
     pub plan_cache_hits: AtomicU64,
@@ -42,14 +82,45 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh all-zero sink.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Count one submitted request.
     pub fn record_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one in-flight batched request admitted through the gate.
+    pub fn inc_inflight_batched(&self) {
+        self.inflight_batched_requests
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Release one in-flight batched request (its reply completed).
+    pub fn dec_inflight_batched(&self) {
+        self.inflight_batched_requests
+            .fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Count one response completed directly from a drain-side batch
+    /// execution thread.
+    pub fn record_drain_completion(&self) {
+        self.drain_completions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the adaptive sizing decision a fallback batch formed under.
+    pub fn record_adaptive_bucket(&self, cap: usize, wait: Duration, shrunk: bool) {
+        self.adaptive_bucket_cap.store(cap as u64, Ordering::Relaxed);
+        self.adaptive_bucket_wait_us
+            .store(wait.as_micros().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+        if shrunk {
+            self.adaptive_bucket_shrinks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Settle one request: latency is measured from its submit timestamp.
     pub fn record_completion(&self, op: &str, latency: Duration, ok: bool) {
         if ok {
             self.completed.fetch_add(1, Ordering::Relaxed);
@@ -62,6 +133,8 @@ impl Metrics {
             .record_duration(latency);
     }
 
+    /// Record one artifact batch: `coalesced` real rows plus `padding`
+    /// zero rows up to the artifact's fixed batch dim.
     pub fn record_batch(&self, coalesced: usize, padding: usize) {
         self.batches_executed.fetch_add(1, Ordering::Relaxed);
         self.batched_requests
@@ -79,6 +152,7 @@ impl Metrics {
             .fetch_add(padding as u64, Ordering::Relaxed);
     }
 
+    /// Count one request routed to the fallback (non-artifact) path.
     pub fn record_interp_fallback(&self) {
         self.interp_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
@@ -146,7 +220,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={}\n",
+            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} inflight_batched={} drain_completions={} adaptive_bucket_cap={} adaptive_bucket_wait_us={} adaptive_bucket_shrinks={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={}\n",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -157,6 +231,11 @@ impl Metrics {
             self.fallback_batches_executed.load(Ordering::Relaxed),
             self.fallback_padded_rows.load(Ordering::Relaxed),
             self.batch_fill_ratio(),
+            self.inflight_batched_requests.load(Ordering::Relaxed),
+            self.drain_completions.load(Ordering::Relaxed),
+            self.adaptive_bucket_cap.load(Ordering::Relaxed),
+            self.adaptive_bucket_wait_us.load(Ordering::Relaxed),
+            self.adaptive_bucket_shrinks.load(Ordering::Relaxed),
             self.interp_fallbacks.load(Ordering::Relaxed),
             self.plan_cache_hits.load(Ordering::Relaxed),
             self.plan_cache_misses.load(Ordering::Relaxed),
@@ -233,6 +312,28 @@ mod tests {
         assert_eq!(m.plan_cache_misses.load(Ordering::Relaxed), 1);
         let r = m.report();
         assert!(r.contains("bucket B=4"), "report lists bucket stats: {r}");
+    }
+
+    #[test]
+    fn completion_driven_gauges_and_counters() {
+        let m = Metrics::new();
+        m.inc_inflight_batched();
+        m.inc_inflight_batched();
+        m.dec_inflight_batched();
+        assert_eq!(m.inflight_batched_requests.load(Ordering::Relaxed), 1);
+        m.record_drain_completion();
+        m.record_drain_completion();
+        assert_eq!(m.drain_completions.load(Ordering::Relaxed), 2);
+        // adaptive gauges: last decision wins, shrinks accumulate
+        m.record_adaptive_bucket(8, Duration::from_millis(2), false);
+        m.record_adaptive_bucket(2, Duration::from_micros(500), true);
+        assert_eq!(m.adaptive_bucket_cap.load(Ordering::Relaxed), 2);
+        assert_eq!(m.adaptive_bucket_wait_us.load(Ordering::Relaxed), 500);
+        assert_eq!(m.adaptive_bucket_shrinks.load(Ordering::Relaxed), 1);
+        let r = m.report();
+        assert!(r.contains("drain_completions=2"), "report: {r}");
+        assert!(r.contains("adaptive_bucket_cap=2"), "report: {r}");
+        assert!(r.contains("inflight_batched=1"), "report: {r}");
     }
 
     #[test]

@@ -23,9 +23,32 @@
 //!   way out, so they cannot leak into replies; a lone request is just
 //!   the degenerate B=1 bucket of the same path.
 //!
+//! # Completion-driven request lifecycle
+//!
+//! Replies to batched requests are completed *directly from the batch
+//! execution thread* — the request's response slot, op label, and submit
+//! timestamp `t0` travel through the batcher inside a
+//! [`batcher::Completion`], and the drain-side scatter finishes each
+//! response in place.  No thread-pool worker is ever parked on a relay
+//! wait, so in-flight batched concurrency is bounded only by the
+//! [`batcher::InflightGate`] ([`CoordinatorConfig::max_inflight_batched`],
+//! backpressure at enqueue), not by the pool size.  On top of the freed
+//! drain loop, the batcher sizes fallback buckets *adaptively*: a per-key
+//! EWMA of observed arrival rates picks the effective bucket cap and
+//! flush deadline, clipper-style, with the static [`BatcherConfig`]
+//! values as ceilings.
+//!
 //! [`Metrics`] surfaces the model: `batched_fallback_requests`,
 //! `fallback_batches_executed`, `fallback_padded_rows`,
-//! `batch_fill_ratio()`, and per-bucket plan-cache hit/miss stats.
+//! `batch_fill_ratio()`, per-bucket plan-cache hit/miss stats, the
+//! `inflight_batched_requests` gauge, `drain_completions` (== batched
+//! fallback requests when every bucket executes successfully — the
+//! no-worker-relay invariant the e2e tests pin), and the
+//! `adaptive_bucket_*` gauges.
+//!
+//! See the repo-root `ARCHITECTURE.md` for the full lifecycle walk-through
+//! (submit → bucket → plan-cache → compile `(B, L)` → execute →
+//! drain-thread scatter → completion).
 
 pub mod batcher;
 pub mod metrics;
@@ -35,7 +58,9 @@ pub mod router;
 pub mod server;
 pub mod service;
 
-pub use batcher::{BatchKey, Batcher, BatcherConfig};
+pub use batcher::{
+    BatchKey, Batcher, BatcherConfig, BucketDecision, Completion, InflightGate, InflightPermit,
+};
 pub use metrics::Metrics;
 pub use pipeline::{Pipeline, Stage};
 pub use request::{ImplPref, OpKind, OpRequest, OpResponse, Precision};

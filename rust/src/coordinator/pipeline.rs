@@ -6,6 +6,14 @@
 //! The fused `pfb` artifact exists too; the `ablation` bench compares the
 //! fused graph against this two-stage chain to quantify fusion benefit
 //! (DESIGN.md §7/L2).
+//!
+//! Concurrency invariant: [`Pipeline::run_many`] submits every stage-i
+//! request before awaiting any, so co-arriving same-shape stages coalesce
+//! in the coordinator's batchers.  Batched requests complete directly
+//! from the drain-side scatter (no thread-pool worker is parked per
+//! request), so the number of concurrently in-flight pipeline items is
+//! bounded only by the coordinator's in-flight-batched limit — not by its
+//! worker-pool size.
 
 use super::request::{ImplPref, OpKind, OpRequest, Precision};
 use super::service::Coordinator;
@@ -15,12 +23,16 @@ use anyhow::{bail, Result};
 /// One pipeline stage: an op plus routing preferences.
 #[derive(Debug, Clone)]
 pub struct Stage {
+    /// The op this stage executes.
     pub op: OpKind,
+    /// Implementation preference forwarded to the router.
     pub impl_pref: ImplPref,
+    /// Compute precision forwarded to the router.
     pub precision: Precision,
 }
 
 impl Stage {
+    /// Stage with default routing (`Auto`, f32).
     pub fn new(op: OpKind) -> Stage {
         Stage {
             op,
@@ -36,14 +48,17 @@ impl Stage {
 /// stages (dft, pfb) feed multi-input stages (idft) naturally.
 #[derive(Debug, Clone, Default)]
 pub struct Pipeline {
+    /// Stages in execution order.
     pub stages: Vec<Stage>,
 }
 
 impl Pipeline {
+    /// Empty pipeline (stages are appended with [`Pipeline::then`]).
     pub fn new() -> Pipeline {
         Pipeline::default()
     }
 
+    /// Append a stage.
     pub fn then(mut self, stage: Stage) -> Pipeline {
         self.stages.push(stage);
         self
@@ -69,8 +84,11 @@ impl Pipeline {
     /// All stage-i requests are submitted before any is awaited, so
     /// co-arriving same-shape stages coalesce in the coordinator's
     /// batchers — fallback stages in the shape-bucketed batcher, artifact
-    /// stages in the artifact batcher.  Outputs come back in item order;
-    /// the first failing item aborts the pipeline with its error.
+    /// stages in the artifact batcher.  Because batched replies are
+    /// completed from the drain-side scatter rather than relayed through
+    /// parked workers, submitting more items than the coordinator has
+    /// worker threads is safe and expected.  Outputs come back in item
+    /// order; the first failing item aborts the pipeline with its error.
     pub fn run_many(
         &self,
         coord: &Coordinator,
@@ -157,6 +175,33 @@ mod tests {
                 assert_eq!(a, b, "run_many diverged from per-item run");
             }
         }
+    }
+
+    #[test]
+    fn run_many_handles_more_items_than_workers() {
+        // the lifted in-flight cap at the pipeline layer: far more
+        // concurrent items than the 2-worker pool could ever park relay
+        // closures for — all must complete through drain-side scatter
+        let coord = empty_coordinator(true);
+        let p = Pipeline::pfb_two_stage();
+        let l = 32 * 40;
+        let items: Vec<Vec<Tensor>> = (0..12)
+            .map(|i| vec![Tensor::randn(&[1, l], 100 + i)])
+            .collect();
+        let many = p.run_many(&coord, items).unwrap();
+        assert_eq!(many.len(), 12);
+        let m = coord.metrics();
+        use std::sync::atomic::Ordering;
+        assert_eq!(
+            m.inflight_batched_requests.load(Ordering::Relaxed),
+            0,
+            "in-flight gauge must settle once the pipeline drains"
+        );
+        assert_eq!(
+            m.drain_completions.load(Ordering::Relaxed),
+            m.batched_fallback_requests.load(Ordering::Relaxed),
+            "batched stage replies must come from the drain scatter"
+        );
     }
 
     #[test]

@@ -1,4 +1,11 @@
 //! Request/response types of the TINA serving surface.
+//!
+//! These are pure data: an [`OpRequest`] names an op, an implementation
+//! preference, a precision, and input tensors; an [`OpResponse`] carries
+//! output tensors plus provenance (`served_by`, `batched`).  The stable
+//! contract consumers rely on: `served_by` is the artifact name for the
+//! PJRT path and `"interp:<op>"` for the fallback path, regardless of
+//! which engine (interpreter or planned executor) actually ran it.
 
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
@@ -6,15 +13,25 @@ use anyhow::{bail, Result};
 /// The signal-processing operations TINA serves (paper Table 1 + §5.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum OpKind {
+    /// Elementwise multiply (paper Table 1).
     EwMult,
+    /// Elementwise add (paper Table 1).
     EwAdd,
+    /// Matrix multiply (paper Table 1).
     MatMul,
+    /// Reduce-sum of a vector (paper Table 1).
     Summation,
+    /// Discrete Fourier transform, (re, im) outputs.
     Dft,
+    /// Inverse DFT from a (re, im) pair.
     Idft,
+    /// FIR low-pass filter over a (B, L) signal.
     Fir,
+    /// Sliding-window unfold (im2col-style framing).
     Unfold,
+    /// Polyphase filter bank, FIR stage only.
     PfbFir,
+    /// Fused polyphase filter bank (FIR bank + DFT across branches).
     Pfb,
     /// Extension op (paper future work): short-time Fourier transform.
     Stft,
@@ -38,6 +55,7 @@ impl OpKind {
         }
     }
 
+    /// Inverse of [`OpKind::as_str`].
     pub fn parse(s: &str) -> Result<OpKind> {
         Ok(match s {
             "ewmult" => OpKind::EwMult,
@@ -78,6 +96,7 @@ impl OpKind {
         matches!(self, OpKind::Fir | OpKind::PfbFir | OpKind::Pfb | OpKind::Stft)
     }
 
+    /// Input-tensor arity the op's lowering expects.
     pub fn expected_inputs(&self) -> usize {
         match self {
             OpKind::EwMult | OpKind::EwAdd | OpKind::MatMul | OpKind::Idft => 2,
@@ -101,6 +120,7 @@ pub enum ImplPref {
 }
 
 impl ImplPref {
+    /// Inverse of [`ImplPref::as_str`].
     pub fn parse(s: &str) -> Result<ImplPref> {
         Ok(match s {
             "auto" => ImplPref::Auto,
@@ -111,6 +131,7 @@ impl ImplPref {
         })
     }
 
+    /// Stable string form (protocol/CLI spelling).
     pub fn as_str(&self) -> &'static str {
         match self {
             ImplPref::Auto => "auto",
@@ -124,12 +145,15 @@ impl ImplPref {
 /// Compute precision of the TINA variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Precision {
+    /// IEEE single precision (the default).
     #[default]
     F32,
+    /// bfloat16 (accelerator-native reduced precision).
     Bf16,
 }
 
 impl Precision {
+    /// Stable string form (protocol/CLI spelling).
     pub fn as_str(&self) -> &'static str {
         match self {
             Precision::F32 => "f32",
@@ -137,6 +161,7 @@ impl Precision {
         }
     }
 
+    /// Inverse of [`Precision::as_str`].
     pub fn parse(s: &str) -> Result<Precision> {
         Ok(match s {
             "f32" => Precision::F32,
@@ -149,13 +174,18 @@ impl Precision {
 /// One serving request.
 #[derive(Debug, Clone)]
 pub struct OpRequest {
+    /// The op to execute.
     pub op: OpKind,
+    /// Which implementation the client wants.
     pub impl_pref: ImplPref,
+    /// Compute precision of the TINA variant.
     pub precision: Precision,
+    /// Input tensors (arity per [`OpKind::expected_inputs`]).
     pub inputs: Vec<Tensor>,
 }
 
 impl OpRequest {
+    /// Request with default routing (`Auto`, f32).
     pub fn new(op: OpKind, inputs: Vec<Tensor>) -> OpRequest {
         OpRequest {
             op,
@@ -165,11 +195,13 @@ impl OpRequest {
         }
     }
 
+    /// Set the implementation preference (builder style).
     pub fn with_impl(mut self, p: ImplPref) -> Self {
         self.impl_pref = p;
         self
     }
 
+    /// Set the compute precision (builder style).
     pub fn with_precision(mut self, p: Precision) -> Self {
         self.precision = p;
         self
@@ -197,6 +229,7 @@ impl OpRequest {
 /// Response: output tensors plus how the request was served.
 #[derive(Debug, Clone)]
 pub struct OpResponse {
+    /// Output tensors in the op's declared order.
     pub outputs: Vec<Tensor>,
     /// Artifact name, or "interp:<op>" for the fallback path.
     pub served_by: String,

@@ -7,6 +7,18 @@
 //! cached), while the naive [`Interpreter`] stays available as the
 //! cross-check oracle for tests and `tina validate`.  Both caches share
 //! the same [`PlanKey`] signature.
+//!
+//! # Per-bucket LRU accounting invariant
+//!
+//! The plan caches are LRU maps bounded by
+//! [`RouterConfig::plan_cache_cap`], and the cap counts **per-bucket
+//! entries**: the batch dimension participates in [`PlanKey`], so every
+//! `(op, per-item shape, bucket size B)` combination the shape-bucketed
+//! batcher compiles occupies — and is evicted as — its own entry.
+//! Evictions are accumulated in a counter the coordinator drains into
+//! [`Metrics::plan_cache_evictions`](super::metrics::Metrics); callers
+//! sizing the cap must multiply their distinct (op, shape) signatures by
+//! the bucket fan-out (|{1, 2, 4, 8}| by default).
 
 use super::request::{ImplPref, OpKind, OpRequest, Precision};
 use crate::dsp::PfbConfig;
@@ -22,11 +34,17 @@ use std::sync::Mutex;
 /// Mirrors python/compile/model.py.
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
+    /// FIR low-pass filter length (taps).
     pub fir_taps: usize,
+    /// FIR cutoff as a fraction of Nyquist.
     pub fir_cutoff: f64,
+    /// Sliding-window length of the `unfold` op.
     pub unfold_window: usize,
+    /// Polyphase filter bank geometry (branches, taps per branch).
     pub pfb: PfbConfig,
+    /// STFT FFT length.
     pub stft_nfft: usize,
+    /// STFT hop between frames.
     pub stft_hop: usize,
     /// Upper bound on cached fallback plans per cache (interpreter oracle
     /// and planned executor each).  Shape-diverse traffic evicts the
@@ -126,7 +144,9 @@ pub enum Target {
 /// Cache key for interpreter plans.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PlanKey {
+    /// The op the plan lowers.
     pub op: OpKind,
+    /// Rank-prefixed input dims (see [`PlanKey::for_shapes`]).
     pub dims: Vec<usize>,
 }
 
@@ -156,6 +176,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// Build a router over a loaded artifact registry.
     pub fn new(registry: Registry, config: RouterConfig) -> Router {
         let cap = config.plan_cache_cap;
         Router {
@@ -167,10 +188,12 @@ impl Router {
         }
     }
 
+    /// The artifact registry routed over.
     pub fn registry(&self) -> &Registry {
         &self.registry
     }
 
+    /// The fixed op parameters baked into fallback lowerings.
     pub fn config(&self) -> &RouterConfig {
         &self.config
     }

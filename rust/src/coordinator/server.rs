@@ -14,7 +14,11 @@
 //! ```
 //!
 //! One thread per connection; the coordinator handles concurrency and
-//! backpressure internally.
+//! backpressure internally (worker-queue backpressure for direct
+//! requests, the in-flight-batched admission gate for batched ones), so
+//! a connection thread blocked in `execute` never wedges other
+//! connections.  `latency_us` in the reply measures the same span the
+//! coordinator's histograms record: submit through completion.
 
 use super::request::{ImplPref, OpKind, OpRequest, Precision};
 use super::service::Coordinator;

@@ -17,13 +17,34 @@
 //! power-of-two bucket, executed once, scattered back per row), and every
 //! other fallback request is simply the degenerate case of the same path
 //! at its own batch size.
+//!
+//! # Completion-driven batched lifecycle
+//!
+//! Batched requests never touch the worker pool.  `submit` acquires an
+//! in-flight slot from the [`InflightGate`] (blocking = backpressure at
+//! enqueue, bounded by [`CoordinatorConfig::max_inflight_batched`]),
+//! wraps the response slot + op + `t0` into a
+//! [`Completion`](super::batcher::Completion), and enqueues it with the
+//! row.  The drain loop forms batches and hands each one to a detached
+//! per-batch execution thread, which completes every row's response
+//! *directly* from the scatter — for both the artifact engine path and
+//! the bucketed planned path.  Consequences the tests pin down:
+//!
+//! * in-flight batched requests are capped by the gate, not by the
+//!   worker-pool size (`drain_completions == batched_fallback_requests`
+//!   proves no request relayed through a parked worker);
+//! * the drain loop itself never executes a batch, so a cold plan
+//!   compile or a slow bucket cannot head-of-line-block other keys;
+//! * latency histograms measure from submit (`t0` rides the `Pending`).
 
-use super::batcher::{scatter_results, scatter_row_results, BatchKey, Batcher, BatcherConfig};
+use super::batcher::{
+    scatter_results, scatter_row_results, BatchKey, Batcher, BatcherConfig, Completion,
+    InflightGate,
+};
 use super::metrics::Metrics;
 use super::request::{OpRequest, OpResponse};
 use super::router::{Router, RouterConfig, Target};
 use crate::runtime::{EngineHandle, Registry};
-use crate::tensor::Tensor;
 use crate::util::threadpool::{OneShot, ThreadPool};
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -33,12 +54,20 @@ use std::time::{Duration, Instant};
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
+    /// Routing parameters and fallback plan-cache bound.
     pub router: RouterConfig,
+    /// Batching ceilings (adaptive sizing never exceeds them).
     pub batcher: BatcherConfig,
     /// Worker threads handling non-batched requests.
     pub workers: usize,
     /// Bound on the worker queue (backpressure).
     pub queue_capacity: usize,
+    /// Bound on in-flight *batched* requests: `submit` blocks at enqueue
+    /// once this many batched requests are admitted but not yet
+    /// completed.  This replaces the old implicit cap (one parked
+    /// worker per batched request, i.e. the pool size) with an explicit,
+    /// much higher admission limit.
+    pub max_inflight_batched: usize,
     /// Enable the dynamic batcher (ablation knob).
     pub batching: bool,
 }
@@ -50,6 +79,7 @@ impl Default for CoordinatorConfig {
             batcher: BatcherConfig::default(),
             workers: crate::util::threadpool::default_threads(),
             queue_capacity: 256,
+            max_inflight_batched: 1024,
             batching: true,
         }
     }
@@ -62,6 +92,7 @@ pub struct Coordinator {
     pool: ThreadPool,
     batcher: Arc<Batcher>,
     metrics: Arc<Metrics>,
+    inflight: Arc<InflightGate>,
     config: CoordinatorConfig,
     stop: Arc<AtomicBool>,
     drain_thread: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
@@ -74,11 +105,13 @@ impl Coordinator {
         Self::new(registry, config)
     }
 
+    /// Build from a loaded registry.
     pub fn new(registry: Registry, config: CoordinatorConfig) -> Result<Self> {
         let engine = EngineHandle::spawn(registry.clone())?;
         let router = Arc::new(Router::new(registry, config.router.clone()));
         let batcher = Arc::new(Batcher::new(config.batcher));
         let metrics = Arc::new(Metrics::new());
+        let inflight = InflightGate::new(config.max_inflight_batched, Arc::clone(&metrics));
         let pool = ThreadPool::new(config.workers, config.queue_capacity);
         let stop = Arc::new(AtomicBool::new(false));
 
@@ -88,6 +121,7 @@ impl Coordinator {
             pool,
             batcher,
             metrics,
+            inflight,
             config,
             stop,
             drain_thread: std::sync::Mutex::new(None),
@@ -104,6 +138,8 @@ impl Coordinator {
         let router = Arc::clone(&self.router);
         let metrics = Arc::clone(&self.metrics);
         let stop = Arc::clone(&self.stop);
+        // the static ceiling: an adaptive cap below it counts as a shrink
+        let bucket_ceiling = self.batcher.config().max_bucket;
         let handle = std::thread::Builder::new()
             .name("tina-batch-drain".into())
             .spawn(move || {
@@ -111,33 +147,43 @@ impl Coordinator {
                     let Some(batch) = batcher.next_batch(Duration::from_millis(20)) else {
                         continue;
                     };
+                    if let Some(d) = batch.adaptive {
+                        metrics.record_adaptive_bucket(d.cap, d.wait, d.cap < bucket_ceiling);
+                    }
+                    // Execution — including a cold plan compile on a
+                    // cache miss, and the response completions — runs on
+                    // a detached per-batch thread (`spawn_batch_exec`)
+                    // for BOTH arms: the drain loop keeps draining (no
+                    // head-of-line blocking of co-queued batches behind
+                    // a compile or a long bucket), and the worker pool
+                    // is never involved, so replies cannot be capped or
+                    // deadlocked by pool occupancy.
                     match batch.key.clone() {
                         BatchKey::Artifact { name, batch: b } => {
-                            metrics.record_batch(batch.rows.len(), b - batch.rows.len());
-                            let result = engine.execute(&name, vec![batch.input.clone()]);
-                            scatter_results(batch, result);
+                            let engine = engine.clone();
+                            let metrics = Arc::clone(&metrics);
+                            spawn_batch_exec(move || {
+                                let padding = b - batch.rows.len();
+                                let result = engine.execute(&name, vec![batch.input.clone()]);
+                                // success-only, like the fallback arm: a
+                                // failed execute must not inflate the
+                                // coalescing stats or the fill ratio
+                                if result.is_ok() {
+                                    metrics.record_batch(batch.rows.len(), padding);
+                                }
+                                scatter_results(batch, result);
+                            });
                         }
                         BatchKey::Fallback { op, len } => {
                             // Bucketed fallback: one planned execution at
                             // the coalesced batch size, outputs scattered
                             // per row (padding rows are never gathered).
-                            //
-                            // Execution — including a cold plan compile
-                            // on a cache miss — runs on a detached
-                            // per-batch thread: the drain loop keeps
-                            // draining (no head-of-line blocking of
-                            // co-queued artifact batches behind a compile
-                            // or a long bucket), and the worker pool is
-                            // not involved, so the reply-waiters parked
-                            // there cannot deadlock against this batch.
                             // Within the batch the kernels fan rows
                             // across scoped threads
                             // (`util::threadpool::parallel_for`).
                             let router = Arc::clone(&router);
                             let metrics = Arc::clone(&metrics);
-                            // detached on purpose: replies flow through
-                            // the rows' OneShot slots, not a join
-                            let _ = std::thread::spawn(move || {
+                            spawn_batch_exec(move || {
                                 let bucket = batch.input.shape()[0];
                                 let rows_n = batch.rows.len();
                                 let result = router
@@ -166,14 +212,17 @@ impl Coordinator {
         *self.drain_thread.lock().unwrap() = Some(handle);
     }
 
+    /// The coordinator's metrics sink.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
+    /// The request router (artifact lookup + fallback plan caches).
     pub fn router(&self) -> &Router {
         &self.router
     }
 
+    /// The PJRT engine handle.
     pub fn engine(&self) -> &EngineHandle {
         &self.engine
     }
@@ -193,7 +242,31 @@ impl Coordinator {
         Ok(n)
     }
 
+    /// Completion context for a request settling through this coordinator
+    /// — the single `OpResponse` assembly point for every serving path.
+    fn completion(
+        &self,
+        slot: &OneShot<Result<OpResponse>>,
+        op: &'static str,
+        served_by: String,
+        t0: Instant,
+        batched: bool,
+    ) -> Completion {
+        let permit = batched.then(|| self.inflight.acquire());
+        Completion::new(
+            Arc::clone(&self.metrics),
+            slot.clone(),
+            op,
+            served_by,
+            t0,
+            permit,
+        )
+    }
+
     /// Submit asynchronously; the returned slot completes with the response.
+    ///
+    /// Batched requests may block here briefly when the in-flight limit
+    /// is reached (backpressure at enqueue).
     pub fn submit(&self, req: OpRequest) -> OneShot<Result<OpResponse>> {
         let slot: OneShot<Result<OpResponse>> = OneShot::new();
         self.metrics.record_request();
@@ -203,13 +276,12 @@ impl Coordinator {
         self.metrics
             .record_plan_cache_evictions(self.router.take_plan_cache_evictions());
         let t0 = Instant::now();
+        let op = req.op.as_str();
 
         let target = match self.router.route_with_batching(&req, self.config.batching) {
             Ok(t) => t,
             Err(e) => {
-                self.metrics
-                    .record_completion(req.op.as_str(), t0.elapsed(), false);
-                slot.set(Err(e));
+                self.completion(&slot, op, String::new(), t0, false).fail(e);
                 return slot;
             }
         };
@@ -223,40 +295,20 @@ impl Coordinator {
                     && req.inputs[0].shape()[0] == 1
                     && pad_batch > 1;
                 if batchable {
-                    // ride the dynamic batcher
+                    // ride the dynamic batcher; the drain-side execution
+                    // thread completes the response directly
                     let key = BatchKey::Artifact {
                         name: name.clone(),
                         batch: pad_batch,
                     };
-                    let inner: OneShot<Result<Vec<Tensor>>> = OneShot::new();
-                    self.batcher
-                        .enqueue(key, req.inputs[0].clone(), inner.clone());
-                    let metrics = Arc::clone(&self.metrics);
-                    let op = req.op.as_str();
-                    let out_slot = slot.clone();
-                    self.pool.submit(move || {
-                        let result = inner.wait().map(|outputs| OpResponse {
-                            outputs,
-                            served_by: name,
-                            batched: true,
-                        });
-                        metrics.record_completion(op, t0.elapsed(), result.is_ok());
-                        out_slot.set(result);
-                    });
+                    let completion = self.completion(&slot, op, name, t0, true);
+                    self.batcher.enqueue(key, req.inputs[0].clone(), completion);
                 } else {
                     let engine = self.engine.clone();
-                    let metrics = Arc::clone(&self.metrics);
-                    let op = req.op.as_str();
-                    let out_slot = slot.clone();
+                    let completion = self.completion(&slot, op, name.clone(), t0, false);
                     let inputs = req.inputs;
                     self.pool.submit(move || {
-                        let result = engine.execute(&name, inputs).map(|outputs| OpResponse {
-                            outputs,
-                            served_by: name,
-                            batched: false,
-                        });
-                        metrics.record_completion(op, t0.elapsed(), result.is_ok());
-                        out_slot.set(result);
+                        completion.complete(engine.execute(&name, inputs));
                     });
                 }
             }
@@ -280,21 +332,9 @@ impl Coordinator {
                 if bucketable {
                     let len = req.inputs[0].shape()[1];
                     let bkey = BatchKey::Fallback { op: req.op, len };
-                    let inner: OneShot<Result<Vec<Tensor>>> = OneShot::new();
                     let input = req.inputs.into_iter().next().expect("checked arity");
-                    self.batcher.enqueue(bkey, input, inner.clone());
-                    let metrics = Arc::clone(&self.metrics);
-                    let op = req.op.as_str();
-                    let out_slot = slot.clone();
-                    self.pool.submit(move || {
-                        let result = inner.wait().map(|outputs| OpResponse {
-                            outputs,
-                            served_by: format!("interp:{op}"),
-                            batched: true,
-                        });
-                        metrics.record_completion(op, t0.elapsed(), result.is_ok());
-                        out_slot.set(result);
-                    });
+                    let completion = self.completion(&slot, op, format!("interp:{op}"), t0, true);
+                    self.batcher.enqueue(bkey, input, completion);
                     return slot;
                 }
                 let planned = match self.router.planned(&key, &req) {
@@ -305,24 +345,14 @@ impl Coordinator {
                         p
                     }
                     Err(e) => {
-                        self.metrics
-                            .record_completion(req.op.as_str(), t0.elapsed(), false);
-                        slot.set(Err(e));
+                        self.completion(&slot, op, String::new(), t0, false).fail(e);
                         return slot;
                     }
                 };
-                let metrics = Arc::clone(&self.metrics);
-                let op = req.op.as_str();
-                let out_slot = slot.clone();
+                let completion = self.completion(&slot, op, format!("interp:{op}"), t0, false);
                 let inputs = req.inputs;
                 self.pool.submit(move || {
-                    let result = planned.run(&inputs).map(|outputs| OpResponse {
-                        outputs,
-                        served_by: format!("interp:{op}"),
-                        batched: false,
-                    });
-                    metrics.record_completion(op, t0.elapsed(), result.is_ok());
-                    out_slot.set(result);
+                    completion.complete(planned.run(&inputs));
                 });
             }
         }
@@ -334,18 +364,46 @@ impl Coordinator {
         self.submit(req).wait()
     }
 
-    /// Stop the batch drain loop (called on drop too).
+    /// Stop the batch drain loop (called on drop too).  Rows still queued
+    /// in the batcher are failed here — after the drain thread has
+    /// exited — so waiters blocked on their response slots get an error
+    /// instead of hanging (a waiter typically holds the coordinator
+    /// alive, so relying on drop-time cleanup would deadlock).  The
+    /// batcher is closed in the same step: a batched request submitted
+    /// concurrently with (or after) shutdown fails fast at enqueue
+    /// instead of stranding in a queue no drain loop will visit.  Direct
+    /// (non-batched) requests keep running on the worker pool until the
+    /// coordinator drops.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Release);
         if let Some(h) = self.drain_thread.lock().unwrap().take() {
             let _ = h.join();
         }
+        self.batcher
+            .fail_pending("coordinator shut down before the batch executed");
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Run one formed batch's execution + scatter on a detached thread.
+///
+/// `Builder::spawn` (not `thread::spawn`): a refused OS thread under
+/// resource pressure must not panic the drain loop.  On `Err` the un-run
+/// closure is dropped, dropping the rows' carried `Completion`s — which
+/// fails every request in the batch instead of wedging serving.  Replies
+/// flow through those completions, not a join, so the thread is detached
+/// on purpose; a panicking batch thread fails its rows the same way.
+fn spawn_batch_exec(work: impl FnOnce() + Send + 'static) {
+    let spawned = std::thread::Builder::new()
+        .name("tina-batch-exec".into())
+        .spawn(work);
+    if let Err(e) = spawned {
+        eprintln!("tina: batch exec spawn failed: {e}");
     }
 }
 
@@ -362,17 +420,21 @@ pub fn missing_artifacts_hint(dir: &std::path::Path) -> String {
 mod tests {
     use super::*;
     use crate::coordinator::request::{ImplPref, OpKind};
+    use crate::tensor::Tensor;
     use std::path::PathBuf;
 
     /// Registry with no artifacts: everything routes to the interpreter.
-    fn empty_coordinator(batching: bool) -> Coordinator {
-        let registry = Registry::from_manifest_text(
+    fn empty_registry() -> Registry {
+        Registry::from_manifest_text(
             PathBuf::from("/nonexistent"),
             r#"{"version": 1, "entries": []}"#,
         )
-        .unwrap();
+        .unwrap()
+    }
+
+    fn empty_coordinator(batching: bool) -> Coordinator {
         Coordinator::new(
-            registry,
+            empty_registry(),
             CoordinatorConfig {
                 batching,
                 workers: 2,
@@ -440,13 +502,8 @@ mod tests {
 
     #[test]
     fn shape_diverse_traffic_is_bounded_by_the_plan_cache_cap() {
-        let registry = Registry::from_manifest_text(
-            PathBuf::from("/nonexistent"),
-            r#"{"version": 1, "entries": []}"#,
-        )
-        .unwrap();
         let c = Coordinator::new(
-            registry,
+            empty_registry(),
             CoordinatorConfig {
                 batching: false,
                 workers: 2,
@@ -503,6 +560,18 @@ mod tests {
         );
         let batches = m.fallback_batches_executed.load(Ordering::Relaxed);
         assert!(batches >= 1, "at least one bucket must have executed");
+        // completion-driven serving: every batched reply was finished by
+        // a drain-side execution thread, none by a parked worker relay
+        assert_eq!(
+            m.drain_completions.load(Ordering::Relaxed),
+            5,
+            "all batched replies must complete from the drain scatter"
+        );
+        assert_eq!(
+            m.inflight_batched_requests.load(Ordering::Relaxed),
+            0,
+            "in-flight gauge must settle to zero"
+        );
         // per-bucket plan-cache stats cover exactly the executed buckets
         let lookups: u64 = m
             .plan_cache_bucket_stats()
@@ -512,6 +581,74 @@ mod tests {
         assert_eq!(lookups, batches, "one bucketed plan lookup per batch");
         let fill = m.batch_fill_ratio();
         assert!(fill > 0.0 && fill <= 1.0, "fill ratio out of range: {fill}");
+    }
+
+    #[test]
+    fn batched_requests_do_not_consume_pool_workers() {
+        // the lifted-cap property at unit scale: a single-worker pool with
+        // a single-slot queue serves many concurrent batched requests,
+        // which the old parked-relay design could not (each in-flight
+        // batched request occupied a worker)
+        let c = Coordinator::new(
+            empty_registry(),
+            CoordinatorConfig {
+                batching: true,
+                workers: 1,
+                queue_capacity: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let n = 16usize;
+        let slots: Vec<_> = (0..n)
+            .map(|i| {
+                let x = Tensor::randn(&[1, 256], i as u64);
+                c.submit(OpRequest::new(OpKind::Fir, vec![x]))
+            })
+            .collect();
+        for s in slots {
+            let resp = s.wait().unwrap();
+            assert!(resp.batched);
+        }
+        let m = c.metrics();
+        assert_eq!(m.completed.load(Ordering::Relaxed), n as u64);
+        assert_eq!(
+            m.drain_completions.load(Ordering::Relaxed),
+            m.batched_fallback_requests.load(Ordering::Relaxed),
+            "every batched reply must come from the drain scatter"
+        );
+        assert_eq!(m.inflight_batched_requests.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn inflight_limit_backpressures_but_stays_live() {
+        // a tiny in-flight limit forces submit() to block at enqueue;
+        // the drain loop must keep freeing slots so every request still
+        // completes (liveness of the backpressure path)
+        let c = Coordinator::new(
+            empty_registry(),
+            CoordinatorConfig {
+                batching: true,
+                workers: 2,
+                max_inflight_batched: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let n = 8usize;
+        let mut slots = Vec::new();
+        for i in 0..n {
+            let x = Tensor::randn(&[1, 128], i as u64);
+            // sequential submits: the 3rd+ block until the drain thread
+            // completes earlier rows, then proceed
+            slots.push(c.submit(OpRequest::new(OpKind::Fir, vec![x])));
+        }
+        for s in slots {
+            assert!(s.wait().is_ok());
+        }
+        let m = c.metrics();
+        assert_eq!(m.completed.load(Ordering::Relaxed), n as u64);
+        assert_eq!(m.inflight_batched_requests.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -548,6 +685,11 @@ mod tests {
                 .load(Ordering::Relaxed),
             0
         );
+        assert_eq!(
+            c.metrics().drain_completions.load(Ordering::Relaxed),
+            0,
+            "direct requests must not be counted as drain completions"
+        );
     }
 
     #[test]
@@ -580,5 +722,45 @@ mod tests {
         let c = empty_coordinator(true);
         c.shutdown();
         c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_fails_queued_batched_rows() {
+        // a row parked in the batcher (long flush deadline) must settle
+        // with an error at shutdown, not strand its waiter: the waiter
+        // typically holds the coordinator alive, so drop-time cleanup
+        // alone would deadlock
+        let c = Coordinator::new(
+            empty_registry(),
+            CoordinatorConfig {
+                batching: true,
+                workers: 2,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_secs(60),
+                    max_bucket: 8,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let slot = c.submit(OpRequest::new(
+            OpKind::Fir,
+            vec![Tensor::randn(&[1, 128], 1)],
+        ));
+        c.shutdown();
+        assert!(slot.wait().is_err(), "queued row must fail at shutdown");
+        assert_eq!(
+            c.metrics().inflight_batched_requests.load(Ordering::Relaxed),
+            0,
+            "the failed row's permit must be released"
+        );
+        assert_eq!(c.metrics().failed.load(Ordering::Relaxed), 1);
+        // the batcher is now closed: a late batched submit fails fast
+        // instead of stranding in a queue no drain loop will visit
+        let late = c.submit(OpRequest::new(
+            OpKind::Fir,
+            vec![Tensor::randn(&[1, 128], 2)],
+        ));
+        assert!(late.wait().is_err(), "post-shutdown batched submit must fail");
     }
 }

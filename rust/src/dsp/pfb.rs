@@ -18,6 +18,7 @@ pub struct PfbConfig {
 }
 
 impl PfbConfig {
+    /// Configuration with P branches and M taps per branch.
     pub fn new(branches: usize, taps_per_branch: usize) -> Self {
         Self {
             branches,

@@ -16,7 +16,12 @@
 //! Python never runs on the request path; after `make artifacts` the
 //! `tina` binary only needs the `artifacts/` directory.
 //!
-//! See `DESIGN.md` for the full system inventory and per-experiment index.
+//! See `DESIGN.md` for the full system inventory and per-experiment index,
+//! and the repo-root `ARCHITECTURE.md` for the serving request lifecycle.
+
+// Every public item carries rustdoc; CI builds docs with
+// RUSTDOCFLAGS="-D warnings" so the contract cannot rot.
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod benchkit;

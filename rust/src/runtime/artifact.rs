@@ -10,11 +10,14 @@ use std::path::{Path, PathBuf};
 /// Shape + dtype of one artifact input/output.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Dimension extents.
     pub shape: Vec<usize>,
+    /// Element type name (manifest spelling, e.g. "float32").
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count of the spec.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -39,7 +42,9 @@ impl TensorSpec {
 /// One manifest entry: a compiled (op, impl, dtype, size) variant.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactMeta {
+    /// Unique artifact name (registry key).
     pub name: String,
+    /// Op this artifact implements (manifest `op` string).
     pub op: String,
     /// "tina" or "jaxref".
     pub impl_: String,
@@ -47,7 +52,9 @@ pub struct ArtifactMeta {
     pub dtype: String,
     /// Op-specific parameters (sizes, taps, branches, batch, ...).
     pub params: BTreeMap<String, f64>,
+    /// Input ABI in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output ABI in declaration order.
     pub outputs: Vec<TensorSpec>,
     /// HLO filename relative to the artifact directory.
     pub file: String,
@@ -94,6 +101,7 @@ impl ArtifactMeta {
         self.params.get("batch").map(|&b| b as usize).unwrap_or(1)
     }
 
+    /// Op-specific parameter by name.
     pub fn param(&self, key: &str) -> Option<f64> {
         self.params.get(key).copied()
     }
@@ -148,22 +156,27 @@ impl Registry {
         })
     }
 
+    /// Directory the artifacts live in.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// Number of manifest entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when the manifest has no entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// All manifest entries.
     pub fn entries(&self) -> &[ArtifactMeta] {
         &self.entries
     }
 
+    /// Entry by artifact name.
     pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
         self.by_name.get(name).map(|&i| &self.entries[i])
     }

@@ -13,9 +13,13 @@ use std::rc::Rc;
 /// Execution statistics (reset-able; used by the §Perf pass).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EngineStats {
+    /// HLO compiles performed.
     pub compiles: u64,
+    /// Executions performed.
     pub executions: u64,
+    /// Total nanoseconds spent compiling.
     pub compile_ns: u64,
+    /// Total nanoseconds spent executing.
     pub execute_ns: u64,
 }
 
@@ -44,18 +48,22 @@ impl Engine {
         Engine::new(Registry::load(dir)?)
     }
 
+    /// The registry the engine serves.
     pub fn registry(&self) -> &Registry {
         &self.registry
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Snapshot of the accumulated statistics.
     pub fn stats(&self) -> EngineStats {
         *self.stats.borrow()
     }
 
+    /// Zero the accumulated statistics.
     pub fn reset_stats(&self) {
         *self.stats.borrow_mut() = EngineStats::default();
     }

@@ -36,6 +36,7 @@ impl Tensor {
         })
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
@@ -43,6 +44,7 @@ impl Tensor {
         }
     }
 
+    /// All-one tensor of the given shape.
     pub fn ones(shape: &[usize]) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
@@ -50,6 +52,7 @@ impl Tensor {
         }
     }
 
+    /// Tensor filled with a constant value.
     pub fn filled(shape: &[usize], value: f32) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
@@ -66,6 +69,7 @@ impl Tensor {
         t
     }
 
+    /// Rank-0 (scalar) tensor.
     pub fn scalar(v: f32) -> Tensor {
         Tensor {
             shape: vec![],
@@ -84,30 +88,37 @@ impl Tensor {
 
     // -- accessors ---------------------------------------------------------
 
+    /// Dimension extents.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Row-major element slice.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major element slice.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor, yielding its buffer.
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }
@@ -123,10 +134,12 @@ impl Tensor {
         flat
     }
 
+    /// Element at a multi-dimensional index.
     pub fn at(&self, idx: &[usize]) -> f32 {
         self.data[self.flat_index(idx)]
     }
 
+    /// Overwrite the element at a multi-dimensional index.
     pub fn set(&mut self, idx: &[usize], v: f32) {
         let i = self.flat_index(idx);
         self.data[i] = v;

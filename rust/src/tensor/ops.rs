@@ -18,22 +18,27 @@ fn zip_with(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tenso
     Tensor::new(a.shape(), data)
 }
 
+/// Elementwise sum (shapes must match).
 pub fn add(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     zip_with(a, b, |x, y| x + y)
 }
 
+/// Elementwise difference (shapes must match).
 pub fn sub(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     zip_with(a, b, |x, y| x - y)
 }
 
+/// Elementwise product (shapes must match).
 pub fn mul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     zip_with(a, b, |x, y| x * y)
 }
 
+/// Multiply every element by a scalar.
 pub fn scale(a: &Tensor, s: f32) -> Tensor {
     Tensor::new(a.shape(), a.data().iter().map(|&x| x * s).collect()).unwrap()
 }
 
+/// Sum of all elements (pairwise accumulation for accuracy).
 pub fn sum(a: &Tensor) -> f32 {
     // pairwise-ish summation for accuracy on long vectors
     fn rec(xs: &[f32]) -> f64 {
@@ -77,11 +82,14 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 /// A complex tensor as (re, im) pair — the ABI Fourier artifacts use.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ComplexTensor {
+    /// Real part.
     pub re: Tensor,
+    /// Imaginary part.
     pub im: Tensor,
 }
 
 impl ComplexTensor {
+    /// Pair up real and imaginary parts (shapes must match).
     pub fn new(re: Tensor, im: Tensor) -> Result<ComplexTensor> {
         if re.shape() != im.shape() {
             bail!(
@@ -93,11 +101,13 @@ impl ComplexTensor {
         Ok(ComplexTensor { re, im })
     }
 
+    /// Complex tensor with zero imaginary part.
     pub fn from_real(re: Tensor) -> ComplexTensor {
         let im = Tensor::zeros(re.shape());
         ComplexTensor { re, im }
     }
 
+    /// Shared shape of both parts.
     pub fn shape(&self) -> &[usize] {
         self.re.shape()
     }
@@ -115,6 +125,7 @@ impl ComplexTensor {
         Tensor::new(self.re.shape(), data).unwrap()
     }
 
+    /// Approximate equality of both parts.
     pub fn allclose(&self, other: &ComplexTensor, rtol: f32, atol: f32) -> bool {
         self.re.allclose(&other.re, rtol, atol) && self.im.allclose(&other.im, rtol, atol)
     }

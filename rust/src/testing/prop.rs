@@ -55,10 +55,12 @@ impl Gen {
         }
     }
 
+    /// Uniform 64-bit value.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
@@ -71,10 +73,12 @@ impl Gen {
         lo + (self.rng.next_u64() as usize) % (scaled.max(1) + 1).min(hi - lo + 1)
     }
 
+    /// Uniform f32 in [lo, hi).
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         self.rng.uniform(lo, hi)
     }
 
+    /// Standard-normal f32.
     pub fn normal_f32(&mut self) -> f32 {
         self.rng.normal()
     }
@@ -94,7 +98,9 @@ impl Gen {
 /// Configuration for the runner.
 #[derive(Debug, Clone, Copy)]
 pub struct Config {
+    /// Cases to run per property.
     pub cases: usize,
+    /// Base seed (each case derives its own).
     pub seed: u64,
 }
 

@@ -20,6 +20,7 @@ pub struct Arena {
 }
 
 impl Arena {
+    /// Empty arena (slots materialize on first prepare).
     pub fn new() -> Arena {
         Arena::default()
     }

@@ -59,8 +59,11 @@ fn threads_for(rows: usize, work: usize) -> usize {
 /// element strides.  `at(i, j, k) = d[off + i*s[0] + j*s[1] + k*s[2]]`.
 #[derive(Clone, Copy)]
 pub struct X3<'a> {
+    /// Backing slice.
     pub d: &'a [f32],
+    /// Element offset of the view's origin.
     pub off: usize,
+    /// Per-axis element strides.
     pub s: [usize; 3],
 }
 
@@ -88,8 +91,11 @@ impl<'a> X3<'a> {
 /// Borrowed rank-2 strided input.
 #[derive(Clone, Copy)]
 pub struct X2<'a> {
+    /// Backing slice.
     pub d: &'a [f32],
+    /// Element offset of the view's origin.
     pub off: usize,
+    /// Per-axis element strides.
     pub s: [usize; 2],
 }
 

@@ -97,6 +97,7 @@ impl Planned {
         })
     }
 
+    /// The compiled plan.
     pub fn plan(&self) -> &ExecPlan {
         &self.plan
     }

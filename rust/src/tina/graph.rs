@@ -30,17 +30,23 @@ pub enum NodeOp {
     Constant(Tensor),
     /// Shape glue.
     Reshape(Vec<usize>),
+    /// 2-D transpose (shape glue).
     Transpose2,
+    /// Rank-3 axis permutation (shape glue).
     Permute3([usize; 3]),
     /// Keep `count` elements at multiples of `stride` along `axis`
     /// (the stride parameter of paper §2.1, used by the STFT extension op).
     StridedSlice {
+        /// Axis sliced along.
         axis: usize,
+        /// Step between kept indices.
         stride: usize,
+        /// Number of kept indices.
         count: usize,
     },
-    /// Elementwise combiners for (re, im) complex plumbing.
+    /// Elementwise sum — (re, im) complex plumbing.
     Add,
+    /// Elementwise difference — (re, im) complex plumbing.
     Sub,
 }
 
@@ -87,7 +93,9 @@ impl NodeOp {
 /// A graph node: op + input value ids.  Produces exactly one value.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Node {
+    /// The node's operation.
     pub op: NodeOp,
+    /// Input value ids in operand order.
     pub inputs: Vec<ValueId>,
 }
 
@@ -96,12 +104,15 @@ pub struct Node {
 pub struct Graph {
     /// (value id, shape) of each external input, in call order.
     pub inputs: Vec<(ValueId, Vec<usize>)>,
+    /// Nodes in topological order.
     pub nodes: Vec<Node>,
+    /// Output value ids in declaration order.
     pub outputs: Vec<ValueId>,
     next_id: usize,
 }
 
 impl Graph {
+    /// Empty graph.
     pub fn new() -> Graph {
         Graph::default()
     }
@@ -128,10 +139,12 @@ impl Graph {
         id
     }
 
+    /// Append a baked-constant node.
     pub fn constant(&mut self, t: Tensor) -> ValueId {
         self.push(NodeOp::Constant(t), &[])
     }
 
+    /// Declare the graph outputs.
     pub fn set_outputs(&mut self, outs: &[ValueId]) {
         self.outputs = outs.to_vec();
     }

@@ -22,6 +22,7 @@ impl Interpreter {
         Ok(Interpreter { graph })
     }
 
+    /// The validated graph being interpreted.
     pub fn graph(&self) -> &Graph {
         &self.graph
     }

@@ -5,11 +5,16 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First bare word (the subcommand), if any.
     pub subcommand: Option<String>,
+    /// Bare words after the subcommand.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -46,18 +51,22 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Whether a bare `--name` switch was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name`, if given.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// The value of `--name`, or a default.
     pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
     }
 
+    /// The value of `--name` parsed as an integer, or a default.
     pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
         match self.opt(name) {
             None => Ok(default),
@@ -67,6 +76,7 @@ impl Args {
         }
     }
 
+    /// The value of `--name` parsed as a float, or a default.
     pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.opt(name) {
             None => Ok(default),

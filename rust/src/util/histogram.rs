@@ -6,6 +6,7 @@
 const SUB_BUCKETS: usize = 8;
 const BUCKETS: usize = 64;
 
+/// Log-bucketed value histogram over nanosecond durations.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     counts: Vec<u64>,
@@ -22,6 +23,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Self {
             counts: vec![0; BUCKETS * SUB_BUCKETS],
@@ -54,6 +56,7 @@ impl Histogram {
         ((SUB_BUCKETS + sub) as u64) << (bucket - 1)
     }
 
+    /// Record one nanosecond value.
     pub fn record(&mut self, value_ns: u64) {
         self.counts[Self::index(value_ns)] += 1;
         self.total += 1;
@@ -62,14 +65,17 @@ impl Histogram {
         self.min_ns = self.min_ns.min(value_ns);
     }
 
+    /// Record a duration (saturating at u64 nanoseconds).
     pub fn record_duration(&mut self, d: std::time::Duration) {
         self.record(d.as_nanos().min(u64::MAX as u128) as u64);
     }
 
+    /// Number of recorded values.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Mean of recorded values (0 when empty).
     pub fn mean_ns(&self) -> f64 {
         if self.total == 0 {
             return 0.0;
@@ -77,6 +83,7 @@ impl Histogram {
         self.sum_ns as f64 / self.total as f64
     }
 
+    /// Exact maximum recorded value (0 when empty).
     pub fn max_ns(&self) -> u64 {
         if self.total == 0 {
             0
@@ -85,6 +92,7 @@ impl Histogram {
         }
     }
 
+    /// Exact minimum recorded value (0 when empty).
     pub fn min_ns(&self) -> u64 {
         if self.total == 0 {
             0
@@ -109,18 +117,22 @@ impl Histogram {
         self.max_ns
     }
 
+    /// Median (approximate, slot lower bound).
     pub fn p50(&self) -> u64 {
         self.quantile(0.50)
     }
 
+    /// 95th percentile (approximate, slot lower bound).
     pub fn p95(&self) -> u64 {
         self.quantile(0.95)
     }
 
+    /// 99th percentile (approximate, slot lower bound).
     pub fn p99(&self) -> u64 {
         self.quantile(0.99)
     }
 
+    /// Fold another histogram's counts into this one.
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;

@@ -11,17 +11,26 @@ use std::fmt;
 /// A JSON value.  Object keys are sorted (BTreeMap) for stable output.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as f64, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with sorted keys.
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with a byte offset into the input.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset of the failure in the input.
     pub offset: usize,
 }
 
@@ -35,19 +44,23 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     // -- constructors ------------------------------------------------------
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Number from anything convertible to f64.
     pub fn num(x: impl Into<f64>) -> Json {
         Json::Num(x.into())
     }
 
+    /// String value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
     // -- accessors ---------------------------------------------------------
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -55,6 +68,7 @@ impl Json {
         }
     }
 
+    /// The number as a non-negative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 {
@@ -65,6 +79,7 @@ impl Json {
         })
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -72,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -79,6 +95,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -86,6 +103,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -99,6 +117,7 @@ impl Json {
     }
 
     // -- serialization -----------------------------------------------------
+    /// Render as compact JSON text (stable key order).
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);

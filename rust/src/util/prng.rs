@@ -12,10 +12,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Generator starting from a raw seed.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 uniformly random bits.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -40,6 +42,7 @@ impl Xoshiro256 {
         }
     }
 
+    /// Next 64 uniformly random bits.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

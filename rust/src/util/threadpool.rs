@@ -27,6 +27,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Spawn `threads` workers sharing a queue of `queue_capacity` slots.
     pub fn new(threads: usize, queue_capacity: usize) -> Self {
         assert!(threads > 0, "need at least one worker");
         assert!(queue_capacity > 0, "need a positive queue capacity");
@@ -183,18 +184,21 @@ impl<T> Default for OneShot<T> {
 }
 
 impl<T> OneShot<T> {
+    /// Empty slot; clones share the same cell.
     pub fn new() -> Self {
         Self {
             inner: Arc::new((Mutex::new(None), Condvar::new())),
         }
     }
 
+    /// Fill the slot and wake all waiters.
     pub fn set(&self, value: T) {
         let (lock, cv) = &*self.inner;
         *lock.lock().unwrap() = Some(value);
         cv.notify_all();
     }
 
+    /// Block until the slot is filled, then take the value.
     pub fn wait(&self) -> T {
         let (lock, cv) = &*self.inner;
         let mut slot = lock.lock().unwrap();
@@ -206,6 +210,7 @@ impl<T> OneShot<T> {
         }
     }
 
+    /// Take the value if already set, without blocking.
     pub fn try_take(&self) -> Option<T> {
         self.inner.0.lock().unwrap().take()
     }

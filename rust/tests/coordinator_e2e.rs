@@ -1,15 +1,20 @@
 //! End-to-end coordinator tests: full serving path over real artifacts —
 //! routing, dynamic batching, pipelines, concurrency, failure injection.
 //!
-//! Skips (with a note) when `make artifacts` has not run.
+//! Artifact-backed tests skip (with a note) when `make artifacts` has not
+//! run; the completion-driven serving tests at the bottom drive the
+//! fallback path and need no artifacts.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Duration;
 use tina::baselines::naive;
 use tina::coordinator::{
-    Coordinator, CoordinatorConfig, ImplPref, OpKind, OpRequest, Pipeline, Precision,
+    BatcherConfig, Coordinator, CoordinatorConfig, ImplPref, OpKind, OpRequest, Pipeline,
+    Precision,
 };
 use tina::dsp::PfbConfig;
+use tina::runtime::Registry;
 use tina::tensor::Tensor;
 
 fn coordinator(batching: bool) -> Option<Coordinator> {
@@ -27,6 +32,17 @@ fn coordinator(batching: bool) -> Option<Coordinator> {
             None
         }
     }
+}
+
+/// Artifact-free coordinator: every request takes the planned fallback
+/// path, so these tests run in any environment.
+fn fallback_coordinator(config: CoordinatorConfig) -> Coordinator {
+    let registry = Registry::from_manifest_text(
+        std::path::PathBuf::from("/nonexistent"),
+        r#"{"version": 1, "entries": []}"#,
+    )
+    .expect("empty manifest");
+    Coordinator::new(registry, config).expect("coordinator")
 }
 
 #[test]
@@ -204,4 +220,121 @@ fn warmup_compiles_requested_ops() {
     assert_eq!(n, 8, "8 summation artifacts (4 sizes x 2 impls)");
     let stats = coord.engine().stats().unwrap();
     assert_eq!(stats.compiles as usize, n);
+}
+
+// ---------------------------------------------------------------------------
+// completion-driven batched serving (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn more_concurrent_batched_requests_than_workers_all_complete() {
+    // The lifted-cap regression test: a 1-worker pool with a 1-slot queue
+    // serves 32 concurrently in-flight batched requests.  Under the old
+    // parked-worker relay design each in-flight batched request occupied
+    // a pool worker (capping concurrency at the pool size and wedging the
+    // single-worker configuration); completion-driven serving finishes
+    // every reply from the drain-side scatter instead.
+    let coord = Arc::new(fallback_coordinator(CoordinatorConfig {
+        batching: true,
+        workers: 1,
+        queue_capacity: 1,
+        ..Default::default()
+    }));
+    let n = 32usize;
+    let xs: Vec<Tensor> = (0..n).map(|i| Tensor::randn(&[1, 512], i as u64)).collect();
+    let slots: Vec<_> = xs
+        .iter()
+        .map(|x| coord.submit(OpRequest::new(OpKind::Fir, vec![x.clone()])))
+        .collect();
+    let taps = tina::dsp::fir_lowpass(64, 0.25).unwrap();
+    for (x, s) in xs.iter().zip(slots) {
+        let resp = s.wait().unwrap();
+        assert!(resp.batched, "fallback requests must ride the batcher");
+        // numerics unaffected by coalescing across > pool-size requests
+        let want = naive::fir(x, &taps).unwrap();
+        assert!(resp.outputs[0].allclose(&want, 1e-3, 1e-4));
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed.load(Ordering::Relaxed), n as u64);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    // zero parked-worker relays: every batched reply was completed by a
+    // drain-side batch execution thread
+    assert_eq!(
+        m.drain_completions.load(Ordering::Relaxed),
+        m.batched_fallback_requests.load(Ordering::Relaxed),
+        "drain_completions must equal batched_fallback_requests"
+    );
+    assert_eq!(m.batched_fallback_requests.load(Ordering::Relaxed), n as u64);
+    assert_eq!(
+        m.inflight_batched_requests.load(Ordering::Relaxed),
+        0,
+        "in-flight gauge must return to zero"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn enqueue_timestamp_survives_the_pending_path() {
+    // The latency-metric regression test: `t0` is captured at submit and
+    // carried through the batcher's `Pending`, so a request that waits
+    // out the full flush deadline must report a latency of at least that
+    // deadline — not just its (sub-millisecond) execution time.
+    let max_wait = Duration::from_millis(40);
+    let coord = fallback_coordinator(CoordinatorConfig {
+        batching: true,
+        workers: 2,
+        batcher: BatcherConfig {
+            max_wait,
+            max_bucket: 8,
+        },
+        ..Default::default()
+    });
+    // a lone request on a cold key waits the full static deadline (no
+    // arrival-rate estimate exists yet, so adaptive sizing is inactive)
+    let resp = coord
+        .execute(OpRequest::new(OpKind::Fir, vec![Tensor::randn(&[1, 256], 7)]))
+        .unwrap();
+    assert!(resp.batched);
+    let h = coord
+        .metrics()
+        .latency_of("fir")
+        .expect("latency histogram recorded");
+    assert_eq!(h.count(), 1);
+    assert!(
+        h.max_ns() >= max_wait.as_nanos() as u64 * 3 / 4,
+        "recorded latency {}ns must cover the {}ms queue wait — t0 lost?",
+        h.max_ns(),
+        max_wait.as_millis()
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn adaptive_bucket_metrics_surface_under_traffic() {
+    // bursty fallback traffic must leave the adaptive gauges populated:
+    // every formed fallback batch stamps its effective cap/wait
+    let coord = Arc::new(fallback_coordinator(CoordinatorConfig {
+        batching: true,
+        workers: 2,
+        ..Default::default()
+    }));
+    let slots: Vec<_> = (0..8)
+        .map(|i| {
+            let x = Tensor::randn(&[1, 256], i as u64);
+            coord.submit(OpRequest::new(OpKind::Fir, vec![x]))
+        })
+        .collect();
+    for s in slots {
+        s.wait().unwrap();
+    }
+    let m = coord.metrics();
+    let cap = m.adaptive_bucket_cap.load(Ordering::Relaxed);
+    assert!(
+        (1..=8).contains(&cap),
+        "adaptive cap gauge must hold the last decision, got {cap}"
+    );
+    let report = m.report();
+    assert!(report.contains("adaptive_bucket_cap="), "report: {report}");
+    assert!(report.contains("drain_completions="), "report: {report}");
+    coord.shutdown();
 }

@@ -3,9 +3,12 @@
 //!
 //! No artifacts needed — these exercise pure-rust components.
 
+use std::sync::Arc;
 use tina::baselines::{naive, optimized};
-use tina::coordinator::batcher::{scatter_results, BatchKey, Batcher, BatcherConfig, Pending};
-use tina::coordinator::OpKind;
+use tina::coordinator::batcher::{
+    scatter_results, BatchKey, Batcher, BatcherConfig, Completion, Pending,
+};
+use tina::coordinator::{Metrics, OpKind, OpResponse};
 use tina::dsp::{self, PfbConfig};
 use tina::prop_assert;
 use tina::tensor::{ComplexTensor, Tensor};
@@ -13,6 +16,21 @@ use tina::testing::prop::{run, Gen};
 use tina::tina::{lower, Arena, ExecPlan, Graph, Interpreter, NodeOp, Planned};
 use tina::util::json::{self, Json};
 use tina::util::threadpool::OneShot;
+
+/// Response slot + completion context pair for driving the batcher
+/// directly in properties (no coordinator in the loop).
+fn test_completion(metrics: &Arc<Metrics>) -> (OneShot<anyhow::Result<OpResponse>>, Completion) {
+    let slot: OneShot<anyhow::Result<OpResponse>> = OneShot::new();
+    let c = Completion::new(
+        Arc::clone(metrics),
+        slot.clone(),
+        "fir",
+        "prop".into(),
+        std::time::Instant::now(),
+        None,
+    );
+    (slot, c)
+}
 
 // ---------------------------------------------------------------------------
 // mapping invariants: interpreter == baselines for random shapes
@@ -494,9 +512,10 @@ fn prop_fallback_batcher_buckets_round_up_and_conserve_rows() {
             op: OpKind::Fir,
             len: l,
         };
+        let metrics = Arc::new(Metrics::new());
         for i in 0..n_rows {
             let row = Tensor::filled(&[1, l], (i + 1) as f32);
-            batcher.enqueue(key.clone(), row, OneShot::new());
+            batcher.enqueue(key.clone(), row, test_completion(&metrics).1);
         }
         let mut seen = Vec::new();
         while seen.len() < n_rows {
@@ -541,9 +560,10 @@ fn prop_batcher_conserves_and_orders_rows() {
             name: "test".into(),
             batch,
         };
+        let metrics = Arc::new(Metrics::new());
         for i in 0..n_rows {
             let row = Tensor::filled(&[1, l], (i + 1) as f32);
-            batcher.enqueue(key.clone(), row, OneShot::new());
+            batcher.enqueue(key.clone(), row, test_completion(&metrics).1);
         }
         let mut seen = Vec::new();
         while seen.len() < n_rows {
@@ -579,16 +599,18 @@ fn prop_scatter_routes_rows_to_owners() {
         let batch = g.usize_in(2, 8);
         let rows_n = g.usize_in(1, batch);
         let out_w = g.usize_in(1, 8);
-        let replies: Vec<OneShot<anyhow::Result<Vec<Tensor>>>> =
-            (0..rows_n).map(|_| OneShot::new()).collect();
-        let rows: Vec<Pending> = replies
-            .iter()
-            .map(|r| Pending {
+        let metrics = Arc::new(Metrics::new());
+        let mut slots = Vec::new();
+        let mut rows = Vec::new();
+        for _ in 0..rows_n {
+            let (slot, completion) = test_completion(&metrics);
+            slots.push(slot);
+            rows.push(Pending {
                 input: Tensor::zeros(&[1, 4]),
-                reply: r.clone(),
+                completion,
                 enqueued: std::time::Instant::now(),
-            })
-            .collect();
+            });
+        }
         let batch_t = tina::coordinator::batcher::FormedBatch {
             key: BatchKey::Artifact {
                 name: "t".into(),
@@ -596,6 +618,7 @@ fn prop_scatter_routes_rows_to_owners() {
             },
             input: Tensor::zeros(&[batch, 4]),
             rows,
+            adaptive: None,
         };
         // output rows tagged by row index
         let out = Tensor::new(
@@ -604,13 +627,19 @@ fn prop_scatter_routes_rows_to_owners() {
         )
         .unwrap();
         scatter_results(batch_t, Ok(vec![out]));
-        for (i, r) in replies.iter().enumerate() {
+        for (i, r) in slots.iter().enumerate() {
             let got = r.try_take().ok_or("no reply")?.map_err(|e| e.to_string())?;
             prop_assert!(
-                got[0].data().iter().all(|&v| v == i as f32),
+                got.outputs[0].data().iter().all(|&v| v == i as f32),
                 "row {i} got wrong data"
             );
+            prop_assert!(got.batched, "drain-scatter responses are batched");
         }
+        prop_assert!(
+            metrics.drain_completions.load(std::sync::atomic::Ordering::Relaxed)
+                == rows_n as u64,
+            "every row completes from the drain scatter"
+        );
         Ok(())
     });
 }

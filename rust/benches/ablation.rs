@@ -14,9 +14,12 @@
 //!     matches;
 //!  7. solo vs batched fallback serving — what the shape-bucketed batcher
 //!     (coalesced planned execution at bucket batch sizes) buys over
-//!     per-request execution, across arrival burst sizes.
+//!     per-request execution, across arrival burst sizes;
+//!  8. plan-level fusion on/off — what the window-into-framing-conv fold
+//!     plus merged-axis materialize elimination buy on STFT (and that the
+//!     pass is a no-op on the window-less PFB), at B ∈ {1, 8}.
 //!
-//! Ablations 6 and 7 need no artifacts, so they run first; the rest print
+//! Ablations 6-8 need no artifacts, so they run first; the rest print
 //! in numeric order (or skip with a note).
 //!
 //! Besides the human-readable tables, every ablation that ran contributes
@@ -49,6 +52,7 @@ fn main() {
     let mut report: Vec<(&str, Json)> = Vec::new();
     report.push(("ablation6_interp_vs_planned", interp_vs_planned()));
     report.push(("ablation7_batched_fallback", batched_fallback_ablation()));
+    report.push(("ablation8_plan_fusion", plan_fusion_ablation()));
     if let Some(j) = batching_ablation() {
         report.push(("ablation1_batching", j));
     }
@@ -165,6 +169,131 @@ fn interp_vs_planned() -> Json {
             Json::Obj(case_json.into_iter().collect()),
         ),
     ])
+}
+
+/// 8. plan-level fusion on/off: the same graph compiled with and without
+/// the fusion pass (window fold + merged-axis materialize elimination),
+/// run steady-state on recycled arenas.  STFT carries a foldable window
+/// at two spectral regimes — nfft=32 is movement-bound (the eliminated
+/// copy and folded pass are a visible fraction) while nfft=256 is
+/// DFT-compute-bound — and PFB is the no-window control where the pass
+/// must change nothing.  Pure rust — needs no artifacts.
+///
+/// The gated headline is the geomean fused-vs-unfused speedup over the
+/// STFT cases (a same-machine ratio); PFB ratios are reported as
+/// informational fields only.
+fn plan_fusion_ablation() -> Json {
+    use tina::dsp::PfbConfig;
+    use tina::tina::{lower, CompileOptions, ExecPlan};
+
+    let cfg = tina::benchkit::BenchConfig::from_env();
+    let mut t = Table::new(
+        "ablation 8: plan-level fusion (window fold + copy elimination), B in {1, 8}",
+        &["graph", "unfused median", "fused median", "fused speedup"],
+    );
+    let pfb_cfg = PfbConfig::new(32, 8);
+    let cases: Vec<(String, bool, tina::tina::Graph, Vec<Tensor>)> = vec![
+        (
+            "stft B=1 L=4096 nfft=32".into(),
+            true,
+            lower::stft(1, 4096, 32, 16).unwrap(),
+            vec![Tensor::randn(&[1, 4096], 81)],
+        ),
+        (
+            "stft B=8 L=4096 nfft=32".into(),
+            true,
+            lower::stft(8, 4096, 32, 16).unwrap(),
+            vec![Tensor::randn(&[8, 4096], 82)],
+        ),
+        (
+            "stft B=1 L=4096 nfft=256".into(),
+            true,
+            lower::stft(1, 4096, 256, 128).unwrap(),
+            vec![Tensor::randn(&[1, 4096], 83)],
+        ),
+        (
+            "stft B=8 L=4096 nfft=256".into(),
+            true,
+            lower::stft(8, 4096, 256, 128).unwrap(),
+            vec![Tensor::randn(&[8, 4096], 84)],
+        ),
+        (
+            "pfb B=1 L=16384".into(),
+            false,
+            lower::pfb(1, 16384, pfb_cfg).unwrap(),
+            vec![Tensor::randn(&[1, 16384], 85)],
+        ),
+        (
+            "pfb B=8 L=16384".into(),
+            false,
+            lower::pfb(8, 16384, pfb_cfg).unwrap(),
+            vec![Tensor::randn(&[8, 16384], 86)],
+        ),
+    ];
+    let mut top: Vec<(&str, Json)> = Vec::new();
+    let mut case_json: Vec<(String, Json)> = Vec::new();
+    let mut stft_speedups: Vec<f64> = Vec::new();
+    for (label, is_stft, graph, inputs) in cases {
+        let fused = ExecPlan::compile(&graph).unwrap();
+        let unfused =
+            ExecPlan::compile_with(&graph, CompileOptions { fusion: false }).unwrap();
+        if is_stft {
+            assert!(fused.fused_steps() > 0, "{label}: window must fold");
+        } else {
+            assert_eq!(fused.fused_steps(), 0, "{label}: pfb has no window");
+        }
+        let mut arena_f = tina::tina::Arena::new();
+        let fv = tina::benchkit::run(&cfg, || {
+            black_box(fused.run_in(&mut arena_f, &inputs).unwrap());
+        })
+        .summary();
+        let mut arena_u = tina::tina::Arena::new();
+        let uv = tina::benchkit::run(&cfg, || {
+            black_box(unfused.run_in(&mut arena_u, &inputs).unwrap());
+        })
+        .summary();
+        let speedup = uv.median_ns / fv.median_ns.max(1e-9);
+        if is_stft {
+            stft_speedups.push(speedup.max(1e-9));
+        }
+        case_json.push((
+            label.clone(),
+            Json::obj(vec![
+                ("unfused_ns", Json::num(uv.median_ns)),
+                ("fused_ns", Json::num(fv.median_ns)),
+                (
+                    if is_stft {
+                        "fused_vs_unfused"
+                    } else {
+                        "pfb_control_ratio"
+                    },
+                    Json::num(speedup),
+                ),
+                ("fused_steps", Json::num(fused.fused_steps() as f64)),
+                (
+                    "eliminated_copies",
+                    Json::num(fused.fusion_eliminated_copies() as f64),
+                ),
+            ]),
+        ));
+        t.row(vec![
+            label,
+            fmt(uv.median_ns),
+            fmt(fv.median_ns),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    let g = geomean(&stft_speedups);
+    t.row(vec![
+        "geomean (stft)".into(),
+        String::new(),
+        String::new(),
+        format!("{g:.2}x"),
+    ]);
+    println!("{}", t.render());
+    top.push(("geomean_stft_fusion_speedup", Json::num(g)));
+    top.push(("cases", Json::Obj(case_json.into_iter().collect())));
+    Json::obj(top)
 }
 
 /// 7. solo vs batched fallback serving: B=1 FIR requests with no matching

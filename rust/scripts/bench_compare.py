@@ -55,7 +55,16 @@ def latest_snapshot(root: pathlib.Path, exclude: str | None) -> pathlib.Path | N
     own file so the gate always anchors to a snapshot that predates the
     PR, instead of re-baselining against numbers the PR itself committed
     (which would let sub-threshold regressions compound push over push).
+    A snapshot whose ``backfilled_by_pr`` equals the excluded PR's number
+    is skipped for the same reason: its numbers were measured by that
+    PR's own CI run, so anchoring to it would let the PR baseline against
+    itself through the backfill side door.
     """
+    exclude_n: int | None = None
+    if exclude:
+        m = re.fullmatch(r"BENCH_pr(\d+)\.json", exclude)
+        if m:
+            exclude_n = int(m.group(1))
     candidates: list[tuple[int, pathlib.Path]] = []
     for p in root.glob("BENCH_pr*.json"):
         if exclude and p.name == exclude:
@@ -65,18 +74,37 @@ def latest_snapshot(root: pathlib.Path, exclude: str | None) -> pathlib.Path | N
             candidates.append((int(m.group(1)), p))
     candidates.sort(reverse=True)
 
-    def is_pending(p: pathlib.Path) -> bool:
+    def load(p: pathlib.Path) -> dict:
         try:
-            return bool(json.loads(p.read_text()).get("pending"))
+            d = json.loads(p.read_text())
+            return d if isinstance(d, dict) else {}
         except (json.JSONDecodeError, OSError):
+            return {}
+
+    noted: set[str] = set()
+
+    def self_baselined(p: pathlib.Path) -> bool:
+        if exclude_n is None:
             return False
+        if load(p).get("backfilled_by_pr") == exclude_n:
+            if p.name not in noted:
+                noted.add(p.name)
+                print(
+                    f"note: skipping {p.name} as baseline — it was backfilled "
+                    f"by the excluded PR {exclude_n}'s own measurements"
+                )
+            return True
+        return False
 
     # the highest-numbered measured snapshot beats any pending placeholder
     # (a stale placeholder with a high N must not disarm the gate forever)
     for _, p in candidates:
-        if not is_pending(p):
+        if not load(p).get("pending") and not self_baselined(p):
             return p
-    return candidates[0][1] if candidates else None
+    for _, p in candidates:
+        if not self_baselined(p):
+            return p
+    return None
 
 
 def direction(field: str) -> str | None:

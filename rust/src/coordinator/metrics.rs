@@ -76,6 +76,14 @@ pub struct Metrics {
     /// traffic overflowing `RouterConfig::plan_cache_cap`; every
     /// (op, shape, B) bucket entry counts individually).
     pub plan_cache_evictions: AtomicU64,
+    /// Kernel steps removed by the plan-level fusion pass across all
+    /// plans compiled through the router (window multiplies folded into
+    /// their framing convs at compile time).
+    pub fused_steps: AtomicU64,
+    /// `Materialize` copies the fusion pass eliminated across all plans
+    /// compiled through the router (merged-axis regroupings re-expressed
+    /// as split-view reads — batched STFT framing is the shipped case).
+    pub fusion_eliminated_copies: AtomicU64,
     /// Plan-cache (hits, misses) per fallback bucket size B.
     plan_cache_buckets: Mutex<BTreeMap<usize, (u64, u64)>>,
     latency: Mutex<BTreeMap<String, Histogram>>,
@@ -196,6 +204,19 @@ impl Metrics {
         }
     }
 
+    /// Fold in the fusion-pass counters drained from the router
+    /// (`Router::take_fusion_counters`): window folds applied and
+    /// materialize copies eliminated by newly compiled plans.
+    pub fn record_plan_fusion(&self, fused_steps: u64, eliminated_copies: u64) {
+        if fused_steps > 0 {
+            self.fused_steps.fetch_add(fused_steps, Ordering::Relaxed);
+        }
+        if eliminated_copies > 0 {
+            self.fusion_eliminated_copies
+                .fetch_add(eliminated_copies, Ordering::Relaxed);
+        }
+    }
+
     /// Fraction of executed batch rows (artifact + fallback buckets) that
     /// were real requests rather than padding.  1.0 when no batch has run
     /// yet (an empty history carries no padding waste).
@@ -220,7 +241,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} inflight_batched={} drain_completions={} adaptive_bucket_cap={} adaptive_bucket_wait_us={} adaptive_bucket_shrinks={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={}\n",
+            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} inflight_batched={} drain_completions={} adaptive_bucket_cap={} adaptive_bucket_wait_us={} adaptive_bucket_shrinks={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={} fused_steps={} fusion_eliminated_copies={}\n",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -240,6 +261,8 @@ impl Metrics {
             self.plan_cache_hits.load(Ordering::Relaxed),
             self.plan_cache_misses.load(Ordering::Relaxed),
             self.plan_cache_evictions.load(Ordering::Relaxed),
+            self.fused_steps.load(Ordering::Relaxed),
+            self.fusion_eliminated_copies.load(Ordering::Relaxed),
         ));
         for (bucket, hits, misses) in self.plan_cache_bucket_stats() {
             out.push_str(&format!(
@@ -270,9 +293,14 @@ mod tests {
         m.record_plan_cache(true);
         m.record_plan_cache_evictions(0);
         m.record_plan_cache_evictions(2);
+        m.record_plan_fusion(0, 0);
+        m.record_plan_fusion(2, 1);
         assert_eq!(m.plan_cache_hits.load(Ordering::Relaxed), 2);
         assert_eq!(m.plan_cache_misses.load(Ordering::Relaxed), 1);
         assert_eq!(m.plan_cache_evictions.load(Ordering::Relaxed), 2);
+        assert_eq!(m.fused_steps.load(Ordering::Relaxed), 2);
+        assert_eq!(m.fusion_eliminated_copies.load(Ordering::Relaxed), 1);
+        assert!(m.report().contains("fused_steps=2"), "report surfaces fusion");
         assert_eq!(m.requests.load(Ordering::Relaxed), 2);
         assert_eq!(m.completed.load(Ordering::Relaxed), 1);
         assert_eq!(m.failed.load(Ordering::Relaxed), 1);

@@ -173,6 +173,12 @@ pub struct Router {
     /// Plans dropped from either cache since the last drain (the
     /// coordinator folds this into `Metrics::plan_cache_evictions`).
     evictions: AtomicU64,
+    /// Window-fold rewrites applied by plans compiled since the last
+    /// drain (the coordinator folds this into `Metrics::fused_steps`).
+    fused_steps: AtomicU64,
+    /// Materialize copies eliminated by plans compiled since the last
+    /// drain (drained into `Metrics::fusion_eliminated_copies`).
+    fusion_eliminated_copies: AtomicU64,
 }
 
 impl Router {
@@ -185,6 +191,8 @@ impl Router {
             plans: Mutex::new(LruMap::new(cap)),
             exec_plans: Mutex::new(LruMap::new(cap)),
             evictions: AtomicU64::new(0),
+            fused_steps: AtomicU64::new(0),
+            fusion_eliminated_copies: AtomicU64::new(0),
         }
     }
 
@@ -391,6 +399,12 @@ impl Router {
         // harmless — last insert wins, both plans are identical.
         let graph = self.build_graph_for(op, shapes)?;
         let p = std::sync::Arc::new(Planned::new(&graph)?);
+        self.fused_steps
+            .fetch_add(p.plan().fused_steps() as u64, Ordering::Relaxed);
+        self.fusion_eliminated_copies.fetch_add(
+            p.plan().fusion_eliminated_copies() as u64,
+            Ordering::Relaxed,
+        );
         let evicted = self
             .exec_plans
             .lock()
@@ -404,6 +418,16 @@ impl Router {
     /// drain; the coordinator mirrors it into its metrics.
     pub fn take_plan_cache_evictions(&self) -> u64 {
         self.evictions.swap(0, Ordering::Relaxed)
+    }
+
+    /// Take (and reset) the fusion counters accumulated by plan compiles
+    /// since the last drain, as `(fused_steps, fusion_eliminated_copies)`;
+    /// the coordinator mirrors them into its metrics.
+    pub fn take_fusion_counters(&self) -> (u64, u64) {
+        (
+            self.fused_steps.swap(0, Ordering::Relaxed),
+            self.fusion_eliminated_copies.swap(0, Ordering::Relaxed),
+        )
     }
 
     fn build_graph(&self, req: &OpRequest) -> Result<crate::tina::Graph> {
@@ -736,6 +760,30 @@ mod tests {
         assert!(hit, "recently-touched plan must survive eviction");
         let (_, hit) = r.planned(&k101, &r101).unwrap();
         assert!(!hit, "LRU plan must have been evicted");
+    }
+
+    #[test]
+    fn fusion_counters_accumulate_and_drain() {
+        let r = router();
+        assert_eq!(r.take_fusion_counters(), (0, 0));
+        // default config: nfft 256, hop 128.  A batched B=2 STFT plan
+        // folds its window (1 fused step) and eliminates the frame
+        // regrouping copy (1)
+        let (_, hit) = r
+            .planned_for_shapes(OpKind::Stft, &[vec![2, 1024]])
+            .unwrap();
+        assert!(!hit);
+        assert_eq!(r.take_fusion_counters(), (1, 1), "stft B=2 fold + copy");
+        assert_eq!(r.take_fusion_counters(), (0, 0), "drain resets");
+        // a cache hit compiles nothing, so nothing accumulates
+        let (_, hit) = r
+            .planned_for_shapes(OpKind::Stft, &[vec![2, 1024]])
+            .unwrap();
+        assert!(hit);
+        assert_eq!(r.take_fusion_counters(), (0, 0));
+        // FIR has no window: fold-free plans leave the counters alone
+        let _ = r.planned_for_shapes(OpKind::Fir, &[vec![1, 256]]).unwrap();
+        assert_eq!(r.take_fusion_counters(), (0, 0));
     }
 
     #[test]

@@ -51,6 +51,16 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Drain the router's accumulated counters — plan-cache evictions and
+/// fusion-pass stats — into the metrics sink.  Every serving path that
+/// may have compiled (or evicted) a plan calls this one helper, so a
+/// counter added to the router is surfaced on all arms at once.
+fn sync_router_counters(metrics: &Metrics, router: &Router) {
+    metrics.record_plan_cache_evictions(router.take_plan_cache_evictions());
+    let (fused, copies) = router.take_fusion_counters();
+    metrics.record_plan_fusion(fused, copies);
+}
+
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -190,9 +200,7 @@ impl Coordinator {
                                     .planned_for_shapes(op, &[vec![bucket, len]])
                                     .and_then(|(plan, hit)| {
                                         metrics.record_plan_cache_bucketed(bucket, hit);
-                                        metrics.record_plan_cache_evictions(
-                                            router.take_plan_cache_evictions(),
-                                        );
+                                        sync_router_counters(&metrics, &router);
                                         plan.run_rows(std::slice::from_ref(&batch.input), rows_n)
                                     });
                                 // only successfully executed buckets
@@ -270,11 +278,10 @@ impl Coordinator {
     pub fn submit(&self, req: OpRequest) -> OneShot<Result<OpResponse>> {
         let slot: OneShot<Result<OpResponse>> = OneShot::new();
         self.metrics.record_request();
-        // surface plan-cache evictions from *any* router path (including
-        // direct oracle/interpreter use between requests), not just the
-        // fallback compile below
-        self.metrics
-            .record_plan_cache_evictions(self.router.take_plan_cache_evictions());
+        // surface plan-cache evictions and fusion counters from *any*
+        // router path (including direct oracle/interpreter use between
+        // requests), not just the fallback compile below
+        sync_router_counters(&self.metrics, &self.router);
         let t0 = Instant::now();
         let op = req.op.as_str();
 
@@ -340,8 +347,7 @@ impl Coordinator {
                 let planned = match self.router.planned(&key, &req) {
                     Ok((p, hit)) => {
                         self.metrics.record_plan_cache(hit);
-                        self.metrics
-                            .record_plan_cache_evictions(self.router.take_plan_cache_evictions());
+                        sync_router_counters(&self.metrics, &self.router);
                         p
                     }
                     Err(e) => {

@@ -18,6 +18,8 @@
 //! });
 //! ```
 
+use crate::tensor::Tensor;
+use crate::tina::{FusionHint, Graph, NodeOp, ValueId};
 use crate::util::prng::Xoshiro256;
 
 /// Result type for property bodies: Err(message) fails the case.
@@ -148,6 +150,283 @@ pub fn run_config(name: &str, cfg: Config, body: impl Fn(&mut Gen) -> PropResult
     }
 }
 
+// ---------------------------------------------------------------------------
+// Random TINA graph generator — the differential fuzzer's input
+// ---------------------------------------------------------------------------
+
+/// Build a random **valid** TINA graph (chains and diamonds over the four
+/// building-block layers, `Add`/`Sub`, and all four movement ops) plus
+/// matching random inputs.  `rust/tests/properties.rs` feeds these to the
+/// plan-vs-interpreter differential fuzzer.
+///
+/// Design constraints that keep the oracle contract *bitwise*:
+///
+/// * `Add`/`Sub` operands are never `Constant` nodes — adding a
+///   per-channel-uniform constant to a layer output would trigger the
+///   planner's bias fold, the one documented tolerance-only rewrite;
+/// * all dims stay small (≤ 6 per input axis), so hundreds of cases run
+///   in milliseconds;
+/// * roughly a third of the graphs are STFT-like framing + hinted-window
+///   pipelines (with deliberate precondition-breaking variants), so the
+///   fusion pass's fold, its skip rules, and the merged-axis materialize
+///   elimination are all exercised — equality must hold whether or not a
+///   rewrite fires.
+pub fn random_graph(g: &mut Gen) -> (Graph, Vec<Tensor>) {
+    if g.usize_in(0, 9) < 3 {
+        random_framed_window_graph(g)
+    } else {
+        random_op_graph(g)
+    }
+}
+
+/// Random factorization of `n` into exactly `rank` factors (order random).
+fn factorize(g: &mut Gen, n: usize, rank: usize) -> Vec<usize> {
+    let mut dims = Vec::with_capacity(rank);
+    let mut rem = n.max(1);
+    for _ in 1..rank {
+        let divs: Vec<usize> = (1..=rem).filter(|d| rem % d == 0).collect();
+        let d = *g.choose(&divs);
+        dims.push(d);
+        rem /= d;
+    }
+    dims.push(rem);
+    dims
+}
+
+/// Pick a pool value, biased toward recently produced ones (chains form,
+/// while older values stay reachable so diamonds appear too).
+fn pick(g: &mut Gen, pool: &[(ValueId, Vec<usize>)]) -> (ValueId, Vec<usize>) {
+    let back = g.usize_in(0, (pool.len() - 1).min(5));
+    let (v, s) = &pool[pool.len() - 1 - back];
+    (*v, s.clone())
+}
+
+/// Reshape `v` to a random `rank`-dim shape with the same element count,
+/// registering any new value in the pool.
+fn coerce(
+    g: &mut Gen,
+    gr: &mut Graph,
+    pool: &mut Vec<(ValueId, Vec<usize>)>,
+    v: ValueId,
+    s: &[usize],
+    rank: usize,
+) -> (ValueId, Vec<usize>) {
+    let n: usize = s.iter().product();
+    let shape = factorize(g, n, rank);
+    if shape.as_slice() == s {
+        return (v, shape);
+    }
+    let nv = gr.push(NodeOp::Reshape(shape.clone()), &[v]);
+    pool.push((nv, shape.clone()));
+    (nv, shape)
+}
+
+/// Append one random op (layer, elementwise, or movement) to the graph.
+fn random_op(g: &mut Gen, gr: &mut Graph, pool: &mut Vec<(ValueId, Vec<usize>)>) {
+    let (v, s) = pick(g, pool);
+    match g.usize_in(0, 9) {
+        0 => {
+            // depthwise conv; M == 1 windows are sometimes hinted so the
+            // fold's verifier sees arbitrary (usually unfoldable) inputs
+            let (x, xs) = coerce(g, gr, pool, v, &s, 3);
+            let (t, c, w) = (xs[0], xs[1], xs[2]);
+            let m = g.usize_in(1, w);
+            let k = gr.constant(Tensor::randn(&[c, m], g.u64()));
+            let b = gr.constant(Tensor::randn(&[c], g.u64()));
+            let hint = if m == 1 && g.bool() {
+                FusionHint::Window
+            } else {
+                FusionHint::None
+            };
+            let o = gr.push_with_hint(NodeOp::DepthwiseConv1d, &[x, k, b], hint);
+            pool.push((o, vec![t, c, w - m + 1]));
+        }
+        1 => {
+            // standard conv; a quarter of the kernels are one-hot ±1 with
+            // zero bias (the fold's framing-conv shape)
+            let (x, xs) = coerce(g, gr, pool, v, &s, 3);
+            let (t, cin, w) = (xs[0], xs[1], xs[2]);
+            let cout = g.usize_in(1, 4);
+            let n = g.usize_in(1, w);
+            let (kt, bt) = if g.usize_in(0, 3) == 0 {
+                let mut kd = vec![0.0f32; cout * cin * n];
+                for co in 0..cout {
+                    let pos = g.usize_in(0, cin * n - 1);
+                    kd[co * cin * n + pos] = if g.bool() { 1.0 } else { -1.0 };
+                }
+                (
+                    Tensor::new(&[cout, cin, n], kd).unwrap(),
+                    Tensor::zeros(&[cout]),
+                )
+            } else {
+                (
+                    Tensor::randn(&[cout, cin, n], g.u64()),
+                    Tensor::randn(&[cout], g.u64()),
+                )
+            };
+            let k = gr.constant(kt);
+            let b = gr.constant(bt);
+            let o = gr.push(NodeOp::StandardConv1d, &[x, k, b]);
+            pool.push((o, vec![t, cout, w - n + 1]));
+        }
+        2 => {
+            let (x, xs) = coerce(g, gr, pool, v, &s, 3);
+            let (t, cin, sp) = (xs[0], xs[1], xs[2]);
+            let cout = g.usize_in(1, 4);
+            let k = gr.constant(Tensor::randn(&[cin, cout], g.u64()));
+            let b = gr.constant(Tensor::randn(&[cout], g.u64()));
+            let o = gr.push(NodeOp::PointwiseConv, &[x, k, b]);
+            pool.push((o, vec![t, cout, sp]));
+        }
+        3 => {
+            let (x, xs) = coerce(g, gr, pool, v, &s, 2);
+            let (bsz, cin) = (xs[0], xs[1]);
+            let cout = g.usize_in(1, 4);
+            let k = gr.constant(Tensor::randn(&[cin, cout], g.u64()));
+            let b = gr.constant(Tensor::randn(&[cout], g.u64()));
+            let o = gr.push(NodeOp::FullyConnected, &[x, k, b]);
+            pool.push((o, vec![bsz, cout]));
+        }
+        4 | 5 => {
+            // Add/Sub over same-shape pool values (never constants; a
+            // self-pair makes a diamond)
+            let same: Vec<ValueId> = pool
+                .iter()
+                .filter(|(_, ps)| ps == &s)
+                .map(|(pv, _)| *pv)
+                .collect();
+            let other = *g.choose(&same);
+            let op = if g.bool() { NodeOp::Add } else { NodeOp::Sub };
+            let o = gr.push(op, &[v, other]);
+            pool.push((o, s));
+        }
+        6 => {
+            let (x, xs) = coerce(g, gr, pool, v, &s, 2);
+            let o = gr.push(NodeOp::Transpose2, &[x]);
+            pool.push((o, vec![xs[1], xs[0]]));
+        }
+        7 => {
+            let (x, xs) = coerce(g, gr, pool, v, &s, 3);
+            let p = *g.choose(&[
+                [0usize, 1, 2],
+                [0, 2, 1],
+                [1, 0, 2],
+                [1, 2, 0],
+                [2, 0, 1],
+                [2, 1, 0],
+            ]);
+            let o = gr.push(NodeOp::Permute3(p), &[x]);
+            pool.push((o, vec![xs[p[0]], xs[p[1]], xs[p[2]]]));
+        }
+        8 => {
+            let axis = g.usize_in(0, s.len() - 1);
+            let d = s[axis];
+            let stride = g.usize_in(1, d);
+            let count = g.usize_in(1, (d - 1) / stride + 1);
+            let o = gr.push(NodeOp::StridedSlice { axis, stride, count }, &[v]);
+            let mut os = s.clone();
+            os[axis] = count;
+            pool.push((o, os));
+        }
+        _ => {
+            let rank = g.usize_in(1, 3);
+            let _ = coerce(g, gr, pool, v, &s, rank);
+        }
+    }
+}
+
+fn random_op_graph(g: &mut Gen) -> (Graph, Vec<Tensor>) {
+    let mut gr = Graph::new();
+    let mut pool: Vec<(ValueId, Vec<usize>)> = Vec::new();
+    let mut inputs = Vec::new();
+    for _ in 0..g.usize_in(1, 3) {
+        let rank = g.usize_in(1, 3);
+        let shape: Vec<usize> = (0..rank).map(|_| g.usize_in(1, 6)).collect();
+        let v = gr.input(&shape);
+        inputs.push(Tensor::randn(&shape, g.u64()));
+        pool.push((v, shape));
+    }
+    for _ in 0..g.usize_in(2, 8) {
+        random_op(g, &mut gr, &mut pool);
+    }
+    // one or two distinct outputs, biased toward the newest values (views
+    // and diamonds both end up as terminal outputs this way)
+    let mut outs: Vec<ValueId> = Vec::new();
+    for _ in 0..g.usize_in(1, 2) {
+        let idx = pool.len() - 1 - g.usize_in(0, (pool.len() - 1).min(3));
+        if !outs.contains(&pool[idx].0) {
+            outs.push(pool[idx].0);
+        }
+    }
+    gr.set_outputs(&outs);
+    (gr, inputs)
+}
+
+/// STFT-like framing + hinted window pipeline with deliberate variants:
+/// 0 = cleanly foldable, 1 = window output shared by an `Add` (fold must
+/// skip), 2 = dense (non-one-hot) framing kernel (fold must skip), 3 =
+/// framed view is also an output (fold must skip).
+fn random_framed_window_graph(g: &mut Gen) -> (Graph, Vec<Tensor>) {
+    let b = g.usize_in(1, 3);
+    let nfft = *g.choose(&[2usize, 4, 8]);
+    let hop = g.usize_in(1, nfft);
+    let frames = g.usize_in(1, 4);
+    let l = nfft + hop * (frames - 1) + g.usize_in(0, 3);
+    let variant = g.usize_in(0, 3);
+    let mut gr = Graph::new();
+    let x = gr.input(&[b, l]);
+    let xi = gr.push(NodeOp::Reshape(vec![b, 1, l]), &[x]);
+    let kt = if variant == 2 {
+        Tensor::randn(&[nfft, 1, nfft], g.u64())
+    } else {
+        // identity framing taps, rows randomly sign-flipped (±1 stays
+        // foldable)
+        let mut t = Tensor::eye(nfft).reshape(&[nfft, 1, nfft]).unwrap();
+        for tap in t.data_mut().iter_mut() {
+            if *tap != 0.0 && g.bool() {
+                *tap = -*tap;
+            }
+        }
+        t
+    };
+    let k = gr.constant(kt);
+    let bias0 = gr.constant(Tensor::zeros(&[nfft]));
+    let unfolded = gr.push(NodeOp::StandardConv1d, &[xi, k, bias0]);
+    let framed = gr.push(
+        NodeOp::StridedSlice {
+            axis: 2,
+            stride: hop,
+            count: frames,
+        },
+        &[unfolded],
+    );
+    let framed = gr.push(NodeOp::Permute3([0, 2, 1]), &[framed]);
+    let rows = gr.push(NodeOp::Reshape(vec![b * frames, nfft, 1]), &[framed]);
+    let kwin = gr.constant(Tensor::randn(&[nfft, 1], g.u64()));
+    let bias_w = gr.constant(if g.bool() {
+        Tensor::randn(&[nfft], g.u64())
+    } else {
+        Tensor::zeros(&[nfft])
+    });
+    let xw = gr.push_with_hint(
+        NodeOp::DepthwiseConv1d,
+        &[rows, kwin, bias_w],
+        FusionHint::Window,
+    );
+    let kd = gr.constant(Tensor::randn(&[nfft, nfft], g.u64()));
+    let bias_d = gr.constant(Tensor::zeros(&[nfft]));
+    let pw = gr.push(NodeOp::PointwiseConv, &[xw, kd, bias_d]);
+    let out = gr.push(NodeOp::Reshape(vec![b * frames, nfft]), &[pw]);
+    let mut outs = vec![out];
+    match variant {
+        1 => outs.push(gr.push(NodeOp::Add, &[xw, xw])),
+        3 => outs.push(framed),
+        _ => {}
+    }
+    gr.set_outputs(&outs);
+    (gr, vec![Tensor::randn(&[b, l], g.u64())])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,6 +471,40 @@ mod tests {
         };
         assert_eq!(collect(1), collect(1));
         assert_ne!(collect(1), collect(2));
+    }
+
+    #[test]
+    fn random_graphs_are_valid_and_runnable() {
+        // the generator must only ever emit graphs that validate and run:
+        // an invalid graph would make every fuzz failure ambiguous
+        run("generator soundness", 60, |g| {
+            let (graph, inputs) = random_graph(g);
+            graph.validate().map_err(|e| format!("invalid graph: {e}"))?;
+            prop_assert!(
+                inputs.len() == graph.inputs.len(),
+                "generator input arity mismatch"
+            );
+            crate::tina::Interpreter::new(graph)
+                .unwrap()
+                .run(&inputs)
+                .map_err(|e| format!("interpreter rejected generated graph: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_graphs_cover_framed_window_pipelines() {
+        // a fixed slice of seeds must include some hinted-window graphs,
+        // or the fuzzer would silently stop exercising the fold
+        let mut hinted = 0;
+        for seed in 0..40u64 {
+            let mut g = Gen::new(seed, 0.8);
+            let (graph, _) = random_graph(&mut g);
+            if graph.nodes.iter().any(|n| n.hint == FusionHint::Window) {
+                hinted += 1;
+            }
+        }
+        assert!(hinted > 0, "no hinted window graphs in 40 seeds");
     }
 
     #[test]

@@ -57,6 +57,13 @@ fn threads_for(rows: usize, work: usize) -> usize {
 
 /// Borrowed rank-3 strided input: backing slice + element offset + per-axis
 /// element strides.  `at(i, j, k) = d[off + i*s[0] + j*s[1] + k*s[2]]`.
+///
+/// `split0` optionally decomposes the leading axis into two levels —
+/// logical row `i` contributes `(i / inner) * outer_stride +
+/// (i % inner) * s[0]` instead of `i * s[0]`.  This is how the planner's
+/// fusion pass expresses a merged-axis regrouping (batched STFT's
+/// `(B, F, nfft) -> (B*F, nfft)` framing) without a copy: the kernels
+/// pay one divide/modulo per output *row*, not per element.
 #[derive(Clone, Copy)]
 pub struct X3<'a> {
     /// Backing slice.
@@ -65,6 +72,8 @@ pub struct X3<'a> {
     pub off: usize,
     /// Per-axis element strides.
     pub s: [usize; 3],
+    /// Optional `(inner extent, outer stride)` split of the leading axis.
+    pub split0: Option<(usize, usize)>,
 }
 
 impl<'a> X3<'a> {
@@ -74,17 +83,27 @@ impl<'a> X3<'a> {
             d,
             off: 0,
             s: [c * w, w, 1],
+            split0: None,
+        }
+    }
+
+    /// Leading-axis contribution of logical row `i` (split-aware).
+    #[inline(always)]
+    fn row(&self, i: usize) -> usize {
+        match self.split0 {
+            Some((inner, outer)) => (i / inner) * outer + (i % inner) * self.s[0],
+            None => i * self.s[0],
         }
     }
 
     #[inline(always)]
     fn base(&self, i: usize, j: usize) -> usize {
-        self.off + i * self.s[0] + j * self.s[1]
+        self.off + self.row(i) + j * self.s[1]
     }
 
     #[inline(always)]
     fn is_dense(&self, c: usize, w: usize) -> bool {
-        self.s[2] == 1 && self.s[1] == w && self.s[0] == c * w
+        self.split0.is_none() && self.s[2] == 1 && self.s[1] == w && self.s[0] == c * w
     }
 }
 
@@ -306,7 +325,7 @@ pub fn pointwise_conv_packed(
             let jn = NR.min(cout - co0);
             let panel = &panels[jb * cin * NR..(jb + 1) * cin * NR];
             let (s1, s2) = (x.s[1], x.s[2]);
-            let tbase = x.off + ti * x.s[0];
+            let tbase = x.off + x.row(ti);
             let mut sv = 0;
             while sv < s {
                 let sl = SR.min(s - sv);
@@ -609,6 +628,7 @@ mod tests {
             d: base.data(),
             off: 0,
             s: [w * c, 1, c], // strided (t, c, w) window on the (t, w, c) buffer
+            split0: None,
         };
         depthwise_conv(xv, (t, c, w), k.data(), 4, b.data(), &mut out);
         assert_eq!(out, want.data());
@@ -645,6 +665,7 @@ mod tests {
             d: base.data(),
             off: 0,
             s: [w * cin, 1, cin],
+            split0: None,
         };
         standard_conv(xv, (t, cin, w), k.data(), (4, 5), b.data(), &mut out);
         assert_eq!(out, want.data());
@@ -709,6 +730,7 @@ mod tests {
             d: base.data(),
             off: 0,
             s: [s * cin, 1, cin],
+            split0: None,
         };
         pointwise_conv_packed(xv, (t, cin, s), &packed, 6, b.data(), &mut out);
         assert_eq!(out, want.data());

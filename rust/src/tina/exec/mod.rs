@@ -20,11 +20,33 @@
 //! with zero copies.  An explicit `Materialize` step (a tiled, threaded
 //! gather) is inserted only where density is unavoidable:
 //!
-//! * a `Reshape` that merges axes a strided view cannot merge (the one
-//!   shipped case: batched STFT's `(B, F, nfft) -> (B*F, nfft)` frame
-//!   regrouping at `B > 1`);
+//! * a `Reshape` that merges axes a strided view cannot merge — though
+//!   the fusion pass (below) eliminates the one such case the shipped
+//!   lowerings produce;
 //! * weight / bias / fused-elementwise operands (those kernels stream
 //!   dense memory).
+//!
+//! # The plan-level fusion pass
+//!
+//! After view propagation and before liveness, `compile` rewrites
+//! adjacent steps (see `plan::fuse_protos` and ARCHITECTURE.md's fusion
+//! section for the full skip-rule catalog):
+//!
+//! * **merged-axis materialize elimination** — batched STFT's non-affine
+//!   `(B, F, nfft) -> (B*F, nfft)` frame regrouping becomes a split-axis
+//!   view the conv-family kernels reindex per output row, so every
+//!   shipped lowering now compiles with `materialize_count() == 0` at
+//!   every batch size;
+//! * **window fold** — a [`crate::tina::FusionHint::Window`]-tagged M=1
+//!   depthwise over a one-hot ±1 framing conv with zero bias folds into
+//!   the conv by pre-scaling its taps at compile time (one conv executes
+//!   instead of conv + elementwise multiply).
+//!
+//! Both rewrites preserve **bit-for-bit** interpreter equality; any
+//! candidate whose rewrite would change a rounding is skipped.
+//! [`ExecPlan::fused_steps`] / [`ExecPlan::fusion_eliminated_copies`]
+//! introspect the pass and [`CompileOptions`] switches it off (the
+//! fused-vs-unfused ablation).
 //!
 //! Plan outputs may themselves be views; the final gather copies them
 //! straight into the response tensor, so terminal transposes/permutes cost
@@ -69,7 +91,7 @@ pub mod fused;
 pub mod plan;
 
 pub use arena::Arena;
-pub use plan::ExecPlan;
+pub use plan::{CompileOptions, ExecPlan};
 
 use crate::tensor::Tensor;
 use crate::tina::graph::Graph;

@@ -20,6 +20,20 @@
 //! * **elementwise fusion** — single-consumer `Add`/`Sub` chains collapse
 //!   into one [`fused::fused_ew`] pass, and `Add`/`Sub` of a layer output
 //!   with a per-channel-uniform constant folds into that layer's bias;
+//! * **plan-level fusion pass** — after view propagation and before
+//!   liveness, adjacent compiled steps are rewritten (`fuse_protos`):
+//!   a merged-axis `Materialize` (batched STFT's `(B, F, nfft) ->
+//!   (B*F, nfft)` frame regrouping) becomes a `Split0` loop-nest
+//!   reindex its conv-family consumers read directly, and a
+//!   [`FusionHint::Window`]-tagged M=1 depthwise window over a one-hot
+//!   ±1 framing conv folds into the conv by pre-scaling its taps.  Both
+//!   rewrites preserve **bit-for-bit** interpreter equality (the fold's
+//!   skip rules reject any candidate whose rewrite would reassociate or
+//!   re-round a float operation); with them, every shipped lowering
+//!   compiles with `materialize_count() == 0` at every batch size.
+//!   [`ExecPlan::fused_steps`] / [`ExecPlan::fusion_eliminated_copies`]
+//!   introspect the pass, and [`CompileOptions`] can switch it off
+//!   (ablation 8);
 //! * **liveness analysis** — every materialized value gets a slot in a
 //!   slab [`Arena`] via linear-scan allocation over the topological
 //!   schedule; slot sizes derive from *materialized* extents (views add
@@ -37,7 +51,7 @@
 use super::arena::Arena;
 use super::fused;
 use crate::tensor::Tensor;
-use crate::tina::graph::{Graph, NodeOp, ValueId};
+use crate::tina::graph::{FusionHint, Graph, NodeOp, ValueId};
 use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, HashSet};
 
@@ -61,13 +75,33 @@ fn row_major(shape: &[usize]) -> Vec<usize> {
     s
 }
 
+/// Two-level decomposition of a view's leading axis: logical row `r`
+/// contributes `(r / inner) * outer_stride + (r % inner) * strides[0]`
+/// to the element address.  This expresses the one index mapping plain
+/// strides cannot — merging two axes that are not dense with respect to
+/// each other (batched STFT's `(B, F, nfft) -> (B*F, nfft)` frame
+/// regrouping).  Produced only by the fusion pass, which re-expresses
+/// such a `Materialize` copy as this loop-nest reindex; consumed only by
+/// the conv-family kernels (their row loop applies the split per output
+/// row, a divide/modulo per row, not per element).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Split0 {
+    /// Extent of the inner (faster-varying) factor of the leading axis.
+    inner: usize,
+    /// Element stride of the outer factor.
+    outer_stride: usize,
+}
+
 /// A strided window onto a backing buffer: `elem(idx) = backing[offset +
-/// dot(idx, strides)]`.  Movement ops rewrite only this metadata.
+/// dot(idx, strides)]`.  Movement ops rewrite only this metadata.  The
+/// optional [`Split0`] generalizes the leading axis to a two-level
+/// (outer, inner) decomposition; see its docs.
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct View {
     offset: usize,
     shape: Vec<usize>,
     strides: Vec<usize>,
+    split0: Option<Split0>,
 }
 
 impl View {
@@ -76,6 +110,7 @@ impl View {
             offset: 0,
             strides: row_major(shape),
             shape: shape.to_vec(),
+            split0: None,
         }
     }
 
@@ -84,7 +119,12 @@ impl View {
     }
 
     /// Dense row-major layout (strides of size-1 axes are irrelevant).
+    /// Split views are never treated as dense — the whole point of the
+    /// split is that the leading axis is *not* affine.
     fn is_contiguous(&self) -> bool {
+        if self.split0.is_some() {
+            return false;
+        }
         let mut expect = 1usize;
         for (&d, &s) in self.shape.iter().zip(&self.strides).rev() {
             if d != 1 && s != expect {
@@ -98,33 +138,51 @@ impl View {
     /// One past the largest element index the view can touch, relative to
     /// the backing buffer's start.
     fn end(&self) -> usize {
-        self.offset
-            + 1
-            + self
-                .shape
-                .iter()
-                .zip(&self.strides)
-                .map(|(&d, &s)| (d - 1) * s)
-                .sum::<usize>()
+        let mut last = self.offset;
+        for (i, (&d, &s)) in self.shape.iter().zip(&self.strides).enumerate() {
+            let dm = d.max(1) - 1;
+            last += match (i, self.split0) {
+                (0, Some(sp)) => {
+                    // the maximum of (r/inner)*outer + (r%inner)*s over
+                    // r <= dm is reached either at r = dm itself or at
+                    // the last row of the second-to-last outer block
+                    let (q, r) = (dm / sp.inner, dm % sp.inner);
+                    let c1 = q * sp.outer_stride + r * s;
+                    let c2 = if q > 0 {
+                        (q - 1) * sp.outer_stride + (sp.inner - 1) * s
+                    } else {
+                        0
+                    };
+                    c1.max(c2)
+                }
+                _ => dm * s,
+            };
+        }
+        last + 1
     }
 
     fn transpose2(&self) -> View {
+        debug_assert!(self.split0.is_none(), "movement over a split view");
         View {
             offset: self.offset,
             shape: vec![self.shape[1], self.shape[0]],
             strides: vec![self.strides[1], self.strides[0]],
+            split0: None,
         }
     }
 
     fn permute3(&self, p: [usize; 3]) -> View {
+        debug_assert!(self.split0.is_none(), "movement over a split view");
         View {
             offset: self.offset,
             shape: p.iter().map(|&i| self.shape[i]).collect(),
             strides: p.iter().map(|&i| self.strides[i]).collect(),
+            split0: None,
         }
     }
 
     fn stride_axis(&self, axis: usize, step: usize, count: usize) -> View {
+        debug_assert!(self.split0.is_none(), "movement over a split view");
         let mut v = self.clone();
         v.shape[axis] = count;
         v.strides[axis] *= step;
@@ -136,6 +194,9 @@ impl View {
     /// the merged group).  Returns `None` when a copy is unavoidable.
     fn reshape(&self, new_shape: &[usize]) -> Option<View> {
         debug_assert_eq!(self.numel(), new_shape.iter().product::<usize>());
+        if self.split0.is_some() {
+            return None;
+        }
         // size-1 axes carry no layout information: drop them first
         let mut olddims: Vec<usize> = Vec::with_capacity(self.shape.len());
         let mut oldstrides: Vec<usize> = Vec::with_capacity(self.shape.len());
@@ -185,6 +246,7 @@ impl View {
             offset: self.offset,
             shape: new_shape.to_vec(),
             strides: newstrides,
+            split0: None,
         })
     }
 }
@@ -243,6 +305,22 @@ struct Step {
     out_root: usize,
 }
 
+/// Compile-time switches for [`ExecPlan::compile_with`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompileOptions {
+    /// Run the plan-level fusion pass (window-into-framing-conv constant
+    /// folding plus merged-axis materialize elimination).  On by default —
+    /// the serving configuration; the ablation bench switches it off to
+    /// measure what the pass buys.
+    pub fusion: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions { fusion: true }
+    }
+}
+
 /// A compiled, immutable execution plan for one graph.
 #[derive(Debug)]
 pub struct ExecPlan {
@@ -253,6 +331,11 @@ pub struct ExecPlan {
     steps: Vec<Step>,
     slot_sizes: Vec<usize>,
     outputs: Vec<ArgRef>,
+    /// Kernel steps removed by the fusion pass's window fold.
+    fused_steps: usize,
+    /// `Materialize` copies the fusion pass re-expressed as split-view
+    /// reads.
+    fusion_eliminated_copies: usize,
 }
 
 /// Compile-time storage class of a value (pass-A bookkeeping).
@@ -332,6 +415,330 @@ fn expand_terms(
     }
 }
 
+/// Outcome counters of the plan-level fusion pass.
+#[derive(Debug, Default, Clone, Copy)]
+struct FusionOutcome {
+    fused_steps: usize,
+    eliminated_copies: usize,
+}
+
+/// Upper bound on the window fold's compile-time index-correspondence
+/// scan (elements of the window's activation view); larger candidates
+/// are skipped — never wrong, just left unfused.
+const FOLD_SCAN_CAP: usize = 1 << 22;
+
+/// True when `arg_idx` of `kernel` is an activation read through
+/// [`fused::X3`] strides — the only argument position that may carry a
+/// [`Split0`] (weights, biases and elementwise terms stream dense memory).
+fn is_x3_activation(kernel: &Kernel, arg_idx: usize) -> bool {
+    arg_idx == 0
+        && matches!(
+            kernel,
+            Kernel::StandardConv1d | Kernel::DepthwiseConv1d | Kernel::PointwiseConv { .. }
+        )
+}
+
+/// The plan constant index behind `a`, when `a` reads constant storage as
+/// a dense offset-0 view covering every element (view order == data
+/// order, so the fold may reason about the raw data).
+fn whole_const(a: &ValInfo, constants: &[Tensor]) -> Option<usize> {
+    let Storage::Const(k) = a.st else { return None };
+    if a.view.offset == 0 && a.view.is_contiguous() && a.view.numel() == constants[k].len() {
+        Some(k)
+    } else {
+        None
+    }
+}
+
+/// Identity view over a value's dense extent with exactly `shape`
+/// (element i of the view is element i of the backing value).
+fn is_identity_view(v: &View, shape: &[usize]) -> bool {
+    v.offset == 0 && v.shape == shape && v.is_contiguous()
+}
+
+/// Check whether the `Materialize` proto at `i` merely merges a rank-3
+/// view's two leading axes — the `(A, B, C) -> (A*B, C, 1)` regrouping
+/// batched STFT framing produces — and every consumer reads the copy as
+/// a rank-3 identity activation of a conv-family kernel.  If so, return
+/// the [`Split0`] view those consumers can read *instead* of the copy:
+/// the non-affine regrouping becomes a per-output-row reindex inside the
+/// kernel loop nest, and the copy disappears.
+fn try_merge_reindex(
+    protos: &[ProtoStep],
+    i: usize,
+    output_roots: &HashSet<usize>,
+) -> Option<ValInfo> {
+    let p = &protos[i];
+    if !matches!(p.kernel, Kernel::Materialize { .. }) {
+        return None;
+    }
+    let a = &p.args[0];
+    if a.view.split0.is_some() || a.view.shape.len() != 3 {
+        return None;
+    }
+    let (da, db, dc) = (a.view.shape[0], a.view.shape[1], a.view.shape[2]);
+    if da * db * dc == 0 || p.out_shape != [da * db, dc, 1] {
+        return None;
+    }
+    // a plan output must stay a dense buffer (the output gather does not
+    // know split views)
+    if output_roots.contains(&p.out_vid) {
+        return None;
+    }
+    for q in &protos[i + 1..] {
+        for (ai, qa) in q.args.iter().enumerate() {
+            if qa.root != p.out_vid {
+                continue;
+            }
+            if !is_x3_activation(&q.kernel, ai) || !is_identity_view(&qa.view, &p.out_shape) {
+                return None;
+            }
+        }
+    }
+    Some(ValInfo {
+        st: a.st,
+        root: a.root,
+        view: View {
+            offset: a.view.offset,
+            shape: p.out_shape.clone(),
+            strides: vec![a.view.strides[1], a.view.strides[2], a.view.strides[2]],
+            split0: Some(Split0 {
+                inner: db,
+                outer_stride: a.view.strides[0],
+            }),
+        },
+    })
+}
+
+/// The window fold's verified rewrite: which conv proto absorbs the
+/// window, and its pre-scaled replacement kernel.
+struct WindowFold {
+    conv: usize,
+    scaled_kernel: Tensor,
+}
+
+/// Check whether the depthwise proto at `j` is a foldable window multiply
+/// (graph node tagged [`FusionHint::Window`]) over a framing
+/// `StandardConv1d`, and build the pre-scaled conv kernel if so.
+///
+/// Every precondition is re-proved here — the hint only nominates
+/// candidates:
+///
+/// * window kernel is a whole-tensor constant of shape `(C, 1)` (M = 1:
+///   a pure per-channel scale) and the window bias a whole-tensor
+///   constant `(C,)`;
+/// * the activation is a rank-3 view of a `StandardConv1d` proto whose
+///   weights are a whole-tensor constant with **one-hot ±1 rows** (at
+///   most one nonzero tap per output channel, and that tap exactly
+///   `±1.0`) and whose bias is exactly zero — so each conv output
+///   element is a single `±x` with no f32 rounding of its own, and
+///   pre-scaling the tap to `±win[c]` performs the window's multiply
+///   with the interpreter's exact rounding (`(x * ±1) * w == x * ±w`
+///   bitwise; general taps would reassociate `(x*t)*w` into `x*(t*w)`,
+///   which rounds differently, so they are skipped);
+/// * the conv output has no other reader and is not a plan output
+///   (anything else would observe pre-window values);
+/// * every consumer of the window output is a rank-3 identity
+///   conv-family activation (it will read the re-scaled conv output
+///   through the window's own — possibly split — view instead);
+/// * an exhaustive compile-time scan proves every element the window
+///   reads lands on the conv output's channel axis at the window's own
+///   channel, so the per-channel scale factors line up.
+fn try_window_fold(
+    g: &Graph,
+    n_inputs: usize,
+    protos: &[ProtoStep],
+    j: usize,
+    output_roots: &HashSet<usize>,
+    constants: &[Tensor],
+) -> Option<WindowFold> {
+    let p = &protos[j];
+    if !matches!(p.kernel, Kernel::DepthwiseConv1d) {
+        return None;
+    }
+    let node = g.nodes.get(p.out_vid.checked_sub(n_inputs)?)?;
+    if node.hint != FusionHint::Window {
+        return None;
+    }
+    let [x, k, b] = p.args.as_slice() else {
+        return None;
+    };
+    let kc = whole_const(k, constants)?;
+    if k.view.shape.len() != 2 || k.view.shape[1] != 1 {
+        return None;
+    }
+    let c = k.view.shape[0];
+    // the window bias must be a whole-tensor constant (C,): its ValInfo
+    // moves to the conv verbatim
+    whole_const(b, constants)?;
+    if b.view.shape != [c] {
+        return None;
+    }
+    if x.st != Storage::Owned || x.view.shape.len() != 3 || x.view.shape[1] != c {
+        return None;
+    }
+    let conv_i = protos[..j]
+        .iter()
+        .position(|q| q.out_vid == x.root && matches!(q.kernel, Kernel::StandardConv1d))?;
+    let conv = &protos[conv_i];
+    let ckc = whole_const(&conv.args[1], constants)?;
+    let ks = &conv.args[1].view.shape;
+    if ks.len() != 3 || ks[0] != c {
+        return None;
+    }
+    let (cin, ntaps) = (ks[1], ks[2]);
+    let kdata = constants[ckc].data();
+    for row in kdata.chunks(cin * ntaps) {
+        let mut nonzero = 0usize;
+        for &v in row {
+            if v != 0.0 {
+                if v != 1.0 && v != -1.0 {
+                    return None;
+                }
+                nonzero += 1;
+            }
+        }
+        if nonzero > 1 {
+            return None;
+        }
+    }
+    let cbc = whole_const(&conv.args[2], constants)?;
+    if constants[cbc].data().iter().any(|&v| v != 0.0) {
+        return None;
+    }
+    let conv_reads = protos
+        .iter()
+        .flat_map(|q| q.args.iter())
+        .filter(|a| a.root == x.root)
+        .count();
+    if conv_reads != 1 || output_roots.contains(&x.root) {
+        return None;
+    }
+    if output_roots.contains(&p.out_vid) {
+        return None;
+    }
+    for q in &protos[j + 1..] {
+        for (ai, qa) in q.args.iter().enumerate() {
+            if qa.root != p.out_vid {
+                continue;
+            }
+            if !is_x3_activation(&q.kernel, ai) || !is_identity_view(&qa.view, &p.out_shape) {
+                return None;
+            }
+        }
+    }
+    let cs = &conv.out_shape;
+    if cs.len() != 3 {
+        return None;
+    }
+    let (wc, total) = (cs[2], cs[0] * cs[1] * cs[2]);
+    let (t_n, w_n) = (x.view.shape[0], x.view.shape[2]);
+    if t_n * c * w_n > FOLD_SCAN_CAP {
+        return None;
+    }
+    let (s0, s1, s2) = (x.view.strides[0], x.view.strides[1], x.view.strides[2]);
+    for t in 0..t_n {
+        let base = x.view.offset
+            + match x.view.split0 {
+                Some(sp) => (t / sp.inner) * sp.outer_stride + (t % sp.inner) * s0,
+                None => t * s0,
+            };
+        for ch in 0..c {
+            for w in 0..w_n {
+                let addr = base + ch * s1 + w * s2;
+                if addr >= total || (addr / wc) % c != ch {
+                    return None;
+                }
+            }
+        }
+    }
+    let win = constants[kc].data();
+    let mut scaled = kdata.to_vec();
+    for (co, row) in scaled.chunks_mut(cin * ntaps).enumerate() {
+        for v in row {
+            *v *= win[co];
+        }
+    }
+    let scaled_kernel = Tensor::new(constants[ckc].shape(), scaled).ok()?;
+    Some(WindowFold {
+        conv: conv_i,
+        scaled_kernel,
+    })
+}
+
+/// Plan-level fusion over the proto schedule — runs after view
+/// propagation (pass A) and before read counting / liveness, so the
+/// linear scan allocates slots for the *rewritten* steps.  Two rewrites,
+/// each verified from scratch ([`FusionHint`]s are advisory) and each
+/// preserving the interpreter oracle's per-element f32 operation
+/// sequence exactly — a candidate that cannot keep bit-for-bit equality
+/// is skipped, never approximated:
+///
+/// 1. **Merged-axis materialize elimination** ([`try_merge_reindex`]):
+///    a `(A, B, C) -> (A*B, C, 1)` regrouping copy becomes a [`Split0`]
+///    view its conv-family consumers read directly (bitwise identical —
+///    the same elements are read, just without the intermediate buffer);
+/// 2. **Window fold** ([`try_window_fold`]): a tagged M=1 depthwise
+///    window over a one-hot ±1 framing conv folds into the conv by
+///    pre-scaling its taps and adopting the window's bias at compile
+///    time — one kernel step instead of two.
+fn fuse_protos(
+    g: &Graph,
+    n_inputs: usize,
+    output_roots: &HashSet<usize>,
+    protos: &mut Vec<ProtoStep>,
+    constants: &mut Vec<Tensor>,
+) -> FusionOutcome {
+    let mut out = FusionOutcome::default();
+    let mut i = 0;
+    while i < protos.len() {
+        match try_merge_reindex(protos, i, output_roots) {
+            Some(nv) => {
+                let vid = protos[i].out_vid;
+                protos.remove(i);
+                for q in protos[i..].iter_mut() {
+                    for a in q.args.iter_mut() {
+                        if a.root == vid {
+                            *a = nv.clone();
+                        }
+                    }
+                }
+                out.eliminated_copies += 1;
+            }
+            None => i += 1,
+        }
+    }
+    let mut j = 0;
+    while j < protos.len() {
+        match try_window_fold(g, n_inputs, protos, j, output_roots, constants) {
+            Some(fold) => {
+                let vid = protos[j].out_vid;
+                let x = protos[j].args[0].clone();
+                let bias = protos[j].args[2].clone();
+                let kshape = fold.scaled_kernel.shape().to_vec();
+                constants.push(fold.scaled_kernel);
+                protos[fold.conv].args[1] = ValInfo {
+                    st: Storage::Const(constants.len() - 1),
+                    root: usize::MAX,
+                    view: View::contiguous(&kshape),
+                };
+                protos[fold.conv].args[2] = bias;
+                protos.remove(j);
+                for q in protos[j..].iter_mut() {
+                    for a in q.args.iter_mut() {
+                        if a.root == vid {
+                            *a = x.clone();
+                        }
+                    }
+                }
+                out.fused_steps += 1;
+            }
+            None => j += 1,
+        }
+    }
+    out
+}
+
 /// Pass-A state: resolves every graph value to a (storage, view) pair and
 /// emits proto steps, inserting `Materialize` copies only on demand.
 struct PassA<'g> {
@@ -397,8 +804,15 @@ impl PassA<'_> {
 }
 
 impl ExecPlan {
-    /// Compile a validated graph into an execution plan.
+    /// Compile a validated graph into an execution plan with the default
+    /// options (fusion on — the serving configuration).
     pub fn compile(g: &Graph) -> Result<ExecPlan> {
+        Self::compile_with(g, CompileOptions::default())
+    }
+
+    /// Compile a validated graph into an execution plan under explicit
+    /// [`CompileOptions`].
+    pub fn compile_with(g: &Graph, opts: CompileOptions) -> Result<ExecPlan> {
         g.validate()?;
         let n_inputs = g.inputs.len();
         let n_values = g.value_count();
@@ -646,10 +1060,26 @@ impl ExecPlan {
         }
         let PassA {
             info,
-            constants,
-            protos,
+            mut constants,
+            mut protos,
             ..
         } = pa;
+
+        // ---- plan-level fusion over the proto schedule --------------------
+        // Runs before read counting and liveness so the linear scan
+        // allocates slots for the rewritten steps; see `fuse_protos` for
+        // the rewrite catalog and the bit-for-bit rounding contract.
+        let mut output_roots: HashSet<usize> = HashSet::new();
+        for v in &g.outputs {
+            if let Some(vi) = &info[v.0] {
+                output_roots.insert(vi.root);
+            }
+        }
+        let fusion = if opts.fusion {
+            fuse_protos(g, n_inputs, &output_roots, &mut protos, &mut constants)
+        } else {
+            FusionOutcome::default()
+        };
 
         // ---- read counts over owned storages ------------------------------
         let mut reads: HashMap<usize, usize> = HashMap::new();
@@ -814,6 +1244,8 @@ impl ExecPlan {
             steps,
             slot_sizes,
             outputs,
+            fused_steps: fusion.fused_steps,
+            fusion_eliminated_copies: fusion.eliminated_copies,
         };
         debug_assert!(plan.validate_liveness().is_ok());
         Ok(plan)
@@ -929,7 +1361,9 @@ impl ExecPlan {
             &d[a.view.offset..a.view.offset + a.view.numel()]
         }
 
-        // Activation args travel as strided rank-3 windows.
+        // Activation args travel as strided rank-3 windows (optionally
+        // with a split leading axis — the fusion pass's loop-nest
+        // reindex).
         fn x3<'a>(
             a: &ArgRef,
             inputs: &'a [Tensor],
@@ -941,6 +1375,7 @@ impl ExecPlan {
                 d: backing(a, inputs, constants, arena),
                 off: a.view.offset,
                 s: [a.view.strides[0], a.view.strides[1], a.view.strides[2]],
+                split0: a.view.split0.map(|sp| (sp.inner, sp.outer_stride)),
             }
         }
 
@@ -1001,6 +1436,9 @@ impl ExecPlan {
                     }
                     Kernel::FullyConnected { packed } => {
                         let a = &step.args[0];
+                        // FC activations read through X2: the fusion pass
+                        // never assigns them a split view
+                        debug_assert!(a.view.split0.is_none());
                         let xs = &a.view.shape;
                         let cout = step.args[1].view.shape[1];
                         let x = fused::X2 {
@@ -1064,8 +1502,9 @@ impl ExecPlan {
     }
 
     /// Number of explicit view-copy steps in the schedule.  Zero on every
-    /// shipped lowering except batched STFT (whose frame regrouping is not
-    /// expressible as strides; see the module docs).
+    /// shipped lowering at every batch size: batched STFT's frame
+    /// regrouping — the one case strides cannot express — is re-expressed
+    /// by the fusion pass as a split-view reindex (see the module docs).
     pub fn materialize_count(&self) -> usize {
         self.steps
             .iter()
@@ -1094,6 +1533,20 @@ impl ExecPlan {
                 _ => None,
             })
             .collect()
+    }
+
+    /// Kernel steps the fusion pass removed by folding a tagged window
+    /// multiply into its framing convolution (compile-time constant fold
+    /// of the pre-scaled taps; see the module docs' fusion section).
+    pub fn fused_steps(&self) -> usize {
+        self.fused_steps
+    }
+
+    /// `Materialize` copies the fusion pass eliminated by re-expressing
+    /// a merged-axis regrouping as a split-view loop-nest reindex in the
+    /// consuming kernels.
+    pub fn fusion_eliminated_copies(&self) -> usize {
+        self.fusion_eliminated_copies
     }
 
     /// Steps whose constant weights were pre-packed into NR panels.
@@ -1288,9 +1741,10 @@ mod tests {
     #[test]
     fn arena_slots_are_recycled() {
         // STFT has a long chain of intermediates; the linear-scan allocator
-        // must map them onto fewer slots than steps.
+        // must map them onto fewer slots than steps.  Compiled with fusion
+        // off so the full unfused chain exercises the allocator.
         let g = lower::stft(1, 1024, 64, 32).unwrap();
-        let plan = ExecPlan::compile(&g).unwrap();
+        let plan = ExecPlan::compile_with(&g, CompileOptions { fusion: false }).unwrap();
         assert!(
             plan.slot_count() < plan.step_count(),
             "no reuse: {} slots for {} steps",
@@ -1320,9 +1774,9 @@ mod tests {
             ("pfb_fir", lower::pfb_fir(2, 8 * 32, cfg).unwrap(), 1),
             // depthwise + 2 pointwise; both output permutes become views
             ("pfb", lower::pfb(2, 8 * 32, cfg).unwrap(), 3),
-            // framing conv + windowing depthwise + 2 DFT pointwise; the
+            // framing conv (window folded in) + 2 DFT pointwise; the
             // strided-slice and both permutes are pure metadata at B=1
-            ("stft", lower::stft(1, 600, 64, 32).unwrap(), 4),
+            ("stft", lower::stft(1, 600, 64, 32).unwrap(), 3),
             // standard conv; the trailing permute is a terminal view
             ("unfold", lower::unfold(2, 100, 8).unwrap(), 1),
         ] {
@@ -1335,17 +1789,30 @@ mod tests {
     }
 
     #[test]
-    fn batched_stft_materializes_only_at_the_reshape() {
+    fn batched_stft_compiles_copy_free() {
         // At B > 1 the (B, F, nfft) -> (B*F, nfft, 1) frame regrouping is
-        // not expressible as strides (the B and F axes are not dense with
-        // respect to each other), so exactly one reshape-attributed copy
-        // remains — and none attributed to the movement ops themselves.
+        // not expressible as plain strides (the B and F axes are not dense
+        // with respect to each other); the fusion pass re-expresses the
+        // copy as a split-view loop-nest reindex and folds the window into
+        // the framing conv, so the whole plan is copy-free: conv + two DFT
+        // pointwise steps.
         let g = lower::stft(2, 600, 64, 32).unwrap();
         let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.materialize_count(), 0);
+        assert_eq!(plan.movement_materialize_count(), 0);
+        assert!(plan.materialize_origins().is_empty());
+        assert_eq!(plan.step_count(), 3);
+        assert_eq!(plan.fused_steps(), 1);
+        assert_eq!(plan.fusion_eliminated_copies(), 1);
+        check_against_interpreter(g, &[Tensor::randn(&[2, 600], 77)]);
+        // with fusion off, the PR-2 behavior is preserved: exactly one
+        // reshape-attributed copy, none from the movement ops themselves
+        let plan = ExecPlan::compile_with(&g, CompileOptions { fusion: false }).unwrap();
         assert_eq!(plan.materialize_count(), 1);
         assert_eq!(plan.movement_materialize_count(), 0);
         assert_eq!(plan.materialize_origins(), vec!["reshape"]);
-        check_against_interpreter(g, &[Tensor::randn(&[2, 600], 77)]);
+        assert_eq!(plan.fused_steps(), 0);
+        assert_eq!(plan.fusion_eliminated_copies(), 0);
     }
 
     #[test]
@@ -1623,6 +2090,229 @@ mod tests {
             for (a, b) in got.iter().zip(&want) {
                 assert!(a.allclose(b, 1e-5, 1e-6), "seed {seed}");
             }
+        }
+    }
+
+    /// lower::stft's framing prefix (framing conv + strided slice +
+    /// permute + regrouping reshape), returning the `(B*F, nfft, 1)` rows
+    /// value and the frame count.  `kernel`/`conv_bias` let the fold
+    /// tests break individual preconditions.
+    fn framed_rows(
+        g: &mut Graph,
+        x: ValueId,
+        (b, l, nfft, hop): (usize, usize, usize, usize),
+        kernel: Tensor,
+        conv_bias: Tensor,
+    ) -> (ValueId, ValueId, usize) {
+        let frames = (l - nfft) / hop + 1;
+        let xi = g.push(NodeOp::Reshape(vec![b, 1, l]), &[x]);
+        let k = g.constant(kernel);
+        let bias0 = g.constant(conv_bias);
+        let unfolded = g.push(NodeOp::StandardConv1d, &[xi, k, bias0]);
+        let framed = g.push(
+            NodeOp::StridedSlice {
+                axis: 2,
+                stride: hop,
+                count: frames,
+            },
+            &[unfolded],
+        );
+        let framed = g.push(NodeOp::Permute3([0, 2, 1]), &[framed]);
+        let rows = g.push(NodeOp::Reshape(vec![b * frames, nfft, 1]), &[framed]);
+        (rows, framed, frames)
+    }
+
+    /// Hinted window + one pointwise consumer on top of `rows`.
+    fn window_then_pointwise(
+        g: &mut Graph,
+        rows: ValueId,
+        (bf, nfft): (usize, usize),
+        hint: crate::tina::graph::FusionHint,
+    ) -> (ValueId, ValueId) {
+        let kwin = g.constant(Tensor::randn(&[nfft, 1], 501));
+        let bias_w = g.constant(Tensor::randn(&[nfft], 502)); // nonzero: must carry over
+        let xw = g.push_with_hint(NodeOp::DepthwiseConv1d, &[rows, kwin, bias_w], hint);
+        let kd = g.constant(Tensor::randn(&[nfft, nfft], 503));
+        let bias_d = g.constant(Tensor::zeros(&[nfft]));
+        let pw = g.push(NodeOp::PointwiseConv, &[xw, kd, bias_d]); // (B*F, nfft, 1)
+        let out = g.push(NodeOp::Reshape(vec![bf, nfft]), &[pw]);
+        (xw, out)
+    }
+
+    fn check_bitwise(g: &Graph, inputs: &[Tensor]) {
+        let want = Interpreter::new(g.clone()).unwrap().run(inputs).unwrap();
+        let plan = ExecPlan::compile(g).unwrap();
+        plan.validate_liveness().unwrap();
+        let got = plan.run(inputs).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a, b, "fused plan must stay bit-identical to the oracle");
+        }
+    }
+
+    fn eye_kernel(nfft: usize) -> Tensor {
+        Tensor::eye(nfft).reshape(&[nfft, 1, nfft]).unwrap()
+    }
+
+    #[test]
+    fn window_fold_fires_and_carries_window_bias() {
+        // B=2 exercises both rewrites: the regrouping copy is eliminated
+        // AND the (nonzero-bias) window folds into the framing conv.
+        let (b, l, nfft, hop) = (2usize, 96usize, 8usize, 4usize);
+        let mut g = Graph::new();
+        let x = g.input(&[b, l]);
+        let (rows, _, frames) =
+            framed_rows(&mut g, x, (b, l, nfft, hop), eye_kernel(nfft), Tensor::zeros(&[nfft]));
+        let (_, out) =
+            window_then_pointwise(&mut g, rows, (b * frames, nfft), FusionHint::Window);
+        g.set_outputs(&[out]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 1, "window must fold into the conv");
+        assert_eq!(plan.fusion_eliminated_copies(), 1, "regrouping copy gone");
+        assert_eq!(plan.materialize_count(), 0);
+        assert_eq!(plan.step_count(), 2, "conv + pointwise only");
+        check_bitwise(&g, &[Tensor::randn(&[b, l], 510)]);
+    }
+
+    #[test]
+    fn window_fold_handles_negated_one_hot_taps() {
+        // framing taps of -1 stay foldable: x*(-1) then *w equals
+        // x*(-w) bitwise (sign flips are exact)
+        let (b, l, nfft, hop) = (1usize, 40usize, 4usize, 2usize);
+        let mut eye = eye_kernel(nfft);
+        for v in eye.data_mut().iter_mut() {
+            *v = -*v;
+        }
+        let mut g = Graph::new();
+        let x = g.input(&[b, l]);
+        let (rows, _, frames) =
+            framed_rows(&mut g, x, (b, l, nfft, hop), eye, Tensor::zeros(&[nfft]));
+        let (_, out) =
+            window_then_pointwise(&mut g, rows, (b * frames, nfft), FusionHint::Window);
+        g.set_outputs(&[out]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 1);
+        check_bitwise(&g, &[Tensor::randn(&[b, l], 511)]);
+    }
+
+    #[test]
+    fn window_fold_skips_non_unit_taps() {
+        // a 2.0 framing tap would reassociate (x*t)*w into x*(t*w) —
+        // different rounding, so the pass must leave the graph unfused
+        let (b, l, nfft, hop) = (1usize, 40usize, 4usize, 2usize);
+        let mut eye = eye_kernel(nfft);
+        eye.data_mut()[0] = 2.0;
+        let mut g = Graph::new();
+        let x = g.input(&[b, l]);
+        let (rows, _, frames) =
+            framed_rows(&mut g, x, (b, l, nfft, hop), eye, Tensor::zeros(&[nfft]));
+        let (_, out) =
+            window_then_pointwise(&mut g, rows, (b * frames, nfft), FusionHint::Window);
+        g.set_outputs(&[out]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 0, "non-unit taps must not fold");
+        check_bitwise(&g, &[Tensor::randn(&[b, l], 512)]);
+    }
+
+    #[test]
+    fn window_fold_skips_nonzero_conv_bias() {
+        // a nonzero framing bias changes where the +bias lands relative
+        // to the window multiply: skip
+        let (b, l, nfft, hop) = (1usize, 40usize, 4usize, 2usize);
+        let mut g = Graph::new();
+        let x = g.input(&[b, l]);
+        let (rows, _, frames) = framed_rows(
+            &mut g,
+            x,
+            (b, l, nfft, hop),
+            eye_kernel(nfft),
+            Tensor::randn(&[nfft], 513),
+        );
+        let (_, out) =
+            window_then_pointwise(&mut g, rows, (b * frames, nfft), FusionHint::Window);
+        g.set_outputs(&[out]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 0, "nonzero conv bias must not fold");
+        check_bitwise(&g, &[Tensor::randn(&[b, l], 514)]);
+    }
+
+    #[test]
+    fn window_fold_skips_shared_framing_conv() {
+        // the framed view is also a plan output: folding would scale the
+        // values that output observes — skip, still bit-identical
+        let (b, l, nfft, hop) = (2usize, 40usize, 4usize, 2usize);
+        let mut g = Graph::new();
+        let x = g.input(&[b, l]);
+        let (rows, framed, frames) =
+            framed_rows(&mut g, x, (b, l, nfft, hop), eye_kernel(nfft), Tensor::zeros(&[nfft]));
+        let (_, out) =
+            window_then_pointwise(&mut g, rows, (b * frames, nfft), FusionHint::Window);
+        g.set_outputs(&[out, framed]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 0, "shared conv output must not fold");
+        check_bitwise(&g, &[Tensor::randn(&[b, l], 515)]);
+    }
+
+    #[test]
+    fn window_output_shared_by_second_consumer_skips_fold() {
+        // the negative diamond: the window output feeds the DFT pointwise
+        // AND an elementwise Add — the Add would read pre-assembled dense
+        // values, so the fold must skip and everything still matches
+        let (b, l, nfft, hop) = (2usize, 40usize, 4usize, 2usize);
+        let mut g = Graph::new();
+        let x = g.input(&[b, l]);
+        let (rows, _, frames) =
+            framed_rows(&mut g, x, (b, l, nfft, hop), eye_kernel(nfft), Tensor::zeros(&[nfft]));
+        let (xw, out) =
+            window_then_pointwise(&mut g, rows, (b * frames, nfft), FusionHint::Window);
+        let doubled = g.push(NodeOp::Add, &[xw, xw]);
+        g.set_outputs(&[out, doubled]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 0, "diamond window must not fold");
+        // the regrouping copy is still eliminated (the window itself can
+        // read the split view; elimination does not require the fold)
+        assert_eq!(plan.fusion_eliminated_copies(), 1);
+        assert_eq!(plan.materialize_count(), 0);
+        check_bitwise(&g, &[Tensor::randn(&[b, l], 516)]);
+    }
+
+    #[test]
+    fn unhinted_window_is_not_folded_but_copy_still_eliminated() {
+        // without the lowering's hint the fold never fires (predictable
+        // plans), but the movement rewrite is structural and still applies
+        let (b, l, nfft, hop) = (2usize, 40usize, 4usize, 2usize);
+        let mut g = Graph::new();
+        let x = g.input(&[b, l]);
+        let (rows, _, frames) =
+            framed_rows(&mut g, x, (b, l, nfft, hop), eye_kernel(nfft), Tensor::zeros(&[nfft]));
+        let (_, out) =
+            window_then_pointwise(&mut g, rows, (b * frames, nfft), FusionHint::None);
+        g.set_outputs(&[out]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 0);
+        assert_eq!(plan.fusion_eliminated_copies(), 1);
+        assert_eq!(plan.materialize_count(), 0);
+        check_bitwise(&g, &[Tensor::randn(&[b, l], 517)]);
+    }
+
+    #[test]
+    fn stft_copy_free_and_fused_at_every_bucket() {
+        // the acceptance contract: every shipped lowering compiles with
+        // zero Materialize steps at every bucket B, and windowed STFT
+        // reports fused steps
+        for b in [1usize, 2, 4, 8] {
+            let g = lower::stft(b, 600, 64, 32).unwrap();
+            let plan = ExecPlan::compile(&g).unwrap();
+            assert_eq!(plan.materialize_count(), 0, "B={b}");
+            assert_eq!(plan.movement_materialize_count(), 0, "B={b}");
+            assert_eq!(plan.fused_steps(), 1, "B={b}: window must fold");
+            assert_eq!(
+                plan.fusion_eliminated_copies(),
+                usize::from(b > 1),
+                "B={b}"
+            );
+            plan.validate_liveness().unwrap();
+            check_bitwise(&g, &[Tensor::randn(&[b, 600], 600 + b as u64)]);
         }
     }
 

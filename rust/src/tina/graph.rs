@@ -90,6 +90,23 @@ impl NodeOp {
     }
 }
 
+/// Planner hint attached to a node by a lowering.  Hints are advisory:
+/// the plan compiler re-proves every safety and rounding precondition
+/// before acting on one, so a wrong (or missing) hint costs a skipped
+/// optimization, never a wrong result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FusionHint {
+    /// No hint.
+    #[default]
+    None,
+    /// An elementwise window multiply (depthwise conv with M = 1 and a
+    /// baked kernel) the lowering expects the planner to fold into the
+    /// upstream framing convolution by pre-scaling its taps — the STFT
+    /// window fold (see `exec::plan`'s fusion-pass docs for the exact
+    /// preconditions and the rounding contract).
+    Window,
+}
+
 /// A graph node: op + input value ids.  Produces exactly one value.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Node {
@@ -97,6 +114,8 @@ pub struct Node {
     pub op: NodeOp,
     /// Input value ids in operand order.
     pub inputs: Vec<ValueId>,
+    /// Advisory planner hint (see [`FusionHint`]).
+    pub hint: FusionHint,
 }
 
 /// A TINA plan: inputs, nodes in topological order, outputs.
@@ -127,6 +146,16 @@ impl Graph {
 
     /// Append a node; inputs must already exist (enforces topo order).
     pub fn push(&mut self, op: NodeOp, inputs: &[ValueId]) -> ValueId {
+        self.push_with_hint(op, inputs, FusionHint::None)
+    }
+
+    /// Append a node carrying an advisory [`FusionHint`] for the planner.
+    pub fn push_with_hint(
+        &mut self,
+        op: NodeOp,
+        inputs: &[ValueId],
+        hint: FusionHint,
+    ) -> ValueId {
         for i in inputs {
             assert!(i.0 < self.next_id, "node input {i:?} not yet defined");
         }
@@ -135,6 +164,7 @@ impl Graph {
         self.nodes.push(Node {
             op,
             inputs: inputs.to_vec(),
+            hint,
         });
         id
     }

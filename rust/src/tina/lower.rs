@@ -2,7 +2,7 @@
 //! over the four building blocks — the same mappings as
 //! `python/compile/tina_ops.py`, §3/§4 of the paper.
 
-use super::graph::{Graph, NodeOp, ValueId};
+use super::graph::{FusionHint, Graph, NodeOp, ValueId};
 use crate::dsp;
 use crate::tensor::Tensor;
 use anyhow::Result;
@@ -186,11 +186,20 @@ pub fn stft(b: usize, l: usize, nfft: usize, hop: usize) -> Result<Graph> {
     let framed = g.push(NodeOp::Permute3([0, 2, 1]), &[framed]); // (B, F, nfft)
     let rows = g.push(NodeOp::Reshape(vec![b * frames, nfft, 1]), &[framed]);
 
-    // 2. windowing: depthwise conv, channels = sample-in-frame, M = 1
+    // 2. windowing: depthwise conv, channels = sample-in-frame, M = 1.
+    // Tagged `FusionHint::Window`: the planner may fold this elementwise
+    // multiply into the framing conv above by pre-scaling its identity
+    // taps (the plan-level window fold; the hint is advisory — the pass
+    // re-proves one-hot unit taps, zero conv bias and sole-consumer
+    // structure before rewriting anything).
     let win: Vec<f32> = crate::dsp::hamming(nfft).iter().map(|&v| v as f32).collect();
     let kwin = g.constant(Tensor::new(&[nfft, 1], win)?);
     let bias_w = g.constant(Tensor::zeros(&[nfft]));
-    let xw = g.push(NodeOp::DepthwiseConv1d, &[rows, kwin, bias_w]); // (B*F, nfft, 1)
+    let xw = g.push_with_hint(
+        NodeOp::DepthwiseConv1d,
+        &[rows, kwin, bias_w],
+        FusionHint::Window,
+    ); // (B*F, nfft, 1)
     let xw = g.push(NodeOp::Reshape(vec![b * frames, nfft]), &[xw]);
 
     // 3. DFT across frame samples

@@ -35,6 +35,11 @@
 //! * **alias analysis** — `Reshape` becomes a metadata-only view;
 //! * **fusion** — single-consumer `Add`/`Sub` chains collapse into one
 //!   pass, and per-channel-uniform constant adds fold into layer biases;
+//! * **plan-level fusion pass** — [`FusionHint::Window`]-tagged window
+//!   multiplies fold into their framing convs (pre-scaled taps), and
+//!   batched STFT's merged-axis regrouping copy becomes a split-view
+//!   reindex — both bit-for-bit rewrites with verified skip rules (see
+//!   `exec`'s module docs);
 //! * **liveness analysis** — linear-scan slot assignment recycles each
 //!   buffer the moment its last consumer has run (slab [`exec::Arena`]);
 //! * **thread fan-out** — kernels split independent batch rows across
@@ -49,6 +54,6 @@ pub mod interp;
 pub mod layers;
 pub mod lower;
 
-pub use exec::{Arena, ExecPlan, Planned};
-pub use graph::{Graph, Node, NodeOp, ValueId};
+pub use exec::{Arena, CompileOptions, ExecPlan, Planned};
+pub use graph::{FusionHint, Graph, Node, NodeOp, ValueId};
 pub use interp::Interpreter;

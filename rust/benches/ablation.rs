@@ -236,7 +236,14 @@ fn plan_fusion_ablation() -> Json {
     for (label, is_stft, graph, inputs) in cases {
         let fused = ExecPlan::compile(&graph).unwrap();
         let unfused =
-            ExecPlan::compile_with(&graph, CompileOptions { fusion: false }).unwrap();
+            ExecPlan::compile_with(
+                &graph,
+                CompileOptions {
+                    fusion: false,
+                    verify: false,
+                },
+            )
+            .unwrap();
         if is_stft {
             assert!(fused.fused_steps() > 0, "{label}: window must fold");
         } else {

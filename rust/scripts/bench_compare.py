@@ -178,6 +178,14 @@ def main() -> int:
         "never baselines against numbers this PR committed)",
     )
     ap.add_argument(
+        "--require-armed",
+        action="store_true",
+        help="fail (exit 1) when the gate cannot actually gate: no "
+        "committed snapshot, or the selected baseline is a pending "
+        "placeholder.  CI runs this after the snapshot backfill step to "
+        "prove the regression gate is armed for the next run",
+    )
+    ap.add_argument(
         "--gate-absolute",
         action="store_true",
         help="hard-fail on absolute _ns regressions too (only meaningful "
@@ -190,6 +198,13 @@ def main() -> int:
         return 2
     baseline = args.baseline or latest_snapshot(args.new.resolve().parent, args.exclude)
     if baseline is None:
+        if args.require_armed:
+            print(
+                "FAIL: regression gate is un-armed — no committed "
+                "BENCH_pr<N>.json snapshot to gate against",
+                file=sys.stderr,
+            )
+            return 1
         print("no committed BENCH_pr<N>.json snapshot yet; nothing to gate against")
         return 0
     print(f"baseline: {baseline}")
@@ -197,6 +212,14 @@ def main() -> int:
     old = json.loads(baseline.read_text())
     new = json.loads(args.new.read_text())
     if old.get("pending"):
+        if args.require_armed:
+            print(
+                f"FAIL: regression gate is un-armed — baseline {baseline} "
+                "is still a pending placeholder (the backfill step should "
+                "have replaced it with measured numbers)",
+                file=sys.stderr,
+            )
+            return 1
         print(
             "baseline snapshot is marked pending (no measured numbers "
             "committed yet); passing — CI's snapshot step will replace it"

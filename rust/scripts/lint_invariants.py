@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Repo-invariant structural lints over rust/src (run in CI).
+
+Grep-resistant invariants the type system cannot express:
+
+1. **No raw thread spawns outside the owners.**  `std::thread::spawn`
+   (detached, panic-swallowing) is allowed only in the modules that own
+   thread lifecycles: the TCP server (per-connection threads) and the
+   thread pool.  Everything else must go through the pool or
+   `thread::Builder` with explicit join/error handling.
+
+2. **No bare `.unwrap()` on the coordinator serving paths.**  In
+   `rust/src/coordinator/`, `.unwrap()` is allowed only for mutex /
+   condvar poisoning results (`.lock()`, `.wait(`, `wait_timeout(` on
+   the same chain) — a poisoned lock is already a crashed process.
+   Everything else must use `.expect("...")` with a message documenting
+   the invariant, or propagate the error.
+
+3. **No timing calls inside kernel inner loops.**  `Instant::now()` in
+   the hot kernel files (`tina/exec/fused.rs`, `baselines/optimized.rs`)
+   would perturb the very numbers the benchmarks measure; timing belongs
+   to the callers (benchkit, coordinator metrics).
+
+4. **Every `unsafe` is justified.**  Each `unsafe` keyword must carry a
+   `// SAFETY:` comment on the same line or in the contiguous comment
+   block immediately above it (companion to
+   `#![deny(unsafe_op_in_unsafe_fn)]` in lib.rs).
+
+Test code (`#[cfg(test)]` and below — test modules sit at the bottom of
+their files in this repo) is exempt from rules 1-3 but not from rule 4.
+
+Exit status: 0 clean, 1 violations (printed one per line), 2 usage error.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+SPAWN_ALLOWLIST = {
+    "coordinator/server.rs",  # per-connection threads, joined on shutdown
+    "util/threadpool.rs",  # the pool owns its workers
+}
+
+KERNEL_NO_TIMING = {
+    "tina/exec/fused.rs",
+    "baselines/optimized.rs",
+}
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+POISON_CHAIN_RE = re.compile(r"\.lock\(\)|\.wait\(|wait_timeout\(")
+
+
+def strip_comments_and_strings(line: str) -> str:
+    """Drop line comments and string literal contents (crude but
+    sufficient: the codebase has no multi-line /* */ comments and no
+    string containing `// `)."""
+    line = re.sub(r'"(?:[^"\\]|\\.)*"', '""', line)
+    cut = line.find("//")
+    return line if cut < 0 else line[:cut]
+
+
+def test_boundary(lines: list[str]) -> int:
+    """First line index of `#[cfg(test)]`, or len(lines).  Test modules
+    live at the bottom of their files in this repo, so everything after
+    the marker is test code."""
+    for i, line in enumerate(lines):
+        if "#[cfg(test)]" in line:
+            return i
+    return len(lines)
+
+
+def lint_file(root: Path, path: Path) -> list[str]:
+    rel = path.relative_to(root / "src").as_posix()
+    lines = path.read_text().splitlines()
+    boundary = test_boundary(lines)
+    errors: list[str] = []
+
+    def err(i: int, msg: str) -> None:
+        errors.append(f"{path.relative_to(root.parent)}:{i + 1}: {msg}")
+
+    for i, raw in enumerate(lines):
+        code = strip_comments_and_strings(raw)
+        in_test = i >= boundary
+
+        # rule 1: raw thread spawns
+        if (
+            not in_test
+            and "thread::spawn" in code
+            and rel not in SPAWN_ALLOWLIST
+        ):
+            err(i, "std::thread::spawn outside server.rs/threadpool.rs "
+                   "(use the thread pool or thread::Builder with a join)")
+
+        # rule 2: bare unwrap on coordinator serving paths
+        if not in_test and rel.startswith("coordinator/") and ".unwrap()" in code:
+            # multi-line method chains: the receiver may sit on the
+            # previous non-empty line(s)
+            chain = code
+            j = i
+            while j > 0 and not POISON_CHAIN_RE.search(chain) and \
+                    chain.lstrip().startswith("."):
+                j -= 1
+                chain = strip_comments_and_strings(lines[j]) + chain
+            if not POISON_CHAIN_RE.search(chain):
+                err(i, "bare .unwrap() on a coordinator serving path "
+                       "(use .expect(\"why this cannot fail\") or propagate)")
+
+        # rule 3: timing inside kernels
+        if not in_test and rel in KERNEL_NO_TIMING and "Instant::now" in code:
+            err(i, "Instant::now() in a kernel file (timing belongs to "
+                   "benchkit / coordinator metrics, not inner loops)")
+
+        # rule 4: undocumented unsafe — accept SAFETY: on the same line
+        # or anywhere in the contiguous comment block directly above
+        if UNSAFE_RE.search(code):
+            ok = "SAFETY:" in raw
+            j = i - 1
+            while not ok and j >= 0 and lines[j].lstrip().startswith("//"):
+                if "SAFETY:" in lines[j]:
+                    ok = True
+                j -= 1
+            if not ok:
+                err(i, "unsafe without a // SAFETY: comment on the same "
+                       "line or in the comment block above")
+
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent  # rust/
+    src = root / "src"
+    if not src.is_dir():
+        print(f"error: {src} not found", file=sys.stderr)
+        return 2
+    errors: list[str] = []
+    for path in sorted(src.rglob("*.rs")):
+        errors.extend(lint_file(root, path))
+    if errors:
+        print(f"FAIL: {len(errors)} repo-invariant violation(s):",
+              file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print("repo invariants hold (thread spawns, coordinator unwraps, "
+          "kernel timing, unsafe documentation)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

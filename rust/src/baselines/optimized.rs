@@ -51,6 +51,8 @@ pub fn ewadd(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let (ad, bd) = (a.data(), b.data());
     let out_ptr = SendPtr(out.as_mut_ptr());
     parallel_for(threads_for(n), n, |start, stop| {
+        // SAFETY: disjoint index ranges per thread; `out` outlives the
+        // scoped threads.
         let o = unsafe { std::slice::from_raw_parts_mut(out_ptr.at(start), stop - start) };
         for (i, oi) in o.iter_mut().enumerate() {
             *oi = ad[start + i] + bd[start + i];
@@ -75,6 +77,9 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 
     let out_ptr = SendPtr(out.as_mut_ptr());
     parallel_for(threads_for(m * n * l), m, |row_start, row_stop| {
+        // SAFETY: disjoint row ranges per thread map to disjoint
+        // [row_start*n, row_stop*n) spans of `out`, which outlives the
+        // scoped threads.
         let o = unsafe {
             std::slice::from_raw_parts_mut(out_ptr.at(row_start * n), (row_stop - row_start) * n)
         };
@@ -158,6 +163,9 @@ pub fn fir(x: &Tensor, taps: &[f32]) -> Result<Tensor> {
     for bi in 0..b {
         let row = &data[bi * l..(bi + 1) * l];
         parallel_for(threads_for(wout * m), wout, |start, stop| {
+            // SAFETY: within one batch row, threads get disjoint output
+            // ranges [start, stop); batch rows are processed serially,
+            // so no two writes to `out` ever overlap.
             let o = unsafe {
                 std::slice::from_raw_parts_mut(out_ptr.at(bi * wout + start), stop - start)
             };
@@ -190,6 +198,9 @@ pub fn unfold(x: &Tensor, window: usize) -> Result<Tensor> {
     for bi in 0..b {
         let row = &data[bi * l..(bi + 1) * l];
         parallel_for(threads_for(wout * window), wout, |start, stop| {
+            // SAFETY: within one batch row, threads get disjoint window
+            // ranges [start, stop), i.e. disjoint spans of `out`; batch
+            // rows are processed serially.
             let o = unsafe {
                 std::slice::from_raw_parts_mut(
                     out_ptr.at((bi * wout + start) * window),
@@ -221,6 +232,9 @@ pub fn pfb_fir(x: &Tensor, cfg: PfbConfig) -> Result<Tensor> {
     for bi in 0..b {
         let row = &data[bi * l..(bi + 1) * l];
         parallel_for(threads_for(p * ns_out * m), p, |p_start, p_stop| {
+            // SAFETY: within one batch row, threads get disjoint branch
+            // ranges [p_start, p_stop), i.e. disjoint spans of `out`;
+            // batch rows are processed serially.
             let o = unsafe {
                 std::slice::from_raw_parts_mut(
                     out_ptr.at((bi * p + p_start) * ns_out),

@@ -574,7 +574,7 @@ impl Batcher {
             if let Some(key) = full {
                 let cap = self.capacity_of(&key, &st.rates);
                 let decision = self.decision_of(&key, &st.rates);
-                let rows = st.queues.get_mut(&key).unwrap();
+                let rows = st.queues.get_mut(&key).expect("key came from the scan above");
                 let take: Vec<Pending> = rows.drain(..cap).collect();
                 if rows.is_empty() {
                     st.queues.remove(&key);
@@ -593,7 +593,7 @@ impl Batcher {
                 .map(|(k, _)| k.clone());
             if let Some(key) = expired {
                 let decision = self.decision_of(&key, &st.rates);
-                let rows = st.queues.remove(&key).unwrap();
+                let rows = st.queues.remove(&key).expect("key came from the scan above");
                 return Some(self.form(key, rows, decision));
             }
             if now >= deadline {
@@ -1215,6 +1215,56 @@ mod tests {
             assert_eq!(got.outputs[0].data(), &[i as f32; 3]);
         }
         assert_eq!(m.drain_completions.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn rate_key_map_stays_bounded_under_key_churn() {
+        // adversarial shape-diverse traffic: far more distinct (op, L)
+        // fallback keys than RATE_KEYS_CAP.  The map must stay bounded,
+        // evicting the stalest key, and the freshest keys must survive
+        // with their estimates intact.
+        let mut rates = HashMap::new();
+        let t0 = Instant::now();
+        let n = RATE_KEYS_CAP + 100;
+        for i in 0..n {
+            let key = BatchKey::Fallback {
+                op: OpKind::Fir,
+                len: 1000 + i,
+            };
+            Batcher::observe_arrival(&mut rates, &key, t0 + Duration::from_micros(i as u64));
+        }
+        assert_eq!(rates.len(), RATE_KEYS_CAP, "map must stay at the cap");
+        // the stalest (earliest) keys were evicted, the newest survive
+        for i in 0..100 {
+            let key = BatchKey::Fallback {
+                op: OpKind::Fir,
+                len: 1000 + i,
+            };
+            assert!(!rates.contains_key(&key), "stale key {i} must be evicted");
+        }
+        for i in n - RATE_KEYS_CAP..n {
+            let key = BatchKey::Fallback {
+                op: OpKind::Fir,
+                len: 1000 + i,
+            };
+            assert!(rates.contains_key(&key), "fresh key {i} must survive");
+        }
+        // a re-arrival of a surviving key still updates its EWMA in place
+        // (no spurious re-insert, no growth)
+        let key = BatchKey::Fallback {
+            op: OpKind::Fir,
+            len: 1000 + n - 1,
+        };
+        Batcher::observe_arrival(&mut rates, &key, t0 + Duration::from_millis(10));
+        assert_eq!(rates.len(), RATE_KEYS_CAP);
+        assert!(Batcher::rate_of(&rates, &key) > 0.0, "gap sample folded in");
+        // artifact keys never enter the rate map (nothing to adapt)
+        let akey = BatchKey::Artifact {
+            name: "a".into(),
+            batch: 8,
+        };
+        Batcher::observe_arrival(&mut rates, &akey, t0 + Duration::from_millis(11));
+        assert_eq!(rates.len(), RATE_KEYS_CAP, "artifact keys are not tracked");
     }
 
     #[test]

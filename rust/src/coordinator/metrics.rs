@@ -84,6 +84,11 @@ pub struct Metrics {
     /// compiled through the router (merged-axis regroupings re-expressed
     /// as split-view reads — batched STFT framing is the shipped case).
     pub fusion_eliminated_copies: AtomicU64,
+    /// Plans checked by the static verifier (always in debug builds,
+    /// opt-in via `RouterConfig::verify_plans` in release).
+    pub plans_verified: AtomicU64,
+    /// Total nanoseconds spent in the static plan verifier.
+    pub verify_ns: AtomicU64,
     /// Plan-cache (hits, misses) per fallback bucket size B.
     plan_cache_buckets: Mutex<BTreeMap<usize, (u64, u64)>>,
     latency: Mutex<BTreeMap<String, Histogram>>,
@@ -217,6 +222,18 @@ impl Metrics {
         }
     }
 
+    /// Fold in the static-verification counters drained from the router
+    /// (`Router::take_verify_counters`): plans checked and nanoseconds
+    /// spent checking them.
+    pub fn record_plan_verification(&self, plans: u64, ns: u64) {
+        if plans > 0 {
+            self.plans_verified.fetch_add(plans, Ordering::Relaxed);
+        }
+        if ns > 0 {
+            self.verify_ns.fetch_add(ns, Ordering::Relaxed);
+        }
+    }
+
     /// Fraction of executed batch rows (artifact + fallback buckets) that
     /// were real requests rather than padding.  1.0 when no batch has run
     /// yet (an empty history carries no padding waste).
@@ -241,7 +258,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} inflight_batched={} drain_completions={} adaptive_bucket_cap={} adaptive_bucket_wait_us={} adaptive_bucket_shrinks={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={} fused_steps={} fusion_eliminated_copies={}\n",
+            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} inflight_batched={} drain_completions={} adaptive_bucket_cap={} adaptive_bucket_wait_us={} adaptive_bucket_shrinks={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={} fused_steps={} fusion_eliminated_copies={} plans_verified={} verify_ns={}\n",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -263,6 +280,8 @@ impl Metrics {
             self.plan_cache_evictions.load(Ordering::Relaxed),
             self.fused_steps.load(Ordering::Relaxed),
             self.fusion_eliminated_copies.load(Ordering::Relaxed),
+            self.plans_verified.load(Ordering::Relaxed),
+            self.verify_ns.load(Ordering::Relaxed),
         ));
         for (bucket, hits, misses) in self.plan_cache_bucket_stats() {
             out.push_str(&format!(
@@ -295,12 +314,20 @@ mod tests {
         m.record_plan_cache_evictions(2);
         m.record_plan_fusion(0, 0);
         m.record_plan_fusion(2, 1);
+        m.record_plan_verification(0, 0);
+        m.record_plan_verification(3, 4_500);
         assert_eq!(m.plan_cache_hits.load(Ordering::Relaxed), 2);
         assert_eq!(m.plan_cache_misses.load(Ordering::Relaxed), 1);
         assert_eq!(m.plan_cache_evictions.load(Ordering::Relaxed), 2);
         assert_eq!(m.fused_steps.load(Ordering::Relaxed), 2);
         assert_eq!(m.fusion_eliminated_copies.load(Ordering::Relaxed), 1);
+        assert_eq!(m.plans_verified.load(Ordering::Relaxed), 3);
+        assert_eq!(m.verify_ns.load(Ordering::Relaxed), 4_500);
         assert!(m.report().contains("fused_steps=2"), "report surfaces fusion");
+        assert!(
+            m.report().contains("plans_verified=3"),
+            "report surfaces verification"
+        );
         assert_eq!(m.requests.load(Ordering::Relaxed), 2);
         assert_eq!(m.completed.load(Ordering::Relaxed), 1);
         assert_eq!(m.failed.load(Ordering::Relaxed), 1);

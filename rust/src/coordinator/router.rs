@@ -23,7 +23,7 @@
 use super::request::{ImplPref, OpKind, OpRequest, Precision};
 use crate::dsp::PfbConfig;
 use crate::runtime::Registry;
-use crate::tina::{lower, Interpreter, Planned};
+use crate::tina::{lower, CompileOptions, Interpreter, Planned};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -59,6 +59,12 @@ pub struct RouterConfig {
     /// distinct (op, shape) signatures times the bucket fan-out
     /// (|{1, 2, 4, 8}| by default).
     pub plan_cache_cap: usize,
+    /// Run the static plan verifier ([`crate::tina::ExecPlan::verify`])
+    /// on every freshly compiled fallback plan in *release* builds.
+    /// Debug/test builds always verify regardless of this flag.  The pass
+    /// is metered: the coordinator drains `plans_verified` / `verify_ns`
+    /// into its metrics (see [`Router::take_verify_counters`]).
+    pub verify_plans: bool,
 }
 
 impl Default for RouterConfig {
@@ -71,6 +77,7 @@ impl Default for RouterConfig {
             stft_nfft: 256,
             stft_hop: 128,
             plan_cache_cap: 64,
+            verify_plans: false,
         }
     }
 }
@@ -179,6 +186,12 @@ pub struct Router {
     /// Materialize copies eliminated by plans compiled since the last
     /// drain (drained into `Metrics::fusion_eliminated_copies`).
     fusion_eliminated_copies: AtomicU64,
+    /// Plans the static verifier checked since the last drain (drained
+    /// into `Metrics::plans_verified`).
+    plans_verified: AtomicU64,
+    /// Nanoseconds the static verifier spent since the last drain
+    /// (drained into `Metrics::verify_ns`).
+    verify_ns: AtomicU64,
 }
 
 impl Router {
@@ -193,6 +206,8 @@ impl Router {
             evictions: AtomicU64::new(0),
             fused_steps: AtomicU64::new(0),
             fusion_eliminated_copies: AtomicU64::new(0),
+            plans_verified: AtomicU64::new(0),
+            verify_ns: AtomicU64::new(0),
         }
     }
 
@@ -398,7 +413,29 @@ impl Router {
         // unrelated requests.  A racing compile of the same key is
         // harmless — last insert wins, both plans are identical.
         let graph = self.build_graph_for(op, shapes)?;
-        let p = std::sync::Arc::new(Planned::new(&graph)?);
+        // Compile without the inline verify gate, then (when enabled) run
+        // the static verifier as a separate *metered* pass: debug/test
+        // builds always verify, release builds opt in via
+        // `RouterConfig::verify_plans`.
+        let p = std::sync::Arc::new(Planned::new_with(
+            &graph,
+            CompileOptions {
+                fusion: true,
+                verify: false,
+            },
+        )?);
+        if cfg!(debug_assertions) || self.config.verify_plans {
+            let t0 = std::time::Instant::now();
+            p.plan().verify().map_err(|e| {
+                anyhow!(
+                    "plan for op {} shapes {shapes:?} failed static verification: {e}",
+                    op.as_str()
+                )
+            })?;
+            self.plans_verified.fetch_add(1, Ordering::Relaxed);
+            self.verify_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
         self.fused_steps
             .fetch_add(p.plan().fused_steps() as u64, Ordering::Relaxed);
         self.fusion_eliminated_copies.fetch_add(
@@ -427,6 +464,16 @@ impl Router {
         (
             self.fused_steps.swap(0, Ordering::Relaxed),
             self.fusion_eliminated_copies.swap(0, Ordering::Relaxed),
+        )
+    }
+
+    /// Take (and reset) the static-verification counters accumulated by
+    /// plan compiles since the last drain, as `(plans_verified,
+    /// verify_ns)`; the coordinator mirrors them into its metrics.
+    pub fn take_verify_counters(&self) -> (u64, u64) {
+        (
+            self.plans_verified.swap(0, Ordering::Relaxed),
+            self.verify_ns.swap(0, Ordering::Relaxed),
         )
     }
 
@@ -784,6 +831,22 @@ mod tests {
         // FIR has no window: fold-free plans leave the counters alone
         let _ = r.planned_for_shapes(OpKind::Fir, &[vec![1, 256]]).unwrap();
         assert_eq!(r.take_fusion_counters(), (0, 0));
+    }
+
+    #[test]
+    fn verify_counters_accumulate_and_drain() {
+        let r = router();
+        assert_eq!(r.take_verify_counters(), (0, 0));
+        let (_, hit) = r.planned_for_shapes(OpKind::Fir, &[vec![1, 256]]).unwrap();
+        assert!(!hit);
+        let (n, ns) = r.take_verify_counters();
+        assert_eq!(n, 1, "debug builds always verify fresh plans");
+        assert!(ns > 0, "verification time must be metered");
+        assert_eq!(r.take_verify_counters(), (0, 0), "drain resets");
+        // a cache hit compiles (and verifies) nothing
+        let (_, hit) = r.planned_for_shapes(OpKind::Fir, &[vec![1, 256]]).unwrap();
+        assert!(hit);
+        assert_eq!(r.take_verify_counters().0, 0);
     }
 
     #[test]

@@ -59,6 +59,8 @@ fn sync_router_counters(metrics: &Metrics, router: &Router) {
     metrics.record_plan_cache_evictions(router.take_plan_cache_evictions());
     let (fused, copies) = router.take_fusion_counters();
     metrics.record_plan_fusion(fused, copies);
+    let (verified, ns) = router.take_verify_counters();
+    metrics.record_plan_verification(verified, ns);
 }
 
 /// Coordinator configuration.

@@ -22,6 +22,11 @@
 // Every public item carries rustdoc; CI builds docs with
 // RUSTDOCFLAGS="-D warnings" so the contract cannot rot.
 #![warn(missing_docs)]
+// Every pointer dereference must be inside an explicit `unsafe {}` block
+// with its own `// SAFETY:` justification, even inside `unsafe fn` —
+// enforced alongside the repo-invariant lint (rust/scripts/lint_invariants.py)
+// that rejects undocumented unsafe blocks.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod baselines;
 pub mod benchkit;

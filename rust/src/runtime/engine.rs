@@ -238,6 +238,10 @@ impl Engine {
 /// rather than `vec1` + `reshape`, which copies the buffer twice — measured
 /// at ~15% of small-artifact execution time (EXPERIMENTS.md §Perf L3).
 pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    // SAFETY: reinterprets the tensor's f32 buffer as its raw bytes —
+    // same allocation, len * size_of::<f32>() bytes, and u8 has no
+    // alignment or validity requirements.  The borrow of `t` keeps the
+    // buffer alive for the lifetime of `bytes`.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
     };

@@ -25,6 +25,12 @@
 //! changes memory traffic, never rounding.  Keep that rule when touching
 //! these loops: never reassociate the `cin` reduction.
 //!
+//! Each kernel family *declares* its blocking and reduction order
+//! ([`declared_blocking`]); the static verifier checks the declarations
+//! against the oracle contract fixed in [`crate::tina::lower`], so a
+//! future microkernel that vectorizes the wrong axis fails verification
+//! rather than a fuzzer lottery.
+//!
 //! The `fused_ew` kernel evaluates a whole `Add`/`Sub` chain
 //! (`±a ± b ± c ...`) in a single pass over memory — the planner collapses
 //! single-consumer elementwise chains into one of these.
@@ -52,6 +58,129 @@ fn threads_for(rows: usize, work: usize) -> usize {
         1
     } else {
         default_threads().min(rows).max(1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reduction-order certificates
+// ---------------------------------------------------------------------------
+
+/// Loop axes a kernel may block (tile / parallelize) over or reduce
+/// along.  Referenced by the [`Blocking`] declarations below and by the
+/// oracle contract tables in [`crate::tina::lower`]; the static verifier
+/// compares the two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    /// Leading output axis (batch / time rows).
+    T,
+    /// Output channel axis.
+    Cout,
+    /// Depthwise channel axis (an input *and* output coordinate — no
+    /// mixing happens along it).
+    C,
+    /// Spatial (within-row) output axis.
+    Spatial,
+    /// Input-channel reduction axis.
+    Cin,
+    /// Convolution tap reduction axis.
+    Tap,
+    /// Elementwise-chain term axis (accumulated left to right).
+    Term,
+    /// Flat element axis of a copy / elementwise kernel.
+    Elem,
+}
+
+/// Kernel families of the planned executor, mirroring the plan IR's
+/// kernel variants.  Packed and unpacked weight paths declare separately
+/// — they tile differently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelFamily {
+    /// [`standard_conv`].
+    StandardConv,
+    /// [`depthwise_conv`].
+    DepthwiseConv,
+    /// [`pointwise_conv`].
+    PointwiseConv,
+    /// [`pointwise_conv_packed`].
+    PointwiseConvPacked,
+    /// [`fully_connected`].
+    FullyConnected,
+    /// [`fully_connected_packed`].
+    FullyConnectedPacked,
+    /// [`materialize`].
+    Materialize,
+    /// [`fused_ew`].
+    FusedEw,
+}
+
+/// What a microkernel implementation declares about its loop structure:
+/// the axes it blocks, tiles or fans across threads, and the exact
+/// per-output-element order of its reduction axes.  The static verifier
+/// checks every declaration against the oracle contract
+/// ([`crate::tina::lower::oracle_reduction_order`] /
+/// [`crate::tina::lower::oracle_output_axes`]): the reduction order must
+/// match the oracle exactly, and blocking may only touch independent
+/// output coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blocking {
+    /// Axes the kernel blocks, tiles, or fans across threads.  Must all
+    /// be independent output coordinates — blocking a reduction axis
+    /// would reassociate the f32 accumulation.
+    pub blocked: &'static [Axis],
+    /// Reduction axes per output element, outermost loop first.
+    pub reduction: &'static [Axis],
+}
+
+/// Declared blocking of each kernel family's implementation in this
+/// module.  Keep these in sync with the loops: the declarations are what
+/// the static verifier certifies, so an implementation change that
+/// re-tiles a reduction axis must update its declaration here — and will
+/// then be rejected by the verifier's oracle comparison.
+pub fn declared_blocking(f: KernelFamily) -> Blocking {
+    match f {
+        // parallel_for over t*cout output rows; per element: ci outer,
+        // taps inner, both ascending, with the oracle's kv == 0.0 skip
+        KernelFamily::StandardConv => Blocking {
+            blocked: &[Axis::T, Axis::Cout],
+            reduction: &[Axis::Cin, Axis::Tap],
+        },
+        // parallel_for over t*c rows; taps accumulate in ascending order
+        KernelFamily::DepthwiseConv => Blocking {
+            blocked: &[Axis::T, Axis::C],
+            reduction: &[Axis::Tap],
+        },
+        // parallel_for over t*cout rows; cin ascending per element
+        KernelFamily::PointwiseConv => Blocking {
+            blocked: &[Axis::T, Axis::Cout],
+            reduction: &[Axis::Cin],
+        },
+        // NR-wide cout panels x SR-wide spatial tiles (both output
+        // coordinates); cin streams ascending through the packed panel
+        KernelFamily::PointwiseConvPacked => Blocking {
+            blocked: &[Axis::T, Axis::Cout, Axis::Spatial],
+            reduction: &[Axis::Cin],
+        },
+        // parallel_for over batch rows, cout streamed within; cin
+        // ascending per element
+        KernelFamily::FullyConnected => Blocking {
+            blocked: &[Axis::T, Axis::Cout],
+            reduction: &[Axis::Cin],
+        },
+        // NR-wide cout panels per batch row; cin ascending
+        KernelFamily::FullyConnectedPacked => Blocking {
+            blocked: &[Axis::T, Axis::Cout],
+            reduction: &[Axis::Cin],
+        },
+        // pure gather: TILE x TILE cache blocks over output elements
+        KernelFamily::Materialize => Blocking {
+            blocked: &[Axis::Elem],
+            reduction: &[],
+        },
+        // chain terms accumulate left to right over disjoint index spans
+        KernelFamily::FusedEw => Blocking {
+            blocked: &[Axis::Elem],
+            reduction: &[Axis::Term],
+        },
     }
 }
 
@@ -171,6 +300,10 @@ pub fn depthwise_conv(
     let dense = x.is_dense(c, w);
     let ptr = SendPtr(out.as_mut_ptr());
     parallel_for(threads_for(rows, rows * wout * m), rows, |r0, r1| {
+        // SAFETY: parallel_for hands each worker a disjoint row range
+        // [r0, r1); rows map to disjoint spans [r0*wout, r1*wout) of
+        // `out`, which is borrowed mutably for the whole scoped-thread
+        // region and outlives it.
         let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(r0 * wout), (r1 - r0) * wout) };
         for r in r0..r1 {
             let (ti, ci) = (r / c, r % c);
@@ -217,6 +350,10 @@ pub fn standard_conv(
     let dense = x.is_dense(cin, w);
     let ptr = SendPtr(out.as_mut_ptr());
     parallel_for(threads_for(rows, rows * wout * cin * n), rows, |r0, r1| {
+        // SAFETY: parallel_for hands each worker a disjoint row range
+        // [r0, r1); rows map to disjoint spans [r0*wout, r1*wout) of
+        // `out`, which is borrowed mutably for the whole scoped-thread
+        // region and outlives it.
         let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(r0 * wout), (r1 - r0) * wout) };
         for r in r0..r1 {
             let (ti, co) = (r / cout, r % cout);
@@ -270,6 +407,9 @@ pub fn pointwise_conv(
     let dense = x.is_dense(cin, s);
     let ptr = SendPtr(out.as_mut_ptr());
     parallel_for(threads_for(rows, rows * s * cin), rows, |r0, r1| {
+        // SAFETY: parallel_for hands each worker a disjoint row range
+        // [r0, r1); rows map to disjoint spans [r0*s, r1*s) of `out`,
+        // which outlives the scoped threads.
         let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(r0 * s), (r1 - r0) * s) };
         for r in r0..r1 {
             let (ti, co) = (r / cout, r % cout);
@@ -351,6 +491,12 @@ pub fn pointwise_conv_packed(
                 }
                 for j in 0..jn {
                     let bias = b[co0 + j];
+                    // SAFETY: each unit u = (ti, jb) is owned by exactly
+                    // one worker (parallel_for chunks [u0, u1) disjointly),
+                    // and a unit exclusively owns output rows
+                    // ti*cout+co0 .. ti*cout+co0+jn.  Spatial tiles
+                    // [sv, sv+sl) within a row are visited serially, so
+                    // no two writes to `out` ever overlap.
                     let o = unsafe {
                         std::slice::from_raw_parts_mut(
                             ptr.at((ti * cout + co0 + j) * s + sv),
@@ -380,6 +526,9 @@ pub fn fully_connected(
     debug_assert_eq!(out.len(), bsz * cout);
     let ptr = SendPtr(out.as_mut_ptr());
     parallel_for(threads_for(bsz, bsz * cin * cout), bsz, |b0, b1| {
+        // SAFETY: parallel_for hands each worker a disjoint batch range
+        // [b0, b1); batch rows map to disjoint spans [b0*cout, b1*cout)
+        // of `out`, which outlives the scoped threads.
         let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(b0 * cout), (b1 - b0) * cout) };
         for bi in b0..b1 {
             let orow = &mut o[(bi - b0) * cout..(bi - b0 + 1) * cout];
@@ -433,6 +582,10 @@ pub fn fully_connected_packed(
                     *a += aik * kv;
                 }
             }
+            // SAFETY: each unit u = (bi, jb) is owned by exactly one
+            // worker, and distinct units write distinct spans
+            // [bi*cout+co0, bi*cout+co0+jn) of `out` (jn <= NR panels
+            // never overlap), so all writes are disjoint.
             let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(bi * cout + co0), jn) };
             for (j, ov) in o.iter_mut().enumerate() {
                 *ov = acc[j] + b[co0 + j];
@@ -544,6 +697,10 @@ fn materialize2_rows(
     while j0 < c {
         let j1 = (j0 + TILE).min(c);
         for i in i0..i1 {
+            // SAFETY: callers guarantee disjoint row ranges [i0, i1)
+            // across threads (see fn doc); within this serial body each
+            // (i, column block) pair is visited once, so the spans
+            // [i*c+j0, i*c+j1) written here never overlap.
             let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(i * c + j0), j1 - j0) };
             let base = off + i * s0 + j0 * s1;
             if s1 == 1 {
@@ -566,6 +723,8 @@ pub fn fused_ew(terms: &[(f32, &[f32])], out: &mut [f32]) {
     let n = out.len();
     let ptr = SendPtr(out.as_mut_ptr());
     parallel_for(threads_for(n, n * terms.len()), n, |i0, i1| {
+        // SAFETY: parallel_for hands each worker a disjoint index range
+        // [i0, i1) of `out`, which outlives the scoped threads.
         let o = unsafe { std::slice::from_raw_parts_mut(ptr.at(i0), i1 - i0) };
         let (s0, t0) = terms[0];
         if s0 == 1.0 {

@@ -53,8 +53,10 @@
 //! one copy total (the copy every execution must make anyway).  Liveness
 //! is computed over *backing roots*: a view keeps its backing slot live —
 //! and un-recycled — until the view's last consumer (or the output gather)
-//! has run; `ExecPlan::validate_liveness` re-proves that symbolically per
-//! plan.  Arena slot sizes derive from materialized extents only.
+//! has run; the static verifier ([`verify`], `ExecPlan::verify`) re-proves
+//! that symbolically per plan, along with bounds, shapes, reduction-order
+//! certificates and fusion legality.  Arena slot sizes derive from
+//! materialized extents only.
 //!
 //! # Oracle contract (tiling preserves rounding)
 //!
@@ -84,14 +86,20 @@
 //!   step execution;
 //! * [`arena`] — the reusable buffer slab;
 //! * [`fused`] — stride-aware threaded kernels and the packed microkernels
-//!   (same per-element accumulation order as [`crate::tina::layers`]).
+//!   (same per-element accumulation order as [`crate::tina::layers`]);
+//! * [`verify`] — the independent static verifier over compiled plans
+//!   ("verify the artifact, don't trust the compiler"): always on in
+//!   debug/test builds via [`CompileOptions::verify`], opt-in + metered
+//!   in release.
 
 pub mod arena;
 pub mod fused;
 pub mod plan;
+pub mod verify;
 
 pub use arena::Arena;
 pub use plan::{CompileOptions, ExecPlan};
+pub use verify::VerifyError;
 
 use crate::tensor::Tensor;
 use crate::tina::graph::Graph;
@@ -111,10 +119,18 @@ pub struct Planned {
 }
 
 impl Planned {
-    /// Compile a graph into a planned executor.
+    /// Compile a graph into a planned executor with default options
+    /// (fusion on; static verification on in debug/test builds).
     pub fn new(graph: &Graph) -> Result<Planned> {
+        Self::new_with(graph, CompileOptions::default())
+    }
+
+    /// Compile a graph into a planned executor with explicit
+    /// [`CompileOptions`] — the router uses this to control release-build
+    /// plan verification (metered via `plans_verified` / `verify_ns`).
+    pub fn new_with(graph: &Graph, opts: CompileOptions) -> Result<Planned> {
         Ok(Planned {
-            plan: ExecPlan::compile(graph)?,
+            plan: ExecPlan::compile_with(graph, opts)?,
             arenas: Mutex::new(Vec::new()),
         })
     }

@@ -39,8 +39,10 @@
 //!   schedule; slot sizes derive from *materialized* extents (views add
 //!   nothing), and because a view shares its backing value's root, the
 //!   backing slot is provably not recycled or overwritten before the
-//!   view's last consumer — [`ExecPlan::validate_liveness`] re-proves this
-//!   symbolically, including for view-shaped plan outputs;
+//!   view's last consumer — the independent static verifier
+//!   ([`ExecPlan::verify`], see [`super::verify`]) re-proves this
+//!   symbolically from the compiled artifact, including for view-shaped
+//!   plan outputs;
 //! * **threaded execution** — the kernels in [`fused`] fan independent
 //!   output rows across the thread pool.
 //!
@@ -57,7 +59,7 @@ use std::collections::{HashMap, HashSet};
 
 /// Where a value's bytes live at execution time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Loc {
+pub(super) enum Loc {
     /// Caller-provided input tensor (never copied).
     External(usize),
     /// Plan-owned constant (baked at compile time).
@@ -85,11 +87,11 @@ fn row_major(shape: &[usize]) -> Vec<usize> {
 /// the conv-family kernels (their row loop applies the split per output
 /// row, a divide/modulo per row, not per element).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-struct Split0 {
+pub(super) struct Split0 {
     /// Extent of the inner (faster-varying) factor of the leading axis.
-    inner: usize,
+    pub(super) inner: usize,
     /// Element stride of the outer factor.
-    outer_stride: usize,
+    pub(super) outer_stride: usize,
 }
 
 /// A strided window onto a backing buffer: `elem(idx) = backing[offset +
@@ -97,11 +99,11 @@ struct Split0 {
 /// optional [`Split0`] generalizes the leading axis to a two-level
 /// (outer, inner) decomposition; see its docs.
 #[derive(Debug, Clone, PartialEq, Eq)]
-struct View {
-    offset: usize,
-    shape: Vec<usize>,
-    strides: Vec<usize>,
-    split0: Option<Split0>,
+pub(super) struct View {
+    pub(super) offset: usize,
+    pub(super) shape: Vec<usize>,
+    pub(super) strides: Vec<usize>,
+    pub(super) split0: Option<Split0>,
 }
 
 impl View {
@@ -253,11 +255,11 @@ impl View {
 
 /// One resolved kernel argument: a strided view over a located backing.
 #[derive(Debug, Clone)]
-struct ArgRef {
-    loc: Loc,
-    view: View,
+pub(super) struct ArgRef {
+    pub(super) loc: Loc,
+    pub(super) view: View,
     /// Value id of the backing buffer (diagnostics + liveness validation).
-    root: usize,
+    pub(super) root: usize,
 }
 
 /// Backing slice a view indexes into (full extent; the kernels apply the
@@ -276,7 +278,7 @@ fn backing<'a>(
 }
 
 #[derive(Debug, Clone)]
-enum Kernel {
+pub(super) enum Kernel {
     StandardConv1d,
     DepthwiseConv1d,
     /// `packed` indexes [`ExecPlan::packed`] when the weight is a plan
@@ -296,13 +298,13 @@ enum Kernel {
 }
 
 #[derive(Debug, Clone)]
-struct Step {
-    kernel: Kernel,
-    args: Vec<ArgRef>,
-    out_slot: usize,
-    out_shape: Vec<usize>,
+pub(super) struct Step {
+    pub(super) kernel: Kernel,
+    pub(super) args: Vec<ArgRef>,
+    pub(super) out_slot: usize,
+    pub(super) out_shape: Vec<usize>,
     /// Value id this step produces (liveness validation).
-    out_root: usize,
+    pub(super) out_root: usize,
 }
 
 /// Compile-time switches for [`ExecPlan::compile_with`].
@@ -313,29 +315,43 @@ pub struct CompileOptions {
     /// the serving configuration; the ablation bench switches it off to
     /// measure what the pass buys.
     pub fusion: bool,
+    /// Run the independent static verifier ([`ExecPlan::verify`]) over the
+    /// freshly compiled plan and fail compilation if any proof obligation
+    /// does not hold.  Defaults to on under `debug_assertions` (so every
+    /// plan the test suite, property tests and fuzzer compile is verified)
+    /// and off in release, where the router offers an opt-in metered path
+    /// instead.
+    pub verify: bool,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        CompileOptions { fusion: true }
+        CompileOptions {
+            fusion: true,
+            verify: cfg!(debug_assertions),
+        }
     }
 }
 
 /// A compiled, immutable execution plan for one graph.
 #[derive(Debug)]
 pub struct ExecPlan {
-    input_shapes: Vec<Vec<usize>>,
-    constants: Vec<Tensor>,
+    pub(super) input_shapes: Vec<Vec<usize>>,
+    pub(super) constants: Vec<Tensor>,
     /// Pre-packed NR-panel copies of constant weight matrices.
-    packed: Vec<Vec<f32>>,
-    steps: Vec<Step>,
-    slot_sizes: Vec<usize>,
-    outputs: Vec<ArgRef>,
+    pub(super) packed: Vec<Vec<f32>>,
+    pub(super) steps: Vec<Step>,
+    pub(super) slot_sizes: Vec<usize>,
+    pub(super) outputs: Vec<ArgRef>,
     /// Kernel steps removed by the fusion pass's window fold.
-    fused_steps: usize,
+    pub(super) fused_steps: usize,
     /// `Materialize` copies the fusion pass re-expressed as split-view
     /// reads.
-    fusion_eliminated_copies: usize,
+    pub(super) fusion_eliminated_copies: usize,
+    /// One certificate per window fold, recorded at fold time so the
+    /// static verifier can re-prove each fold's legality on the final
+    /// plan (see [`FoldAudit`]).
+    pub(super) fold_audits: Vec<FoldAudit>,
 }
 
 /// Compile-time storage class of a value (pass-A bookkeeping).
@@ -415,11 +431,13 @@ fn expand_terms(
     }
 }
 
-/// Outcome counters of the plan-level fusion pass.
-#[derive(Debug, Default, Clone, Copy)]
+/// Outcome of the plan-level fusion pass: counters plus one audit
+/// certificate per window fold for the static verifier.
+#[derive(Debug, Default)]
 struct FusionOutcome {
     fused_steps: usize,
     eliminated_copies: usize,
+    fold_audits: Vec<FoldAudit>,
 }
 
 /// Upper bound on the window fold's compile-time index-correspondence
@@ -511,10 +529,51 @@ fn try_merge_reindex(
 }
 
 /// The window fold's verified rewrite: which conv proto absorbs the
-/// window, and its pre-scaled replacement kernel.
+/// window, its pre-scaled replacement kernel, and the evidence the fold
+/// decision rested on (kept for the verifier's audit certificate).
 struct WindowFold {
     conv: usize,
     scaled_kernel: Tensor,
+    /// Per conv output channel: flat index + sign of the original
+    /// one-hot ±1 tap, or `None` for an all-zero row.
+    hot: Vec<Option<(usize, f32)>>,
+    /// The conv's original bias (proven all-zero).
+    orig_bias: Vec<f32>,
+    /// The window's per-channel scale factors.
+    win: Vec<f32>,
+}
+
+/// Compile-time certificate of one window fold, recorded by
+/// [`fuse_protos`] so the static verifier ([`ExecPlan::verify`]) can
+/// independently re-prove the fold's legality on the *final* plan: the
+/// pre-scaled kernel must be exactly the recorded one-hot ±1 structure
+/// scaled by the recorded window, the adopted bias must be the window's
+/// bias, the original conv bias must have been all-zero, the recorded
+/// activation view must land every element on the matching conv output
+/// channel, and the folded-away window value must never resurface.
+#[derive(Debug, Clone)]
+pub(super) struct FoldAudit {
+    /// Value id of the framing conv the window folded into.
+    pub(super) conv_root: usize,
+    /// Value id of the eliminated window step (must not resurface).
+    pub(super) folded_root: usize,
+    /// Plan-constant index of the pre-scaled conv kernel.
+    pub(super) scaled_const: usize,
+    /// Plan-constant index of the adopted window bias.
+    pub(super) bias_const: usize,
+    /// Window per-channel scale factors (copied at fold time).
+    pub(super) win: Vec<f32>,
+    /// Adopted window bias values (copied at fold time).
+    pub(super) wbias: Vec<f32>,
+    /// Original conv taps: per output channel, the one-hot tap's flat
+    /// index within its `(cin * ntaps)` row and its ±1 sign; `None` for
+    /// an all-zero row.
+    pub(super) hot: Vec<Option<(usize, f32)>>,
+    /// Original conv bias (the fold requires it all-zero).
+    pub(super) orig_bias: Vec<f32>,
+    /// The window's activation view — the view through which consumers
+    /// now read the re-scaled conv output.
+    pub(super) act_view: View,
 }
 
 /// Check whether the depthwise proto at `j` is a foldable window multiply
@@ -588,19 +647,18 @@ fn try_window_fold(
     }
     let (cin, ntaps) = (ks[1], ks[2]);
     let kdata = constants[ckc].data();
+    let mut hot: Vec<Option<(usize, f32)>> = Vec::with_capacity(c);
     for row in kdata.chunks(cin * ntaps) {
-        let mut nonzero = 0usize;
-        for &v in row {
+        let mut tap: Option<(usize, f32)> = None;
+        for (pos, &v) in row.iter().enumerate() {
             if v != 0.0 {
-                if v != 1.0 && v != -1.0 {
+                if (v != 1.0 && v != -1.0) || tap.is_some() {
                     return None;
                 }
-                nonzero += 1;
+                tap = Some((pos, v));
             }
         }
-        if nonzero > 1 {
-            return None;
-        }
+        hot.push(tap);
     }
     let cbc = whole_const(&conv.args[2], constants)?;
     if constants[cbc].data().iter().any(|&v| v != 0.0) {
@@ -663,6 +721,9 @@ fn try_window_fold(
     Some(WindowFold {
         conv: conv_i,
         scaled_kernel,
+        hot,
+        orig_bias: constants[cbc].data().to_vec(),
+        win: win.to_vec(),
     })
 }
 
@@ -717,6 +778,20 @@ fn fuse_protos(
                 let bias = protos[j].args[2].clone();
                 let kshape = fold.scaled_kernel.shape().to_vec();
                 constants.push(fold.scaled_kernel);
+                let Storage::Const(bias_const) = bias.st else {
+                    unreachable!("fold bias proven whole-const");
+                };
+                out.fold_audits.push(FoldAudit {
+                    conv_root: x.root,
+                    folded_root: vid,
+                    scaled_const: constants.len() - 1,
+                    bias_const,
+                    win: fold.win,
+                    wbias: constants[bias_const].data().to_vec(),
+                    hot: fold.hot,
+                    orig_bias: fold.orig_bias,
+                    act_view: x.view.clone(),
+                });
                 protos[fold.conv].args[1] = ValInfo {
                     st: Storage::Const(constants.len() - 1),
                     root: usize::MAX,
@@ -1206,6 +1281,14 @@ impl ExecPlan {
         for o in &mut outputs {
             fix(&mut o.loc);
         }
+        // fold audits reference plan constants by index: remap alongside
+        // (both the scaled kernel and the adopted bias are step args, so
+        // they always survive compaction)
+        let mut fold_audits = fusion.fold_audits;
+        for a in &mut fold_audits {
+            a.scaled_const = remap[a.scaled_const];
+            a.bias_const = remap[a.bias_const];
+        }
 
         // ---- pre-pack constant weight matrices into NR panels -----------
         // FullyConnected/PointwiseConv steps whose kernel is a whole plan
@@ -1246,8 +1329,12 @@ impl ExecPlan {
             outputs,
             fused_steps: fusion.fused_steps,
             fusion_eliminated_copies: fusion.eliminated_copies,
+            fold_audits,
         };
-        debug_assert!(plan.validate_liveness().is_ok());
+        if opts.verify {
+            plan.verify()
+                .map_err(|e| anyhow!("compiled plan failed static verification: {e}"))?;
+        }
         Ok(plan)
     }
 
@@ -1578,96 +1665,6 @@ impl ExecPlan {
         &self.input_shapes
     }
 
-    /// Symbolically execute the schedule and verify the strided-aliasing
-    /// contract: no step reads a slot (through any view) after it has been
-    /// recycled to another value, every view stays inside its backing
-    /// value's materialized extent, no step's output slot aliases one of
-    /// its inputs, and pinned outputs (including view-shaped ones) are
-    /// never overwritten before the final gather.  Used by tests to prove
-    /// the arena sound.
-    pub fn validate_liveness(&self) -> Result<()> {
-        let mut reads: HashMap<usize, usize> = HashMap::new();
-        for s in &self.steps {
-            for a in &s.args {
-                if matches!(a.loc, Loc::Slot(_)) {
-                    *reads.entry(a.root).or_default() += 1;
-                }
-            }
-        }
-        let mut pinned: HashSet<usize> = HashSet::new();
-        for o in &self.outputs {
-            if matches!(o.loc, Loc::Slot(_)) {
-                pinned.insert(o.root);
-            }
-        }
-        // materialized extent of each owned value
-        let mut extent: HashMap<usize, usize> = HashMap::new();
-        for s in &self.steps {
-            extent.insert(s.out_root, s.out_shape.iter().product());
-        }
-        let check_span = |who: &str, a: &ArgRef| -> Result<()> {
-            if !matches!(a.loc, Loc::Slot(_)) {
-                return Ok(());
-            }
-            let ext = extent
-                .get(&a.root)
-                .copied()
-                .ok_or_else(|| anyhow!("{who}: view of unknown value {}", a.root))?;
-            if a.view.end() > ext {
-                bail!(
-                    "{who}: view spans {} elements past value {}'s extent {ext}",
-                    a.view.end(),
-                    a.root
-                );
-            }
-            Ok(())
-        };
-        let mut owner: Vec<Option<usize>> = vec![None; self.slot_sizes.len()];
-        let mut remaining = reads.clone();
-        for (si, s) in self.steps.iter().enumerate() {
-            for a in &s.args {
-                if let Loc::Slot(slot) = a.loc {
-                    check_span(&format!("step {si}"), a)?;
-                    if owner[slot] != Some(a.root) {
-                        bail!(
-                            "step {si}: reads value {} from slot {slot} holding {:?} (read-after-recycle)",
-                            a.root,
-                            owner[slot]
-                        );
-                    }
-                    if slot == s.out_slot {
-                        bail!("step {si}: output slot {slot} aliases an input view");
-                    }
-                }
-            }
-            if let Some(prev) = owner[s.out_slot] {
-                if remaining.get(&prev).copied().unwrap_or(0) > 0 {
-                    bail!(
-                        "step {si}: overwrites slot {} holding live value {prev}",
-                        s.out_slot
-                    );
-                }
-                if pinned.contains(&prev) {
-                    bail!("step {si}: overwrites pinned output value {prev}");
-                }
-            }
-            owner[s.out_slot] = Some(s.out_root);
-            for a in &s.args {
-                if matches!(a.loc, Loc::Slot(_)) {
-                    *remaining.get_mut(&a.root).expect("counted") -= 1;
-                }
-            }
-        }
-        for (oi, o) in self.outputs.iter().enumerate() {
-            if let Loc::Slot(slot) = o.loc {
-                check_span(&format!("output {oi}"), o)?;
-                if owner[slot] != Some(o.root) {
-                    bail!("output {oi}: slot {slot} recycled before return");
-                }
-            }
-        }
-        Ok(())
-    }
 }
 
 #[cfg(test)]
@@ -1680,7 +1677,7 @@ mod tests {
     fn check_against_interpreter(g: Graph, inputs: &[Tensor]) {
         let interp = Interpreter::new(g.clone()).unwrap();
         let plan = ExecPlan::compile(&g).unwrap();
-        plan.validate_liveness().unwrap();
+        plan.verify().unwrap();
         let want = interp.run(inputs).unwrap();
         let got = plan.run(inputs).unwrap();
         assert_eq!(got.len(), want.len());
@@ -1744,14 +1741,21 @@ mod tests {
         // must map them onto fewer slots than steps.  Compiled with fusion
         // off so the full unfused chain exercises the allocator.
         let g = lower::stft(1, 1024, 64, 32).unwrap();
-        let plan = ExecPlan::compile_with(&g, CompileOptions { fusion: false }).unwrap();
+        let plan = ExecPlan::compile_with(
+            &g,
+            CompileOptions {
+                fusion: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
         assert!(
             plan.slot_count() < plan.step_count(),
             "no reuse: {} slots for {} steps",
             plan.slot_count(),
             plan.step_count()
         );
-        plan.validate_liveness().unwrap();
+        plan.verify().unwrap();
     }
 
     #[test]
@@ -1784,7 +1788,7 @@ mod tests {
             assert_eq!(plan.materialize_count(), 0, "{name}: unexpected copy");
             assert_eq!(plan.movement_materialize_count(), 0, "{name}");
             assert_eq!(plan.step_count(), steps, "{name}: step count");
-            plan.validate_liveness().unwrap();
+            plan.verify().unwrap();
         }
     }
 
@@ -1807,7 +1811,14 @@ mod tests {
         check_against_interpreter(g, &[Tensor::randn(&[2, 600], 77)]);
         // with fusion off, the PR-2 behavior is preserved: exactly one
         // reshape-attributed copy, none from the movement ops themselves
-        let plan = ExecPlan::compile_with(&g, CompileOptions { fusion: false }).unwrap();
+        let plan = ExecPlan::compile_with(
+            &g,
+            CompileOptions {
+                fusion: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
         assert_eq!(plan.materialize_count(), 1);
         assert_eq!(plan.movement_materialize_count(), 0);
         assert_eq!(plan.materialize_origins(), vec!["reshape"]);
@@ -1905,7 +1916,7 @@ mod tests {
         let u = g.push(NodeOp::Sub, &[s, a]); // reads s directly
         g.set_outputs(&[t, u]);
         let plan = ExecPlan::compile(&g).unwrap();
-        plan.validate_liveness().unwrap();
+        plan.verify().unwrap();
         let inputs = vec![Tensor::randn(&[3, 3], 71), Tensor::randn(&[3, 3], 72)];
         let want = Interpreter::new(g).unwrap().run(&inputs).unwrap();
         let got = plan.run(&inputs).unwrap();
@@ -2142,7 +2153,7 @@ mod tests {
     fn check_bitwise(g: &Graph, inputs: &[Tensor]) {
         let want = Interpreter::new(g.clone()).unwrap().run(inputs).unwrap();
         let plan = ExecPlan::compile(g).unwrap();
-        plan.validate_liveness().unwrap();
+        plan.verify().unwrap();
         let got = plan.run(inputs).unwrap();
         assert_eq!(got.len(), want.len());
         for (a, b) in got.iter().zip(&want) {
@@ -2311,7 +2322,7 @@ mod tests {
                 usize::from(b > 1),
                 "B={b}"
             );
-            plan.validate_liveness().unwrap();
+            plan.verify().unwrap();
             check_bitwise(&g, &[Tensor::randn(&[b, 600], 600 + b as u64)]);
         }
     }

@@ -1,0 +1,1456 @@
+//! Independent static verifier over compiled [`ExecPlan`]s — "verify the
+//! artifact, don't trust the compiler".
+//!
+//! [`ExecPlan::verify`] is an abstract interpreter over the compiled step
+//! list that re-derives, from scratch and sharing no code with
+//! `ExecPlan::compile`, four proof obligations:
+//!
+//! 1. **Extent typing** — every [`View`] (including [`Split0`] reindexed
+//!    leading axes) is bounds-checked against its backing buffer with the
+//!    verifier's *own* max-address computation (it enumerates outer split
+//!    blocks rather than reusing `View::end`'s two-candidate argument),
+//!    using checked arithmetic so overflow cannot forge an in-bounds
+//!    address.  Out-of-bounds reads and writes are proven impossible per
+//!    step, for external inputs and plan constants as well as arena slots.
+//! 2. **Def-use / aliasing** — a forward walk proves no step reads a slot
+//!    before it is written or after it has been recycled for another
+//!    value, no step writes the slot of one of its own arguments (kernels
+//!    never run in place), and a slot is only overwritten once its current
+//!    value has no remaining consumers and is not pinned for a plan
+//!    output.  This subsumes (and replaced) the old `validate_liveness`.
+//! 3. **Reduction-order certificates** — each kernel family's declared
+//!    blocking ([`fused::declared_blocking`]) is checked against the
+//!    oracle contract the lowering layer owns
+//!    ([`crate::tina::lower::oracle_reduction_order`] /
+//!    [`crate::tina::lower::oracle_output_axes`]): the per-element
+//!    reduction order must match the oracle exactly and blocking may only
+//!    touch independent output coordinates, so a future SIMD microkernel
+//!    that vectorizes the wrong axis fails verification rather than a
+//!    fuzzer lottery.
+//! 4. **Fusion-legality audit** — every window fold recorded by the
+//!    fusion pass carries a [`FoldAudit`] certificate; the verifier
+//!    re-proves on the *final* plan that the pre-scaled kernel is exactly
+//!    the audited one-hot ±1 structure scaled by the window, the adopted
+//!    bias matches, the original conv bias was all-zero, the activation
+//!    view maps every element onto its own conv output channel, and the
+//!    folded-away value never resurfaces.
+//!
+//! Wiring: [`super::plan::CompileOptions::verify`] runs the verifier at
+//! the end of every compile — on by default under `debug_assertions`
+//! (every plan the test suite, property tests and fuzzer build is
+//! verified) and opt-in + metered in release via the coordinator router
+//! (`plans_verified` / `verify_ns`).  See ARCHITECTURE.md's
+//! "Verification layers" section for where this sits between the oracle
+//! tests and the sanitizer CI jobs.
+
+use super::fused::{self, Blocking, KernelFamily};
+use super::plan::{ArgRef, ExecPlan, Kernel, Loc, View};
+use crate::tina::lower::{oracle_output_axes, oracle_reduction_order};
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+/// Upper bound on the fold audit's exhaustive channel-correspondence scan.
+/// `compile` never records a fold larger than its own scan cap, so any
+/// audit above this bound cannot have come from the compiler.
+const AUDIT_SCAN_CAP: usize = 1 << 22;
+
+/// A proof obligation the static verifier could not discharge.  Each
+/// variant is a distinct, hand-testable failure class; `Display` renders
+/// a one-line diagnostic.
+#[derive(Debug, Clone)]
+pub enum VerifyError {
+    /// A step has the wrong number of arguments for its kernel.
+    ArityMismatch {
+        /// Offending step index.
+        step: usize,
+        /// Argument count the kernel family requires.
+        expected: usize,
+        /// Argument count the step actually carries.
+        got: usize,
+    },
+    /// An argument references an external input or plan constant that
+    /// does not exist.
+    BadLocIndex {
+        /// Offending step index.
+        step: usize,
+        /// Which table the index missed ("external" or "const").
+        what: &'static str,
+        /// The out-of-range index.
+        idx: usize,
+    },
+    /// A step writes, or an argument reads, an arena slot index that is
+    /// out of range (`steps.len()` denotes the output gather).
+    BadSlotIndex {
+        /// Offending step index.
+        step: usize,
+        /// The out-of-range slot.
+        slot: usize,
+    },
+    /// Address arithmetic for a view overflowed `usize`.
+    AddressOverflow {
+        /// Offending step index.
+        step: usize,
+        /// What overflowed.
+        detail: String,
+    },
+    /// A view can touch an element past the end of its backing buffer.
+    OobRead {
+        /// Offending step index.
+        step: usize,
+        /// Offending argument index.
+        arg: usize,
+        /// One past the largest address the view can reach.
+        end: usize,
+        /// Backing buffer extent.
+        extent: usize,
+    },
+    /// A step's dense output does not fit its arena slot.
+    OobWrite {
+        /// Offending step index.
+        step: usize,
+        /// Output element count.
+        len: usize,
+        /// Assigned slot capacity.
+        slot_size: usize,
+    },
+    /// Re-derived output/operand shapes disagree with the recorded ones.
+    ShapeMismatch {
+        /// Offending step index.
+        step: usize,
+        /// What disagreed.
+        detail: String,
+    },
+    /// A split leading axis appears on an argument position that cannot
+    /// reindex it (only conv-family activations may carry one).
+    SplitOnNonActivation {
+        /// Offending step index.
+        step: usize,
+        /// Offending argument index.
+        arg: usize,
+    },
+    /// A split view's leading extent is not divisible by its inner
+    /// factor (or the inner factor is zero).
+    SplitNotDivisible {
+        /// Offending step index.
+        step: usize,
+        /// Offending argument index.
+        arg: usize,
+    },
+    /// A fully connected activation carries a split view (the `X2` read
+    /// path cannot reindex a split leading axis).
+    FcSplitActivation {
+        /// Offending step index.
+        step: usize,
+    },
+    /// A kernel operand that must stream dense memory has a
+    /// non-contiguous view.
+    NonContiguousOperand {
+        /// Offending step index.
+        step: usize,
+        /// Offending argument index.
+        arg: usize,
+    },
+    /// A fused elementwise sign is not exactly `+1.0` or `-1.0`.
+    BadSign {
+        /// Offending step index.
+        step: usize,
+        /// Offending term index.
+        term: usize,
+    },
+    /// A pre-packed weight panel set disagrees with its source constant.
+    PackedPanelMismatch {
+        /// Offending step index.
+        step: usize,
+        /// What disagreed.
+        detail: String,
+    },
+    /// A kernel family's declared blocking violates the oracle contract.
+    ReductionOrderViolation {
+        /// The kernel family name.
+        family: String,
+        /// What the declaration got wrong.
+        detail: String,
+    },
+    /// A step reads an arena slot no earlier step has written.
+    ReadBeforeWrite {
+        /// Offending step index.
+        step: usize,
+        /// The unwritten slot.
+        slot: usize,
+    },
+    /// A step reads a slot whose buffer has been recycled for another
+    /// value since the expected producer ran.
+    StaleRead {
+        /// Offending step index.
+        step: usize,
+        /// The recycled slot.
+        slot: usize,
+        /// Value id the argument expects in the slot.
+        expected_root: usize,
+        /// Value id actually occupying the slot.
+        found_root: usize,
+    },
+    /// A step writes the same slot as one of its own arguments (kernels
+    /// never run in place).
+    OutputAliasesInput {
+        /// Offending step index.
+        step: usize,
+        /// The shared slot.
+        slot: usize,
+    },
+    /// A step overwrites a slot whose current value still has unread
+    /// consumers.
+    OverwriteLive {
+        /// Offending step index.
+        step: usize,
+        /// The overwritten slot.
+        slot: usize,
+        /// Value id still awaiting readers.
+        live_root: usize,
+    },
+    /// A step overwrites a slot pinned for a plan output.
+    OverwritePinned {
+        /// Offending step index.
+        step: usize,
+        /// The overwritten slot.
+        slot: usize,
+        /// Pinned value id.
+        root: usize,
+    },
+    /// After the last step, a plan output's slot no longer holds the
+    /// output's value.
+    OutputClobbered {
+        /// Offending output index.
+        output: usize,
+        /// The clobbered slot.
+        slot: usize,
+    },
+    /// A plan output carries a split view the output gather cannot read.
+    OutputSplitView {
+        /// Offending output index.
+        output: usize,
+    },
+    /// A plan output's view escapes its backing buffer.
+    OutputOob {
+        /// Offending output index.
+        output: usize,
+        /// One past the largest address the view can reach.
+        end: usize,
+        /// Backing buffer extent.
+        extent: usize,
+    },
+    /// `fused_steps` does not match the number of recorded fold audits.
+    FoldCountMismatch {
+        /// The plan's fused-step counter.
+        fused_steps: usize,
+        /// The number of recorded audits.
+        audits: usize,
+    },
+    /// The pre-scaled conv kernel is not the audited one-hot ±1
+    /// structure scaled by the audited window.
+    FoldScaleMismatch {
+        /// Offending audit index.
+        audit: usize,
+        /// What disagreed.
+        detail: String,
+    },
+    /// The adopted bias constant disagrees with the audited window bias.
+    FoldBiasMismatch {
+        /// Offending audit index.
+        audit: usize,
+        /// What disagreed.
+        detail: String,
+    },
+    /// The folded conv's original bias was not all-zero.
+    FoldNonZeroOrigBias {
+        /// Offending audit index.
+        audit: usize,
+    },
+    /// The audited activation view does not land every element on its
+    /// own conv output channel.
+    FoldBadChannelMap {
+        /// Offending audit index.
+        audit: usize,
+        /// What disagreed.
+        detail: String,
+    },
+    /// The folded-away window value reappears in the final plan.
+    FoldValueResurfaced {
+        /// Offending audit index.
+        audit: usize,
+        /// The resurfaced value id.
+        root: usize,
+    },
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use VerifyError::*;
+        match self {
+            ArityMismatch {
+                step,
+                expected,
+                got,
+            } => write!(f, "step {step}: expected {expected} args, got {got}"),
+            BadLocIndex { step, what, idx } => {
+                write!(f, "step {step}: {what} index {idx} out of range")
+            }
+            BadSlotIndex { step, slot } => {
+                write!(f, "step {step}: arena slot {slot} out of range")
+            }
+            AddressOverflow { step, detail } => {
+                write!(f, "step {step}: address arithmetic overflow ({detail})")
+            }
+            OobRead {
+                step,
+                arg,
+                end,
+                extent,
+            } => write!(
+                f,
+                "step {step} arg {arg}: view reaches {end} past backing extent {extent}"
+            ),
+            OobWrite {
+                step,
+                len,
+                slot_size,
+            } => write!(
+                f,
+                "step {step}: output of {len} elements exceeds slot capacity {slot_size}"
+            ),
+            ShapeMismatch { step, detail } => write!(f, "step {step}: shape mismatch ({detail})"),
+            SplitOnNonActivation { step, arg } => write!(
+                f,
+                "step {step} arg {arg}: split view on a non-activation operand"
+            ),
+            SplitNotDivisible { step, arg } => write!(
+                f,
+                "step {step} arg {arg}: split leading axis not divisible by inner factor"
+            ),
+            FcSplitActivation { step } => write!(
+                f,
+                "step {step}: fully connected activation carries a split view"
+            ),
+            NonContiguousOperand { step, arg } => write!(
+                f,
+                "step {step} arg {arg}: dense-stream operand has a non-contiguous view"
+            ),
+            BadSign { step, term } => {
+                write!(f, "step {step} term {term}: fused elementwise sign not ±1.0")
+            }
+            PackedPanelMismatch { step, detail } => {
+                write!(f, "step {step}: packed panel mismatch ({detail})")
+            }
+            ReductionOrderViolation { family, detail } => {
+                write!(f, "kernel family {family}: {detail}")
+            }
+            ReadBeforeWrite { step, slot } => {
+                write!(f, "step {step}: reads slot {slot} before any write")
+            }
+            StaleRead {
+                step,
+                slot,
+                expected_root,
+                found_root,
+            } => write!(
+                f,
+                "step {step}: slot {slot} holds value {found_root}, expected {expected_root}"
+            ),
+            OutputAliasesInput { step, slot } => {
+                write!(f, "step {step}: output slot {slot} aliases an argument")
+            }
+            OverwriteLive {
+                step,
+                slot,
+                live_root,
+            } => write!(
+                f,
+                "step {step}: overwrites slot {slot} while value {live_root} still has readers"
+            ),
+            OverwritePinned { step, slot, root } => write!(
+                f,
+                "step {step}: overwrites slot {slot} pinned for output value {root}"
+            ),
+            OutputClobbered { output, slot } => {
+                write!(f, "output {output}: slot {slot} no longer holds its value")
+            }
+            OutputSplitView { output } => {
+                write!(f, "output {output}: gather cannot read a split view")
+            }
+            OutputOob {
+                output,
+                end,
+                extent,
+            } => write!(
+                f,
+                "output {output}: view reaches {end} past backing extent {extent}"
+            ),
+            FoldCountMismatch {
+                fused_steps,
+                audits,
+            } => write!(
+                f,
+                "fused_steps = {fused_steps} but {audits} fold audits recorded"
+            ),
+            FoldScaleMismatch { audit, detail } => {
+                write!(f, "fold audit {audit}: scaled kernel mismatch ({detail})")
+            }
+            FoldBiasMismatch { audit, detail } => {
+                write!(f, "fold audit {audit}: bias mismatch ({detail})")
+            }
+            FoldNonZeroOrigBias { audit } => {
+                write!(f, "fold audit {audit}: original conv bias not all-zero")
+            }
+            FoldBadChannelMap { audit, detail } => {
+                write!(f, "fold audit {audit}: bad channel correspondence ({detail})")
+            }
+            FoldValueResurfaced { audit, root } => {
+                write!(f, "fold audit {audit}: folded value {root} resurfaced")
+            }
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Check one kernel family's declared [`Blocking`] against the oracle
+/// contract: the declared reduction order must equal
+/// [`oracle_reduction_order`] exactly, and every blocked axis must be one
+/// of [`oracle_output_axes`] (blocking a reduction axis would reassociate
+/// the f32 accumulation).  Exposed so tests can feed hostile declarations
+/// directly.
+pub fn check_blocking(family: KernelFamily, b: &Blocking) -> Result<(), VerifyError> {
+    let want = oracle_reduction_order(family);
+    if b.reduction != want {
+        return Err(VerifyError::ReductionOrderViolation {
+            family: format!("{family:?}"),
+            detail: format!(
+                "declared reduction order {:?} != oracle order {:?}",
+                b.reduction, want
+            ),
+        });
+    }
+    let outs = oracle_output_axes(family);
+    for ax in b.blocked {
+        if !outs.contains(ax) {
+            return Err(VerifyError::ReductionOrderViolation {
+                family: format!("{family:?}"),
+                detail: format!("blocks non-output axis {ax:?} (output axes: {outs:?})"),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Kernel family of a plan step (packed and unpacked paths certify
+/// separately).
+fn family_of(k: &Kernel) -> KernelFamily {
+    match k {
+        Kernel::StandardConv1d => KernelFamily::StandardConv,
+        Kernel::DepthwiseConv1d => KernelFamily::DepthwiseConv,
+        Kernel::PointwiseConv { packed: Some(_) } => KernelFamily::PointwiseConvPacked,
+        Kernel::PointwiseConv { packed: None } => KernelFamily::PointwiseConv,
+        Kernel::FullyConnected { packed: Some(_) } => KernelFamily::FullyConnectedPacked,
+        Kernel::FullyConnected { packed: None } => KernelFamily::FullyConnected,
+        Kernel::Materialize { .. } => KernelFamily::Materialize,
+        Kernel::FusedEw { .. } => KernelFamily::FusedEw,
+    }
+}
+
+/// One past the largest element address `view` can touch, computed with
+/// checked arithmetic and — deliberately — a different algorithm from
+/// `View::end`: split leading axes are resolved by enumerating every
+/// outer block instead of the two-candidate maximum, so a bug in either
+/// derivation is caught by the other.  Returns 0 for empty views.
+fn max_end(step: usize, view: &View) -> Result<usize, VerifyError> {
+    if view.shape.len() != view.strides.len() {
+        return Err(VerifyError::ShapeMismatch {
+            step,
+            detail: format!(
+                "view rank {} != stride rank {}",
+                view.shape.len(),
+                view.strides.len()
+            ),
+        });
+    }
+    if view.shape.iter().any(|&d| d == 0) {
+        return Ok(0);
+    }
+    let ovf = |what: &str| VerifyError::AddressOverflow {
+        step,
+        detail: what.to_string(),
+    };
+    let mut last = view.offset;
+    for (i, (&d, &s)) in view.shape.iter().zip(&view.strides).enumerate() {
+        let dm = d - 1;
+        let contrib = match (i, view.split0) {
+            (0, Some(sp)) => {
+                if sp.inner == 0 {
+                    return Err(VerifyError::SplitNotDivisible { step, arg: 0 });
+                }
+                // walk every outer block; the in-block row index is
+                // capped by both the inner extent and the axis extent
+                let mut best = 0usize;
+                for q in 0..=dm / sp.inner {
+                    let r = (sp.inner - 1).min(dm - q * sp.inner);
+                    let c = q
+                        .checked_mul(sp.outer_stride)
+                        .and_then(|v| r.checked_mul(s).and_then(|w| v.checked_add(w)))
+                        .ok_or_else(|| ovf("split block address"))?;
+                    best = best.max(c);
+                }
+                best
+            }
+            _ => dm.checked_mul(s).ok_or_else(|| ovf("axis extent"))?,
+        };
+        last = last.checked_add(contrib).ok_or_else(|| ovf("view address"))?;
+    }
+    last.checked_add(1).ok_or_else(|| ovf("view end"))
+}
+
+/// Product of a shape with overflow detection.
+fn checked_numel(step: usize, shape: &[usize]) -> Result<usize, VerifyError> {
+    shape
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .ok_or_else(|| VerifyError::AddressOverflow {
+            step,
+            detail: "shape product".to_string(),
+        })
+}
+
+/// Dense row-major check re-derived locally (strides of size-1 axes are
+/// irrelevant; split views are never dense).
+fn dense(view: &View) -> bool {
+    if view.split0.is_some() {
+        return false;
+    }
+    let mut expect = 1usize;
+    for (&d, &s) in view.shape.iter().zip(&view.strides).rev() {
+        if d != 1 && s != expect {
+            return false;
+        }
+        expect *= d;
+    }
+    true
+}
+
+impl ExecPlan {
+    /// Statically verify this compiled plan: extent typing, def-use /
+    /// aliasing, reduction-order certificates, and fusion-legality
+    /// audits.  See the [module docs](self) for the full obligation list.
+    /// Returns the first violated obligation.
+    pub fn verify(&self) -> Result<(), VerifyError> {
+        // step-read counts per value id (output gathers tracked via the
+        // pinned set, not as reads, so OverwritePinned is reachable)
+        let mut remaining: HashMap<usize, usize> = HashMap::new();
+        for s in &self.steps {
+            for a in &s.args {
+                if matches!(a.loc, Loc::Slot(_)) {
+                    *remaining.entry(a.root).or_default() += 1;
+                }
+            }
+        }
+        let pinned: HashSet<usize> = self
+            .outputs
+            .iter()
+            .filter(|o| matches!(o.loc, Loc::Slot(_)))
+            .map(|o| o.root)
+            .collect();
+
+        // forward walk: slot -> (occupying value id, its dense extent)
+        let mut owner: Vec<Option<(usize, usize)>> = vec![None; self.slot_sizes.len()];
+        for (si, step) in self.steps.iter().enumerate() {
+            self.check_step_typing(si, step)?;
+            for (ai, a) in step.args.iter().enumerate() {
+                let extent = self.arg_extent(si, a, &owner)?;
+                let end = max_end(si, &a.view)?;
+                if end > extent {
+                    return Err(VerifyError::OobRead {
+                        step: si,
+                        arg: ai,
+                        end,
+                        extent,
+                    });
+                }
+            }
+            let os = step.out_slot;
+            if os >= self.slot_sizes.len() {
+                return Err(VerifyError::BadSlotIndex { step: si, slot: os });
+            }
+            if step.args.iter().any(|a| a.loc == Loc::Slot(os)) {
+                return Err(VerifyError::OutputAliasesInput { step: si, slot: os });
+            }
+            for a in &step.args {
+                if matches!(a.loc, Loc::Slot(_)) {
+                    *remaining.get_mut(&a.root).expect("counted above") -= 1;
+                }
+            }
+            let out_len = checked_numel(si, &step.out_shape)?;
+            if out_len > self.slot_sizes[os] {
+                return Err(VerifyError::OobWrite {
+                    step: si,
+                    len: out_len,
+                    slot_size: self.slot_sizes[os],
+                });
+            }
+            if let Some((r, _)) = owner[os] {
+                let live = remaining.get(&r).copied().unwrap_or(0);
+                if live > 0 {
+                    return Err(VerifyError::OverwriteLive {
+                        step: si,
+                        slot: os,
+                        live_root: r,
+                    });
+                }
+                if pinned.contains(&r) {
+                    return Err(VerifyError::OverwritePinned {
+                        step: si,
+                        slot: os,
+                        root: r,
+                    });
+                }
+            }
+            owner[os] = Some((step.out_root, out_len));
+        }
+
+        // plan outputs: gatherable, in bounds, and still owning their slot
+        let gather = self.steps.len();
+        for (oi, o) in self.outputs.iter().enumerate() {
+            if o.view.split0.is_some() {
+                return Err(VerifyError::OutputSplitView { output: oi });
+            }
+            let extent = match o.loc {
+                Loc::External(i) => {
+                    if i >= self.input_shapes.len() {
+                        return Err(VerifyError::BadLocIndex {
+                            step: gather,
+                            what: "external",
+                            idx: i,
+                        });
+                    }
+                    checked_numel(gather, &self.input_shapes[i])?
+                }
+                Loc::Const(k) => {
+                    if k >= self.constants.len() {
+                        return Err(VerifyError::BadLocIndex {
+                            step: gather,
+                            what: "const",
+                            idx: k,
+                        });
+                    }
+                    self.constants[k].len()
+                }
+                Loc::Slot(s) => {
+                    if s >= self.slot_sizes.len() {
+                        return Err(VerifyError::BadSlotIndex {
+                            step: gather,
+                            slot: s,
+                        });
+                    }
+                    match owner[s] {
+                        Some((r, len)) if r == o.root => len,
+                        _ => return Err(VerifyError::OutputClobbered { output: oi, slot: s }),
+                    }
+                }
+            };
+            let end = max_end(gather, &o.view)?;
+            if end > extent {
+                return Err(VerifyError::OutputOob {
+                    output: oi,
+                    end,
+                    extent,
+                });
+            }
+        }
+
+        self.check_fold_audits()
+    }
+
+    /// Extent of an argument's backing buffer, enforcing the def-use
+    /// rules for arena slot reads along the way.
+    fn arg_extent(
+        &self,
+        si: usize,
+        a: &ArgRef,
+        owner: &[Option<(usize, usize)>],
+    ) -> Result<usize, VerifyError> {
+        match a.loc {
+            Loc::External(i) => {
+                if i >= self.input_shapes.len() {
+                    return Err(VerifyError::BadLocIndex {
+                        step: si,
+                        what: "external",
+                        idx: i,
+                    });
+                }
+                checked_numel(si, &self.input_shapes[i])
+            }
+            Loc::Const(k) => {
+                if k >= self.constants.len() {
+                    return Err(VerifyError::BadLocIndex {
+                        step: si,
+                        what: "const",
+                        idx: k,
+                    });
+                }
+                Ok(self.constants[k].len())
+            }
+            Loc::Slot(s) => {
+                if s >= self.slot_sizes.len() {
+                    return Err(VerifyError::BadSlotIndex { step: si, slot: s });
+                }
+                match owner[s] {
+                    None => Err(VerifyError::ReadBeforeWrite { step: si, slot: s }),
+                    Some((r, _)) if r != a.root => Err(VerifyError::StaleRead {
+                        step: si,
+                        slot: s,
+                        expected_root: a.root,
+                        found_root: r,
+                    }),
+                    Some((_, len)) => Ok(len),
+                }
+            }
+        }
+    }
+
+    /// Per-step typing: arity, re-derived operand/output shapes, operand
+    /// contiguity, split-view legality, packed-panel content, and the
+    /// reduction-order certificate.
+    fn check_step_typing(&self, si: usize, step: &super::plan::Step) -> Result<(), VerifyError> {
+        let mismatch = |detail: String| VerifyError::ShapeMismatch { step: si, detail };
+        let arity = |expected: usize| {
+            if step.args.len() != expected {
+                Err(VerifyError::ArityMismatch {
+                    step: si,
+                    expected,
+                    got: step.args.len(),
+                })
+            } else {
+                Ok(())
+            }
+        };
+        for (ai, a) in step.args.iter().enumerate() {
+            if a.view.shape.len() != a.view.strides.len() {
+                return Err(mismatch(format!(
+                    "arg {ai} view rank {} != stride rank {}",
+                    a.view.shape.len(),
+                    a.view.strides.len()
+                )));
+            }
+            if let Some(sp) = a.view.split0 {
+                let split_ok = ai == 0
+                    && matches!(
+                        step.kernel,
+                        Kernel::StandardConv1d
+                            | Kernel::DepthwiseConv1d
+                            | Kernel::PointwiseConv { .. }
+                    );
+                if !split_ok {
+                    if ai == 0 && matches!(step.kernel, Kernel::FullyConnected { .. }) {
+                        return Err(VerifyError::FcSplitActivation { step: si });
+                    }
+                    return Err(VerifyError::SplitOnNonActivation { step: si, arg: ai });
+                }
+                if sp.inner == 0 || a.view.shape.is_empty() || a.view.shape[0] % sp.inner != 0 {
+                    return Err(VerifyError::SplitNotDivisible { step: si, arg: ai });
+                }
+            }
+        }
+        let contig = |ai: usize| {
+            if dense(&step.args[ai].view) {
+                Ok(())
+            } else {
+                Err(VerifyError::NonContiguousOperand { step: si, arg: ai })
+            }
+        };
+        match &step.kernel {
+            Kernel::DepthwiseConv1d => {
+                arity(3)?;
+                let xs = &step.args[0].view.shape;
+                let ks = &step.args[1].view.shape;
+                let bs = &step.args[2].view.shape;
+                let [t, c, w] = xs[..] else {
+                    return Err(mismatch(format!("depthwise activation rank {}", xs.len())));
+                };
+                if ks.len() != 2 || ks[0] != c || ks[1] == 0 || ks[1] > w {
+                    return Err(mismatch(format!(
+                        "depthwise kernel {ks:?} vs activation {xs:?}"
+                    )));
+                }
+                if bs != &[c] {
+                    return Err(mismatch(format!("depthwise bias {bs:?}, channels {c}")));
+                }
+                contig(1)?;
+                contig(2)?;
+                let want = [t, c, w - ks[1] + 1];
+                if step.out_shape != want {
+                    return Err(mismatch(format!(
+                        "depthwise out {:?}, derived {want:?}",
+                        step.out_shape
+                    )));
+                }
+            }
+            Kernel::StandardConv1d => {
+                arity(3)?;
+                let xs = &step.args[0].view.shape;
+                let ks = &step.args[1].view.shape;
+                let bs = &step.args[2].view.shape;
+                let [t, cin, w] = xs[..] else {
+                    return Err(mismatch(format!("standard activation rank {}", xs.len())));
+                };
+                if ks.len() != 3 || ks[1] != cin || ks[2] == 0 || ks[2] > w {
+                    return Err(mismatch(format!(
+                        "standard kernel {ks:?} vs activation {xs:?}"
+                    )));
+                }
+                let cout = ks[0];
+                if bs != &[cout] {
+                    return Err(mismatch(format!("standard bias {bs:?}, cout {cout}")));
+                }
+                contig(1)?;
+                contig(2)?;
+                let want = [t, cout, w - ks[2] + 1];
+                if step.out_shape != want {
+                    return Err(mismatch(format!(
+                        "standard out {:?}, derived {want:?}",
+                        step.out_shape
+                    )));
+                }
+            }
+            Kernel::PointwiseConv { packed } => {
+                arity(3)?;
+                let xs = &step.args[0].view.shape;
+                let ks = &step.args[1].view.shape;
+                let bs = &step.args[2].view.shape;
+                let [t, c, s] = xs[..] else {
+                    return Err(mismatch(format!("pointwise activation rank {}", xs.len())));
+                };
+                if ks.len() != 2 || ks[0] != c {
+                    return Err(mismatch(format!(
+                        "pointwise kernel {ks:?} vs activation {xs:?}"
+                    )));
+                }
+                let cout = ks[1];
+                if bs != &[cout] {
+                    return Err(mismatch(format!("pointwise bias {bs:?}, cout {cout}")));
+                }
+                contig(1)?;
+                contig(2)?;
+                let want = [t, cout, s];
+                if step.out_shape != want {
+                    return Err(mismatch(format!(
+                        "pointwise out {:?}, derived {want:?}",
+                        step.out_shape
+                    )));
+                }
+                if let Some(pi) = packed {
+                    self.check_packed(si, *pi, &step.args[1])?;
+                }
+            }
+            Kernel::FullyConnected { packed } => {
+                arity(3)?;
+                let xs = &step.args[0].view.shape;
+                let ks = &step.args[1].view.shape;
+                let bs = &step.args[2].view.shape;
+                let [bsz, cin] = xs[..] else {
+                    return Err(mismatch(format!("fc activation rank {}", xs.len())));
+                };
+                if ks.len() != 2 || ks[0] != cin {
+                    return Err(mismatch(format!("fc kernel {ks:?} vs activation {xs:?}")));
+                }
+                let cout = ks[1];
+                if bs != &[cout] {
+                    return Err(mismatch(format!("fc bias {bs:?}, cout {cout}")));
+                }
+                contig(1)?;
+                contig(2)?;
+                let want = [bsz, cout];
+                if step.out_shape != want {
+                    return Err(mismatch(format!(
+                        "fc out {:?}, derived {want:?}",
+                        step.out_shape
+                    )));
+                }
+                if let Some(pi) = packed {
+                    self.check_packed(si, *pi, &step.args[1])?;
+                }
+            }
+            Kernel::Materialize { .. } => {
+                arity(1)?;
+                if step.out_shape != step.args[0].view.shape {
+                    return Err(mismatch(format!(
+                        "materialize out {:?} != view shape {:?}",
+                        step.out_shape, step.args[0].view.shape
+                    )));
+                }
+            }
+            Kernel::FusedEw { signs } => {
+                if step.args.is_empty() || step.args.len() != signs.len() {
+                    return Err(VerifyError::ArityMismatch {
+                        step: si,
+                        expected: signs.len().max(1),
+                        got: step.args.len(),
+                    });
+                }
+                let n = checked_numel(si, &step.out_shape)?;
+                for (ti, a) in step.args.iter().enumerate() {
+                    contig(ti)?;
+                    let an = checked_numel(si, &a.view.shape)?;
+                    if an != n {
+                        return Err(mismatch(format!("fused term {ti} numel {an} != out {n}")));
+                    }
+                }
+                for (ti, &s) in signs.iter().enumerate() {
+                    if s != 1.0 && s != -1.0 {
+                        return Err(VerifyError::BadSign { step: si, term: ti });
+                    }
+                }
+            }
+        }
+        let fam = family_of(&step.kernel);
+        check_blocking(fam, &fused::declared_blocking(fam))
+    }
+
+    /// Re-verify a pre-packed NR-panel set against its source constant
+    /// with the verifier's own panel index math.
+    fn check_packed(&self, si: usize, pi: usize, ka: &ArgRef) -> Result<(), VerifyError> {
+        let ppm = |detail: String| VerifyError::PackedPanelMismatch { step: si, detail };
+        let Some(panels) = self.packed.get(pi) else {
+            return Err(ppm(format!("panel index {pi} out of range")));
+        };
+        let Loc::Const(kc) = ka.loc else {
+            return Err(ppm("packed weight is not a plan constant".to_string()));
+        };
+        let Some(kt) = self.constants.get(kc) else {
+            return Err(VerifyError::BadLocIndex {
+                step: si,
+                what: "const",
+                idx: kc,
+            });
+        };
+        let kd = kt.data();
+        if ka.view.offset != 0 || !dense(&ka.view) || ka.view.numel_checked() != Some(kd.len()) {
+            return Err(ppm("packed weight view is not the whole constant".to_string()));
+        }
+        let [cin, cout] = ka.view.shape[..] else {
+            return Err(ppm(format!("packed weight rank {}", ka.view.shape.len())));
+        };
+        let nr = fused::NR;
+        let nblk = cout.div_ceil(nr);
+        if panels.len() != nblk * cin * nr {
+            return Err(ppm(format!(
+                "panel len {} != {nblk} blocks * {cin} cin * {nr}",
+                panels.len()
+            )));
+        }
+        for jb in 0..nblk {
+            for ci in 0..cin {
+                for j in 0..nr {
+                    let co = jb * nr + j;
+                    let want = if co < cout { kd[ci * cout + co] } else { 0.0 };
+                    let got = panels[(jb * cin + ci) * nr + j];
+                    if got != want {
+                        return Err(ppm(format!(
+                            "panel ({jb},{ci},{j}) = {got}, constant says {want}"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-prove every recorded window fold on the final plan.
+    fn check_fold_audits(&self) -> Result<(), VerifyError> {
+        if self.fused_steps != self.fold_audits.len() {
+            return Err(VerifyError::FoldCountMismatch {
+                fused_steps: self.fused_steps,
+                audits: self.fold_audits.len(),
+            });
+        }
+        for (ai, a) in self.fold_audits.iter().enumerate() {
+            let scale = |detail: String| VerifyError::FoldScaleMismatch { audit: ai, detail };
+            let bias = |detail: String| VerifyError::FoldBiasMismatch { audit: ai, detail };
+            let chan = |detail: String| VerifyError::FoldBadChannelMap { audit: ai, detail };
+            let c = a.win.len();
+            if c == 0 || a.hot.len() != c {
+                return Err(scale(format!("{c} channels, {} hot taps", a.hot.len())));
+            }
+            if a.wbias.len() != c || a.orig_bias.len() != c {
+                return Err(bias(format!(
+                    "{c} channels, window bias {} / conv bias {}",
+                    a.wbias.len(),
+                    a.orig_bias.len()
+                )));
+            }
+            if a.orig_bias.iter().any(|&v| v != 0.0) {
+                return Err(VerifyError::FoldNonZeroOrigBias { audit: ai });
+            }
+            // the pre-scaled kernel: one-hot ±1 rows scaled by the window
+            let Some(sc) = self.constants.get(a.scaled_const) else {
+                return Err(scale(format!("scaled const {} missing", a.scaled_const)));
+            };
+            let sd = sc.data();
+            if sd.len() % c != 0 {
+                return Err(scale(format!("kernel len {} not divisible by {c}", sd.len())));
+            }
+            let row_len = sd.len() / c;
+            for (co, row) in sd.chunks(row_len).enumerate() {
+                match a.hot[co] {
+                    Some((idx, sign)) => {
+                        if idx >= row_len || (sign != 1.0 && sign != -1.0) {
+                            return Err(scale(format!("channel {co}: bad hot tap ({idx}, {sign})")));
+                        }
+                        for (p, &v) in row.iter().enumerate() {
+                            let want = if p == idx { sign * a.win[co] } else { 0.0 };
+                            if v != want {
+                                return Err(scale(format!(
+                                    "channel {co} tap {p} = {v}, expected {want}"
+                                )));
+                            }
+                        }
+                    }
+                    None => {
+                        if row.iter().any(|&v| v != 0.0) {
+                            return Err(scale(format!("channel {co}: nonzero taps in zero row")));
+                        }
+                    }
+                }
+            }
+            // the adopted bias must be the window's bias, verbatim
+            let Some(bc) = self.constants.get(a.bias_const) else {
+                return Err(bias(format!("bias const {} missing", a.bias_const)));
+            };
+            if bc.data() != a.wbias.as_slice() {
+                return Err(bias("adopted bias != audited window bias".to_string()));
+            }
+            // the rewritten conv must actually read both constants
+            let Some(conv) = self.steps.iter().find(|s| s.out_root == a.conv_root) else {
+                return Err(chan(format!("conv value {} has no step", a.conv_root)));
+            };
+            if !matches!(conv.kernel, Kernel::StandardConv1d) || conv.args.len() != 3 {
+                return Err(chan("folded step is not a standard conv".to_string()));
+            }
+            if conv.args[1].loc != Loc::Const(a.scaled_const) {
+                return Err(scale("conv does not read the scaled kernel".to_string()));
+            }
+            if conv.args[2].loc != Loc::Const(a.bias_const) {
+                return Err(bias("conv does not read the adopted bias".to_string()));
+            }
+            let cs = &conv.out_shape;
+            if cs.len() != 3 || cs[1] != c {
+                return Err(chan(format!("conv out {cs:?}, {c} window channels")));
+            }
+            let (wc, total) = (cs[2], cs[0] * cs[1] * cs[2]);
+            // exhaustive re-scan: every element the window read must land
+            // on the conv output's own channel (verifier's own address
+            // math over the recorded activation view)
+            let v = &a.act_view;
+            if v.shape.len() != 3 || v.strides.len() != 3 || v.shape[1] != c {
+                return Err(chan(format!("activation view shape {:?}", v.shape)));
+            }
+            let (tn, wn) = (v.shape[0], v.shape[2]);
+            if tn.saturating_mul(c).saturating_mul(wn) > AUDIT_SCAN_CAP {
+                return Err(chan("activation scan above compile-time cap".to_string()));
+            }
+            let (s0, s1, s2) = (v.strides[0], v.strides[1], v.strides[2]);
+            for t in 0..tn {
+                let base = v.offset
+                    + match v.split0 {
+                        Some(sp) => {
+                            if sp.inner == 0 || tn % sp.inner != 0 {
+                                return Err(chan("bad activation split".to_string()));
+                            }
+                            (t / sp.inner) * sp.outer_stride + (t % sp.inner) * s0
+                        }
+                        None => t * s0,
+                    };
+                for ch in 0..c {
+                    for w in 0..wn {
+                        let addr = base + ch * s1 + w * s2;
+                        if addr >= total || (addr / wc) % c != ch {
+                            return Err(chan(format!(
+                                "element (t={t}, ch={ch}, w={w}) -> address {addr}"
+                            )));
+                        }
+                    }
+                }
+            }
+            // the folded-away window value must never resurface
+            for s in &self.steps {
+                if s.out_root == a.folded_root || s.args.iter().any(|x| x.root == a.folded_root) {
+                    return Err(VerifyError::FoldValueResurfaced {
+                        audit: ai,
+                        root: a.folded_root,
+                    });
+                }
+            }
+            if self.outputs.iter().any(|o| o.root == a.folded_root) {
+                return Err(VerifyError::FoldValueResurfaced {
+                    audit: ai,
+                    root: a.folded_root,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+impl View {
+    /// Checked element count (`None` on overflow) — verifier-local helper.
+    fn numel_checked(&self) -> Option<usize> {
+        self.shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::plan::CompileOptions;
+    use super::*;
+    use crate::dsp;
+    use crate::tensor::Tensor;
+    use crate::tina::exec::fused::Axis;
+    use crate::tina::graph::{Graph, NodeOp};
+    use crate::tina::lower;
+
+    fn compile(g: &Graph) -> ExecPlan {
+        let plan = ExecPlan::compile_with(
+            g,
+            CompileOptions {
+                fusion: true,
+                verify: false,
+            },
+        )
+        .unwrap();
+        plan.verify().expect("pristine plan must verify");
+        plan
+    }
+
+    /// Four independent rank-1 adds where the first result stays live
+    /// across a later, unrelated step — FusedEw def-use fodder.
+    fn add_graph(pin_first: bool) -> Graph {
+        let mut g = Graph::new();
+        let i0 = g.input(&[8]);
+        let i1 = g.input(&[8]);
+        let i2 = g.input(&[8]);
+        let i3 = g.input(&[8]);
+        let s1 = g.push(NodeOp::Add, &[i0, i1]);
+        let s2 = g.push(NodeOp::Add, &[i2, i3]);
+        if pin_first {
+            g.set_outputs(&[s1, s2]);
+        } else {
+            let s3 = g.push(NodeOp::Add, &[s1, i2]);
+            let s4 = g.push(NodeOp::Sub, &[s1, i3]);
+            g.set_outputs(&[s2, s3, s4]);
+        }
+        g
+    }
+
+    // ---- negative plans: each distinct corruption, its distinct error ----
+
+    #[test]
+    fn corrupt_offset_is_oob_read() {
+        let mut plan = compile(&lower::fir(2, 64, &[0.5; 8]).unwrap());
+        plan.steps[0].args[0].view.offset += 1_000_000;
+        assert!(matches!(
+            plan.verify(),
+            Err(VerifyError::OobRead { step: 0, arg: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn swapped_steps_read_before_write() {
+        let mut plan = compile(&lower::stft(1, 64, 16, 16).unwrap());
+        assert!(plan.steps.len() >= 2, "stft must compile to several steps");
+        plan.steps.swap(0, 1);
+        assert!(matches!(
+            plan.verify(),
+            Err(VerifyError::ReadBeforeWrite { step: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn output_slot_aliasing_an_argument_is_rejected() {
+        let mut plan = compile(&lower::stft(1, 64, 16, 16).unwrap());
+        let Loc::Slot(conv_slot) = plan.steps[1].args[0].loc else {
+            panic!("DFT step must read the framing conv's slot");
+        };
+        plan.steps[1].out_slot = conv_slot;
+        assert!(matches!(
+            plan.verify(),
+            Err(VerifyError::OutputAliasesInput { step: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn overwriting_a_live_slot_is_rejected() {
+        let mut plan = compile(&add_graph(false));
+        // steps: s1, s2, s3(reads s1), s4(reads s1); step 1 is independent
+        assert!(plan.steps[1]
+            .args
+            .iter()
+            .all(|a| matches!(a.loc, Loc::External(_))));
+        plan.steps[1].out_slot = plan.steps[0].out_slot;
+        assert!(matches!(
+            plan.verify(),
+            Err(VerifyError::OverwriteLive { step: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn overwriting_a_pinned_slot_is_rejected() {
+        let mut plan = compile(&add_graph(true));
+        plan.steps[1].out_slot = plan.steps[0].out_slot;
+        assert!(matches!(
+            plan.verify(),
+            Err(VerifyError::OverwritePinned { step: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_scaled_kernel_fails_fold_audit() {
+        let mut plan = compile(&lower::stft(1, 64, 16, 16).unwrap());
+        assert_eq!(plan.fold_audits.len(), 1, "window fold must have fired");
+        let k = plan.fold_audits[0].scaled_const;
+        let shape = plan.constants[k].shape().to_vec();
+        let mut d = plan.constants[k].data().to_vec();
+        d[0] += 1.5;
+        plan.constants[k] = Tensor::new(&shape, d).unwrap();
+        assert!(matches!(
+            plan.verify(),
+            Err(VerifyError::FoldScaleMismatch { audit: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn split_inner_must_divide_leading_axis() {
+        let mut plan = compile(&lower::stft(2, 64, 16, 16).unwrap());
+        let (si, step) = plan
+            .steps
+            .iter_mut()
+            .enumerate()
+            .find(|(_, s)| s.args[0].view.split0.is_some())
+            .expect("batched stft must produce a split activation");
+        let sp = step.args[0].view.split0.as_mut().unwrap();
+        sp.inner += 1; // 8 rows, inner 5: not a divisor
+        let err = plan.verify().unwrap_err();
+        assert!(
+            matches!(err, VerifyError::SplitNotDivisible { step, .. } if step == si),
+            "got {err}"
+        );
+    }
+
+    #[test]
+    fn shrunken_slot_is_oob_write() {
+        let mut plan = compile(&lower::fir(2, 64, &[0.5; 8]).unwrap());
+        plan.slot_sizes[plan.steps[0].out_slot] = 1;
+        assert!(matches!(
+            plan.verify(),
+            Err(VerifyError::OobWrite { step: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn non_unit_fused_sign_is_rejected() {
+        let mut plan = compile(&add_graph(true));
+        let Kernel::FusedEw { signs } = &mut plan.steps[0].kernel else {
+            panic!("Add must compile to a fused elementwise step");
+        };
+        signs[0] = 2.0;
+        assert!(matches!(
+            plan.verify(),
+            Err(VerifyError::BadSign { step: 0, term: 0 })
+        ));
+    }
+
+    #[test]
+    fn inflated_out_shape_is_shape_mismatch() {
+        let mut plan = compile(&lower::fir(2, 64, &[0.5; 8]).unwrap());
+        plan.steps[0].out_shape[2] += 1;
+        assert!(matches!(
+            plan.verify(),
+            Err(VerifyError::ShapeMismatch { step: 0, .. })
+        ));
+    }
+
+    // ---- reduction-order certificates ----
+
+    #[test]
+    fn every_declared_blocking_satisfies_the_oracle() {
+        for f in [
+            KernelFamily::StandardConv,
+            KernelFamily::DepthwiseConv,
+            KernelFamily::PointwiseConv,
+            KernelFamily::PointwiseConvPacked,
+            KernelFamily::FullyConnected,
+            KernelFamily::FullyConnectedPacked,
+            KernelFamily::Materialize,
+            KernelFamily::FusedEw,
+        ] {
+            check_blocking(f, &fused::declared_blocking(f))
+                .unwrap_or_else(|e| panic!("{f:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn hostile_blockings_are_rejected() {
+        // vectorizing the cin reduction axis (blocking it) must fail
+        let err = check_blocking(
+            KernelFamily::StandardConv,
+            &Blocking {
+                blocked: &[Axis::T, Axis::Cin],
+                reduction: &[Axis::Cin, Axis::Tap],
+            },
+        )
+        .unwrap_err();
+        assert!(matches!(err, VerifyError::ReductionOrderViolation { .. }));
+        // reordering the reduction (taps outer, cin inner) must fail too
+        let err = check_blocking(
+            KernelFamily::StandardConv,
+            &Blocking {
+                blocked: &[Axis::T, Axis::Cout],
+                reduction: &[Axis::Tap, Axis::Cin],
+            },
+        )
+        .unwrap_err();
+        assert!(matches!(err, VerifyError::ReductionOrderViolation { .. }));
+    }
+
+    // ---- single-field mutation fuzzer ----
+
+    /// xorshift64 — deterministic, dependency-free.
+    struct Rng(u64);
+    impl Rng {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+        fn pick(&mut self, n: usize) -> usize {
+            (self.next() % n as u64) as usize
+        }
+    }
+
+    /// Corrupt exactly one field of a freshly compiled, verified plan and
+    /// assert the verifier catches it.  Every mutation in the catalog is
+    /// guaranteed-illegal by construction.
+    #[test]
+    fn mutation_fuzzer_catches_single_field_corruptions() {
+        type Mk = Box<dyn Fn() -> Graph>;
+        let corpus: Vec<Mk> = vec![
+            Box::new(|| lower::ewmult(4, 4)),
+            Box::new(|| lower::ewadd(3, 5)),
+            Box::new(|| lower::dft(2, 8)),
+            Box::new(|| lower::idft(2, 8)),
+            Box::new(|| lower::matmul(3, 4, 5)),
+            Box::new(|| lower::fir(2, 64, &[0.5; 8]).unwrap()),
+            Box::new(|| lower::stft(2, 64, 16, 16).unwrap()),
+            Box::new(|| lower::pfb(1, 64, dsp::PfbConfig::new(8, 4)).unwrap()),
+        ];
+        let mut rng = Rng(0x5eed_cafe_f00d_1234);
+        let mut tally = [0usize; 7];
+        for it in 0..48 {
+            let g = corpus[rng.pick(corpus.len())]();
+            let mut plan = compile(&g);
+            let nsteps = plan.steps.len();
+            let mutation = rng.pick(7);
+            // fall back to the always-applicable offset bump when a
+            // mutation has no target in this plan
+            let applied = match mutation {
+                1 => {
+                    plan.steps[rng.pick(nsteps)].out_slot = plan.slot_sizes.len() + 7;
+                    1
+                }
+                2 => {
+                    let s = plan.steps[rng.pick(nsteps)].out_slot;
+                    plan.slot_sizes[s] = 0;
+                    2
+                }
+                3 => {
+                    let mut dep = None;
+                    'outer: for j in 1..nsteps {
+                        for i in 0..j {
+                            let prod = plan.steps[i].out_root;
+                            if plan.steps[j]
+                                .args
+                                .iter()
+                                .any(|a| matches!(a.loc, Loc::Slot(_)) && a.root == prod)
+                            {
+                                dep = Some((i, j));
+                                break 'outer;
+                            }
+                        }
+                    }
+                    match dep {
+                        Some((i, j)) => {
+                            plan.steps.swap(i, j);
+                            3
+                        }
+                        None => {
+                            plan.steps[0].args[0].view.offset += 1_000_000;
+                            0
+                        }
+                    }
+                }
+                4 => {
+                    plan.steps[rng.pick(nsteps)].out_shape[0] += 1;
+                    4
+                }
+                5 => {
+                    let s = rng.pick(nsteps);
+                    if plan.steps[s].args.len() > 1 {
+                        plan.steps[s].args.pop();
+                        5
+                    } else {
+                        plan.steps[s].args[0].view.offset += 1_000_000;
+                        0
+                    }
+                }
+                6 => {
+                    let o = rng.pick(plan.outputs.len());
+                    plan.outputs[o].view.offset += 1_000_000;
+                    6
+                }
+                _ => {
+                    let s = rng.pick(nsteps);
+                    let a = rng.pick(plan.steps[s].args.len());
+                    plan.steps[s].args[a].view.offset += 1_000_000;
+                    0
+                }
+            };
+            tally[applied] += 1;
+            assert!(
+                plan.verify().is_err(),
+                "iteration {it}: mutation {applied} survived verification"
+            );
+        }
+        // the catalog must actually exercise more than the fallback
+        assert!(
+            tally.iter().filter(|&&c| c > 0).count() >= 5,
+            "mutation coverage too thin: {tally:?}"
+        );
+    }
+
+    // ---- positive coverage (the full corpus sweep lives in
+    // rust/tests/properties.rs) ----
+
+    #[test]
+    fn verifier_accepts_fused_and_unfused_stft() {
+        for fusion in [true, false] {
+            let plan = ExecPlan::compile_with(
+                &lower::stft(2, 64, 16, 16).unwrap(),
+                CompileOptions {
+                    fusion,
+                    verify: false,
+                },
+            )
+            .unwrap();
+            plan.verify()
+                .unwrap_or_else(|e| panic!("fusion={fusion}: {e}"));
+        }
+    }
+}

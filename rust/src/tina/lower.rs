@@ -2,10 +2,61 @@
 //! over the four building blocks — the same mappings as
 //! `python/compile/tina_ops.py`, §3/§4 of the paper.
 
+use super::exec::fused::{Axis, KernelFamily};
 use super::graph::{FusionHint, Graph, NodeOp, ValueId};
 use crate::dsp;
 use crate::tensor::Tensor;
 use anyhow::Result;
+
+// ---------------------------------------------------------------------------
+// Oracle reduction-order contract
+// ---------------------------------------------------------------------------
+//
+// The lowering layer owns the numerical contract: every kernel family must
+// accumulate its reductions in exactly the order the pure-rust interpreter
+// oracle does, or bit-for-bit plan/interpreter equality breaks.  These
+// tables are the *source of truth* the static verifier
+// (`tina::exec::verify`) checks each kernel implementation's declared
+// blocking (`tina::exec::fused::declared_blocking`) against.  They are
+// deliberately declared here — away from the kernels — so an implementation
+// change cannot silently rewrite its own certificate.
+
+/// The exact per-output-element reduction order (outermost first) the
+/// interpreter oracle fixes for a kernel family.  A kernel whose declared
+/// reduction order differs fails static verification.
+pub fn oracle_reduction_order(f: KernelFamily) -> &'static [Axis] {
+    match f {
+        // oracle loops input channels outer, taps inner, both ascending
+        KernelFamily::StandardConv => &[Axis::Cin, Axis::Tap],
+        // per (t, c) element: taps ascending
+        KernelFamily::DepthwiseConv => &[Axis::Tap],
+        // per (t, co, s) element: input channels ascending
+        KernelFamily::PointwiseConv | KernelFamily::PointwiseConvPacked => &[Axis::Cin],
+        // per (b, co) element: input features ascending
+        KernelFamily::FullyConnected | KernelFamily::FullyConnectedPacked => &[Axis::Cin],
+        // pure data movement: no reduction at all
+        KernelFamily::Materialize => &[],
+        // elementwise chain accumulates terms left to right
+        KernelFamily::FusedEw => &[Axis::Term],
+    }
+}
+
+/// The independent output coordinates of a kernel family — the only axes an
+/// implementation may block, tile, or fan across threads.  Blocking any
+/// other axis would reassociate a reduction and change f32 rounding.
+pub fn oracle_output_axes(f: KernelFamily) -> &'static [Axis] {
+    match f {
+        KernelFamily::StandardConv => &[Axis::T, Axis::Cout, Axis::Spatial],
+        KernelFamily::DepthwiseConv => &[Axis::T, Axis::C, Axis::Spatial],
+        KernelFamily::PointwiseConv | KernelFamily::PointwiseConvPacked => {
+            &[Axis::T, Axis::Cout, Axis::Spatial]
+        }
+        KernelFamily::FullyConnected | KernelFamily::FullyConnectedPacked => {
+            &[Axis::T, Axis::Cout]
+        }
+        KernelFamily::Materialize | KernelFamily::FusedEw => &[Axis::Elem],
+    }
+}
 
 /// §3.1: elementwise (H, W) multiply via depthwise conv with C = H*W.
 pub fn ewmult(h: usize, w: usize) -> Graph {

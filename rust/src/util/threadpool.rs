@@ -117,12 +117,21 @@ pub fn parallel_for(threads: usize, n: usize, f: impl Fn(usize, usize) + Sync) {
 /// thread writes a disjoint index range.
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr(pub(crate) *mut f32);
+// SAFETY: SendPtr wraps the base pointer of a `&mut [f32]` that outlives
+// the scoped-thread region it is shared with; every user derives disjoint
+// per-thread subranges from it (documented `// SAFETY:` at each use), so
+// moving the pointer across threads introduces no aliased mutation.
 unsafe impl Send for SendPtr {}
+// SAFETY: same invariant as Send — the wrapper is only ever used to carve
+// disjoint write ranges, so shared references to it are harmless.
 unsafe impl Sync for SendPtr {}
 
 impl SendPtr {
     /// Pointer offset; callers guarantee disjoint ranges across threads.
     pub(crate) fn at(self, offset: usize) -> *mut f32 {
+        // SAFETY: callers only request offsets inside the allocation the
+        // wrapped base pointer was derived from (the destination slice),
+        // so the resulting pointer stays in bounds.
         unsafe { self.0.add(offset) }
     }
 }

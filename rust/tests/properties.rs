@@ -301,7 +301,7 @@ fn prop_planned_executor_matches_interpreter_oracle() {
         let (graph, inputs) = random_lowering(g);
         let interp = Interpreter::new(graph.clone()).unwrap();
         let plan = ExecPlan::compile(&graph).map_err(|e| e.to_string())?;
-        plan.validate_liveness().map_err(|e| e.to_string())?;
+        plan.verify().map_err(|e| e.to_string())?;
         let want = interp.run(&inputs).map_err(|e| e.to_string())?;
         let got = plan.run(&inputs).map_err(|e| e.to_string())?;
         prop_assert!(got.len() == want.len(), "output arity");
@@ -374,7 +374,7 @@ fn prop_terminal_views_match_interpreter_bitwise() {
         let inputs = vec![Tensor::randn(&[h, w], g.u64())];
         let interp = Interpreter::new(gr.clone()).unwrap();
         let plan = ExecPlan::compile(&gr).map_err(|e| e.to_string())?;
-        plan.validate_liveness().map_err(|e| e.to_string())?;
+        plan.verify().map_err(|e| e.to_string())?;
         prop_assert!(
             plan.materialize_count() == 0,
             "terminal views must stay metadata-only (h={h} w={w} co={co})"
@@ -405,7 +405,7 @@ fn prop_diamond_views_share_backing_safely() {
         gr.set_outputs(&[t, u]);
         let interp = Interpreter::new(gr.clone()).unwrap();
         let planned = Planned::new(&gr).map_err(|e| e.to_string())?;
-        planned.plan().validate_liveness().map_err(|e| e.to_string())?;
+        planned.plan().verify().map_err(|e| e.to_string())?;
         for _ in 0..3 {
             let inputs = vec![
                 Tensor::randn(&[n, n], g.u64()),
@@ -426,8 +426,8 @@ fn prop_fuzzed_random_graphs_match_interpreter_bitwise() {
     // The randomized differential fuzzer: ~200 seeded random graphs
     // (chains and diamonds over conv/FC/Add/Sub and all four movement
     // ops, including STFT-like framing+window pipelines with deliberate
-    // fusion-skip variants) must compile, pass the strided-aliasing
-    // liveness proof, and match the interpreter oracle bit-for-bit —
+    // fusion-skip variants) must compile, pass the independent static
+    // verifier, and match the interpreter oracle bit-for-bit —
     // with the fusion pass enabled AND disabled, so a fusion rewrite can
     // never hide behind (or be hidden by) the baseline planner.
     //
@@ -439,10 +439,14 @@ fn prop_fuzzed_random_graphs_match_interpreter_bitwise() {
         let interp = Interpreter::new(graph.clone()).unwrap();
         let want = interp.run(&inputs).map_err(|e| e.to_string())?;
         for fusion in [true, false] {
-            let plan = ExecPlan::compile_with(&graph, CompileOptions { fusion })
+            let opts = CompileOptions {
+                fusion,
+                verify: true,
+            };
+            let plan = ExecPlan::compile_with(&graph, opts)
                 .map_err(|e| format!("compile(fusion={fusion}): {e}"))?;
-            plan.validate_liveness()
-                .map_err(|e| format!("liveness(fusion={fusion}): {e}"))?;
+            plan.verify()
+                .map_err(|e| format!("verify(fusion={fusion}): {e}"))?;
             let got = plan
                 .run(&inputs)
                 .map_err(|e| format!("run(fusion={fusion}): {e}"))?;
@@ -478,12 +482,50 @@ fn batched_stft_plans_are_copy_free_and_fused() {
         assert_eq!(plan.materialize_count(), 0, "B={b}: stray copy");
         assert_eq!(plan.movement_materialize_count(), 0, "B={b}");
         assert!(plan.fused_steps() > 0, "B={b}: window must fold");
-        plan.validate_liveness().unwrap();
+        plan.verify().unwrap();
     }
     // windowed STFT at B=1 folds too (no copy existed to eliminate)
     let plan = ExecPlan::compile(&lower::stft(1, 600, 64, 32).unwrap()).unwrap();
     assert!(plan.fused_steps() > 0);
     assert_eq!(plan.materialize_count(), 0);
+}
+
+#[test]
+fn verifier_accepts_every_lowering_at_every_bucket() {
+    // The static-verifier acceptance contract: every shipped lowering,
+    // compiled at every bucket size with the fusion pass on AND off,
+    // passes `ExecPlan::verify()` — the verifier independently re-proves
+    // extents/OOB, def-use liveness, reduction-order certificates and
+    // window-fold audits on the final plan.
+    let cfg = PfbConfig::new(8, 4);
+    let taps = dsp::fir_lowpass(16, 0.2).unwrap();
+    for b in [1usize, 2, 4, 8] {
+        let graphs: Vec<Graph> = vec![
+            lower::ewmult(b, 16),
+            lower::ewadd(b, 16),
+            lower::matmul(b, 10, 4),
+            lower::summation(64),
+            lower::dft(b, 16),
+            lower::idft(b, 16),
+            lower::fir(b, 200, &taps).unwrap(),
+            lower::unfold(b, 100, 8).unwrap(),
+            lower::pfb_fir(b, 8 * 32, cfg).unwrap(),
+            lower::pfb(b, 8 * 32, cfg).unwrap(),
+            lower::stft(b, 600, 64, 32).unwrap(),
+        ];
+        for (i, g) in graphs.iter().enumerate() {
+            for fusion in [true, false] {
+                let opts = CompileOptions {
+                    fusion,
+                    verify: true,
+                };
+                let plan = ExecPlan::compile_with(g, opts)
+                    .unwrap_or_else(|e| panic!("graph {i} B={b} fusion={fusion}: {e}"));
+                plan.verify()
+                    .unwrap_or_else(|e| panic!("graph {i} B={b} fusion={fusion}: {e}"));
+            }
+        }
+    }
 }
 
 #[test]
@@ -570,7 +612,7 @@ fn prop_bucketed_batch_rows_match_solo_interpreter_bitwise() {
         let batched = Tensor::new(&[bucket, l], data).unwrap();
 
         let plan = ExecPlan::compile(&build(bucket)).map_err(|e| e.to_string())?;
-        plan.validate_liveness().map_err(|e| e.to_string())?;
+        plan.verify().map_err(|e| e.to_string())?;
         let mut arena = Arena::new();
         let got = plan
             .run_rows_in(&mut arena, std::slice::from_ref(&batched), k)

@@ -4,10 +4,17 @@
 Grep-resistant invariants the type system cannot express:
 
 1. **No raw thread spawns outside the owners.**  `std::thread::spawn`
-   (detached, panic-swallowing) is allowed only in the modules that own
-   thread lifecycles: the TCP server (per-connection threads) and the
-   thread pool.  Everything else must go through the pool or
-   `thread::Builder` with explicit join/error handling.
+   (detached, panic-swallowing) and `thread::Builder` spawns are allowed
+   only in the modules that own thread lifecycles: the TCP server
+   (per-connection threads), the thread/exec pools, and the coordinator
+   service (its single named drain-loop thread, joined on shutdown).
+   Everything else must submit work to the exec pool — batch execution
+   in particular must never regress to detached per-batch threads.
+
+1b. **`spawn_batch_exec` is retired.**  The detached per-batch
+   execution helper was replaced by the bounded, panic-isolating
+   `ExecPool`; the identifier must not reappear anywhere (tests
+   included) — resurrecting it would silently undo panic containment.
 
 2. **No bare `.unwrap()` on the coordinator serving paths.**  In
    `rust/src/coordinator/`, `.unwrap()` is allowed only for mutex /
@@ -39,9 +46,16 @@ import sys
 from pathlib import Path
 
 SPAWN_ALLOWLIST = {
-    "coordinator/server.rs",  # per-connection threads, joined on shutdown
-    "util/threadpool.rs",  # the pool owns its workers
+    "coordinator/server.rs",  # per-connection threads, capped and reaped
+    "coordinator/service.rs",  # the drain-loop thread, joined on shutdown
+    "runtime/handle.rs",  # the single engine thread, joined on Drop
+    "util/threadpool.rs",  # the pools own their workers
 }
+
+# matches both `std::thread::spawn(...)` and the `std::thread::Builder`
+# named-thread form (the builder line, not the `.spawn(` call, so plain
+# `.spawn(` receivers like EngineHandle::spawn stay out of scope)
+THREAD_SPAWN_RE = re.compile(r"thread::spawn|thread::Builder")
 
 KERNEL_NO_TIMING = {
     "tina/exec/fused.rs",
@@ -87,11 +101,19 @@ def lint_file(root: Path, path: Path) -> list[str]:
         # rule 1: raw thread spawns
         if (
             not in_test
-            and "thread::spawn" in code
+            and THREAD_SPAWN_RE.search(code)
             and rel not in SPAWN_ALLOWLIST
         ):
-            err(i, "std::thread::spawn outside server.rs/threadpool.rs "
-                   "(use the thread pool or thread::Builder with a join)")
+            err(i, "thread spawn outside server.rs/service.rs/"
+                   "threadpool.rs (submit work to the exec pool instead "
+                   "of spawning threads)")
+
+        # rule 1b: the retired detached per-batch helper must not return
+        # (checked in test code too — even a test resurrecting it would
+        # re-normalize detached batch execution)
+        if "spawn_batch_exec" in code:
+            err(i, "spawn_batch_exec is retired (batch execution goes "
+                   "through the bounded, panic-isolating ExecPool)")
 
         # rule 2: bare unwrap on coordinator serving paths
         if not in_test and rel.startswith("coordinator/") and ".unwrap()" in code:
@@ -143,8 +165,8 @@ def main() -> int:
         for e in errors:
             print(f"  {e}", file=sys.stderr)
         return 1
-    print("repo invariants hold (thread spawns, coordinator unwraps, "
-          "kernel timing, unsafe documentation)")
+    print("repo invariants hold (thread spawns, exec-pool ownership, "
+          "coordinator unwraps, kernel timing, unsafe documentation)")
     return 0
 
 

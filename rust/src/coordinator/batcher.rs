@@ -163,6 +163,31 @@ impl InflightGate {
         }
     }
 
+    /// Take one in-flight slot, waiting at most `timeout`.  Returns `None`
+    /// when the gate stays saturated past the deadline — the coordinator's
+    /// deadline-aware admission turns that into a fast "overloaded,
+    /// retry-after" failure instead of blocking the caller indefinitely.
+    /// The fault site `gate.acquire` can force the saturated outcome.
+    pub fn acquire_timeout(self: &Arc<Self>, timeout: Duration) -> Option<InflightPermit> {
+        if crate::testing::faults::refused("gate.acquire") {
+            return None;
+        }
+        let deadline = Instant::now() + timeout;
+        let mut n = self.count.lock().unwrap();
+        while *n >= self.limit {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            n = self.freed.wait_timeout(n, deadline - now).unwrap().0;
+        }
+        *n += 1;
+        self.metrics.inc_inflight_batched();
+        Some(InflightPermit {
+            gate: Arc::clone(self),
+        })
+    }
+
     /// Batched requests currently holding a slot.
     pub fn in_flight(&self) -> usize {
         *self.count.lock().unwrap()
@@ -202,13 +227,17 @@ pub struct Completion {
     /// *before* the response slot is set so the gauge never overshoots
     /// past a completed reply.
     permit: Option<InflightPermit>,
+    /// The request's optional client deadline: the drain loop sheds rows
+    /// whose deadline already passed instead of paying for execution.
+    deadline: Option<Instant>,
     metrics: Arc<Metrics>,
 }
 
 impl Completion {
     /// Build a completion context.  `t0` is the submit timestamp the
     /// latency histogram measures from; `permit` is `Some` exactly for
-    /// requests admitted through the [`InflightGate`] (batched paths).
+    /// requests admitted through the [`InflightGate`] (batched paths);
+    /// `deadline` is the request's optional client deadline.
     pub fn new(
         metrics: Arc<Metrics>,
         slot: OneShot<Result<OpResponse>>,
@@ -216,6 +245,7 @@ impl Completion {
         served_by: String,
         t0: Instant,
         permit: Option<InflightPermit>,
+        deadline: Option<Instant>,
     ) -> Completion {
         Completion {
             slot: Some(slot),
@@ -223,8 +253,15 @@ impl Completion {
             served_by,
             t0,
             permit,
+            deadline,
             metrics,
         }
+    }
+
+    /// Whether the request's optional deadline has already passed (rows
+    /// answering `true` are shed before execution; no deadline → `false`).
+    pub fn deadline_expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
     }
 
     /// Complete from a direct (worker) execution path: the response is
@@ -676,9 +713,17 @@ impl Batcher {
 /// execution thread: row i of every output tensor becomes rows[i]'s
 /// response.  Padding rows are discarded (masked out) here.
 pub fn scatter_results(batch: FormedBatch, result: Result<Vec<Tensor>>) {
+    scatter_indexed_results(batch.rows.into_iter().enumerate().collect(), result);
+}
+
+/// [`scatter_results`] over *indexed* rows: each `(i, row)` pair names the
+/// row's position in the stacked batch input, so callers that shed rows
+/// (expired deadlines) can still scatter the survivors from the right
+/// batch slots.  Indices must be ascending.
+pub fn scatter_indexed_results(rows: Vec<(usize, Pending)>, result: Result<Vec<Tensor>>) {
     match result {
         Ok(outputs) => {
-            for (i, row) in batch.rows.into_iter().enumerate() {
+            for (i, row) in rows {
                 let per_row: Result<Vec<Tensor>> = outputs
                     .iter()
                     .map(|o| o.slice_axis(0, i, i + 1))
@@ -688,7 +733,7 @@ pub fn scatter_results(batch: FormedBatch, result: Result<Vec<Tensor>>) {
         }
         Err(e) => {
             let msg = format!("batched execution failed: {e}");
-            for row in batch.rows {
+            for (_, row) in rows {
                 row.completion
                     .complete_from_drain(Err(anyhow::anyhow!(msg.clone())));
             }
@@ -700,26 +745,38 @@ pub fn scatter_results(batch: FormedBatch, result: Result<Vec<Tensor>>) {
 /// by the planned executor ([`crate::tina::Planned::run_rows`]): entry i
 /// holds request i's outputs, padding rows were never gathered at all.
 pub fn scatter_row_results(batch: FormedBatch, result: Result<Vec<Vec<Tensor>>>) {
+    scatter_indexed_row_results(batch.rows.into_iter().enumerate().collect(), result);
+}
+
+/// [`scatter_row_results`] over *indexed* rows: `per_row[i]` answers the
+/// pair `(i, row)`, where `i` is the row's position in the stacked batch
+/// input.  The executor must have gathered exactly `max index + 1` rows
+/// (shed or padding positions below that are gathered and ignored);
+/// indices must be ascending.
+pub fn scatter_indexed_row_results(rows: Vec<(usize, Pending)>, result: Result<Vec<Vec<Tensor>>>) {
+    let need = rows.last().map(|(i, _)| i + 1).unwrap_or(0);
     match result {
-        Ok(per_row) if per_row.len() == batch.rows.len() => {
-            for (row, outs) in batch.rows.into_iter().zip(per_row) {
+        Ok(mut per_row) if per_row.len() == need => {
+            // walk back-to-front so each take is an O(1) pop of the tail
+            for (i, row) in rows.into_iter().rev() {
+                per_row.truncate(i + 1);
+                let outs = per_row.pop().expect("per_row.len() == max index + 1");
                 row.completion.complete_from_drain(Ok(outs));
             }
         }
         Ok(per_row) => {
             let msg = format!(
-                "batched fallback returned {} row results for {} requests",
+                "batched fallback returned {} row results, expected {need}",
                 per_row.len(),
-                batch.rows.len()
             );
-            for row in batch.rows {
+            for (_, row) in rows {
                 row.completion
                     .complete_from_drain(Err(anyhow::anyhow!(msg.clone())));
             }
         }
         Err(e) => {
             let msg = format!("batched fallback execution failed: {e}");
-            for row in batch.rows {
+            for (_, row) in rows {
                 row.completion
                     .complete_from_drain(Err(anyhow::anyhow!(msg.clone())));
             }
@@ -755,6 +812,7 @@ mod tests {
             "fir",
             "test".into(),
             Instant::now(),
+            None,
             None,
         );
         (slot, c)
@@ -1075,6 +1133,113 @@ mod tests {
         drop(p2);
         assert_eq!(gate.in_flight(), 0);
         assert_eq!(m.inflight_batched_requests.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn acquire_timeout_fails_fast_at_saturation_and_admits_after_release() {
+        let m = Arc::new(Metrics::new());
+        let gate = InflightGate::new(1, Arc::clone(&m));
+        let held = gate.acquire();
+        let t0 = Instant::now();
+        assert!(
+            gate.acquire_timeout(Duration::from_millis(30)).is_none(),
+            "saturated gate must time out, not block"
+        );
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(29), "returned early: {dt:?}");
+        assert!(dt < Duration::from_secs(5), "blocked way past deadline: {dt:?}");
+        drop(held);
+        let p = gate
+            .acquire_timeout(Duration::from_millis(100))
+            .expect("freed gate must admit");
+        assert_eq!(gate.in_flight(), 1);
+        drop(p);
+        assert_eq!(m.inflight_batched_requests.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn completion_deadline_expiry_is_observable() {
+        let m = Arc::new(Metrics::new());
+        let slot: OneShot<Result<OpResponse>> = OneShot::new();
+        let c = Completion::new(
+            Arc::clone(&m),
+            slot.clone(),
+            "fir",
+            "test".into(),
+            Instant::now(),
+            None,
+            Some(Instant::now() - Duration::from_millis(1)),
+        );
+        assert!(c.deadline_expired(), "past deadline must read expired");
+        let fresh = throwaway(&m);
+        assert!(!fresh.deadline_expired(), "no deadline never expires");
+        c.fail(anyhow::anyhow!("deadline expired before execution"));
+        assert!(slot.try_take().expect("settled").is_err());
+    }
+
+    #[test]
+    fn indexed_scatter_routes_surviving_rows_to_their_batch_slots() {
+        // rows 0 and 2 survive a shed of row 1: each must read its own
+        // batch slot, and the executor gathers exactly max index + 1 rows
+        let m = Arc::new(Metrics::new());
+        let (s0, c0) = completion(&m);
+        let (s2, c2) = completion(&m);
+        let live = vec![
+            (
+                0usize,
+                Pending {
+                    input: Tensor::zeros(&[1, 4]),
+                    completion: c0,
+                    enqueued: Instant::now(),
+                },
+            ),
+            (
+                2usize,
+                Pending {
+                    input: Tensor::zeros(&[1, 4]),
+                    completion: c2,
+                    enqueued: Instant::now(),
+                },
+            ),
+        ];
+        let per_row = vec![
+            vec![Tensor::filled(&[1, 3], 0.0)],
+            vec![Tensor::filled(&[1, 3], 1.0)],
+            vec![Tensor::filled(&[1, 3], 2.0)],
+        ];
+        scatter_indexed_row_results(live, Ok(per_row));
+        assert_eq!(s0.try_take().unwrap().unwrap().outputs[0].data(), &[0.0; 3]);
+        assert_eq!(s2.try_take().unwrap().unwrap().outputs[0].data(), &[2.0; 3]);
+
+        // the dense-output variant slices the same way
+        let (s0, c0) = completion(&m);
+        let (s2, c2) = completion(&m);
+        let live = vec![
+            (
+                0usize,
+                Pending {
+                    input: Tensor::zeros(&[1, 4]),
+                    completion: c0,
+                    enqueued: Instant::now(),
+                },
+            ),
+            (
+                2usize,
+                Pending {
+                    input: Tensor::zeros(&[1, 4]),
+                    completion: c2,
+                    enqueued: Instant::now(),
+                },
+            ),
+        ];
+        let out = Tensor::new(
+            &[4, 3],
+            (0..4).flat_map(|i| [i as f32; 3]).collect::<Vec<_>>(),
+        )
+        .unwrap();
+        scatter_indexed_results(live, Ok(vec![out]));
+        assert_eq!(s0.try_take().unwrap().unwrap().outputs[0].data(), &[0.0; 3]);
+        assert_eq!(s2.try_take().unwrap().unwrap().outputs[0].data(), &[2.0; 3]);
     }
 
     #[test]

@@ -89,6 +89,21 @@ pub struct Metrics {
     pub plans_verified: AtomicU64,
     /// Total nanoseconds spent in the static plan verifier.
     pub verify_ns: AtomicU64,
+    /// Batch/direct executions that panicked and were contained by the
+    /// exec layer's `catch_unwind` (each fails only its own batch).
+    pub exec_panics: AtomicU64,
+    /// Plan keys quarantined after a panic or verification failure
+    /// (drained from `Router::take_quarantine_counters`).
+    pub quarantined_plans: AtomicU64,
+    /// Requests served by the interpreter oracle because their plan key
+    /// was quarantined (graceful degradation, bit-for-bit results).
+    pub degraded_requests: AtomicU64,
+    /// Batched rows shed before execution because their client deadline
+    /// had already expired.
+    pub shed_expired_rows: AtomicU64,
+    /// Requests refused at admission because the in-flight gate stayed
+    /// saturated past the admission timeout ("overloaded, retry-after").
+    pub admission_timeouts: AtomicU64,
     /// Plan-cache (hits, misses) per fallback bucket size B.
     plan_cache_buckets: Mutex<BTreeMap<usize, (u64, u64)>>,
     latency: Mutex<BTreeMap<String, Histogram>>,
@@ -234,6 +249,40 @@ impl Metrics {
         }
     }
 
+    /// Count one contained execution panic (the batch it belonged to
+    /// failed; the pool and every other batch survived).
+    pub fn record_exec_panic(&self) {
+        self.exec_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold in quarantine events drained from the router
+    /// (`Router::take_quarantine_counters`).
+    pub fn record_quarantined_plans(&self, n: u64) {
+        if n > 0 {
+            self.quarantined_plans.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Count `n` requests served via the interpreter oracle because their
+    /// plan key was quarantined.
+    pub fn record_degraded_requests(&self, n: u64) {
+        if n > 0 {
+            self.degraded_requests.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Count `n` rows shed pre-execution on an expired client deadline.
+    pub fn record_shed_expired_rows(&self, n: u64) {
+        if n > 0 {
+            self.shed_expired_rows.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one admission refused on a saturated in-flight gate.
+    pub fn record_admission_timeout(&self) {
+        self.admission_timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Fraction of executed batch rows (artifact + fallback buckets) that
     /// were real requests rather than padding.  1.0 when no batch has run
     /// yet (an empty history carries no padding waste).
@@ -258,7 +307,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} inflight_batched={} drain_completions={} adaptive_bucket_cap={} adaptive_bucket_wait_us={} adaptive_bucket_shrinks={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={} fused_steps={} fusion_eliminated_copies={} plans_verified={} verify_ns={}\n",
+            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} inflight_batched={} drain_completions={} adaptive_bucket_cap={} adaptive_bucket_wait_us={} adaptive_bucket_shrinks={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={} fused_steps={} fusion_eliminated_copies={} plans_verified={} verify_ns={} exec_panics={} quarantined_plans={} degraded_requests={} shed_expired_rows={} admission_timeouts={}\n",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -282,6 +331,11 @@ impl Metrics {
             self.fusion_eliminated_copies.load(Ordering::Relaxed),
             self.plans_verified.load(Ordering::Relaxed),
             self.verify_ns.load(Ordering::Relaxed),
+            self.exec_panics.load(Ordering::Relaxed),
+            self.quarantined_plans.load(Ordering::Relaxed),
+            self.degraded_requests.load(Ordering::Relaxed),
+            self.shed_expired_rows.load(Ordering::Relaxed),
+            self.admission_timeouts.load(Ordering::Relaxed),
         ));
         for (bucket, hits, misses) in self.plan_cache_bucket_stats() {
             out.push_str(&format!(
@@ -389,6 +443,30 @@ mod tests {
         assert!(r.contains("drain_completions=2"), "report: {r}");
         assert!(r.contains("adaptive_bucket_cap=2"), "report: {r}");
         assert!(r.contains("inflight_batched=1"), "report: {r}");
+    }
+
+    #[test]
+    fn fault_containment_counters_accumulate_and_report() {
+        let m = Metrics::new();
+        m.record_exec_panic();
+        m.record_quarantined_plans(0);
+        m.record_quarantined_plans(2);
+        m.record_degraded_requests(0);
+        m.record_degraded_requests(3);
+        m.record_shed_expired_rows(0);
+        m.record_shed_expired_rows(4);
+        m.record_admission_timeout();
+        assert_eq!(m.exec_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(m.quarantined_plans.load(Ordering::Relaxed), 2);
+        assert_eq!(m.degraded_requests.load(Ordering::Relaxed), 3);
+        assert_eq!(m.shed_expired_rows.load(Ordering::Relaxed), 4);
+        assert_eq!(m.admission_timeouts.load(Ordering::Relaxed), 1);
+        let r = m.report();
+        assert!(r.contains("exec_panics=1"), "report: {r}");
+        assert!(r.contains("quarantined_plans=2"), "report: {r}");
+        assert!(r.contains("degraded_requests=3"), "report: {r}");
+        assert!(r.contains("shed_expired_rows=4"), "report: {r}");
+        assert!(r.contains("admission_timeouts=1"), "report: {r}");
     }
 
     #[test]

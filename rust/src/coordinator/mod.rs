@@ -25,18 +25,32 @@
 //!
 //! # Completion-driven request lifecycle
 //!
-//! Replies to batched requests are completed *directly from the batch
-//! execution thread* — the request's response slot, op label, and submit
-//! timestamp `t0` travel through the batcher inside a
-//! [`batcher::Completion`], and the drain-side scatter finishes each
-//! response in place.  No thread-pool worker is ever parked on a relay
-//! wait, so in-flight batched concurrency is bounded only by the
-//! [`batcher::InflightGate`] ([`CoordinatorConfig::max_inflight_batched`],
-//! backpressure at enqueue), not by the pool size.  On top of the freed
-//! drain loop, the batcher sizes fallback buckets *adaptively*: a per-key
-//! EWMA of observed arrival rates picks the effective bucket cap and
-//! flush deadline, clipper-style, with the static [`BatcherConfig`]
-//! values as ceilings.
+//! Replies to batched requests are completed *directly from the exec-pool
+//! worker that ran the batch* — the request's response slot, op label,
+//! submit timestamp `t0`, and optional client deadline travel through the
+//! batcher inside a [`batcher::Completion`], and the drain-side scatter
+//! finishes each response in place.  No thread-pool worker is ever parked
+//! on a relay wait, so in-flight batched concurrency is bounded only by
+//! the [`batcher::InflightGate`]
+//! ([`CoordinatorConfig::max_inflight_batched`], bounded waiting at
+//! enqueue per [`CoordinatorConfig::admission_timeout`]), not by the pool
+//! size.  On top of the freed drain loop, the batcher sizes fallback
+//! buckets *adaptively*: a per-key EWMA of observed arrival rates picks
+//! the effective bucket cap and flush deadline, clipper-style, with the
+//! static [`BatcherConfig`] values as ceilings.
+//!
+//! # Fault containment
+//!
+//! Batches execute on a bounded, panic-isolating exec pool
+//! (`util::threadpool::ExecPool`), never on detached per-batch threads.
+//! A panicking kernel fails only its own batch's waiters; a poisoned
+//! fallback plan key is quarantined with capped exponential backoff while
+//! its traffic degrades to the bit-identical interpreter oracle; rows
+//! whose client deadline expired are shed before execution; and a
+//! saturated admission gate refuses work fast instead of queueing it
+//! unboundedly.  See `service` module docs ("Failure domains") for the
+//! full ladder, and `testing::faults` for the deterministic
+//! fault-injection harness the chaos suite drives these paths with.
 //!
 //! [`Metrics`] surfaces the model: `batched_fallback_requests`,
 //! `fallback_batches_executed`, `fallback_padded_rows`,
@@ -64,5 +78,5 @@ pub use batcher::{
 pub use metrics::Metrics;
 pub use pipeline::{Pipeline, Stage};
 pub use request::{ImplPref, OpKind, OpRequest, OpResponse, Precision};
-pub use router::{Router, RouterConfig, Target};
+pub use router::{PlanKey, Router, RouterConfig, Target};
 pub use service::{Coordinator, CoordinatorConfig};

@@ -119,6 +119,7 @@ impl Pipeline {
                         impl_pref: stage.impl_pref,
                         precision: stage.precision,
                         inputs,
+                        deadline: None,
                     })
                 })
                 .collect();

@@ -9,6 +9,7 @@
 
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
+use std::time::{Duration, Instant};
 
 /// The signal-processing operations TINA serves (paper Table 1 + §5.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -182,16 +183,22 @@ pub struct OpRequest {
     pub precision: Precision,
     /// Input tensors (arity per [`OpKind::expected_inputs`]).
     pub inputs: Vec<Tensor>,
+    /// Optional client deadline: a request whose deadline has passed is
+    /// shed (failed fast with a shed error) instead of executed — at
+    /// admission if already expired, or in the drain loop if it expires
+    /// while queued.  `None` (the default) never sheds.
+    pub deadline: Option<Instant>,
 }
 
 impl OpRequest {
-    /// Request with default routing (`Auto`, f32).
+    /// Request with default routing (`Auto`, f32) and no deadline.
     pub fn new(op: OpKind, inputs: Vec<Tensor>) -> OpRequest {
         OpRequest {
             op,
             impl_pref: ImplPref::Auto,
             precision: Precision::F32,
             inputs,
+            deadline: None,
         }
     }
 
@@ -204,6 +211,18 @@ impl OpRequest {
     /// Set the compute precision (builder style).
     pub fn with_precision(mut self, p: Precision) -> Self {
         self.precision = p;
+        self
+    }
+
+    /// Set a relative deadline: the request is shed if it has not begun
+    /// executing within `budget` of this call (builder style).
+    pub fn with_deadline(self, budget: Duration) -> Self {
+        self.with_deadline_at(Instant::now() + budget)
+    }
+
+    /// Set an absolute deadline (builder style).
+    pub fn with_deadline_at(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 

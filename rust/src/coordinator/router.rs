@@ -28,6 +28,11 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Bound on tracked quarantine entries: adversarial shape churn must not
+/// grow the map without limit (the entry closest to parole is dropped).
+const QUARANTINE_CAP: usize = 256;
 
 /// Fixed op parameters that are baked into artifacts as NN weights; the
 /// interpreter fallback regenerates the same values (DESIGN.md §6).
@@ -65,6 +70,20 @@ pub struct RouterConfig {
     /// is metered: the coordinator drains `plans_verified` / `verify_ns`
     /// into its metrics (see [`Router::take_verify_counters`]).
     pub verify_plans: bool,
+    /// Base quarantine backoff for a poisoned plan key.  A plan that
+    /// panics during execution or fails release-mode verification is
+    /// evicted and its `(op, shape, B)` key is quarantined for
+    /// `quarantine_backoff × 2^(strikes−1)` (capped at
+    /// [`quarantine_backoff_cap`](Self::quarantine_backoff_cap)); while
+    /// quarantined, traffic for the key degrades to the interpreter
+    /// oracle — bit-for-bit identical results, just slower.  After the
+    /// backoff expires the key is paroled: the next request recompiles
+    /// the plan, and a repeat offense doubles the backoff.
+    pub quarantine_backoff: Duration,
+    /// Ceiling on the exponential quarantine backoff — a persistently
+    /// poisoned key retries compilation at most this often, it is never
+    /// quarantined forever.
+    pub quarantine_backoff_cap: Duration,
 }
 
 impl Default for RouterConfig {
@@ -78,6 +97,8 @@ impl Default for RouterConfig {
             stft_hop: 128,
             plan_cache_cap: 64,
             verify_plans: false,
+            quarantine_backoff: Duration::from_secs(1),
+            quarantine_backoff_cap: Duration::from_secs(60),
         }
     }
 }
@@ -133,9 +154,22 @@ impl<V: Clone> LruMap<V> {
         }
     }
 
+    /// Remove an entry (poisoned-plan eviction); true when it existed.
+    fn remove(&mut self, k: &PlanKey) -> bool {
+        self.map.remove(k).is_some()
+    }
+
     fn len(&self) -> usize {
         self.map.len()
     }
+}
+
+/// Quarantine record for a poisoned plan key: strike count drives the
+/// exponential backoff; the entry survives past `until` so a repeat
+/// offense after parole escalates instead of starting over.
+struct QuarantineEntry {
+    strikes: u32,
+    until: Instant,
 }
 
 /// Where a request should execute.
@@ -192,6 +226,12 @@ pub struct Router {
     /// Nanoseconds the static verifier spent since the last drain
     /// (drained into `Metrics::verify_ns`).
     verify_ns: AtomicU64,
+    /// Poisoned plan keys under exponential backoff (plus their strike
+    /// history); bounded at [`QUARANTINE_CAP`].
+    quarantine: Mutex<HashMap<PlanKey, QuarantineEntry>>,
+    /// Quarantine events since the last drain (drained into
+    /// `Metrics::quarantined_plans`).
+    quarantined: AtomicU64,
 }
 
 impl Router {
@@ -208,6 +248,8 @@ impl Router {
             fusion_eliminated_copies: AtomicU64::new(0),
             plans_verified: AtomicU64::new(0),
             verify_ns: AtomicU64::new(0),
+            quarantine: Mutex::new(HashMap::new()),
+            quarantined: AtomicU64::new(0),
         }
     }
 
@@ -426,12 +468,16 @@ impl Router {
         )?);
         if cfg!(debug_assertions) || self.config.verify_plans {
             let t0 = std::time::Instant::now();
-            p.plan().verify().map_err(|e| {
-                anyhow!(
+            if let Err(e) = p.plan().verify() {
+                // a plan the verifier rejects is poisoned by construction:
+                // quarantine the key so traffic degrades to the oracle
+                // instead of re-compiling (and re-failing) per request
+                self.quarantine_key(key, "failed static verification");
+                bail!(
                     "plan for op {} shapes {shapes:?} failed static verification: {e}",
                     op.as_str()
-                )
-            })?;
+                );
+            }
             self.plans_verified.fetch_add(1, Ordering::Relaxed);
             self.verify_ns
                 .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -475,6 +521,82 @@ impl Router {
             self.plans_verified.swap(0, Ordering::Relaxed),
             self.verify_ns.swap(0, Ordering::Relaxed),
         )
+    }
+
+    /// Take (and reset) the quarantine-event count accumulated since the
+    /// last drain (drained into `Metrics::quarantined_plans`).
+    pub fn take_quarantine_counters(&self) -> u64 {
+        self.quarantined.swap(0, Ordering::Relaxed)
+    }
+
+    /// Quarantine a poisoned plan key: evict its compiled plan so nothing
+    /// serves from it again, and put the key under exponential backoff
+    /// ([`RouterConfig::quarantine_backoff`], doubling per strike, capped
+    /// at [`RouterConfig::quarantine_backoff_cap`]).  While quarantined,
+    /// the coordinator degrades the key's traffic to the interpreter
+    /// oracle.  Called when a plan panics during execution or fails
+    /// release-mode verification.
+    pub fn quarantine_key(&self, key: &PlanKey, reason: &str) {
+        self.exec_plans.lock().unwrap().remove(key);
+        let mut q = self.quarantine.lock().unwrap();
+        if !q.contains_key(key) && q.len() >= QUARANTINE_CAP {
+            // drop the entry expiring soonest: it is closest to parole, so
+            // losing its strike history costs the least
+            let soonest = q.iter().min_by_key(|(_, e)| e.until).map(|(k, _)| k.clone());
+            if let Some(k) = soonest {
+                q.remove(&k);
+            }
+        }
+        let now = Instant::now();
+        let e = q.entry(key.clone()).or_insert(QuarantineEntry {
+            strikes: 0,
+            until: now,
+        });
+        e.strikes = e.strikes.saturating_add(1);
+        let backoff = self
+            .config
+            .quarantine_backoff
+            .saturating_mul(1u32 << (e.strikes - 1).min(16))
+            .min(self.config.quarantine_backoff_cap);
+        e.until = now + backoff;
+        drop(q);
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "tina: quarantined plan key {:?} for {:?} ({reason}); serving via interpreter oracle",
+            key, backoff
+        );
+    }
+
+    /// Whether a plan key is currently quarantined (backoff not yet
+    /// expired).  Expired entries keep their strike history so a repeat
+    /// offense escalates the next backoff.
+    pub fn is_quarantined(&self, key: &PlanKey) -> bool {
+        let q = self.quarantine.lock().unwrap();
+        q.get(key).is_some_and(|e| e.until > Instant::now())
+    }
+
+    /// Get or build the interpreter oracle for (op, input shapes) with no
+    /// request object — the degraded-mode entry point the batch drain uses
+    /// while a bucketed plan key is quarantined.  Shares the oracle cache
+    /// with [`Router::interpreter`].
+    pub fn interpreter_for_shapes(
+        &self,
+        op: OpKind,
+        shapes: &[Vec<usize>],
+    ) -> Result<std::sync::Arc<Interpreter>> {
+        let key = PlanKey::for_shapes(op, shapes);
+        if let Some(it) = self.plans.lock().unwrap().get(&key) {
+            return Ok(it);
+        }
+        let graph = self.build_graph_for(op, shapes)?;
+        let it = std::sync::Arc::new(Interpreter::new(graph)?);
+        let evicted = self
+            .plans
+            .lock()
+            .unwrap()
+            .insert(key, std::sync::Arc::clone(&it));
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        Ok(it)
     }
 
     fn build_graph(&self, req: &OpRequest) -> Result<crate::tina::Graph> {
@@ -847,6 +969,99 @@ mod tests {
         let (_, hit) = r.planned_for_shapes(OpKind::Fir, &[vec![1, 256]]).unwrap();
         assert!(hit);
         assert_eq!(r.take_verify_counters().0, 0);
+    }
+
+    #[test]
+    fn quarantine_evicts_plan_and_expires_with_escalating_backoff() {
+        let reg =
+            Registry::from_manifest_text(PathBuf::from("/nonexistent"), MANIFEST).unwrap();
+        let r = Router::new(
+            reg,
+            RouterConfig {
+                quarantine_backoff: Duration::from_millis(30),
+                quarantine_backoff_cap: Duration::from_secs(60),
+                ..RouterConfig::default()
+            },
+        );
+        let key = PlanKey::for_shapes(OpKind::Fir, &[vec![1, 128]]);
+        let (_, hit) = r.planned_for_shapes(OpKind::Fir, &[vec![1, 128]]).unwrap();
+        assert!(!hit);
+        assert_eq!(r.cached_exec_plans(), 1);
+        assert!(!r.is_quarantined(&key));
+
+        r.quarantine_key(&key, "test poison");
+        assert!(r.is_quarantined(&key));
+        assert_eq!(r.cached_exec_plans(), 0, "poisoned plan must be evicted");
+        assert_eq!(r.take_quarantine_counters(), 1);
+        assert_eq!(r.take_quarantine_counters(), 0, "drain resets");
+
+        // parole: the backoff expires, the key serves (and recompiles) again
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(!r.is_quarantined(&key), "backoff must expire");
+        let (_, hit) = r.planned_for_shapes(OpKind::Fir, &[vec![1, 128]]).unwrap();
+        assert!(!hit, "paroled key recompiles");
+
+        // repeat offense: strike history survived parole, backoff doubles
+        // (60ms), so the key is still quarantined after the base 30ms
+        r.quarantine_key(&key, "test poison again");
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(
+            r.is_quarantined(&key),
+            "second strike must escalate the backoff past the base"
+        );
+        assert_eq!(r.take_quarantine_counters(), 1);
+    }
+
+    #[test]
+    fn quarantine_backoff_is_capped() {
+        let reg =
+            Registry::from_manifest_text(PathBuf::from("/nonexistent"), MANIFEST).unwrap();
+        let r = Router::new(
+            reg,
+            RouterConfig {
+                quarantine_backoff: Duration::from_millis(10),
+                quarantine_backoff_cap: Duration::from_millis(20),
+                ..RouterConfig::default()
+            },
+        );
+        let key = PlanKey::for_shapes(OpKind::Fir, &[vec![1, 64]]);
+        // many strikes: the backoff must stay at the cap, so the key still
+        // paroles quickly (never quarantined forever)
+        for _ in 0..40 {
+            r.quarantine_key(&key, "repeat offender");
+        }
+        assert!(r.is_quarantined(&key));
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!r.is_quarantined(&key), "capped backoff must still expire");
+    }
+
+    #[test]
+    fn quarantine_map_stays_bounded() {
+        let r = router();
+        for l in 0..QUARANTINE_CAP + 10 {
+            let key = PlanKey::for_shapes(OpKind::Fir, &[vec![1, 1000 + l]]);
+            r.quarantine_key(&key, "churn");
+        }
+        let q = r.quarantine.lock().unwrap();
+        assert!(q.len() <= QUARANTINE_CAP, "map must stay at the cap");
+    }
+
+    #[test]
+    fn interpreter_for_shapes_shares_the_oracle_cache() {
+        let r = router();
+        let x = Tensor::randn(&[1, 999], 11);
+        let req = OpRequest::new(OpKind::Fir, vec![x.clone()]).with_impl(ImplPref::Interp);
+        let Target::Interp { key } = r.route(&req).unwrap() else {
+            panic!()
+        };
+        let via_req = r.interpreter(&key, &req).unwrap();
+        assert_eq!(r.cached_plans(), 1);
+        let via_shapes = r.interpreter_for_shapes(OpKind::Fir, &[vec![1, 999]]).unwrap();
+        assert_eq!(r.cached_plans(), 1, "shape lookup must share the cache");
+        // both handles run the same oracle bit-for-bit
+        let a = via_req.run(std::slice::from_ref(&x)).unwrap();
+        let b = via_shapes.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(a[0].data(), b[0].data());
     }
 
     #[test]

@@ -13,12 +13,22 @@
 //! <- {"id": 2, "ok": true, "report": "..."}
 //! ```
 //!
-//! One thread per connection; the coordinator handles concurrency and
+//! One thread per connection, capped at [`MAX_CONNECTIONS`]; finished
+//! handler threads are reaped on every accept-loop pass, so a long-lived
+//! server does not accumulate dead `JoinHandle`s.  At the cap the accept
+//! loop parks new connections in the OS backlog instead of spawning.
+//! Transient `accept()` errors (EMFILE under fd pressure, aborted
+//! handshakes) are logged and retried after a short backoff — they never
+//! take the serving loop down.  The coordinator handles concurrency and
 //! backpressure internally (worker-queue backpressure for direct
 //! requests, the in-flight-batched admission gate for batched ones), so
 //! a connection thread blocked in `execute` never wedges other
 //! connections.  `latency_us` in the reply measures the same span the
 //! coordinator's histograms record: submit through completion.
+//!
+//! Requests may carry an optional `"deadline_ms"` budget: the coordinator
+//! sheds the request (fast error reply) if it cannot begin executing
+//! within that many milliseconds of being parsed.
 
 use super::request::{ImplPref, OpKind, OpRequest, Precision};
 use super::service::Coordinator;
@@ -29,6 +39,12 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+/// Most concurrent connection-handler threads the server will run.  At
+/// the cap, new connections wait in the OS accept backlog until a
+/// handler finishes — bounded fan-out instead of thread-per-connection
+/// exhaustion under a connection flood.
+pub const MAX_CONNECTIONS: usize = 256;
 
 /// Serve until `stop` flips true (tests) or forever (CLI).
 pub fn serve(coord: Arc<Coordinator>, addr: &str, stop: Arc<AtomicBool>) -> Result<()> {
@@ -43,22 +59,48 @@ pub fn serve_listener(
 ) -> Result<()> {
     listener.set_nonblocking(true)?;
     eprintln!("tina: serving on {}", listener.local_addr()?);
-    let mut conns = Vec::new();
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::Acquire) {
+        // reap finished handlers every pass so the vec tracks only live
+        // connections (a long-lived server must not grow without bound)
+        conns.retain(|h| !h.is_finished());
+        if conns.len() >= MAX_CONNECTIONS {
+            // at the cap: leave new connections in the OS backlog until a
+            // handler frees a slot
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            continue;
+        }
         match listener.accept() {
             Ok((stream, peer)) => {
-                stream.set_nonblocking(false)?;
+                if let Err(e) = stream.set_nonblocking(false) {
+                    eprintln!("tina: connection {peer}: {e}");
+                    continue;
+                }
                 let coord = Arc::clone(&coord);
-                conns.push(std::thread::spawn(move || {
-                    if let Err(e) = handle_connection(coord, stream) {
-                        eprintln!("tina: connection {peer}: {e}");
-                    }
-                }));
+                let spawned = std::thread::Builder::new()
+                    .name("tina-conn".into())
+                    .spawn(move || {
+                        if let Err(e) = handle_connection(coord, stream) {
+                            eprintln!("tina: connection {peer}: {e}");
+                        }
+                    });
+                match spawned {
+                    Ok(h) => conns.push(h),
+                    // a refused OS thread drops the stream (the client
+                    // sees a closed connection) but serving continues
+                    Err(e) => eprintln!("tina: connection thread spawn failed: {e}"),
+                }
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(std::time::Duration::from_millis(10));
             }
-            Err(e) => return Err(e.into()),
+            Err(e) => {
+                // transient accept failures — EMFILE/ENFILE under fd
+                // pressure, aborted handshakes, interrupts — must not
+                // take the serving loop down; back off and keep accepting
+                eprintln!("tina: accept error (backing off): {e}");
+                std::thread::sleep(std::time::Duration::from_millis(100));
+            }
         }
     }
     for c in conns {
@@ -163,13 +205,23 @@ fn handle_doc(coord: &Coordinator, doc: &Json) -> Result<Json> {
         .map(tensor_from_json)
         .collect::<Result<Vec<_>>>()?;
 
-    let t0 = std::time::Instant::now();
-    let resp = coord.execute(OpRequest {
+    let mut req = OpRequest {
         op,
         impl_pref,
         precision,
         inputs,
-    })?;
+        deadline: None,
+    };
+    if let Some(v) = doc.get("deadline_ms") {
+        let ms = v
+            .as_f64()
+            .filter(|ms| ms.is_finite() && *ms >= 0.0)
+            .ok_or_else(|| anyhow!("bad 'deadline_ms': expected a non-negative number"))?;
+        req = req.with_deadline(std::time::Duration::from_millis(ms as u64));
+    }
+
+    let t0 = std::time::Instant::now();
+    let resp = coord.execute(req)?;
     let latency_us = t0.elapsed().as_micros() as f64;
 
     Ok(Json::obj(vec![
@@ -279,6 +331,23 @@ mod tests {
         let resp = handle_line(&c, "{nope");
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
         assert!(resp.get("error").is_some());
+    }
+
+    #[test]
+    fn expired_deadline_over_protocol_is_shed() {
+        let c = coordinator();
+        let line = r#"{"id": 3, "op": "summation", "deadline_ms": 0,
+                       "inputs": [{"shape": [4], "data": [1, 2, 3, 4]}]}"#;
+        let resp = handle_line(&c, line);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let err = resp.get("error").and_then(Json::as_str).unwrap();
+        assert!(err.contains("shed"), "got: {err}");
+        let bad = handle_line(
+            &c,
+            r#"{"id": 4, "op": "summation", "deadline_ms": -5,
+                "inputs": [{"shape": [4], "data": [1, 2, 3, 4]}]}"#,
+        );
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

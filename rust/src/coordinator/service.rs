@@ -1,5 +1,6 @@
-//! The coordinator service: ties router, batcher, worker pool, engine
-//! handle and metrics into the serving object examples/benches/server use.
+//! The coordinator service: ties router, batcher, worker pool, exec pool,
+//! engine handle and metrics into the serving object examples/benches/server
+//! use.
 //!
 //! Request path (all rust, no python):
 //!
@@ -20,47 +21,83 @@
 //!
 //! # Completion-driven batched lifecycle
 //!
-//! Batched requests never touch the worker pool.  `submit` acquires an
-//! in-flight slot from the [`InflightGate`] (blocking = backpressure at
-//! enqueue, bounded by [`CoordinatorConfig::max_inflight_batched`]),
-//! wraps the response slot + op + `t0` into a
+//! Batched requests never touch the worker pool.  `submit` takes an
+//! in-flight slot from the [`InflightGate`] — waiting at most
+//! [`CoordinatorConfig::admission_timeout`]; a gate saturated past that
+//! fails the request fast with an "overloaded, retry later" error instead
+//! of queueing unbounded work — wraps the response slot + op + `t0` +
+//! optional client deadline into a
 //! [`Completion`](super::batcher::Completion), and enqueues it with the
-//! row.  The drain loop forms batches and hands each one to a detached
-//! per-batch execution thread, which completes every row's response
-//! *directly* from the scatter — for both the artifact engine path and
-//! the bucketed planned path.  Consequences the tests pin down:
+//! row.  The drain loop forms batches and hands each one to the bounded
+//! **exec pool** ([`ExecPool`], sized by
+//! [`CoordinatorConfig::exec_pool_size`]), which completes every row's
+//! response directly from the scatter — for both the artifact engine path
+//! and the bucketed planned path.  Consequences the tests pin down:
 //!
 //! * in-flight batched requests are capped by the gate, not by the
 //!   worker-pool size (`drain_completions == batched_fallback_requests`
 //!   proves no request relayed through a parked worker);
 //! * the drain loop itself never executes a batch, so a cold plan
-//!   compile or a slow bucket cannot head-of-line-block other keys;
+//!   compile or a slow bucket cannot head-of-line-block other keys
+//!   (beyond the bounded exec-pool queue, which backpressures the drain
+//!   loop when all exec workers are busy);
 //! * latency histograms measure from submit (`t0` rides the `Pending`).
+//!
+//! # Failure domains
+//!
+//! Execution faults are contained to the smallest unit that observed
+//! them; nothing a single poisoned request or kernel does can take the
+//! serving object down.  The ladder, from narrowest to widest:
+//!
+//! 1. **One row** — a row whose client deadline expired is shed (failed
+//!    fast, [`Metrics::shed_expired_rows`]) before the batch pays for its
+//!    execution; at admission, an already-expired request never routes.
+//! 2. **One batch** — a panic inside plan/engine execution is caught
+//!    (`catch_unwind`) by the exec worker: every waiter of that batch
+//!    gets an error (never a hang), [`Metrics::exec_panics`] increments,
+//!    and the pool thread survives to run the next batch.
+//! 3. **One plan key** — a fallback plan that panicked (or failed
+//!    release-mode verification) is evicted and its `(op, shape, B)` key
+//!    quarantined with capped exponential backoff
+//!    ([`RouterConfig::quarantine_backoff`]); while quarantined, traffic
+//!    for the key degrades to the interpreter oracle — bit-for-bit the
+//!    same results, slower — counted by [`Metrics::degraded_requests`].
+//! 4. **The service** — admission is deadline-aware: a saturated
+//!    in-flight gate refuses new batched work after
+//!    [`CoordinatorConfig::admission_timeout`]
+//!    ([`Metrics::admission_timeouts`]) instead of queueing unboundedly,
+//!    and [`Coordinator::shutdown`] drains the exec pool within
+//!    [`CoordinatorConfig::drain_deadline`], detaching stragglers rather
+//!    than hanging.
 
 use super::batcher::{
-    scatter_results, scatter_row_results, BatchKey, Batcher, BatcherConfig, Completion,
-    InflightGate,
+    scatter_indexed_results, scatter_indexed_row_results, BatchKey, Batcher, BatcherConfig,
+    Completion, FormedBatch, InflightGate, InflightPermit, Pending,
 };
 use super::metrics::Metrics;
-use super::request::{OpRequest, OpResponse};
-use super::router::{Router, RouterConfig, Target};
+use super::request::{OpKind, OpRequest, OpResponse};
+use super::router::{PlanKey, Router, RouterConfig, Target};
 use crate::runtime::{EngineHandle, Registry};
-use crate::util::threadpool::{OneShot, ThreadPool};
-use anyhow::Result;
+use crate::tensor::Tensor;
+use crate::util::threadpool::{ExecPool, OneShot, ThreadPool};
+use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Drain the router's accumulated counters — plan-cache evictions and
-/// fusion-pass stats — into the metrics sink.  Every serving path that
-/// may have compiled (or evicted) a plan calls this one helper, so a
-/// counter added to the router is surfaced on all arms at once.
+/// Drain the router's accumulated counters — plan-cache evictions,
+/// fusion-pass stats, verifier stats, and quarantine events — into the
+/// metrics sink.  Every serving path that may have compiled (or evicted,
+/// or quarantined) a plan calls this one helper, so a counter added to
+/// the router is surfaced on all arms at once.
 fn sync_router_counters(metrics: &Metrics, router: &Router) {
     metrics.record_plan_cache_evictions(router.take_plan_cache_evictions());
     let (fused, copies) = router.take_fusion_counters();
     metrics.record_plan_fusion(fused, copies);
     let (verified, ns) = router.take_verify_counters();
     metrics.record_plan_verification(verified, ns);
+    metrics.record_quarantined_plans(router.take_quarantine_counters());
 }
 
 /// Coordinator configuration.
@@ -74,14 +111,30 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Bound on the worker queue (backpressure).
     pub queue_capacity: usize,
-    /// Bound on in-flight *batched* requests: `submit` blocks at enqueue
-    /// once this many batched requests are admitted but not yet
-    /// completed.  This replaces the old implicit cap (one parked
-    /// worker per batched request, i.e. the pool size) with an explicit,
-    /// much higher admission limit.
+    /// Bound on in-flight *batched* requests: `submit` waits at enqueue
+    /// (at most [`CoordinatorConfig::admission_timeout`]) once this many
+    /// batched requests are admitted but not yet completed.
     pub max_inflight_batched: usize,
     /// Enable the dynamic batcher (ablation knob).
     pub batching: bool,
+    /// Worker threads in the bounded batch **exec pool**.  Formed batches
+    /// execute here — never on detached per-batch threads — so the number
+    /// of concurrent batch executions (and the OS threads backing them)
+    /// is fixed at construction.  Each worker wraps execution in
+    /// `catch_unwind`: a panicking kernel fails only its own batch's
+    /// waiters and the worker survives.  Clamped to ≥ 1.
+    pub exec_pool_size: usize,
+    /// Longest a batched `submit` waits for an in-flight slot — and the
+    /// drain loop for an exec-pool queue slot — before failing fast with
+    /// an "overloaded, retry later" error ([`Metrics::admission_timeouts`]).
+    /// Deadline-aware admission: bounded waiting instead of unbounded
+    /// queue growth when the service is saturated.
+    pub admission_timeout: Duration,
+    /// Longest [`Coordinator::shutdown`] waits for in-flight exec-pool
+    /// batches to finish.  Batches still running past the deadline are
+    /// detached (their waiters were already settled or will settle when
+    /// the straggler completes/unwinds); shutdown itself never hangs.
+    pub drain_deadline: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -93,6 +146,9 @@ impl Default for CoordinatorConfig {
             queue_capacity: 256,
             max_inflight_batched: 1024,
             batching: true,
+            exec_pool_size: 4,
+            admission_timeout: Duration::from_secs(5),
+            drain_deadline: Duration::from_secs(5),
         }
     }
 }
@@ -102,6 +158,7 @@ pub struct Coordinator {
     router: Arc<Router>,
     engine: EngineHandle,
     pool: ThreadPool,
+    exec_pool: Arc<ExecPool>,
     batcher: Arc<Batcher>,
     metrics: Arc<Metrics>,
     inflight: Arc<InflightGate>,
@@ -125,12 +182,17 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         let inflight = InflightGate::new(config.max_inflight_batched, Arc::clone(&metrics));
         let pool = ThreadPool::new(config.workers, config.queue_capacity);
+        let exec_pool = Arc::new(ExecPool::new(
+            config.exec_pool_size,
+            config.exec_pool_size.saturating_mul(4).max(4),
+        ));
         let stop = Arc::new(AtomicBool::new(false));
 
         let coord = Coordinator {
             router,
             engine,
             pool,
+            exec_pool,
             batcher,
             metrics,
             inflight,
@@ -149,7 +211,9 @@ impl Coordinator {
         let engine = self.engine.clone();
         let router = Arc::clone(&self.router);
         let metrics = Arc::clone(&self.metrics);
+        let exec_pool = Arc::clone(&self.exec_pool);
         let stop = Arc::clone(&self.stop);
+        let submit_wait = self.config.admission_timeout;
         // the static ceiling: an adaptive cap below it counts as a shrink
         let bucket_ceiling = self.batcher.config().max_bucket;
         let handle = std::thread::Builder::new()
@@ -162,59 +226,45 @@ impl Coordinator {
                     if let Some(d) = batch.adaptive {
                         metrics.record_adaptive_bucket(d.cap, d.wait, d.cap < bucket_ceiling);
                     }
-                    // Execution — including a cold plan compile on a
-                    // cache miss, and the response completions — runs on
-                    // a detached per-batch thread (`spawn_batch_exec`)
-                    // for BOTH arms: the drain loop keeps draining (no
-                    // head-of-line blocking of co-queued batches behind
-                    // a compile or a long bucket), and the worker pool
-                    // is never involved, so replies cannot be capped or
-                    // deadlocked by pool occupancy.
-                    match batch.key.clone() {
-                        BatchKey::Artifact { name, batch: b } => {
+                    // Execution — including a cold plan compile on a cache
+                    // miss, and the response completions — runs on the
+                    // bounded exec pool for BOTH arms: the drain loop
+                    // keeps draining while exec workers are free (no
+                    // head-of-line blocking of co-queued batches behind a
+                    // compile or a long bucket), the number of concurrent
+                    // batch executions is fixed, and a refused submit
+                    // (queue saturated past `submit_wait`, or pool closed
+                    // by shutdown) drops the closure — failing every
+                    // carried Completion — instead of wedging serving.
+                    let submitted = match batch.key.clone() {
+                        BatchKey::Artifact { name, batch: cap } => {
                             let engine = engine.clone();
                             let metrics = Arc::clone(&metrics);
-                            spawn_batch_exec(move || {
-                                let padding = b - batch.rows.len();
-                                let result = engine.execute(&name, vec![batch.input.clone()]);
-                                // success-only, like the fallback arm: a
-                                // failed execute must not inflate the
-                                // coalescing stats or the fill ratio
-                                if result.is_ok() {
-                                    metrics.record_batch(batch.rows.len(), padding);
-                                }
-                                scatter_results(batch, result);
-                            });
+                            let FormedBatch { input, rows, .. } = batch;
+                            exec_pool.submit_timeout(
+                                move || {
+                                    exec_artifact_batch(&engine, &metrics, &name, cap, &input, rows)
+                                },
+                                submit_wait,
+                            )
                         }
                         BatchKey::Fallback { op, len } => {
-                            // Bucketed fallback: one planned execution at
-                            // the coalesced batch size, outputs scattered
-                            // per row (padding rows are never gathered).
-                            // Within the batch the kernels fan rows
-                            // across scoped threads
-                            // (`util::threadpool::parallel_for`).
                             let router = Arc::clone(&router);
                             let metrics = Arc::clone(&metrics);
-                            spawn_batch_exec(move || {
-                                let bucket = batch.input.shape()[0];
-                                let rows_n = batch.rows.len();
-                                let result = router
-                                    .planned_for_shapes(op, &[vec![bucket, len]])
-                                    .and_then(|(plan, hit)| {
-                                        metrics.record_plan_cache_bucketed(bucket, hit);
-                                        sync_router_counters(&metrics, &router);
-                                        plan.run_rows(std::slice::from_ref(&batch.input), rows_n)
-                                    });
-                                // only successfully executed buckets
-                                // count — a failed lookup/run must not
-                                // inflate the coalescing stats or the
-                                // fill ratio
-                                if result.is_ok() {
-                                    metrics.record_fallback_batch(rows_n, bucket - rows_n);
-                                }
-                                scatter_row_results(batch, result);
-                            });
+                            let FormedBatch { input, rows, .. } = batch;
+                            exec_pool.submit_timeout(
+                                move || {
+                                    exec_fallback_batch(&router, &metrics, op, len, &input, rows)
+                                },
+                                submit_wait,
+                            )
                         }
+                    };
+                    if !submitted {
+                        eprintln!(
+                            "tina: exec pool refused a batch (saturated past {submit_wait:?}, \
+                             or closed); its rows fail"
+                        );
                     }
                 }
             })
@@ -254,15 +304,17 @@ impl Coordinator {
 
     /// Completion context for a request settling through this coordinator
     /// — the single `OpResponse` assembly point for every serving path.
+    /// `permit` is `Some` exactly for requests admitted through the
+    /// in-flight gate (batched paths).
     fn completion(
         &self,
         slot: &OneShot<Result<OpResponse>>,
         op: &'static str,
         served_by: String,
         t0: Instant,
-        batched: bool,
+        permit: Option<InflightPermit>,
+        deadline: Option<Instant>,
     ) -> Completion {
-        let permit = batched.then(|| self.inflight.acquire());
         Completion::new(
             Arc::clone(&self.metrics),
             slot.clone(),
@@ -270,13 +322,38 @@ impl Coordinator {
             served_by,
             t0,
             permit,
+            deadline,
         )
+    }
+
+    /// Fail a batched request whose admission wait timed out (the
+    /// in-flight gate stayed saturated past
+    /// [`CoordinatorConfig::admission_timeout`]).
+    fn refuse_overloaded(
+        &self,
+        slot: OneShot<Result<OpResponse>>,
+        op: &'static str,
+        t0: Instant,
+        deadline: Option<Instant>,
+    ) -> OneShot<Result<OpResponse>> {
+        self.metrics.record_admission_timeout();
+        self.completion(&slot, op, String::new(), t0, None, deadline)
+            .fail(anyhow!(
+                "overloaded: {} batched requests in flight held the admission gate for {:?}; \
+                 retry later",
+                self.config.max_inflight_batched,
+                self.config.admission_timeout
+            ));
+        slot
     }
 
     /// Submit asynchronously; the returned slot completes with the response.
     ///
-    /// Batched requests may block here briefly when the in-flight limit
-    /// is reached (backpressure at enqueue).
+    /// Batched requests may wait here briefly when the in-flight limit is
+    /// reached (backpressure at enqueue), but never longer than
+    /// [`CoordinatorConfig::admission_timeout`] — a saturated gate fails
+    /// the request fast instead.  A request whose
+    /// [`OpRequest::deadline`] already passed is shed immediately.
     pub fn submit(&self, req: OpRequest) -> OneShot<Result<OpResponse>> {
         let slot: OneShot<Result<OpResponse>> = OneShot::new();
         self.metrics.record_request();
@@ -286,11 +363,22 @@ impl Coordinator {
         sync_router_counters(&self.metrics, &self.router);
         let t0 = Instant::now();
         let op = req.op.as_str();
+        let deadline = req.deadline;
+
+        // deadline-aware admission: don't route (let alone execute) work
+        // whose client already gave up
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            self.metrics.record_shed_expired_rows(1);
+            self.completion(&slot, op, String::new(), t0, None, deadline)
+                .fail(anyhow!("deadline already expired at admission (request shed)"));
+            return slot;
+        }
 
         let target = match self.router.route_with_batching(&req, self.config.batching) {
             Ok(t) => t,
             Err(e) => {
-                self.completion(&slot, op, String::new(), t0, false).fail(e);
+                self.completion(&slot, op, String::new(), t0, None, deadline)
+                    .fail(e);
                 return slot;
             }
         };
@@ -304,17 +392,22 @@ impl Coordinator {
                     && req.inputs[0].shape()[0] == 1
                     && pad_batch > 1;
                 if batchable {
-                    // ride the dynamic batcher; the drain-side execution
-                    // thread completes the response directly
+                    // ride the dynamic batcher; the exec-pool execution
+                    // completes the response directly
+                    let Some(permit) = self.inflight.acquire_timeout(self.config.admission_timeout)
+                    else {
+                        return self.refuse_overloaded(slot, op, t0, deadline);
+                    };
                     let key = BatchKey::Artifact {
                         name: name.clone(),
                         batch: pad_batch,
                     };
-                    let completion = self.completion(&slot, op, name, t0, true);
+                    let completion = self.completion(&slot, op, name, t0, Some(permit), deadline);
                     self.batcher.enqueue(key, req.inputs[0].clone(), completion);
                 } else {
                     let engine = self.engine.clone();
-                    let completion = self.completion(&slot, op, name.clone(), t0, false);
+                    let completion =
+                        self.completion(&slot, op, name.clone(), t0, None, deadline);
                     let inputs = req.inputs;
                     self.pool.submit(move || {
                         completion.complete(engine.execute(&name, inputs));
@@ -339,11 +432,37 @@ impl Coordinator {
                     && req.inputs[0].rank() == 2
                     && req.inputs[0].shape()[0] == 1;
                 if bucketable {
+                    let Some(permit) = self.inflight.acquire_timeout(self.config.admission_timeout)
+                    else {
+                        return self.refuse_overloaded(slot, op, t0, deadline);
+                    };
                     let len = req.inputs[0].shape()[1];
                     let bkey = BatchKey::Fallback { op: req.op, len };
                     let input = req.inputs.into_iter().next().expect("checked arity");
-                    let completion = self.completion(&slot, op, format!("interp:{op}"), t0, true);
+                    let completion =
+                        self.completion(&slot, op, format!("interp:{op}"), t0, Some(permit), deadline);
                     self.batcher.enqueue(bkey, input, completion);
+                    return slot;
+                }
+                // degradation ladder: a quarantined key serves from the
+                // interpreter oracle (bit-for-bit, slower) while it backs
+                // off, instead of recompiling a plan known to be poisoned
+                if self.router.is_quarantined(&key) {
+                    self.metrics.record_degraded_requests(1);
+                    let interp = match self.router.interpreter(&key, &req) {
+                        Ok(it) => it,
+                        Err(e) => {
+                            self.completion(&slot, op, String::new(), t0, None, deadline)
+                                .fail(e);
+                            return slot;
+                        }
+                    };
+                    let completion =
+                        self.completion(&slot, op, format!("interp:{op}"), t0, None, deadline);
+                    let inputs = req.inputs;
+                    self.pool.submit(move || {
+                        completion.complete(interp.run(&inputs));
+                    });
                     return slot;
                 }
                 let planned = match self.router.planned(&key, &req) {
@@ -353,14 +472,35 @@ impl Coordinator {
                         p
                     }
                     Err(e) => {
-                        self.completion(&slot, op, String::new(), t0, false).fail(e);
+                        self.completion(&slot, op, String::new(), t0, None, deadline)
+                            .fail(e);
                         return slot;
                     }
                 };
-                let completion = self.completion(&slot, op, format!("interp:{op}"), t0, false);
+                let completion =
+                    self.completion(&slot, op, format!("interp:{op}"), t0, None, deadline);
                 let inputs = req.inputs;
+                let router = Arc::clone(&self.router);
+                let metrics = Arc::clone(&self.metrics);
                 self.pool.submit(move || {
-                    completion.complete(planned.run(&inputs));
+                    // same containment as the batched arms: a panicking
+                    // kernel fails this request and quarantines its key,
+                    // never the worker or the service
+                    let run = catch_unwind(AssertUnwindSafe(|| {
+                        crate::testing::faults::fire("exec.direct")?;
+                        planned.run(&inputs)
+                    }));
+                    match run {
+                        Ok(result) => completion.complete(result),
+                        Err(_) => {
+                            metrics.record_exec_panic();
+                            router.quarantine_key(&key, "panicked during direct execution");
+                            sync_router_counters(&metrics, &router);
+                            completion.fail(anyhow!(
+                                "op {op} execution panicked (contained); plan quarantined"
+                            ));
+                        }
+                    }
                 });
             }
         }
@@ -372,20 +512,37 @@ impl Coordinator {
         self.submit(req).wait()
     }
 
-    /// Stop the batch drain loop (called on drop too).  Rows still queued
-    /// in the batcher are failed here — after the drain thread has
-    /// exited — so waiters blocked on their response slots get an error
-    /// instead of hanging (a waiter typically holds the coordinator
-    /// alive, so relying on drop-time cleanup would deadlock).  The
-    /// batcher is closed in the same step: a batched request submitted
-    /// concurrently with (or after) shutdown fails fast at enqueue
-    /// instead of stranding in a queue no drain loop will visit.  Direct
-    /// (non-batched) requests keep running on the worker pool until the
-    /// coordinator drops.
+    /// Stop the batch drain loop and drain the exec pool (called on drop
+    /// too).  Shutdown order is the reverse of the data flow so no stage
+    /// feeds a stopped successor:
+    ///
+    /// 1. close the exec pool to new submits (a drain loop blocked in
+    ///    `submit_timeout` wakes and fails that batch's rows),
+    /// 2. stop + join the drain thread,
+    /// 3. [`ExecPool::shutdown_join`] bounded by
+    ///    [`CoordinatorConfig::drain_deadline`]: queued batches are
+    ///    dropped (their rows fail via `Completion`), in-flight batches
+    ///    get the deadline to finish, stragglers are detached,
+    /// 4. fail rows still queued in the batcher, closing it so late
+    ///    batched submits fail fast at enqueue.
+    ///
+    /// Waiters blocked on response slots therefore always settle — with
+    /// results when their batch finished in time, with errors otherwise —
+    /// and shutdown returns within roughly the drain deadline even with
+    /// faults (panics, slow kernels) in flight.  Direct (non-batched)
+    /// requests keep running on the worker pool until the coordinator
+    /// drops.
     pub fn shutdown(&self) {
+        self.exec_pool.close();
         self.stop.store(true, Ordering::Release);
         if let Some(h) = self.drain_thread.lock().unwrap().take() {
             let _ = h.join();
+        }
+        if !self.exec_pool.shutdown_join(self.config.drain_deadline) {
+            eprintln!(
+                "tina: exec pool did not drain within {:?}; stragglers detached",
+                self.config.drain_deadline
+            );
         }
         self.batcher
             .fail_pending("coordinator shut down before the batch executed");
@@ -398,20 +555,131 @@ impl Drop for Coordinator {
     }
 }
 
-/// Run one formed batch's execution + scatter on a detached thread.
-///
-/// `Builder::spawn` (not `thread::spawn`): a refused OS thread under
-/// resource pressure must not panic the drain loop.  On `Err` the un-run
-/// closure is dropped, dropping the rows' carried `Completion`s — which
-/// fails every request in the batch instead of wedging serving.  Replies
-/// flow through those completions, not a join, so the thread is detached
-/// on purpose; a panicking batch thread fails its rows the same way.
-fn spawn_batch_exec(work: impl FnOnce() + Send + 'static) {
-    let spawned = std::thread::Builder::new()
-        .name("tina-batch-exec".into())
-        .spawn(work);
-    if let Err(e) = spawned {
-        eprintln!("tina: batch exec spawn failed: {e}");
+/// Shed the rows of a formed batch whose client deadline already expired:
+/// each is failed fast ([`Metrics::shed_expired_rows`]) before the batch
+/// pays for execution.  Survivors keep their original batch-slot index so
+/// the scatter can still address the stacked outputs.
+fn shed_expired(rows: Vec<Pending>, metrics: &Metrics) -> Vec<(usize, Pending)> {
+    let mut live = Vec::with_capacity(rows.len());
+    let mut shed = 0u64;
+    for (i, row) in rows.into_iter().enumerate() {
+        if row.completion.deadline_expired() {
+            shed += 1;
+            row.completion
+                .fail(anyhow!("deadline expired before batch execution (row shed)"));
+        } else {
+            live.push((i, row));
+        }
+    }
+    metrics.record_shed_expired_rows(shed);
+    live
+}
+
+/// Execute one artifact batch on an exec-pool worker: shed expired rows,
+/// run the engine under `catch_unwind`, scatter per-row outputs.  A panic
+/// fails only this batch's waiters ([`Metrics::exec_panics`]); artifacts
+/// have no plan key, so there is nothing to quarantine.
+fn exec_artifact_batch(
+    engine: &EngineHandle,
+    metrics: &Metrics,
+    name: &str,
+    cap: usize,
+    input: &Tensor,
+    rows: Vec<Pending>,
+) {
+    let live = shed_expired(rows, metrics);
+    if live.is_empty() {
+        return;
+    }
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        crate::testing::faults::fire("exec.batch.artifact")?;
+        engine.execute(name, vec![input.clone()])
+    }));
+    match result {
+        Ok(result) => {
+            // success-only: a failed execute must not inflate the
+            // coalescing stats or the fill ratio
+            if result.is_ok() {
+                metrics.record_batch(live.len(), cap - live.len());
+            }
+            scatter_indexed_results(live, result);
+        }
+        Err(_) => {
+            metrics.record_exec_panic();
+            for (_, row) in live {
+                row.completion.fail(anyhow!(
+                    "artifact '{name}' batch panicked during execution (contained; batch failed)"
+                ));
+            }
+        }
+    }
+}
+
+/// Execute one bucketed fallback batch on an exec-pool worker: shed
+/// expired rows, serve from the interpreter oracle if the `(op, shape, B)`
+/// key is quarantined, otherwise run the planned executor under
+/// `catch_unwind` — a panic quarantines the key and fails only this
+/// batch's waiters.  Within the batch the kernels fan rows across scoped
+/// threads (`util::threadpool::parallel_for`).
+fn exec_fallback_batch(
+    router: &Arc<Router>,
+    metrics: &Metrics,
+    op: OpKind,
+    len: usize,
+    input: &Tensor,
+    rows: Vec<Pending>,
+) {
+    let live = shed_expired(rows, metrics);
+    if live.is_empty() {
+        return;
+    }
+    let bucket = input.shape()[0];
+    // rows above the last survivor (shed, or padding) are never gathered
+    let gather_n = live.last().map(|(i, _)| i + 1).expect("live is non-empty");
+    let shapes = [vec![bucket, len]];
+    let key = PlanKey::for_shapes(op, &shapes);
+    if router.is_quarantined(&key) {
+        // degradation ladder: the interpreter oracle runs the same graph
+        // node-at-a-time — bit-for-bit the planned result, slower — while
+        // the quarantined key backs off
+        metrics.record_degraded_requests(live.len() as u64);
+        let result = router
+            .interpreter_for_shapes(op, &shapes)
+            .and_then(|it| it.run(std::slice::from_ref(input)));
+        sync_router_counters(metrics, router);
+        scatter_indexed_results(live, result);
+        return;
+    }
+    let exec = catch_unwind(AssertUnwindSafe(|| {
+        crate::testing::faults::fire("exec.batch.fallback")?;
+        router.planned_for_shapes(op, &shapes).and_then(|(plan, hit)| {
+            metrics.record_plan_cache_bucketed(bucket, hit);
+            sync_router_counters(metrics, router);
+            plan.run_rows(std::slice::from_ref(input), gather_n)
+        })
+    }));
+    match exec {
+        Ok(result) => {
+            // only successfully executed buckets count — a failed
+            // lookup/run must not inflate the coalescing stats or the
+            // fill ratio
+            if result.is_ok() {
+                metrics.record_fallback_batch(live.len(), bucket - live.len());
+            }
+            scatter_indexed_row_results(live, result);
+        }
+        Err(_) => {
+            metrics.record_exec_panic();
+            router.quarantine_key(&key, "panicked during batched execution");
+            sync_router_counters(metrics, router);
+            for (_, row) in live {
+                row.completion.fail(anyhow!(
+                    "op {} bucket B={bucket} panicked during execution (contained); \
+                     plan quarantined",
+                    op.as_str()
+                ));
+            }
+        }
     }
 }
 
@@ -569,7 +837,7 @@ mod tests {
         let batches = m.fallback_batches_executed.load(Ordering::Relaxed);
         assert!(batches >= 1, "at least one bucket must have executed");
         // completion-driven serving: every batched reply was finished by
-        // a drain-side execution thread, none by a parked worker relay
+        // an exec-pool execution, none by a parked worker relay
         assert_eq!(
             m.drain_completions.load(Ordering::Relaxed),
             5,
@@ -589,6 +857,12 @@ mod tests {
         assert_eq!(lookups, batches, "one bucketed plan lookup per batch");
         let fill = m.batch_fill_ratio();
         assert!(fill > 0.0 && fill <= 1.0, "fill ratio out of range: {fill}");
+        // fault-free traffic must leave every containment counter at zero
+        assert_eq!(m.exec_panics.load(Ordering::Relaxed), 0);
+        assert_eq!(m.quarantined_plans.load(Ordering::Relaxed), 0);
+        assert_eq!(m.degraded_requests.load(Ordering::Relaxed), 0);
+        assert_eq!(m.shed_expired_rows.load(Ordering::Relaxed), 0);
+        assert_eq!(m.admission_timeouts.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -630,7 +904,7 @@ mod tests {
 
     #[test]
     fn inflight_limit_backpressures_but_stays_live() {
-        // a tiny in-flight limit forces submit() to block at enqueue;
+        // a tiny in-flight limit forces submit() to wait at enqueue;
         // the drain loop must keep freeing slots so every request still
         // completes (liveness of the backpressure path)
         let c = Coordinator::new(
@@ -647,7 +921,7 @@ mod tests {
         let mut slots = Vec::new();
         for i in 0..n {
             let x = Tensor::randn(&[1, 128], i as u64);
-            // sequential submits: the 3rd+ block until the drain thread
+            // sequential submits: the 3rd+ wait until the exec pool
             // completes earlier rows, then proceed
             slots.push(c.submit(OpRequest::new(OpKind::Fir, vec![x])));
         }
@@ -657,6 +931,136 @@ mod tests {
         let m = c.metrics();
         assert_eq!(m.completed.load(Ordering::Relaxed), n as u64);
         assert_eq!(m.inflight_batched_requests.load(Ordering::Relaxed), 0);
+        assert_eq!(m.admission_timeouts.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_admission() {
+        let c = empty_coordinator(true);
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::randn(&[1, 128], 1)])
+            .with_deadline_at(Instant::now() - Duration::from_millis(5));
+        let err = c.submit(req).wait().unwrap_err();
+        assert!(err.to_string().contains("shed"), "got: {err}");
+        let m = c.metrics();
+        assert_eq!(m.shed_expired_rows.load(Ordering::Relaxed), 1);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        // a generous deadline never sheds
+        let ok = c.execute(
+            OpRequest::new(OpKind::Fir, vec![Tensor::randn(&[1, 128], 2)])
+                .with_deadline(Duration::from_secs(60)),
+        );
+        assert!(ok.is_ok());
+        assert_eq!(m.shed_expired_rows.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn admission_times_out_when_gate_stays_saturated() {
+        // one in-flight slot, held by a row parked in a never-flushing
+        // batcher: the second batched submit must fail fast with an
+        // overload error instead of waiting forever
+        let c = Coordinator::new(
+            empty_registry(),
+            CoordinatorConfig {
+                batching: true,
+                workers: 2,
+                max_inflight_batched: 1,
+                admission_timeout: Duration::from_millis(50),
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_secs(60),
+                    max_bucket: 8,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let parked = c.submit(OpRequest::new(
+            OpKind::Fir,
+            vec![Tensor::randn(&[1, 128], 1)],
+        ));
+        let err = c
+            .submit(OpRequest::new(
+                OpKind::Fir,
+                vec![Tensor::randn(&[1, 128], 2)],
+            ))
+            .wait()
+            .unwrap_err();
+        assert!(err.to_string().contains("overloaded"), "got: {err}");
+        assert_eq!(c.metrics().admission_timeouts.load(Ordering::Relaxed), 1);
+        c.shutdown();
+        assert!(parked.wait().is_err(), "parked row fails at shutdown");
+        assert_eq!(
+            c.metrics().inflight_batched_requests.load(Ordering::Relaxed),
+            0
+        );
+    }
+
+    #[test]
+    fn quarantined_direct_key_degrades_to_interpreter() {
+        let c = Coordinator::new(
+            empty_registry(),
+            CoordinatorConfig {
+                batching: false,
+                workers: 2,
+                router: RouterConfig {
+                    quarantine_backoff: Duration::from_millis(40),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let x = Tensor::randn(&[2, 64], 3);
+        let req = OpRequest::new(OpKind::Dft, vec![x.clone()]);
+        let Target::Interp { key } = c.router().route(&req).unwrap() else {
+            panic!("expected interp target");
+        };
+        let baseline = c.execute(req.clone()).unwrap();
+        c.router().quarantine_key(&key, "test");
+        let degraded = c.execute(req.clone()).unwrap();
+        assert_eq!(degraded.served_by, "interp:dft", "stable served_by contract");
+        assert_eq!(c.metrics().degraded_requests.load(Ordering::Relaxed), 1);
+        for (a, b) in degraded.outputs.iter().zip(&baseline.outputs) {
+            assert_eq!(a, b, "degraded mode must be bit-for-bit the planned result");
+        }
+        // after the backoff expires the key is paroled: the planned path
+        // serves again and the degraded counter stops moving
+        std::thread::sleep(Duration::from_millis(60));
+        c.execute(req).unwrap();
+        assert_eq!(c.metrics().degraded_requests.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn quarantined_bucket_degrades_batched_traffic_bitwise() {
+        // max_bucket 1 pins the bucketed plan key to (op, [1, L])
+        let c = Coordinator::new(
+            empty_registry(),
+            CoordinatorConfig {
+                batching: true,
+                workers: 2,
+                batcher: BatcherConfig {
+                    max_bucket: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let x = Tensor::randn(&[1, 300], 7);
+        let baseline = c
+            .execute(OpRequest::new(OpKind::Fir, vec![x.clone()]))
+            .unwrap();
+        let key = PlanKey::for_shapes(OpKind::Fir, &[vec![1, 300]]);
+        c.router().quarantine_key(&key, "test");
+        let degraded = c
+            .execute(OpRequest::new(OpKind::Fir, vec![x.clone()]))
+            .unwrap();
+        assert!(degraded.batched, "degraded traffic still rides the batcher");
+        assert_eq!(degraded.served_by, "interp:fir");
+        assert_eq!(c.metrics().degraded_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(degraded.outputs.len(), baseline.outputs.len());
+        for (a, b) in degraded.outputs.iter().zip(&baseline.outputs) {
+            assert_eq!(a, b, "degraded bucket must be bit-for-bit the planned result");
+        }
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Deterministic fault-injection harness for the chaos test suite.
+//!
+//! The serving stack calls [`fire`] / [`refused`] at a handful of *named
+//! sites* (batch execution, direct execution, exec-pool submit, admission
+//! gate).  Without the `fault-injection` cargo feature both hooks compile
+//! to inlined no-ops, so production builds carry zero overhead.  With the
+//! feature enabled, tests [`arm`] a site with a [`Fault`] and a firing
+//! [`Mode`]; decisions are a pure function of `(seed, site, hit index)`,
+//! so a given seed replays the exact same fault schedule on every run.
+//!
+//! The registry is **process-global**: chaos tests serialize on a shared
+//! mutex and call [`reset`] before and after each scenario so armed rules
+//! never leak across tests (`rust/tests/chaos.rs`).
+//!
+//! Named sites currently wired into the stack:
+//!
+//! | site                  | hook      | effect when armed                      |
+//! |-----------------------|-----------|----------------------------------------|
+//! | `plan.execute`        | [`fire`]  | inside `ExecPlan` step execution       |
+//! | `exec.batch.fallback` | [`fire`]  | bucketed fallback batch, pre-execution |
+//! | `exec.batch.artifact` | [`fire`]  | artifact batch, pre-execution          |
+//! | `exec.direct`         | [`fire`]  | direct (unbatched) path, pre-execution |
+//! | `exec_pool.submit`    | [`refused`] | exec pool rejects the batch job      |
+//! | `gate.acquire`        | [`refused`] | admission gate reports saturation    |
+
+#[cfg(feature = "fault-injection")]
+pub use imp::{arm, hits, reset, Fault, Mode};
+
+/// Evaluate the named fault site.
+///
+/// Returns `Err` for an armed engine-error fault, panics for an armed
+/// panic fault, sleeps (then returns `Ok`) for an armed slow fault, and
+/// returns `Ok(())` otherwise.  A no-op without the `fault-injection`
+/// feature.
+#[cfg(not(feature = "fault-injection"))]
+#[inline(always)]
+pub fn fire(_site: &str) -> anyhow::Result<()> {
+    Ok(())
+}
+
+/// Whether the named refusal site (spawn refusal, gate saturation) is
+/// armed and fires on this hit.  Always `false` without the
+/// `fault-injection` feature.
+#[cfg(not(feature = "fault-injection"))]
+#[inline(always)]
+pub fn refused(_site: &str) -> bool {
+    false
+}
+
+#[cfg(feature = "fault-injection")]
+pub use imp::{fire, refused};
+
+#[cfg(feature = "fault-injection")]
+mod imp {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Duration;
+
+    /// What an armed site does when its [`Mode`] says it fires.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Fault {
+        /// `panic!` at the site (exercises `catch_unwind` containment).
+        Panic,
+        /// Sleep for the given duration, then proceed normally.
+        Slow(Duration),
+        /// Return an `anyhow` error from the site.
+        Error,
+        /// Report refusal at a [`refused`]-style site (spawn refusal /
+        /// gate saturation).  Ignored by [`fire`] sites.
+        Refuse,
+    }
+
+    /// How often an armed site fires.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Mode {
+        /// Fire on the first `n` hits, then behave normally.
+        Times(u64),
+        /// Fire on every hit until [`reset`].
+        Always,
+        /// Fire on roughly `percent`% of hits, decided by a deterministic
+        /// hash of `(seed, site, hit index)` — the same seed replays the
+        /// same schedule.
+        Ratio {
+            /// Seed mixed into the per-hit decision hash.
+            seed: u64,
+            /// Firing probability in percent, clamped to 0..=100.
+            percent: u8,
+        },
+    }
+
+    struct Rule {
+        fault: Fault,
+        mode: Mode,
+        fired: u64,
+    }
+
+    #[derive(Default)]
+    struct Registry {
+        rules: HashMap<String, Rule>,
+        hits: HashMap<String, u64>,
+    }
+
+    fn registry() -> &'static Mutex<Registry> {
+        static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+        REG.get_or_init(|| Mutex::new(Registry::default()))
+    }
+
+    /// FNV-1a over the site name, splitmix-finalized with the seed and
+    /// hit index: a cheap, dependency-free deterministic decision hash.
+    fn decision_hash(seed: u64, site: &str, hit: u64) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in site.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        let mut z = h ^ seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ hit;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Arm `site` with a fault and firing mode, replacing any prior rule
+    /// (and resetting its fired count, not its hit count).
+    pub fn arm(site: &str, fault: Fault, mode: Mode) {
+        let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        reg.rules.insert(site.to_string(), Rule { fault, mode, fired: 0 });
+    }
+
+    /// Clear every armed rule and hit counter.  Chaos tests call this
+    /// before and after each scenario; the registry is process-global.
+    pub fn reset() {
+        let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        reg.rules.clear();
+        reg.hits.clear();
+    }
+
+    /// Number of times `site` has been evaluated since the last [`reset`]
+    /// (fired or not) — lets tests assert a site was actually reached.
+    pub fn hits(site: &str) -> u64 {
+        let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        reg.hits.get(site).copied().unwrap_or(0)
+    }
+
+    /// Decide (under the registry lock) what `site` does on this hit.
+    fn decide(site: &str, refusal: bool) -> Option<Fault> {
+        let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        let hit = {
+            let h = reg.hits.entry(site.to_string()).or_insert(0);
+            let now = *h;
+            *h += 1;
+            now
+        };
+        let rule = reg.rules.get_mut(site)?;
+        if refusal != matches!(rule.fault, Fault::Refuse) {
+            return None;
+        }
+        let fires = match rule.mode {
+            Mode::Times(n) => rule.fired < n,
+            Mode::Always => true,
+            Mode::Ratio { seed, percent } => {
+                decision_hash(seed, site, hit) % 100 < percent.min(100) as u64
+            }
+        };
+        if fires {
+            rule.fired += 1;
+            Some(rule.fault)
+        } else {
+            None
+        }
+    }
+
+    /// Evaluate the named fault site (see module docs for the table).
+    pub fn fire(site: &str) -> anyhow::Result<()> {
+        match decide(site, false) {
+            Some(Fault::Panic) => panic!("fault-injection: injected panic at {site}"),
+            Some(Fault::Slow(d)) => {
+                // sleep outside the registry lock (decide() released it)
+                std::thread::sleep(d);
+                Ok(())
+            }
+            Some(Fault::Error) => Err(anyhow::anyhow!("fault-injection: injected error at {site}")),
+            Some(Fault::Refuse) | None => Ok(()),
+        }
+    }
+
+    /// Whether the named refusal site fires on this hit.
+    pub fn refused(site: &str) -> bool {
+        matches!(decide(site, true), Some(Fault::Refuse))
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        // The registry is process-global; these unit tests share it with
+        // nothing else in the lib target, but still serialize for safety.
+        fn serial() -> std::sync::MutexGuard<'static, ()> {
+            static LOCK: Mutex<()> = Mutex::new(());
+            LOCK.lock().unwrap_or_else(|e| e.into_inner())
+        }
+
+        #[test]
+        fn times_mode_fires_exactly_n() {
+            let _g = serial();
+            reset();
+            arm("t.site", Fault::Error, Mode::Times(2));
+            assert!(fire("t.site").is_err());
+            assert!(fire("t.site").is_err());
+            assert!(fire("t.site").is_ok());
+            assert_eq!(hits("t.site"), 3);
+            reset();
+        }
+
+        #[test]
+        fn ratio_mode_is_deterministic() {
+            let _g = serial();
+            reset();
+            arm("r.site", Fault::Error, Mode::Ratio { seed: 7, percent: 50 });
+            let first: Vec<bool> = (0..64).map(|_| fire("r.site").is_err()).collect();
+            reset();
+            arm("r.site", Fault::Error, Mode::Ratio { seed: 7, percent: 50 });
+            let second: Vec<bool> = (0..64).map(|_| fire("r.site").is_err()).collect();
+            assert_eq!(first, second, "same seed must replay the same schedule");
+            assert!(first.iter().any(|&f| f), "50% over 64 hits should fire");
+            assert!(!first.iter().all(|&f| f), "…but not on every hit");
+            reset();
+        }
+
+        #[test]
+        fn refusal_sites_ignore_fire_and_vice_versa() {
+            let _g = serial();
+            reset();
+            arm("x.site", Fault::Refuse, Mode::Always);
+            assert!(fire("x.site").is_ok(), "fire ignores Refuse rules");
+            assert!(refused("x.site"));
+            arm("x.site", Fault::Error, Mode::Always);
+            assert!(!refused("x.site"), "refused ignores fire-style rules");
+            assert!(fire("x.site").is_err());
+            reset();
+        }
+
+        #[test]
+        fn unarmed_sites_are_quiet() {
+            let _g = serial();
+            reset();
+            assert!(fire("nobody.armed.this").is_ok());
+            assert!(!refused("nobody.armed.this"));
+            reset();
+        }
+    }
+}

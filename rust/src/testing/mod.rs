@@ -1,4 +1,7 @@
 //! Test support: a property-based testing mini-framework (proptest is
-//! unavailable offline) used by unit tests and `rust/tests/properties.rs`.
+//! unavailable offline) used by unit tests and `rust/tests/properties.rs`,
+//! plus the deterministic fault-injection harness behind the
+//! `fault-injection` feature (no-op hooks otherwise).
 
+pub mod faults;
 pub mod prop;

@@ -1417,6 +1417,11 @@ impl ExecPlan {
     /// Validate inputs against the declared shapes and run the kernel
     /// schedule; on return the arena holds every live output backing.
     fn execute_steps(&self, arena: &mut Arena, inputs: &[Tensor]) -> Result<()> {
+        // deterministic fault-injection site (no-op unless the
+        // `fault-injection` feature armed it): the chaos suite makes
+        // plan execution panic, stall, or error here to prove the
+        // serving layer contains kernel faults
+        crate::testing::faults::fire("plan.execute")?;
         if inputs.len() != self.input_shapes.len() {
             bail!(
                 "expected {} inputs, got {}",

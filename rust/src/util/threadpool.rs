@@ -1,11 +1,16 @@
-//! Fixed-size worker pool with bounded queues (tokio/rayon are unavailable
-//! offline).  Powers the coordinator's scheduler and the optimized CPU
-//! baseline's data-parallel loops.
+//! Fixed-size worker pools with bounded queues (tokio/rayon are unavailable
+//! offline).  [`ThreadPool`] powers the coordinator's direct-path scheduler
+//! and the optimized CPU baseline's data-parallel loops; [`ExecPool`] is the
+//! fault-contained batch execution pool — named workers, `catch_unwind`
+//! panic isolation, bounded submit, and a deadline-bounded drain on
+//! shutdown.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -15,6 +20,7 @@ struct Shared {
     slot_free: Condvar,
     capacity: usize,
     shutdown: AtomicBool,
+    panics: AtomicU64,
 }
 
 /// A fixed pool of worker threads consuming a bounded FIFO of jobs.
@@ -37,6 +43,7 @@ impl ThreadPool {
             slot_free: Condvar::new(),
             capacity: queue_capacity,
             shutdown: AtomicBool::new(false),
+            panics: AtomicU64::new(0),
         });
         let workers = (0..threads)
             .map(|i| {
@@ -78,6 +85,11 @@ impl ThreadPool {
         true
     }
 
+    /// Number of submitted jobs that panicked (contained; the worker
+    /// survives and keeps draining the queue).
+    pub fn panics(&self) -> u64 {
+        self.shared.panics.load(Ordering::Relaxed)
+    }
 }
 
 /// Data-parallel index loop over scoped threads (the rayon substitute used
@@ -159,7 +171,14 @@ fn worker_loop(shared: Arc<Shared>) {
                 q = shared.job_ready.wait(q).unwrap();
             }
         };
-        job();
+        // Panic containment: a panicking job must not kill the worker —
+        // under the old bare `job()` a single panic permanently shrank
+        // the pool.  Unwind safety is asserted because a job's captured
+        // state dies with the job (`Completion::drop` fails its waiters).
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            shared.panics.fetch_add(1, Ordering::Relaxed);
+            eprintln!("tina: pool job panicked (contained; worker continues)");
+        }
     }
 }
 
@@ -169,6 +188,222 @@ impl Drop for ThreadPool {
         self.shared.job_ready.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ExecPool: fault-contained batch execution
+// ---------------------------------------------------------------------------
+
+struct ExecState {
+    queue: VecDeque<Job>,
+    live_workers: usize,
+}
+
+struct ExecShared {
+    state: Mutex<ExecState>,
+    job_ready: Condvar,
+    slot_free: Condvar,
+    worker_done: Condvar,
+    capacity: usize,
+    /// No new submissions accepted (set by [`ExecPool::close`]).
+    closed: AtomicBool,
+    /// Workers exit once the queue is empty (set by `shutdown_join`).
+    stopping: AtomicBool,
+    panics: AtomicU64,
+}
+
+/// Bounded, named execution pool for batch jobs — the replacement for the
+/// old detached `spawn_batch_exec` per-batch threads.
+///
+/// Fault-containment properties:
+///
+/// * **Panic isolation.** Workers run each job under `catch_unwind`; a
+///   panicking kernel fails only its own batch (dropping the job's
+///   captured `Completion`s errors every waiter) and the worker survives.
+/// * **Bounded admission.** [`submit_timeout`](Self::submit_timeout)
+///   refuses (returns `false`, dropping the job → waiters error) instead
+///   of blocking forever when the queue stays full past the deadline, so
+///   a wedged pool turns into fast failures, not a spawn storm or a hang.
+/// * **Bounded drain.** [`shutdown_join`](Self::shutdown_join) drops
+///   queued jobs (failing their waiters immediately), waits for in-flight
+///   jobs up to a deadline, then *detaches* stragglers — a stuck kernel
+///   cannot wedge coordinator shutdown.
+pub struct ExecPool {
+    shared: Arc<ExecShared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    threads: usize,
+}
+
+impl ExecPool {
+    /// Spawn `threads` workers (named `tina-exec-{i}`) sharing a bounded
+    /// queue of `queue_capacity` job slots.  Both are clamped to ≥ 1.
+    pub fn new(threads: usize, queue_capacity: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(ExecShared {
+            state: Mutex::new(ExecState {
+                queue: VecDeque::new(),
+                live_workers: threads,
+            }),
+            job_ready: Condvar::new(),
+            slot_free: Condvar::new(),
+            worker_done: Condvar::new(),
+            capacity: queue_capacity.max(1),
+            closed: AtomicBool::new(false),
+            stopping: AtomicBool::new(false),
+            panics: AtomicU64::new(0),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("tina-exec-{i}"))
+                    .spawn(move || exec_worker_loop(shared))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        Self {
+            shared,
+            workers: Mutex::new(workers),
+            threads,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Enqueue a job, waiting at most `timeout` for a queue slot.
+    ///
+    /// Returns `false` — dropping `job`, which fails any `Completion`s it
+    /// captured — when the pool is closed, the fault site
+    /// `exec_pool.submit` refuses, or no slot frees up within the
+    /// deadline.  Never blocks past `timeout`.
+    pub fn submit_timeout(&self, job: impl FnOnce() + Send + 'static, timeout: Duration) -> bool {
+        if crate::testing::faults::refused("exec_pool.submit") {
+            return false;
+        }
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if self.shared.closed.load(Ordering::Acquire) {
+                return false;
+            }
+            if st.queue.len() < self.shared.capacity {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            st = self
+                .shared
+                .slot_free
+                .wait_timeout(st, deadline - now)
+                .unwrap()
+                .0;
+        }
+        st.queue.push_back(Box::new(job));
+        drop(st);
+        self.shared.job_ready.notify_one();
+        true
+    }
+
+    /// Stop accepting new jobs and wake any blocked submitters (they
+    /// refuse).  In-flight and already-queued jobs still execute.
+    pub fn close(&self) {
+        self.shared.closed.store(true, Ordering::Release);
+        self.shared.slot_free.notify_all();
+    }
+
+    /// Bounded drain: close the pool, drop still-queued jobs (failing
+    /// their waiters immediately), and wait up to `deadline` for in-flight
+    /// jobs to finish.  Returns `true` if every worker exited in time;
+    /// stragglers (e.g. a stuck kernel) are detached so shutdown cannot
+    /// wedge.  Idempotent.
+    pub fn shutdown_join(&self, deadline: Duration) -> bool {
+        self.close();
+        self.shared.stopping.store(true, Ordering::Release);
+        let dropped: Vec<Job> = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.queue.drain(..).collect()
+        };
+        // dropping outside the lock: each job's Completions fail here
+        drop(dropped);
+        self.shared.job_ready.notify_all();
+        let limit = Instant::now() + deadline;
+        let mut st = self.shared.state.lock().unwrap();
+        while st.live_workers > 0 {
+            let now = Instant::now();
+            if now >= limit {
+                break;
+            }
+            st = self
+                .shared
+                .worker_done
+                .wait_timeout(st, limit - now)
+                .unwrap()
+                .0;
+        }
+        let drained = st.live_workers == 0;
+        drop(st);
+        let mut workers = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        if drained {
+            for w in workers.drain(..) {
+                let _ = w.join();
+            }
+        } else {
+            workers.clear(); // detach stragglers
+        }
+        drained
+    }
+
+    /// Number of jobs that panicked (contained; workers survive).  This
+    /// is the pool-level backstop counter — the coordinator's
+    /// `exec_panics` metric counts at the batch layer.
+    pub fn panics(&self) -> u64 {
+        self.shared.panics.load(Ordering::Relaxed)
+    }
+}
+
+fn exec_worker_loop(shared: Arc<ExecShared>) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.queue.pop_front() {
+                    shared.slot_free.notify_one();
+                    break Some(job);
+                }
+                if shared.stopping.load(Ordering::Acquire) {
+                    break None;
+                }
+                st = shared.job_ready.wait(st).unwrap();
+            }
+        };
+        let Some(job) = job else { break };
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            shared.panics.fetch_add(1, Ordering::Relaxed);
+            eprintln!("tina: exec-pool job panicked (contained; pool continues)");
+        }
+    }
+    let mut st = shared.state.lock().unwrap();
+    st.live_workers -= 1;
+    drop(st);
+    shared.worker_done.notify_all();
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        let live = !self
+            .workers
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .is_empty();
+        if live {
+            self.shutdown_join(Duration::from_secs(5));
         }
     }
 }
@@ -216,6 +451,24 @@ impl<T> OneShot<T> {
                 return v;
             }
             slot = cv.wait(slot).unwrap();
+        }
+    }
+
+    /// Block until the slot is filled or `timeout` elapses; `None` on
+    /// timeout.  The chaos tests use this to prove no waiter ever hangs.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<T> {
+        let (lock, cv) = &*self.inner;
+        let deadline = Instant::now() + timeout;
+        let mut slot = lock.lock().unwrap();
+        loop {
+            if let Some(v) = slot.take() {
+                return Some(v);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            slot = cv.wait_timeout(slot, deadline - now).unwrap().0;
         }
     }
 
@@ -318,5 +571,144 @@ mod tests {
             });
         }
         drop(pool); // must not hang; pending jobs drained by workers or dropped
+    }
+
+    #[test]
+    fn worker_survives_a_panicking_job() {
+        let pool = ThreadPool::new(1, 8);
+        pool.submit(|| panic!("boom"));
+        let done = OneShot::new();
+        let d2 = done.clone();
+        pool.submit(move || d2.set(7u32));
+        assert_eq!(
+            done.wait_timeout(Duration::from_secs(10)),
+            Some(7),
+            "the single worker must survive the preceding panic"
+        );
+        assert_eq!(pool.panics(), 1);
+    }
+
+    #[test]
+    fn exec_pool_runs_jobs_and_contains_panics() {
+        let pool = ExecPool::new(2, 4);
+        assert_eq!(pool.threads(), 2);
+        pool.submit_timeout(|| panic!("kernel fault"), Duration::from_secs(1));
+        let results: Vec<OneShot<usize>> = (0..8).map(|_| OneShot::new()).collect();
+        for (i, r) in results.iter().enumerate() {
+            let r = r.clone();
+            assert!(pool.submit_timeout(move || r.set(i), Duration::from_secs(10)));
+        }
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.wait_timeout(Duration::from_secs(10)), Some(i));
+        }
+        assert_eq!(pool.panics(), 1, "panic contained, pool kept serving");
+        assert!(pool.shutdown_join(Duration::from_secs(5)));
+    }
+
+    #[test]
+    fn exec_pool_submit_times_out_instead_of_blocking() {
+        let pool = ExecPool::new(1, 1);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        // wedge the single worker
+        assert!(pool.submit_timeout(
+            move || {
+                let (lock, cv) = &*g2;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            },
+            Duration::from_secs(1),
+        ));
+        // fill the single queue slot (worker may have taken the first job)
+        let mut filled = 0;
+        while pool.submit_timeout(|| {}, Duration::from_millis(50)) {
+            filled += 1;
+            assert!(filled <= 2, "bounded queue must saturate");
+        }
+        // a saturated pool refuses within the deadline — and dropping the
+        // refused job must fail its waiter rather than hang it
+        let dropped = OneShot::new();
+        let d2 = dropped.clone();
+        struct FailOnDrop(OneShot<&'static str>);
+        impl Drop for FailOnDrop {
+            fn drop(&mut self) {
+                self.0.set("dropped");
+            }
+        }
+        let sentinel = FailOnDrop(d2);
+        let t0 = Instant::now();
+        assert!(!pool.submit_timeout(
+            move || {
+                let _keep = &sentinel;
+            },
+            Duration::from_millis(50)
+        ));
+        assert!(t0.elapsed() < Duration::from_secs(5), "refusal must be fast");
+        assert_eq!(dropped.wait_timeout(Duration::from_secs(5)), Some("dropped"));
+        // un-wedge so shutdown drains cleanly
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        assert!(pool.shutdown_join(Duration::from_secs(10)));
+    }
+
+    #[test]
+    fn exec_pool_shutdown_drops_queued_jobs_and_detaches_stragglers() {
+        let pool = ExecPool::new(1, 4);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        assert!(pool.submit_timeout(
+            move || {
+                let (lock, cv) = &*g2;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            },
+            Duration::from_secs(1),
+        ));
+        let ran = Arc::new(AtomicUsize::new(0));
+        let queued_dropped = OneShot::new();
+        {
+            let ran = Arc::clone(&ran);
+            let q2 = queued_dropped.clone();
+            struct Sentinel(OneShot<()>);
+            impl Drop for Sentinel {
+                fn drop(&mut self) {
+                    self.0.set(());
+                }
+            }
+            let s = Sentinel(q2);
+            assert!(pool.submit_timeout(
+                move || {
+                    let _keep = &s;
+                    ran.fetch_add(1, Ordering::SeqCst);
+                },
+                Duration::from_secs(1),
+            ));
+        }
+        // the worker is wedged: shutdown must still return promptly,
+        // reporting an un-drained straggler, and the queued job must be
+        // dropped (its sentinel fires) rather than executed
+        let t0 = Instant::now();
+        assert!(!pool.shutdown_join(Duration::from_millis(200)));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(queued_dropped.wait_timeout(Duration::from_secs(5)), Some(()));
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "dropped job must not run");
+        // second call is idempotent; release the straggler afterwards
+        assert!(!pool.shutdown_join(Duration::from_millis(50)));
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    #[test]
+    fn exec_pool_close_refuses_new_work() {
+        let pool = ExecPool::new(1, 4);
+        pool.close();
+        assert!(!pool.submit_timeout(|| {}, Duration::from_millis(50)));
+        assert!(pool.shutdown_join(Duration::from_secs(5)));
     }
 }

@@ -1,0 +1,396 @@
+//! Chaos suite: deterministic fault injection against the serving stack.
+//!
+//! Requires the `fault-injection` feature (`cargo test --features
+//! fault-injection --test chaos`).  Every scenario drives the coordinator
+//! through `testing::faults` — seeded, replayable fault schedules at
+//! named sites — and asserts the fault-containment contract:
+//!
+//! * no request ever hangs (every wait below is a bounded `wait_timeout`);
+//! * every admitted request settles exactly once, with a result or an
+//!   error (`completed + failed == requests`);
+//! * requests a fault did not touch return bit-for-bit what the
+//!   interpreter oracle returns for the same input;
+//! * a panicking kernel fails only its own batch, quarantines its plan
+//!   key, and the exec pool survives to serve later batches;
+//! * shutdown drains within a bounded deadline even with panics and slow
+//!   kernels in flight.
+//!
+//! The fault registry is process-global, so every test serializes on one
+//! mutex and resets the registry on entry and exit (panic-safe via the
+//! `Scenario` drop guard).  Run with `--test-threads=1` (the CI chaos job
+//! does) to keep scenario output readable.
+
+#![cfg(feature = "fault-injection")]
+
+use std::sync::atomic::Ordering;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+use tina::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, OpKind, OpRequest, PlanKey, RouterConfig,
+};
+use tina::runtime::Registry;
+use tina::tensor::Tensor;
+use tina::testing::faults::{self, Fault, Mode};
+
+/// Generous settle bound: far above any scenario's real latency, far
+/// below the harness timeout — a wait that trips this is a hang.
+const SETTLE: Duration = Duration::from_secs(30);
+
+/// Serializes scenarios (the fault registry is process-global) and
+/// resets armed rules on entry and exit, even when an assert panics.
+struct Scenario(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Scenario {
+    fn begin() -> Scenario {
+        static LOCK: Mutex<()> = Mutex::new(());
+        let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        faults::reset();
+        Scenario(guard)
+    }
+}
+
+impl Drop for Scenario {
+    fn drop(&mut self) {
+        faults::reset();
+    }
+}
+
+fn empty_registry() -> Registry {
+    Registry::from_manifest_text(
+        std::path::PathBuf::from("/nonexistent"),
+        r#"{"version": 1, "entries": []}"#,
+    )
+    .unwrap()
+}
+
+/// Chaos-friendly config: batching on, `max_bucket: 1` pins every
+/// bucketed plan key to `(op, [1, L])` so quarantine assertions are
+/// deterministic, and a short quarantine backoff lets parole be tested.
+fn chaos_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        batching: true,
+        workers: 2,
+        exec_pool_size: 2,
+        admission_timeout: Duration::from_millis(500),
+        drain_deadline: Duration::from_secs(2),
+        batcher: BatcherConfig {
+            max_bucket: 1,
+            ..Default::default()
+        },
+        router: RouterConfig {
+            quarantine_backoff: Duration::from_millis(100),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn coordinator(config: CoordinatorConfig) -> Coordinator {
+    Coordinator::new(empty_registry(), config).unwrap()
+}
+
+fn fir(l: usize, seed: u64) -> OpRequest {
+    OpRequest::new(OpKind::Fir, vec![Tensor::randn(&[1, l], seed)])
+}
+
+/// What the interpreter oracle says a (1, L) fir request must return —
+/// the bit-for-bit expectation for every untouched request.
+fn oracle(c: &Coordinator, x: &Tensor) -> Vec<Tensor> {
+    c.router()
+        .interpreter_for_shapes(OpKind::Fir, &[vec![1, x.shape()[1]]])
+        .unwrap()
+        .run(std::slice::from_ref(x))
+        .unwrap()
+}
+
+#[test]
+fn panicking_kernel_fails_only_its_batch_quarantines_and_degrades() {
+    let _s = Scenario::begin();
+    let c = coordinator(chaos_config());
+    faults::arm("plan.execute", Fault::Panic, Mode::Times(1));
+
+    // the poisoned batch: its waiter errors, never hangs
+    let err = c
+        .submit(fir(256, 1))
+        .wait_timeout(SETTLE)
+        .expect("poisoned batch must settle, not hang")
+        .unwrap_err();
+    assert!(err.to_string().contains("quarantined"), "got: {err}");
+    let m = c.metrics();
+    assert_eq!(m.exec_panics.load(Ordering::Relaxed), 1);
+    assert_eq!(m.quarantined_plans.load(Ordering::Relaxed), 1);
+    assert!(
+        c.router()
+            .is_quarantined(&PlanKey::for_shapes(OpKind::Fir, &[vec![1, 256]])),
+        "panicked key must be quarantined"
+    );
+
+    // same key, next request: degraded to the interpreter oracle —
+    // bit-for-bit the planned result, and the exec pool survived
+    let x = Tensor::randn(&[1, 256], 2);
+    let resp = c
+        .submit(OpRequest::new(OpKind::Fir, vec![x.clone()]))
+        .wait_timeout(SETTLE)
+        .expect("degraded request must settle")
+        .expect("degraded request must succeed");
+    assert_eq!(resp.served_by, "interp:fir");
+    assert!(resp.batched);
+    assert_eq!(m.degraded_requests.load(Ordering::Relaxed), 1);
+    let want = oracle(&c, &x);
+    assert_eq!(resp.outputs.len(), want.len());
+    for (a, b) in resp.outputs.iter().zip(&want) {
+        assert_eq!(a, b, "degraded output diverged from the oracle");
+    }
+
+    // an untouched key still serves on the planned path, bitwise-correct
+    let y = Tensor::randn(&[1, 320], 3);
+    let other = c
+        .submit(OpRequest::new(OpKind::Fir, vec![y.clone()]))
+        .wait_timeout(SETTLE)
+        .expect("untouched request must settle")
+        .unwrap();
+    for (a, b) in other.outputs.iter().zip(&oracle(&c, &y)) {
+        assert_eq!(a, b, "untouched output diverged from the oracle");
+    }
+    assert_eq!(m.degraded_requests.load(Ordering::Relaxed), 1, "no extra degrade");
+
+    // parole: after the backoff the key recompiles and serves planned
+    std::thread::sleep(Duration::from_millis(150));
+    let again = c
+        .submit(fir(256, 4))
+        .wait_timeout(SETTLE)
+        .expect("paroled request must settle")
+        .unwrap();
+    assert!(again.batched);
+    assert_eq!(
+        m.degraded_requests.load(Ordering::Relaxed),
+        1,
+        "paroled key must serve planned again, not degraded"
+    );
+}
+
+#[test]
+fn slow_batch_delays_but_settles_and_queued_rows_shed_on_expiry() {
+    let _s = Scenario::begin();
+    let mut config = chaos_config();
+    // one exec worker: the slow batch holds it, the next batch queues
+    config.exec_pool_size = 1;
+    let c = coordinator(config);
+    faults::arm(
+        "exec.batch.fallback",
+        Fault::Slow(Duration::from_millis(300)),
+        Mode::Times(1),
+    );
+
+    let slow = c.submit(fir(128, 1));
+    // let the slow batch reach the exec worker before queueing the next
+    std::thread::sleep(Duration::from_millis(50));
+    let doomed = c.submit(fir(256, 2).with_deadline(Duration::from_millis(100)));
+
+    let slow_resp = slow
+        .wait_timeout(SETTLE)
+        .expect("slow batch must settle, not hang")
+        .expect("slow batch must succeed after the stall");
+    assert!(slow_resp.batched);
+    let err = doomed
+        .wait_timeout(SETTLE)
+        .expect("expired row must settle")
+        .unwrap_err();
+    assert!(err.to_string().contains("shed"), "got: {err}");
+    let m = c.metrics();
+    assert_eq!(m.shed_expired_rows.load(Ordering::Relaxed), 1);
+    assert_eq!(m.exec_panics.load(Ordering::Relaxed), 0);
+    assert_eq!(m.inflight_batched_requests.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn injected_engine_error_settles_waiters_without_quarantine() {
+    let _s = Scenario::begin();
+    let c = coordinator(chaos_config());
+    faults::arm("exec.batch.fallback", Fault::Error, Mode::Times(1));
+
+    let err = c
+        .submit(fir(192, 1))
+        .wait_timeout(SETTLE)
+        .expect("errored batch must settle")
+        .unwrap_err();
+    assert!(err.to_string().contains("injected error"), "got: {err}");
+    let m = c.metrics();
+    // an engine *error* is a normal failure: no panic, no quarantine
+    assert_eq!(m.exec_panics.load(Ordering::Relaxed), 0);
+    assert_eq!(m.quarantined_plans.load(Ordering::Relaxed), 0);
+
+    // the key was never poisoned: the next request serves planned
+    let x = Tensor::randn(&[1, 192], 2);
+    let resp = c
+        .submit(OpRequest::new(OpKind::Fir, vec![x.clone()]))
+        .wait_timeout(SETTLE)
+        .expect("retry must settle")
+        .unwrap();
+    for (a, b) in resp.outputs.iter().zip(&oracle(&c, &x)) {
+        assert_eq!(a, b);
+    }
+    assert_eq!(m.degraded_requests.load(Ordering::Relaxed), 0);
+    assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn exec_pool_refusal_fails_the_batch_waiters_fast() {
+    let _s = Scenario::begin();
+    let c = coordinator(chaos_config());
+    faults::arm("exec_pool.submit", Fault::Refuse, Mode::Times(1));
+
+    let t0 = Instant::now();
+    let refused = c
+        .submit(fir(128, 1))
+        .wait_timeout(SETTLE)
+        .expect("refused batch's waiter must settle, not hang");
+    assert!(refused.is_err(), "refused batch must fail its waiters");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "refusal must fail fast, not wait out a timeout"
+    );
+    assert!(faults::hits("exec_pool.submit") >= 1, "site must be reached");
+
+    // rule exhausted: the pool accepts and serves the next batch
+    let ok = c
+        .submit(fir(128, 2))
+        .wait_timeout(SETTLE)
+        .expect("post-refusal request must settle");
+    assert!(ok.is_ok());
+    assert_eq!(
+        c.metrics().inflight_batched_requests.load(Ordering::Relaxed),
+        0
+    );
+}
+
+#[test]
+fn gate_saturation_fault_refuses_admission_with_overload_error() {
+    let _s = Scenario::begin();
+    let c = coordinator(chaos_config());
+    faults::arm("gate.acquire", Fault::Refuse, Mode::Times(1));
+
+    let err = c
+        .submit(fir(128, 1))
+        .wait_timeout(SETTLE)
+        .expect("refused admission must settle")
+        .unwrap_err();
+    assert!(err.to_string().contains("overloaded"), "got: {err}");
+    assert_eq!(c.metrics().admission_timeouts.load(Ordering::Relaxed), 1);
+
+    let ok = c
+        .submit(fir(128, 2))
+        .wait_timeout(SETTLE)
+        .expect("post-fault request must settle");
+    assert!(ok.is_ok());
+}
+
+#[test]
+fn seeded_fault_storm_settles_every_request_exactly_once() {
+    let _s = Scenario::begin();
+    let c = coordinator(chaos_config());
+    // ~50% of plan executions panic, ~10% of exec-pool submits are
+    // refused — a deterministic storm (same seeds, same schedule)
+    faults::arm(
+        "plan.execute",
+        Fault::Panic,
+        Mode::Ratio { seed: 42, percent: 50 },
+    );
+    faults::arm(
+        "exec_pool.submit",
+        Fault::Refuse,
+        Mode::Ratio { seed: 7, percent: 10 },
+    );
+
+    let lens = [128usize, 192, 256, 320];
+    let inputs: Vec<Tensor> = (0..32)
+        .map(|i| Tensor::randn(&[1, lens[i % lens.len()]], i as u64))
+        .collect();
+    let slots: Vec<_> = inputs
+        .iter()
+        .map(|x| c.submit(OpRequest::new(OpKind::Fir, vec![x.clone()])))
+        .collect();
+
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    for (x, slot) in inputs.iter().zip(slots) {
+        match slot.wait_timeout(SETTLE).expect("every request must settle") {
+            Ok(resp) => {
+                ok += 1;
+                // a request the storm did not touch must be bit-for-bit
+                // the oracle result — whether it rode the planned path or
+                // a quarantined key's degraded interpreter path
+                for (a, b) in resp.outputs.iter().zip(&oracle(&c, x)) {
+                    assert_eq!(a, b, "surviving request diverged from the oracle");
+                }
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    assert_eq!(ok + failed, 32, "every request settles exactly once");
+    let m = c.metrics();
+    assert_eq!(m.requests.load(Ordering::Relaxed), 32);
+    assert_eq!(
+        m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed),
+        32,
+        "metrics must account for every settlement exactly once"
+    );
+    assert_eq!(m.inflight_batched_requests.load(Ordering::Relaxed), 0);
+    assert!(failed >= 1, "a 50% panic storm over 32 requests should fault some");
+    assert!(ok >= 1, "containment should let some requests through");
+    assert!(m.exec_panics.load(Ordering::Relaxed) >= 1);
+    assert!(m.quarantined_plans.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn shutdown_under_fault_settles_all_waiters_within_drain_deadline() {
+    let _s = Scenario::begin();
+    let mut config = chaos_config();
+    config.exec_pool_size = 1;
+    config.drain_deadline = Duration::from_secs(2);
+    let c = coordinator(config);
+    // the in-flight batch stalls 400ms, then its plan panics — shutdown
+    // must ride out both and still return within the drain deadline
+    faults::arm(
+        "exec.batch.fallback",
+        Fault::Slow(Duration::from_millis(400)),
+        Mode::Times(1),
+    );
+    faults::arm("plan.execute", Fault::Panic, Mode::Times(1));
+
+    let inflight = c.submit(fir(128, 1));
+    // let the stalled batch occupy the lone exec worker...
+    std::thread::sleep(Duration::from_millis(50));
+    // ...then pile a second batch behind it and shut down mid-traffic
+    let queued = c.submit(fir(256, 2));
+    std::thread::sleep(Duration::from_millis(30));
+
+    let t0 = Instant::now();
+    c.shutdown();
+    let took = t0.elapsed();
+    assert!(
+        took < Duration::from_millis(1500),
+        "shutdown must drain within the deadline, took {took:?}"
+    );
+
+    // every waiter settled: the stalled batch panicked (error), the
+    // queued batch was dropped at pool close or failed by the batcher
+    let a = inflight
+        .wait_timeout(Duration::from_secs(1))
+        .expect("in-flight waiter must be settled by shutdown");
+    assert!(a.is_err(), "panicked in-flight batch must error");
+    let b = queued
+        .wait_timeout(Duration::from_secs(1))
+        .expect("queued waiter must be settled by shutdown");
+    assert!(b.is_err(), "queued batch must error at shutdown");
+    let m = c.metrics();
+    assert_eq!(m.exec_panics.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        m.inflight_batched_requests.load(Ordering::Relaxed),
+        0,
+        "gauge must settle to zero after shutdown under fault"
+    );
+    assert_eq!(m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed), 2);
+}

@@ -310,6 +310,70 @@ fn enqueue_timestamp_survives_the_pending_path() {
 }
 
 #[test]
+fn happy_path_traffic_leaves_fault_containment_counters_at_zero() {
+    // the fault-containment layer must be invisible to healthy traffic:
+    // no panics contained, nothing quarantined or degraded, no rows
+    // shed, no admissions refused
+    let coord = Arc::new(fallback_coordinator(CoordinatorConfig {
+        batching: true,
+        workers: 2,
+        ..Default::default()
+    }));
+    let slots: Vec<_> = (0..16)
+        .map(|i| {
+            let x = Tensor::randn(&[1, 384], i as u64);
+            coord.submit(
+                OpRequest::new(OpKind::Fir, vec![x]).with_deadline(Duration::from_secs(60)),
+            )
+        })
+        .collect();
+    for s in slots {
+        assert!(s.wait().is_ok());
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 16);
+    assert_eq!(m.exec_panics.load(Ordering::Relaxed), 0);
+    assert_eq!(m.quarantined_plans.load(Ordering::Relaxed), 0);
+    assert_eq!(m.degraded_requests.load(Ordering::Relaxed), 0);
+    assert_eq!(m.shed_expired_rows.load(Ordering::Relaxed), 0);
+    assert_eq!(m.admission_timeouts.load(Ordering::Relaxed), 0);
+    let report = m.report();
+    for key in [
+        "exec_panics=0",
+        "quarantined_plans=0",
+        "degraded_requests=0",
+        "shed_expired_rows=0",
+        "admission_timeouts=0",
+    ] {
+        assert!(report.contains(key), "report missing {key}: {report}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn expired_deadline_sheds_at_admission_end_to_end() {
+    // deadline-aware admission without the fault-injection feature: a
+    // request whose budget already lapsed is shed before routing
+    let coord = fallback_coordinator(CoordinatorConfig {
+        batching: true,
+        workers: 2,
+        ..Default::default()
+    });
+    let err = coord
+        .execute(
+            OpRequest::new(OpKind::Fir, vec![Tensor::randn(&[1, 256], 1)])
+                .with_deadline(Duration::ZERO),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("shed"), "got: {err}");
+    assert_eq!(coord.metrics().shed_expired_rows.load(Ordering::Relaxed), 1);
+    // the coordinator keeps serving deadline-free traffic afterwards
+    let ok = coord.execute(OpRequest::new(OpKind::Fir, vec![Tensor::randn(&[1, 256], 2)]));
+    assert!(ok.is_ok());
+    coord.shutdown();
+}
+
+#[test]
 fn adaptive_bucket_metrics_surface_under_traffic() {
     // bursty fallback traffic must leave the adaptive gauges populated:
     // every formed fallback batch stamps its effective cap/wait

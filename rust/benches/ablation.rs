@@ -17,9 +17,13 @@
 //!     per-request execution, across arrival burst sizes;
 //!  8. plan-level fusion on/off — what the window-into-framing-conv fold
 //!     plus merged-axis materialize elimination buy on STFT (and that the
-//!     pass is a no-op on the window-less PFB), at B ∈ {1, 8}.
+//!     pass is a no-op on the window-less PFB), at B ∈ {1, 8};
+//!  9. planned executor vs the virtual-accelerator backend — what the
+//!     load-time specialization into a linear program buys over the
+//!     step-walking planned executor on PFB and STFT, at B ∈ {1, 8}
+//!     (plus, under `--features vaccel`, the full engine-dispatch cost).
 //!
-//! Ablations 6-8 need no artifacts, so they run first; the rest print
+//! Ablations 6-9 need no artifacts, so they run first; the rest print
 //! in numeric order (or skip with a note).
 //!
 //! Besides the human-readable tables, every ablation that ran contributes
@@ -53,6 +57,7 @@ fn main() {
     report.push(("ablation6_interp_vs_planned", interp_vs_planned()));
     report.push(("ablation7_batched_fallback", batched_fallback_ablation()));
     report.push(("ablation8_plan_fusion", plan_fusion_ablation()));
+    report.push(("ablation9_vaccel_backend", vaccel_backend_ablation()));
     if let Some(j) = batching_ablation() {
         report.push(("ablation1_batching", j));
     }
@@ -301,6 +306,124 @@ fn plan_fusion_ablation() -> Json {
     top.push(("geomean_stft_fusion_speedup", Json::num(g)));
     top.push(("cases", Json::Obj(case_json.into_iter().collect())));
     Json::obj(top)
+}
+
+/// Full vaccel engine-dispatch cost for one case — bounded queue hop,
+/// worker execution, one-shot reply — as an informational JSON field.
+#[cfg(feature = "vaccel")]
+fn vaccel_engine_dispatch_ns(
+    cfg: &tina::benchkit::BenchConfig,
+    plan: &tina::tina::ExecPlan,
+    inputs: &[Tensor],
+) -> Option<f64> {
+    let engine = tina::runtime::VaccelEngine::with_defaults();
+    engine.load("bench", plan).ok()?;
+    let v = tina::benchkit::run(cfg, || {
+        black_box(engine.try_execute("bench", inputs).unwrap());
+    })
+    .summary();
+    Some(v.median_ns)
+}
+
+/// Without the feature the queue/worker layer does not exist; the linear
+/// program itself (the part that executes the math) is measured above.
+#[cfg(not(feature = "vaccel"))]
+fn vaccel_engine_dispatch_ns(
+    _cfg: &tina::benchkit::BenchConfig,
+    _plan: &tina::tina::ExecPlan,
+    _inputs: &[Tensor],
+) -> Option<f64> {
+    None
+}
+
+/// 9. planned executor vs the virtual-accelerator backend on the same
+/// compiled plans: `ExecPlan` walked step-by-step with a recycled arena
+/// (the fallback serving path) vs the load-time-specialized
+/// `LinearProgram` the vaccel backend executes.  The specialization is
+/// ungated, so the comparison runs on every build; `--features vaccel`
+/// additionally reports the full engine-dispatch median per case.
+/// Outputs are asserted bitwise-equal outside the timed loops — the
+/// backends differ in dispatch, never in math.
+fn vaccel_backend_ablation() -> Json {
+    use tina::dsp::PfbConfig;
+    use tina::tina::{lower, ExecPlan, LinearProgram};
+
+    let cfg = tina::benchkit::BenchConfig::from_env();
+    let mut t = Table::new(
+        "ablation 9: planned executor vs vaccel linear program, B in {1, 8}",
+        &["graph", "planned median", "vaccel median", "vaccel speedup"],
+    );
+    let pfb_cfg = PfbConfig::new(32, 8);
+    let cases: Vec<(String, tina::tina::Graph, Vec<Tensor>)> = vec![
+        (
+            "pfb B=1 L=16384".into(),
+            lower::pfb(1, 16384, pfb_cfg).unwrap(),
+            vec![Tensor::randn(&[1, 16384], 91)],
+        ),
+        (
+            "pfb B=8 L=16384".into(),
+            lower::pfb(8, 16384, pfb_cfg).unwrap(),
+            vec![Tensor::randn(&[8, 16384], 92)],
+        ),
+        (
+            "stft B=1 L=4096".into(),
+            lower::stft(1, 4096, 256, 128).unwrap(),
+            vec![Tensor::randn(&[1, 4096], 93)],
+        ),
+        (
+            "stft B=8 L=4096".into(),
+            lower::stft(8, 4096, 256, 128).unwrap(),
+            vec![Tensor::randn(&[8, 4096], 94)],
+        ),
+    ];
+    let mut speedups: Vec<f64> = Vec::new();
+    let mut case_json: Vec<(String, Json)> = Vec::new();
+    for (label, graph, inputs) in cases {
+        let plan = ExecPlan::compile(&graph).unwrap();
+        let program = LinearProgram::load(&plan).unwrap();
+        // oracle contract spot-check before timing anything
+        let mut arena = tina::tina::Arena::new();
+        let want = plan.run_in(&mut arena, &inputs).unwrap();
+        let got = program.run(&inputs).unwrap();
+        assert_eq!(want, got, "{label}: vaccel program diverged bitwise");
+        let pv = tina::benchkit::run(&cfg, || {
+            black_box(plan.run_in(&mut arena, &inputs).unwrap());
+        })
+        .summary();
+        let lv = tina::benchkit::run(&cfg, || {
+            black_box(program.run(&inputs).unwrap());
+        })
+        .summary();
+        let speedup = pv.median_ns / lv.median_ns.max(1e-9);
+        speedups.push(speedup.max(1e-9));
+        let mut fields = vec![
+            ("planned_ns", Json::num(pv.median_ns)),
+            ("vaccel_ns", Json::num(lv.median_ns)),
+            ("vaccel_vs_planned", Json::num(speedup)),
+        ];
+        if let Some(engine_ns) = vaccel_engine_dispatch_ns(&cfg, &plan, &inputs) {
+            fields.push(("engine_dispatch_ns", Json::num(engine_ns)));
+        }
+        case_json.push((label.clone(), Json::obj(fields)));
+        t.row(vec![
+            label,
+            fmt(pv.median_ns),
+            fmt(lv.median_ns),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    let g = geomean(&speedups);
+    t.row(vec![
+        "geomean".into(),
+        String::new(),
+        String::new(),
+        format!("{g:.2}x"),
+    ]);
+    println!("{}", t.render());
+    Json::obj(vec![
+        ("geomean_vaccel_vs_planned_speedup", Json::num(g)),
+        ("cases", Json::Obj(case_json.into_iter().collect())),
+    ])
 }
 
 /// 7. solo vs batched fallback serving: B=1 FIR requests with no matching

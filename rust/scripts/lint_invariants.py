@@ -49,6 +49,7 @@ SPAWN_ALLOWLIST = {
     "coordinator/server.rs",  # per-connection threads, capped and reaped
     "coordinator/service.rs",  # the drain-loop thread, joined on shutdown
     "runtime/handle.rs",  # the single engine thread, joined on Drop
+    "runtime/vaccel.rs",  # the virtual accelerator's bounded worker set
     "util/threadpool.rs",  # the pools own their workers
 }
 
@@ -59,6 +60,7 @@ THREAD_SPAWN_RE = re.compile(r"thread::spawn|thread::Builder")
 
 KERNEL_NO_TIMING = {
     "tina/exec/fused.rs",
+    "tina/exec/linear.rs",
     "baselines/optimized.rs",
 }
 

@@ -104,6 +104,17 @@ pub struct Metrics {
     /// Requests refused at admission because the in-flight gate stayed
     /// saturated past the admission timeout ("overloaded, retry-after").
     pub admission_timeouts: AtomicU64,
+    /// Artifact executions (batched and direct) served by the virtual
+    /// accelerator backend (`runtime::vaccel`).
+    pub vaccel_batches: AtomicU64,
+    /// `ImplPref::Auto` requests the router steered to the planned CPU
+    /// arm although an artifact existed (quarantined, or measured
+    /// slower); drained from `Router::take_auto_routed`.
+    pub auto_routed_plan: AtomicU64,
+    /// `ImplPref::Auto` requests the router steered to the artifact arm
+    /// (unmeasured exploration, or measured at least as fast); drained
+    /// from `Router::take_auto_routed`.
+    pub auto_routed_artifact: AtomicU64,
     /// Plan-cache (hits, misses) per fallback bucket size B.
     plan_cache_buckets: Mutex<BTreeMap<usize, (u64, u64)>>,
     latency: Mutex<BTreeMap<String, Histogram>>,
@@ -283,6 +294,24 @@ impl Metrics {
         self.admission_timeouts.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one artifact execution served by the vaccel backend.
+    pub fn record_vaccel_batch(&self) {
+        self.vaccel_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold in Auto-routing decisions drained from the router
+    /// (`Router::take_auto_routed`): requests an artifact existed for
+    /// that were steered to the plan arm vs. the artifact arm.
+    pub fn record_auto_routed(&self, to_plan: u64, to_artifact: u64) {
+        if to_plan > 0 {
+            self.auto_routed_plan.fetch_add(to_plan, Ordering::Relaxed);
+        }
+        if to_artifact > 0 {
+            self.auto_routed_artifact
+                .fetch_add(to_artifact, Ordering::Relaxed);
+        }
+    }
+
     /// Fraction of executed batch rows (artifact + fallback buckets) that
     /// were real requests rather than padding.  1.0 when no batch has run
     /// yet (an empty history carries no padding waste).
@@ -307,7 +336,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} inflight_batched={} drain_completions={} adaptive_bucket_cap={} adaptive_bucket_wait_us={} adaptive_bucket_shrinks={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={} fused_steps={} fusion_eliminated_copies={} plans_verified={} verify_ns={} exec_panics={} quarantined_plans={} degraded_requests={} shed_expired_rows={} admission_timeouts={}\n",
+            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} inflight_batched={} drain_completions={} adaptive_bucket_cap={} adaptive_bucket_wait_us={} adaptive_bucket_shrinks={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={} fused_steps={} fusion_eliminated_copies={} plans_verified={} verify_ns={} exec_panics={} quarantined_plans={} degraded_requests={} shed_expired_rows={} admission_timeouts={} vaccel_batches={} auto_routed_plan={} auto_routed_artifact={}\n",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -336,6 +365,9 @@ impl Metrics {
             self.degraded_requests.load(Ordering::Relaxed),
             self.shed_expired_rows.load(Ordering::Relaxed),
             self.admission_timeouts.load(Ordering::Relaxed),
+            self.vaccel_batches.load(Ordering::Relaxed),
+            self.auto_routed_plan.load(Ordering::Relaxed),
+            self.auto_routed_artifact.load(Ordering::Relaxed),
         ));
         for (bucket, hits, misses) in self.plan_cache_bucket_stats() {
             out.push_str(&format!(
@@ -467,6 +499,22 @@ mod tests {
         assert!(r.contains("degraded_requests=3"), "report: {r}");
         assert!(r.contains("shed_expired_rows=4"), "report: {r}");
         assert!(r.contains("admission_timeouts=1"), "report: {r}");
+    }
+
+    #[test]
+    fn backend_routing_counters_accumulate_and_report() {
+        let m = Metrics::new();
+        m.record_vaccel_batch();
+        m.record_vaccel_batch();
+        m.record_auto_routed(0, 0);
+        m.record_auto_routed(3, 5);
+        assert_eq!(m.vaccel_batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.auto_routed_plan.load(Ordering::Relaxed), 3);
+        assert_eq!(m.auto_routed_artifact.load(Ordering::Relaxed), 5);
+        let r = m.report();
+        assert!(r.contains("vaccel_batches=2"), "report: {r}");
+        assert!(r.contains("auto_routed_plan=3"), "report: {r}");
+        assert!(r.contains("auto_routed_artifact=5"), "report: {r}");
     }
 
     #[test]

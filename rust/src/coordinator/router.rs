@@ -23,16 +23,23 @@
 use super::request::{ImplPref, OpKind, OpRequest, Precision};
 use crate::dsp::PfbConfig;
 use crate::runtime::Registry;
-use crate::tina::{lower, CompileOptions, Interpreter, Planned};
+use crate::tina::{lower, CompileOptions, ExecPlan, Interpreter, Planned};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Bound on tracked quarantine entries: adversarial shape churn must not
 /// grow the map without limit (the entry closest to parole is dropped).
 const QUARANTINE_CAP: usize = 256;
+
+/// Bound on the per-key arm-latency table (same churn argument).
+const LATENCY_CAP: usize = 256;
+
+/// EWMA weight of a fresh latency sample (the first sample seeds the
+/// average directly).
+const LATENCY_ALPHA: f64 = 0.2;
 
 /// Fixed op parameters that are baked into artifacts as NN weights; the
 /// interpreter fallback regenerates the same values (DESIGN.md §6).
@@ -232,6 +239,26 @@ pub struct Router {
     /// Quarantine events since the last drain (drained into
     /// `Metrics::quarantined_plans`).
     quarantined: AtomicU64,
+    /// Whether the artifact arm is live — armed by default, then set
+    /// from the engine's typed [`crate::runtime::Capability`] probe at
+    /// coordinator construction (a type, not an error-message match).
+    /// When false, `ImplPref::Auto` never routes to an artifact.
+    artifact_arm: AtomicBool,
+    /// Measured per-row latency EWMA per batch-normalized plan key:
+    /// `[planned executor, artifact backend]` nanoseconds.  `Auto`
+    /// consults this to pick the measured-faster arm; an unmeasured
+    /// artifact arm is explored first.
+    latency: Mutex<HashMap<PlanKey, [Option<f64>; 2]>>,
+    /// Poisoned artifact names under the same exponential backoff as
+    /// plan keys — a panicking artifact execution quarantines the
+    /// *artifact*, and its traffic degrades to the interpreter oracle.
+    artifact_quarantine: Mutex<HashMap<String, QuarantineEntry>>,
+    /// `Auto` requests routed to the planned-executor arm since the last
+    /// drain (drained into `Metrics::auto_routed_plan`).
+    auto_routed_plan: AtomicU64,
+    /// `Auto` requests routed to the artifact arm since the last drain
+    /// (drained into `Metrics::auto_routed_artifact`).
+    auto_routed_artifact: AtomicU64,
 }
 
 impl Router {
@@ -250,6 +277,11 @@ impl Router {
             verify_ns: AtomicU64::new(0),
             quarantine: Mutex::new(HashMap::new()),
             quarantined: AtomicU64::new(0),
+            artifact_arm: AtomicBool::new(true),
+            latency: Mutex::new(HashMap::new()),
+            artifact_quarantine: Mutex::new(HashMap::new()),
+            auto_routed_plan: AtomicU64::new(0),
+            auto_routed_artifact: AtomicU64::new(0),
         }
     }
 
@@ -290,12 +322,33 @@ impl Router {
                 .find_artifact(req, "jaxref", prefer_batched)
                 .ok_or_else(|| anyhow!(self.no_artifact_msg(req, "jaxref"))),
             ImplPref::Auto => {
-                if let Some(t) = self.find_artifact(req, "tina", prefer_batched) {
-                    Ok(t)
-                } else {
-                    Ok(Target::Interp {
+                // the artifact arm is armed/disarmed by the engine's typed
+                // capability probe — no artifact lookup when the backend
+                // cannot execute
+                if !self.artifact_arm.load(Ordering::Relaxed) {
+                    return Ok(Target::Interp {
                         key: self.plan_key(req)?,
-                    })
+                    });
+                }
+                match self.find_artifact(req, "tina", prefer_batched) {
+                    Some(Target::Artifact { name, pad_batch })
+                        if !self.is_artifact_quarantined(&name)
+                            && self.prefers_artifact(req) =>
+                    {
+                        self.auto_routed_artifact.fetch_add(1, Ordering::Relaxed);
+                        Ok(Target::Artifact { name, pad_batch })
+                    }
+                    // an artifact exists but lost on measured latency (or
+                    // is quarantined): Auto picks the plan arm
+                    Some(_) => {
+                        self.auto_routed_plan.fetch_add(1, Ordering::Relaxed);
+                        Ok(Target::Interp {
+                            key: self.plan_key(req)?,
+                        })
+                    }
+                    None => Ok(Target::Interp {
+                        key: self.plan_key(req)?,
+                    }),
                 }
             }
         }
@@ -524,9 +577,148 @@ impl Router {
     }
 
     /// Take (and reset) the quarantine-event count accumulated since the
-    /// last drain (drained into `Metrics::quarantined_plans`).
+    /// last drain (drained into `Metrics::quarantined_plans`); counts
+    /// both plan-key and artifact quarantine events.
     pub fn take_quarantine_counters(&self) -> u64 {
         self.quarantined.swap(0, Ordering::Relaxed)
+    }
+
+    /// Take (and reset) the `Auto` arm-choice counters accumulated since
+    /// the last drain, as `(auto_routed_plan, auto_routed_artifact)`;
+    /// the coordinator mirrors them into its metrics.
+    pub fn take_auto_routed(&self) -> (u64, u64) {
+        (
+            self.auto_routed_plan.swap(0, Ordering::Relaxed),
+            self.auto_routed_artifact.swap(0, Ordering::Relaxed),
+        )
+    }
+
+    /// Arm or disarm the artifact routing arm.  The coordinator calls
+    /// this once at construction with the engine's typed
+    /// [`crate::runtime::Capability::can_execute`] — replacing the old
+    /// behavior of discovering a dead backend per request via stringly
+    /// execute errors.
+    pub fn set_artifact_arm(&self, live: bool) {
+        self.artifact_arm.store(live, Ordering::Relaxed);
+    }
+
+    /// Whether the artifact arm is currently armed.
+    pub fn artifact_arm_live(&self) -> bool {
+        self.artifact_arm.load(Ordering::Relaxed)
+    }
+
+    /// Batch-normalized latency key: bucketed executions of the same
+    /// (op, per-row shape) share one entry regardless of B, so per-row
+    /// EWMAs stay comparable across bucket sizes.
+    fn latency_key(op: OpKind, shapes: &[Vec<usize>]) -> PlanKey {
+        let mut shapes = shapes.to_vec();
+        if op.batchable() && shapes.len() == 1 && shapes[0].len() == 2 {
+            shapes[0][0] = 1;
+        }
+        PlanKey::for_shapes(op, &shapes)
+    }
+
+    /// Record a measured per-row latency for the planned-executor arm.
+    pub fn record_plan_latency(&self, op: OpKind, shapes: &[Vec<usize>], ns_per_row: f64) {
+        self.record_latency(0, op, shapes, ns_per_row);
+    }
+
+    /// Record a measured per-row latency for the artifact arm.
+    pub fn record_artifact_latency(&self, op: OpKind, shapes: &[Vec<usize>], ns_per_row: f64) {
+        self.record_latency(1, op, shapes, ns_per_row);
+    }
+
+    fn record_latency(&self, arm: usize, op: OpKind, shapes: &[Vec<usize>], ns_per_row: f64) {
+        if !ns_per_row.is_finite() || ns_per_row <= 0.0 {
+            return;
+        }
+        let key = Self::latency_key(op, shapes);
+        let mut table = self.latency.lock().unwrap();
+        if !table.contains_key(&key) && table.len() >= LATENCY_CAP {
+            // adversarial shape churn: drop an arbitrary entry rather
+            // than growing without bound (the table self-heals as live
+            // keys keep recording)
+            if let Some(k) = table.keys().next().cloned() {
+                table.remove(&k);
+            }
+        }
+        let entry = table.entry(key).or_insert([None, None]);
+        entry[arm] = Some(match entry[arm] {
+            None => ns_per_row,
+            Some(prev) => prev * (1.0 - LATENCY_ALPHA) + ns_per_row * LATENCY_ALPHA,
+        });
+    }
+
+    /// Measured per-row EWMA latencies for (op, shapes), as
+    /// `(planned_ns, artifact_ns)` (tests/introspection).
+    pub fn arm_latency(&self, op: OpKind, shapes: &[Vec<usize>]) -> (Option<f64>, Option<f64>) {
+        let key = Self::latency_key(op, shapes);
+        let table = self.latency.lock().unwrap();
+        match table.get(&key) {
+            Some([p, a]) => (*p, *a),
+            None => (None, None),
+        }
+    }
+
+    /// `Auto` arm choice for a request with a matching artifact: the
+    /// measured-faster arm wins; an unmeasured artifact arm is explored
+    /// first (one execution seeds its EWMA).
+    fn prefers_artifact(&self, req: &OpRequest) -> bool {
+        let key = Self::latency_key(req.op, &Self::shapes_of(req));
+        let table = self.latency.lock().unwrap();
+        match table.get(&key) {
+            Some([Some(plan_ns), Some(artifact_ns)]) => artifact_ns <= plan_ns,
+            _ => true,
+        }
+    }
+
+    /// Quarantine a poisoned *artifact* (panic or typed execution
+    /// failure on the artifact arm): its traffic degrades to the
+    /// interpreter oracle under the same exponential backoff as plan
+    /// keys, and `Auto` stops choosing it until parole.
+    pub fn quarantine_artifact(&self, name: &str, reason: &str) {
+        let mut q = self.artifact_quarantine.lock().unwrap();
+        if !q.contains_key(name) && q.len() >= QUARANTINE_CAP {
+            let soonest = q.iter().min_by_key(|(_, e)| e.until).map(|(k, _)| k.clone());
+            if let Some(k) = soonest {
+                q.remove(&k);
+            }
+        }
+        let now = Instant::now();
+        let e = q.entry(name.to_string()).or_insert(QuarantineEntry {
+            strikes: 0,
+            until: now,
+        });
+        e.strikes = e.strikes.saturating_add(1);
+        let backoff = self
+            .config
+            .quarantine_backoff
+            .saturating_mul(1u32 << (e.strikes - 1).min(16))
+            .min(self.config.quarantine_backoff_cap);
+        e.until = now + backoff;
+        drop(q);
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "tina: quarantined artifact '{name}' for {backoff:?} ({reason}); \
+             serving via interpreter oracle"
+        );
+    }
+
+    /// Whether an artifact is currently quarantined (backoff not yet
+    /// expired).  Expired entries keep their strike history so a repeat
+    /// offense escalates the next backoff.
+    pub fn is_artifact_quarantined(&self, name: &str) -> bool {
+        let q = self.artifact_quarantine.lock().unwrap();
+        q.get(name).is_some_and(|e| e.until > Instant::now())
+    }
+
+    /// Lower (op, input shapes) and compile a standalone [`ExecPlan`] —
+    /// the coordinator uses this to populate the virtual accelerator's
+    /// program table from the artifact registry at startup (one load per
+    /// manifest entry).  Not cached: each artifact is loaded once.
+    pub fn compile_artifact_plan(&self, op: OpKind, shapes: &[Vec<usize>]) -> Result<ExecPlan> {
+        let graph = self.build_graph_for(op, shapes)?;
+        ExecPlan::compile(&graph)
     }
 
     /// Quarantine a poisoned plan key: evict its compiled plan so nothing
@@ -1062,6 +1254,91 @@ mod tests {
         let a = via_req.run(std::slice::from_ref(&x)).unwrap();
         let b = via_shapes.run(std::slice::from_ref(&x)).unwrap();
         assert_eq!(a[0].data(), b[0].data());
+    }
+
+    #[test]
+    fn auto_respects_the_artifact_arm_switch() {
+        let r = router();
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 1024])]);
+        assert!(r.artifact_arm_live(), "armed by default");
+        assert!(matches!(r.route(&req).unwrap(), Target::Artifact { .. }));
+        r.set_artifact_arm(false);
+        assert!(
+            matches!(r.route(&req).unwrap(), Target::Interp { .. }),
+            "disarmed backend must never receive Auto traffic"
+        );
+        r.set_artifact_arm(true);
+        assert!(matches!(r.route(&req).unwrap(), Target::Artifact { .. }));
+    }
+
+    #[test]
+    fn auto_explores_unmeasured_artifact_then_follows_measured_latency() {
+        let r = router();
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 1024])]);
+        // no measurements: explore the artifact arm first
+        assert!(matches!(r.route(&req).unwrap(), Target::Artifact { .. }));
+        assert_eq!(r.take_auto_routed(), (0, 1));
+        // artifact measured slower than the plan: Auto flips to the plan
+        r.record_plan_latency(OpKind::Fir, &[vec![1, 1024]], 100.0);
+        r.record_artifact_latency(OpKind::Fir, &[vec![1, 1024]], 500.0);
+        assert!(matches!(r.route(&req).unwrap(), Target::Interp { .. }));
+        assert_eq!(r.take_auto_routed(), (1, 0));
+        // strict prefs bypass the latency table entirely
+        let strict = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 1024])])
+            .with_impl(ImplPref::Tina);
+        assert!(matches!(r.route(&strict).unwrap(), Target::Artifact { .. }));
+        assert_eq!(r.take_auto_routed(), (0, 0), "strict prefs are not Auto");
+    }
+
+    #[test]
+    fn latency_table_normalizes_bucket_batch_and_ewmas() {
+        let r = router();
+        // a B=8 bucketed measurement and a B=1 request share one entry
+        r.record_artifact_latency(OpKind::Fir, &[vec![8, 1024]], 300.0);
+        let (p, a) = r.arm_latency(OpKind::Fir, &[vec![1, 1024]]);
+        assert_eq!(p, None);
+        assert_eq!(a, Some(300.0), "first sample seeds the EWMA");
+        r.record_artifact_latency(OpKind::Fir, &[vec![1, 1024]], 400.0);
+        let (_, a) = r.arm_latency(OpKind::Fir, &[vec![8, 1024]]);
+        assert_eq!(a, Some(300.0 * 0.8 + 400.0 * 0.2), "EWMA blend");
+    }
+
+    #[test]
+    fn quarantined_artifact_degrades_auto_to_plan_arm() {
+        let reg =
+            Registry::from_manifest_text(PathBuf::from("/nonexistent"), MANIFEST).unwrap();
+        let r = Router::new(
+            reg,
+            RouterConfig {
+                quarantine_backoff: Duration::from_millis(30),
+                ..RouterConfig::default()
+            },
+        );
+        let req = OpRequest::new(OpKind::Fir, vec![Tensor::zeros(&[1, 1024])]);
+        assert!(!r.is_artifact_quarantined("fir_tina_f32_B1_L1024"));
+        r.quarantine_artifact("fir_tina_f32_B1_L1024", "test poison");
+        assert!(r.is_artifact_quarantined("fir_tina_f32_B1_L1024"));
+        assert_eq!(r.take_quarantine_counters(), 1);
+        assert!(
+            matches!(r.route(&req).unwrap(), Target::Interp { .. }),
+            "Auto must not choose a quarantined artifact"
+        );
+        assert_eq!(r.take_auto_routed(), (1, 0));
+        // parole after the backoff expires
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(!r.is_artifact_quarantined("fir_tina_f32_B1_L1024"));
+        assert!(matches!(r.route(&req).unwrap(), Target::Artifact { .. }));
+    }
+
+    #[test]
+    fn compile_artifact_plan_lowers_registry_shapes() {
+        let r = router();
+        let plan = r
+            .compile_artifact_plan(OpKind::Fir, &[vec![8, 1024]])
+            .unwrap();
+        assert_eq!(plan.input_shapes(), &[vec![8, 1024]]);
+        let err = r.compile_artifact_plan(OpKind::Fir, &[vec![1, 2], vec![3]]);
+        assert!(err.is_err(), "arity mismatch must fail the lowering");
     }
 
     #[test]

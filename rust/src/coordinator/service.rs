@@ -56,11 +56,13 @@
 //!    (`catch_unwind`) by the exec worker: every waiter of that batch
 //!    gets an error (never a hang), [`Metrics::exec_panics`] increments,
 //!    and the pool thread survives to run the next batch.
-//! 3. **One plan key** — a fallback plan that panicked (or failed
-//!    release-mode verification) is evicted and its `(op, shape, B)` key
-//!    quarantined with capped exponential backoff
-//!    ([`RouterConfig::quarantine_backoff`]); while quarantined, traffic
-//!    for the key degrades to the interpreter oracle — bit-for-bit the
+//! 3. **One plan key / one artifact** — a fallback plan that panicked
+//!    (or failed release-mode verification) is evicted and its
+//!    `(op, shape, B)` key quarantined with capped exponential backoff
+//!    ([`RouterConfig::quarantine_backoff`]); an artifact whose batch
+//!    panicked is quarantined by name with the same backoff, and
+//!    `ImplPref::Auto` stops routing to it.  While quarantined, traffic
+//!    for either degrades to the interpreter oracle — bit-for-bit the
 //!    same results, slower — counted by [`Metrics::degraded_requests`].
 //! 4. **The service** — admission is deadline-aware: a saturated
 //!    in-flight gate refuses new batched work after
@@ -87,10 +89,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Drain the router's accumulated counters — plan-cache evictions,
-/// fusion-pass stats, verifier stats, and quarantine events — into the
-/// metrics sink.  Every serving path that may have compiled (or evicted,
-/// or quarantined) a plan calls this one helper, so a counter added to
-/// the router is surfaced on all arms at once.
+/// fusion-pass stats, verifier stats, quarantine events, and
+/// auto-routing decisions — into the metrics sink.  Every serving path
+/// that may have compiled (or evicted, or quarantined, or routed) a plan
+/// calls this one helper, so a counter added to the router is surfaced
+/// on all arms at once.
 fn sync_router_counters(metrics: &Metrics, router: &Router) {
     metrics.record_plan_cache_evictions(router.take_plan_cache_evictions());
     let (fused, copies) = router.take_fusion_counters();
@@ -98,6 +101,8 @@ fn sync_router_counters(metrics: &Metrics, router: &Router) {
     let (verified, ns) = router.take_verify_counters();
     metrics.record_plan_verification(verified, ns);
     metrics.record_quarantined_plans(router.take_quarantine_counters());
+    let (to_plan, to_artifact) = router.take_auto_routed();
+    metrics.record_auto_routed(to_plan, to_artifact);
 }
 
 /// Coordinator configuration.
@@ -176,8 +181,16 @@ impl Coordinator {
 
     /// Build from a loaded registry.
     pub fn new(registry: Registry, config: CoordinatorConfig) -> Result<Self> {
-        let engine = EngineHandle::spawn(registry.clone())?;
         let router = Arc::new(Router::new(registry, config.router.clone()));
+        #[cfg(not(feature = "vaccel"))]
+        let engine = EngineHandle::spawn(router.registry().clone())?;
+        #[cfg(feature = "vaccel")]
+        let engine = Self::spawn_vaccel(&router);
+        // Arm or disarm the router's artifact arm from the backend's
+        // typed capability probe — `ImplPref::Auto` never routes to a
+        // backend that reported it cannot execute (no execute-time
+        // "runtime unavailable" string matching anywhere on this path).
+        router.set_artifact_arm(engine.capability().can_execute);
         let batcher = Arc::new(Batcher::new(config.batcher));
         let metrics = Arc::new(Metrics::new());
         let inflight = InflightGate::new(config.max_inflight_batched, Arc::clone(&metrics));
@@ -204,6 +217,32 @@ impl Coordinator {
             coord.start_drain_loop();
         }
         Ok(coord)
+    }
+
+    /// Build the virtual accelerator backend: specialize a linear program
+    /// for every manifest artifact whose `(op, input shapes)` lowers
+    /// through the router's graph builder — the same lowering the
+    /// fallback plans compile, so the loaded programs dispatch identical
+    /// kernels and results stay bit-for-bit oracle-equal (bf16 manifest
+    /// entries are computed in f32, exactly like the fallback path).
+    /// Entries that fail to lower or load are skipped: the artifact arm
+    /// simply reports them as unknown and traffic falls back.
+    #[cfg(feature = "vaccel")]
+    fn spawn_vaccel(router: &Router) -> EngineHandle {
+        let engine = Arc::new(crate::runtime::VaccelEngine::with_defaults());
+        for meta in router.registry().entries() {
+            let loaded = OpKind::parse(&meta.op)
+                .and_then(|op| {
+                    let shapes: Vec<Vec<usize>> =
+                        meta.inputs.iter().map(|s| s.shape.clone()).collect();
+                    router.compile_artifact_plan(op, &shapes)
+                })
+                .and_then(|plan| engine.load(&meta.name, &plan).map_err(Into::into));
+            if let Err(e) = loaded {
+                eprintln!("tina: vaccel skipped artifact '{}': {e:#}", meta.name);
+            }
+        }
+        EngineHandle::vaccel(engine)
     }
 
     fn start_drain_loop(&self) {
@@ -239,11 +278,14 @@ impl Coordinator {
                     let submitted = match batch.key.clone() {
                         BatchKey::Artifact { name, batch: cap } => {
                             let engine = engine.clone();
+                            let router = Arc::clone(&router);
                             let metrics = Arc::clone(&metrics);
                             let FormedBatch { input, rows, .. } = batch;
                             exec_pool.submit_timeout(
                                 move || {
-                                    exec_artifact_batch(&engine, &metrics, &name, cap, &input, rows)
+                                    exec_artifact_batch(
+                                        &engine, &router, &metrics, &name, cap, &input, rows,
+                                    )
                                 },
                                 submit_wait,
                             )
@@ -282,7 +324,8 @@ impl Coordinator {
         &self.router
     }
 
-    /// The PJRT engine handle.
+    /// The execution-backend handle (PJRT engine thread, or the virtual
+    /// accelerator under `--features vaccel`).
     pub fn engine(&self) -> &EngineHandle {
         &self.engine
     }
@@ -385,6 +428,32 @@ impl Coordinator {
 
         match target {
             Target::Artifact { name, pad_batch } => {
+                // degradation ladder, artifact arm: a quarantined artifact
+                // serves from the interpreter oracle (bit-for-bit, slower)
+                // while it backs off — for every pref.  Auto already
+                // avoids quarantined artifacts at routing; this covers
+                // strict prefs and races with an in-flight quarantine.
+                if self.router.is_artifact_quarantined(&name) {
+                    self.metrics.record_degraded_requests(1);
+                    let shapes: Vec<Vec<usize>> =
+                        req.inputs.iter().map(|t| t.shape().to_vec()).collect();
+                    let key = PlanKey::for_shapes(req.op, &shapes);
+                    let interp = match self.router.interpreter(&key, &req) {
+                        Ok(it) => it,
+                        Err(e) => {
+                            self.completion(&slot, op, String::new(), t0, None, deadline)
+                                .fail(e);
+                            return slot;
+                        }
+                    };
+                    let completion =
+                        self.completion(&slot, op, format!("interp:{op}"), t0, None, deadline);
+                    let inputs = req.inputs;
+                    self.pool.submit(move || {
+                        completion.complete(interp.run(&inputs));
+                    });
+                    return slot;
+                }
                 let batchable = self.config.batching
                     && req.op.batchable()
                     && req.inputs.len() == 1
@@ -406,11 +475,35 @@ impl Coordinator {
                     self.batcher.enqueue(key, req.inputs[0].clone(), completion);
                 } else {
                     let engine = self.engine.clone();
+                    let router = Arc::clone(&self.router);
+                    let metrics = Arc::clone(&self.metrics);
+                    let op_kind = req.op;
                     let completion =
                         self.completion(&slot, op, name.clone(), t0, None, deadline);
                     let inputs = req.inputs;
+                    let shapes: Vec<Vec<usize>> =
+                        inputs.iter().map(|t| t.shape().to_vec()).collect();
+                    let exec_rows = inputs
+                        .first()
+                        .and_then(|t| t.shape().first().copied())
+                        .unwrap_or(1)
+                        .max(1);
                     self.pool.submit(move || {
-                        completion.complete(engine.execute(&name, inputs));
+                        let t_run = Instant::now();
+                        let result = engine.execute(&name, inputs);
+                        if result.is_ok() {
+                            if engine.backend_name() == "vaccel" {
+                                metrics.record_vaccel_batch();
+                            }
+                            // feed the artifact arm of the Auto latency
+                            // table: per-row ns over the executed rows
+                            router.record_artifact_latency(
+                                op_kind,
+                                &shapes,
+                                t_run.elapsed().as_nanos() as f64 / exec_rows as f64,
+                            );
+                        }
+                        completion.complete(result);
                     });
                 }
             }
@@ -479,7 +572,15 @@ impl Coordinator {
                 };
                 let completion =
                     self.completion(&slot, op, format!("interp:{op}"), t0, None, deadline);
+                let op_kind = req.op;
                 let inputs = req.inputs;
+                let shapes: Vec<Vec<usize>> =
+                    inputs.iter().map(|t| t.shape().to_vec()).collect();
+                let exec_rows = inputs
+                    .first()
+                    .and_then(|t| t.shape().first().copied())
+                    .unwrap_or(1)
+                    .max(1);
                 let router = Arc::clone(&self.router);
                 let metrics = Arc::clone(&self.metrics);
                 self.pool.submit(move || {
@@ -488,7 +589,17 @@ impl Coordinator {
                     // never the worker or the service
                     let run = catch_unwind(AssertUnwindSafe(|| {
                         crate::testing::faults::fire("exec.direct")?;
-                        planned.run(&inputs)
+                        let t_run = Instant::now();
+                        let out = planned.run(&inputs);
+                        if out.is_ok() {
+                            // feed the plan arm of the Auto latency table
+                            router.record_plan_latency(
+                                op_kind,
+                                &shapes,
+                                t_run.elapsed().as_nanos() as f64 / exec_rows as f64,
+                            );
+                        }
+                        out
                     }));
                     match run {
                         Ok(result) => completion.complete(result),
@@ -576,11 +687,16 @@ fn shed_expired(rows: Vec<Pending>, metrics: &Metrics) -> Vec<(usize, Pending)> 
 }
 
 /// Execute one artifact batch on an exec-pool worker: shed expired rows,
-/// run the engine under `catch_unwind`, scatter per-row outputs.  A panic
-/// fails only this batch's waiters ([`Metrics::exec_panics`]); artifacts
-/// have no plan key, so there is nothing to quarantine.
+/// serve from the interpreter oracle while the artifact is quarantined,
+/// otherwise run the engine under `catch_unwind` and scatter per-row
+/// outputs.  Success feeds the artifact arm of the router's Auto latency
+/// table (per-row EWMA) and — on the vaccel backend — the
+/// [`Metrics::vaccel_batches`] counter; a panic fails only this batch's
+/// waiters ([`Metrics::exec_panics`]) and quarantines the artifact name
+/// with the same capped exponential backoff plan keys get.
 fn exec_artifact_batch(
     engine: &EngineHandle,
+    router: &Arc<Router>,
     metrics: &Metrics,
     name: &str,
     cap: usize,
@@ -591,6 +707,27 @@ fn exec_artifact_batch(
     if live.is_empty() {
         return;
     }
+    let op = router
+        .registry()
+        .get(name)
+        .and_then(|meta| OpKind::parse(&meta.op).ok());
+    let shapes = [input.shape().to_vec()];
+    if let Some(op) = op {
+        if router.is_artifact_quarantined(name) {
+            // degradation ladder, artifact arm: the interpreter oracle
+            // serves the whole batch bit-for-bit while the artifact
+            // backs off (the Auto route stops picking it, but rows
+            // already coalesced under its key still settle here)
+            metrics.record_degraded_requests(live.len() as u64);
+            let result = router
+                .interpreter_for_shapes(op, &shapes)
+                .and_then(|it| it.run(std::slice::from_ref(input)));
+            sync_router_counters(metrics, router);
+            scatter_indexed_results(live, result);
+            return;
+        }
+    }
+    let t_exec = Instant::now();
     let result = catch_unwind(AssertUnwindSafe(|| {
         crate::testing::faults::fire("exec.batch.artifact")?;
         engine.execute(name, vec![input.clone()])
@@ -601,14 +738,27 @@ fn exec_artifact_batch(
             // coalescing stats or the fill ratio
             if result.is_ok() {
                 metrics.record_batch(live.len(), cap - live.len());
+                if engine.backend_name() == "vaccel" {
+                    metrics.record_vaccel_batch();
+                }
+                if let Some(op) = op {
+                    router.record_artifact_latency(
+                        op,
+                        &shapes,
+                        t_exec.elapsed().as_nanos() as f64 / cap.max(1) as f64,
+                    );
+                }
             }
             scatter_indexed_results(live, result);
         }
         Err(_) => {
             metrics.record_exec_panic();
+            router.quarantine_artifact(name, "panicked during batched execution");
+            sync_router_counters(metrics, router);
             for (_, row) in live {
                 row.completion.fail(anyhow!(
-                    "artifact '{name}' batch panicked during execution (contained; batch failed)"
+                    "artifact '{name}' batch panicked during execution (contained; \
+                     artifact quarantined)"
                 ));
             }
         }
@@ -655,7 +805,18 @@ fn exec_fallback_batch(
         router.planned_for_shapes(op, &shapes).and_then(|(plan, hit)| {
             metrics.record_plan_cache_bucketed(bucket, hit);
             sync_router_counters(metrics, router);
-            plan.run_rows(std::slice::from_ref(input), gather_n)
+            let t_run = Instant::now();
+            let out = plan.run_rows(std::slice::from_ref(input), gather_n);
+            if out.is_ok() {
+                // compile-on-miss is excluded: the Auto latency table
+                // compares steady-state execution of the two arms
+                router.record_plan_latency(
+                    op,
+                    &shapes,
+                    t_run.elapsed().as_nanos() as f64 / bucket.max(1) as f64,
+                );
+            }
+            out
         })
     }));
     match exec {
@@ -1174,5 +1335,188 @@ mod tests {
             vec![Tensor::randn(&[1, 128], 2)],
         ));
         assert!(late.wait().is_err(), "post-shutdown batched submit must fail");
+    }
+
+    /// Registry with real fir artifacts but no HLO files on disk.  The
+    /// vaccel backend serves these from manifest shapes alone (programs
+    /// are lowered, not read from disk); the PJRT stub cannot, so its
+    /// probe disarms the Auto artifact arm.
+    fn fir_registry() -> Registry {
+        Registry::from_manifest_text(
+            PathBuf::from("/nonexistent"),
+            r#"{
+              "version": 1,
+              "entries": [
+                {"name": "fir_tina_f32_B1_L1024", "op": "fir", "impl": "tina",
+                 "dtype": "f32", "params": {"l": 1024, "taps": 64, "batch": 1},
+                 "inputs": [{"shape": [1, 1024], "dtype": "float32"}],
+                 "outputs": [{"shape": [1, 961], "dtype": "float32"}],
+                 "file": "a.hlo.txt"},
+                {"name": "fir_tina_f32_B8_L1024", "op": "fir", "impl": "tina",
+                 "dtype": "f32", "params": {"l": 1024, "taps": 64, "batch": 8},
+                 "inputs": [{"shape": [8, 1024], "dtype": "float32"}],
+                 "outputs": [{"shape": [8, 961], "dtype": "float32"}],
+                 "file": "b.hlo.txt"}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn fir_coordinator(batching: bool) -> Coordinator {
+        Coordinator::new(
+            fir_registry(),
+            CoordinatorConfig {
+                batching,
+                workers: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[cfg(not(feature = "vaccel"))]
+    #[test]
+    fn stub_probe_disarms_the_auto_artifact_arm() {
+        // the PJRT stub cannot compile, so the typed capability probe
+        // reports can_execute=false and Auto traffic never touches the
+        // artifact arm — no execute-time "runtime unavailable" errors
+        let c = fir_coordinator(false);
+        assert!(!c.router().artifact_arm_live(), "stub probe must disarm");
+        let cap = c.engine().capability();
+        assert_eq!(cap.backend, "pjrt");
+        assert!(!cap.can_execute);
+        let x = Tensor::randn(&[1, 1024], 1);
+        let resp = c.execute(OpRequest::new(OpKind::Fir, vec![x])).unwrap();
+        assert_eq!(resp.served_by, "interp:fir", "Auto degrades to the plan arm");
+    }
+
+    #[cfg(feature = "vaccel")]
+    #[test]
+    fn vaccel_probe_arms_auto_and_serves_artifacts_bitwise() {
+        let c = fir_coordinator(false);
+        let cap = c.engine().capability();
+        assert_eq!(cap.backend, "vaccel");
+        assert!(cap.can_execute, "loaded programs must arm the backend: {}", cap.detail);
+        assert!(c.router().artifact_arm_live());
+        // exact-shape Auto request: unmeasured artifact arm is explored
+        let x = Tensor::randn(&[8, 1024], 3);
+        let resp = c
+            .execute(OpRequest::new(OpKind::Fir, vec![x.clone()]))
+            .unwrap();
+        assert_eq!(resp.served_by, "fir_tina_f32_B8_L1024");
+        assert_eq!(c.metrics().vaccel_batches.load(Ordering::Relaxed), 1);
+        // oracle contract: bit-for-bit the interpreter result
+        let req = OpRequest::new(OpKind::Fir, vec![x.clone()]).with_impl(ImplPref::Interp);
+        let Target::Interp { key } = c.router().route(&req).unwrap() else {
+            panic!("expected interp target");
+        };
+        let want = c
+            .router()
+            .interpreter(&key, &req)
+            .unwrap()
+            .run(std::slice::from_ref(&x))
+            .unwrap();
+        assert_eq!(resp.outputs.len(), want.len());
+        for (a, b) in resp.outputs.iter().zip(&want) {
+            assert_eq!(a, b, "vaccel output diverged from the interpreter oracle");
+        }
+    }
+
+    #[cfg(feature = "vaccel")]
+    #[test]
+    fn auto_follows_measured_latency_between_the_arms() {
+        let c = fir_coordinator(false);
+        let shapes = [vec![8usize, 1024]];
+        // plant measurements: the plan arm is 5x faster than the artifact
+        c.router().record_plan_latency(OpKind::Fir, &shapes, 100.0);
+        c.router()
+            .record_artifact_latency(OpKind::Fir, &shapes, 500.0);
+        let x = Tensor::randn(&[8, 1024], 4);
+        let resp = c
+            .execute(OpRequest::new(OpKind::Fir, vec![x.clone()]))
+            .unwrap();
+        assert_eq!(resp.served_by, "interp:fir", "Auto must pick the faster arm");
+        assert!(c.metrics().auto_routed_plan.load(Ordering::Relaxed) >= 1);
+        // strict pref still forces the artifact arm
+        let strict = c
+            .execute(OpRequest::new(OpKind::Fir, vec![x]).with_impl(ImplPref::Tina))
+            .unwrap();
+        assert_eq!(strict.served_by, "fir_tina_f32_B8_L1024");
+    }
+
+    #[cfg(feature = "vaccel")]
+    #[test]
+    fn batched_artifact_arm_rides_vaccel_bitwise() {
+        // B=1 batchable requests coalesce under the B8 artifact key and
+        // execute on the vaccel backend; rows must match the solo
+        // (batching off, interpreter-oracle-equal) results bit-for-bit
+        let batched = fir_coordinator(true);
+        let solo = empty_coordinator(false);
+        let xs: Vec<Tensor> = (0..5).map(|i| Tensor::randn(&[1, 1024], i)).collect();
+        let slots: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                batched.submit(
+                    OpRequest::new(OpKind::Fir, vec![x.clone()]).with_impl(ImplPref::Tina),
+                )
+            })
+            .collect();
+        for (x, s) in xs.iter().zip(slots) {
+            let resp = s.wait().unwrap();
+            assert_eq!(resp.served_by, "fir_tina_f32_B8_L1024");
+            assert!(resp.batched, "artifact request must ride the batcher");
+            let want = solo
+                .execute(OpRequest::new(OpKind::Fir, vec![x.clone()]))
+                .unwrap();
+            assert_eq!(resp.outputs.len(), want.outputs.len());
+            for (a, b) in resp.outputs.iter().zip(&want.outputs) {
+                assert_eq!(a, b, "batched vaccel row diverged from the solo run");
+            }
+        }
+        let m = batched.metrics();
+        assert!(m.batches_executed.load(Ordering::Relaxed) >= 1);
+        assert_eq!(
+            m.batched_requests.load(Ordering::Relaxed),
+            5,
+            "all rows must coalesce through the artifact arm"
+        );
+        assert!(m.vaccel_batches.load(Ordering::Relaxed) >= 1);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    }
+
+    #[cfg(feature = "vaccel")]
+    #[test]
+    fn quarantined_artifact_degrades_to_interpreter_and_paroles() {
+        let c = Coordinator::new(
+            fir_registry(),
+            CoordinatorConfig {
+                batching: false,
+                workers: 2,
+                router: RouterConfig {
+                    quarantine_backoff: Duration::from_millis(40),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let x = Tensor::randn(&[8, 1024], 5);
+        let req = OpRequest::new(OpKind::Fir, vec![x.clone()]).with_impl(ImplPref::Tina);
+        let baseline = c.execute(req.clone()).unwrap();
+        assert_eq!(baseline.served_by, "fir_tina_f32_B8_L1024");
+        c.router()
+            .quarantine_artifact("fir_tina_f32_B8_L1024", "test");
+        let degraded = c.execute(req.clone()).unwrap();
+        assert_eq!(degraded.served_by, "interp:fir", "stable served_by contract");
+        assert_eq!(c.metrics().degraded_requests.load(Ordering::Relaxed), 1);
+        for (a, b) in degraded.outputs.iter().zip(&baseline.outputs) {
+            assert_eq!(a, b, "degraded mode must be bit-for-bit the artifact result");
+        }
+        // after the backoff the artifact is paroled and serves again
+        std::thread::sleep(Duration::from_millis(60));
+        let paroled = c.execute(req).unwrap();
+        assert_eq!(paroled.served_by, "fir_tina_f32_B8_L1024");
+        assert_eq!(c.metrics().degraded_requests.load(Ordering::Relaxed), 1);
     }
 }

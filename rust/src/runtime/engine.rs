@@ -8,6 +8,7 @@ use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::fmt;
 use std::rc::Rc;
 
 /// Execution statistics (reset-able; used by the §Perf pass).
@@ -23,12 +24,123 @@ pub struct EngineStats {
     pub execute_ns: u64,
 }
 
+/// Typed engine failure taxonomy shared by every backend.
+///
+/// Before this existed, the only signal that a backend could not execute
+/// was a stringly `"runtime unavailable"` buried in an execute-time error
+/// chain — impossible to branch on without message matching.  Routing
+/// decisions now consume [`Capability`] (probed once, up front) and
+/// failures carry a variant the caller can classify.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// The backend cannot execute at all (stub bindings, dead worker
+    /// queue, missing runtime).  The capability probe reports this state
+    /// *before* any request is routed to the backend.
+    Unavailable {
+        /// Backend name (`"pjrt"`, `"vaccel"`).
+        backend: &'static str,
+        /// Human-readable cause.
+        reason: String,
+    },
+    /// The named artifact is not registered/loaded on this backend.
+    UnknownArtifact {
+        /// Backend name.
+        backend: &'static str,
+        /// The artifact that was requested.
+        name: String,
+    },
+    /// Inputs do not match the artifact's declared ABI.
+    Abi {
+        /// Backend name.
+        backend: &'static str,
+        /// What mismatched.
+        reason: String,
+    },
+    /// The artifact was accepted but execution failed (including a
+    /// contained kernel panic on a backend worker).
+    Execution {
+        /// Backend name.
+        backend: &'static str,
+        /// Human-readable cause.
+        reason: String,
+    },
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::Unavailable { backend, reason } => {
+                write!(f, "backend '{backend}' unavailable: {reason}")
+            }
+            EngineError::UnknownArtifact { backend, name } => {
+                write!(f, "backend '{backend}': unknown artifact '{name}'")
+            }
+            EngineError::Abi { backend, reason } => {
+                write!(f, "backend '{backend}': ABI mismatch: {reason}")
+            }
+            EngineError::Execution { backend, reason } => {
+                write!(f, "backend '{backend}': execution failed: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Result of probing a backend for execute capability.
+///
+/// Probed once (and cached) instead of discovering unavailability at
+/// execute time: the coordinator reads this at construction and tells
+/// the router whether the artifact arm is live, so `ImplPref::Auto`
+/// routing is decided against a type, not an error-message match.
+#[derive(Debug, Clone)]
+pub struct Capability {
+    /// Backend name (`"pjrt"`, `"vaccel"`).
+    pub backend: &'static str,
+    /// Whether the backend can actually execute artifacts.
+    pub can_execute: bool,
+    /// Human-readable probe detail (platform, loaded-program count, or
+    /// why the probe failed).
+    pub detail: String,
+}
+
+/// The contract every execution backend implements: a named engine that
+/// owns compiled artifacts, probes its own capability, and executes by
+/// artifact name against a declared ABI.
+///
+/// Two implementations ship: the PJRT [`Engine`] (real accelerator
+/// bindings when available; an offline stub otherwise — the probe
+/// reports which) and the feature-gated `runtime::vaccel::VaccelEngine`
+/// virtual accelerator.  Multi-threaded callers hold a
+/// [`super::handle::EngineHandle`], which dispatches to whichever
+/// backend it wraps (the PJRT client is `Rc`-based and lives on a
+/// dedicated thread; the vaccel engine is `Sync` and is called
+/// directly).
+pub trait Backend {
+    /// Stable backend name (used in metrics and error taxonomy).
+    fn name(&self) -> &'static str;
+
+    /// Probe (or return the cached) execute capability.
+    fn capability(&self) -> Capability;
+
+    /// Execute an artifact by name on host tensors, ABI-checked.
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Warm whatever per-artifact state execution needs (compile cache,
+    /// loaded program).
+    fn prepare(&self, name: &str) -> Result<()>;
+
+    /// Snapshot of accumulated statistics.
+    fn stats(&self) -> EngineStats;
+}
+
 /// PJRT CPU engine with a per-artifact executable cache.
 pub struct Engine {
     client: xla::PjRtClient,
     registry: Registry,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     stats: RefCell<EngineStats>,
+    capability: RefCell<Option<Capability>>,
 }
 
 impl Engine {
@@ -40,6 +152,7 @@ impl Engine {
             registry,
             cache: RefCell::new(HashMap::new()),
             stats: RefCell::new(EngineStats::default()),
+            capability: RefCell::new(None),
         })
     }
 
@@ -68,6 +181,45 @@ impl Engine {
         *self.stats.borrow_mut() = EngineStats::default();
     }
 
+    /// Probe (once, cached) whether this engine can actually execute.
+    ///
+    /// The offline `xla` stub compiles fine but fails every compile /
+    /// execute call at runtime; previously that surfaced as a stringly
+    /// `"runtime unavailable"` error at execute time.  The probe attempts
+    /// to [`Engine::prepare`] the first registered artifact and classifies
+    /// the outcome, so callers (the coordinator, the router's artifact
+    /// arm) learn availability up front as a typed [`Capability`].
+    pub fn capability(&self) -> Capability {
+        if let Some(cap) = self.capability.borrow().as_ref() {
+            return cap.clone();
+        }
+        let cap = self.probe();
+        *self.capability.borrow_mut() = Some(cap.clone());
+        cap
+    }
+
+    fn probe(&self) -> Capability {
+        let Some(first) = self.registry.entries().first() else {
+            return Capability {
+                backend: "pjrt",
+                can_execute: false,
+                detail: "no artifacts registered".to_string(),
+            };
+        };
+        match self.prepare(&first.name) {
+            Ok(_) => Capability {
+                backend: "pjrt",
+                can_execute: true,
+                detail: format!("platform '{}'", self.platform()),
+            },
+            Err(e) => Capability {
+                backend: "pjrt",
+                can_execute: false,
+                detail: format!("probe compile of '{}' failed: {e:#}", first.name),
+            },
+        }
+    }
+
     /// Compile (or fetch from cache) the executable for an artifact.
     pub fn prepare(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.cache.borrow().get(name) {
@@ -76,7 +228,12 @@ impl Engine {
         let meta = self
             .registry
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            .ok_or_else(|| {
+                anyhow::Error::from(EngineError::UnknownArtifact {
+                    backend: "pjrt",
+                    name: name.to_string(),
+                })
+            })?;
         let path = self.registry.hlo_path(meta);
         let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
@@ -105,7 +262,12 @@ impl Engine {
         let meta = self
             .registry
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            .ok_or_else(|| {
+                anyhow::Error::from(EngineError::UnknownArtifact {
+                    backend: "pjrt",
+                    name: name.to_string(),
+                })
+            })?;
         self.check_inputs(meta, inputs)?;
         let exe = self.prepare(name)?;
 
@@ -189,7 +351,12 @@ impl Engine {
         let meta = self
             .registry
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            .ok_or_else(|| {
+                anyhow::Error::from(EngineError::UnknownArtifact {
+                    backend: "pjrt",
+                    name: name.to_string(),
+                })
+            })?;
         let exe = self.prepare(name)?;
         let t0 = std::time::Instant::now();
         let result = exe
@@ -229,6 +396,28 @@ impl Engine {
     /// Drop all cached executables (frees PJRT memory).
     pub fn clear_cache(&self) {
         self.cache.borrow_mut().clear();
+    }
+}
+
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn capability(&self) -> Capability {
+        Engine::capability(self)
+    }
+
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Engine::execute(self, name, inputs)
+    }
+
+    fn prepare(&self, name: &str) -> Result<()> {
+        Engine::prepare(self, name).map(|_| ())
+    }
+
+    fn stats(&self) -> EngineStats {
+        Engine::stats(self)
     }
 }
 

@@ -1,13 +1,17 @@
-//! Send + Clone handle to an [`Engine`] running on its own thread.
+//! Send + Clone handle to an execution backend.
 //!
-//! The `xla` crate's PJRT client is `Rc`-based, so the engine itself cannot
-//! cross threads.  `EngineHandle` owns a dedicated engine thread and
-//! forwards execution requests over an mpsc channel, returning results
-//! through one-shot slots.  This is the execution backend the coordinator
-//! workers share.
+//! The `xla` crate's PJRT client is `Rc`-based, so that engine cannot
+//! cross threads: the handle owns a dedicated engine thread and forwards
+//! execution requests over an mpsc channel, returning results through
+//! one-shot slots.  The feature-gated virtual accelerator
+//! ([`super::vaccel::VaccelEngine`]) is `Sync` and is dispatched to
+//! directly through a shared `Arc`.  Either way the coordinator workers
+//! see one uniform, backend-agnostic handle: `execute` / `prepare` /
+//! `stats` / [`EngineHandle::capability`] /
+//! [`EngineHandle::backend_name`].
 
 use super::artifact::Registry;
-use super::engine::{Engine, EngineStats};
+use super::engine::{Capability, Engine, EngineStats};
 use crate::tensor::Tensor;
 use crate::util::threadpool::OneShot;
 use anyhow::{anyhow, Result};
@@ -27,22 +31,40 @@ enum Request {
     Stats {
         reply: OneShot<EngineStats>,
     },
+    Capability {
+        reply: OneShot<Capability>,
+    },
     Shutdown,
 }
 
-/// Cloneable, Send handle to a dedicated engine thread.
+/// Cloneable, Send handle to an execution backend (a dedicated PJRT
+/// engine thread, or a shared virtual accelerator under
+/// `--features vaccel`).
 pub struct EngineHandle {
-    tx: Sender<Request>,
-    // joined on explicit shutdown; detached otherwise
-    _thread: std::sync::Arc<EngineThread>,
+    inner: HandleInner,
+}
+
+enum HandleInner {
+    Pjrt {
+        tx: Sender<Request>,
+        // joined on explicit shutdown; detached otherwise
+        _thread: std::sync::Arc<EngineThread>,
+    },
+    #[cfg(feature = "vaccel")]
+    Vaccel(std::sync::Arc<super::vaccel::VaccelEngine>),
 }
 
 impl Clone for EngineHandle {
     fn clone(&self) -> Self {
-        EngineHandle {
-            tx: self.tx.clone(),
-            _thread: std::sync::Arc::clone(&self._thread),
-        }
+        let inner = match &self.inner {
+            HandleInner::Pjrt { tx, _thread } => HandleInner::Pjrt {
+                tx: tx.clone(),
+                _thread: std::sync::Arc::clone(_thread),
+            },
+            #[cfg(feature = "vaccel")]
+            HandleInner::Vaccel(engine) => HandleInner::Vaccel(std::sync::Arc::clone(engine)),
+        };
+        EngineHandle { inner }
     }
 }
 
@@ -61,7 +83,7 @@ impl Drop for EngineThread {
 }
 
 impl EngineHandle {
-    /// Spawn an engine thread over a registry.
+    /// Spawn a PJRT engine thread over a registry.
     pub fn spawn(registry: Registry) -> Result<EngineHandle> {
         let (tx, rx) = channel::<Request>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
@@ -91,6 +113,7 @@ impl EngineHandle {
                             reply.set(engine.prepare(&name).map(|_| ()));
                         }
                         Request::Stats { reply } => reply.set(engine.stats()),
+                        Request::Capability { reply } => reply.set(engine.capability()),
                         Request::Shutdown => break,
                     }
                 }
@@ -99,11 +122,13 @@ impl EngineHandle {
             .recv()
             .map_err(|_| anyhow!("engine thread died during startup"))??;
         Ok(EngineHandle {
-            tx: tx.clone(),
-            _thread: std::sync::Arc::new(EngineThread {
-                tx,
-                join: std::sync::Mutex::new(Some(join)),
-            }),
+            inner: HandleInner::Pjrt {
+                tx: tx.clone(),
+                _thread: std::sync::Arc::new(EngineThread {
+                    tx,
+                    join: std::sync::Mutex::new(Some(join)),
+                }),
+            },
         })
     }
 
@@ -112,39 +137,102 @@ impl EngineHandle {
         Self::spawn(Registry::load(dir)?)
     }
 
-    /// Execute an artifact (blocking until the engine thread replies).
+    /// Wrap a shared virtual accelerator — no dedicated thread; the
+    /// engine is `Sync` and calls dispatch directly into its bounded
+    /// worker queue.
+    #[cfg(feature = "vaccel")]
+    pub fn vaccel(engine: std::sync::Arc<super::vaccel::VaccelEngine>) -> EngineHandle {
+        EngineHandle {
+            inner: HandleInner::Vaccel(engine),
+        }
+    }
+
+    /// Stable name of the backend this handle dispatches to.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.inner {
+            HandleInner::Pjrt { .. } => "pjrt",
+            #[cfg(feature = "vaccel")]
+            HandleInner::Vaccel(_) => "vaccel",
+        }
+    }
+
+    /// Typed capability probe of the underlying backend.  A dead engine
+    /// thread reports as not-executable rather than erroring.
+    pub fn capability(&self) -> Capability {
+        match &self.inner {
+            HandleInner::Pjrt { tx, .. } => {
+                let reply = OneShot::new();
+                if tx
+                    .send(Request::Capability {
+                        reply: reply.clone(),
+                    })
+                    .is_err()
+                {
+                    return Capability {
+                        backend: "pjrt",
+                        can_execute: false,
+                        detail: "engine thread gone".to_string(),
+                    };
+                }
+                reply.wait()
+            }
+            #[cfg(feature = "vaccel")]
+            HandleInner::Vaccel(engine) => engine.capability(),
+        }
+    }
+
+    /// Execute an artifact (blocking until the backend replies).
     pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
-        let reply = OneShot::new();
-        self.tx
-            .send(Request::Execute {
-                name: name.to_string(),
-                inputs,
-                reply: reply.clone(),
-            })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        reply.wait()
+        match &self.inner {
+            HandleInner::Pjrt { tx, .. } => {
+                let reply = OneShot::new();
+                tx.send(Request::Execute {
+                    name: name.to_string(),
+                    inputs,
+                    reply: reply.clone(),
+                })
+                .map_err(|_| anyhow!("engine thread gone"))?;
+                reply.wait()
+            }
+            #[cfg(feature = "vaccel")]
+            HandleInner::Vaccel(engine) => engine.execute(name, &inputs),
+        }
     }
 
-    /// Warm the executable cache for an artifact.
+    /// Warm the backend's per-artifact state (executable cache / loaded
+    /// program check).
     pub fn prepare(&self, name: &str) -> Result<()> {
-        let reply = OneShot::new();
-        self.tx
-            .send(Request::Prepare {
-                name: name.to_string(),
-                reply: reply.clone(),
-            })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        reply.wait()
+        match &self.inner {
+            HandleInner::Pjrt { tx, .. } => {
+                let reply = OneShot::new();
+                tx.send(Request::Prepare {
+                    name: name.to_string(),
+                    reply: reply.clone(),
+                })
+                .map_err(|_| anyhow!("engine thread gone"))?;
+                reply.wait()
+            }
+            #[cfg(feature = "vaccel")]
+            HandleInner::Vaccel(engine) => {
+                use super::engine::Backend;
+                engine.prepare(name)
+            }
+        }
     }
 
-    /// Engine-side statistics snapshot.
+    /// Backend-side statistics snapshot.
     pub fn stats(&self) -> Result<EngineStats> {
-        let reply = OneShot::new();
-        self.tx
-            .send(Request::Stats {
-                reply: reply.clone(),
-            })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        Ok(reply.wait())
+        match &self.inner {
+            HandleInner::Pjrt { tx, .. } => {
+                let reply = OneShot::new();
+                tx.send(Request::Stats {
+                    reply: reply.clone(),
+                })
+                .map_err(|_| anyhow!("engine thread gone"))?;
+                Ok(reply.wait())
+            }
+            #[cfg(feature = "vaccel")]
+            HandleInner::Vaccel(engine) => Ok(engine.stats()),
+        }
     }
 }

@@ -1,17 +1,26 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
-//! by `make artifacts` and executes them on the CPU PJRT client.
+//! Execution backends behind one engine contract.
 //!
 //! * [`artifact`] — manifest.json parsing and the artifact registry;
-//! * [`engine`] — single-threaded engine: HLO text -> compile -> execute,
-//!   with an executable cache (PJRT handles are `Rc`-based and not Send);
-//! * [`handle`] — a Send + Clone handle that owns an engine on a dedicated
-//!   thread and serializes execution requests through a channel; this is
-//!   what the multi-threaded coordinator talks to.
+//! * [`engine`] — the PJRT backend: HLO text -> compile -> execute with
+//!   an executable cache (PJRT handles are `Rc`-based and not Send),
+//!   plus the backend-agnostic pieces of the contract: the [`Backend`]
+//!   trait, the typed [`EngineError`] taxonomy, and the [`Capability`]
+//!   probe result;
+//! * [`handle`] — a Send + Clone handle the multi-threaded coordinator
+//!   talks to; wraps either a dedicated PJRT engine thread or (under
+//!   `--features vaccel`) a shared virtual accelerator;
+//! * [`vaccel`] *(feature-gated)* — the virtual accelerator backend:
+//!   compiled `ExecPlan`s specialized once at load into linear programs
+//!   and executed on a bounded device-style worker queue.
 
 pub mod artifact;
 pub mod engine;
 pub mod handle;
+#[cfg(feature = "vaccel")]
+pub mod vaccel;
 
 pub use artifact::{ArtifactMeta, Registry, TensorSpec};
-pub use engine::Engine;
+pub use engine::{Backend, Capability, Engine, EngineError, EngineStats};
 pub use handle::EngineHandle;
+#[cfg(feature = "vaccel")]
+pub use vaccel::VaccelEngine;

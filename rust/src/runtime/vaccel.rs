@@ -1,0 +1,563 @@
+//! The virtual accelerator backend (`--features vaccel`): a second,
+//! self-contained implementation of the engine contract that executes
+//! compiled [`ExecPlan`]s through the load-time specializer
+//! ([`LinearProgram`]) with device-style semantics:
+//!
+//! * **explicit artifact lifecycle** — [`VaccelEngine::load`] specializes
+//!   a plan once (the device "JIT"); [`VaccelEngine::unload`] frees it;
+//!   executing an unloaded name is a typed
+//!   [`EngineError::UnknownArtifact`], not a stringly error;
+//! * **capability probe** — [`VaccelEngine::capability`] reports up
+//!   front whether the backend can execute (programs loaded, workers
+//!   alive), so the router arms the artifact arm against a type;
+//! * **bounded command queue** — executions are submitted to a
+//!   fixed-depth queue drained by a small set of named worker threads
+//!   (`tina-vaccel-{i}`), mirroring a device's command processor; a full
+//!   queue applies backpressure to the submitter instead of spawning
+//!   unbounded work;
+//! * **fault containment** — a kernel panic on a worker is caught on
+//!   that worker and surfaced to the submitter as a typed
+//!   [`EngineError::Execution`]; the worker survives to serve the next
+//!   job.
+//!
+//! The oracle contract carries over unchanged: the specializer dispatches
+//! into the exact same `fused` kernels as the planned executor, so vaccel
+//! output is **bit-for-bit** equal to the interpreter (asserted per
+//! random graph by the differential fuzzer in `rust/tests/properties.rs`
+//! and end-to-end by the coordinator tests).
+
+use super::engine::{Backend, Capability, EngineError, EngineStats};
+use crate::tensor::Tensor;
+use crate::tina::{ExecPlan, LinearProgram};
+use crate::util::threadpool::OneShot;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Default worker threads draining the command queue.
+pub const DEFAULT_WORKERS: usize = 2;
+
+/// Default command-queue depth (submissions beyond this block).
+pub const DEFAULT_QUEUE_DEPTH: usize = 16;
+
+/// What a submitted command asks the device to do.
+enum Work {
+    /// Run the whole program; return outputs in declaration order.
+    Batch(Vec<Tensor>),
+    /// Run the (batched) program, then gather the first `n` rows of
+    /// every output into per-request tensors (leading dim 1).
+    Rows(Vec<Tensor>, usize),
+}
+
+/// What a completed command hands back.
+enum Done {
+    Batch(Vec<Tensor>),
+    Rows(Vec<Vec<Tensor>>),
+}
+
+/// One queued command: the resolved program, its payload, and the
+/// submitter's reply slot.  The worker also reports execution
+/// nanoseconds so stats accounting stays on the submitting thread.
+struct Job {
+    program: Arc<LinearProgram>,
+    work: Work,
+    reply: OneShot<(Result<Done, EngineError>, u64)>,
+}
+
+/// The virtual accelerator: loaded linear programs plus a bounded
+/// worker set.  `Send + Sync` — unlike the PJRT [`super::Engine`], a
+/// `VaccelEngine` is shared directly (via `Arc`) rather than through a
+/// dedicated owner thread.
+pub struct VaccelEngine {
+    programs: Mutex<HashMap<String, Arc<LinearProgram>>>,
+    stats: Mutex<EngineStats>,
+    /// `Some` until drop; taking it closes the queue and stops workers.
+    queue: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl VaccelEngine {
+    /// Build an engine with an explicit worker count and queue depth
+    /// (both clamped to at least 1).
+    pub fn new(workers: usize, queue_depth: usize) -> VaccelEngine {
+        let workers = workers.max(1);
+        let (tx, rx) = sync_channel::<Job>(queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("tina-vaccel-{i}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawning vaccel worker thread")
+            })
+            .collect();
+        VaccelEngine {
+            programs: Mutex::new(HashMap::new()),
+            stats: Mutex::new(EngineStats::default()),
+            queue: Some(tx),
+            workers: handles,
+        }
+    }
+
+    /// Build an engine with the default worker/queue sizing.
+    pub fn with_defaults() -> VaccelEngine {
+        VaccelEngine::new(DEFAULT_WORKERS, DEFAULT_QUEUE_DEPTH)
+    }
+
+    /// Specialize a compiled plan and install it under `name` (the
+    /// device "artifact load").  Replaces any previous program of the
+    /// same name.  A plan that violates the kernel ABI fails here, at
+    /// load time, with a typed [`EngineError::Abi`].
+    pub fn load(&self, name: &str, plan: &ExecPlan) -> Result<(), EngineError> {
+        let t0 = Instant::now();
+        let program = LinearProgram::load(plan).map_err(|e| EngineError::Abi {
+            backend: "vaccel",
+            reason: format!("loading '{name}': {e:#}"),
+        })?;
+        {
+            let mut stats = self.stats.lock().expect("vaccel stats lock poisoned");
+            stats.compiles += 1;
+            stats.compile_ns += t0.elapsed().as_nanos() as u64;
+        }
+        self.programs
+            .lock()
+            .expect("vaccel program table poisoned")
+            .insert(name.to_string(), Arc::new(program));
+        Ok(())
+    }
+
+    /// Remove a loaded program.  Returns whether it was present.
+    pub fn unload(&self, name: &str) -> bool {
+        self.programs
+            .lock()
+            .expect("vaccel program table poisoned")
+            .remove(name)
+            .is_some()
+    }
+
+    /// Whether `name` is currently loaded.
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.programs
+            .lock()
+            .expect("vaccel program table poisoned")
+            .contains_key(name)
+    }
+
+    /// Names of all loaded programs (sorted, for stable output).
+    pub fn loaded(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .programs
+            .lock()
+            .expect("vaccel program table poisoned")
+            .keys()
+            .cloned()
+            .collect();
+        names.sort();
+        names
+    }
+
+    /// Typed capability probe: executable iff at least one program is
+    /// loaded and the command queue is alive.
+    pub fn capability(&self) -> Capability {
+        let n = self
+            .programs
+            .lock()
+            .expect("vaccel program table poisoned")
+            .len();
+        if self.queue.is_none() {
+            Capability {
+                backend: "vaccel",
+                can_execute: false,
+                detail: "command queue closed".to_string(),
+            }
+        } else if n == 0 {
+            Capability {
+                backend: "vaccel",
+                can_execute: false,
+                detail: "no programs loaded".to_string(),
+            }
+        } else {
+            Capability {
+                backend: "vaccel",
+                can_execute: true,
+                detail: format!("{n} program(s) loaded; {} worker(s)", self.workers.len()),
+            }
+        }
+    }
+
+    /// Snapshot of the accumulated statistics (`compiles` counts
+    /// [`VaccelEngine::load`] specializations).
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.lock().expect("vaccel stats lock poisoned")
+    }
+
+    /// Zero the accumulated statistics.
+    pub fn reset_stats(&self) {
+        *self.stats.lock().expect("vaccel stats lock poisoned") = EngineStats::default();
+    }
+
+    /// Execute a loaded program with typed errors (lookup, ABI check,
+    /// queue submit, reply wait).
+    pub fn try_execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        match self.submit(name, inputs, None)? {
+            Done::Batch(outputs) => Ok(outputs),
+            Done::Rows(_) => unreachable!("batch submit returned row payload"),
+        }
+    }
+
+    /// Batched-serving entry: execute once at the program's batch size,
+    /// then gather the first `rows` rows of every output into
+    /// per-request tensors (leading dim 1) — padding rows are never
+    /// gathered, mirroring `ExecPlan::run_rows_in`.
+    pub fn try_execute_rows(
+        &self,
+        name: &str,
+        inputs: &[Tensor],
+        rows: usize,
+    ) -> Result<Vec<Vec<Tensor>>, EngineError> {
+        match self.submit(name, inputs, Some(rows))? {
+            Done::Rows(rows) => Ok(rows),
+            Done::Batch(_) => unreachable!("rows submit returned batch payload"),
+        }
+    }
+
+    /// Anyhow-facing wrapper over [`VaccelEngine::try_execute`] (the
+    /// engine-contract signature).
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.try_execute(name, inputs).map_err(Into::into)
+    }
+
+    /// Anyhow-facing wrapper over [`VaccelEngine::try_execute_rows`].
+    pub fn execute_rows(
+        &self,
+        name: &str,
+        inputs: &[Tensor],
+        rows: usize,
+    ) -> Result<Vec<Vec<Tensor>>> {
+        self.try_execute_rows(name, inputs, rows).map_err(Into::into)
+    }
+
+    fn submit(
+        &self,
+        name: &str,
+        inputs: &[Tensor],
+        rows: Option<usize>,
+    ) -> Result<Done, EngineError> {
+        let program = self
+            .programs
+            .lock()
+            .expect("vaccel program table poisoned")
+            .get(name)
+            .cloned()
+            .ok_or_else(|| EngineError::UnknownArtifact {
+                backend: "vaccel",
+                name: name.to_string(),
+            })?;
+        self.check_abi(name, &program, inputs)?;
+        let queue = self.queue.as_ref().ok_or_else(|| EngineError::Unavailable {
+            backend: "vaccel",
+            reason: "command queue closed".to_string(),
+        })?;
+        let reply = OneShot::new();
+        let work = match rows {
+            None => Work::Batch(inputs.to_vec()),
+            Some(n) => Work::Rows(inputs.to_vec(), n),
+        };
+        queue
+            .send(Job {
+                program,
+                work,
+                reply: reply.clone(),
+            })
+            .map_err(|_| EngineError::Unavailable {
+                backend: "vaccel",
+                reason: "worker queue disconnected".to_string(),
+            })?;
+        let (result, elapsed_ns) = reply.wait();
+        {
+            let mut stats = self.stats.lock().expect("vaccel stats lock poisoned");
+            stats.executions += 1;
+            stats.execute_ns += elapsed_ns;
+        }
+        result
+    }
+
+    fn check_abi(
+        &self,
+        name: &str,
+        program: &LinearProgram,
+        inputs: &[Tensor],
+    ) -> Result<(), EngineError> {
+        let declared = program.input_shapes();
+        if inputs.len() != declared.len() {
+            return Err(EngineError::Abi {
+                backend: "vaccel",
+                reason: format!(
+                    "program '{name}' wants {} inputs, got {}",
+                    declared.len(),
+                    inputs.len()
+                ),
+            });
+        }
+        for (i, (t, shape)) in inputs.iter().zip(declared).enumerate() {
+            if t.shape() != shape.as_slice() {
+                return Err(EngineError::Abi {
+                    backend: "vaccel",
+                    reason: format!(
+                        "program '{name}' input {i}: shape {:?} != declared {:?}",
+                        t.shape(),
+                        shape
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for VaccelEngine {
+    fn drop(&mut self) {
+        // Closing the channel wakes every worker's recv with Err.
+        drop(self.queue.take());
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Backend for VaccelEngine {
+    fn name(&self) -> &'static str {
+        "vaccel"
+    }
+
+    fn capability(&self) -> Capability {
+        VaccelEngine::capability(self)
+    }
+
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        VaccelEngine::execute(self, name, inputs)
+    }
+
+    fn prepare(&self, name: &str) -> Result<()> {
+        if self.is_loaded(name) {
+            Ok(())
+        } else {
+            Err(EngineError::UnknownArtifact {
+                backend: "vaccel",
+                name: name.to_string(),
+            }
+            .into())
+        }
+    }
+
+    fn stats(&self) -> EngineStats {
+        VaccelEngine::stats(self)
+    }
+}
+
+impl std::fmt::Debug for VaccelEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("VaccelEngine")
+            .field("loaded", &self.loaded())
+            .field("workers", &self.workers.len())
+            .finish()
+    }
+}
+
+/// Worker drain loop: pop a command, run it with panic containment,
+/// reply with the result and the measured execution nanoseconds.
+fn worker_loop(rx: &Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = {
+            let guard = rx.lock().expect("vaccel command queue poisoned");
+            guard.recv()
+        };
+        let Ok(Job { program, work, reply }) = job else {
+            return; // queue closed: engine dropped
+        };
+        let t0 = Instant::now();
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| match work {
+            Work::Batch(inputs) => program.run(&inputs).map(Done::Batch),
+            Work::Rows(inputs, n) => program.run_rows(&inputs, n).map(Done::Rows),
+        }));
+        let result = match outcome {
+            Ok(Ok(done)) => Ok(done),
+            Ok(Err(e)) => Err(EngineError::Execution {
+                backend: "vaccel",
+                reason: format!("{e:#}"),
+            }),
+            Err(payload) => Err(EngineError::Execution {
+                backend: "vaccel",
+                reason: format!("kernel panicked: {}", panic_message(&payload)),
+            }),
+        };
+        reply.set((result, t0.elapsed().as_nanos() as u64));
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tina::lower;
+    use crate::tina::Interpreter;
+
+    fn engine() -> VaccelEngine {
+        VaccelEngine::new(2, 8)
+    }
+
+    fn load_stft(eng: &VaccelEngine, name: &str, b: usize) {
+        let graph = lower::stft(b, 320, 32, 16).unwrap();
+        let plan = ExecPlan::compile(&graph).unwrap();
+        eng.load(name, &plan).unwrap();
+    }
+
+    #[test]
+    fn executes_loaded_program_bitwise_equal_to_interpreter() {
+        let eng = engine();
+        load_stft(&eng, "stft", 2);
+        let inputs = vec![Tensor::randn(&[2, 320], 7)];
+        let want = Interpreter::new(lower::stft(2, 320, 32, 16).unwrap())
+            .unwrap()
+            .run(&inputs)
+            .unwrap();
+        let got = eng.try_execute("stft", &inputs).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a, b, "vaccel output diverged from the oracle");
+        }
+    }
+
+    #[test]
+    fn execute_rows_gathers_per_request_rows() {
+        let eng = engine();
+        load_stft(&eng, "stft_b4", 4);
+        let solo = Interpreter::new(lower::stft(1, 320, 32, 16).unwrap()).unwrap();
+        let rows: Vec<Tensor> = (0..3).map(|r| Tensor::randn(&[1, 320], 40 + r)).collect();
+        let mut data = Vec::new();
+        for r in &rows {
+            data.extend_from_slice(r.data());
+        }
+        data.resize(4 * 320, 0.0);
+        let batched = Tensor::new(&[4, 320], data).unwrap();
+        let got = eng
+            .try_execute_rows("stft_b4", std::slice::from_ref(&batched), 3)
+            .unwrap();
+        for (r, row_in) in rows.iter().enumerate() {
+            let want = solo.run(std::slice::from_ref(row_in)).unwrap();
+            for (a, b) in got[r].iter().zip(&want) {
+                assert_eq!(a, b, "row {r} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_is_typed() {
+        let eng = engine();
+        let err = eng.try_execute("nope", &[]).unwrap_err();
+        assert_eq!(
+            err,
+            EngineError::UnknownArtifact {
+                backend: "vaccel",
+                name: "nope".to_string(),
+            }
+        );
+    }
+
+    #[test]
+    fn abi_mismatch_is_typed() {
+        let eng = engine();
+        load_stft(&eng, "stft", 2);
+        let err = eng
+            .try_execute("stft", &[Tensor::randn(&[3, 320], 1)])
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Abi { backend: "vaccel", .. }),
+            "got {err:?}"
+        );
+        let err = eng.try_execute("stft", &[]).unwrap_err();
+        assert!(matches!(err, EngineError::Abi { .. }), "got {err:?}");
+    }
+
+    #[test]
+    fn unload_flips_capability_and_lookup() {
+        let eng = engine();
+        assert!(!eng.capability().can_execute, "empty engine must not arm");
+        load_stft(&eng, "stft", 1);
+        assert!(eng.capability().can_execute);
+        assert!(eng.is_loaded("stft"));
+        assert_eq!(eng.loaded(), vec!["stft".to_string()]);
+        assert!(eng.unload("stft"));
+        assert!(!eng.unload("stft"), "double unload reports absence");
+        assert!(!eng.capability().can_execute);
+        assert!(matches!(
+            eng.try_execute("stft", &[]).unwrap_err(),
+            EngineError::UnknownArtifact { .. }
+        ));
+    }
+
+    #[test]
+    fn stats_count_loads_and_executions() {
+        let eng = engine();
+        load_stft(&eng, "stft", 1);
+        let inputs = vec![Tensor::randn(&[1, 320], 3)];
+        eng.try_execute("stft", &inputs).unwrap();
+        eng.try_execute("stft", &inputs).unwrap();
+        let stats = eng.stats();
+        assert_eq!(stats.compiles, 1);
+        assert_eq!(stats.executions, 2);
+        assert!(stats.compile_ns > 0);
+        assert!(stats.execute_ns > 0);
+        eng.reset_stats();
+        assert_eq!(eng.stats().executions, 0);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_worker_set() {
+        let eng = Arc::new(engine());
+        load_stft(&eng, "stft", 1);
+        let want = Interpreter::new(lower::stft(1, 320, 32, 16).unwrap())
+            .unwrap()
+            .run(&[Tensor::randn(&[1, 320], 5)])
+            .unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let eng = Arc::clone(&eng);
+                std::thread::spawn(move || {
+                    for _ in 0..8 {
+                        let got = eng
+                            .try_execute("stft", &[Tensor::randn(&[1, 320], 5)])
+                            .unwrap();
+                        for (a, b) in got.iter().zip(&want) {
+                            assert_eq!(a, b);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(eng.stats().executions, 32);
+    }
+
+    #[test]
+    fn engine_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<VaccelEngine>();
+    }
+}

@@ -1,0 +1,710 @@
+//! [`ExecPlan`] -> [`LinearProgram`] specialization: the virtual
+//! accelerator's load-time "JIT".
+//!
+//! The planned executor re-resolves every step argument on every
+//! dispatch: locate the backing buffer, re-derive stride triples and
+//! split tables from the stored [`View`]s, re-check contiguity, re-read
+//! kernel dims out of argument shapes.  A device runtime does that work
+//! once, when an artifact is *loaded*: this module walks a compiled plan
+//! and bakes each step down to a [`LinearStep`] — the kernel thunk
+//! selected once, strides/split tables pre-extracted into fixed arrays,
+//! dense argument ranges pre-sliced to `(start, len)` windows, output
+//! lengths pre-multiplied — so execution is a straight walk over a flat
+//! step list with zero per-dispatch decisions.
+//!
+//! Buffer space is fixed at load too: a [`LinearProgram`] knows its slot
+//! sizes up front, and each pooled execution state pre-allocates every
+//! slot exactly once (the planned executor's `Arena::prepare` grow-only
+//! check runs per execution; here it does not exist at all).
+//!
+//! # Oracle contract
+//!
+//! The specialization is *structural only*.  Every [`LinearStep`]
+//! dispatches into the exact same [`fused`] kernels as the planned
+//! executor, with bit-identical dims, strides, split tables and packed
+//! panels — so the per-element reduction order, and therefore the f32
+//! rounding, is unchanged, and linear-program output is **bit-for-bit**
+//! equal to both the planned executor and the interpreter oracle.  The
+//! differential fuzzer (`rust/tests/properties.rs`) asserts this on
+//! every random graph, with the fusion pass on and off.
+//!
+//! This module is deliberately independent of the `vaccel` cargo
+//! feature: the specializer is pure compute (the benches ablate it
+//! without any feature flags); `runtime::vaccel` wraps it with device
+//! semantics (explicit load/unload, capability probe, bounded worker
+//! queue, typed errors).
+
+use super::fused;
+use super::plan::ExecPlan;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Mutex;
+
+/// Pooled execution states kept per program (mirrors the planned
+/// executor's arena pool cap).
+const STATE_POOL_CAP: usize = 8;
+
+/// Where a pre-resolved argument's bytes live at execution time.
+#[derive(Debug, Clone, Copy)]
+enum Src {
+    /// Caller input `i` (never copied).
+    External(usize),
+    /// Program-owned constant `k` (cloned from the plan at load).
+    Const(usize),
+    /// Execution-state slot `s` (pre-allocated at load size).
+    Slot(usize),
+}
+
+/// A dense argument window, pre-sliced at load: `data[start..start+len]`.
+#[derive(Debug, Clone, Copy)]
+struct DenseArg {
+    src: Src,
+    start: usize,
+    len: usize,
+}
+
+/// A strided rank-3 activation window with the stride triple and
+/// optional split table pre-extracted at load.
+#[derive(Debug, Clone, Copy)]
+struct X3Arg {
+    src: Src,
+    off: usize,
+    s: [usize; 3],
+    split0: Option<(usize, usize)>,
+    /// Pre-extracted `(tracks, cin, w)` kernel dims.
+    dims: (usize, usize, usize),
+}
+
+/// A strided rank-2 activation window (FC path; never split).
+#[derive(Debug, Clone, Copy)]
+struct X2Arg {
+    src: Src,
+    off: usize,
+    s: [usize; 2],
+    /// Pre-extracted `(rows, cin)` kernel dims.
+    dims: (usize, usize),
+}
+
+/// The weight operand of a matmul-family thunk: either a dense window or
+/// an index into the program's pre-packed NR panels.
+#[derive(Debug, Clone)]
+enum Weight {
+    Dense(DenseArg),
+    Packed(usize),
+}
+
+/// One fully pre-resolved kernel thunk.  Each variant carries exactly
+/// the values its [`fused`] kernel call needs — nothing is re-derived
+/// at dispatch time.
+#[derive(Debug, Clone)]
+enum Thunk {
+    Depthwise {
+        x: X3Arg,
+        k: DenseArg,
+        m: usize,
+        bias: DenseArg,
+    },
+    Standard {
+        x: X3Arg,
+        k: DenseArg,
+        /// Pre-extracted `(cout, taps)` of the kernel tensor.
+        ks: (usize, usize),
+        bias: DenseArg,
+    },
+    Pointwise {
+        x: X3Arg,
+        w: Weight,
+        cout: usize,
+        bias: DenseArg,
+    },
+    FullyConnected {
+        x: X2Arg,
+        w: Weight,
+        cout: usize,
+        bias: DenseArg,
+    },
+    Materialize {
+        src: Src,
+        off: usize,
+        shape: Vec<usize>,
+        strides: Vec<usize>,
+    },
+    FusedEw {
+        terms: Vec<(f32, DenseArg)>,
+    },
+}
+
+/// One step of the lowered linear program: a thunk plus its pre-sized
+/// output window.
+#[derive(Debug, Clone)]
+struct LinearStep {
+    thunk: Thunk,
+    out_slot: usize,
+    out_len: usize,
+}
+
+/// A pre-resolved program output gather.
+#[derive(Debug, Clone)]
+struct LinearOutput {
+    src: Src,
+    off: usize,
+    shape: Vec<usize>,
+    strides: Vec<usize>,
+    /// Dense fast path decided at load: contiguous outputs slice,
+    /// view-shaped outputs gather through [`fused::materialize`].
+    contiguous: bool,
+    numel: usize,
+}
+
+/// Per-execution mutable state: one pre-allocated buffer per slot,
+/// sized exactly once at load.  States are pooled on the program.
+#[derive(Debug, Default)]
+struct LinearState {
+    slots: Vec<Vec<f32>>,
+}
+
+impl LinearState {
+    fn sized(slot_sizes: &[usize]) -> LinearState {
+        LinearState {
+            slots: slot_sizes.iter().map(|&n| vec![0.0f32; n]).collect(),
+        }
+    }
+
+    /// Move a slot's buffer out for mutation (put back after the thunk).
+    fn take(&mut self, i: usize) -> Vec<f32> {
+        std::mem::take(&mut self.slots[i])
+    }
+
+    fn put(&mut self, i: usize, buf: Vec<f32>) {
+        self.slots[i] = buf;
+    }
+
+    fn slot(&self, i: usize) -> &[f32] {
+        &self.slots[i]
+    }
+}
+
+/// A compiled plan lowered to the virtual accelerator's linear form:
+/// constants and packed panels owned by the program, every step a
+/// pre-selected kernel thunk with pre-resolved strides/splits/ranges,
+/// slot sizes fixed at load, and a pool of pre-allocated execution
+/// states.  Immutable after load; `Send + Sync` (one loaded program
+/// serves many concurrent executions, like [`super::Planned`]).
+#[derive(Debug)]
+pub struct LinearProgram {
+    input_shapes: Vec<Vec<usize>>,
+    constants: Vec<Tensor>,
+    packed: Vec<Vec<f32>>,
+    steps: Vec<LinearStep>,
+    slot_sizes: Vec<usize>,
+    outputs: Vec<LinearOutput>,
+    states: Mutex<Vec<LinearState>>,
+}
+
+impl LinearProgram {
+    /// Specialize a compiled plan into its linear form.  All structural
+    /// validation the planned executor defers to dispatch time (argument
+    /// contiguity, stride ranks, split placement) happens here, once;
+    /// a plan that violates the kernel ABI fails to *load* instead of
+    /// panicking mid-execution.
+    pub fn load(plan: &ExecPlan) -> Result<LinearProgram> {
+        let steps = plan
+            .steps
+            .iter()
+            .enumerate()
+            .map(|(i, s)| lower_step(plan, i, s))
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = plan
+            .outputs
+            .iter()
+            .map(|o| LinearOutput {
+                src: lower_src(&o.loc),
+                off: o.view.offset,
+                shape: o.view.shape.clone(),
+                strides: o.view.strides.clone(),
+                contiguous: o.view.is_contiguous(),
+                numel: o.view.numel(),
+            })
+            .collect();
+        Ok(LinearProgram {
+            input_shapes: plan.input_shapes.clone(),
+            constants: plan.constants.clone(),
+            packed: plan.packed.clone(),
+            steps,
+            slot_sizes: plan.slot_sizes.clone(),
+            outputs,
+            states: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Number of lowered steps (== the plan's kernel step count).
+    pub fn step_count(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Total bytes of pre-allocated slot space per execution state.
+    pub fn state_bytes(&self) -> usize {
+        self.slot_sizes.iter().sum::<usize>() * std::mem::size_of::<f32>()
+    }
+
+    /// Declared input shapes (the program's ABI).
+    pub fn input_shapes(&self) -> &[Vec<usize>] {
+        &self.input_shapes
+    }
+
+    /// Output shapes in declaration order.
+    pub fn output_shapes(&self) -> Vec<Vec<usize>> {
+        self.outputs.iter().map(|o| o.shape.clone()).collect()
+    }
+
+    /// Execute once, pooling the execution state.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut state = self.pop_state();
+        let result = self.run_in(&mut state, inputs);
+        self.push_state(state);
+        result
+    }
+
+    /// Execute a batched program once, then scatter the first `rows`
+    /// rows of every output into per-request tensors (leading dim 1) —
+    /// mirrors [`ExecPlan::run_rows_in`] for the batched artifact arm.
+    pub fn run_rows(&self, inputs: &[Tensor], rows: usize) -> Result<Vec<Vec<Tensor>>> {
+        if rows == 0 {
+            bail!("run_rows needs at least one row");
+        }
+        for (oi, o) in self.outputs.iter().enumerate() {
+            if o.shape.is_empty() || o.shape[0] < rows {
+                bail!("output {oi} shape {:?} cannot scatter {rows} rows", o.shape);
+            }
+        }
+        let mut state = self.pop_state();
+        let result = self.execute(&mut state, inputs).and_then(|()| {
+            (0..rows)
+                .map(|r| {
+                    self.outputs
+                        .iter()
+                        .map(|o| {
+                            let d = self.bytes(o.src, inputs, &state);
+                            let off = o.off + r * o.strides[0];
+                            let rest_shape = &o.shape[1..];
+                            let rest_strides = &o.strides[1..];
+                            let n: usize = rest_shape.iter().product();
+                            let mut v = vec![0.0f32; n];
+                            fused::materialize(d, off, rest_shape, rest_strides, &mut v);
+                            let mut shape = Vec::with_capacity(o.shape.len());
+                            shape.push(1);
+                            shape.extend_from_slice(rest_shape);
+                            Tensor::new(&shape, v)
+                        })
+                        .collect::<Result<Vec<Tensor>>>()
+                })
+                .collect()
+        });
+        self.push_state(state);
+        result
+    }
+
+    fn run_in(&self, state: &mut LinearState, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.execute(state, inputs)?;
+        self.outputs
+            .iter()
+            .map(|o| {
+                let d = self.bytes(o.src, inputs, state);
+                let data = if o.contiguous {
+                    d[o.off..o.off + o.numel].to_vec()
+                } else {
+                    let mut v = vec![0.0f32; o.numel];
+                    fused::materialize(d, o.off, &o.shape, &o.strides, &mut v);
+                    v
+                };
+                Tensor::new(&o.shape, data)
+            })
+            .collect()
+    }
+
+    /// The straight-line dispatch loop: validate the input ABI, then
+    /// walk the thunks.  No per-step resolution happens here — every
+    /// stride, range and dim was fixed at load.
+    fn execute(&self, state: &mut LinearState, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.input_shapes.len() {
+            bail!(
+                "expected {} inputs, got {}",
+                self.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, shape)) in inputs.iter().zip(&self.input_shapes).enumerate() {
+            if t.shape() != shape.as_slice() {
+                bail!("input {i} shape {:?} != declared {:?}", t.shape(), shape);
+            }
+        }
+        for step in &self.steps {
+            let mut out_buf = state.take(step.out_slot);
+            {
+                let out = &mut out_buf[..step.out_len];
+                match &step.thunk {
+                    Thunk::Depthwise { x, k, m, bias } => fused::depthwise_conv(
+                        self.x3(x, inputs, state),
+                        x.dims,
+                        self.dense(*k, inputs, state),
+                        *m,
+                        self.dense(*bias, inputs, state),
+                        out,
+                    ),
+                    Thunk::Standard { x, k, ks, bias } => fused::standard_conv(
+                        self.x3(x, inputs, state),
+                        x.dims,
+                        self.dense(*k, inputs, state),
+                        *ks,
+                        self.dense(*bias, inputs, state),
+                        out,
+                    ),
+                    Thunk::Pointwise { x, w, cout, bias } => {
+                        let xv = self.x3(x, inputs, state);
+                        let b = self.dense(*bias, inputs, state);
+                        match w {
+                            Weight::Packed(pi) => fused::pointwise_conv_packed(
+                                xv,
+                                x.dims,
+                                &self.packed[*pi],
+                                *cout,
+                                b,
+                                out,
+                            ),
+                            Weight::Dense(k) => fused::pointwise_conv(
+                                xv,
+                                x.dims,
+                                self.dense(*k, inputs, state),
+                                *cout,
+                                b,
+                                out,
+                            ),
+                        }
+                    }
+                    Thunk::FullyConnected { x, w, cout, bias } => {
+                        let xv = fused::X2 {
+                            d: self.bytes(x.src, inputs, state),
+                            off: x.off,
+                            s: x.s,
+                        };
+                        let b = self.dense(*bias, inputs, state);
+                        match w {
+                            Weight::Packed(pi) => fused::fully_connected_packed(
+                                xv,
+                                x.dims,
+                                &self.packed[*pi],
+                                *cout,
+                                b,
+                                out,
+                            ),
+                            Weight::Dense(k) => fused::fully_connected(
+                                xv,
+                                x.dims,
+                                self.dense(*k, inputs, state),
+                                *cout,
+                                b,
+                                out,
+                            ),
+                        }
+                    }
+                    Thunk::Materialize {
+                        src,
+                        off,
+                        shape,
+                        strides,
+                    } => {
+                        let d = self.bytes(*src, inputs, state);
+                        fused::materialize(d, *off, shape, strides, out);
+                    }
+                    Thunk::FusedEw { terms } => {
+                        let bound: Vec<(f32, &[f32])> = terms
+                            .iter()
+                            .map(|&(sign, a)| (sign, self.dense(a, inputs, state)))
+                            .collect();
+                        fused::fused_ew(&bound, out);
+                    }
+                }
+            }
+            state.put(step.out_slot, out_buf);
+        }
+        Ok(())
+    }
+
+    fn bytes<'a>(&'a self, src: Src, inputs: &'a [Tensor], state: &'a LinearState) -> &'a [f32] {
+        match src {
+            Src::External(i) => inputs[i].data(),
+            Src::Const(k) => self.constants[k].data(),
+            Src::Slot(s) => state.slot(s),
+        }
+    }
+
+    fn dense<'a>(&'a self, a: DenseArg, inputs: &'a [Tensor], state: &'a LinearState) -> &'a [f32] {
+        &self.bytes(a.src, inputs, state)[a.start..a.start + a.len]
+    }
+
+    fn x3<'a>(&'a self, a: &X3Arg, inputs: &'a [Tensor], state: &'a LinearState) -> fused::X3<'a> {
+        fused::X3 {
+            d: self.bytes(a.src, inputs, state),
+            off: a.off,
+            s: a.s,
+            split0: a.split0,
+        }
+    }
+
+    fn pop_state(&self) -> LinearState {
+        self.states
+            .lock()
+            .expect("linear state pool poisoned")
+            .pop()
+            .unwrap_or_else(|| LinearState::sized(&self.slot_sizes))
+    }
+
+    fn push_state(&self, state: LinearState) {
+        let mut pool = self.states.lock().expect("linear state pool poisoned");
+        if pool.len() < STATE_POOL_CAP {
+            pool.push(state);
+        }
+    }
+}
+
+fn lower_src(loc: &super::plan::Loc) -> Src {
+    use super::plan::Loc;
+    match *loc {
+        Loc::External(i) => Src::External(i),
+        Loc::Const(k) => Src::Const(k),
+        Loc::Slot(s) => Src::Slot(s),
+    }
+}
+
+/// Pre-resolve a dense (contiguous) argument window, failing the load if
+/// the plan handed the kernel a strided operand.
+fn lower_dense(step: usize, what: &str, a: &super::plan::ArgRef) -> Result<DenseArg> {
+    if !a.view.is_contiguous() {
+        bail!("step {step}: {what} operand is not contiguous");
+    }
+    Ok(DenseArg {
+        src: lower_src(&a.loc),
+        start: a.view.offset,
+        len: a.view.numel(),
+    })
+}
+
+/// Pre-resolve a rank-3 activation window.
+fn lower_x3(step: usize, a: &super::plan::ArgRef) -> Result<X3Arg> {
+    if a.view.strides.len() != 3 || a.view.shape.len() != 3 {
+        bail!("step {step}: activation is rank {}, want 3", a.view.shape.len());
+    }
+    Ok(X3Arg {
+        src: lower_src(&a.loc),
+        off: a.view.offset,
+        s: [a.view.strides[0], a.view.strides[1], a.view.strides[2]],
+        split0: a.view.split0.map(|sp| (sp.inner, sp.outer_stride)),
+        dims: (a.view.shape[0], a.view.shape[1], a.view.shape[2]),
+    })
+}
+
+fn lower_step(plan: &ExecPlan, i: usize, s: &super::plan::Step) -> Result<LinearStep> {
+    use super::plan::Kernel;
+    let arg = |n: usize| -> Result<&super::plan::ArgRef> {
+        s.args.get(n).ok_or_else(|| anyhow!("step {i}: missing arg {n}"))
+    };
+    let weight = |packed: &Option<usize>, a: &super::plan::ArgRef| -> Result<Weight> {
+        match packed {
+            Some(pi) => {
+                if *pi >= plan.packed.len() {
+                    bail!("step {i}: packed panel {pi} out of range");
+                }
+                Ok(Weight::Packed(*pi))
+            }
+            None => Ok(Weight::Dense(lower_dense(i, "weight", a)?)),
+        }
+    };
+    let thunk = match &s.kernel {
+        Kernel::DepthwiseConv1d => Thunk::Depthwise {
+            x: lower_x3(i, arg(0)?)?,
+            k: lower_dense(i, "kernel", arg(1)?)?,
+            m: arg(1)?.view.shape[1],
+            bias: lower_dense(i, "bias", arg(2)?)?,
+        },
+        Kernel::StandardConv1d => {
+            let ks = &arg(1)?.view.shape;
+            Thunk::Standard {
+                x: lower_x3(i, arg(0)?)?,
+                k: lower_dense(i, "kernel", arg(1)?)?,
+                ks: (ks[0], ks[2]),
+                bias: lower_dense(i, "bias", arg(2)?)?,
+            }
+        }
+        Kernel::PointwiseConv { packed } => Thunk::Pointwise {
+            x: lower_x3(i, arg(0)?)?,
+            w: weight(packed, arg(1)?)?,
+            cout: arg(1)?.view.shape[1],
+            bias: lower_dense(i, "bias", arg(2)?)?,
+        },
+        Kernel::FullyConnected { packed } => {
+            let a = arg(0)?;
+            if a.view.split0.is_some() {
+                bail!("step {i}: FC activation carries a split view");
+            }
+            if a.view.strides.len() != 2 {
+                bail!("step {i}: FC activation is rank {}, want 2", a.view.strides.len());
+            }
+            Thunk::FullyConnected {
+                x: X2Arg {
+                    src: lower_src(&a.loc),
+                    off: a.view.offset,
+                    s: [a.view.strides[0], a.view.strides[1]],
+                    dims: (a.view.shape[0], a.view.shape[1]),
+                },
+                w: weight(packed, arg(1)?)?,
+                cout: arg(1)?.view.shape[1],
+                bias: lower_dense(i, "bias", arg(2)?)?,
+            }
+        }
+        Kernel::Materialize { .. } => {
+            let a = arg(0)?;
+            Thunk::Materialize {
+                src: lower_src(&a.loc),
+                off: a.view.offset,
+                shape: a.view.shape.clone(),
+                strides: a.view.strides.clone(),
+            }
+        }
+        Kernel::FusedEw { signs } => {
+            if signs.len() != s.args.len() {
+                bail!("step {i}: {} signs for {} args", signs.len(), s.args.len());
+            }
+            Thunk::FusedEw {
+                terms: signs
+                    .iter()
+                    .zip(&s.args)
+                    .map(|(&sign, a)| Ok((sign, lower_dense(i, "ew term", a)?)))
+                    .collect::<Result<Vec<_>>>()?,
+            }
+        }
+    };
+    let out_len: usize = s.out_shape.iter().product();
+    if s.out_slot >= plan.slot_sizes.len() || plan.slot_sizes[s.out_slot] < out_len {
+        bail!("step {i}: output slot {} cannot hold {out_len} elements", s.out_slot);
+    }
+    Ok(LinearStep {
+        thunk,
+        out_slot: s.out_slot,
+        out_len,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::PfbConfig;
+    use crate::tina::exec::CompileOptions;
+    use crate::tina::interp::Interpreter;
+    use crate::tina::lower;
+
+    fn check_bitwise(graph: &crate::tina::graph::Graph, inputs: &[Tensor]) {
+        let want = Interpreter::new(graph.clone()).unwrap().run(inputs).unwrap();
+        for fusion in [true, false] {
+            let plan = ExecPlan::compile_with(
+                graph,
+                CompileOptions {
+                    fusion,
+                    verify: true,
+                },
+            )
+            .unwrap();
+            let prog = LinearProgram::load(&plan).unwrap();
+            let got = prog.run(inputs).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.shape(), b.shape(), "output {i} shape (fusion={fusion})");
+                assert_eq!(a, b, "output {i} diverged (fusion={fusion})");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_program_matches_interpreter_on_shipped_lowerings() {
+        let taps = crate::dsp::fir_lowpass(16, 0.25).unwrap();
+        let cfg = PfbConfig::new(8, 4);
+        check_bitwise(
+            &lower::fir(2, 256, &taps).unwrap(),
+            &[Tensor::randn(&[2, 256], 11)],
+        );
+        check_bitwise(
+            &lower::pfb(2, 8 * 40, cfg).unwrap(),
+            &[Tensor::randn(&[2, 8 * 40], 12)],
+        );
+        check_bitwise(
+            &lower::stft(2, 320, 32, 16).unwrap(),
+            &[Tensor::randn(&[2, 320], 13)],
+        );
+        check_bitwise(
+            &lower::matmul(6, 10, 8),
+            &[Tensor::randn(&[6, 10], 14), Tensor::randn(&[10, 8], 15)],
+        );
+        check_bitwise(&lower::dft(2, 16), &[Tensor::randn(&[2, 16], 16)]);
+    }
+
+    #[test]
+    fn pooled_states_stay_request_safe() {
+        let graph = lower::stft(1, 320, 32, 16).unwrap();
+        let interp = Interpreter::new(graph.clone()).unwrap();
+        let plan = ExecPlan::compile(&graph).unwrap();
+        let prog = LinearProgram::load(&plan).unwrap();
+        for seed in 0..4u64 {
+            let inputs = vec![Tensor::randn(&[1, 320], 100 + seed)];
+            let want = interp.run(&inputs).unwrap();
+            let got = prog.run(&inputs).unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a, b, "stale pooled state leaked into a result");
+            }
+        }
+    }
+
+    #[test]
+    fn run_rows_matches_solo_interpreter_with_poison_padding() {
+        let (l, nfft, hop) = (320usize, 32usize, 16usize);
+        let bucket = 4usize;
+        let rows_n = 3usize;
+        let solo = Interpreter::new(lower::stft(1, l, nfft, hop).unwrap()).unwrap();
+        let plan = ExecPlan::compile(&lower::stft(bucket, l, nfft, hop).unwrap()).unwrap();
+        let prog = LinearProgram::load(&plan).unwrap();
+        let per_row: Vec<Tensor> =
+            (0..rows_n).map(|r| Tensor::randn(&[1, l], 900 + r as u64)).collect();
+        let mut data = Vec::with_capacity(bucket * l);
+        for r in &per_row {
+            data.extend_from_slice(r.data());
+        }
+        data.resize(bucket * l, 1.0e30); // poison, not the batcher's zeros
+        let batched = Tensor::new(&[bucket, l], data).unwrap();
+        let got = prog.run_rows(std::slice::from_ref(&batched), rows_n).unwrap();
+        for (r, row_in) in per_row.iter().enumerate() {
+            let want = solo.run(std::slice::from_ref(row_in)).unwrap();
+            for (a, b) in got[r].iter().zip(&want) {
+                assert_eq!(a, b, "row {r} diverged or padding leaked");
+            }
+        }
+    }
+
+    #[test]
+    fn bad_abi_is_a_load_or_execute_error_not_a_panic() {
+        let plan = ExecPlan::compile(&lower::dft(2, 16)).unwrap();
+        let prog = LinearProgram::load(&plan).unwrap();
+        assert!(prog.run(&[]).is_err(), "arity mismatch must error");
+        assert!(
+            prog.run(&[Tensor::randn(&[3, 16], 1)]).is_err(),
+            "shape mismatch must error"
+        );
+    }
+
+    #[test]
+    fn introspection_reflects_the_loaded_plan() {
+        let plan = ExecPlan::compile(&lower::stft(2, 320, 32, 16).unwrap()).unwrap();
+        let prog = LinearProgram::load(&plan).unwrap();
+        assert_eq!(prog.step_count(), plan.step_count());
+        assert_eq!(prog.input_shapes(), plan.input_shapes());
+        assert!(prog.state_bytes() > 0);
+        assert_eq!(prog.output_shapes().len(), 2, "stft emits re + im");
+    }
+}

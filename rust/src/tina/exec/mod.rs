@@ -90,14 +90,21 @@
 //! * [`verify`] — the independent static verifier over compiled plans
 //!   ("verify the artifact, don't trust the compiler"): always on in
 //!   debug/test builds via [`CompileOptions::verify`], opt-in + metered
-//!   in release.
+//!   in release;
+//! * [`linear`] — the virtual accelerator's load-time specializer: an
+//!   [`ExecPlan`] lowered once into a [`LinearProgram`] of pre-resolved
+//!   kernel thunks (fixed strides/split tables, pre-sliced dense ranges,
+//!   slot buffers sized at load), dispatching into the same [`fused`]
+//!   kernels so output stays bit-for-bit equal to the oracle.
 
 pub mod arena;
 pub mod fused;
+pub mod linear;
 pub mod plan;
 pub mod verify;
 
 pub use arena::Arena;
+pub use linear::LinearProgram;
 pub use plan::{CompileOptions, ExecPlan};
 pub use verify::VerifyError;
 

@@ -116,14 +116,14 @@ impl View {
         }
     }
 
-    fn numel(&self) -> usize {
+    pub(super) fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 
     /// Dense row-major layout (strides of size-1 axes are irrelevant).
     /// Split views are never treated as dense — the whole point of the
     /// split is that the leading axis is *not* affine.
-    fn is_contiguous(&self) -> bool {
+    pub(super) fn is_contiguous(&self) -> bool {
         if self.split0.is_some() {
             return false;
         }

@@ -54,6 +54,6 @@ pub mod interp;
 pub mod layers;
 pub mod lower;
 
-pub use exec::{Arena, CompileOptions, ExecPlan, Planned};
+pub use exec::{Arena, CompileOptions, ExecPlan, LinearProgram, Planned};
 pub use graph::{FusionHint, Graph, Node, NodeOp, ValueId};
 pub use interp::Interpreter;

@@ -28,6 +28,8 @@ use std::time::{Duration, Instant};
 use tina::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, OpKind, OpRequest, PlanKey, RouterConfig,
 };
+#[cfg(feature = "vaccel")]
+use tina::coordinator::ImplPref;
 use tina::runtime::Registry;
 use tina::tensor::Tensor;
 use tina::testing::faults::{self, Fault, Mode};
@@ -59,6 +61,28 @@ fn empty_registry() -> Registry {
     Registry::from_manifest_text(
         std::path::PathBuf::from("/nonexistent"),
         r#"{"version": 1, "entries": []}"#,
+    )
+    .unwrap()
+}
+
+/// Registry with a batched fir artifact: under `--features vaccel` the
+/// coordinator lowers it into the virtual accelerator's program table,
+/// so the artifact arm of the batcher runs against a *real* second
+/// backend and `exec.batch.artifact` faults hit live execution.
+#[cfg(feature = "vaccel")]
+fn fir_artifact_registry() -> Registry {
+    Registry::from_manifest_text(
+        std::path::PathBuf::from("/nonexistent"),
+        r#"{
+          "version": 1,
+          "entries": [
+            {"name": "fir_tina_f32_B8_L1024", "op": "fir", "impl": "tina",
+             "dtype": "f32", "params": {"l": 1024, "taps": 64, "batch": 8},
+             "inputs": [{"shape": [8, 1024], "dtype": "float32"}],
+             "outputs": [{"shape": [8, 961], "dtype": "float32"}],
+             "file": "b.hlo.txt"}
+          ]
+        }"#,
     )
     .unwrap()
 }
@@ -342,6 +366,68 @@ fn seeded_fault_storm_settles_every_request_exactly_once() {
     assert!(ok >= 1, "containment should let some requests through");
     assert!(m.exec_panics.load(Ordering::Relaxed) >= 1);
     assert!(m.quarantined_plans.load(Ordering::Relaxed) >= 1);
+}
+
+#[cfg(feature = "vaccel")]
+#[test]
+fn artifact_batch_panic_on_vaccel_quarantines_and_degrades() {
+    // the artifact-arm containment contract, against the REAL second
+    // backend: a panic injected at `exec.batch.artifact` while the
+    // vaccel engine serves the batch fails only that batch's waiters,
+    // quarantines the artifact by name, degrades follow-up traffic to
+    // the interpreter oracle, and paroles back onto vaccel afterwards
+    let _s = Scenario::begin();
+    let c = Coordinator::new(fir_artifact_registry(), chaos_config()).unwrap();
+    assert_eq!(c.engine().backend_name(), "vaccel");
+    assert!(
+        c.router().artifact_arm_live(),
+        "loaded vaccel programs must arm the artifact arm"
+    );
+    faults::arm("exec.batch.artifact", Fault::Panic, Mode::Times(1));
+
+    // the poisoned artifact batch: its waiter errors, never hangs
+    let err = c
+        .submit(fir(1024, 1).with_impl(ImplPref::Tina))
+        .wait_timeout(SETTLE)
+        .expect("poisoned artifact batch must settle, not hang")
+        .unwrap_err();
+    assert!(err.to_string().contains("quarantined"), "got: {err}");
+    let m = c.metrics();
+    assert_eq!(m.exec_panics.load(Ordering::Relaxed), 1);
+    assert!(
+        c.router().is_artifact_quarantined("fir_tina_f32_B8_L1024"),
+        "panicked artifact must be quarantined by name"
+    );
+
+    // while quarantined, strict artifact traffic degrades to the oracle
+    let x = Tensor::randn(&[1, 1024], 2);
+    let resp = c
+        .submit(OpRequest::new(OpKind::Fir, vec![x.clone()]).with_impl(ImplPref::Tina))
+        .wait_timeout(SETTLE)
+        .expect("degraded request must settle")
+        .expect("degraded request must succeed");
+    assert_eq!(resp.served_by, "interp:fir");
+    assert!(m.degraded_requests.load(Ordering::Relaxed) >= 1);
+    for (a, b) in resp.outputs.iter().zip(&oracle(&c, &x)) {
+        assert_eq!(a, b, "degraded output diverged from the oracle");
+    }
+
+    // parole: after the backoff the artifact serves again on the real
+    // vaccel backend — batched, bit-for-bit the oracle result
+    std::thread::sleep(Duration::from_millis(150));
+    let y = Tensor::randn(&[1, 1024], 3);
+    let again = c
+        .submit(OpRequest::new(OpKind::Fir, vec![y.clone()]).with_impl(ImplPref::Tina))
+        .wait_timeout(SETTLE)
+        .expect("paroled request must settle")
+        .unwrap();
+    assert_eq!(again.served_by, "fir_tina_f32_B8_L1024");
+    assert!(again.batched, "paroled artifact traffic rides the batcher");
+    for (a, b) in again.outputs.iter().zip(&oracle(&c, &y)) {
+        assert_eq!(a, b, "vaccel artifact output diverged from the oracle");
+    }
+    assert!(m.vaccel_batches.load(Ordering::Relaxed) >= 1);
+    assert_eq!(m.inflight_batched_requests.load(Ordering::Relaxed), 0);
 }
 
 #[test]

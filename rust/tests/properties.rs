@@ -13,7 +13,9 @@ use tina::dsp::{self, PfbConfig};
 use tina::prop_assert;
 use tina::tensor::{ComplexTensor, Tensor};
 use tina::testing::prop::{random_graph, run, Gen};
-use tina::tina::{lower, Arena, CompileOptions, ExecPlan, Graph, Interpreter, NodeOp, Planned};
+use tina::tina::{
+    lower, Arena, CompileOptions, ExecPlan, Graph, Interpreter, LinearProgram, NodeOp, Planned,
+};
 use tina::util::json::{self, Json};
 use tina::util::threadpool::OneShot;
 
@@ -27,6 +29,7 @@ fn test_completion(metrics: &Arc<Metrics>) -> (OneShot<anyhow::Result<OpResponse
         "fir",
         "prop".into(),
         std::time::Instant::now(),
+        None,
         None,
     );
     (slot, c)
@@ -423,16 +426,29 @@ fn prop_diamond_views_share_backing_safely() {
 
 #[test]
 fn prop_fuzzed_random_graphs_match_interpreter_bitwise() {
-    // The randomized differential fuzzer: ~200 seeded random graphs
-    // (chains and diamonds over conv/FC/Add/Sub and all four movement
-    // ops, including STFT-like framing+window pipelines with deliberate
-    // fusion-skip variants) must compile, pass the independent static
-    // verifier, and match the interpreter oracle bit-for-bit —
-    // with the fusion pass enabled AND disabled, so a fusion rewrite can
-    // never hide behind (or be hidden by) the baseline planner.
+    // The randomized differential fuzzer, now across ALL THREE executors:
+    // ~200 seeded random graphs (chains and diamonds over conv/FC/Add/Sub
+    // and all four movement ops, including STFT-like framing+window
+    // pipelines with deliberate fusion-skip variants) must compile, pass
+    // the independent static verifier, and match the interpreter oracle
+    // bit-for-bit on
+    //
+    //   1. the planned executor (`ExecPlan::run`),
+    //   2. the vaccel backend's load-time specializer
+    //      (`LinearProgram::load` + `run` — the executor core the virtual
+    //      accelerator serves from; always compiled, not feature-gated),
+    //   3. (under `--features vaccel`) the full `VaccelEngine` device
+    //      path: explicit load, bounded worker queue, typed errors,
+    //
+    // with the fusion pass enabled AND disabled, so a fusion rewrite (or
+    // a specializer bug) can never hide behind the baseline planner.
     //
     // The PRNG seed is fixed (prop::Config::default); on failure the
     // runner prints the case seed for standalone reproduction.
+    #[cfg(feature = "vaccel")]
+    let vaccel = tina::runtime::VaccelEngine::with_defaults();
+    #[cfg(feature = "vaccel")]
+    let case_id = std::cell::Cell::new(0u64);
     run("fuzz: random graph plan == interpreter (bitwise)", 200, |g: &mut Gen| {
         let (graph, inputs) = random_graph(g);
         graph.validate().map_err(|e| format!("generator bug: {e}"))?;
@@ -464,6 +480,40 @@ fn prop_fuzzed_random_graphs_match_interpreter_bitwise() {
                     plan.fusion_eliminated_copies(),
                     a.max_abs_diff(b).unwrap_or(f32::NAN)
                 );
+            }
+            // executor 2: the load-time specializer dispatches the same
+            // fused kernels with the same parameters — bit-for-bit equal
+            let program = LinearProgram::load(&plan)
+                .map_err(|e| format!("specialize(fusion={fusion}): {e}"))?;
+            let lin = program
+                .run(&inputs)
+                .map_err(|e| format!("linear run(fusion={fusion}): {e}"))?;
+            prop_assert!(lin.len() == want.len(), "linear arity (fusion={fusion})");
+            for (i, (a, b)) in lin.iter().zip(&want).enumerate() {
+                prop_assert!(
+                    a == b,
+                    "linear output {i} diverged from the interpreter (fusion={fusion})"
+                );
+            }
+            // executor 3: the full virtual-accelerator device path
+            #[cfg(feature = "vaccel")]
+            {
+                case_id.set(case_id.get() + 1);
+                let name = format!("fuzz_{}", case_id.get());
+                vaccel
+                    .load(&name, &plan)
+                    .map_err(|e| format!("vaccel load(fusion={fusion}): {e}"))?;
+                let dev = vaccel
+                    .try_execute(&name, &inputs)
+                    .map_err(|e| format!("vaccel run(fusion={fusion}): {e}"))?;
+                vaccel.unload(&name);
+                prop_assert!(dev.len() == want.len(), "vaccel arity (fusion={fusion})");
+                for (i, (a, b)) in dev.iter().zip(&want).enumerate() {
+                    prop_assert!(
+                        a == b,
+                        "vaccel output {i} diverged from the interpreter (fusion={fusion})"
+                    );
+                }
             }
         }
         Ok(())

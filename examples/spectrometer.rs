@@ -1,19 +1,21 @@
 //! Spectrometer: the classic radio-astronomy pipeline (Price 2021) built
-//! from TINA serving ops — unfold the stream into frames, PFB-channelize
-//! each frame, accumulate power, dump a waterfall.
+//! as ONE TINA graph — `lower::spectrometer` fuses PFB-channelization,
+//! power detection (|·|²), and time integration into a single lowered
+//! graph, compiled once and run once per frame.  No staged unfold → pfb →
+//! host-power calls, no intermediate copies: the compiled plan is
+//! asserted copy-free (`materialize_count() == 0`).
 //!
-//! Demonstrates composing multiple TINA ops (unfold -> pfb as a
-//! [`Pipeline`]-style chain) on a signal whose tone drifts across
-//! channels over time, so the waterfall shows a moving ridge.
+//! The input tone drifts across channels over time, so the dumped
+//! waterfall shows a moving ridge.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example spectrometer
+//! cargo run --release --example spectrometer
 //! ```
 
 use anyhow::Result;
-use tina::coordinator::{Coordinator, CoordinatorConfig, OpKind, OpRequest};
 use tina::dsp::PfbConfig;
 use tina::tensor::Tensor;
+use tina::tina::{lower, Arena, ExecPlan};
 use tina::util::prng::Xoshiro256;
 
 const P: usize = 32;
@@ -23,11 +25,28 @@ const STEPS: usize = 12;
 
 fn main() -> Result<()> {
     let cfg = PfbConfig::new(P, M);
-    let coord = Coordinator::from_dir("artifacts", CoordinatorConfig::default())?;
     let ns = cfg.output_spectra(FRAME)?;
     println!("== spectrometer: {STEPS} time steps, P={P}, frame={FRAME} ==\n");
 
+    // ONE compile: the whole instrument — polyphase FIR bank, DFT across
+    // branches, squared magnitude, integration over the Ns spectra — is a
+    // single graph and a single execution plan
+    let graph = lower::spectrometer(1, FRAME, cfg)?;
+    let plan = ExecPlan::compile(&graph)?;
+    plan.verify()?;
+    assert_eq!(
+        plan.materialize_count(),
+        0,
+        "the fused spectrometer plan must be copy-free"
+    );
+    println!(
+        "one-plan spectrometer: {} steps, {} fused, 0 materialized copies\n",
+        plan.step_count(),
+        plan.fused_steps()
+    );
+
     let mut rng = Xoshiro256::new(99);
+    let mut arena = Arena::new();
     let mut waterfall: Vec<Vec<f64>> = Vec::new();
 
     for step in 0..STEPS {
@@ -40,18 +59,13 @@ fn main() -> Result<()> {
         }
         let frame = Tensor::new(&[1, FRAME], data)?;
 
-        // full PFB through the coordinator (artifact if present)
-        let resp = coord.execute(OpRequest::new(OpKind::Pfb, vec![frame]))?;
-        let (re, im) = (&resp.outputs[0], &resp.outputs[1]);
-
-        // accumulate power over spectra
-        let mut power = vec![0.0f64; P];
-        for n in 0..ns {
-            for k in 0..P {
-                let (r, i_) = (re.at(&[0, n, k]), im.at(&[0, n, k]));
-                power[k] += (r * r + i_ * i_) as f64 / ns as f64;
-            }
-        }
+        // ONE run: (1, FRAME) in, (1, P) integrated channel power out;
+        // the graph sums |X|² over the Ns spectra, the host only
+        // normalizes by Ns for display
+        let out = plan.run_in(&mut arena, std::slice::from_ref(&frame))?;
+        let power: Vec<f64> = (0..P)
+            .map(|k| out[0].at(&[0, k]) as f64 / ns as f64)
+            .collect();
         waterfall.push(power);
     }
 

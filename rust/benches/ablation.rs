@@ -58,6 +58,7 @@ fn main() {
     report.push(("ablation7_batched_fallback", batched_fallback_ablation()));
     report.push(("ablation8_plan_fusion", plan_fusion_ablation()));
     report.push(("ablation9_vaccel_backend", vaccel_backend_ablation()));
+    report.push(("ablation10_new_lowerings", new_lowerings_ablation()));
     if let Some(j) = batching_ablation() {
         report.push(("ablation1_batching", j));
     }
@@ -422,6 +423,162 @@ fn vaccel_backend_ablation() -> Json {
     println!("{}", t.render());
     Json::obj(vec![
         ("geomean_vaccel_vs_planned_speedup", Json::num(g)),
+        ("cases", Json::Obj(case_json.into_iter().collect())),
+    ])
+}
+
+/// 10. the PR-9 lowering zoo: (a) the ONE-graph spectrometer vs the
+/// staged pipeline it replaces (PFB plan, then a separate
+/// square-and-integrate plan with a host hop between them) — what
+/// compiling the whole instrument as a single fused plan buys; and
+/// (b) the unrolled-IIR depth sweep — planned-executor speedup over the
+/// naive interpreter at each unroll depth, showing the cost model of the
+/// paper's iterative-function strategy.  Pure rust — needs no artifacts.
+///
+/// Gated headlines (same-machine ratios): geomean staged-vs-fused
+/// spectrometer speedup over B ∈ {1, 8}, and geomean planned-vs-interp
+/// IIR speedup over the depth sweep.  Outputs are asserted bitwise-equal
+/// and the fused spectrometer copy-free outside the timed loops.
+fn new_lowerings_ablation() -> Json {
+    use tina::dsp::PfbConfig;
+    use tina::tina::{lower, Arena, ExecPlan, Graph, Interpreter, NodeOp};
+
+    let cfg = tina::benchkit::BenchConfig::from_env();
+    let mut t = Table::new(
+        "ablation 10: lowering zoo — staged vs one-plan spectrometer; IIR depth sweep",
+        &["case", "baseline median", "subject median", "speedup"],
+    );
+    let mut case_json: Vec<(String, Json)> = Vec::new();
+
+    // (a) spectrometer: staged two-plan pipeline vs the single fused plan
+    let pfb_cfg = PfbConfig::new(32, 8);
+    let l = 16384usize;
+    let (p, mt) = (pfb_cfg.branches, pfb_cfg.taps_per_branch);
+    let ns = l / p - mt + 1;
+    // stage 2 of the staged pipeline: take lower::pfb's (B, Ns, P)
+    // spectra, permute back to (B, P, Ns), square + integrate exactly
+    // like the fused graph's tail
+    let stage2 = |b: usize| -> Graph {
+        let q = b * p * ns;
+        let mut g2 = Graph::new();
+        let re_in = g2.input(&[b, ns, p]);
+        let im_in = g2.input(&[b, ns, p]);
+        let rep = g2.push(NodeOp::Permute3([0, 2, 1]), &[re_in]);
+        let imp = g2.push(NodeOp::Permute3([0, 2, 1]), &[im_in]);
+        let sq = |gr: &mut Graph, v| {
+            let a = gr.push(NodeOp::Reshape(vec![1, q, 1]), &[v]);
+            let k = gr.push(NodeOp::Reshape(vec![q, 1]), &[v]);
+            let bias = gr.constant(Tensor::zeros(&[q]));
+            gr.push(NodeOp::DepthwiseConv1d, &[a, k, bias])
+        };
+        let rr = sq(&mut g2, rep);
+        let ii = sq(&mut g2, imp);
+        let pow = g2.push(NodeOp::Add, &[rr, ii]);
+        let rows = g2.push(NodeOp::Reshape(vec![b * p, ns]), &[pow]);
+        let ksum = g2.constant(Tensor::ones(&[ns, 1]));
+        let b1 = g2.constant(Tensor::zeros(&[1]));
+        let o = g2.push(NodeOp::FullyConnected, &[rows, ksum, b1]);
+        let o = g2.push(NodeOp::Reshape(vec![b, p]), &[o]);
+        g2.set_outputs(&[o]);
+        g2
+    };
+    let mut spec_speedups: Vec<f64> = Vec::new();
+    for b in [1usize, 8] {
+        let fused = ExecPlan::compile(&lower::spectrometer(b, l, pfb_cfg).unwrap()).unwrap();
+        assert_eq!(
+            fused.materialize_count(),
+            0,
+            "spectrometer B={b}: one-plan compile must be copy-free"
+        );
+        let stage1 = ExecPlan::compile(&lower::pfb(b, l, pfb_cfg).unwrap()).unwrap();
+        let integ = ExecPlan::compile(&stage2(b)).unwrap();
+        let inputs = vec![Tensor::randn(&[b, l], 100 + b as u64)];
+        // bitwise contract before timing: staging only moves data
+        let mut arena = Arena::new();
+        let want = fused.run_in(&mut arena, &inputs).unwrap();
+        let spectra = stage1.run_in(&mut arena, &inputs).unwrap();
+        let got = integ.run_in(&mut arena, &spectra).unwrap();
+        assert_eq!(want, got, "spectrometer B={b}: staged diverged bitwise");
+        let mut arena_f = Arena::new();
+        let fv = tina::benchkit::run(&cfg, || {
+            black_box(fused.run_in(&mut arena_f, &inputs).unwrap());
+        })
+        .summary();
+        let mut arena_s = Arena::new();
+        let sv = tina::benchkit::run(&cfg, || {
+            let spectra = stage1.run_in(&mut arena_s, &inputs).unwrap();
+            black_box(integ.run_in(&mut arena_s, &spectra).unwrap());
+        })
+        .summary();
+        let speedup = sv.median_ns / fv.median_ns.max(1e-9);
+        spec_speedups.push(speedup.max(1e-9));
+        let label = format!("spectrometer B={b} L={l}");
+        case_json.push((
+            label.clone(),
+            Json::obj(vec![
+                ("staged_ns", Json::num(sv.median_ns)),
+                ("fused_ns", Json::num(fv.median_ns)),
+                ("staged_vs_fused", Json::num(speedup)),
+            ]),
+        ));
+        t.row(vec![
+            label,
+            fmt(sv.median_ns),
+            fmt(fv.median_ns),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+
+    // (b) IIR depth sweep: planned executor vs naive interpreter per
+    // unroll depth (deeper unrolls mean more conv levels for the same
+    // output prefix — the accuracy/latency dial of paper §3)
+    let (b_taps, a_taps) = ([0.25f32, 0.5, 0.25], [0.3f32, 0.15]);
+    let mut iir_speedups: Vec<f64> = Vec::new();
+    for depth in [1usize, 2, 4, 8] {
+        let graph = lower::iir(8, 16384, &b_taps, &a_taps, depth).unwrap();
+        let interp = Interpreter::new(graph.clone()).unwrap();
+        let plan = ExecPlan::compile(&graph).unwrap();
+        let inputs = vec![Tensor::randn(&[8, 16384], 110 + depth as u64)];
+        let iv = tina::benchkit::run(&cfg, || {
+            black_box(interp.run(&inputs).unwrap());
+        })
+        .summary();
+        let mut arena = Arena::new();
+        let pv = tina::benchkit::run(&cfg, || {
+            black_box(plan.run_in(&mut arena, &inputs).unwrap());
+        })
+        .summary();
+        let speedup = pv.speedup_vs(&iv);
+        iir_speedups.push(speedup.max(1e-9));
+        let label = format!("iir B=8 L=16384 depth={depth}");
+        case_json.push((
+            label.clone(),
+            Json::obj(vec![
+                ("interp_ns", Json::num(iv.median_ns)),
+                ("planned_ns", Json::num(pv.median_ns)),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ));
+        t.row(vec![
+            label,
+            fmt(iv.median_ns),
+            fmt(pv.median_ns),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+
+    let gs = geomean(&spec_speedups);
+    let gi = geomean(&iir_speedups);
+    t.row(vec![
+        "geomean (spectrometer / iir)".into(),
+        String::new(),
+        String::new(),
+        format!("{gs:.2}x / {gi:.2}x"),
+    ]);
+    println!("{}", t.render());
+    Json::obj(vec![
+        ("geomean_staged_vs_fused_spectrometer_speedup", Json::num(gs)),
+        ("geomean_iir_planned_speedup", Json::num(gi)),
         ("cases", Json::Obj(case_json.into_iter().collect())),
     ])
 }

@@ -47,6 +47,17 @@ HIGHER_BETTER_SUFFIXES = ("_req_s", "_speedup", "_benefit", "fill_ratio")
 # merely warn unless --gate-absolute
 GATED_SUFFIXES = ("_speedup", "_benefit")
 
+# Headlines an *armed* baseline must carry: --require-armed proves the
+# regression gate actually covers these going forward, not merely that
+# some measured snapshot exists.  (ablation, top-level field) pairs; the
+# listed ablations run on every build (no artifacts needed), so a
+# measured snapshot lacking one means the bench silently dropped it.
+REQUIRED_ARMED_HEADLINES = (
+    ("ablation9_vaccel_backend", "geomean_vaccel_vs_planned_speedup"),
+    ("ablation10_new_lowerings", "geomean_staged_vs_fused_spectrometer_speedup"),
+    ("ablation10_new_lowerings", "geomean_iir_planned_speedup"),
+)
+
 
 def latest_snapshot(root: pathlib.Path, exclude: str | None) -> pathlib.Path | None:
     """The committed BENCH_pr<N>.json with the highest N, if any.
@@ -225,6 +236,20 @@ def main() -> int:
             "committed yet); passing — CI's snapshot step will replace it"
         )
         return 0
+
+    if args.require_armed:
+        missing = [
+            f"{abl}.{field}"
+            for abl, field in REQUIRED_ARMED_HEADLINES
+            if not isinstance(old.get(abl), dict) or field not in old[abl]
+        ]
+        if missing:
+            print(
+                f"FAIL: regression gate is un-armed — baseline {baseline} "
+                f"lacks required headline(s): {', '.join(missing)}",
+                file=sys.stderr,
+            )
+            return 1
 
     regressions = compare(old, new, args.threshold, args.gate_absolute)
     if regressions:

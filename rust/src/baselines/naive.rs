@@ -73,6 +73,34 @@ pub fn fir(x: &Tensor, taps: &[f32]) -> Result<Tensor> {
     Ok(out)
 }
 
+/// Cross-correlation against a template, valid mode:
+/// y(i) = sum_k t(k) x(i + k).  Direct O(L·M), ascending-tap
+/// accumulation to match the conv kernel's oracle reduction order.
+pub fn xcorr(x: &Tensor, template: &[f32]) -> Result<Tensor> {
+    if x.rank() != 2 {
+        bail!("xcorr expects (B, L), got {:?}", x.shape());
+    }
+    let (b, l) = (x.shape()[0], x.shape()[1]);
+    let m = template.len();
+    if m == 0 || l < m {
+        bail!("template empty or longer than signal");
+    }
+    let wout = l - m + 1;
+    let mut out = Tensor::zeros(&[b, wout]);
+    for bi in 0..b {
+        let row = &x.data()[bi * l..(bi + 1) * l];
+        let orow = &mut out.data_mut()[bi * wout..(bi + 1) * wout];
+        for (i, o) in orow.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (k, &t) in template.iter().enumerate() {
+                acc += t * row[i + k];
+            }
+            *o = acc;
+        }
+    }
+    Ok(out)
+}
+
 /// Unfolding (Fig. 2d): Y[i, j] = X[i + j], per batch row.
 pub fn unfold(x: &Tensor, window: usize) -> Result<Tensor> {
     if x.rank() != 2 {

@@ -36,6 +36,19 @@ pub enum OpKind {
     Pfb,
     /// Extension op (paper future work): short-time Fourier transform.
     Stft,
+    /// IIR filter via fixed-depth unrolled iteration (paper §3's
+    /// iterative-function case).
+    Iir,
+    /// Cross-correlation of a signal against a runtime template.
+    Xcorr,
+    /// Two-antenna FX correlator: per-antenna STFT, gain-calibrated
+    /// conjugate multiply, frame accumulation.
+    FxCorrelate,
+    /// End-to-end spectrometer: PFB → |·|² → time integration as one
+    /// fused graph.
+    Spectrometer,
+    /// Delay-and-sum beamformer over sensor channels.
+    Beamform,
 }
 
 impl OpKind {
@@ -53,6 +66,11 @@ impl OpKind {
             OpKind::PfbFir => "pfb_fir",
             OpKind::Pfb => "pfb",
             OpKind::Stft => "stft",
+            OpKind::Iir => "iir",
+            OpKind::Xcorr => "xcorr",
+            OpKind::FxCorrelate => "fx_correlate",
+            OpKind::Spectrometer => "spectrometer",
+            OpKind::Beamform => "beamform",
         }
     }
 
@@ -70,6 +88,11 @@ impl OpKind {
             "pfb_fir" => OpKind::PfbFir,
             "pfb" => OpKind::Pfb,
             "stft" => OpKind::Stft,
+            "iir" => OpKind::Iir,
+            "xcorr" => OpKind::Xcorr,
+            "fx_correlate" => OpKind::FxCorrelate,
+            "spectrometer" => OpKind::Spectrometer,
+            "beamform" => OpKind::Beamform,
             _ => bail!("unknown op '{s}'"),
         })
     }
@@ -88,19 +111,37 @@ impl OpKind {
             OpKind::PfbFir,
             OpKind::Pfb,
             OpKind::Stft,
+            OpKind::Iir,
+            OpKind::Xcorr,
+            OpKind::FxCorrelate,
+            OpKind::Spectrometer,
+            OpKind::Beamform,
         ]
     }
 
     /// Ops whose requests carry a (B, L) signal and can be coalesced along
     /// the batch axis by the dynamic batcher.
     pub fn batchable(&self) -> bool {
-        matches!(self, OpKind::Fir | OpKind::PfbFir | OpKind::Pfb | OpKind::Stft)
+        matches!(
+            self,
+            OpKind::Fir
+                | OpKind::PfbFir
+                | OpKind::Pfb
+                | OpKind::Stft
+                | OpKind::Iir
+                | OpKind::Spectrometer
+        )
     }
 
     /// Input-tensor arity the op's lowering expects.
     pub fn expected_inputs(&self) -> usize {
         match self {
-            OpKind::EwMult | OpKind::EwAdd | OpKind::MatMul | OpKind::Idft => 2,
+            OpKind::EwMult
+            | OpKind::EwAdd
+            | OpKind::MatMul
+            | OpKind::Idft
+            | OpKind::Xcorr
+            | OpKind::FxCorrelate => 2,
             _ => 1,
         }
     }
@@ -272,7 +313,22 @@ mod tests {
     fn batchable_set() {
         assert!(OpKind::Fir.batchable());
         assert!(OpKind::Pfb.batchable());
+        assert!(OpKind::Iir.batchable());
+        assert!(OpKind::Spectrometer.batchable());
         assert!(!OpKind::MatMul.batchable());
+        // two-signal / runtime-template ops can't ride the row batcher
+        assert!(!OpKind::Xcorr.batchable());
+        assert!(!OpKind::FxCorrelate.batchable());
+        assert!(!OpKind::Beamform.batchable());
+    }
+
+    #[test]
+    fn new_op_arities() {
+        assert_eq!(OpKind::Xcorr.expected_inputs(), 2);
+        assert_eq!(OpKind::FxCorrelate.expected_inputs(), 2);
+        assert_eq!(OpKind::Iir.expected_inputs(), 1);
+        assert_eq!(OpKind::Spectrometer.expected_inputs(), 1);
+        assert_eq!(OpKind::Beamform.expected_inputs(), 1);
     }
 
     #[test]

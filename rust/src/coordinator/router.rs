@@ -58,6 +58,22 @@ pub struct RouterConfig {
     pub stft_nfft: usize,
     /// STFT hop between frames.
     pub stft_hop: usize,
+    /// IIR feedforward taps (numerator `b`).
+    pub iir_b: Vec<f32>,
+    /// IIR feedback taps (denominator `a`, past-output coefficients).
+    /// Kept contractive (‖a‖₁ < 1) so the fixed-depth unrolling below
+    /// converges geometrically.
+    pub iir_a: Vec<f32>,
+    /// Unroll depth of the IIR recurrence (paper §3: iterative functions
+    /// become fixed-depth layer stacks).
+    pub iir_depth: usize,
+    /// Beamformer per-channel integer delays (taps of the one-hot delay
+    /// kernel); the channel count of a `Beamform` request must equal
+    /// `beam_delays.len()`.
+    pub beam_delays: Vec<usize>,
+    /// Beamformer per-channel gains, same length as
+    /// [`beam_delays`](Self::beam_delays).
+    pub beam_gains: Vec<f32>,
     /// Upper bound on cached fallback plans per cache (interpreter oracle
     /// and planned executor each).  Shape-diverse traffic evicts the
     /// least-recently-used plan instead of growing without limit; plans
@@ -102,6 +118,11 @@ impl Default for RouterConfig {
             pfb: PfbConfig::new(32, 8),
             stft_nfft: 256,
             stft_hop: 128,
+            iir_b: vec![0.25, 0.5, 0.25],
+            iir_a: vec![0.3, 0.15],
+            iir_depth: 4,
+            beam_delays: vec![0, 1, 2, 3],
+            beam_gains: vec![1.0, 0.8, -0.6, 0.4],
             plan_cache_cap: 64,
             verify_plans: false,
             quarantine_backoff: Duration::from_secs(1),
@@ -872,6 +893,61 @@ impl Router {
             OpKind::Stft => {
                 let (b, l) = rank2(0)?;
                 lower::stft(b, l, self.config.stft_nfft, self.config.stft_hop)?
+            }
+            OpKind::Iir => {
+                let (b, l) = rank2(0)?;
+                lower::iir(
+                    b,
+                    l,
+                    &self.config.iir_b,
+                    &self.config.iir_a,
+                    self.config.iir_depth,
+                )?
+            }
+            OpKind::Xcorr => {
+                let (b, l) = rank2(0)?;
+                let t = shape(1);
+                if t.len() != 1 {
+                    bail!("xcorr template must be rank 1, got {:?}", t);
+                }
+                lower::xcorr(b, l, t[0])?
+            }
+            OpKind::FxCorrelate => {
+                let (b, l) = rank2(0)?;
+                let (b2, l2) = rank2(1)?;
+                if (b, l) != (b2, l2) {
+                    bail!("fx_correlate antenna shape mismatch");
+                }
+                // bandpass calibration curve baked as the chain-folded gain
+                let gains: Vec<f32> = crate::dsp::hamming(self.config.stft_nfft)
+                    .iter()
+                    .map(|&v| v as f32)
+                    .collect();
+                lower::fx_correlate(b, l, self.config.stft_nfft, self.config.stft_hop, &gains)?
+            }
+            OpKind::Spectrometer => {
+                let (b, l) = rank2(0)?;
+                lower::spectrometer(b, l, self.config.pfb)?
+            }
+            OpKind::Beamform => {
+                let s = shape(0);
+                if s.len() != 3 {
+                    bail!("beamform input must be rank 3 (B, C, L), got {:?}", s);
+                }
+                if s[1] != self.config.beam_delays.len() {
+                    bail!(
+                        "beamform channel count {} != configured array size {}",
+                        s[1],
+                        self.config.beam_delays.len()
+                    );
+                }
+                lower::beamform(
+                    s[0],
+                    s[1],
+                    s[2],
+                    &self.config.beam_delays,
+                    &self.config.beam_gains,
+                )?
             }
         })
     }

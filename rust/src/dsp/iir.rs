@@ -1,0 +1,103 @@
+//! Direct-form IIR recurrence reference for the unrolled-iteration
+//! lowering (`tina::lower::iir`).
+//!
+//! The lowering unrolls a fixed number of Richardson-style iterations of
+//! the recurrence on the accelerator substrate; this module computes the
+//! recurrence's exact fixed point on the CPU so property tests can bound
+//! the unrolling's truncation error.
+//!
+//! Convention (anti-causal, prefix-aligned — chosen because the graph
+//! substrate's `StridedSlice` crops prefixes):
+//!
+//! ```text
+//! ff[n] = Σ_k b[k] · x[n + k]                 (correlation, valid mode)
+//! y[n]  = ff[n] − Σ_{j=1..na} a[j−1] · y[n + j],   y[m ≥ W0] = 0
+//! ```
+//!
+//! with `W0 = L − len(b) + 1`.  Solved backward from `n = W0 − 1`, this
+//! is the limit the depth-`d` unrolled graph approaches: each unroll
+//! level applies one more substitution starting from `y⁽⁰⁾ = ff`, so on
+//! the surviving output prefix the error contracts like `‖a‖₁^d` when
+//! `‖a‖₁ < 1`.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Exact fixed point of the anti-causal IIR recurrence, per batch row.
+///
+/// Input `(B, L)`, output `(B, L − len(b_taps) + 1)`.  All arithmetic in
+/// f32, feedforward taps accumulated in ascending-tap order to match the
+/// conv kernel's oracle reduction order.
+pub fn iir_reference(x: &Tensor, b_taps: &[f32], a_taps: &[f32]) -> Result<Tensor> {
+    if x.rank() != 2 {
+        bail!("iir_reference expects (B, L), got {:?}", x.shape());
+    }
+    let (b, l) = (x.shape()[0], x.shape()[1]);
+    let (mb, na) = (b_taps.len(), a_taps.len());
+    if mb == 0 || na == 0 {
+        bail!("iir_reference needs nonempty feedforward and feedback taps");
+    }
+    if l < mb {
+        bail!("signal length {l} shorter than feedforward filter {mb}");
+    }
+    let w0 = l - mb + 1;
+    let mut out = Tensor::zeros(&[b, w0]);
+    for bi in 0..b {
+        let row = &x.data()[bi * l..(bi + 1) * l];
+        let mut ff = vec![0.0f32; w0];
+        for (n, f) in ff.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (k, &bk) in b_taps.iter().enumerate() {
+                acc += bk * row[n + k];
+            }
+            *f = acc;
+        }
+        let mut y = vec![0.0f32; w0];
+        for n in (0..w0).rev() {
+            let mut acc = ff[n];
+            for (j, &aj) in a_taps.iter().enumerate() {
+                let m = n + j + 1;
+                if m < w0 {
+                    acc -= aj * y[m];
+                }
+            }
+            y[n] = acc;
+        }
+        out.data_mut()[bi * w0..(bi + 1) * w0].copy_from_slice(&y);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pure_feedforward_matches_fir() {
+        // a single zero feedback tap degenerates to plain correlation
+        let x = Tensor::new(&[1, 6], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let y = iir_reference(&x, &[0.5, 0.25], &[0.0]).unwrap();
+        let want: Vec<f32> = (0..5).map(|n| 0.5 * (n as f32 + 1.0) + 0.25 * (n as f32 + 2.0)).collect();
+        assert_eq!(y.data(), &want[..]);
+    }
+
+    #[test]
+    fn recurrence_feeds_back_future_outputs() {
+        // W0 = 3, a = [0.5]: y[2] = ff[2]; y[1] = ff[1] − 0.5·y[2]; …
+        let x = Tensor::new(&[1, 3], vec![1.0, 2.0, 4.0]).unwrap();
+        let y = iir_reference(&x, &[1.0], &[0.5]).unwrap();
+        let y2 = 4.0f32;
+        let y1 = 2.0 - 0.5 * y2;
+        let y0 = 1.0 - 0.5 * y1;
+        assert_eq!(y.data(), &[y0, y1, y2]);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let x = Tensor::zeros(&[1, 4]);
+        assert!(iir_reference(&x, &[], &[0.5]).is_err());
+        assert!(iir_reference(&x, &[0.5], &[]).is_err());
+        assert!(iir_reference(&Tensor::zeros(&[1, 2]), &[0.5; 3], &[0.1]).is_err());
+        assert!(iir_reference(&Tensor::zeros(&[4]), &[0.5], &[0.1]).is_err());
+    }
+}

@@ -7,10 +7,12 @@
 
 pub mod firdesign;
 pub mod fourier;
+pub mod iir;
 pub mod pfb;
 pub mod window;
 
 pub use firdesign::{fir_lowpass, pfb_prototype, polyphase_decompose};
 pub use fourier::{dft_direct, dft_matrix, fft_radix2, idft_matrix};
+pub use iir::iir_reference;
 pub use pfb::{pfb_reference, PfbConfig};
 pub use window::{hamming, hann};

@@ -170,12 +170,16 @@ pub fn run_config(name: &str, cfg: Config, body: impl Fn(&mut Gen) -> PropResult
 ///   pipelines (with deliberate precondition-breaking variants), so the
 ///   fusion pass's fold, its skip rules, and the merged-axis materialize
 ///   elimination are all exercised — equality must hold whether or not a
-///   rewrite fires.
+///   rewrite fires;
+/// * a fifth are drawn from the lowering zoo's newer families (complex
+///   pairs, unrolled-IIR chains, xcorr pipelines, and Chain-hinted M=1
+///   scale chains with their own precondition-breaking variants), so the
+///   fuzzer provably reaches every lowering shape `tina::lower` emits.
 pub fn random_graph(g: &mut Gen) -> (Graph, Vec<Tensor>) {
-    if g.usize_in(0, 9) < 3 {
-        random_framed_window_graph(g)
-    } else {
-        random_op_graph(g)
+    match g.usize_in(0, 9) {
+        0..=2 => random_framed_window_graph(g),
+        3..=4 => random_lowering_graph(g),
+        _ => random_op_graph(g),
     }
 }
 
@@ -427,6 +431,84 @@ fn random_framed_window_graph(g: &mut Gen) -> (Graph, Vec<Tensor>) {
     (gr, vec![Tensor::randn(&[b, l], g.u64())])
 }
 
+/// Pipelines from the lowering zoo's newer families — complex pairs,
+/// unrolled-IIR chains, xcorr — built through `tina::lower` itself so the
+/// fuzzer exercises the exact graphs users compile, plus hand-rolled
+/// scale chains for the Chain fold's skip rules.
+fn random_lowering_graph(g: &mut Gen) -> (Graph, Vec<Tensor>) {
+    use crate::tina::lower;
+    let b = g.usize_in(1, 3);
+    match g.usize_in(0, 4) {
+        0 => {
+            let n = g.usize_in(1, 6);
+            let gr = lower::complex_mul(b, n);
+            let inputs = (0..4).map(|_| Tensor::randn(&[b, n], g.u64())).collect();
+            (gr, inputs)
+        }
+        1 => {
+            let n = g.usize_in(1, 6);
+            let gr = lower::magnitude_sq(b, n);
+            let inputs = (0..2).map(|_| Tensor::randn(&[b, n], g.u64())).collect();
+            (gr, inputs)
+        }
+        2 => {
+            let mb = g.usize_in(1, 3);
+            let na = g.usize_in(1, 2);
+            let depth = g.usize_in(1, 3);
+            let l = mb + depth * na + g.usize_in(1, 6);
+            let b_taps: Vec<f32> = (0..mb).map(|_| g.normal_f32()).collect();
+            let a_taps: Vec<f32> = (0..na).map(|_| 0.3 * g.normal_f32()).collect();
+            let gr = lower::iir(b, l, &b_taps, &a_taps, depth).unwrap();
+            (gr, vec![Tensor::randn(&[b, l], g.u64())])
+        }
+        3 => {
+            let m = g.usize_in(1, 4);
+            let l = m + g.usize_in(0, 6);
+            let gr = lower::xcorr(b, l, m).unwrap();
+            let inputs = vec![Tensor::randn(&[b, l], g.u64()), Tensor::randn(&[m], g.u64())];
+            (gr, inputs)
+        }
+        _ => random_scale_chain_graph(g, b),
+    }
+}
+
+/// M = 1 depthwise gain stage plus a Chain-hinted link, with deliberate
+/// precondition-breaking variants: 0 = cleanly foldable (±1 taps, zero
+/// bias), 1 = non-±1 link taps (fold must skip), 2 = nonzero link bias
+/// (skip), 3 = gain-stage output shared as a graph output (skip).
+fn random_scale_chain_graph(g: &mut Gen, b: usize) -> (Graph, Vec<Tensor>) {
+    let n = g.usize_in(1, 6);
+    let variant = g.usize_in(0, 3);
+    let mut gr = Graph::new();
+    let x = gr.input(&[b, n]);
+    let xi = gr.push(NodeOp::Reshape(vec![b, n, 1]), &[x]);
+    let kg = gr.constant(Tensor::randn(&[n, 1], g.u64()));
+    let pb = gr.constant(Tensor::randn(&[n], g.u64()));
+    let scaled = gr.push(NodeOp::DepthwiseConv1d, &[xi, kg, pb]);
+    let kl = gr.constant(if variant == 1 {
+        Tensor::randn(&[n, 1], g.u64())
+    } else {
+        let taps: Vec<f32> = (0..n).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+        Tensor::new(&[n, 1], taps).unwrap()
+    });
+    let bl = gr.constant(if variant == 2 {
+        Tensor::randn(&[n], g.u64())
+    } else {
+        Tensor::zeros(&[n])
+    });
+    let link = gr.push_with_hint(NodeOp::DepthwiseConv1d, &[scaled, kl, bl], FusionHint::Chain);
+    let kd = gr.constant(Tensor::randn(&[n, n], g.u64()));
+    let bd = gr.constant(Tensor::zeros(&[n]));
+    let pw = gr.push(NodeOp::PointwiseConv, &[link, kd, bd]);
+    let out = gr.push(NodeOp::Reshape(vec![b, n]), &[pw]);
+    let mut outs = vec![out];
+    if variant == 3 {
+        outs.push(scaled);
+    }
+    gr.set_outputs(&outs);
+    (gr, vec![Tensor::randn(&[b, n], g.u64())])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -505,6 +587,35 @@ mod tests {
             }
         }
         assert!(hinted > 0, "no hinted window graphs in 40 seeds");
+    }
+
+    #[test]
+    fn random_graphs_cover_new_lowering_families() {
+        // fixed seed slices must reach the newer families too, or the
+        // fuzzer would silently stop exercising the Chain fold and the
+        // complex/IIR lowering shapes
+        let (mut chain_hinted, mut complex_pairs, mut iir_chains) = (0, 0, 0);
+        for seed in 0..80u64 {
+            let mut g = Gen::new(seed, 0.8);
+            let (graph, inputs) = random_graph(&mut g);
+            if graph.nodes.iter().any(|n| n.hint == FusionHint::Chain) {
+                chain_hinted += 1;
+            }
+            if inputs.len() == 4 {
+                complex_pairs += 1;
+            }
+            let convs = graph
+                .nodes
+                .iter()
+                .filter(|n| matches!(n.op, NodeOp::StandardConv1d))
+                .count();
+            if convs >= 2 && graph.nodes.iter().any(|n| matches!(n.op, NodeOp::Add)) {
+                iir_chains += 1;
+            }
+        }
+        assert!(chain_hinted > 0, "no Chain-hinted graphs in 80 seeds");
+        assert!(complex_pairs > 0, "no complex-mul graphs in 80 seeds");
+        assert!(iir_chains > 0, "no unrolled-IIR-like graphs in 80 seeds");
     }
 
     #[test]

@@ -24,13 +24,18 @@
 //!   liveness, adjacent compiled steps are rewritten (`fuse_protos`):
 //!   a merged-axis `Materialize` (batched STFT's `(B, F, nfft) ->
 //!   (B*F, nfft)` frame regrouping) becomes a `Split0` loop-nest
-//!   reindex its conv-family consumers read directly, and a
+//!   reindex its conv-family consumers read directly; a
 //!   [`FusionHint::Window`]-tagged M=1 depthwise window over a one-hot
-//!   ±1 framing conv folds into the conv by pre-scaling its taps.  Both
-//!   rewrites preserve **bit-for-bit** interpreter equality (the fold's
-//!   skip rules reject any candidate whose rewrite would reassociate or
-//!   re-round a float operation); with them, every shipped lowering
-//!   compiles with `materialize_count() == 0` at every batch size.
+//!   ±1 framing producer (standard conv — STFT — or depthwise conv —
+//!   beamform delays) folds into the producer by pre-scaling its taps;
+//!   and a [`FusionHint::Chain`]-tagged all-±1 depthwise link over an
+//!   M=1 depthwise scale (the FX correlator's conjugation over its gain
+//!   calibration) folds into the scale by pre-signing its taps and
+//!   bias.  All rewrites preserve **bit-for-bit** interpreter equality
+//!   (the fold's skip rules reject any candidate whose rewrite would
+//!   reassociate or re-round a float operation); with them, every
+//!   shipped lowering compiles with `materialize_count() == 0` at every
+//!   batch size.
 //!   [`ExecPlan::fused_steps`] / [`ExecPlan::fusion_eliminated_copies`]
 //!   introspect the pass, and [`CompileOptions`] can switch it off
 //!   (ablation 8);
@@ -528,10 +533,27 @@ fn try_merge_reindex(
     })
 }
 
+/// Which fusion rewrite produced a [`FoldAudit`] — the verifier re-proves
+/// a different set of obligations per kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum FoldKind {
+    /// M=1 depthwise window folded into a one-hot ±1 `StandardConv1d`
+    /// framing producer (the STFT window fold).
+    FramingConv,
+    /// M=1 depthwise window folded into a one-hot ±1 `DepthwiseConv1d`
+    /// framing producer (beamform's gains into its delay taps).
+    FramingDepthwise,
+    /// All-±1 depthwise chain link folded into an M=1 depthwise scale
+    /// producer by pre-signing its taps and bias (the FX correlator's
+    /// conjugation into its gain calibration).
+    ScaleChain,
+}
+
 /// The window fold's verified rewrite: which conv proto absorbs the
 /// window, its pre-scaled replacement kernel, and the evidence the fold
 /// decision rested on (kept for the verifier's audit certificate).
 struct WindowFold {
+    kind: FoldKind,
     conv: usize,
     scaled_kernel: Tensor,
     /// Per conv output channel: flat index + sign of the original
@@ -543,42 +565,53 @@ struct WindowFold {
     win: Vec<f32>,
 }
 
-/// Compile-time certificate of one window fold, recorded by
-/// [`fuse_protos`] so the static verifier ([`ExecPlan::verify`]) can
-/// independently re-prove the fold's legality on the *final* plan: the
+/// Compile-time certificate of one fold, recorded by [`fuse_protos`] so
+/// the static verifier ([`ExecPlan::verify`]) can independently re-prove
+/// the fold's legality on the *final* plan.  For the window kinds: the
 /// pre-scaled kernel must be exactly the recorded one-hot ±1 structure
 /// scaled by the recorded window, the adopted bias must be the window's
 /// bias, the original conv bias must have been all-zero, the recorded
 /// activation view must land every element on the matching conv output
-/// channel, and the folded-away window value must never resurface.
+/// channel, and the folded-away window value must never resurface.  For
+/// [`FoldKind::ScaleChain`]: the recorded per-channel factors (`win`)
+/// must all be ±1, the pre-signed kernel must be exactly the recorded
+/// producer gains times those signs, and the adopted bias exactly the
+/// recorded producer bias times those signs.
 #[derive(Debug, Clone)]
 pub(super) struct FoldAudit {
-    /// Value id of the framing conv the window folded into.
+    /// Which rewrite this audit certifies.
+    pub(super) kind: FoldKind,
+    /// Value id of the producer step the folded value merged into.
     pub(super) conv_root: usize,
-    /// Value id of the eliminated window step (must not resurface).
+    /// Value id of the eliminated step (must not resurface).
     pub(super) folded_root: usize,
-    /// Plan-constant index of the pre-scaled conv kernel.
+    /// Plan-constant index of the pre-scaled producer kernel.
     pub(super) scaled_const: usize,
-    /// Plan-constant index of the adopted window bias.
+    /// Plan-constant index of the adopted producer bias.
     pub(super) bias_const: usize,
-    /// Window per-channel scale factors (copied at fold time).
+    /// Per-channel factors of the folded step (the window's scales, or
+    /// the chain link's ±1 signs — copied at fold time).
     pub(super) win: Vec<f32>,
-    /// Adopted window bias values (copied at fold time).
+    /// Adopted bias values (the window's bias, or the pre-signed
+    /// producer bias for [`FoldKind::ScaleChain`]).
     pub(super) wbias: Vec<f32>,
-    /// Original conv taps: per output channel, the one-hot tap's flat
-    /// index within its `(cin * ntaps)` row and its ±1 sign; `None` for
-    /// an all-zero row.
+    /// Original producer taps: per output channel, the one-hot tap's
+    /// flat index within its row and its ±1 sign for the window kinds,
+    /// or `Some((0, gain))` for [`FoldKind::ScaleChain`]'s M = 1 rows;
+    /// `None` for an all-zero row.
     pub(super) hot: Vec<Option<(usize, f32)>>,
-    /// Original conv bias (the fold requires it all-zero).
+    /// Original producer bias (all-zero for the window kinds; the
+    /// pre-sign gain-stage bias for [`FoldKind::ScaleChain`]).
     pub(super) orig_bias: Vec<f32>,
-    /// The window's activation view — the view through which consumers
-    /// now read the re-scaled conv output.
+    /// The folded step's activation view — the view through which its
+    /// consumers now read the re-scaled producer output.
     pub(super) act_view: View,
 }
 
 /// Check whether the depthwise proto at `j` is a foldable window multiply
-/// (graph node tagged [`FusionHint::Window`]) over a framing
-/// `StandardConv1d`, and build the pre-scaled conv kernel if so.
+/// (graph node tagged [`FusionHint::Window`]) over a framing producer —
+/// a `StandardConv1d` (STFT framing) or a `DepthwiseConv1d` (beamform
+/// delays) — and build the pre-scaled producer kernel if so.
 ///
 /// Every precondition is re-proved here — the hint only nominates
 /// candidates:
@@ -586,15 +619,16 @@ pub(super) struct FoldAudit {
 /// * window kernel is a whole-tensor constant of shape `(C, 1)` (M = 1:
 ///   a pure per-channel scale) and the window bias a whole-tensor
 ///   constant `(C,)`;
-/// * the activation is a rank-3 view of a `StandardConv1d` proto whose
-///   weights are a whole-tensor constant with **one-hot ±1 rows** (at
-///   most one nonzero tap per output channel, and that tap exactly
-///   `±1.0`) and whose bias is exactly zero — so each conv output
-///   element is a single `±x` with no f32 rounding of its own, and
-///   pre-scaling the tap to `±win[c]` performs the window's multiply
-///   with the interpreter's exact rounding (`(x * ±1) * w == x * ±w`
-///   bitwise; general taps would reassociate `(x*t)*w` into `x*(t*w)`,
-///   which rounds differently, so they are skipped);
+/// * the activation is a rank-3 view of a `StandardConv1d` or
+///   `DepthwiseConv1d` proto whose weights are a whole-tensor constant
+///   with **one-hot ±1 rows** (at most one nonzero tap per output
+///   channel, and that tap exactly `±1.0`) and whose bias is exactly
+///   zero — so each producer output element is a single `±x` with no
+///   f32 rounding of its own, and pre-scaling the tap to `±win[c]`
+///   performs the window's multiply with the interpreter's exact
+///   rounding (`(x * ±1) * w == x * ±w` bitwise; general taps would
+///   reassociate `(x*t)*w` into `x*(t*w)`, which rounds differently, so
+///   they are skipped);
 /// * the conv output has no other reader and is not a plan output
 ///   (anything else would observe pre-window values);
 /// * every consumer of the window output is a rank-3 identity
@@ -636,19 +670,26 @@ fn try_window_fold(
     if x.st != Storage::Owned || x.view.shape.len() != 3 || x.view.shape[1] != c {
         return None;
     }
-    let conv_i = protos[..j]
-        .iter()
-        .position(|q| q.out_vid == x.root && matches!(q.kernel, Kernel::StandardConv1d))?;
+    let conv_i = protos[..j].iter().position(|q| {
+        q.out_vid == x.root
+            && matches!(q.kernel, Kernel::StandardConv1d | Kernel::DepthwiseConv1d)
+    })?;
     let conv = &protos[conv_i];
+    let kind = match conv.kernel {
+        Kernel::StandardConv1d => FoldKind::FramingConv,
+        _ => FoldKind::FramingDepthwise,
+    };
     let ckc = whole_const(&conv.args[1], constants)?;
     let ks = &conv.args[1].view.shape;
-    if ks.len() != 3 || ks[0] != c {
-        return None;
-    }
-    let (cin, ntaps) = (ks[1], ks[2]);
+    // standard framing kernel is (C, cin, ntaps); depthwise is (C, M)
+    let row_len = match kind {
+        FoldKind::FramingConv if ks.len() == 3 && ks[0] == c => ks[1] * ks[2],
+        FoldKind::FramingDepthwise if ks.len() == 2 && ks[0] == c => ks[1],
+        _ => return None,
+    };
     let kdata = constants[ckc].data();
     let mut hot: Vec<Option<(usize, f32)>> = Vec::with_capacity(c);
-    for row in kdata.chunks(cin * ntaps) {
+    for row in kdata.chunks(row_len) {
         let mut tap: Option<(usize, f32)> = None;
         for (pos, &v) in row.iter().enumerate() {
             if v != 0.0 {
@@ -712,18 +753,140 @@ fn try_window_fold(
     }
     let win = constants[kc].data();
     let mut scaled = kdata.to_vec();
-    for (co, row) in scaled.chunks_mut(cin * ntaps).enumerate() {
+    for (co, row) in scaled.chunks_mut(row_len).enumerate() {
         for v in row {
             *v *= win[co];
         }
     }
     let scaled_kernel = Tensor::new(constants[ckc].shape(), scaled).ok()?;
     Some(WindowFold {
+        kind,
         conv: conv_i,
         scaled_kernel,
         hot,
         orig_bias: constants[cbc].data().to_vec(),
         win: win.to_vec(),
+    })
+}
+
+/// The scale-chain fold's verified rewrite: which M = 1 depthwise scale
+/// proto absorbs the tagged chain link, its pre-signed replacement
+/// kernel and bias, and the evidence the decision rested on.
+struct ChainFold {
+    producer: usize,
+    scaled_kernel: Tensor,
+    scaled_bias: Tensor,
+    /// The chain link's per-channel ±1 signs.
+    signs: Vec<f32>,
+    /// The producer's original per-channel gains.
+    gains: Vec<f32>,
+    /// The producer's original bias.
+    orig_bias: Vec<f32>,
+    channels: usize,
+}
+
+/// Check whether the depthwise proto at `j` is a foldable M = 1 scale
+/// chain link (graph node tagged [`FusionHint::Chain`]) over an M = 1
+/// depthwise scale producer, and build the pre-signed kernel/bias if so.
+///
+/// Every precondition is re-proved here — the hint only nominates
+/// candidates:
+///
+/// * link kernel is a whole-tensor constant `(C, 1)` with every tap
+///   exactly `±1.0` and link bias a whole-tensor all-zero constant
+///   `(C,)` — the link computes `±y + 0.0` per element, and pre-signing
+///   the producer (`(±g)·x` then `+ (±pb)`) reproduces it exactly:
+///   negation commutes bitwise with IEEE multiply and add (sign
+///   symmetry of round-to-nearest), so no f32 operation is reassociated
+///   or re-rounded.  A general link tap would turn `t·(g·x)` into
+///   `(t·g)·x`, which rounds differently — skipped;
+/// * the activation is the whole output of an earlier `DepthwiseConv1d`
+///   proto read through an identity view, and that producer has a
+///   whole-constant `(C, 1)` kernel (M = 1: a pure per-channel scale)
+///   and a whole-constant `(C,)` bias;
+/// * the producer output has no other reader, neither value is a plan
+///   output, and neither value is already involved in another fold
+///   (folds never cascade — a second rewrite of the same step would
+///   invalidate the first fold's audit certificate).
+///
+/// Later readers of the link output keep their views and simply read
+/// the producer's output instead: both values are dense buffers of the
+/// same shape, so every downstream view stays valid.
+fn try_chain_fold(
+    g: &Graph,
+    n_inputs: usize,
+    protos: &[ProtoStep],
+    j: usize,
+    output_roots: &HashSet<usize>,
+    constants: &[Tensor],
+    involved: &HashSet<usize>,
+) -> Option<ChainFold> {
+    let p = &protos[j];
+    if !matches!(p.kernel, Kernel::DepthwiseConv1d) {
+        return None;
+    }
+    let node = g.nodes.get(p.out_vid.checked_sub(n_inputs)?)?;
+    if node.hint != FusionHint::Chain {
+        return None;
+    }
+    let [x, k, b] = p.args.as_slice() else {
+        return None;
+    };
+    let kc = whole_const(k, constants)?;
+    if k.view.shape.len() != 2 || k.view.shape[1] != 1 {
+        return None;
+    }
+    let c = k.view.shape[0];
+    let signs = constants[kc].data();
+    if signs.iter().any(|&v| v != 1.0 && v != -1.0) {
+        return None;
+    }
+    let bc = whole_const(b, constants)?;
+    if b.view.shape != [c] || constants[bc].data().iter().any(|&v| v != 0.0) {
+        return None;
+    }
+    if x.st != Storage::Owned || involved.contains(&x.root) || involved.contains(&p.out_vid) {
+        return None;
+    }
+    let prod_i = protos[..j]
+        .iter()
+        .position(|q| q.out_vid == x.root && matches!(q.kernel, Kernel::DepthwiseConv1d))?;
+    let prod = &protos[prod_i];
+    if prod.out_shape.len() != 3
+        || prod.out_shape[1] != c
+        || prod.out_shape.iter().product::<usize>() > FOLD_SCAN_CAP
+        || !is_identity_view(&x.view, &prod.out_shape)
+    {
+        return None;
+    }
+    let pkc = whole_const(&prod.args[1], constants)?;
+    if prod.args[1].view.shape != [c, 1] {
+        return None;
+    }
+    let pbc = whole_const(&prod.args[2], constants)?;
+    if prod.args[2].view.shape != [c] {
+        return None;
+    }
+    let prod_reads = protos
+        .iter()
+        .flat_map(|q| q.args.iter())
+        .filter(|a| a.root == x.root)
+        .count();
+    if prod_reads != 1 || output_roots.contains(&x.root) || output_roots.contains(&p.out_vid) {
+        return None;
+    }
+    let gains = constants[pkc].data();
+    let orig_bias = constants[pbc].data();
+    let scaled_k: Vec<f32> = gains.iter().zip(signs).map(|(&gn, &s)| s * gn).collect();
+    let scaled_b: Vec<f32> = orig_bias.iter().zip(signs).map(|(&v, &s)| s * v).collect();
+    Some(ChainFold {
+        producer: prod_i,
+        scaled_kernel: Tensor::new(&[c, 1], scaled_k).ok()?,
+        scaled_bias: Tensor::new(&[c], scaled_b).ok()?,
+        signs: signs.to_vec(),
+        gains: gains.to_vec(),
+        orig_bias: orig_bias.to_vec(),
+        channels: c,
     })
 }
 
@@ -740,9 +903,17 @@ fn try_window_fold(
 ///    view its conv-family consumers read directly (bitwise identical —
 ///    the same elements are read, just without the intermediate buffer);
 /// 2. **Window fold** ([`try_window_fold`]): a tagged M=1 depthwise
-///    window over a one-hot ±1 framing conv folds into the conv by
-///    pre-scaling its taps and adopting the window's bias at compile
-///    time — one kernel step instead of two.
+///    window over a one-hot ±1 framing producer (standard *or*
+///    depthwise conv) folds into the producer by pre-scaling its taps
+///    and adopting the window's bias at compile time — one kernel step
+///    instead of two;
+/// 3. **Scale-chain fold** ([`try_chain_fold`]): a tagged all-±1
+///    depthwise link over an M=1 depthwise scale folds into the scale
+///    by pre-signing its taps and bias.
+///
+/// Folds never cascade: every value a fold touches goes into an
+/// `involved` set later candidates must avoid, so no audit certificate
+/// is invalidated by a second rewrite of the same step.
 fn fuse_protos(
     g: &Graph,
     n_inputs: usize,
@@ -769,6 +940,7 @@ fn fuse_protos(
             None => i += 1,
         }
     }
+    let mut involved: HashSet<usize> = HashSet::new();
     let mut j = 0;
     while j < protos.len() {
         match try_window_fold(g, n_inputs, protos, j, output_roots, constants) {
@@ -782,6 +954,7 @@ fn fuse_protos(
                     unreachable!("fold bias proven whole-const");
                 };
                 out.fold_audits.push(FoldAudit {
+                    kind: fold.kind,
                     conv_root: x.root,
                     folded_root: vid,
                     scaled_const: constants.len() - 1,
@@ -806,6 +979,59 @@ fn fuse_protos(
                         }
                     }
                 }
+                involved.insert(x.root);
+                involved.insert(vid);
+                out.fused_steps += 1;
+            }
+            None => j += 1,
+        }
+    }
+    let mut j = 0;
+    while j < protos.len() {
+        match try_chain_fold(g, n_inputs, protos, j, output_roots, constants, &involved) {
+            Some(fold) => {
+                let vid = protos[j].out_vid;
+                let x = protos[j].args[0].clone();
+                let c = fold.channels;
+                constants.push(fold.scaled_kernel);
+                let scaled_const = constants.len() - 1;
+                constants.push(fold.scaled_bias);
+                let bias_const = constants.len() - 1;
+                out.fold_audits.push(FoldAudit {
+                    kind: FoldKind::ScaleChain,
+                    conv_root: x.root,
+                    folded_root: vid,
+                    scaled_const,
+                    bias_const,
+                    win: fold.signs,
+                    wbias: constants[bias_const].data().to_vec(),
+                    hot: fold.gains.iter().map(|&gn| Some((0, gn))).collect(),
+                    orig_bias: fold.orig_bias,
+                    act_view: x.view.clone(),
+                });
+                protos[fold.producer].args[1] = ValInfo {
+                    st: Storage::Const(scaled_const),
+                    root: usize::MAX,
+                    view: View::contiguous(&[c, 1]),
+                };
+                protos[fold.producer].args[2] = ValInfo {
+                    st: Storage::Const(bias_const),
+                    root: usize::MAX,
+                    view: View::contiguous(&[c]),
+                };
+                protos.remove(j);
+                // readers keep their own views: producer and link
+                // outputs are dense buffers of the same shape
+                for q in protos[j..].iter_mut() {
+                    for a in q.args.iter_mut() {
+                        if a.root == vid {
+                            a.st = x.st;
+                            a.root = x.root;
+                        }
+                    }
+                }
+                involved.insert(x.root);
+                involved.insert(vid);
                 out.fused_steps += 1;
             }
             None => j += 1,
@@ -2329,6 +2555,170 @@ mod tests {
             );
             plan.verify().unwrap();
             check_bitwise(&g, &[Tensor::randn(&[b, 600], 600 + b as u64)]);
+        }
+    }
+
+    /// An M = 1 depthwise gain stage over `(b, n)` rows plus a chain
+    /// link on top (the FX correlator's gain→conjugate shape), followed
+    /// by one pointwise consumer.  `link_taps`/`link_bias` let the fold
+    /// tests break individual preconditions.  Outputs are NOT set.
+    fn scale_chain_graph(
+        (b, n): (usize, usize),
+        link_taps: Tensor,
+        link_bias: Tensor,
+    ) -> (Graph, ValueId, ValueId) {
+        let mut g = Graph::new();
+        let x = g.input(&[b, n]);
+        let xi = g.push(NodeOp::Reshape(vec![b, n, 1]), &[x]);
+        let kg = g.constant(Tensor::randn(&[n, 1], 518));
+        let pb = g.constant(Tensor::randn(&[n], 519)); // nonzero: must pre-sign
+        let scaled = g.push(NodeOp::DepthwiseConv1d, &[xi, kg, pb]);
+        let kl = g.constant(link_taps);
+        let bl = g.constant(link_bias);
+        let link = g.push_with_hint(NodeOp::DepthwiseConv1d, &[scaled, kl, bl], FusionHint::Chain);
+        let kd = g.constant(Tensor::randn(&[n, n], 520));
+        let bd = g.constant(Tensor::zeros(&[n]));
+        let pw = g.push(NodeOp::PointwiseConv, &[link, kd, bd]); // (b, n, 1)
+        let out = g.push(NodeOp::Reshape(vec![b, n]), &[pw]);
+        (g, scaled, out)
+    }
+
+    fn alt_signs(n: usize) -> Tensor {
+        let taps: Vec<f32> = (0..n)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        Tensor::new(&[n, 1], taps).unwrap()
+    }
+
+    #[test]
+    fn chain_fold_fires_and_presigns_gains_and_bias() {
+        // mixed ±1 link over a nonzero-bias gain stage: the fold must
+        // pre-sign both the gains and the bias, leaving scale + pointwise
+        let (b, n) = (3usize, 8usize);
+        let (mut g, _, out) = scale_chain_graph((b, n), alt_signs(n), Tensor::zeros(&[n]));
+        g.set_outputs(&[out]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 1, "chain link must fold into the scale");
+        assert_eq!(plan.step_count(), 2, "scale + pointwise only");
+        assert_eq!(plan.materialize_count(), 0);
+        check_bitwise(&g, &[Tensor::randn(&[b, n], 521)]);
+    }
+
+    #[test]
+    fn chain_fold_skips_non_unit_link_taps() {
+        // a 0.5 link tap would reassociate t*(g*x) into (t*g)*x —
+        // different rounding, so the pass must leave the graph unfused
+        let (b, n) = (2usize, 8usize);
+        let mut taps = alt_signs(n);
+        taps.data_mut()[0] = 0.5;
+        let (mut g, _, out) = scale_chain_graph((b, n), taps, Tensor::zeros(&[n]));
+        g.set_outputs(&[out]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 0, "non-unit link taps must not fold");
+        check_bitwise(&g, &[Tensor::randn(&[b, n], 522)]);
+    }
+
+    #[test]
+    fn chain_fold_skips_nonzero_link_bias() {
+        // a nonzero link bias changes where the +bias lands relative to
+        // the producer's own bias add: skip
+        let (b, n) = (2usize, 8usize);
+        let (mut g, _, out) = scale_chain_graph((b, n), alt_signs(n), Tensor::randn(&[n], 523));
+        g.set_outputs(&[out]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 0, "nonzero link bias must not fold");
+        check_bitwise(&g, &[Tensor::randn(&[b, n], 524)]);
+    }
+
+    #[test]
+    fn chain_fold_skips_shared_scale_output() {
+        // the gain-stage output is also a plan output: folding would
+        // re-sign the values that output observes — skip
+        let (b, n) = (2usize, 8usize);
+        let (mut g, scaled, out) = scale_chain_graph((b, n), alt_signs(n), Tensor::zeros(&[n]));
+        g.set_outputs(&[out, scaled]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 0, "shared scale output must not fold");
+        check_bitwise(&g, &[Tensor::randn(&[b, n], 525)]);
+    }
+
+    #[test]
+    fn chain_folds_never_cascade() {
+        // two stacked ±1 links: the first folds into the scale; the
+        // second must leave the already-rewritten scale alone or its
+        // audit certificate would be invalidated
+        let (b, n) = (2usize, 8usize);
+        let mut g = Graph::new();
+        let x = g.input(&[b, n]);
+        let xi = g.push(NodeOp::Reshape(vec![b, n, 1]), &[x]);
+        let kg = g.constant(Tensor::randn(&[n, 1], 526));
+        let pb = g.constant(Tensor::randn(&[n], 527));
+        let scaled = g.push(NodeOp::DepthwiseConv1d, &[xi, kg, pb]);
+        let bz = g.constant(Tensor::zeros(&[n]));
+        let k1 = g.constant(alt_signs(n));
+        let l1 = g.push_with_hint(NodeOp::DepthwiseConv1d, &[scaled, k1, bz], FusionHint::Chain);
+        let k2 = g.constant(Tensor::new(&[n, 1], vec![-1.0; n]).unwrap());
+        let l2 = g.push_with_hint(NodeOp::DepthwiseConv1d, &[l1, k2, bz], FusionHint::Chain);
+        let kd = g.constant(Tensor::randn(&[n, n], 528));
+        let pw = g.push(NodeOp::PointwiseConv, &[l2, kd, bz]);
+        let out = g.push(NodeOp::Reshape(vec![b, n]), &[pw]);
+        g.set_outputs(&[out]);
+        let plan = ExecPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_steps(), 1, "only the first link may fold");
+        check_bitwise(&g, &[Tensor::randn(&[b, n], 529)]);
+    }
+
+    #[test]
+    fn beamform_gains_fold_into_delay_taps_at_every_bucket() {
+        // the depthwise-producer window fold: the hinted M=1 gain stage
+        // folds into the one-hot delay conv, leaving conv + channel sum
+        let (c, l) = (4usize, 64usize);
+        let delays = [0usize, 3, 1, 2];
+        let gains = [1.0f32, 0.8, -0.6, 0.4];
+        for b in [1usize, 2, 4, 8] {
+            let g = lower::beamform(b, c, l, &delays, &gains).unwrap();
+            let plan = ExecPlan::compile(&g).unwrap();
+            assert_eq!(plan.fused_steps(), 1, "B={b}: gains must fold");
+            assert_eq!(plan.materialize_count(), 0, "B={b}");
+            assert_eq!(plan.step_count(), 2, "B={b}: delay conv + channel sum");
+            check_bitwise(&g, &[Tensor::randn(&[b, c, l], 530 + b as u64)]);
+        }
+    }
+
+    #[test]
+    fn fx_correlate_compiles_fused_and_copy_free_at_every_bucket() {
+        // two window folds (one per antenna STFT) + one chain fold
+        // (conjugation into gain calibration); at B>1 the per-antenna
+        // frame regroupings become split views
+        let (l, nfft, hop) = (192usize, 16usize, 8usize);
+        let gains: Vec<f32> = (0..nfft).map(|i| 0.5 + 0.05 * i as f32).collect();
+        for b in [1usize, 2, 4] {
+            let g = lower::fx_correlate(b, l, nfft, hop, &gains).unwrap();
+            let plan = ExecPlan::compile(&g).unwrap();
+            assert_eq!(plan.fused_steps(), 3, "B={b}: 2 windows + 1 chain");
+            assert_eq!(plan.materialize_count(), 0, "B={b}");
+            assert_eq!(
+                plan.fusion_eliminated_copies(),
+                2 * usize::from(b > 1),
+                "B={b}"
+            );
+            let x1 = Tensor::randn(&[b, l], 540 + b as u64);
+            let x2 = Tensor::randn(&[b, l], 550 + b as u64);
+            check_bitwise(&g, &[x1, x2]);
+        }
+    }
+
+    #[test]
+    fn spectrometer_compiles_copy_free_at_every_bucket() {
+        // the one-graph spectrometer: every intermediate movement is a
+        // contiguous reshape, so the plan never materializes at any B
+        let cfg = dsp::PfbConfig::new(8, 4);
+        for b in [1usize, 2, 4, 8] {
+            let g = lower::spectrometer(b, 8 * 32, cfg).unwrap();
+            let plan = ExecPlan::compile(&g).unwrap();
+            assert_eq!(plan.materialize_count(), 0, "B={b}");
+            assert_eq!(plan.movement_materialize_count(), 0, "B={b}");
+            check_bitwise(&g, &[Tensor::randn(&[b, 8 * 32], 560 + b as u64)]);
         }
     }
 

@@ -27,13 +27,16 @@
 //!    touch independent output coordinates, so a future SIMD microkernel
 //!    that vectorizes the wrong axis fails verification rather than a
 //!    fuzzer lottery.
-//! 4. **Fusion-legality audit** — every window fold recorded by the
-//!    fusion pass carries a [`FoldAudit`] certificate; the verifier
-//!    re-proves on the *final* plan that the pre-scaled kernel is exactly
-//!    the audited one-hot ±1 structure scaled by the window, the adopted
-//!    bias matches, the original conv bias was all-zero, the activation
-//!    view maps every element onto its own conv output channel, and the
-//!    folded-away value never resurfaces.
+//! 4. **Fusion-legality audit** — every fold recorded by the fusion pass
+//!    carries a [`FoldAudit`] certificate tagged with its
+//!    [`FoldKind`]; the verifier re-proves on the *final* plan that the
+//!    pre-scaled kernel is exactly the audited structure (one-hot ±1 rows
+//!    scaled by the window for framing folds; ±1-signed original gains
+//!    for scale-chain folds), the adopted bias matches (all-zero original
+//!    bias for framing folds, sign × original bias for chain folds), the
+//!    rewritten step has the kernel family the kind demands, the
+//!    activation view maps every element onto its own conv output
+//!    channel, and the folded-away value never resurfaces.
 //!
 //! Wiring: [`super::plan::CompileOptions::verify`] runs the verifier at
 //! the end of every compile — on by default under `debug_assertions`
@@ -44,7 +47,7 @@
 //! tests and the sanitizer CI jobs.
 
 use super::fused::{self, Blocking, KernelFamily};
-use super::plan::{ArgRef, ExecPlan, Kernel, Loc, View};
+use super::plan::{ArgRef, ExecPlan, FoldKind, Kernel, Loc, View};
 use crate::tina::lower::{oracle_output_axes, oracle_reduction_order};
 use std::collections::{HashMap, HashSet};
 use std::fmt;
@@ -274,6 +277,23 @@ pub enum VerifyError {
         /// What disagreed.
         detail: String,
     },
+    /// The audited conv step's kernel family does not match the audit
+    /// kind (framing-conv folds rewrite standard convs; framing-depthwise
+    /// and scale-chain folds rewrite depthwise convs).
+    FoldWrongKernelFamily {
+        /// Offending audit index.
+        audit: usize,
+        /// What disagreed.
+        detail: String,
+    },
+    /// A scale-chain audit's per-channel sign is not ±1, or its recorded
+    /// pre-signed bias disagrees with sign × original producer bias.
+    FoldChainSignMismatch {
+        /// Offending audit index.
+        audit: usize,
+        /// What disagreed.
+        detail: String,
+    },
     /// The folded-away window value reappears in the final plan.
     FoldValueResurfaced {
         /// Offending audit index.
@@ -403,6 +423,12 @@ impl fmt::Display for VerifyError {
             }
             FoldBadChannelMap { audit, detail } => {
                 write!(f, "fold audit {audit}: bad channel correspondence ({detail})")
+            }
+            FoldWrongKernelFamily { audit, detail } => {
+                write!(f, "fold audit {audit}: wrong kernel family ({detail})")
+            }
+            FoldChainSignMismatch { audit, detail } => {
+                write!(f, "fold audit {audit}: chain sign mismatch ({detail})")
             }
             FoldValueResurfaced { audit, root } => {
                 write!(f, "fold audit {audit}: folded value {root} resurfaced")
@@ -984,8 +1010,38 @@ impl ExecPlan {
                     a.orig_bias.len()
                 )));
             }
-            if a.orig_bias.iter().any(|&v| v != 0.0) {
-                return Err(VerifyError::FoldNonZeroOrigBias { audit: ai });
+            match a.kind {
+                // framing folds absorbed a window that assumed the conv
+                // added nothing: the original bias must have been zero
+                FoldKind::FramingConv | FoldKind::FramingDepthwise => {
+                    if a.orig_bias.iter().any(|&v| v != 0.0) {
+                        return Err(VerifyError::FoldNonZeroOrigBias { audit: ai });
+                    }
+                }
+                // chain folds pre-sign a (possibly nonzero) producer bias
+                // instead; exactness rests on every sign being ±1 and the
+                // recorded bias being exactly sign × original
+                FoldKind::ScaleChain => {
+                    for ch in 0..c {
+                        let s = a.win[ch];
+                        if s != 1.0 && s != -1.0 {
+                            return Err(VerifyError::FoldChainSignMismatch {
+                                audit: ai,
+                                detail: format!("channel {ch}: sign {s}"),
+                            });
+                        }
+                        let want = s * a.orig_bias[ch];
+                        if a.wbias[ch] != want {
+                            return Err(VerifyError::FoldChainSignMismatch {
+                                audit: ai,
+                                detail: format!(
+                                    "channel {ch}: pre-signed bias {} != {want}",
+                                    a.wbias[ch]
+                                ),
+                            });
+                        }
+                    }
+                }
             }
             // the pre-scaled kernel: one-hot ±1 rows scaled by the window
             let Some(sc) = self.constants.get(a.scaled_const) else {
@@ -999,7 +1055,12 @@ impl ExecPlan {
             for (co, row) in sd.chunks(row_len).enumerate() {
                 match a.hot[co] {
                     Some((idx, sign)) => {
-                        if idx >= row_len || (sign != 1.0 && sign != -1.0) {
+                        // framing folds demand unit hot taps; a chain
+                        // fold's "sign" slot carries the producer's
+                        // arbitrary original gain instead
+                        let unit =
+                            matches!(a.kind, FoldKind::FramingConv | FoldKind::FramingDepthwise);
+                        if idx >= row_len || (unit && sign != 1.0 && sign != -1.0) {
                             return Err(scale(format!("channel {co}: bad hot tap ({idx}, {sign})")));
                         }
                         for (p, &v) in row.iter().enumerate() {
@@ -1029,8 +1090,17 @@ impl ExecPlan {
             let Some(conv) = self.steps.iter().find(|s| s.out_root == a.conv_root) else {
                 return Err(chan(format!("conv value {} has no step", a.conv_root)));
             };
-            if !matches!(conv.kernel, Kernel::StandardConv1d) || conv.args.len() != 3 {
-                return Err(chan("folded step is not a standard conv".to_string()));
+            let family_ok = match a.kind {
+                FoldKind::FramingConv => matches!(conv.kernel, Kernel::StandardConv1d),
+                FoldKind::FramingDepthwise | FoldKind::ScaleChain => {
+                    matches!(conv.kernel, Kernel::DepthwiseConv1d)
+                }
+            };
+            if !family_ok || conv.args.len() != 3 {
+                return Err(VerifyError::FoldWrongKernelFamily {
+                    audit: ai,
+                    detail: format!("{:?} step rewritten by a {:?} fold", conv.kernel, a.kind),
+                });
             }
             if conv.args[1].loc != Loc::Const(a.scaled_const) {
                 return Err(scale("conv does not read the scaled kernel".to_string()));
@@ -1224,6 +1294,40 @@ mod tests {
     }
 
     #[test]
+    fn wrong_kernel_family_fails_fold_audit() {
+        let g = lower::beamform(1, 4, 64, &[0, 1, 2, 3], &[1.0, 0.5, -0.5, 2.0]).unwrap();
+        let mut plan = compile(&g);
+        let ai = plan
+            .fold_audits
+            .iter()
+            .position(|a| a.kind == FoldKind::FramingDepthwise)
+            .expect("beamform must record a framing-depthwise fold");
+        plan.fold_audits[ai].kind = FoldKind::FramingConv;
+        let err = plan.verify().unwrap_err();
+        assert!(
+            matches!(err, VerifyError::FoldWrongKernelFamily { audit, .. } if audit == ai),
+            "got {err}"
+        );
+    }
+
+    #[test]
+    fn corrupt_chain_sign_fails_fold_audit() {
+        let gains: Vec<f32> = (0..16).map(|i| 0.25 + 0.1 * i as f32).collect();
+        let mut plan = compile(&lower::fx_correlate(1, 128, 16, 8, &gains).unwrap());
+        let ai = plan
+            .fold_audits
+            .iter()
+            .position(|a| a.kind == FoldKind::ScaleChain)
+            .expect("fx_correlate must record a scale-chain fold");
+        plan.fold_audits[ai].win[0] = 2.0;
+        let err = plan.verify().unwrap_err();
+        assert!(
+            matches!(err, VerifyError::FoldChainSignMismatch { audit, .. } if audit == ai),
+            "got {err}"
+        );
+    }
+
+    #[test]
     fn split_inner_must_divide_leading_axis() {
         let mut plan = compile(&lower::stft(2, 64, 16, 16).unwrap());
         let (si, step) = plan
@@ -1350,10 +1454,17 @@ mod tests {
             Box::new(|| lower::fir(2, 64, &[0.5; 8]).unwrap()),
             Box::new(|| lower::stft(2, 64, 16, 16).unwrap()),
             Box::new(|| lower::pfb(1, 64, dsp::PfbConfig::new(8, 4)).unwrap()),
+            Box::new(|| lower::complex_mul(2, 8)),
+            Box::new(|| lower::magnitude_sq(2, 8)),
+            Box::new(|| lower::iir(2, 64, &[0.5, 0.25], &[0.3], 3).unwrap()),
+            Box::new(|| lower::xcorr(2, 48, 7).unwrap()),
+            Box::new(|| lower::beamform(2, 4, 32, &[0, 2, 1, 3], &[1.0, 0.5, -0.5, 2.0]).unwrap()),
+            Box::new(|| lower::fx_correlate(1, 96, 16, 8, &[0.5; 16]).unwrap()),
+            Box::new(|| lower::spectrometer(1, 128, dsp::PfbConfig::new(8, 4)).unwrap()),
         ];
         let mut rng = Rng(0x5eed_cafe_f00d_1234);
         let mut tally = [0usize; 7];
-        for it in 0..48 {
+        for it in 0..64 {
             let g = corpus[rng.pick(corpus.len())]();
             let mut plan = compile(&g);
             let nsteps = plan.steps.len();
@@ -1451,6 +1562,32 @@ mod tests {
             .unwrap();
             plan.verify()
                 .unwrap_or_else(|e| panic!("fusion={fusion}: {e}"));
+        }
+    }
+
+    #[test]
+    fn verifier_accepts_every_new_lowering_fused_and_unfused() {
+        let gains: Vec<f32> = (0..16).map(|i| 0.5 + 0.05 * i as f32).collect();
+        let graphs = [
+            lower::iir(2, 64, &[0.5, 0.25], &[0.3, 0.1], 3).unwrap(),
+            lower::xcorr(2, 48, 7).unwrap(),
+            lower::fx_correlate(2, 128, 16, 8, &gains).unwrap(),
+            lower::beamform(2, 4, 64, &[0, 3, 1, 2], &[1.0, 0.8, -0.6, 0.4]).unwrap(),
+            lower::spectrometer(2, 256, dsp::PfbConfig::new(8, 4)).unwrap(),
+        ];
+        for (gi, g) in graphs.iter().enumerate() {
+            for fusion in [true, false] {
+                let plan = ExecPlan::compile_with(
+                    g,
+                    CompileOptions {
+                        fusion,
+                        verify: false,
+                    },
+                )
+                .unwrap();
+                plan.verify()
+                    .unwrap_or_else(|e| panic!("graph {gi}, fusion={fusion}: {e}"));
+            }
         }
     }
 }

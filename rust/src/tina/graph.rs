@@ -105,6 +105,14 @@ pub enum FusionHint {
     /// window fold (see `exec::plan`'s fusion-pass docs for the exact
     /// preconditions and the rounding contract).
     Window,
+    /// A per-channel sign flip / selector (depthwise conv with M = 1,
+    /// all taps in {+1, -1} and zero bias) the lowering expects the
+    /// planner to fold into its upstream M = 1 depthwise scale producer
+    /// by pre-signing that producer's taps and bias — the scale-chain
+    /// fold (see `exec::plan`'s fusion-pass docs). Restricting the
+    /// consumer to unit taps keeps the rewrite exactly
+    /// rounding-preserving.
+    Chain,
 }
 
 /// A graph node: op + input value ids.  Produces exactly one value.

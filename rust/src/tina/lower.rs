@@ -205,20 +205,23 @@ pub fn unfold(b: usize, l: usize, window: usize) -> Result<Graph> {
     Ok(g)
 }
 
-/// Extension op (paper future work): short-time Fourier transform from
-/// three Table-1 building blocks — framing via strided standard conv
-/// (identity kernel, §4.4 + §2.1's stride), Hamming windowing via
-/// depthwise conv (§3.1), DFT via pointwise conv (§4.1).
-///
-/// x: (B, L) -> (re, im) each (B, F, nfft), F = (L - nfft)/hop + 1.
-/// Mirrors python/compile/tina_ops.py::stft.
-pub fn stft(b: usize, l: usize, nfft: usize, hop: usize) -> Result<Graph> {
+/// Shared: the full STFT pipeline appended to an existing graph.
+/// Returns the spectra `(re, im)` at the flattened `(B*F, nfft)` row
+/// level plus the frame count `F` — callers that want the public
+/// `(B, F, nfft)` layout add the final reshapes themselves (the
+/// FX correlator keeps working at the row level).
+fn stft_nodes(
+    g: &mut Graph,
+    x: ValueId,
+    b: usize,
+    l: usize,
+    nfft: usize,
+    hop: usize,
+) -> Result<(ValueId, ValueId, usize)> {
     if l < nfft {
         anyhow::bail!("signal {l} shorter than one {nfft}-sample frame");
     }
     let frames = (l - nfft) / hop + 1;
-    let mut g = Graph::new();
-    let x = g.input(&[b, l]);
 
     // 1. framing: unfold then stride the frame axis
     let xi = g.push(NodeOp::Reshape(vec![b, 1, l]), &[x]);
@@ -258,8 +261,22 @@ pub fn stft(b: usize, l: usize, nfft: usize, hop: usize) -> Result<Graph> {
     let bias_d = g.constant(Tensor::zeros(&[nfft]));
     let kre = g.constant(f_re);
     let kim = g.constant(f_im);
-    let o_re = real_pointwise(&mut g, xw, b * frames, nfft, kre, nfft, bias_d);
-    let o_im = real_pointwise(&mut g, xw, b * frames, nfft, kim, nfft, bias_d);
+    let o_re = real_pointwise(g, xw, b * frames, nfft, kre, nfft, bias_d);
+    let o_im = real_pointwise(g, xw, b * frames, nfft, kim, nfft, bias_d);
+    Ok((o_re, o_im, frames))
+}
+
+/// Extension op (paper future work): short-time Fourier transform from
+/// three Table-1 building blocks — framing via strided standard conv
+/// (identity kernel, §4.4 + §2.1's stride), Hamming windowing via
+/// depthwise conv (§3.1), DFT via pointwise conv (§4.1).
+///
+/// x: (B, L) -> (re, im) each (B, F, nfft), F = (L - nfft)/hop + 1.
+/// Mirrors python/compile/tina_ops.py::stft.
+pub fn stft(b: usize, l: usize, nfft: usize, hop: usize) -> Result<Graph> {
+    let mut g = Graph::new();
+    let x = g.input(&[b, l]);
+    let (o_re, o_im, frames) = stft_nodes(&mut g, x, b, l, nfft, hop)?;
     let o_re = g.push(NodeOp::Reshape(vec![b, frames, nfft]), &[o_re]);
     let o_im = g.push(NodeOp::Reshape(vec![b, frames, nfft]), &[o_im]);
     g.set_outputs(&[o_re, o_im]);
@@ -320,6 +337,311 @@ pub fn pfb(b: usize, l: usize, cfg: dsp::PfbConfig) -> Result<Graph> {
     let o_im = g.push(NodeOp::Permute3([0, 2, 1]), &[o_im]);
     g.set_outputs(&[o_re, o_im]);
     let _ = ns;
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------------
+// Complex-valued primitives (split re/im channels)
+// ---------------------------------------------------------------------------
+
+/// Shared: elementwise product of two already-defined values each holding
+/// `q` elements, via a depthwise conv (§3.1) — activation `(1, q, 1)`,
+/// kernel `(q, 1)`, zero bias.  Returns a `(1, q, 1)` value.
+fn ew_product_nodes(g: &mut Graph, act: ValueId, ker: ValueId, q: usize) -> ValueId {
+    let a = g.push(NodeOp::Reshape(vec![1, q, 1]), &[act]);
+    let k = g.push(NodeOp::Reshape(vec![q, 1]), &[ker]);
+    let bias = g.constant(Tensor::zeros(&[q]));
+    g.push(NodeOp::DepthwiseConv1d, &[a, k, bias])
+}
+
+/// Shared: complex multiply of two already-defined value pairs, each
+/// holding `q` flattened elements.  Same sign convention as
+/// [`complex_pointwise`]: `re = rr - ii`, `im = ri + ir`.  The `a`
+/// side rides the activation slot of each product, the `b` side the
+/// kernel slot.  Returns `(re, im)` values shaped `(1, q, 1)`.
+fn complex_mul_nodes(
+    g: &mut Graph,
+    a_re: ValueId,
+    a_im: ValueId,
+    b_re: ValueId,
+    b_im: ValueId,
+    q: usize,
+) -> (ValueId, ValueId) {
+    let rr = ew_product_nodes(g, a_re, b_re, q);
+    let ii = ew_product_nodes(g, a_im, b_im, q);
+    let ri = ew_product_nodes(g, a_im, b_re, q);
+    let ir = ew_product_nodes(g, a_re, b_im, q);
+    let re = g.push(NodeOp::Sub, &[rr, ii]);
+    let im = g.push(NodeOp::Add, &[ri, ir]);
+    (re, im)
+}
+
+/// Elementwise complex multiply of two `(B, N)` complex pairs carried as
+/// split re/im channels — four depthwise products (§3.1) plus one
+/// add/sub pair.  Inputs in order `a_re, a_im, b_re, b_im`; outputs
+/// `(re, im) = a · b`, each `(B, N)`.
+pub fn complex_mul(b: usize, n: usize) -> Graph {
+    let mut g = Graph::new();
+    let q = b * n;
+    let a_re = g.input(&[b, n]);
+    let a_im = g.input(&[b, n]);
+    let b_re = g.input(&[b, n]);
+    let b_im = g.input(&[b, n]);
+    let (re, im) = complex_mul_nodes(&mut g, a_re, a_im, b_re, b_im, q);
+    let re = g.push(NodeOp::Reshape(vec![b, n]), &[re]);
+    let im = g.push(NodeOp::Reshape(vec![b, n]), &[im]);
+    g.set_outputs(&[re, im]);
+    g
+}
+
+/// Elementwise squared magnitude of a `(B, N)` complex pair:
+/// `re² + im²` via two self-kernel depthwise products (§3.1) and one
+/// add.  Output `(B, N)`.
+pub fn magnitude_sq(b: usize, n: usize) -> Graph {
+    let mut g = Graph::new();
+    let q = b * n;
+    let re = g.input(&[b, n]);
+    let im = g.input(&[b, n]);
+    let rr = ew_product_nodes(&mut g, re, re, q);
+    let ii = ew_product_nodes(&mut g, im, im, q);
+    let o = g.push(NodeOp::Add, &[rr, ii]);
+    let o = g.push(NodeOp::Reshape(vec![b, n]), &[o]);
+    g.set_outputs(&[o]);
+    g
+}
+
+// ---------------------------------------------------------------------------
+// IIR via unrolled iteration — the paper's iterative-function sweet spot
+// ---------------------------------------------------------------------------
+
+/// IIR filter by fixed-depth unrolled fixed-point iteration (the paper's
+/// iterative-function sweet spot): one feedforward standard conv, then
+/// `depth` feedback-conv + add levels.
+///
+/// The recurrence realized is the *prefix-aligned* (anti-causal) form
+///
+/// ```text
+/// ff[n] = Σ_k b_taps[k] · x[n + k]                      (correlation)
+/// y[n]  = ff[n] − Σ_{j=1..na} a_taps[j−1] · y[n + j]
+/// ```
+///
+/// i.e. a causal IIR run over the time-reversed signal — chosen because
+/// the movement substrate slices prefixes only.  Level `d+1` computes
+/// `y⁽ᵈ⁺¹⁾[n] = ff[n] − Σ_j a[j−1]·y⁽ᵈ⁾[n+j]` from `y⁽⁰⁾ = ff`; each
+/// level shortens the valid prefix by `na = a_taps.len()`, so the
+/// output is `(B, W0 − depth·na)` with `W0 = L − b_taps.len() + 1`.
+/// For `‖a‖₁ < 1` the truncation error contracts by `‖a‖₁` per level —
+/// `dsp::iir_reference` is the exact-recurrence oracle and the property
+/// tests assert the geometric bound.
+pub fn iir(b: usize, l: usize, b_taps: &[f32], a_taps: &[f32], depth: usize) -> Result<Graph> {
+    let mb = b_taps.len();
+    let na = a_taps.len();
+    if mb == 0 || na == 0 || depth == 0 {
+        anyhow::bail!("iir requires non-empty b/a taps and depth >= 1");
+    }
+    if l < mb {
+        anyhow::bail!("signal {l} shorter than {mb} feedforward taps");
+    }
+    let w0 = l - mb + 1;
+    if w0 <= depth * na {
+        anyhow::bail!(
+            "unroll depth {depth} x {na} feedback taps consumes the whole {w0}-sample prefix"
+        );
+    }
+    let mut g = Graph::new();
+    let x = g.input(&[b, l]);
+    let xi = g.push(NodeOp::Reshape(vec![b, 1, l]), &[x]);
+    // feedforward: correlation form, taps unreversed
+    let kff = g.constant(Tensor::new(&[1, 1, mb], b_taps.to_vec())?);
+    let bias = g.constant(Tensor::zeros(&[1]));
+    let ff = g.push(NodeOp::StandardConv1d, &[xi, kff, bias]); // (B, 1, W0)
+    // feedback kernel [0, -a1, ..., -a_na]: z[n] = -Σ_j a[j-1]·y[n+j]
+    let mut fb = vec![0.0f32; na + 1];
+    for (j, &a) in a_taps.iter().enumerate() {
+        fb[j + 1] = -a;
+    }
+    let kfb = g.constant(Tensor::new(&[1, 1, na + 1], fb)?);
+    let mut y = ff;
+    let mut w = w0;
+    for _ in 0..depth {
+        let z = g.push(NodeOp::StandardConv1d, &[y, kfb, bias]); // (B, 1, w - na)
+        w -= na;
+        let ffc = g.push(
+            NodeOp::StridedSlice {
+                axis: 2,
+                stride: 1,
+                count: w,
+            },
+            &[ff],
+        ); // prefix crop of ff to (B, 1, w)
+        y = g.push(NodeOp::Add, &[ffc, z]);
+    }
+    let o = g.push(NodeOp::Reshape(vec![b, w]), &[y]);
+    g.set_outputs(&[o]);
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------------
+// Cross-correlation and the FX correlator (ASTRON radio-astronomy context)
+// ---------------------------------------------------------------------------
+
+/// Cross-correlation of a `(B, L)` signal against a runtime `(M,)`
+/// template via one standard conv — §4.3 *without* the tap reversal
+/// (correlation, not convolution).  Output `(B, L − M + 1)` with
+/// `y[n] = Σ_k t[k] · x[n + k]`; `baselines::naive::xcorr` is the
+/// direct O(L·M) oracle.
+pub fn xcorr(b: usize, l: usize, m: usize) -> Result<Graph> {
+    if m == 0 || l < m {
+        anyhow::bail!("xcorr needs a template of 1..={l} taps, got {m}");
+    }
+    let mut g = Graph::new();
+    let x = g.input(&[b, l]);
+    let t = g.input(&[m]);
+    let xi = g.push(NodeOp::Reshape(vec![b, 1, l]), &[x]);
+    let k = g.push(NodeOp::Reshape(vec![1, 1, m]), &[t]);
+    let bias = g.constant(Tensor::zeros(&[1]));
+    let o = g.push(NodeOp::StandardConv1d, &[xi, k, bias]);
+    let o = g.push(NodeOp::Reshape(vec![b, l - m + 1]), &[o]);
+    g.set_outputs(&[o]);
+    Ok(g)
+}
+
+/// A minimal two-antenna FX correlator (the ASTRON workload behind the
+/// PFB use case): per-antenna STFT, per-bin gain calibration of antenna
+/// 2, complex multiply against the *conjugated* calibrated spectrum,
+/// and accumulation over frames:
+///
+/// ```text
+/// V[k] = Σ_f S1[f, k] · conj(g[k] · S2[f, k])
+/// ```
+///
+/// Inputs: two `(B, L)` antenna signals; outputs `(re, im)`
+/// visibilities, each `(B, nfft)`.  The conjugation is lowered as a
+/// [`FusionHint::Chain`] sign-flip depthwise conv the planner folds
+/// into the gain scale (the M = 1 depthwise scale-chain fold), so the
+/// compiled plan runs one combined gain-and-conjugate scale.
+pub fn fx_correlate(b: usize, l: usize, nfft: usize, hop: usize, gains: &[f32]) -> Result<Graph> {
+    if gains.len() != nfft {
+        anyhow::bail!("need {nfft} per-bin gains, got {}", gains.len());
+    }
+    let mut g = Graph::new();
+    let x1 = g.input(&[b, l]);
+    let x2 = g.input(&[b, l]);
+    let (re1, im1, frames) = stft_nodes(&mut g, x1, b, l, nfft, hop)?;
+    let (re2, im2, _) = stft_nodes(&mut g, x2, b, l, nfft, hop)?;
+    let rows = b * frames;
+
+    // per-bin gain calibration of antenna 2 (M = 1 depthwise scales)
+    let kg = g.constant(Tensor::new(&[nfft, 1], gains.to_vec())?);
+    let bz = g.constant(Tensor::zeros(&[nfft]));
+    let r2 = g.push(NodeOp::Reshape(vec![rows, nfft, 1]), &[re2]);
+    let g2re = g.push(NodeOp::DepthwiseConv1d, &[r2, kg, bz]);
+    let i2 = g.push(NodeOp::Reshape(vec![rows, nfft, 1]), &[im2]);
+    let g2im = g.push(NodeOp::DepthwiseConv1d, &[i2, kg, bz]);
+
+    // conjugate: negate the imaginary branch.  Tagged with
+    // `FusionHint::Chain` so the planner folds the sign flip into the
+    // gain scale above (after re-proving unit taps + zero bias).
+    let kneg = g.constant(Tensor::new(&[nfft, 1], vec![-1.0; nfft])?);
+    let g2im = g.push_with_hint(NodeOp::DepthwiseConv1d, &[g2im, kneg, bz], FusionHint::Chain);
+
+    // V = S1 · conj(g · S2), then accumulate over frames: pointwise conv
+    // on (B, F, nfft) with a ones (F, 1) kernel sums frames ascending.
+    let q = rows * nfft;
+    let (vre, vim) = complex_mul_nodes(&mut g, g2re, g2im, re1, im1, q);
+    let vre = g.push(NodeOp::Reshape(vec![b, frames, nfft]), &[vre]);
+    let vim = g.push(NodeOp::Reshape(vec![b, frames, nfft]), &[vim]);
+    let ksum = g.constant(Tensor::ones(&[frames, 1]));
+    let b1 = g.constant(Tensor::zeros(&[1]));
+    let o_re = g.push(NodeOp::PointwiseConv, &[vre, ksum, b1]); // (B, 1, nfft)
+    let o_im = g.push(NodeOp::PointwiseConv, &[vim, ksum, b1]);
+    let o_re = g.push(NodeOp::Reshape(vec![b, nfft]), &[o_re]);
+    let o_im = g.push(NodeOp::Reshape(vec![b, nfft]), &[o_im]);
+    g.set_outputs(&[o_re, o_im]);
+    Ok(g)
+}
+
+/// Delay-and-sum beamformer over `C` sensor channels: per-channel
+/// integer delays via a one-hot depthwise conv, per-channel gains via
+/// an M = 1 depthwise scale tagged [`FusionHint::Window`] (the planner
+/// folds the gains into the delay taps — the depthwise-producer window
+/// fold), then a channel sum via a ones-kernel pointwise conv.  Input
+/// `(B, C, L)`; output `(B, L − D + 1)` where `D = max(delays) + 1`.
+pub fn beamform(b: usize, c: usize, l: usize, delays: &[usize], gains: &[f32]) -> Result<Graph> {
+    if c == 0 || delays.len() != c || gains.len() != c {
+        anyhow::bail!(
+            "need one delay and one gain per channel ({c}), got {} / {}",
+            delays.len(),
+            gains.len()
+        );
+    }
+    let d = delays.iter().max().copied().unwrap_or(0) + 1;
+    if l < d {
+        anyhow::bail!("signal {l} shorter than the {d}-sample delay span");
+    }
+    let w = l - d + 1;
+    let mut g = Graph::new();
+    let x = g.input(&[b, c, l]);
+    // per-channel delays: one-hot rows (the depthwise framing producer)
+    let mut taps = vec![0.0f32; c * d];
+    for (ch, &dl) in delays.iter().enumerate() {
+        taps[ch * d + dl] = 1.0;
+    }
+    let kd = g.constant(Tensor::new(&[c, d], taps)?);
+    let bz = g.constant(Tensor::zeros(&[c]));
+    let delayed = g.push(NodeOp::DepthwiseConv1d, &[x, kd, bz]); // (B, C, W)
+    // per-channel gains, foldable into the delay taps
+    let kgain = g.constant(Tensor::new(&[c, 1], gains.to_vec())?);
+    let gained = g.push_with_hint(
+        NodeOp::DepthwiseConv1d,
+        &[delayed, kgain, bz],
+        FusionHint::Window,
+    );
+    // channel sum (ascending, matching the pointwise oracle order)
+    let ks = g.constant(Tensor::ones(&[c, 1]));
+    let b1 = g.constant(Tensor::zeros(&[1]));
+    let o = g.push(NodeOp::PointwiseConv, &[gained, ks, b1]); // (B, 1, W)
+    let o = g.push(NodeOp::Reshape(vec![b, w]), &[o]);
+    g.set_outputs(&[o]);
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end spectrometer: PFB → |·|² → time integration, as ONE graph
+// ---------------------------------------------------------------------------
+
+/// End-to-end spectrometer compiled as ONE graph: PFB (polyphase FIR
+/// bank + DFT across branches) → `|·|²` → time integration over the
+/// output spectra.  Input `(B, L)`; output `(B, P)` — total power per
+/// PFB channel, summed over the `Ns` spectra ascending (divide by `Ns`
+/// host-side for the mean).  Every intermediate movement is a
+/// contiguous reshape, so the fused plan compiles with
+/// `materialize_count() == 0`.
+pub fn spectrometer(b: usize, l: usize, cfg: dsp::PfbConfig) -> Result<Graph> {
+    let p = cfg.branches;
+    let ns = cfg.output_spectra(l)?;
+    let mut g = Graph::new();
+    let x = g.input(&[b, l]);
+    let y = pfb_fir_nodes(&mut g, x, b, l, cfg)?; // (B, P, Ns)
+    let (f_re, f_im) = dsp::dft_matrix(p);
+    let bias = g.constant(Tensor::zeros(&[p]));
+    let kre = g.constant(f_re);
+    let kim = g.constant(f_im);
+    let o_re = g.push(NodeOp::PointwiseConv, &[y, kre, bias]); // (B, P, Ns)
+    let o_im = g.push(NodeOp::PointwiseConv, &[y, kim, bias]);
+    // |·|² per (batch, branch, spectrum)
+    let q = b * p * ns;
+    let rr = ew_product_nodes(&mut g, o_re, o_re, q);
+    let ii = ew_product_nodes(&mut g, o_im, o_im, q);
+    let pow = g.push(NodeOp::Add, &[rr, ii]); // (1, q, 1)
+    // time integration: sum the Ns spectra per (batch, branch) via a
+    // ones-kernel FC (§3.4), features ascending
+    let rows = g.push(NodeOp::Reshape(vec![b * p, ns]), &[pow]);
+    let ksum = g.constant(Tensor::ones(&[ns, 1]));
+    let b1 = g.constant(Tensor::zeros(&[1]));
+    let o = g.push(NodeOp::FullyConnected, &[rows, ksum, b1]); // (B*P, 1)
+    let o = g.push(NodeOp::Reshape(vec![b, p]), &[o]);
+    g.set_outputs(&[o]);
     Ok(g)
 }
 
@@ -422,5 +744,112 @@ mod tests {
         let cfg = dsp::PfbConfig::new(8, 4);
         assert!(pfb_fir(1, 65, cfg).is_err()); // not divisible by P
         assert!(pfb_fir(1, 16, cfg).is_err()); // too short
+    }
+
+    #[test]
+    fn new_lowerings_structure() {
+        assert_eq!(
+            complex_mul(2, 8).layer_names(),
+            vec!["depthwise_conv1d"; 4],
+            "complex multiply = 4 elementwise depthwise products"
+        );
+        assert_eq!(
+            magnitude_sq(2, 8).layer_names(),
+            vec!["depthwise_conv1d"; 2]
+        );
+        assert_eq!(
+            iir(1, 64, &[0.5, 0.25], &[0.3], 3).unwrap().layer_names(),
+            vec!["standard_conv1d"; 4],
+            "feedforward + depth unrolled feedback levels"
+        );
+        assert_eq!(
+            xcorr(1, 64, 8).unwrap().layer_names(),
+            vec!["standard_conv1d"]
+        );
+        assert_eq!(
+            beamform(1, 4, 64, &[0, 1, 2, 3], &[1.0, 0.8, -0.6, 0.4])
+                .unwrap()
+                .layer_names(),
+            vec!["depthwise_conv1d", "depthwise_conv1d", "pointwise_conv"]
+        );
+        let cfg = dsp::PfbConfig::new(8, 4);
+        assert_eq!(
+            spectrometer(1, 8 * 32, cfg).unwrap().layer_names(),
+            vec![
+                "depthwise_conv1d", // polyphase FIR bank
+                "pointwise_conv",   // DFT re
+                "pointwise_conv",   // DFT im
+                "depthwise_conv1d", // re²
+                "depthwise_conv1d", // im²
+                "fully_connected",  // time integration
+            ]
+        );
+    }
+
+    #[test]
+    fn new_lowerings_validate_and_shape() {
+        complex_mul(3, 5).validate().unwrap();
+        magnitude_sq(3, 5).validate().unwrap();
+
+        let g = iir(2, 64, &[0.5, 0.25], &[0.3, 0.1], 3).unwrap();
+        g.validate().unwrap();
+        // W0 = 64 - 2 + 1 = 63, minus depth(3) * na(2)
+        assert_eq!(g.infer_shapes().unwrap()[g.outputs[0].0], vec![2, 57]);
+
+        let g = xcorr(2, 100, 9).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.infer_shapes().unwrap()[g.outputs[0].0], vec![2, 92]);
+
+        let g = fx_correlate(1, 512, 64, 32, &[1.0; 64]).unwrap();
+        g.validate().unwrap();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.outputs[0].0], vec![1, 64]);
+        assert_eq!(shapes[g.outputs[1].0], vec![1, 64]);
+
+        let g = beamform(2, 4, 64, &[3, 0, 1, 2], &[0.5; 4]).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.infer_shapes().unwrap()[g.outputs[0].0], vec![2, 61]);
+
+        let cfg = dsp::PfbConfig::new(8, 4);
+        let g = spectrometer(2, 8 * 32, cfg).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.infer_shapes().unwrap()[g.outputs[0].0], vec![2, 8]);
+    }
+
+    #[test]
+    fn new_lowerings_reject_bad_configs() {
+        assert!(iir(1, 4, &[1.0; 8], &[0.5], 2).is_err()); // signal < ff taps
+        assert!(iir(1, 16, &[1.0], &[0.5; 4], 4).is_err()); // depth eats prefix
+        assert!(iir(1, 16, &[1.0], &[], 1).is_err()); // no feedback taps
+        assert!(iir(1, 16, &[1.0], &[0.5], 0).is_err()); // zero depth
+        assert!(xcorr(1, 8, 9).is_err()); // template longer than signal
+        assert!(xcorr(1, 8, 0).is_err()); // empty template
+        assert!(fx_correlate(1, 32, 64, 32, &[1.0; 64]).is_err()); // short signal
+        assert!(fx_correlate(1, 512, 64, 32, &[1.0; 8]).is_err()); // wrong gain count
+        assert!(beamform(1, 4, 2, &[0, 1, 2, 3], &[1.0; 4]).is_err()); // span > signal
+        assert!(beamform(1, 4, 64, &[0, 1], &[1.0; 4]).is_err()); // delays != channels
+        let cfg = dsp::PfbConfig::new(8, 4);
+        assert!(spectrometer(1, 65, cfg).is_err()); // not divisible by P
+    }
+
+    #[test]
+    fn fold_hints_are_attached() {
+        let g = fx_correlate(1, 512, 64, 32, &[1.0; 64]).unwrap();
+        let chains = g
+            .nodes
+            .iter()
+            .filter(|n| n.hint == FusionHint::Chain)
+            .count();
+        assert_eq!(
+            chains, 1,
+            "one conjugate sign-flip tagged for the scale-chain fold"
+        );
+        let g = beamform(1, 4, 64, &[0, 1, 2, 3], &[1.0, 0.8, -0.6, 0.4]).unwrap();
+        let wins = g
+            .nodes
+            .iter()
+            .filter(|n| n.hint == FusionHint::Window)
+            .count();
+        assert_eq!(wins, 1, "gains tagged for the depthwise window fold");
     }
 }

@@ -36,10 +36,12 @@
 //! * **fusion** — single-consumer `Add`/`Sub` chains collapse into one
 //!   pass, and per-channel-uniform constant adds fold into layer biases;
 //! * **plan-level fusion pass** — [`FusionHint::Window`]-tagged window
-//!   multiplies fold into their framing convs (pre-scaled taps), and
-//!   batched STFT's merged-axis regrouping copy becomes a split-view
-//!   reindex — both bit-for-bit rewrites with verified skip rules (see
-//!   `exec`'s module docs);
+//!   multiplies fold into their framing producers (standard *or*
+//!   depthwise convs, pre-scaled taps), [`FusionHint::Chain`]-tagged ±1
+//!   depthwise scales fold onto their producer scale (pre-signed gain
+//!   and bias), and batched STFT's merged-axis regrouping copy becomes
+//!   a split-view reindex — all bit-for-bit rewrites with verified skip
+//!   rules (see `exec`'s module docs);
 //! * **liveness analysis** — linear-scan slot assignment recycles each
 //!   buffer the moment its last consumer has run (slab [`exec::Arena`]);
 //! * **thread fan-out** — kernels split independent batch rows across

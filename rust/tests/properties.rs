@@ -211,7 +211,9 @@ fn prop_pfb_implementations_agree() {
 
 /// Build a random graph + matching random inputs for one of the lowerings.
 fn random_lowering(g: &mut Gen) -> (Graph, Vec<Tensor>) {
-    let which = *g.choose(&[0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+    let which = *g.choose(&[
+        0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17,
+    ]);
     match which {
         0 => {
             let (h, w) = (g.usize_in(1, 16), g.usize_in(1, 16));
@@ -280,13 +282,82 @@ fn random_lowering(g: &mut Gen) -> (Graph, Vec<Tensor>) {
             };
             (graph, vec![Tensor::randn(&[b, l], g.u64())])
         }
-        _ => {
+        10 => {
             let nfft = *g.choose(&[16usize, 32]);
             let hop = nfft / 2;
             let l = nfft + hop * g.usize_in(0, 8);
             let b = g.usize_in(1, 2);
             (
                 lower::stft(b, l, nfft, hop).unwrap(),
+                vec![Tensor::randn(&[b, l], g.u64())],
+            )
+        }
+        11 => {
+            let (b, n) = (g.usize_in(1, 3), g.usize_in(1, 12));
+            (
+                lower::complex_mul(b, n),
+                (0..4).map(|_| Tensor::randn(&[b, n], g.u64())).collect(),
+            )
+        }
+        12 => {
+            let (b, n) = (g.usize_in(1, 3), g.usize_in(1, 12));
+            (
+                lower::magnitude_sq(b, n),
+                (0..2).map(|_| Tensor::randn(&[b, n], g.u64())).collect(),
+            )
+        }
+        13 => {
+            let mb = g.usize_in(1, 4);
+            let na = g.usize_in(1, 2);
+            let depth = g.usize_in(1, 4);
+            let l = mb + depth * na + g.usize_in(1, 40);
+            let b_taps: Vec<f32> = (0..mb).map(|_| g.normal_f32()).collect();
+            let a_taps: Vec<f32> = (0..na).map(|_| 0.3 * g.normal_f32()).collect();
+            let b = g.usize_in(1, 3);
+            (
+                lower::iir(b, l, &b_taps, &a_taps, depth).unwrap(),
+                vec![Tensor::randn(&[b, l], g.u64())],
+            )
+        }
+        14 => {
+            let m = g.usize_in(1, 12);
+            let l = m + g.usize_in(0, 100);
+            let b = g.usize_in(1, 3);
+            (
+                lower::xcorr(b, l, m).unwrap(),
+                vec![Tensor::randn(&[b, l], g.u64()), Tensor::randn(&[m], g.u64())],
+            )
+        }
+        15 => {
+            let nfft = *g.choose(&[8usize, 16]);
+            let hop = nfft / 2;
+            let l = nfft + hop * g.usize_in(0, 6);
+            let b = g.usize_in(1, 2);
+            let gains: Vec<f32> = (0..nfft).map(|_| g.normal_f32()).collect();
+            (
+                lower::fx_correlate(b, l, nfft, hop, &gains).unwrap(),
+                vec![Tensor::randn(&[b, l], g.u64()), Tensor::randn(&[b, l], g.u64())],
+            )
+        }
+        16 => {
+            let c = g.usize_in(1, 4);
+            let delays: Vec<usize> = (0..c).map(|_| g.usize_in(0, 3)).collect();
+            let gains: Vec<f32> = (0..c).map(|_| g.normal_f32()).collect();
+            let d = delays.iter().max().unwrap() + 1;
+            let l = d + g.usize_in(0, 60);
+            let b = g.usize_in(1, 3);
+            (
+                lower::beamform(b, c, l, &delays, &gains).unwrap(),
+                vec![Tensor::randn(&[b, c, l], g.u64())],
+            )
+        }
+        _ => {
+            let p = *g.choose(&[4usize, 8]);
+            let m = g.usize_in(2, 4);
+            let l = p * (m + g.usize_in(1, 20));
+            let b = g.usize_in(1, 3);
+            (
+                lower::spectrometer(b, l, PfbConfig::new(p, m)).unwrap(),
                 vec![Tensor::randn(&[b, l], g.u64())],
             )
         }
@@ -427,9 +498,12 @@ fn prop_diamond_views_share_backing_safely() {
 #[test]
 fn prop_fuzzed_random_graphs_match_interpreter_bitwise() {
     // The randomized differential fuzzer, now across ALL THREE executors:
-    // ~200 seeded random graphs (chains and diamonds over conv/FC/Add/Sub
-    // and all four movement ops, including STFT-like framing+window
-    // pipelines with deliberate fusion-skip variants) must compile, pass
+    // ~240 seeded random graphs (chains and diamonds over conv/FC/Add/Sub
+    // and all four movement ops, STFT-like framing+window pipelines with
+    // deliberate fusion-skip variants, and the lowering zoo's newer
+    // families — complex pairs, unrolled-IIR chains, xcorr pipelines,
+    // Chain-hinted scale chains with their own skip variants; coverage
+    // asserted by `testing::prop`'s generator tests) must compile, pass
     // the independent static verifier, and match the interpreter oracle
     // bit-for-bit on
     //
@@ -449,7 +523,7 @@ fn prop_fuzzed_random_graphs_match_interpreter_bitwise() {
     let vaccel = tina::runtime::VaccelEngine::with_defaults();
     #[cfg(feature = "vaccel")]
     let case_id = std::cell::Cell::new(0u64);
-    run("fuzz: random graph plan == interpreter (bitwise)", 200, |g: &mut Gen| {
+    run("fuzz: random graph plan == interpreter (bitwise)", 240, |g: &mut Gen| {
         let (graph, inputs) = random_graph(g);
         graph.validate().map_err(|e| format!("generator bug: {e}"))?;
         let interp = Interpreter::new(graph.clone()).unwrap();
@@ -562,6 +636,13 @@ fn verifier_accepts_every_lowering_at_every_bucket() {
             lower::pfb_fir(b, 8 * 32, cfg).unwrap(),
             lower::pfb(b, 8 * 32, cfg).unwrap(),
             lower::stft(b, 600, 64, 32).unwrap(),
+            lower::complex_mul(b, 12),
+            lower::magnitude_sq(b, 12),
+            lower::iir(b, 120, &[0.4, 0.3, 0.2], &[0.25, 0.1], 4).unwrap(),
+            lower::xcorr(b, 100, 9).unwrap(),
+            lower::fx_correlate(b, 160, 16, 8, &[0.5; 16]).unwrap(),
+            lower::beamform(b, 4, 64, &[0, 3, 1, 2], &[1.0, 0.8, -0.6, 0.4]).unwrap(),
+            lower::spectrometer(b, 8 * 24, cfg).unwrap(),
         ];
         for (i, g) in graphs.iter().enumerate() {
             for fusion in [true, false] {
@@ -613,6 +694,264 @@ fn bucketed_stft_rows_on_fused_plans_match_solo_with_poison() {
                     a, b,
                     "B={bucket} row {r}: fused bucketed run diverged or padding leaked"
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_unrolled_iir_approaches_reference_and_stays_bitwise() {
+    // Truncation-bound oracle for the unrolled-iteration IIR: with
+    // ‖a‖₁ ≤ 1/2 the iteration contracts by ‖a‖₁ per unroll level, so
+    // the depth-d graph's surviving prefix must sit within
+    // ‖a‖₁^d · max|y − ff| (plus float slop) of the exact recurrence —
+    // and the planned executor must stay bit-for-bit with the
+    // interpreter regardless of depth.
+    run("unrolled IIR truncation bound", 20, |g: &mut Gen| {
+        let mb = g.usize_in(1, 4);
+        let na = g.usize_in(1, 2);
+        let depth = g.usize_in(2, 5);
+        let l = mb + depth * na + g.usize_in(10, 60);
+        let b_taps: Vec<f32> = (0..mb).map(|_| g.normal_f32()).collect();
+        let mut a_taps: Vec<f32> = (0..na).map(|_| g.normal_f32()).collect();
+        let norm: f32 = a_taps.iter().map(|v| v.abs()).sum();
+        if norm > 0.5 {
+            for v in &mut a_taps {
+                *v *= 0.5 / norm;
+            }
+        }
+        let b = g.usize_in(1, 3);
+        let x = Tensor::randn(&[b, l], g.u64());
+        let graph = lower::iir(b, l, &b_taps, &a_taps, depth).unwrap();
+        let interp = Interpreter::new(graph.clone()).unwrap();
+        let got = interp
+            .run(std::slice::from_ref(&x))
+            .map_err(|e| e.to_string())?;
+        let plan = ExecPlan::compile(&graph).map_err(|e| e.to_string())?;
+        plan.verify().map_err(|e| e.to_string())?;
+        let planned = plan
+            .run(std::slice::from_ref(&x))
+            .map_err(|e| e.to_string())?;
+        prop_assert!(planned[0] == got[0], "planned IIR diverged from interpreter");
+        // at B = 1 the whole unrolled chain is view-composed — no copies
+        if b == 1 {
+            prop_assert!(
+                plan.materialize_count() == 0,
+                "B=1 IIR plan must be materialize-free"
+            );
+        }
+        let exact = dsp::iir_reference(&x, &b_taps, &a_taps).unwrap();
+        let ff = naive::xcorr(&x, &b_taps).unwrap(); // y⁽⁰⁾, the iteration seed
+        let w0 = l - mb + 1;
+        let wout = w0 - depth * na;
+        let s: f32 = a_taps.iter().map(|v| v.abs()).sum();
+        let e0 = exact
+            .data()
+            .iter()
+            .zip(ff.data())
+            .map(|(a, f)| (a - f).abs())
+            .fold(0.0f32, f32::max);
+        let bound = s.powi(depth as i32) * e0 * 1.01 + 1e-4;
+        prop_assert!(got[0].shape() == [b, wout], "output shape");
+        for bi in 0..b {
+            for n in 0..wout {
+                let gv = got[0].at(&[bi, n]);
+                let ev = exact.at(&[bi, n]);
+                prop_assert!(
+                    (gv - ev).abs() <= bound,
+                    "bi={bi} n={n}: |{gv} - {ev}| > {bound} \
+                     (s={s} depth={depth} mb={mb} na={na} l={l})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_xcorr_matches_naive_reference_bitwise() {
+    // xcorr vs the direct O(L·M) reference: same ascending-tap
+    // accumulation order, so interpreter AND planned executor must be
+    // bit-for-bit equal, not merely close.
+    run("xcorr == naive O(L*M) reference (bitwise)", 30, |g: &mut Gen| {
+        let m = g.usize_in(1, 16);
+        let l = m + g.usize_in(0, 200);
+        let b = g.usize_in(1, 3);
+        let x = Tensor::randn(&[b, l], g.u64());
+        let t = Tensor::randn(&[m], g.u64());
+        let want = naive::xcorr(&x, t.data()).unwrap();
+        let graph = lower::xcorr(b, l, m).unwrap();
+        let got = Interpreter::new(graph.clone())
+            .unwrap()
+            .run(&[x.clone(), t.clone()])
+            .map_err(|e| e.to_string())?;
+        prop_assert!(got[0] == want, "interp vs naive diverged (b={b} l={l} m={m})");
+        let plan = ExecPlan::compile(&graph).map_err(|e| e.to_string())?;
+        plan.verify().map_err(|e| e.to_string())?;
+        let planned = plan.run(&[x, t]).map_err(|e| e.to_string())?;
+        prop_assert!(planned[0] == want, "plan vs naive diverged (b={b} l={l} m={m})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spectrometer_single_plan_equals_staged_pipeline_bitwise() {
+    // The ONE-graph spectrometer contract: the single fused copy-free
+    // plan must equal a staged pipeline (PFB graph, then a separate
+    // square-and-integrate graph) bit-for-bit — staging only inserts
+    // exact movement, never different arithmetic.
+    run("spectrometer one-plan == staged (bitwise)", 12, |g: &mut Gen| {
+        let p = *g.choose(&[4usize, 8]);
+        let mt = g.usize_in(2, 4);
+        let l = p * (mt + g.usize_in(1, 12));
+        let cfg = PfbConfig::new(p, mt);
+        let b = g.usize_in(1, 3);
+        let ns = l / p - mt + 1;
+        let x = Tensor::randn(&[b, l], g.u64());
+        let graph = lower::spectrometer(b, l, cfg).unwrap();
+        let plan = ExecPlan::compile(&graph).map_err(|e| e.to_string())?;
+        plan.verify().map_err(|e| e.to_string())?;
+        prop_assert!(
+            plan.materialize_count() == 0,
+            "fused spectrometer must be copy-free (b={b} l={l} p={p} m={mt})"
+        );
+        let fused = plan
+            .run(std::slice::from_ref(&x))
+            .map_err(|e| e.to_string())?;
+        // staged: lower::pfb emits (B, Ns, P) complex spectra; stage 2
+        // permutes back to (B, P, Ns) and squares + integrates exactly
+        // like the fused graph's tail
+        let stage1 = Interpreter::new(lower::pfb(b, l, cfg).unwrap()).unwrap();
+        let spectra = stage1
+            .run(std::slice::from_ref(&x))
+            .map_err(|e| e.to_string())?;
+        let q = b * p * ns;
+        let mut g2 = Graph::new();
+        let re_in = g2.input(&[b, ns, p]);
+        let im_in = g2.input(&[b, ns, p]);
+        let rep = g2.push(NodeOp::Permute3([0, 2, 1]), &[re_in]);
+        let imp = g2.push(NodeOp::Permute3([0, 2, 1]), &[im_in]);
+        let sq = |gr: &mut Graph, v| {
+            let a = gr.push(NodeOp::Reshape(vec![1, q, 1]), &[v]);
+            let k = gr.push(NodeOp::Reshape(vec![q, 1]), &[v]);
+            let bias = gr.constant(Tensor::zeros(&[q]));
+            gr.push(NodeOp::DepthwiseConv1d, &[a, k, bias])
+        };
+        let rr = sq(&mut g2, rep);
+        let ii = sq(&mut g2, imp);
+        let pow = g2.push(NodeOp::Add, &[rr, ii]);
+        let rows = g2.push(NodeOp::Reshape(vec![b * p, ns]), &[pow]);
+        let ksum = g2.constant(Tensor::ones(&[ns, 1]));
+        let b1 = g2.constant(Tensor::zeros(&[1]));
+        let o = g2.push(NodeOp::FullyConnected, &[rows, ksum, b1]);
+        let o = g2.push(NodeOp::Reshape(vec![b, p]), &[o]);
+        g2.set_outputs(&[o]);
+        let staged = Interpreter::new(g2)
+            .unwrap()
+            .run(&spectra)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            fused[0] == staged[0],
+            "one-plan spectrometer != staged pipeline (b={b} l={l} p={p} m={mt})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn bucketed_new_lowering_rows_match_solo_with_poison() {
+    // The bucket-equality contract for every new family: at B∈{2,4,8},
+    // k = B−1 real rows + one poisoned padding row through the bucketed
+    // plan must scatter bit-identical to solo B=1 interpreter runs.
+    // Batched inputs (declared shape grows with B) are stacked + poisoned;
+    // shared inputs (xcorr's template) pass through verbatim.
+    struct Case {
+        name: &'static str,
+        build: Box<dyn Fn(usize) -> Graph>,
+    }
+    let cfg = PfbConfig::new(8, 4);
+    let gains: Vec<f32> = (0..16).map(|i| 0.5 + 0.05 * i as f32).collect();
+    let cases: Vec<Case> = vec![
+        Case {
+            name: "complex_mul",
+            build: Box::new(|b| lower::complex_mul(b, 12)),
+        },
+        Case {
+            name: "magnitude_sq",
+            build: Box::new(|b| lower::magnitude_sq(b, 12)),
+        },
+        Case {
+            name: "iir",
+            build: Box::new(|b| lower::iir(b, 160, &[0.4, 0.3, 0.2], &[0.25, 0.1], 4).unwrap()),
+        },
+        Case {
+            name: "xcorr",
+            build: Box::new(|b| lower::xcorr(b, 120, 9).unwrap()),
+        },
+        Case {
+            name: "fx_correlate",
+            build: Box::new(move |b| lower::fx_correlate(b, 160, 16, 8, &gains).unwrap()),
+        },
+        Case {
+            name: "beamform",
+            build: Box::new(|b| {
+                lower::beamform(b, 4, 64, &[0, 3, 1, 2], &[1.0, 0.8, -0.6, 0.4]).unwrap()
+            }),
+        },
+        Case {
+            name: "spectrometer",
+            build: Box::new(move |b| lower::spectrometer(b, 8 * 24, cfg).unwrap()),
+        },
+    ];
+    for case in &cases {
+        for bucket in [2usize, 4, 8] {
+            let k = bucket - 1; // real rows; one poisoned padding row
+            let solo_graph = (case.build)(1);
+            let solo = Interpreter::new(solo_graph.clone()).unwrap();
+            let bg = (case.build)(bucket);
+            let plan = ExecPlan::compile(&bg).unwrap();
+            plan.verify()
+                .unwrap_or_else(|e| panic!("{} B={bucket}: {e}", case.name));
+            let mut solo_rows: Vec<Vec<Tensor>> = vec![Vec::new(); k];
+            let mut batched_inputs: Vec<Tensor> = Vec::new();
+            let mut seed = 9100 + bucket as u64 * 131;
+            for (i, (_, bshape)) in bg.inputs.iter().enumerate() {
+                let sshape = &solo_graph.inputs[i].1;
+                if bshape == sshape {
+                    let t = Tensor::randn(sshape, seed);
+                    seed += 1;
+                    for row in solo_rows.iter_mut() {
+                        row.push(t.clone());
+                    }
+                    batched_inputs.push(t);
+                } else {
+                    let row_n: usize = sshape.iter().product();
+                    let mut data = Vec::with_capacity(bucket * row_n);
+                    for row in solo_rows.iter_mut() {
+                        let t = Tensor::randn(sshape, seed);
+                        seed += 1;
+                        data.extend_from_slice(t.data());
+                        row.push(t);
+                    }
+                    data.resize(bucket * row_n, 1.0e30); // poison padding
+                    batched_inputs.push(Tensor::new(bshape, data).unwrap());
+                }
+            }
+            let mut arena = Arena::new();
+            let got = plan
+                .run_rows_in(&mut arena, &batched_inputs, k)
+                .unwrap_or_else(|e| panic!("{} B={bucket}: {e}", case.name));
+            for (r, si) in solo_rows.iter().enumerate() {
+                let want = solo.run(si).unwrap();
+                assert_eq!(got[r].len(), want.len(), "{} B={bucket} row {r}", case.name);
+                for (a, b) in got[r].iter().zip(&want) {
+                    assert_eq!(a.shape(), b.shape(), "{} B={bucket} row {r}", case.name);
+                    assert_eq!(
+                        a, b,
+                        "{} B={bucket} row {r}: bucketed run diverged or padding leaked",
+                        case.name
+                    );
+                }
             }
         }
     }

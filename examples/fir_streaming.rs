@@ -3,7 +3,10 @@
 //! batched `fir_tina_f32_B8_L4096` artifact.
 //!
 //! Shows the serving-layer contribution: requests/s and padding overhead
-//! with batching on vs off.
+//! with batching on vs off — and the coordinator's **streaming sessions**
+//! (the overlap-carry idiom this example pioneered at the library level,
+//! now server-side state): an unbounded signal pushed in chunks produces
+//! the one-shot output bit-for-bit.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example fir_streaming
@@ -79,5 +82,32 @@ fn main() -> Result<()> {
         "\nbatching throughput gain: {:.2}x",
         with_batching / without
     );
+
+    // streaming session: the coordinator holds the carry tail, every
+    // chunk rides the normal serving path, and the concatenated outputs
+    // equal the one-shot run bit-for-bit
+    let coord = Arc::new(Coordinator::from_dir(
+        "artifacts",
+        CoordinatorConfig::default(),
+    )?);
+    let signal = Tensor::randn(&[1, 3 * CHUNK], 99);
+    let one_shot = coord.execute(OpRequest::new(OpKind::Fir, vec![signal.clone()]))?;
+    let (sid, overlap) = coord.session_open(OpKind::Fir)?;
+    let mut streamed: Vec<f32> = Vec::new();
+    for chunk in signal.data().chunks(1000) {
+        streamed.extend_from_slice(&coord.session_push(sid, chunk, None)?.samples);
+    }
+    let summary = coord.session_close(sid)?;
+    let want = one_shot.outputs[0].data();
+    assert_eq!(streamed.len(), want.len());
+    for (a, b) in streamed.iter().zip(want) {
+        assert_eq!(a.to_bits(), b.to_bits(), "chunked output must be bit-exact");
+    }
+    println!(
+        "\nstreaming session (overlap {overlap}): {} chunks, {} samples in, {} out \
+         — bit-identical to the one-shot run",
+        summary.chunks, summary.samples_in, summary.samples_out
+    );
+    coord.shutdown();
     Ok(())
 }

@@ -1,6 +1,10 @@
-//! Client/server demo: starts the TCP JSON-line server in-process, then
-//! talks to it as a client — the wire protocol a non-rust frontend
-//! (python, telescope control system, ...) would use.
+//! Client/server demo: starts the TCP server in-process, then talks to it
+//! as a client in BOTH protocol modes — the JSON line compat mode a
+//! non-rust frontend (python, telescope control system, ...) would use
+//! for debugging, and the binary framed mode a production client uses
+//! (raw little-endian f32 payloads, pipelined requests, streaming
+//! sessions).  The server auto-detects the mode per connection from its
+//! first byte.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_client
@@ -11,10 +15,21 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use tina::coordinator::{server, Coordinator, CoordinatorConfig};
+use tina::coordinator::{
+    server, wire, Coordinator, CoordinatorConfig, ImplPref, OpKind, Precision, ServerFrame,
+};
+use tina::tensor::Tensor;
 use tina::util::json::{self, Json};
 
 const ADDR: &str = "127.0.0.1:7071";
+
+fn read_frame(reader: &mut BufReader<TcpStream>) -> Result<ServerFrame> {
+    let mut payload = Vec::new();
+    let ft = wire::read_frame(reader, &mut payload, wire::DEFAULT_MAX_FRAME)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .ok_or_else(|| anyhow::anyhow!("server closed the connection"))?;
+    wire::decode_server_frame(ft, &payload).map_err(|e| anyhow::anyhow!("{e}"))
+}
 
 fn main() -> Result<()> {
     // ---- server ----------------------------------------------------------
@@ -30,7 +45,7 @@ fn main() -> Result<()> {
     };
     std::thread::sleep(std::time::Duration::from_millis(300));
 
-    // ---- client ----------------------------------------------------------
+    // ---- JSON line client (debug/compat mode) ----------------------------
     let mut stream = TcpStream::connect(ADDR)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut call = |line: String| -> Result<Json> {
@@ -58,7 +73,7 @@ fn main() -> Result<()> {
             .and_then(|d| d[0].as_f64())
     });
     println!(
-        "summation(1..=1024) = {:?} (served_by {:?}, {}us)",
+        "json   summation(1..=1024) = {:?} (served_by {:?}, {}us)",
         sum,
         resp.get("served_by").and_then(Json::as_str),
         resp.get("latency_us").and_then(Json::as_f64).unwrap_or(0.0)
@@ -88,23 +103,100 @@ fn main() -> Result<()> {
     let spec_energy: f64 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum();
     let sig_energy: f64 = sig.iter().map(|&v| (v * v) as f64).sum();
     println!(
-        "dft Parseval: spectrum {spec_energy:.1} vs 64 x signal {:.1}",
+        "json   dft Parseval: spectrum {spec_energy:.1} vs 64 x signal {:.1}",
         64.0 * sig_energy
     );
     assert!((spec_energy - 64.0 * sig_energy).abs() / spec_energy < 1e-3);
-
-    // stats
-    let resp = call(r#"{"id": 4, "cmd": "stats"}"#.to_string())?;
-    println!(
-        "server stats:\n{}",
-        resp.get("report").and_then(Json::as_str).unwrap_or("")
-    );
 
     // close BOTH socket handles (the closure holds the reader clone) so the
     // server's connection thread sees EOF before we join it
     drop(call);
     drop(reader);
     drop(stream);
+
+    // ---- binary framed client (production mode) --------------------------
+    let mut bin = TcpStream::connect(ADDR)?;
+    let mut breader = BufReader::new(bin.try_clone()?);
+
+    // pipelining: write three requests back-to-back, then read the three
+    // replies (they come back in frame order, matched by id)
+    for (id, scale) in [(10u64, 1.0f32), (11, 2.0), (12, 3.0)] {
+        let t = Tensor::new(&[1024], (1..=1024).map(|i| i as f32 * scale).collect())?;
+        bin.write_all(&wire::encode_request(
+            id,
+            OpKind::Summation,
+            ImplPref::Auto,
+            Precision::F32,
+            None,
+            &[t],
+        ))?;
+    }
+    for (id, scale) in [(10u64, 1.0f32), (11, 2.0), (12, 3.0)] {
+        let ServerFrame::Response {
+            id: got,
+            outputs,
+            served_by,
+            latency_us,
+            ..
+        } = read_frame(&mut breader)?
+        else {
+            anyhow::bail!("expected a response frame");
+        };
+        assert_eq!(got, id);
+        let want = 524800.0 * scale;
+        assert_eq!(outputs[0].data(), &[want]);
+        println!("binary summation x{scale} = {want} (served_by {served_by}, {latency_us:.0}us)");
+    }
+
+    // streaming session: push a long FIR signal in chunks; the server
+    // carries the overlap tail, so the chunked output continues the
+    // one-shot run bit-for-bit
+    bin.write_all(&wire::encode_session_open(20, OpKind::Fir))?;
+    let ServerFrame::SessionOpened {
+        session, overlap, ..
+    } = read_frame(&mut breader)?
+    else {
+        anyhow::bail!("expected session-opened");
+    };
+    println!("binary session {session} opened (overlap {overlap})");
+    let signal = Tensor::randn(&[1, 4000], 7);
+    let mut streamed = 0usize;
+    for (i, chunk) in signal.data().chunks(1000).enumerate() {
+        bin.write_all(&wire::encode_session_push(
+            21 + i as u64,
+            session,
+            None,
+            chunk,
+        ))?;
+        let ServerFrame::SessionData { samples, .. } = read_frame(&mut breader)? else {
+            anyhow::bail!("expected session-data");
+        };
+        streamed += samples.len();
+    }
+    bin.write_all(&wire::encode_session_close(30, session))?;
+    let ServerFrame::SessionClosed {
+        chunks,
+        samples_in,
+        samples_out,
+        ..
+    } = read_frame(&mut breader)?
+    else {
+        anyhow::bail!("expected session-closed");
+    };
+    assert_eq!(streamed as u64, samples_out);
+    println!(
+        "binary session closed: {chunks} chunks, {samples_in} samples in, {samples_out} out"
+    );
+
+    // stats over the binary protocol
+    bin.write_all(&wire::encode_stats(40))?;
+    let ServerFrame::StatsReply { report, .. } = read_frame(&mut breader)? else {
+        anyhow::bail!("expected a stats reply");
+    };
+    println!("server stats:\n{report}");
+
+    drop(breader);
+    drop(bin);
     stop.store(true, Ordering::Release);
     server_thread.join().unwrap()?;
     println!("done");

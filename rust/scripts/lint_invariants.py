@@ -33,8 +33,18 @@ Grep-resistant invariants the type system cannot express:
    block immediately above it (companion to
    `#![deny(unsafe_op_in_unsafe_fn)]` in lib.rs).
 
+5. **Tensor data never serializes as decimal JSON outside the compat
+   path.**  `Json::Arr` construction is allowed only in the JSON value
+   model itself (`util/json.rs`) and the server's debug/compat surface
+   (`coordinator/server.rs`, `tensor_to_json` and the session compat
+   replies).  Anywhere else, bulk f32 samples must ride the binary wire
+   protocol (`coordinator/wire.rs`, raw little-endian bytes) — a
+   `Json::Arr` of samples in a new module would silently regress the
+   hot path to decimal text formatting.
+
 Test code (`#[cfg(test)]` and below — test modules sit at the bottom of
-their files in this repo) is exempt from rules 1-3 but not from rule 4.
+their files in this repo) is exempt from rules 1-3 and 5 but not from
+rule 4.
 
 Exit status: 0 clean, 1 violations (printed one per line), 2 usage error.
 """
@@ -66,6 +76,14 @@ KERNEL_NO_TIMING = {
 
 UNSAFE_RE = re.compile(r"\bunsafe\b")
 POISON_CHAIN_RE = re.compile(r"\.lock\(\)|\.wait\(|wait_timeout\(")
+
+# rule 5: the only modules allowed to build JSON arrays (the value model
+# itself, and the server's debug/compat mode — the one place tensor data
+# may serialize as decimal text)
+JSON_ARR_ALLOWLIST = {
+    "util/json.rs",
+    "coordinator/server.rs",
+}
 
 
 def strip_comments_and_strings(line: str) -> str:
@@ -136,6 +154,13 @@ def lint_file(root: Path, path: Path) -> list[str]:
             err(i, "Instant::now() in a kernel file (timing belongs to "
                    "benchkit / coordinator metrics, not inner loops)")
 
+        # rule 5: Json::Arr construction outside the compat path — bulk
+        # samples must use the binary wire protocol, never decimal text
+        if not in_test and "Json::Arr" in code and rel not in JSON_ARR_ALLOWLIST:
+            err(i, "Json::Arr outside util/json.rs / coordinator/server.rs "
+                   "(tensor data rides the binary wire protocol; decimal "
+                   "JSON text is the server's debug/compat mode only)")
+
         # rule 4: undocumented unsafe — accept SAFETY: on the same line
         # or anywhere in the contiguous comment block directly above
         if UNSAFE_RE.search(code):
@@ -168,7 +193,8 @@ def main() -> int:
             print(f"  {e}", file=sys.stderr)
         return 1
     print("repo invariants hold (thread spawns, exec-pool ownership, "
-          "coordinator unwraps, kernel timing, unsafe documentation)")
+          "coordinator unwraps, kernel timing, unsafe documentation, "
+          "Json::Arr compat-path containment)")
     return 0
 
 

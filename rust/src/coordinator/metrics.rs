@@ -115,6 +115,22 @@ pub struct Metrics {
     /// (unmeasured exploration, or measured at least as fast); drained
     /// from `Router::take_auto_routed`.
     pub auto_routed_artifact: AtomicU64,
+    /// Wire frames (binary mode) or lines (JSON mode) refused for
+    /// exceeding the server's size cap; the connection is closed after
+    /// the refusal.
+    pub oversized_frames: AtomicU64,
+    /// Binary frames accepted by the framed reader.
+    pub wire_binary_frames: AtomicU64,
+    /// JSON protocol lines processed by the compat mode.
+    pub wire_json_lines: AtomicU64,
+    /// Streaming sessions opened.
+    pub sessions_opened: AtomicU64,
+    /// Streaming sessions closed.
+    pub sessions_closed: AtomicU64,
+    /// Chunks pushed into streaming sessions (across all sessions).
+    pub session_chunks: AtomicU64,
+    /// Output samples produced by streaming-session pushes.
+    pub session_samples_out: AtomicU64,
     /// Plan-cache (hits, misses) per fallback bucket size B.
     plan_cache_buckets: Mutex<BTreeMap<usize, (u64, u64)>>,
     latency: Mutex<BTreeMap<String, Histogram>>,
@@ -299,6 +315,40 @@ impl Metrics {
         self.vaccel_batches.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one oversized wire frame / protocol line refused.
+    pub fn record_oversized_frame(&self) {
+        self.oversized_frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one binary frame accepted by the framed reader.
+    pub fn record_wire_binary_frame(&self) {
+        self.wire_binary_frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one JSON protocol line processed by the compat mode.
+    pub fn record_wire_json_line(&self) {
+        self.wire_json_lines.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one streaming session opened.
+    pub fn record_session_opened(&self) {
+        self.sessions_opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one streaming session closed.
+    pub fn record_session_closed(&self) {
+        self.sessions_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one streaming-session push and its output samples.
+    pub fn record_session_chunk(&self, samples_out: u64) {
+        self.session_chunks.fetch_add(1, Ordering::Relaxed);
+        if samples_out > 0 {
+            self.session_samples_out
+                .fetch_add(samples_out, Ordering::Relaxed);
+        }
+    }
+
     /// Fold in Auto-routing decisions drained from the router
     /// (`Router::take_auto_routed`): requests an artifact existed for
     /// that were steered to the plan arm vs. the artifact arm.
@@ -336,7 +386,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} inflight_batched={} drain_completions={} adaptive_bucket_cap={} adaptive_bucket_wait_us={} adaptive_bucket_shrinks={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={} fused_steps={} fusion_eliminated_copies={} plans_verified={} verify_ns={} exec_panics={} quarantined_plans={} degraded_requests={} shed_expired_rows={} admission_timeouts={} vaccel_batches={} auto_routed_plan={} auto_routed_artifact={}\n",
+            "requests={} completed={} failed={} batched={} batches={} padded_rows={} batched_fallback={} fallback_batches={} fallback_padded_rows={} batch_fill_ratio={:.2} inflight_batched={} drain_completions={} adaptive_bucket_cap={} adaptive_bucket_wait_us={} adaptive_bucket_shrinks={} interp_fallbacks={} plan_cache_hits={} plan_cache_misses={} plan_cache_evictions={} fused_steps={} fusion_eliminated_copies={} plans_verified={} verify_ns={} exec_panics={} quarantined_plans={} degraded_requests={} shed_expired_rows={} admission_timeouts={} vaccel_batches={} auto_routed_plan={} auto_routed_artifact={} oversized_frames={} wire_binary_frames={} wire_json_lines={} sessions_opened={} sessions_closed={} session_chunks={} session_samples_out={}\n",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -368,6 +418,13 @@ impl Metrics {
             self.vaccel_batches.load(Ordering::Relaxed),
             self.auto_routed_plan.load(Ordering::Relaxed),
             self.auto_routed_artifact.load(Ordering::Relaxed),
+            self.oversized_frames.load(Ordering::Relaxed),
+            self.wire_binary_frames.load(Ordering::Relaxed),
+            self.wire_json_lines.load(Ordering::Relaxed),
+            self.sessions_opened.load(Ordering::Relaxed),
+            self.sessions_closed.load(Ordering::Relaxed),
+            self.session_chunks.load(Ordering::Relaxed),
+            self.session_samples_out.load(Ordering::Relaxed),
         ));
         for (bucket, hits, misses) in self.plan_cache_bucket_stats() {
             out.push_str(&format!(
@@ -515,6 +572,31 @@ mod tests {
         assert!(r.contains("vaccel_batches=2"), "report: {r}");
         assert!(r.contains("auto_routed_plan=3"), "report: {r}");
         assert!(r.contains("auto_routed_artifact=5"), "report: {r}");
+    }
+
+    #[test]
+    fn wire_and_session_counters_accumulate_and_report() {
+        let m = Metrics::new();
+        m.record_oversized_frame();
+        m.record_wire_binary_frame();
+        m.record_wire_binary_frame();
+        m.record_wire_json_line();
+        m.record_session_opened();
+        m.record_session_chunk(0);
+        m.record_session_chunk(937);
+        m.record_session_closed();
+        assert_eq!(m.oversized_frames.load(Ordering::Relaxed), 1);
+        assert_eq!(m.wire_binary_frames.load(Ordering::Relaxed), 2);
+        assert_eq!(m.wire_json_lines.load(Ordering::Relaxed), 1);
+        assert_eq!(m.sessions_opened.load(Ordering::Relaxed), 1);
+        assert_eq!(m.sessions_closed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.session_chunks.load(Ordering::Relaxed), 2);
+        assert_eq!(m.session_samples_out.load(Ordering::Relaxed), 937);
+        let r = m.report();
+        assert!(r.contains("oversized_frames=1"), "report: {r}");
+        assert!(r.contains("wire_binary_frames=2"), "report: {r}");
+        assert!(r.contains("sessions_opened=1"), "report: {r}");
+        assert!(r.contains("session_chunks=2"), "report: {r}");
     }
 
     #[test]

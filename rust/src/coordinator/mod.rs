@@ -4,7 +4,10 @@
 //! per the architecture rules the rust layer turns it into a deployable
 //! runtime: request routing across compiled artifacts, dynamic batching,
 //! a worker pool with bounded-queue backpressure, composite pipelines
-//! (the PFB use case), metrics, and a TCP JSON-line server.
+//! (the PFB use case), metrics, and a TCP server speaking a length-
+//! prefixed binary frame protocol ([`wire`]) with pipelined requests and
+//! streaming sessions ([`session`]), plus the original JSON line protocol
+//! as a per-connection auto-detected debug/compat mode ([`server`]).
 //!
 //! # Batching model
 //!
@@ -71,6 +74,8 @@ pub mod request;
 pub mod router;
 pub mod server;
 pub mod service;
+pub mod session;
+pub mod wire;
 
 pub use batcher::{
     BatchKey, Batcher, BatcherConfig, BucketDecision, Completion, InflightGate, InflightPermit,
@@ -79,4 +84,7 @@ pub use metrics::Metrics;
 pub use pipeline::{Pipeline, Stage};
 pub use request::{ImplPref, OpKind, OpRequest, OpResponse, Precision};
 pub use router::{PlanKey, Router, RouterConfig, Target};
+pub use server::ServerConfig;
 pub use service::{Coordinator, CoordinatorConfig};
+pub use session::{SessionChunk, SessionConfig, SessionManager, SessionSummary};
+pub use wire::{ClientFrame, FrameError, FrameType, ServerFrame, WireRequest};

@@ -1,6 +1,23 @@
-//! TCP serving front-end: newline-delimited JSON requests over a socket.
+//! TCP serving front-end speaking two protocols on one port.
 //!
-//! Protocol (one JSON object per line):
+//! The mode is auto-detected per connection from its first byte:
+//!
+//! * **Binary framed mode** (first byte `0xB7`, see [`wire`]): length-
+//!   prefixed frames — magic + version + frame type + u32 payload length
+//!   — with f32 payloads as raw little-endian bytes, never decimal text.
+//!   Requests are **pipelined**: the reader thread admits each request to
+//!   the coordinator as it arrives and a per-connection writer thread
+//!   sends replies back in frame order, so a client may write N requests
+//!   before reading any reply.  Streaming sessions (`SessionOpen` /
+//!   `SessionPush` / `SessionClose`) carry chunked signals with the
+//!   overlap tail held server-side; chunked output equals the one-shot
+//!   run bit-for-bit.  Malformed payloads get an `Error` frame and the
+//!   connection survives (the frame boundary is intact); bad magic /
+//!   version / oversized frames get an `Error` frame and a close
+//!   (synchronization is lost).
+//!
+//! * **JSON line mode** (anything else): the original newline-delimited
+//!   JSON protocol, kept as the debug/compat surface:
 //!
 //! ```text
 //! -> {"id": 1, "op": "fir", "impl": "auto", "dtype": "f32",
@@ -11,34 +28,52 @@
 //!
 //! -> {"id": 2, "cmd": "stats"}
 //! <- {"id": 2, "ok": true, "report": "..."}
+//!
+//! -> {"id": 3, "cmd": "session_open", "op": "fir"}
+//! <- {"id": 3, "ok": true, "session": 1, "overlap": 63}
+//! -> {"id": 4, "cmd": "session_push", "session": 1, "data": [ ... ]}
+//! <- {"id": 4, "ok": true, "chunk": 0, "samples": [ ... ]}
+//! -> {"id": 5, "cmd": "session_close", "session": 1}
+//! <- {"id": 5, "ok": true, "chunks": 1, "samples_in": 200, "samples_out": 137}
 //! ```
 //!
-//! One thread per connection, capped at [`MAX_CONNECTIONS`]; finished
-//! handler threads are reaped on every accept-loop pass, so a long-lived
-//! server does not accumulate dead `JoinHandle`s.  At the cap the accept
-//! loop parks new connections in the OS backlog instead of spawning.
-//! Transient `accept()` errors (EMFILE under fd pressure, aborted
-//! handshakes) are logged and retried after a short backoff — they never
-//! take the serving loop down.  The coordinator handles concurrency and
-//! backpressure internally (worker-queue backpressure for direct
-//! requests, the in-flight-batched admission gate for batched ones), so
-//! a connection thread blocked in `execute` never wedges other
-//! connections.  `latency_us` in the reply measures the same span the
-//! coordinator's histograms record: submit through completion.
+//!   Lines are read through a bounded reader capped at
+//!   [`ServerConfig::max_frame`] bytes — a client streaming bytes without
+//!   a newline gets a framed `"oversized"` error and a close instead of
+//!   growing server memory without limit
+//!   ([`Metrics::oversized_frames`](super::metrics::Metrics)).  An output
+//!   tensor containing NaN/inf cannot be represented in JSON, so JSON
+//!   mode replies with a structured error for it (binary mode carries
+//!   non-finite values natively, bit-exact).
 //!
-//! Requests may carry an optional `"deadline_ms"` budget: the coordinator
-//! sheds the request (fast error reply) if it cannot begin executing
-//! within that many milliseconds of being parsed.
+//! Requests in both modes may carry an optional `deadline_ms` budget —
+//! fractional milliseconds included (`0.9` is 900 µs, not a zero-length
+//! deadline): the coordinator sheds the request if it cannot begin
+//! executing within the budget.
+//!
+//! One reader thread per connection, capped at [`MAX_CONNECTIONS`] (plus
+//! one writer thread per binary connection); finished handler threads are
+//! reaped on every accept-loop pass.  At the cap the accept loop parks
+//! new connections in the OS backlog instead of spawning.  Transient
+//! `accept()` errors are logged and retried after a short backoff.  The
+//! coordinator handles concurrency and backpressure internally, so a
+//! connection thread blocked in `execute` never wedges other connections.
+//! `latency_us` in replies measures the same span the coordinator's
+//! histograms record: submit through completion.
 
 use super::request::{ImplPref, OpKind, OpRequest, Precision};
 use super::service::Coordinator;
+use super::wire;
+use crate::coordinator::request::OpResponse;
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
+use crate::util::threadpool::OneShot;
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 /// Most concurrent connection-handler threads the server will run.  At
 /// the cap, new connections wait in the OS accept backlog until a
@@ -46,16 +81,48 @@ use std::sync::Arc;
 /// exhaustion under a connection flood.
 pub const MAX_CONNECTIONS: usize = 256;
 
+/// Per-connection protocol limits.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Cap on a binary frame's payload *and* on a JSON line, in bytes.
+    /// Input past the cap gets an error reply and a close.
+    pub max_frame: usize,
+    /// Bound on replies queued between a binary connection's reader and
+    /// writer threads — the pipelining depth before the reader
+    /// backpressures.
+    pub pipeline_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_frame: wire::DEFAULT_MAX_FRAME,
+            pipeline_depth: 64,
+        }
+    }
+}
+
 /// Serve until `stop` flips true (tests) or forever (CLI).
 pub fn serve(coord: Arc<Coordinator>, addr: &str, stop: Arc<AtomicBool>) -> Result<()> {
     serve_listener(coord, TcpListener::bind(addr)?, stop)
 }
 
-/// Serve on a pre-bound listener (lets tests bind port 0).
+/// Serve on a pre-bound listener (lets tests bind port 0) with default
+/// protocol limits.
 pub fn serve_listener(
     coord: Arc<Coordinator>,
     listener: TcpListener,
     stop: Arc<AtomicBool>,
+) -> Result<()> {
+    serve_listener_with(coord, listener, stop, ServerConfig::default())
+}
+
+/// Serve on a pre-bound listener with explicit protocol limits.
+pub fn serve_listener_with(
+    coord: Arc<Coordinator>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    cfg: ServerConfig,
 ) -> Result<()> {
     listener.set_nonblocking(true)?;
     eprintln!("tina: serving on {}", listener.local_addr()?);
@@ -80,7 +147,7 @@ pub fn serve_listener(
                 let spawned = std::thread::Builder::new()
                     .name("tina-conn".into())
                     .spawn(move || {
-                        if let Err(e) = handle_connection(coord, stream) {
+                        if let Err(e) = handle_connection(coord, stream, cfg) {
                             eprintln!("tina: connection {peer}: {e}");
                         }
                     });
@@ -109,24 +176,114 @@ pub fn serve_listener(
     Ok(())
 }
 
-fn handle_connection(coord: Arc<Coordinator>, stream: TcpStream) -> Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+/// Sniff the protocol from the connection's first byte and dispatch:
+/// `0xB7` (the binary frame magic, invalid as a JSON first byte) selects
+/// the framed mode, everything else the JSON line compat mode.
+fn handle_connection(coord: Arc<Coordinator>, stream: TcpStream, cfg: ServerConfig) -> Result<()> {
+    let writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let first = {
+        let buf = reader.fill_buf()?;
+        match buf.first() {
+            Some(&b) => b,
+            None => return Ok(()), // EOF before any byte
         }
-        let response = handle_line(&coord, &line);
-        writer.write_all(response.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+    };
+    if first == wire::MAGIC[0] {
+        handle_binary(coord, reader, writer, cfg)
+    } else {
+        handle_json_lines(coord, reader, writer, cfg)
     }
-    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// JSON line compat mode
+// ---------------------------------------------------------------------------
+
+enum LineRead {
+    /// One complete line (newline stripped).
+    Line(String),
+    /// Clean end of stream.
+    Eof,
+    /// The line exceeded the cap before a newline arrived.
+    Overflow,
+}
+
+/// Read one `\n`-terminated line without ever buffering more than `max`
+/// bytes — the bounded replacement for `BufRead::lines()`, which grows
+/// its buffer without limit on newline-free input.
+fn read_line_bounded(reader: &mut BufReader<TcpStream>, max: usize) -> std::io::Result<LineRead> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let (consumed, done) = {
+            let buf = reader.fill_buf()?;
+            if buf.is_empty() {
+                if line.is_empty() {
+                    return Ok(LineRead::Eof);
+                }
+                (0, true) // EOF terminates a final unterminated line
+            } else if let Some(nl) = buf.iter().position(|&b| b == b'\n') {
+                line.extend_from_slice(&buf[..nl]);
+                (nl + 1, true)
+            } else {
+                line.extend_from_slice(buf);
+                (buf.len(), false)
+            }
+        };
+        reader.consume(consumed);
+        if line.len() > max {
+            return Ok(LineRead::Overflow);
+        }
+        if done {
+            return Ok(LineRead::Line(String::from_utf8_lossy(&line).into_owned()));
+        }
+    }
+}
+
+fn handle_json_lines(
+    coord: Arc<Coordinator>,
+    mut reader: BufReader<TcpStream>,
+    mut writer: TcpStream,
+    cfg: ServerConfig,
+) -> Result<()> {
+    loop {
+        match read_line_bounded(&mut reader, cfg.max_frame)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::Overflow => {
+                coord.metrics().record_oversized_frame();
+                let resp = Json::obj(vec![
+                    ("id", Json::Null),
+                    ("ok", Json::Bool(false)),
+                    ("oversized", Json::Bool(true)),
+                    (
+                        "error",
+                        Json::str(format!(
+                            "line exceeds the {}-byte limit; closing connection",
+                            cfg.max_frame
+                        )),
+                    ),
+                ]);
+                writer.write_all(resp.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                return Ok(());
+            }
+            LineRead::Line(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let response = handle_line(&coord, &line);
+                writer.write_all(response.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+        }
+    }
 }
 
 /// Process one protocol line (exposed for tests).
 pub fn handle_line(coord: &Coordinator, line: &str) -> Json {
+    coord.metrics().record_wire_json_line();
     let doc = match json::parse(line) {
         Ok(d) => d,
         Err(e) => return error_response(Json::Null, &format!("bad json: {e}")),
@@ -150,6 +307,38 @@ fn error_response(id: Json, msg: &str) -> Json {
         ("ok", Json::Bool(false)),
         ("error", Json::str(msg)),
     ])
+}
+
+fn session_id_from(doc: &Json) -> Result<u64> {
+    doc.get("session")
+        .and_then(Json::as_usize)
+        .map(|s| s as u64)
+        .ok_or_else(|| anyhow!("missing 'session'"))
+}
+
+fn samples_from(doc: &Json, key: &str) -> Result<Vec<f32>> {
+    doc.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing '{key}'"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|x| x as f32)
+                .ok_or_else(|| anyhow!("bad element"))
+        })
+        .collect()
+}
+
+fn deadline_from(doc: &Json) -> Result<Option<std::time::Duration>> {
+    match doc.get("deadline_ms") {
+        None => Ok(None),
+        Some(v) => {
+            let ms = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("bad 'deadline_ms': expected a number"))?;
+            Ok(Some(wire::deadline_from_ms(ms)?))
+        }
+    }
 }
 
 fn handle_doc(coord: &Coordinator, doc: &Json) -> Result<Json> {
@@ -180,6 +369,45 @@ fn handle_doc(coord: &Coordinator, doc: &Json) -> Result<Json> {
                         .collect(),
                 ),
             )])),
+            "session_open" => {
+                let op = OpKind::parse(
+                    doc.get("op")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("missing 'op'"))?,
+                )?;
+                let (session, overlap) = coord.session_open(op)?;
+                Ok(Json::obj(vec![
+                    ("session", Json::num(session as f64)),
+                    ("overlap", Json::num(overlap as f64)),
+                ]))
+            }
+            "session_push" => {
+                let session = session_id_from(doc)?;
+                let samples = samples_from(doc, "data")?;
+                let deadline = deadline_from(doc)?;
+                let out = coord.session_push(session, &samples, deadline)?;
+                if out.samples.iter().any(|v| !v.is_finite()) {
+                    return Err(anyhow!(
+                        "session output contains non-finite values JSON cannot carry; \
+                         use the binary protocol"
+                    ));
+                }
+                Ok(Json::obj(vec![
+                    ("chunk", Json::num(out.index as f64)),
+                    (
+                        "samples",
+                        Json::Arr(out.samples.iter().map(|&v| Json::num(v as f64)).collect()),
+                    ),
+                ]))
+            }
+            "session_close" => {
+                let s = coord.session_close(session_id_from(doc)?)?;
+                Ok(Json::obj(vec![
+                    ("chunks", Json::num(s.chunks as f64)),
+                    ("samples_in", Json::num(s.samples_in as f64)),
+                    ("samples_out", Json::num(s.samples_out as f64)),
+                ]))
+            }
             _ => Err(anyhow!("unknown cmd '{cmd}'")),
         };
     }
@@ -212,17 +440,25 @@ fn handle_doc(coord: &Coordinator, doc: &Json) -> Result<Json> {
         inputs,
         deadline: None,
     };
-    if let Some(v) = doc.get("deadline_ms") {
-        let ms = v
-            .as_f64()
-            .filter(|ms| ms.is_finite() && *ms >= 0.0)
-            .ok_or_else(|| anyhow!("bad 'deadline_ms': expected a non-negative number"))?;
-        req = req.with_deadline(std::time::Duration::from_millis(ms as u64));
+    if let Some(budget) = deadline_from(doc)? {
+        req = req.with_deadline(budget);
     }
 
     let t0 = std::time::Instant::now();
     let resp = coord.execute(req)?;
     let latency_us = t0.elapsed().as_micros() as f64;
+
+    // JSON has no NaN/inf: a non-finite output would serialize as null
+    // and silently corrupt the reply.  Refuse with a structured error;
+    // the binary protocol carries non-finite values bit-exactly.
+    for (i, t) in resp.outputs.iter().enumerate() {
+        if t.data().iter().any(|v| !v.is_finite()) {
+            return Err(anyhow!(
+                "output {i} contains non-finite values JSON cannot carry; \
+                 use the binary protocol"
+            ));
+        }
+    }
 
     Ok(Json::obj(vec![
         ("served_by", Json::str(resp.served_by)),
@@ -244,21 +480,13 @@ pub fn tensor_from_json(j: &Json) -> Result<Tensor> {
         .iter()
         .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
         .collect::<Result<_>>()?;
-    let data: Vec<f32> = j
-        .get("data")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("tensor missing 'data'"))?
-        .iter()
-        .map(|v| {
-            v.as_f64()
-                .map(|x| x as f32)
-                .ok_or_else(|| anyhow!("bad element"))
-        })
-        .collect::<Result<_>>()?;
+    let data: Vec<f32> = samples_from(j, "data")?;
     Tensor::new(&shape, data)
 }
 
-/// Tensor -> {"shape": [..], "data": [..]}.
+/// Tensor -> {"shape": [..], "data": [..]}.  This is the debug/compat
+/// path: decimal text is acceptable here and nowhere else (the invariant
+/// lint bans `Json::Arr` tensor data outside this file).
 pub fn tensor_to_json(t: &Tensor) -> Json {
     Json::obj(vec![
         (
@@ -270,6 +498,184 @@ pub fn tensor_to_json(t: &Tensor) -> Json {
             Json::Arr(t.data().iter().map(|&v| Json::num(v as f64)).collect()),
         ),
     ])
+}
+
+// ---------------------------------------------------------------------------
+// binary framed mode
+// ---------------------------------------------------------------------------
+
+/// One reply slot in the per-connection pipeline: either bytes ready to
+/// send, or a pending op whose response slot the writer thread waits on
+/// in order — which is what keeps replies in frame order while the
+/// coordinator executes pipelined requests concurrently.
+enum Reply {
+    Ready(Vec<u8>),
+    Pending {
+        id: u64,
+        t0: Instant,
+        slot: OneShot<Result<OpResponse>>,
+    },
+}
+
+fn handle_binary(
+    coord: Arc<Coordinator>,
+    mut reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    cfg: ServerConfig,
+) -> Result<()> {
+    let (tx, rx) = mpsc::sync_channel::<Reply>(cfg.pipeline_depth.max(1));
+    let wr = std::thread::Builder::new()
+        .name("tina-conn-wr".into())
+        .spawn(move || {
+            let mut writer = writer;
+            while let Ok(reply) = rx.recv() {
+                let bytes = match reply {
+                    Reply::Ready(b) => b,
+                    Reply::Pending { id, t0, slot } => match slot.wait() {
+                        Ok(resp) => {
+                            let latency_us = t0.elapsed().as_micros() as f64;
+                            wire::encode_response(id, &resp, latency_us)
+                        }
+                        Err(e) => wire::encode_error(id, &format!("{e:#}")),
+                    },
+                };
+                let sent = writer.write_all(&bytes).and_then(|()| writer.flush());
+                if sent.is_err() {
+                    // client gone: drain remaining replies so pending
+                    // slots still settle, then exit
+                    while let Ok(r) = rx.recv() {
+                        if let Reply::Pending { slot, .. } = r {
+                            let _ = slot.wait();
+                        }
+                    }
+                    return;
+                }
+            }
+        })?;
+    let result = binary_read_loop(&coord, &mut reader, &tx, &cfg);
+    drop(tx); // close the channel: the writer drains and exits
+    let _ = wr.join();
+    result
+}
+
+fn binary_read_loop(
+    coord: &Arc<Coordinator>,
+    reader: &mut BufReader<TcpStream>,
+    tx: &mpsc::SyncSender<Reply>,
+    cfg: &ServerConfig,
+) -> Result<()> {
+    let mut payload = Vec::new();
+    loop {
+        let ft = match wire::read_frame(reader, &mut payload, cfg.max_frame) {
+            Ok(Some(ft)) => ft,
+            Ok(None) => return Ok(()), // clean EOF at a frame boundary
+            Err(wire::FrameError::Oversized(n)) => {
+                coord.metrics().record_oversized_frame();
+                let msg = format!(
+                    "frame of {n} bytes exceeds the {}-byte limit; closing connection",
+                    cfg.max_frame
+                );
+                let _ = tx.send(Reply::Ready(wire::encode_error(0, &msg)));
+                return Ok(());
+            }
+            // the peer died mid-frame: nothing to reply to
+            Err(wire::FrameError::Truncated) => return Ok(()),
+            Err(wire::FrameError::Io(e)) => return Err(e.into()),
+            Err(e) => {
+                // bad magic / version / unknown type: frame
+                // synchronization is lost, so report and close
+                let _ = tx.send(Reply::Ready(wire::encode_error(0, &format!("{e}; closing"))));
+                return Ok(());
+            }
+        };
+        coord.metrics().record_wire_binary_frame();
+        let frame = match wire::decode_client_frame(ft, &payload) {
+            Ok(f) => f,
+            Err(e) => {
+                // the frame boundary is intact: reply and keep serving
+                let id = wire::peek_id(&payload);
+                if tx.send(Reply::Ready(wire::encode_error(id, &e.to_string()))).is_err() {
+                    return Ok(());
+                }
+                continue;
+            }
+        };
+        let reply = match frame {
+            wire::ClientFrame::Request(req) => {
+                let id = req.id;
+                match build_op_request(req) {
+                    Ok(op_req) => {
+                        // pipelining: admit now, let the writer thread
+                        // wait for the response in order
+                        let t0 = Instant::now();
+                        let slot = coord.submit(op_req);
+                        Reply::Pending { id, t0, slot }
+                    }
+                    Err(e) => Reply::Ready(wire::encode_error(id, &format!("{e:#}"))),
+                }
+            }
+            wire::ClientFrame::SessionOpen { id, op } => {
+                let run = || -> Result<Vec<u8>> {
+                    let (session, overlap) = coord.session_open(op)?;
+                    Ok(wire::encode_session_opened(id, session, overlap as u64))
+                };
+                Reply::Ready(run().unwrap_or_else(|e| wire::encode_error(id, &format!("{e:#}"))))
+            }
+            wire::ClientFrame::SessionPush {
+                id,
+                session,
+                deadline_ms,
+                samples,
+            } => {
+                let run = || -> Result<Vec<u8>> {
+                    let deadline = deadline_ms.map(wire::deadline_from_ms).transpose()?;
+                    let chunk = coord.session_push(session, &samples, deadline)?;
+                    Ok(wire::encode_session_data(
+                        id,
+                        session,
+                        chunk.index,
+                        &chunk.samples,
+                    ))
+                };
+                Reply::Ready(run().unwrap_or_else(|e| wire::encode_error(id, &format!("{e:#}"))))
+            }
+            wire::ClientFrame::SessionClose { id, session } => {
+                let run = || -> Result<Vec<u8>> {
+                    let s = coord.session_close(session)?;
+                    Ok(wire::encode_session_closed(
+                        id,
+                        session,
+                        s.chunks,
+                        s.samples_in,
+                        s.samples_out,
+                    ))
+                };
+                Reply::Ready(run().unwrap_or_else(|e| wire::encode_error(id, &format!("{e:#}"))))
+            }
+            wire::ClientFrame::Stats { id } => {
+                Reply::Ready(wire::encode_stats_reply(id, &coord.metrics().report()))
+            }
+        };
+        if tx.send(reply).is_err() {
+            return Ok(()); // writer exited (client gone)
+        }
+    }
+}
+
+/// Build an [`OpRequest`] from a decoded wire request, converting the
+/// optional fractional-millisecond deadline without truncation.
+fn build_op_request(req: wire::WireRequest) -> Result<OpRequest> {
+    let mut out = OpRequest {
+        op: req.op,
+        impl_pref: req.impl_pref,
+        precision: req.precision,
+        inputs: req.inputs,
+        deadline: None,
+    };
+    if let Some(ms) = req.deadline_ms {
+        out = out.with_deadline(wire::deadline_from_ms(ms)?);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -315,6 +721,7 @@ mod tests {
         let outs = resp.get("outputs").unwrap().as_arr().unwrap();
         let t = tensor_from_json(&outs[0]).unwrap();
         assert_eq!(t.data(), &[10.0]);
+        assert_eq!(c.metrics().wire_json_lines.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -351,13 +758,84 @@ mod tests {
     }
 
     #[test]
+    fn fractional_deadline_is_not_truncated_to_zero() {
+        // regression: `ms as u64` turned a 0.9 ms budget into a 0 ms
+        // deadline that shed deterministically at admission.  With the
+        // fix the budget is 900 µs — comfortably more than the
+        // microseconds between parse and the admission check on the
+        // direct path, so the request executes.
+        let c = coordinator();
+        let line = r#"{"id": 5, "op": "summation", "deadline_ms": 0.9,
+                       "inputs": [{"shape": [4], "data": [1, 2, 3, 4]}]}"#;
+        let resp = handle_line(&c, line);
+        assert_eq!(
+            resp.get("ok"),
+            Some(&Json::Bool(true)),
+            "sub-millisecond budget must not shed instantly: {resp:?}"
+        );
+    }
+
+    #[test]
+    fn non_finite_json_output_is_a_structured_error() {
+        // f32::MAX + f32::MAX overflows to +inf, which JSON cannot carry:
+        // the reply must be a parseable structured error, never a line
+        // containing bare `inf`
+        let c = coordinator();
+        let line = format!(
+            r#"{{"id": 6, "op": "summation",
+                "inputs": [{{"shape": [2], "data": [{m}, {m}]}}]}}"#,
+            m = f32::MAX
+        );
+        let resp = handle_line(&c, &line);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let err = resp.get("error").and_then(Json::as_str).unwrap();
+        assert!(err.contains("non-finite"), "got: {err}");
+        // the reply itself must round-trip through the parser
+        assert!(json::parse(&resp.to_string()).is_ok());
+    }
+
+    #[test]
     fn unknown_op_is_error_response() {
         let c = coordinator();
-        let resp = handle_line(
-            &c,
-            r#"{"id": 2, "op": "zap", "inputs": []}"#,
-        );
+        let resp = handle_line(&c, r#"{"id": 2, "op": "zap", "inputs": []}"#);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn json_session_lifecycle_over_protocol() {
+        let c = coordinator();
+        let opened = handle_line(&c, r#"{"id": 1, "cmd": "session_open", "op": "fir"}"#);
+        assert_eq!(opened.get("ok"), Some(&Json::Bool(true)));
+        let sid = opened.get("session").and_then(Json::as_usize).unwrap();
+        assert_eq!(opened.get("overlap").and_then(Json::as_usize), Some(63));
+        let push = handle_line(
+            &c,
+            &format!(
+                r#"{{"id": 2, "cmd": "session_push", "session": {sid},
+                    "data": [{}]}}"#,
+                (0..100)
+                    .map(|i| format!("{}", i as f32 * 0.25))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        );
+        assert_eq!(push.get("ok"), Some(&Json::Bool(true)), "{push:?}");
+        assert_eq!(push.get("chunk").and_then(Json::as_usize), Some(0));
+        let n = push.get("samples").unwrap().as_arr().unwrap().len();
+        assert_eq!(n, 100 - 64 + 1);
+        let closed = handle_line(
+            &c,
+            &format!(r#"{{"id": 3, "cmd": "session_close", "session": {sid}}}"#),
+        );
+        assert_eq!(closed.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(closed.get("chunks").and_then(Json::as_usize), Some(1));
+        assert_eq!(closed.get("samples_in").and_then(Json::as_usize), Some(100));
+        // double close is a structured error
+        let again = handle_line(
+            &c,
+            &format!(r#"{{"id": 4, "cmd": "session_close", "session": {sid}}}"#),
+        );
+        assert_eq!(again.get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]
@@ -391,6 +869,46 @@ mod tests {
         assert_eq!(t.data(), &[11.0, 22.0]);
         // close BOTH handles (reader holds a clone) so the server's
         // connection thread sees EOF and join() can complete
+        drop(reader);
+        drop(stream);
+        stop.store(true, Ordering::Release);
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn oversized_json_line_is_refused_and_counted() {
+        // regression: `reader.lines()` buffered newline-free input
+        // without limit; the bounded reader refuses past the cap
+        let c = Arc::new(coordinator());
+        let stop = Arc::new(AtomicBool::new(false));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = {
+            let c = Arc::clone(&c);
+            let stop = Arc::clone(&stop);
+            let cfg = ServerConfig {
+                max_frame: 4096,
+                ..Default::default()
+            };
+            std::thread::spawn(move || serve_listener_with(c, listener, stop, cfg))
+        };
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+            .unwrap();
+        // 8 KiB of newline-free JSON-ish bytes, double the cap
+        stream.write_all(&vec![b'['; 8192]).unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(&line).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.get("oversized"), Some(&Json::Bool(true)));
+        // the server closes the connection after the refusal
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection closed");
+        assert_eq!(c.metrics().oversized_frames.load(Ordering::Relaxed), 1);
         drop(reader);
         drop(stream);
         stop.store(true, Ordering::Release);

@@ -79,6 +79,7 @@ use super::batcher::{
 use super::metrics::Metrics;
 use super::request::{OpKind, OpRequest, OpResponse};
 use super::router::{PlanKey, Router, RouterConfig, Target};
+use super::session::{SessionChunk, SessionConfig, SessionManager, SessionSummary};
 use crate::runtime::{EngineHandle, Registry};
 use crate::tensor::Tensor;
 use crate::util::threadpool::{ExecPool, OneShot, ThreadPool};
@@ -140,6 +141,9 @@ pub struct CoordinatorConfig {
     /// detached (their waiters were already settled or will settle when
     /// the straggler completes/unwinds); shutdown itself never hangs.
     pub drain_deadline: Duration,
+    /// Streaming-session admission limits (open-session cap and the
+    /// per-push sample bound).
+    pub sessions: SessionConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -154,6 +158,7 @@ impl Default for CoordinatorConfig {
             exec_pool_size: 4,
             admission_timeout: Duration::from_secs(5),
             drain_deadline: Duration::from_secs(5),
+            sessions: SessionConfig::default(),
         }
     }
 }
@@ -167,6 +172,7 @@ pub struct Coordinator {
     batcher: Arc<Batcher>,
     metrics: Arc<Metrics>,
     inflight: Arc<InflightGate>,
+    sessions: SessionManager,
     config: CoordinatorConfig,
     stop: Arc<AtomicBool>,
     drain_thread: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
@@ -200,6 +206,7 @@ impl Coordinator {
             config.exec_pool_size.saturating_mul(4).max(4),
         ));
         let stop = Arc::new(AtomicBool::new(false));
+        let sessions = SessionManager::new(config.sessions);
 
         let coord = Coordinator {
             router,
@@ -209,6 +216,7 @@ impl Coordinator {
             batcher,
             metrics,
             inflight,
+            sessions,
             config,
             stop,
             drain_thread: std::sync::Mutex::new(None),
@@ -623,6 +631,104 @@ impl Coordinator {
         self.submit(req).wait()
     }
 
+    /// Overlap (carried tail length) a streaming session of `op` needs:
+    /// `taps - 1` for FIR.  Ops without a streaming decomposition are
+    /// refused at open, never at push.
+    fn streaming_overlap(&self, op: OpKind) -> Result<usize> {
+        match op {
+            OpKind::Fir => Ok(self.config.router.fir_taps.saturating_sub(1)),
+            other => Err(anyhow!(
+                "streaming sessions support 'fir' only (got '{}')",
+                other.as_str()
+            )),
+        }
+    }
+
+    /// The streaming-session registry (open-session count for tests and
+    /// operators).
+    pub fn sessions(&self) -> &SessionManager {
+        &self.sessions
+    }
+
+    /// Open a streaming session for `op`; returns `(session id, overlap)`.
+    /// Fails fast at the [`SessionConfig::max_sessions`] cap.
+    pub fn session_open(&self, op: OpKind) -> Result<(u64, usize)> {
+        let overlap = self.streaming_overlap(op)?;
+        let id = self.sessions.open(op, overlap)?;
+        self.metrics.record_session_opened();
+        Ok((id, overlap))
+    }
+
+    /// Push one chunk of samples into a session.  The combined
+    /// `[carry | chunk]` signal rides the normal serving path (planned /
+    /// batched engine, deadline shedding, admission gate); on success the
+    /// session keeps the new tail and the output samples continue the
+    /// one-shot run bit-for-bit.  On *any* failure the session state is
+    /// untouched, so the same chunk can be retried.
+    pub fn session_push(
+        &self,
+        session: u64,
+        chunk: &[f32],
+        deadline: Option<Duration>,
+    ) -> Result<SessionChunk> {
+        if chunk.is_empty() {
+            anyhow::bail!("empty chunk");
+        }
+        if chunk.len() > self.config.sessions.max_chunk_samples {
+            anyhow::bail!(
+                "chunk of {} samples exceeds the per-push limit of {}",
+                chunk.len(),
+                self.config.sessions.max_chunk_samples
+            );
+        }
+        let sess = self.sessions.checkout(session)?;
+        // the session mutex is held across execution: pushes into one
+        // session serialize (the carry makes them order-dependent);
+        // different sessions push concurrently
+        let mut s = sess.lock().unwrap();
+        let mut combined = Vec::with_capacity(s.carry.len() + chunk.len());
+        combined.extend_from_slice(&s.carry);
+        combined.extend_from_slice(chunk);
+        let index = s.chunks;
+        if combined.len() <= s.overlap {
+            // not enough signal for a single output yet: carry everything
+            s.carry = combined;
+            s.chunks += 1;
+            s.samples_in += chunk.len() as u64;
+            self.metrics.record_session_chunk(0);
+            return Ok(SessionChunk {
+                index,
+                samples: Vec::new(),
+            });
+        }
+        let input = Tensor::new(&[1, combined.len()], combined.clone())?;
+        let mut req = OpRequest::new(s.op, vec![input]);
+        if let Some(d) = deadline {
+            req = req.with_deadline(d);
+        }
+        let resp = self.execute(req)?;
+        let out = resp
+            .outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("op {} returned no output", s.op.as_str()))?;
+        let samples = out.data().to_vec();
+        // commit only after success (retry-safe)
+        s.carry = combined[combined.len() - s.overlap..].to_vec();
+        s.chunks += 1;
+        s.samples_in += chunk.len() as u64;
+        s.samples_out += samples.len() as u64;
+        self.metrics.record_session_chunk(samples.len() as u64);
+        Ok(SessionChunk { index, samples })
+    }
+
+    /// Close a streaming session and return its lifetime totals.
+    pub fn session_close(&self, session: u64) -> Result<SessionSummary> {
+        let summary = self.sessions.close(session)?;
+        self.metrics.record_session_closed();
+        Ok(summary)
+    }
+
     /// Stop the batch drain loop and drain the exec pool (called on drop
     /// too).  Shutdown order is the reverse of the data flow so no stage
     /// feeds a stopped successor:
@@ -657,6 +763,10 @@ impl Coordinator {
         }
         self.batcher
             .fail_pending("coordinator shut down before the batch executed");
+        let dropped = self.sessions.clear();
+        if dropped > 0 {
+            eprintln!("tina: dropped {dropped} open streaming session(s) at shutdown");
+        }
     }
 }
 
@@ -1288,6 +1398,70 @@ mod tests {
             assert!(s.wait().is_ok());
         }
         assert_eq!(c.metrics().completed.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn streaming_session_matches_one_shot_bitwise() {
+        let c = empty_coordinator(true);
+        let total = Tensor::randn(&[1, 1000], 42);
+        let want = c
+            .execute(OpRequest::new(OpKind::Fir, vec![total.clone()]))
+            .unwrap();
+        let (sid, overlap) = c.session_open(OpKind::Fir).unwrap();
+        assert_eq!(overlap, 63, "fir_taps - 1 with the default router config");
+        let data = total.data();
+        let mut got: Vec<f32> = Vec::new();
+        // first chunk shorter than the overlap exercises the accumulate
+        // path (no output, everything carried)
+        for chunk in [&data[..10], &data[10..300], &data[300..1000]] {
+            let out = c.session_push(sid, chunk, None).unwrap();
+            got.extend_from_slice(&out.samples);
+        }
+        let want_data = want.outputs[0].data();
+        assert_eq!(got.len(), want_data.len());
+        for (i, (a, b)) in got.iter().zip(want_data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "chunked output diverged at {i}");
+        }
+        let summary = c.session_close(sid).unwrap();
+        assert_eq!(summary.chunks, 3);
+        assert_eq!(summary.samples_in, 1000);
+        assert_eq!(summary.samples_out, got.len() as u64);
+        assert_eq!(c.sessions().active(), 0);
+        let m = c.metrics();
+        assert_eq!(m.sessions_opened.load(Ordering::Relaxed), 1);
+        assert_eq!(m.sessions_closed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.session_chunks.load(Ordering::Relaxed), 3);
+        // non-streamable ops are refused at open; unknown sessions and
+        // empty chunks are refused at push
+        assert!(c.session_open(OpKind::MatMul).is_err());
+        assert!(c.session_push(9999, &[1.0], None).is_err());
+        assert!(c.session_push(sid, &[], None).is_err());
+    }
+
+    #[test]
+    fn failed_session_push_leaves_the_stream_retryable() {
+        let c = empty_coordinator(true);
+        let (sid, _) = c.session_open(OpKind::Fir).unwrap();
+        let x = Tensor::randn(&[1, 400], 7);
+        let first = c.session_push(sid, &x.data()[..200], None).unwrap();
+        assert!(!first.samples.is_empty());
+        // an already-expired deadline sheds inside execute(); the carry
+        // must be untouched so the retry continues the stream bit-for-bit
+        let err = c.session_push(sid, &x.data()[200..], Some(Duration::ZERO));
+        assert!(err.is_err(), "expired deadline must shed the push");
+        let retry = c.session_push(sid, &x.data()[200..], None).unwrap();
+        let one_shot = c
+            .execute(OpRequest::new(OpKind::Fir, vec![x.clone()]))
+            .unwrap();
+        let want = one_shot.outputs[0].data();
+        let mut got = first.samples.clone();
+        got.extend_from_slice(&retry.samples);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "retry corrupted the stream");
+        }
+        let summary = c.session_close(sid).unwrap();
+        assert_eq!(summary.chunks, 2, "the shed push must not count");
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Streaming sessions: long-lived per-stream state for chunked signals.
+//!
+//! A session lifts the overlap-carry idiom of `examples/fir_streaming.rs`
+//! into the coordinator: the client pushes an unbounded signal in chunks,
+//! the session prepends the carried tail (the last `overlap` samples of
+//! everything seen so far) to each chunk, runs the combined signal
+//! through the normal serving path — so every chunk rides the planned /
+//! batched engine like any other request — and keeps the new tail for the
+//! next push.
+//!
+//! **Overlap-carry invariant:** for a FIR of `T` taps, `overlap = T - 1`.
+//! Output element `i` of a valid convolution is a fixed-order dot product
+//! of samples `i..i+T` and depends on nothing else, so running the filter
+//! over `[carry | chunk]` produces exactly the continuation of the
+//! one-shot run — and because the repo's kernels fix the per-element
+//! reduction order regardless of signal length or batch (the standing
+//! interpreter-oracle contract), the concatenated chunked outputs equal
+//! the one-shot output **bit-for-bit**, not just approximately.  The
+//! protocol tests pin this.
+//!
+//! Failed pushes leave the session untouched (carry and counters update
+//! only after a successful execution), so a client may retry a chunk
+//! after a transient error — a shed deadline, an overloaded gate —
+//! without corrupting the stream.
+
+use super::request::OpKind;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Limits on streaming-session admission.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionConfig {
+    /// Most sessions open at once across all connections; `session_open`
+    /// fails fast at the cap instead of growing per-stream state
+    /// unboundedly.
+    pub max_sessions: usize,
+    /// Most samples a single push may carry (beyond it the push is
+    /// refused before any tensor is built).
+    pub max_chunk_samples: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            max_sessions: 256,
+            max_chunk_samples: 1 << 22,
+        }
+    }
+}
+
+/// Lifetime totals of one closed session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionSummary {
+    /// Chunks pushed.
+    pub chunks: u64,
+    /// Input samples consumed.
+    pub samples_in: u64,
+    /// Output samples produced.
+    pub samples_out: u64,
+}
+
+/// The output of one successful push.
+#[derive(Debug, Clone)]
+pub struct SessionChunk {
+    /// Zero-based index of the pushed chunk within its session.
+    pub index: u64,
+    /// Output samples (empty while the session is still accumulating its
+    /// first `overlap` samples).
+    pub samples: Vec<f32>,
+}
+
+/// Per-stream state: the op, the carried tail, and lifetime counters.
+#[derive(Debug)]
+pub(crate) struct StreamSession {
+    /// The op this session streams.
+    pub(crate) op: OpKind,
+    /// Samples carried between pushes (at most `overlap`).
+    pub(crate) carry: Vec<f32>,
+    /// Tail length the op requires (`taps - 1` for FIR).
+    pub(crate) overlap: usize,
+    /// Chunks pushed so far.
+    pub(crate) chunks: u64,
+    /// Input samples consumed so far.
+    pub(crate) samples_in: u64,
+    /// Output samples produced so far.
+    pub(crate) samples_out: u64,
+}
+
+/// Registry of open sessions.  The map lock is held only for
+/// lookup/insert/remove; each session has its own mutex, held across the
+/// push's execution so pushes into one session serialize (the carry makes
+/// them order-dependent) while different sessions push concurrently.
+#[derive(Debug)]
+pub struct SessionManager {
+    sessions: Mutex<HashMap<u64, Arc<Mutex<StreamSession>>>>,
+    next_id: AtomicU64,
+    config: SessionConfig,
+}
+
+impl SessionManager {
+    /// Empty manager enforcing `config`'s caps.
+    pub fn new(config: SessionConfig) -> SessionManager {
+        SessionManager {
+            sessions: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            config,
+        }
+    }
+
+    /// The admission limits this manager enforces.
+    pub fn config(&self) -> &SessionConfig {
+        &self.config
+    }
+
+    /// Open a session for `op` with the given overlap; returns its id.
+    /// Fails fast when [`SessionConfig::max_sessions`] are already open.
+    pub(crate) fn open(&self, op: OpKind, overlap: usize) -> Result<u64> {
+        let mut map = self.sessions.lock().unwrap();
+        if map.len() >= self.config.max_sessions {
+            bail!(
+                "session limit reached ({} open); close one or retry later",
+                self.config.max_sessions
+            );
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        map.insert(
+            id,
+            Arc::new(Mutex::new(StreamSession {
+                op,
+                carry: Vec::new(),
+                overlap,
+                chunks: 0,
+                samples_in: 0,
+                samples_out: 0,
+            })),
+        );
+        Ok(id)
+    }
+
+    /// Look up an open session (the map lock is released before the
+    /// caller locks the session itself).
+    pub(crate) fn checkout(&self, id: u64) -> Result<Arc<Mutex<StreamSession>>> {
+        self.sessions
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown session {id}"))
+    }
+
+    /// Close a session and return its lifetime totals.
+    pub(crate) fn close(&self, id: u64) -> Result<SessionSummary> {
+        let sess = self
+            .sessions
+            .lock()
+            .unwrap()
+            .remove(&id)
+            .ok_or_else(|| anyhow!("unknown session {id}"))?;
+        let s = sess.lock().unwrap();
+        Ok(SessionSummary {
+            chunks: s.chunks,
+            samples_in: s.samples_in,
+            samples_out: s.samples_out,
+        })
+    }
+
+    /// Drop every open session (coordinator shutdown); returns how many
+    /// were dropped.
+    pub fn clear(&self) -> usize {
+        let mut map = self.sessions.lock().unwrap();
+        let n = map.len();
+        map.clear();
+        n
+    }
+
+    /// Number of sessions currently open.
+    pub fn active(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_checkout_close_lifecycle() {
+        let m = SessionManager::new(SessionConfig::default());
+        let id = m.open(OpKind::Fir, 63).unwrap();
+        assert_eq!(m.active(), 1);
+        let sess = m.checkout(id).unwrap();
+        {
+            let mut s = sess.lock().unwrap();
+            s.chunks = 3;
+            s.samples_in = 100;
+            s.samples_out = 37;
+        }
+        let summary = m.close(id).unwrap();
+        assert_eq!(
+            summary,
+            SessionSummary {
+                chunks: 3,
+                samples_in: 100,
+                samples_out: 37
+            }
+        );
+        assert_eq!(m.active(), 0);
+        assert!(m.checkout(id).is_err(), "closed session is gone");
+        assert!(m.close(id).is_err(), "double close is an error");
+    }
+
+    #[test]
+    fn session_cap_fails_fast_and_ids_are_unique() {
+        let m = SessionManager::new(SessionConfig {
+            max_sessions: 2,
+            ..Default::default()
+        });
+        let a = m.open(OpKind::Fir, 63).unwrap();
+        let b = m.open(OpKind::Fir, 63).unwrap();
+        assert_ne!(a, b);
+        assert!(m.open(OpKind::Fir, 63).is_err(), "cap must refuse");
+        m.close(a).unwrap();
+        assert!(m.open(OpKind::Fir, 63).is_ok(), "slot freed by close");
+    }
+
+    #[test]
+    fn clear_drops_everything() {
+        let m = SessionManager::new(SessionConfig::default());
+        for _ in 0..3 {
+            m.open(OpKind::Fir, 63).unwrap();
+        }
+        assert_eq!(m.clear(), 3);
+        assert_eq!(m.active(), 0);
+    }
+}

@@ -1,0 +1,1084 @@
+//! Length-prefixed binary framing for the TCP serving front-end.
+//!
+//! The JSON line protocol prints every f32 in decimal — at serving scale
+//! serialization dwarfs kernel time, and decimal round-trips are not
+//! bit-exact.  This module owns the binary alternative: every frame is
+//!
+//! ```text
+//! [0xB7, 0x54]  magic    (2 bytes; 0xB7 is not a valid JSON first byte,
+//!                         so the server auto-detects the mode from the
+//!                         first byte of a connection)
+//! [0x01]        version  (1 byte)
+//! [type]        frame type (1 byte, see [`FrameType`])
+//! [len]         payload length (u32 LE, capped by the reader)
+//! [payload]     `len` bytes
+//! ```
+//!
+//! Sample payloads are raw little-endian f32 bytes — never decimal text —
+//! and decoding borrows straight from the payload slice ([`Cur`]): the
+//! only copy is `chunks_exact(4)` → `f32::from_le_bytes` into the
+//! destination `Vec<f32>`, with no intermediate JSON values.  Non-finite
+//! values (NaN, ±inf) round-trip bit-exactly, which JSON cannot do.
+//!
+//! Framing errors are typed ([`FrameError`]) so the server can keep the
+//! connection alive when the frame boundary is intact (a malformed
+//! payload) and close it when synchronization is lost (bad magic, bad
+//! version, oversized length).
+
+use super::request::{ImplPref, OpKind, Precision};
+use crate::coordinator::request::OpResponse;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::fmt;
+use std::io::Read;
+use std::time::Duration;
+
+/// Frame magic: the first byte 0xB7 is invalid as the start of any JSON
+/// document, which is what lets the server sniff the protocol from the
+/// first byte of a connection.
+pub const MAGIC: [u8; 2] = [0xB7, 0x54];
+
+/// Protocol version this module speaks.
+pub const VERSION: u8 = 1;
+
+/// Bytes in a frame header (magic + version + type + u32 length).
+pub const HEADER_LEN: usize = 8;
+
+/// Default cap on a single frame's payload (64 MiB) — the same bound the
+/// JSON compat mode puts on a line.
+pub const DEFAULT_MAX_FRAME: usize = 64 << 20;
+
+/// Highest tensor rank the wire format carries.
+const MAX_RANK: u8 = 4;
+
+/// Frame types of the binary protocol.  Client→server: `Request`,
+/// `SessionOpen`, `SessionPush`, `SessionClose`, `Stats`.  Server→client:
+/// the rest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameType {
+    /// One op request (client→server).
+    Request,
+    /// Successful op reply (server→client).
+    Response,
+    /// Error reply; `id` 0 when the request id could not be recovered.
+    Error,
+    /// Open a streaming session (client→server).
+    SessionOpen,
+    /// Session granted: carries the session id and overlap (server→client).
+    SessionOpened,
+    /// Push one chunk of samples into a session (client→server).
+    SessionPush,
+    /// Output samples for one pushed chunk (server→client).
+    SessionData,
+    /// Close a session (client→server).
+    SessionClose,
+    /// Session summary after close (server→client).
+    SessionClosed,
+    /// Request the metrics report (client→server).
+    Stats,
+    /// Metrics report text (server→client).
+    StatsReply,
+}
+
+impl FrameType {
+    /// Wire byte of this frame type.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            FrameType::Request => 1,
+            FrameType::Response => 2,
+            FrameType::Error => 3,
+            FrameType::SessionOpen => 4,
+            FrameType::SessionOpened => 5,
+            FrameType::SessionPush => 6,
+            FrameType::SessionData => 7,
+            FrameType::SessionClose => 8,
+            FrameType::SessionClosed => 9,
+            FrameType::Stats => 10,
+            FrameType::StatsReply => 11,
+        }
+    }
+
+    /// Inverse of [`FrameType::as_u8`].
+    pub fn from_u8(b: u8) -> Option<FrameType> {
+        Some(match b {
+            1 => FrameType::Request,
+            2 => FrameType::Response,
+            3 => FrameType::Error,
+            4 => FrameType::SessionOpen,
+            5 => FrameType::SessionOpened,
+            6 => FrameType::SessionPush,
+            7 => FrameType::SessionData,
+            8 => FrameType::SessionClose,
+            9 => FrameType::SessionClosed,
+            10 => FrameType::Stats,
+            11 => FrameType::StatsReply,
+            _ => return None,
+        })
+    }
+}
+
+/// Typed framing/decoding failure.  The server maps these onto its two
+/// recovery modes: payload-level errors (`Malformed`) keep the connection
+/// (the frame boundary is intact), stream-level errors close it.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Underlying socket/reader error.
+    Io(std::io::Error),
+    /// The two magic bytes did not match [`MAGIC`].
+    BadMagic,
+    /// Unsupported protocol version.
+    BadVersion(u8),
+    /// Unknown frame-type byte.
+    UnknownType(u8),
+    /// Declared payload length exceeds the reader's cap.
+    Oversized(usize),
+    /// The stream ended inside a frame.
+    Truncated,
+    /// The payload did not decode as its frame type.
+    Malformed(String),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "io error: {e}"),
+            FrameError::BadMagic => write!(f, "bad frame magic"),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (want {VERSION})")
+            }
+            FrameError::UnknownType(t) => write!(f, "unknown frame type {t}"),
+            FrameError::Oversized(n) => write!(f, "oversized frame: {n} bytes"),
+            FrameError::Truncated => write!(f, "truncated frame"),
+            FrameError::Malformed(m) => write!(f, "malformed payload: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+fn malformed(msg: impl Into<String>) -> FrameError {
+    FrameError::Malformed(msg.into())
+}
+
+fn read_exact_or_truncated<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), FrameError> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FrameError::Truncated
+        } else {
+            FrameError::Io(e)
+        }
+    })
+}
+
+/// Read one frame header + payload from `r` into the reusable `payload`
+/// buffer.  Returns `Ok(None)` on a clean EOF at a frame boundary,
+/// `Ok(Some(frame_type))` with `payload` filled otherwise.  A stream
+/// ending mid-frame is [`FrameError::Truncated`]; a declared length above
+/// `max_frame` is [`FrameError::Oversized`] (the payload is not read).
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    payload: &mut Vec<u8>,
+    max_frame: usize,
+) -> Result<Option<FrameType>, FrameError> {
+    // first byte by hand: zero bytes here is a clean close, not an error
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let mut rest = [0u8; HEADER_LEN - 1];
+    read_exact_or_truncated(r, &mut rest)?;
+    if first[0] != MAGIC[0] || rest[0] != MAGIC[1] {
+        return Err(FrameError::BadMagic);
+    }
+    if rest[1] != VERSION {
+        return Err(FrameError::BadVersion(rest[1]));
+    }
+    let ft = FrameType::from_u8(rest[2]).ok_or(FrameError::UnknownType(rest[2]))?;
+    let len = u32::from_le_bytes([rest[3], rest[4], rest[5], rest[6]]) as usize;
+    if len > max_frame {
+        return Err(FrameError::Oversized(len));
+    }
+    payload.clear();
+    payload.resize(len, 0);
+    read_exact_or_truncated(r, payload)?;
+    Ok(Some(ft))
+}
+
+// ---------------------------------------------------------------------------
+// payload cursor (borrowed-slice reads; the single copy is into the
+// destination Vec<f32>)
+// ---------------------------------------------------------------------------
+
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| malformed("length overflow"))?;
+        if end > self.b.len() {
+            return Err(malformed("payload too short"));
+        }
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, FrameError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f64(&mut self) -> Result<f64, FrameError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Decode `n` little-endian f32s — the hot ingest path: one pass over
+    /// the borrowed payload slice into the destination vector.
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, FrameError> {
+        let nbytes = n.checked_mul(4).ok_or_else(|| malformed("f32 count overflow"))?;
+        let bytes = self.take(nbytes)?;
+        let mut v = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(v)
+    }
+
+    fn string(&mut self, n: usize) -> Result<String, FrameError> {
+        let bytes = self.take(n)?;
+        std::str::from_utf8(bytes)
+            .map(str::to_owned)
+            .map_err(|_| malformed("invalid utf-8 string"))
+    }
+
+    /// Decode one tensor: rank u8, dims u32 each, then raw f32 data.
+    fn tensor(&mut self) -> Result<Tensor, FrameError> {
+        let rank = self.u8()?;
+        if rank == 0 || rank > MAX_RANK {
+            return Err(malformed(format!("tensor rank {rank} out of 1..={MAX_RANK}")));
+        }
+        let mut shape = Vec::with_capacity(rank as usize);
+        let mut numel = 1usize;
+        for _ in 0..rank {
+            let d = self.u32()? as usize;
+            numel = numel
+                .checked_mul(d)
+                .ok_or_else(|| malformed("tensor element count overflow"))?;
+            shape.push(d);
+        }
+        let data = self.f32s(numel)?;
+        Tensor::new(&shape, data).map_err(|e| malformed(format!("bad tensor: {e}")))
+    }
+
+    /// Every decoder must consume the payload exactly.
+    fn finish(&self) -> Result<(), FrameError> {
+        if self.pos != self.b.len() {
+            return Err(malformed(format!(
+                "{} trailing bytes after payload",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// encode helpers
+// ---------------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_short_str(out: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u8::MAX as usize, "short string too long");
+    out.push(s.len() as u8);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    out.push(t.rank() as u8);
+    for &d in t.shape() {
+        put_u32(out, d as u32);
+    }
+    put_f32s(out, t.data());
+}
+
+/// Prepend the frame header to a finished payload body.
+fn finish_frame(ft: FrameType, body: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(ft.as_u8());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// typed frames
+// ---------------------------------------------------------------------------
+
+/// A decoded op request (the binary twin of the JSON request object).
+#[derive(Debug)]
+pub struct WireRequest {
+    /// Client-chosen correlation id, echoed in the reply.
+    pub id: u64,
+    /// The op to execute.
+    pub op: OpKind,
+    /// Implementation preference.
+    pub impl_pref: ImplPref,
+    /// Compute precision.
+    pub precision: Precision,
+    /// Optional deadline budget in milliseconds (fractional allowed).
+    pub deadline_ms: Option<f64>,
+    /// Input tensors, decoded straight from the raw LE payload.
+    pub inputs: Vec<Tensor>,
+}
+
+/// Frames a client sends.
+#[derive(Debug)]
+pub enum ClientFrame {
+    /// One op request.
+    Request(WireRequest),
+    /// Open a streaming session.
+    SessionOpen {
+        /// Correlation id.
+        id: u64,
+        /// The op the session streams (currently `fir` only).
+        op: OpKind,
+    },
+    /// Push one chunk of samples into an open session.
+    SessionPush {
+        /// Correlation id.
+        id: u64,
+        /// Session id from [`ServerFrame::SessionOpened`].
+        session: u64,
+        /// Optional per-chunk deadline budget (ms).
+        deadline_ms: Option<f64>,
+        /// The chunk's samples.
+        samples: Vec<f32>,
+    },
+    /// Close a session.
+    SessionClose {
+        /// Correlation id.
+        id: u64,
+        /// Session id to close.
+        session: u64,
+    },
+    /// Request the metrics report.
+    Stats {
+        /// Correlation id.
+        id: u64,
+    },
+}
+
+/// Frames the server sends (decoded by clients and tests).
+#[derive(Debug)]
+pub enum ServerFrame {
+    /// Successful op reply.
+    Response {
+        /// Echo of the request id.
+        id: u64,
+        /// Whether the request rode a coalesced batch.
+        batched: bool,
+        /// Submit-to-completion latency in microseconds.
+        latency_us: f64,
+        /// Artifact name or `interp:<op>`.
+        served_by: String,
+        /// Output tensors.
+        outputs: Vec<Tensor>,
+    },
+    /// Error reply (id 0 when the request id was unrecoverable).
+    Error {
+        /// Echo of the request id, or 0.
+        id: u64,
+        /// Human-readable error.
+        message: String,
+    },
+    /// Session granted.
+    SessionOpened {
+        /// Echo of the request id.
+        id: u64,
+        /// Server-assigned session id.
+        session: u64,
+        /// Overlap (carried tail length) the session maintains.
+        overlap: u64,
+    },
+    /// Output samples for one pushed chunk (empty while the session is
+    /// still accumulating its first `overlap` samples).
+    SessionData {
+        /// Echo of the request id.
+        id: u64,
+        /// Session id.
+        session: u64,
+        /// Zero-based index of the pushed chunk.
+        chunk_index: u64,
+        /// Output samples.
+        samples: Vec<f32>,
+    },
+    /// Session summary after close.
+    SessionClosed {
+        /// Echo of the request id.
+        id: u64,
+        /// Session id.
+        session: u64,
+        /// Chunks pushed over the session's lifetime.
+        chunks: u64,
+        /// Input samples consumed.
+        samples_in: u64,
+        /// Output samples produced.
+        samples_out: u64,
+    },
+    /// Metrics report text.
+    StatsReply {
+        /// Echo of the request id.
+        id: u64,
+        /// The multi-line metrics report.
+        report: String,
+    },
+}
+
+/// Best-effort request-id recovery from a payload whose full decode
+/// failed: every payload starts with the u64 id, so the error reply can
+/// still be correlated when at least 8 bytes arrived.
+pub fn peek_id(payload: &[u8]) -> u64 {
+    if payload.len() >= 8 {
+        u64::from_le_bytes([
+            payload[0], payload[1], payload[2], payload[3], payload[4], payload[5], payload[6],
+            payload[7],
+        ])
+    } else {
+        0
+    }
+}
+
+/// Convert a client-supplied millisecond budget into a `Duration` without
+/// truncating fractional values: `0.9` becomes 900 µs, not a zero-length
+/// deadline that sheds instantly.  Rejects NaN, negatives and overflow.
+pub fn deadline_from_ms(ms: f64) -> Result<Duration> {
+    if !ms.is_finite() || ms < 0.0 {
+        bail!("bad 'deadline_ms': expected a non-negative finite number, got {ms}");
+    }
+    Duration::try_from_secs_f64(ms / 1000.0)
+        .map_err(|e| anyhow::anyhow!("bad 'deadline_ms' {ms}: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// decoders
+// ---------------------------------------------------------------------------
+
+fn decode_op(cur: &mut Cur<'_>) -> Result<OpKind, FrameError> {
+    let n = cur.u8()? as usize;
+    let s = cur.string(n)?;
+    OpKind::parse(&s).map_err(|e| malformed(e.to_string()))
+}
+
+fn decode_deadline(cur: &mut Cur<'_>) -> Result<Option<f64>, FrameError> {
+    match cur.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(cur.f64()?)),
+        b => Err(malformed(format!("bad deadline flag {b}"))),
+    }
+}
+
+/// Decode a client frame from its type and payload.
+pub fn decode_client_frame(ft: FrameType, payload: &[u8]) -> Result<ClientFrame, FrameError> {
+    let mut cur = Cur::new(payload);
+    let frame = match ft {
+        FrameType::Request => {
+            let id = cur.u64()?;
+            let op = decode_op(&mut cur)?;
+            let n = cur.u8()? as usize;
+            let impl_pref =
+                ImplPref::parse(&cur.string(n)?).map_err(|e| malformed(e.to_string()))?;
+            let n = cur.u8()? as usize;
+            let precision =
+                Precision::parse(&cur.string(n)?).map_err(|e| malformed(e.to_string()))?;
+            let deadline_ms = decode_deadline(&mut cur)?;
+            let n_inputs = cur.u16()? as usize;
+            let mut inputs = Vec::with_capacity(n_inputs.min(16));
+            for _ in 0..n_inputs {
+                inputs.push(cur.tensor()?);
+            }
+            ClientFrame::Request(WireRequest {
+                id,
+                op,
+                impl_pref,
+                precision,
+                deadline_ms,
+                inputs,
+            })
+        }
+        FrameType::SessionOpen => {
+            let id = cur.u64()?;
+            let op = decode_op(&mut cur)?;
+            ClientFrame::SessionOpen { id, op }
+        }
+        FrameType::SessionPush => {
+            let id = cur.u64()?;
+            let session = cur.u64()?;
+            let deadline_ms = decode_deadline(&mut cur)?;
+            let n = cur.u32()? as usize;
+            let samples = cur.f32s(n)?;
+            ClientFrame::SessionPush {
+                id,
+                session,
+                deadline_ms,
+                samples,
+            }
+        }
+        FrameType::SessionClose => {
+            let id = cur.u64()?;
+            let session = cur.u64()?;
+            ClientFrame::SessionClose { id, session }
+        }
+        FrameType::Stats => {
+            let id = cur.u64()?;
+            ClientFrame::Stats { id }
+        }
+        other => {
+            return Err(malformed(format!(
+                "frame type {:?} is not a client frame",
+                other
+            )))
+        }
+    };
+    cur.finish()?;
+    Ok(frame)
+}
+
+/// Decode a server frame from its type and payload.
+pub fn decode_server_frame(ft: FrameType, payload: &[u8]) -> Result<ServerFrame, FrameError> {
+    let mut cur = Cur::new(payload);
+    let frame = match ft {
+        FrameType::Response => {
+            let id = cur.u64()?;
+            let batched = cur.u8()? != 0;
+            let latency_us = cur.f64()?;
+            let n = cur.u16()? as usize;
+            let served_by = cur.string(n)?;
+            let n_outputs = cur.u16()? as usize;
+            let mut outputs = Vec::with_capacity(n_outputs.min(16));
+            for _ in 0..n_outputs {
+                outputs.push(cur.tensor()?);
+            }
+            ServerFrame::Response {
+                id,
+                batched,
+                latency_us,
+                served_by,
+                outputs,
+            }
+        }
+        FrameType::Error => {
+            let id = cur.u64()?;
+            let n = cur.u32()? as usize;
+            let message = cur.string(n)?;
+            ServerFrame::Error { id, message }
+        }
+        FrameType::SessionOpened => {
+            let id = cur.u64()?;
+            let session = cur.u64()?;
+            let overlap = cur.u64()?;
+            ServerFrame::SessionOpened {
+                id,
+                session,
+                overlap,
+            }
+        }
+        FrameType::SessionData => {
+            let id = cur.u64()?;
+            let session = cur.u64()?;
+            let chunk_index = cur.u64()?;
+            let n = cur.u32()? as usize;
+            let samples = cur.f32s(n)?;
+            ServerFrame::SessionData {
+                id,
+                session,
+                chunk_index,
+                samples,
+            }
+        }
+        FrameType::SessionClosed => {
+            let id = cur.u64()?;
+            let session = cur.u64()?;
+            let chunks = cur.u64()?;
+            let samples_in = cur.u64()?;
+            let samples_out = cur.u64()?;
+            ServerFrame::SessionClosed {
+                id,
+                session,
+                chunks,
+                samples_in,
+                samples_out,
+            }
+        }
+        FrameType::StatsReply => {
+            let id = cur.u64()?;
+            let n = cur.u32()? as usize;
+            let report = cur.string(n)?;
+            ServerFrame::StatsReply { id, report }
+        }
+        other => {
+            return Err(malformed(format!(
+                "frame type {:?} is not a server frame",
+                other
+            )))
+        }
+    };
+    cur.finish()?;
+    Ok(frame)
+}
+
+// ---------------------------------------------------------------------------
+// encoders
+// ---------------------------------------------------------------------------
+
+/// Encode an op request frame.
+pub fn encode_request(
+    id: u64,
+    op: OpKind,
+    impl_pref: ImplPref,
+    precision: Precision,
+    deadline_ms: Option<f64>,
+    inputs: &[Tensor],
+) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_short_str(&mut body, op.as_str());
+    put_short_str(&mut body, impl_pref.as_str());
+    put_short_str(&mut body, precision.as_str());
+    match deadline_ms {
+        Some(ms) => {
+            body.push(1);
+            put_f64(&mut body, ms);
+        }
+        None => body.push(0),
+    }
+    put_u16(&mut body, inputs.len() as u16);
+    for t in inputs {
+        put_tensor(&mut body, t);
+    }
+    finish_frame(FrameType::Request, body)
+}
+
+/// Encode a successful op reply.
+pub fn encode_response(id: u64, resp: &OpResponse, latency_us: f64) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    body.push(resp.batched as u8);
+    put_f64(&mut body, latency_us);
+    let sb = resp.served_by.as_bytes();
+    let n = sb.len().min(u16::MAX as usize);
+    put_u16(&mut body, n as u16);
+    body.extend_from_slice(&sb[..n]);
+    put_u16(&mut body, resp.outputs.len() as u16);
+    for t in &resp.outputs {
+        put_tensor(&mut body, t);
+    }
+    finish_frame(FrameType::Response, body)
+}
+
+/// Encode an error reply.
+pub fn encode_error(id: u64, message: &str) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u32(&mut body, message.len() as u32);
+    body.extend_from_slice(message.as_bytes());
+    finish_frame(FrameType::Error, body)
+}
+
+/// Encode a session-open request.
+pub fn encode_session_open(id: u64, op: OpKind) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_short_str(&mut body, op.as_str());
+    finish_frame(FrameType::SessionOpen, body)
+}
+
+/// Encode a session-granted reply.
+pub fn encode_session_opened(id: u64, session: u64, overlap: u64) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u64(&mut body, session);
+    put_u64(&mut body, overlap);
+    finish_frame(FrameType::SessionOpened, body)
+}
+
+/// Encode a session chunk push.
+pub fn encode_session_push(
+    id: u64,
+    session: u64,
+    deadline_ms: Option<f64>,
+    samples: &[f32],
+) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u64(&mut body, session);
+    match deadline_ms {
+        Some(ms) => {
+            body.push(1);
+            put_f64(&mut body, ms);
+        }
+        None => body.push(0),
+    }
+    put_u32(&mut body, samples.len() as u32);
+    put_f32s(&mut body, samples);
+    finish_frame(FrameType::SessionPush, body)
+}
+
+/// Encode the output samples of one pushed chunk.
+pub fn encode_session_data(id: u64, session: u64, chunk_index: u64, samples: &[f32]) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u64(&mut body, session);
+    put_u64(&mut body, chunk_index);
+    put_u32(&mut body, samples.len() as u32);
+    put_f32s(&mut body, samples);
+    finish_frame(FrameType::SessionData, body)
+}
+
+/// Encode a session-close request.
+pub fn encode_session_close(id: u64, session: u64) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u64(&mut body, session);
+    finish_frame(FrameType::SessionClose, body)
+}
+
+/// Encode a session summary reply.
+pub fn encode_session_closed(
+    id: u64,
+    session: u64,
+    chunks: u64,
+    samples_in: u64,
+    samples_out: u64,
+) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u64(&mut body, session);
+    put_u64(&mut body, chunks);
+    put_u64(&mut body, samples_in);
+    put_u64(&mut body, samples_out);
+    finish_frame(FrameType::SessionClosed, body)
+}
+
+/// Encode a stats request.
+pub fn encode_stats(id: u64) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    finish_frame(FrameType::Stats, body)
+}
+
+/// Encode a stats reply.
+pub fn encode_stats_reply(id: u64, report: &str) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    put_u32(&mut body, report.len() as u32);
+    body.extend_from_slice(report.as_bytes());
+    finish_frame(FrameType::StatsReply, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip_client(bytes: &[u8]) -> ClientFrame {
+        let mut r = Cursor::new(bytes);
+        let mut payload = Vec::new();
+        let ft = read_frame(&mut r, &mut payload, DEFAULT_MAX_FRAME)
+            .unwrap()
+            .unwrap();
+        decode_client_frame(ft, &payload).unwrap()
+    }
+
+    fn roundtrip_server(bytes: &[u8]) -> ServerFrame {
+        let mut r = Cursor::new(bytes);
+        let mut payload = Vec::new();
+        let ft = read_frame(&mut r, &mut payload, DEFAULT_MAX_FRAME)
+            .unwrap()
+            .unwrap();
+        decode_server_frame(ft, &payload).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips_bit_exactly() {
+        let t = Tensor::new(
+            &[2, 3],
+            vec![1.5, -0.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 9e15],
+        )
+        .unwrap();
+        let bytes = encode_request(
+            7,
+            OpKind::Fir,
+            ImplPref::Interp,
+            Precision::Bf16,
+            Some(0.9),
+            std::slice::from_ref(&t),
+        );
+        let ClientFrame::Request(req) = roundtrip_client(&bytes) else {
+            panic!("expected request frame");
+        };
+        assert_eq!(req.id, 7);
+        assert_eq!(req.op, OpKind::Fir);
+        assert_eq!(req.impl_pref, ImplPref::Interp);
+        assert_eq!(req.precision, Precision::Bf16);
+        assert_eq!(req.deadline_ms, Some(0.9));
+        assert_eq!(req.inputs.len(), 1);
+        assert_eq!(req.inputs[0].shape(), &[2, 3]);
+        // bit-exact, including NaN and signed zero — JSON cannot do this
+        for (a, b) in req.inputs[0].data().iter().zip(t.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn response_and_error_roundtrip() {
+        let resp = OpResponse {
+            outputs: vec![Tensor::new(&[1, 2], vec![f32::MAX, f32::MIN]).unwrap()],
+            served_by: "interp:fir".into(),
+            batched: true,
+        };
+        let bytes = encode_response(42, &resp, 812.5);
+        let ServerFrame::Response {
+            id,
+            batched,
+            latency_us,
+            served_by,
+            outputs,
+        } = roundtrip_server(&bytes)
+        else {
+            panic!("expected response frame");
+        };
+        assert_eq!(id, 42);
+        assert!(batched);
+        assert_eq!(latency_us, 812.5);
+        assert_eq!(served_by, "interp:fir");
+        assert_eq!(outputs[0].data(), resp.outputs[0].data());
+
+        let ServerFrame::Error { id, message } = roundtrip_server(&encode_error(3, "boom")) else {
+            panic!("expected error frame");
+        };
+        assert_eq!((id, message.as_str()), (3, "boom"));
+    }
+
+    #[test]
+    fn session_frames_roundtrip() {
+        let open = roundtrip_client(&encode_session_open(1, OpKind::Fir));
+        let ClientFrame::SessionOpen { id, op } = open else {
+            panic!("expected session open");
+        };
+        assert_eq!((id, op), (1, OpKind::Fir));
+
+        let samples = vec![0.25f32, -1.0, f32::NAN];
+        let ClientFrame::SessionPush {
+            id,
+            session,
+            deadline_ms,
+            samples: got,
+        } = roundtrip_client(&encode_session_push(2, 9, None, &samples))
+        else {
+            panic!("expected session push");
+        };
+        assert_eq!((id, session, deadline_ms), (2, 9, None));
+        for (a, b) in got.iter().zip(&samples) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        let ServerFrame::SessionData {
+            chunk_index,
+            samples: out,
+            ..
+        } = roundtrip_server(&encode_session_data(2, 9, 4, &samples))
+        else {
+            panic!("expected session data");
+        };
+        assert_eq!(chunk_index, 4);
+        assert_eq!(out.len(), 3);
+
+        let ServerFrame::SessionClosed {
+            chunks,
+            samples_in,
+            samples_out,
+            ..
+        } = roundtrip_server(&encode_session_closed(3, 9, 5, 1000, 937))
+        else {
+            panic!("expected session closed");
+        };
+        assert_eq!((chunks, samples_in, samples_out), (5, 1000, 937));
+    }
+
+    #[test]
+    fn stats_frames_roundtrip() {
+        let ClientFrame::Stats { id } = roundtrip_client(&encode_stats(11)) else {
+            panic!("expected stats");
+        };
+        assert_eq!(id, 11);
+        let ServerFrame::StatsReply { id, report } =
+            roundtrip_server(&encode_stats_reply(11, "requests=0"))
+        else {
+            panic!("expected stats reply");
+        };
+        assert_eq!((id, report.as_str()), (11, "requests=0"));
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_mid_frame_eof_is_truncated() {
+        let mut payload = Vec::new();
+        let mut empty = Cursor::new(&[][..]);
+        assert!(read_frame(&mut empty, &mut payload, DEFAULT_MAX_FRAME)
+            .unwrap()
+            .is_none());
+        let bytes = encode_stats(1);
+        for cut in 1..bytes.len() {
+            let mut r = Cursor::new(&bytes[..cut]);
+            match read_frame(&mut r, &mut payload, DEFAULT_MAX_FRAME) {
+                Err(FrameError::Truncated) => {}
+                other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_type_and_oversized_are_typed_errors() {
+        let mut payload = Vec::new();
+        let good = encode_stats(1);
+
+        let mut bad = good.clone();
+        bad[0] = b'{';
+        let mut r = Cursor::new(&bad[..]);
+        assert!(matches!(
+            read_frame(&mut r, &mut payload, DEFAULT_MAX_FRAME),
+            Err(FrameError::BadMagic)
+        ));
+
+        let mut bad = good.clone();
+        bad[2] = 99;
+        let mut r = Cursor::new(&bad[..]);
+        assert!(matches!(
+            read_frame(&mut r, &mut payload, DEFAULT_MAX_FRAME),
+            Err(FrameError::BadVersion(99))
+        ));
+
+        let mut bad = good.clone();
+        bad[3] = 200;
+        let mut r = Cursor::new(&bad[..]);
+        assert!(matches!(
+            read_frame(&mut r, &mut payload, DEFAULT_MAX_FRAME),
+            Err(FrameError::UnknownType(200))
+        ));
+
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = Cursor::new(&bad[..]);
+        assert!(matches!(
+            read_frame(&mut r, &mut payload, DEFAULT_MAX_FRAME),
+            Err(FrameError::Oversized(_))
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_and_bad_fields_are_malformed() {
+        // trailing bytes after a fully decoded payload
+        let mut bytes = encode_stats(1);
+        let extra = 3u32;
+        let n = bytes.len();
+        bytes[4..8].copy_from_slice(&(8 + extra).to_le_bytes());
+        bytes.resize(n + extra as usize, 0xEE);
+        let mut r = Cursor::new(&bytes[..]);
+        let mut payload = Vec::new();
+        let ft = read_frame(&mut r, &mut payload, DEFAULT_MAX_FRAME)
+            .unwrap()
+            .unwrap();
+        assert!(matches!(
+            decode_client_frame(ft, &payload),
+            Err(FrameError::Malformed(_))
+        ));
+        // a rank-9 tensor is malformed, not a panic
+        let t = Tensor::new(&[1, 4], vec![0.0; 4]).unwrap();
+        let mut req = encode_request(1, OpKind::Fir, ImplPref::Auto, Precision::F32, None, &[t]);
+        let rank_pos = HEADER_LEN + 8 + 4 + 5 + 4 + 1 + 2;
+        assert_eq!(req[rank_pos], 2, "encoded rank sits where the decoder reads it");
+        req[rank_pos] = 9;
+        let mut r = Cursor::new(&req[..]);
+        let ft = read_frame(&mut r, &mut payload, DEFAULT_MAX_FRAME)
+            .unwrap()
+            .unwrap();
+        assert!(matches!(
+            decode_client_frame(ft, &payload),
+            Err(FrameError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn peek_id_recovers_the_leading_id() {
+        let bytes = encode_error(77, "x");
+        assert_eq!(peek_id(&bytes[HEADER_LEN..]), 77);
+        assert_eq!(peek_id(&[1, 2, 3]), 0, "short payloads fall back to 0");
+    }
+
+    #[test]
+    fn deadline_from_ms_keeps_fractional_budgets() {
+        assert_eq!(deadline_from_ms(0.9).unwrap(), Duration::from_micros(900));
+        assert_eq!(deadline_from_ms(0.0).unwrap(), Duration::ZERO);
+        assert_eq!(deadline_from_ms(1500.0).unwrap(), Duration::from_millis(1500));
+        assert!(deadline_from_ms(f64::NAN).is_err());
+        assert!(deadline_from_ms(-1.0).is_err());
+        assert!(deadline_from_ms(f64::INFINITY).is_err());
+        assert!(deadline_from_ms(1e300).is_err(), "overflow must not panic");
+    }
+}

@@ -130,7 +130,14 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9.0e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/inf literal; `format!("{x}")` would
+                    // emit bare `NaN`/`inf` that no parser accepts.  null
+                    // is the standard lossy encoding (what JavaScript's
+                    // JSON.stringify does); callers that must round-trip
+                    // non-finite values use the binary wire protocol.
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 9.0e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
                     out.push_str(&format!("{x}"));
@@ -422,6 +429,41 @@ mod tests {
         let s = v.to_string();
         assert_eq!(parse(&s).unwrap(), v);
         assert_eq!(s, doc); // keys sorted + canonical numbers -> stable text
+    }
+
+    #[test]
+    fn non_finite_nums_serialize_as_null() {
+        // regression: these used to emit bare `NaN` / `inf` / `-inf`,
+        // invalid JSON no parser (including our own) accepts
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Num(x).to_string();
+            assert_eq!(s, "null", "non-finite {x} must serialize as null");
+            assert_eq!(parse(&s).unwrap(), Json::Null);
+        }
+        let doc = Json::obj(vec![("a", Json::Num(f64::NAN)), ("b", Json::num(1.5))]);
+        let s = doc.to_string();
+        assert_eq!(s, r#"{"a":null,"b":1.5}"#);
+        assert!(parse(&s).is_ok(), "writer output must stay parseable");
+    }
+
+    #[test]
+    fn integer_boundary_values_roundtrip() {
+        // ±9e15 sits at the i64-formatting cutoff in the writer; both
+        // sides of the boundary must round-trip through parse()
+        for x in [
+            9.0e15 - 1.0,
+            9.0e15,
+            9.0e15 + 2.0,
+            -(9.0e15 - 1.0),
+            -9.0e15,
+            -(9.0e15 + 2.0),
+            0.0,
+            -0.5,
+        ] {
+            let s = Json::Num(x).to_string();
+            let back = parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back, x, "{x} -> {s} -> {back}");
+        }
     }
 
     #[test]

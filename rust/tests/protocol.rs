@@ -1,0 +1,537 @@
+//! Protocol-conformance suite: the binary framed wire protocol and the
+//! JSON line compat mode, exercised end-to-end over real TCP connections.
+//!
+//! Covers the tentpole contracts of the wire layer:
+//!
+//! * binary f32 payloads round-trip **bit-exactly** (NaN, ±inf, -0.0,
+//!   denormals) where JSON mode replies with a structured error;
+//! * **pipelining**: N requests written before any reply is read, replies
+//!   matched by id;
+//! * **streaming sessions**: a chunked FIR signal pushed over TCP equals
+//!   the one-shot library run bit-for-bit, under seeded random splits;
+//! * **corruption fuzz**: seeded truncations/flips/bad-magic/oversized
+//!   frames never panic the handler — every connection ends in an error
+//!   reply or a clean close, and the server keeps serving afterwards;
+//! * the two modes coexist on one listener (auto-detected per connection
+//!   from the first byte);
+//! * sub-millisecond `deadline_ms` budgets are not truncated to zero.
+//!
+//! The suite is artifact-free (empty registry; the planned fallback
+//! executor serves everything), so it runs identically on both CI backend
+//! arms.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use tina::coordinator::{
+    server, wire, Coordinator, CoordinatorConfig, ImplPref, OpKind, OpRequest, Precision,
+    ServerConfig, ServerFrame,
+};
+use tina::runtime::Registry;
+use tina::tensor::Tensor;
+
+/// One in-process server over an artifact-free coordinator.  Tests must
+/// drop every client stream before calling [`Harness::stop`] (the server
+/// joins its connection threads, which wait for client EOF).
+struct Harness {
+    coord: Arc<Coordinator>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<anyhow::Result<()>>,
+}
+
+impl Harness {
+    fn start(cfg: ServerConfig) -> Harness {
+        let registry = Registry::from_manifest_text(
+            PathBuf::from("/nonexistent"),
+            r#"{"version": 1, "entries": []}"#,
+        )
+        .unwrap();
+        let coord = Arc::new(
+            Coordinator::new(
+                registry,
+                CoordinatorConfig {
+                    batching: false,
+                    workers: 4,
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let thread = {
+            let coord = Arc::clone(&coord);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || server::serve_listener_with(coord, listener, stop, cfg))
+        };
+        Harness {
+            coord,
+            addr,
+            stop,
+            thread,
+        }
+    }
+
+    fn connect(&self) -> TcpStream {
+        let s = TcpStream::connect(self.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s
+    }
+
+    fn stop(self) {
+        self.stop.store(true, Ordering::Release);
+        self.thread.join().unwrap().unwrap();
+    }
+}
+
+/// Read one server frame off a binary-mode connection.
+fn read_server_frame(r: &mut BufReader<TcpStream>) -> ServerFrame {
+    let mut payload = Vec::new();
+    let ft = wire::read_frame(r, &mut payload, wire::DEFAULT_MAX_FRAME)
+        .unwrap()
+        .expect("unexpected EOF waiting for a server frame");
+    wire::decode_server_frame(ft, &payload).unwrap()
+}
+
+/// Splitmix-style seeded generator for the fuzz and split tests — no
+/// external RNG crates in the offline build.
+fn lcg(state: &mut u64) -> u64 {
+    *state = state
+        .wrapping_mul(6364136223846793005)
+        .wrapping_add(1442695040888963407);
+    *state
+}
+
+#[test]
+fn binary_f32_payloads_roundtrip_bit_exactly_over_tcp() {
+    let h = Harness::start(ServerConfig::default());
+    // values JSON cannot carry (NaN, ±inf), cannot preserve (-0.0 prints
+    // as -0 and parses back signless only if the parser is careful), or
+    // only preserves with exact decimal round-tripping (denormals)
+    let x = Tensor::new(
+        &[1, 6],
+        vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1.0e-40, 1.5],
+    )
+    .unwrap();
+    let ones = Tensor::new(&[1, 6], vec![1.0; 6]).unwrap();
+    // what the library itself computes for x * 1.0
+    let want = h
+        .coord
+        .execute(OpRequest::new(OpKind::EwMult, vec![x.clone(), ones.clone()]))
+        .unwrap();
+
+    let mut stream = h.connect();
+    stream
+        .write_all(&wire::encode_request(
+            5,
+            OpKind::EwMult,
+            ImplPref::Auto,
+            Precision::F32,
+            None,
+            &[x, ones],
+        ))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let ServerFrame::Response { id, outputs, .. } = read_server_frame(&mut reader) else {
+        panic!("expected a response frame");
+    };
+    assert_eq!(id, 5);
+    let got = outputs[0].data();
+    let exp = want.outputs[0].data();
+    assert_eq!(got.len(), exp.len());
+    for (i, (a, b)) in got.iter().zip(exp).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "binary reply diverged from the library result at {i}"
+        );
+    }
+    assert!(
+        h.coord.metrics().wire_binary_frames.load(Ordering::Relaxed) >= 1,
+        "binary frames must be counted"
+    );
+    drop(reader);
+    drop(stream);
+    h.stop();
+}
+
+#[test]
+fn non_finite_outputs_binary_carries_json_refuses() {
+    let h = Harness::start(ServerConfig::default());
+    // f32::MAX + f32::MAX overflows to +inf
+    let t = Tensor::new(&[2], vec![f32::MAX, f32::MAX]).unwrap();
+
+    // binary mode: the inf comes back bit-exact
+    let mut bin = h.connect();
+    bin.write_all(&wire::encode_request(
+        1,
+        OpKind::Summation,
+        ImplPref::Auto,
+        Precision::F32,
+        None,
+        std::slice::from_ref(&t),
+    ))
+    .unwrap();
+    let mut reader = BufReader::new(bin.try_clone().unwrap());
+    let ServerFrame::Response { outputs, .. } = read_server_frame(&mut reader) else {
+        panic!("expected a response frame");
+    };
+    assert_eq!(outputs[0].data()[0].to_bits(), f32::INFINITY.to_bits());
+    drop(reader);
+    drop(bin);
+
+    // JSON mode: same op, structured error (never a bare `inf` token)
+    let mut json = h.connect();
+    let line = format!(
+        r#"{{"id": 2, "op": "summation", "inputs": [{{"shape": [2], "data": [{m}, {m}]}}]}}"#,
+        m = f32::MAX
+    );
+    json.write_all(line.as_bytes()).unwrap();
+    json.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(json.try_clone().unwrap());
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let doc = tina::util::json::parse(&reply).unwrap();
+    assert_eq!(doc.get("ok").and_then(|v| v.as_bool()), Some(false));
+    let err = doc.get("error").and_then(|v| v.as_str()).unwrap();
+    assert!(err.contains("non-finite"), "got: {err}");
+    drop(reader);
+    drop(json);
+    h.stop();
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order_and_matched_by_id() {
+    const N: u64 = 16;
+    let h = Harness::start(ServerConfig::default());
+    let mut stream = h.connect();
+    // write every request before reading any reply
+    for i in 0..N {
+        let t = Tensor::new(&[4], vec![i as f32; 4]).unwrap();
+        stream
+            .write_all(&wire::encode_request(
+                100 + i,
+                OpKind::Summation,
+                ImplPref::Auto,
+                Precision::F32,
+                None,
+                &[t],
+            ))
+            .unwrap();
+    }
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    for i in 0..N {
+        let ServerFrame::Response { id, outputs, .. } = read_server_frame(&mut reader) else {
+            panic!("expected a response frame for request {i}");
+        };
+        // replies come back in frame order, so the ids sequence exactly
+        assert_eq!(id, 100 + i, "reply order must match request order");
+        assert_eq!(outputs[0].data(), &[4.0 * i as f32]);
+    }
+    drop(reader);
+    drop(stream);
+    h.stop();
+}
+
+#[test]
+fn chunked_session_over_tcp_equals_one_shot_bitwise() {
+    let h = Harness::start(ServerConfig::default());
+    let total = Tensor::randn(&[1, 2000], 1234);
+    let want = h
+        .coord
+        .execute(OpRequest::new(OpKind::Fir, vec![total.clone()]))
+        .unwrap();
+
+    let mut stream = h.connect();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream
+        .write_all(&wire::encode_session_open(1, OpKind::Fir))
+        .unwrap();
+    let ServerFrame::SessionOpened {
+        session, overlap, ..
+    } = read_server_frame(&mut reader)
+    else {
+        panic!("expected session-opened");
+    };
+    assert_eq!(overlap, 63, "fir_taps - 1 under the default router config");
+
+    // seeded random chunk splits (1..=300 samples each), including runs
+    // short enough to exercise the carry-accumulate path
+    let data = total.data();
+    let mut state = 99u64;
+    let mut got: Vec<f32> = Vec::new();
+    let mut offset = 0usize;
+    let mut pushes = 0u64;
+    while offset < data.len() {
+        let n = (1 + lcg(&mut state) % 300) as usize;
+        let end = (offset + n).min(data.len());
+        stream
+            .write_all(&wire::encode_session_push(
+                10 + pushes,
+                session,
+                None,
+                &data[offset..end],
+            ))
+            .unwrap();
+        let ServerFrame::SessionData {
+            chunk_index,
+            samples,
+            ..
+        } = read_server_frame(&mut reader)
+        else {
+            panic!("expected session-data");
+        };
+        assert_eq!(chunk_index, pushes);
+        got.extend_from_slice(&samples);
+        offset = end;
+        pushes += 1;
+    }
+
+    let exp = want.outputs[0].data();
+    assert_eq!(got.len(), exp.len());
+    for (i, (a, b)) in got.iter().zip(exp).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "chunked session output diverged from the one-shot run at {i}"
+        );
+    }
+
+    stream
+        .write_all(&wire::encode_session_close(999, session))
+        .unwrap();
+    let ServerFrame::SessionClosed {
+        chunks,
+        samples_in,
+        samples_out,
+        ..
+    } = read_server_frame(&mut reader)
+    else {
+        panic!("expected session-closed");
+    };
+    assert_eq!(chunks, pushes);
+    assert_eq!(samples_in, 2000);
+    assert_eq!(samples_out, got.len() as u64);
+    assert_eq!(h.coord.sessions().active(), 0);
+    drop(reader);
+    drop(stream);
+    h.stop();
+}
+
+#[test]
+fn corrupted_frames_never_panic_decode() {
+    // decode-level fuzz: a panic anywhere in read_frame/decode fails the
+    // test; every outcome must be a typed Ok/Err
+    let t = Tensor::new(&[1, 8], vec![0.5; 8]).unwrap();
+    let bases: Vec<Vec<u8>> = vec![
+        wire::encode_request(1, OpKind::Fir, ImplPref::Auto, Precision::F32, Some(0.9), &[t]),
+        wire::encode_session_open(2, OpKind::Fir),
+        wire::encode_session_push(3, 1, None, &[1.0, 2.0, 3.0]),
+        wire::encode_session_close(4, 1),
+        wire::encode_stats(5),
+    ];
+    let mut state = 0xDEADBEEFu64;
+    for _ in 0..400 {
+        let mut bytes = bases[(lcg(&mut state) % bases.len() as u64) as usize].clone();
+        match lcg(&mut state) % 6 {
+            0 => {
+                // truncate at a random point
+                let cut = (lcg(&mut state) % bytes.len() as u64) as usize;
+                bytes.truncate(cut.max(1));
+            }
+            1 => {
+                // flip one random byte
+                let i = (lcg(&mut state) % bytes.len() as u64) as usize;
+                bytes[i] ^= (1 + lcg(&mut state) % 255) as u8;
+            }
+            // bad magic, bad version, unknown type, huge length
+            2 => bytes[0] = b'{',
+            3 => bytes[2] = 99,
+            4 => bytes[3] = 200,
+            5 => bytes[4..8].copy_from_slice(&u32::MAX.to_le_bytes()),
+            _ => unreachable!(),
+        }
+        let mut r = std::io::Cursor::new(&bytes[..]);
+        let mut payload = Vec::new();
+        // a short cap keeps the huge-length arm from allocating; every
+        // branch below must return, never panic
+        if let Ok(Some(ft)) = wire::read_frame(&mut r, &mut payload, 1 << 20) {
+            let _ = wire::decode_client_frame(ft, &payload);
+        }
+    }
+}
+
+#[test]
+fn corrupted_frames_over_tcp_get_an_error_or_clean_close_and_serving_survives() {
+    let h = Harness::start(ServerConfig {
+        max_frame: 1 << 20,
+        ..Default::default()
+    });
+    let t = Tensor::new(&[1, 8], vec![0.25; 8]).unwrap();
+    let good = wire::encode_request(9, OpKind::Fir, ImplPref::Auto, Precision::F32, None, &[t]);
+    let mut state = 0xC0FFEEu64;
+    for round in 0..12 {
+        let mut bytes = good.clone();
+        match round % 6 {
+            0 => bytes.truncate(1 + (lcg(&mut state) % (bytes.len() as u64 - 1)) as usize),
+            1 => {
+                // keep the magic byte so the corruption lands in binary
+                // mode, not the JSON fallback
+                let i = 1 + (lcg(&mut state) % (bytes.len() as u64 - 1)) as usize;
+                bytes[i] ^= (1 + lcg(&mut state) % 255) as u8;
+            }
+            // bad magic[1], bad version, unknown type, oversized
+            2 => bytes[1] = 0,
+            3 => bytes[2] = 42,
+            4 => bytes[3] = 250,
+            5 => bytes[4..8].copy_from_slice(&u32::MAX.to_le_bytes()),
+            _ => unreachable!(),
+        }
+        let mut stream = h.connect();
+        stream.write_all(&bytes).unwrap();
+        // half-close: a frame truncated mid-payload must end in a clean
+        // close once the server sees EOF, not a hang
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut drained = Vec::new();
+        // reply bytes (an error frame) or immediate EOF — both fine; a
+        // read timeout (hang) or a panic-killed server is a failure
+        stream.read_to_end(&mut drained).unwrap_or_else(|e| {
+            panic!("round {round}: connection neither replied nor closed: {e}")
+        });
+        drop(stream);
+    }
+    // the handler absorbed every corruption: a fresh connection still
+    // gets served
+    let mut stream = h.connect();
+    stream.write_all(&good).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let ServerFrame::Response { id, .. } = read_server_frame(&mut reader) else {
+        panic!("expected a response after the fuzz rounds");
+    };
+    assert_eq!(id, 9);
+    drop(reader);
+    drop(stream);
+    h.stop();
+}
+
+#[test]
+fn oversized_binary_frame_is_refused_and_counted() {
+    let h = Harness::start(ServerConfig {
+        max_frame: 4096,
+        ..Default::default()
+    });
+    let mut stream = h.connect();
+    // a syntactically valid header declaring a payload over the cap
+    let mut header = Vec::new();
+    header.extend_from_slice(&wire::MAGIC);
+    header.push(wire::VERSION);
+    header.push(1); // Request
+    header.extend_from_slice(&(100_000u32).to_le_bytes());
+    stream.write_all(&header).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let ServerFrame::Error { message, .. } = read_server_frame(&mut reader) else {
+        panic!("expected an error frame");
+    };
+    assert!(message.contains("exceeds"), "got: {message}");
+    // connection is closed after the refusal
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "no frames after the oversized refusal");
+    assert_eq!(h.coord.metrics().oversized_frames.load(Ordering::Relaxed), 1);
+    drop(reader);
+    drop(stream);
+    h.stop();
+}
+
+#[test]
+fn sub_millisecond_deadline_is_not_truncated_over_binary() {
+    // regression: `ms as u64` used to turn deadline_ms 0.9 into a 0 ms
+    // budget that shed at admission; with fractional conversion the
+    // request executes
+    let h = Harness::start(ServerConfig::default());
+    let t = Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+    let mut stream = h.connect();
+    stream
+        .write_all(&wire::encode_request(
+            77,
+            OpKind::Summation,
+            ImplPref::Auto,
+            Precision::F32,
+            Some(0.9),
+            &[t],
+        ))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    match read_server_frame(&mut reader) {
+        ServerFrame::Response { id, outputs, .. } => {
+            assert_eq!(id, 77);
+            assert_eq!(outputs[0].data(), &[10.0]);
+        }
+        ServerFrame::Error { message, .. } => {
+            panic!("a 900 µs budget must not shed instantly: {message}")
+        }
+        other => panic!("unexpected frame: {other:?}"),
+    }
+    drop(reader);
+    drop(stream);
+    h.stop();
+}
+
+#[test]
+fn json_and_binary_connections_coexist_on_one_listener() {
+    let h = Harness::start(ServerConfig::default());
+
+    // connection A: JSON line mode
+    let mut json = h.connect();
+    json.write_all(
+        br#"{"id": 1, "op": "summation", "inputs": [{"shape": [4], "data": [1, 2, 3, 4]}]}"#,
+    )
+    .unwrap();
+    json.write_all(b"\n").unwrap();
+    let mut jreader = BufReader::new(json.try_clone().unwrap());
+    let mut line = String::new();
+    jreader.read_line(&mut line).unwrap();
+    let doc = tina::util::json::parse(&line).unwrap();
+    assert_eq!(doc.get("ok").and_then(|v| v.as_bool()), Some(true));
+
+    // connection B: binary framed mode, same op
+    let t = Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+    let mut bin = h.connect();
+    bin.write_all(&wire::encode_request(
+        2,
+        OpKind::Summation,
+        ImplPref::Auto,
+        Precision::F32,
+        None,
+        &[t],
+    ))
+    .unwrap();
+    let mut breader = BufReader::new(bin.try_clone().unwrap());
+    let ServerFrame::Response { outputs, .. } = read_server_frame(&mut breader) else {
+        panic!("expected a response frame");
+    };
+    assert_eq!(outputs[0].data(), &[10.0]);
+
+    // stats over binary reports both protocol counters
+    bin.write_all(&wire::encode_stats(3)).unwrap();
+    let ServerFrame::StatsReply { report, .. } = read_server_frame(&mut breader) else {
+        panic!("expected a stats reply");
+    };
+    assert!(report.contains("wire_json_lines=1"), "report: {report}");
+    assert!(report.contains("wire_binary_frames="), "report: {report}");
+
+    let m = h.coord.metrics();
+    assert_eq!(m.wire_json_lines.load(Ordering::Relaxed), 1);
+    assert!(m.wire_binary_frames.load(Ordering::Relaxed) >= 2);
+    drop(jreader);
+    drop(json);
+    drop(breader);
+    drop(bin);
+    h.stop();
+}
